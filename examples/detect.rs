@@ -1,0 +1,67 @@
+//! Detection example (the paper's §4.2.2/4.2.3 workload shape): run the
+//! SSD-lite detector on the synthetic detection set through both engines,
+//! decode grid predictions into boxes, and report the int8 engine's
+//! fidelity to the float detector plus both latencies — a self-contained
+//! miniature of `iaoi bench --table 4.4`.
+//!
+//! Run: `cargo run --release --example detect [images]`
+
+use anyhow::Result;
+use iaoi::data::synth::DetectionSet;
+use iaoi::graph::builders::ssd_lite;
+use iaoi::harness::time_median_ms;
+use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::tensor::Tensor;
+
+fn main() -> Result<()> {
+    let images: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let (res, grid, classes) = (32usize, 4usize, 3usize);
+    let ds = DetectionSet::new(res, grid, classes, 77);
+
+    // Float detector (BN folded) and its PTQ int8 twin.
+    let float_det = ssd_lite(1.0, classes, 9).fold_batch_norms();
+    let calib: Vec<Tensor<f32>> = (0..4).map(|i| ds.example(0, i).0).collect();
+    let (_, int8_det) = quantize_graph(&float_det, &calib, QuantizeOptions::default());
+    println!(
+        "SSD-lite: float {} B -> int8 {} B ({:.2}x)",
+        float_det.model_bytes(),
+        int8_det.model_bytes(),
+        float_det.model_bytes() as f64 / int8_det.model_bytes() as f64
+    );
+
+    // Detection agreement: int8 boxes vs float boxes, plus recall of the
+    // *ground-truth* boxes by both (untrained head: GT recall is luck;
+    // agreement is the quantization-relevant number).
+    let mut agree = 0usize;
+    let mut total_float = 0usize;
+    let mut total_int8 = 0usize;
+    for i in 0..images {
+        let (img, _gt) = ds.example(1, i as u64);
+        let fboxes = ds.decode_predictions(&float_det.run(&img), 0.5);
+        let qboxes = ds.decode_predictions(&int8_det.run(&img), 0.5);
+        total_float += fboxes.len();
+        total_int8 += qboxes.len();
+        for (fb, _) in &fboxes {
+            if qboxes.iter().any(|(qb, _)| qb.class == fb.class && qb.iou(fb) >= 0.5) {
+                agree += 1;
+            }
+        }
+    }
+    println!(
+        "decoded boxes over {images} images: float {total_float}, int8 {total_int8}, matched@IoU0.5 {agree}"
+    );
+    if total_float > 0 {
+        println!("int8 reproduces {:.1}% of float detections", 100.0 * agree as f32 / total_float as f32);
+    }
+
+    let (x1, _) = ds.example(1, 0);
+    let fms = time_median_ms(10, || {
+        let _ = float_det.run(&x1);
+    });
+    let qms = time_median_ms(10, || {
+        let _ = int8_det.run(&x1);
+    });
+    println!("latency: float {fms:.3} ms/img, int8 {qms:.3} ms/img ({:.2}x)", fms / qms);
+    println!("detect example OK");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Quickstart: the three-layer composition in one page.
+//!
+//! 1. Load the AOT-compiled **Pallas integer-matmul kernel** (L1, lowered
+//!    to HLO text by `make artifacts`) and run it through PJRT.
+//! 2. Run the *same* quantized GEMM on the pure-Rust integer engine (L3)
+//!    and verify bit-exact agreement.
+//! 3. Post-training-quantize a small float ConvNet and compare the float
+//!    and integer-only engines on one image.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+use iaoi::data::{ClassificationSet, Rng};
+use iaoi::graph::builders::papernet_random;
+use iaoi::nn::FusedActivation;
+use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::tensor::Tensor;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    // --- Steps 1 + 2: L1 Pallas kernel vs L3 Rust engine, bit-exact. ---
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("quickstart.hlo.txt").exists() {
+        iaoi::harness::quickstart(artifacts)?;
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the PJRT half; continuing)");
+    }
+
+    // --- Step 3: quantize a float model and run integer-only inference. ---
+    println!("\nPost-training quantization of a small ConvNet (§3 Algorithm 1):");
+    let float_model = papernet_random(16, FusedActivation::Relu6, 42);
+
+    // Calibration batches (eq. 13 ranges come from these).
+    let mut rng = Rng::seeded(1);
+    let calib: Vec<Tensor<f32>> = (0..4)
+        .map(|_| {
+            let mut d = vec![0f32; 2 * 16 * 16 * 3];
+            for v in d.iter_mut() {
+                *v = rng.range_f32(-1.0, 1.0);
+            }
+            Tensor::from_vec(&[2, 16, 16, 3], d)
+        })
+        .collect();
+    let (folded, int8_model) = quantize_graph(&float_model, &calib, QuantizeOptions::default());
+    println!(
+        "  model size: float {} B -> int8 {} B ({:.2}x smaller)",
+        folded.model_bytes(),
+        int8_model.model_bytes(),
+        folded.model_bytes() as f64 / int8_model.model_bytes() as f64
+    );
+
+    // One real image through both engines.
+    let ds = ClassificationSet::new(16, 16, 7);
+    let (img, label) = ds.example(0, 0);
+    let float_logits = folded.run(&img);
+    let int8_logits = int8_model.run(&img);
+    let argmax = |t: &Tensor<f32>| {
+        t.data()
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    println!("  true label {label}; float argmax {}, int8 argmax {}", argmax(&float_logits), argmax(&int8_logits));
+    println!(
+        "  max |float - int8| logit diff: {:.4}",
+        float_logits.max_abs_diff(&int8_logits)
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

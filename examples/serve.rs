@@ -1,0 +1,73 @@
+//! Serving example: run the integer-only model behind the dynamic-batching
+//! coordinator and drive it with a bursty closed-loop workload, reporting
+//! latency percentiles, realized batch sizes and throughput — the serving
+//! shape of the paper's latency story (§4.2).
+//!
+//! Run: `cargo run --release --example serve [requests]`
+//! (works without artifacts: uses a PTQ-quantized random model when no
+//! trained model is present)
+
+use anyhow::Result;
+use iaoi::coordinator::{BatchPolicy, Coordinator, EngineKind};
+use iaoi::data::{ClassificationSet, Rng};
+use iaoi::graph::builders::papernet_random;
+use iaoi::nn::FusedActivation;
+use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::tensor::Tensor;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> Result<()> {
+    let requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+
+    // Build an int8 engine (PTQ of a random model keeps the example
+    // self-contained; `iaoi serve` uses the QAT-trained weights).
+    let float_model = papernet_random(16, FusedActivation::Relu6, 3);
+    let mut rng = Rng::seeded(9);
+    let calib: Vec<Tensor<f32>> = (0..3)
+        .map(|_| {
+            let mut d = vec![0f32; 2 * 16 * 16 * 3];
+            for v in d.iter_mut() {
+                *v = rng.range_f32(-1.0, 1.0);
+            }
+            Tensor::from_vec(&[2, 16, 16, 3], d)
+        })
+        .collect();
+    let (folded, int8_model) = quantize_graph(&float_model, &calib, QuantizeOptions::default());
+
+    let ds = ClassificationSet::new(16, 16, 11);
+    for (label, engine) in [
+        ("int8", EngineKind::Quant(Arc::new(int8_model))),
+        ("float32", EngineKind::Float(Arc::new(folded))),
+    ] {
+        for max_batch in [1usize, 8] {
+            let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(1) };
+            let coord = Coordinator::start(engine.clone(), policy, 1);
+            let client = coord.client();
+            let start = Instant::now();
+            // Bursty open-ish loop: issue in bursts of 16, await each burst.
+            let mut done = 0usize;
+            while done < requests {
+                let burst: Vec<_> = (0..16.min(requests - done))
+                    .map(|i| {
+                        let (img, _) = ds.example(3, (done + i) as u64);
+                        client.submit(img).expect("submit")
+                    })
+                    .collect();
+                done += burst.len();
+                for (_, rx) in burst {
+                    rx.recv().expect("response");
+                }
+            }
+            let wall = start.elapsed().as_secs_f64();
+            let m = coord.shutdown();
+            println!("{}", m.summary());
+            println!(
+                "  engine={label} max_batch={max_batch} -> {:.0} req/s",
+                requests as f64 / wall
+            );
+        }
+    }
+    println!("serve example OK — compare int8 vs float32 throughput and the max_batch=1 vs 8 batching win");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Latency-vs-accuracy trade-off in miniature (fig. 1.1c's shape): sweep
+//! PaperNet width multipliers, train each point float and QAT via the AOT
+//! artifacts, and print the two trade-off series with host-measured and
+//! Snapdragon-estimated latencies.
+//!
+//! This is a thinner, example-sized version of `iaoi bench --fig 1.1c`
+//! (fewer points, fewer steps) meant to run in about a minute.
+//!
+//! Run: `make artifacts && cargo run --release --example tradeoff`
+
+use anyhow::Result;
+use iaoi::data::ClassificationSet;
+use iaoi::harness::{accuracy, papernet_from_params, papernet_int8, time_median_ms};
+use iaoi::nn::FusedActivation;
+use iaoi::quantize::QuantizeOptions;
+use iaoi::sim::{ArmCoreModel, Dtype};
+use iaoi::train::{Knobs, Trainer};
+use std::path::PathBuf;
+
+fn main() -> Result<()> {
+    let steps = 150u64;
+    let little = ArmCoreModel::s835_little();
+    println!("| variant | type | acc | host ms/img | S835-LITTLE est. ms |");
+    println!("|---|---|---|---|---|");
+    for variant in ["dm050_r16", "base", "dm200_r16"] {
+        let dir = PathBuf::from("artifacts").join(variant);
+        for quant in [false, true] {
+            let knobs = if quant { Knobs::default() } else { Knobs::float_baseline() };
+            let mut tr = Trainer::new(&dir, 2)?.with_knobs(knobs);
+            for _ in 0..steps {
+                tr.train_step()?;
+            }
+            let spec = tr.spec.clone();
+            let params = tr.export_folded()?;
+            let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 2);
+            let (x1, _) = ds.batch(1, 0, 1);
+            let shape = [1usize, spec.resolution, spec.resolution, 3];
+            let fgraph = papernet_from_params(&params, &spec.export_keys, FusedActivation::Relu6)?;
+            if quant {
+                let ranges = tr.learned_ranges()?;
+                let qgraph = papernet_int8(
+                    &params,
+                    &ranges,
+                    &spec.export_keys,
+                    FusedActivation::Relu6,
+                    QuantizeOptions::default(),
+                )?;
+                let acc = accuracy(&mut |x| qgraph.run(x), &ds, 4, spec.batch);
+                let ms = time_median_ms(10, || {
+                    let _ = qgraph.run(&x1);
+                });
+                let est = little.latency_ms(&fgraph, &shape, Dtype::Int8);
+                println!("| {variant} | int8 | {:.1}% | {ms:.3} | {est:.2} |", acc * 100.0);
+            } else {
+                let acc = accuracy(&mut |x| fgraph.run(x), &ds, 4, spec.batch);
+                let ms = time_median_ms(10, || {
+                    let _ = fgraph.run(&x1);
+                });
+                let est = little.latency_ms(&fgraph, &shape, Dtype::F32);
+                println!("| {variant} | float | {:.1}% | {ms:.3} | {est:.2} |", acc * 100.0);
+            }
+        }
+    }
+    println!("\n(the paper's claim: at matched latency, the int8 series sits above the float series)");
+    Ok(())
+}

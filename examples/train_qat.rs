@@ -1,0 +1,99 @@
+//! End-to-end driver (the repo's required full-system workload): QAT-train
+//! the PaperNet classifier on the synthetic SynthShapes corpus by executing
+//! the AOT `train_step` artifact from Rust, log the loss curve, then:
+//!
+//! * evaluate the float model (AOT `eval_float`),
+//! * evaluate the quantization-*simulation* (AOT `eval_qsim`, which embeds
+//!   the L1 Pallas fake-quant kernel),
+//! * export folded weights + learned ranges (eq. 14, §3.1),
+//! * convert to the pure-Rust **integer-only** engine and compare accuracy
+//!   and single-image latency against the float engine,
+//!
+//! proving that training arithmetic and inference arithmetic correspond —
+//! the paper's central co-design claim.
+//!
+//! Run: `make artifacts && cargo run --release --example train_qat [steps]`
+
+use anyhow::Result;
+use iaoi::data::ClassificationSet;
+use iaoi::harness::{accuracy, papernet_from_params, papernet_int8, time_median_ms};
+use iaoi::nn::FusedActivation;
+use iaoi::quantize::QuantizeOptions;
+use iaoi::train::{Knobs, Trainer};
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let steps: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+    let artifacts = Path::new("artifacts").join("base");
+    let mut trainer = Trainer::new(&artifacts, 0)?.with_knobs(Knobs::default());
+    let spec = trainer.spec.clone();
+    println!(
+        "QAT-training PaperNet: res {}, {} classes, batch {}, {} steps (delay {} steps, §3.1)",
+        spec.resolution, spec.num_classes, spec.batch, steps, spec.act_quant_delay
+    );
+
+    // --- training loop, loss curve logged ---
+    let t0 = std::time::Instant::now();
+    for s in 0..steps {
+        let loss = trainer.train_step()?;
+        if s % 25 == 0 || s + 1 == steps {
+            println!("step {s:>5}  loss {loss:.4}");
+        }
+    }
+    println!(
+        "loss curve: first {:.3} -> last {:.3} over {steps} steps ({:.1} steps/s)",
+        trainer.losses.first().unwrap(),
+        trainer.losses.last().unwrap(),
+        steps as f64 / t0.elapsed().as_secs_f64(),
+    );
+
+    // --- evaluation through all three arithmetic paths ---
+    let acc_float = trainer.eval_float(8)?;
+    let acc_qsim = trainer.eval_qsim(8)?;
+    println!("\naccuracy (AOT graphs): float {:.2}%  quant-sim {:.2}%", acc_float * 100.0, acc_qsim * 100.0);
+
+    let params = trainer.export_folded()?;
+    let ranges = trainer.learned_ranges()?;
+    println!("learned activation ranges (EMA, §3.1):");
+    for (name, (mn, mx)) in &ranges {
+        println!("  {name:<12} [{mn:+.3}, {mx:+.3}]");
+    }
+
+    let float_engine = papernet_from_params(&params, &spec.export_keys, FusedActivation::Relu6)?;
+    let int8_engine = papernet_int8(
+        &params,
+        &ranges,
+        &spec.export_keys,
+        FusedActivation::Relu6,
+        QuantizeOptions::default(),
+    )?;
+    let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 0);
+    let acc_f_engine = accuracy(&mut |x| float_engine.run(x), &ds, 8, spec.batch);
+    let acc_q_engine = accuracy(&mut |x| int8_engine.run(x), &ds, 8, spec.batch);
+
+    let (x1, _) = ds.batch(1, 0, 1);
+    let ms_f = time_median_ms(20, || {
+        let _ = float_engine.run(&x1);
+    });
+    let ms_q = time_median_ms(20, || {
+        let _ = int8_engine.run(&x1);
+    });
+
+    println!("\nRust engines on exported weights:");
+    println!("  float32     : top-1 {:.2}%  {ms_f:.3} ms/img  {} B", acc_f_engine * 100.0, float_engine.model_bytes());
+    println!("  integer-only: top-1 {:.2}%  {ms_q:.3} ms/img  {} B", acc_q_engine * 100.0, int8_engine.model_bytes());
+    println!(
+        "  gap {:+.2}%  |  speedup {:.2}x  |  {:.2}x smaller",
+        (acc_q_engine - acc_f_engine) * 100.0,
+        ms_f / ms_q,
+        float_engine.model_bytes() as f64 / int8_engine.model_bytes() as f64
+    );
+
+    // Cross-check: the quant-sim (training arithmetic) and the integer
+    // engine (inference arithmetic) must agree — fig. 1.1a ≈ fig. 1.1b.
+    let gap = (acc_qsim - acc_q_engine).abs();
+    println!("\nquant-sim vs integer-engine accuracy gap: {:.2}% (co-design check)", gap * 100.0);
+    anyhow::ensure!(gap < 0.1, "training and inference arithmetic diverged");
+    println!("train_qat OK");
+    Ok(())
+}

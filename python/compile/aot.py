@@ -1,0 +1,272 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts and export
+initial parameters for the Rust L3 driver.
+
+Run once via `make artifacts`; Python never runs again after this. The
+interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact *set* is produced per PaperNet variant (architecture sweeps
+for Table 4.1 and the latency-vs-accuracy figures), under
+`artifacts/<variant>/`:
+
+  train_step.hlo.txt   one QAT SGD-momentum step; traced knobs cover float
+                       baseline, ReLU/ReLU6 and the bit-depth grid
+  eval_float.hlo.txt   float logits (BN via EMA stats)
+  eval_qsim.hlo.txt    quant-sim logits (Pallas fake-quant on activations)
+  export_fold.hlo.txt  (params, bn) -> folded OHWI weights (eq. 14)
+  params_init.bin      params + momenta + BN state + ranges (IAOI format)
+  model_spec.txt       tensor ordering and model constants for the Rust side
+
+plus `artifacts/quickstart.hlo.txt`, the standalone Pallas qmatmul kernel
+(L1 -> HLO -> PJRT composition proof).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # the qmatmul kernel needs int64
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import quant
+from compile import model
+from compile.kernels import qmatmul
+
+
+# Variant sets: depth sweep (Table 4.1) + width/resolution sweep (the
+# latency-vs-accuracy figures). "base" is the default PaperNet.
+VARIANTS: dict[str, model.Config] = {
+    "base": model.Config(),
+    "d2": model.Config(depth_blocks=2),
+    "d3": model.Config(depth_blocks=3),
+    "dm050_r16": model.Config(width_mult=0.5),
+    "dm200_r16": model.Config(width_mult=2.0),
+    "dm100_r24": model.Config(resolution=24),
+    "dm200_r24": model.Config(width_mult=2.0, resolution=24),
+    "dm100_r32": model.Config(resolution=32),
+}
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flat (positional) wrappers: the Rust side feeds literals positionally in
+# the documented key order.
+# ---------------------------------------------------------------------------
+
+
+def unflatten(flat, keys):
+    return {k: v for k, v in zip(keys, flat)}
+
+
+def flatten(tree, keys):
+    return [tree[k] for k in keys]
+
+
+def make_flat_fns(cfg: model.Config):
+    pk, bk, rk = cfg.param_keys(), cfg.bn_keys(), cfg.range_keys()
+    n_p, n_b, n_r = len(pk), len(bk), len(rk)
+
+    def train_step_flat(*args):
+        params = unflatten(args[:n_p], pk)
+        momenta = unflatten(args[n_p : 2 * n_p], pk)
+        bn = unflatten(args[2 * n_p : 2 * n_p + n_b], bk)
+        ranges = unflatten(args[2 * n_p + n_b : 2 * n_p + n_b + n_r], rk)
+        x, labels, act_on, w_on, ceil, w_qmax, a_qmax = args[2 * n_p + n_b + n_r :]
+        p2, m2, b2, r2, loss = model.train_step(
+            params, momenta, bn, ranges, x, labels, act_on, w_on, ceil, w_qmax, a_qmax,
+            config=cfg,
+        )
+        return tuple(
+            flatten(p2, pk) + flatten(m2, pk) + flatten(b2, bk) + flatten(r2, rk) + [loss]
+        )
+
+    def eval_float_flat(*args):
+        params = unflatten(args[:n_p], pk)
+        bn = unflatten(args[n_p : n_p + n_b], bk)
+        x, ceil = args[n_p + n_b :]
+        ranges = model.init_ranges(cfg)  # unused when quantize=False
+        return (
+            model.eval_logits(params, bn, ranges, x, quantize=False, act_ceiling=ceil, config=cfg),
+        )
+
+    def eval_qsim_flat(*args):
+        params = unflatten(args[:n_p], pk)
+        bn = unflatten(args[n_p : n_p + n_b], bk)
+        ranges = unflatten(args[n_p + n_b : n_p + n_b + n_r], rk)
+        x, ceil, w_qmax, a_qmax = args[n_p + n_b + n_r :]
+        # use_pallas=True: the L1 fake-quant kernel lowers into this artifact.
+        return (
+            model.eval_logits(
+                params, bn, ranges, x,
+                quantize=True, act_ceiling=ceil, w_qmax=w_qmax, a_qmax=a_qmax,
+                use_pallas=True, config=cfg,
+            ),
+        )
+
+    def export_fold_flat(*args):
+        params = unflatten(args[:n_p], pk)
+        bn = unflatten(args[n_p : n_p + n_b], bk)
+        folded = model.export_folded(params, bn, config=cfg)
+        return tuple(folded[k] for k in cfg.export_keys())
+
+    return train_step_flat, eval_float_flat, eval_qsim_flat, export_fold_flat
+
+
+# Quickstart: a standalone Pallas integer matmul, proving the L1 -> HLO ->
+# PJRT composition end to end with fixed demo quantization parameters.
+QUICKSTART_M, QUICKSTART_K, QUICKSTART_N = 4, 32, 4
+QS_Z1, QS_Z2, QS_Z3 = 128, 120, 10
+QS_M0, QS_SHIFT = quant.normalize_multiplier(0.002)
+
+
+def quickstart_fn(q1, q2, bias):
+    return (
+        qmatmul.qmatmul_pallas(q1, q2, QS_Z1, QS_Z2, bias, QS_M0, QS_SHIFT, QS_Z3, 0, 255),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter export (IAOI binary, mirrored by rust/src/io/mod.rs).
+# ---------------------------------------------------------------------------
+
+
+def write_iaoi(path: str, tensors: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(b"IAOI")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.asarray(arr, dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", 0))  # dtype f32
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def emit_variant(out_dir: str, name: str, cfg: model.Config, seed: int) -> None:
+    vdir = os.path.join(out_dir, name)
+    os.makedirs(vdir, exist_ok=True)
+    params = model.init_params(seed, cfg)
+    bn = model.init_bn_state(cfg)
+    ranges = model.init_ranges(cfg)
+    momenta = model.init_momenta(params)
+    pk, bk, rk = cfg.param_keys(), cfg.bn_keys(), cfg.range_keys()
+
+    p_specs = [spec(params[k].shape) for k in pk]
+    b_specs = [spec(bn[k].shape) for k in bk]
+    r_specs = [spec((2,)) for _ in rk]
+    x_spec = spec((cfg.batch, cfg.resolution, cfg.resolution, cfg.channels))
+    y_spec = spec((cfg.batch,), jnp.int32)
+    s = spec((), jnp.float32)
+
+    train_fn, evalf_fn, evalq_fn, fold_fn = make_flat_fns(cfg)
+    jobs = [
+        ("train_step.hlo.txt", train_fn, p_specs + p_specs + b_specs + r_specs + [x_spec, y_spec, s, s, s, s, s]),
+        ("eval_float.hlo.txt", evalf_fn, p_specs + b_specs + [x_spec, s]),
+        ("eval_qsim.hlo.txt", evalq_fn, p_specs + b_specs + r_specs + [x_spec, s, s, s]),
+        ("export_fold.hlo.txt", fold_fn, p_specs + b_specs),
+    ]
+    for fname, fn, specs in jobs:
+        text = to_hlo_text(fn, specs)
+        with open(os.path.join(vdir, fname), "w") as f:
+            f.write(text)
+    tensors: list[tuple[str, np.ndarray]] = []
+    tensors += [(f"param:{k}", np.asarray(params[k])) for k in pk]
+    tensors += [(f"mom:{k}", np.asarray(momenta[k])) for k in pk]
+    tensors += [(f"bn:{k}", np.asarray(bn[k])) for k in bk]
+    tensors += [(f"range:{k}", np.asarray(ranges[k])) for k in rk]
+    write_iaoi(os.path.join(vdir, "params_init.bin"), tensors)
+
+    spec_lines = [
+        ("variant", name),
+        ("depth_blocks", cfg.depth_blocks),
+        ("width_mult", cfg.width_mult),
+        ("conv_layer_count", cfg.conv_layer_count),
+        ("resolution", cfg.resolution),
+        ("channels", cfg.channels),
+        ("num_classes", cfg.num_classes),
+        ("batch", cfg.batch),
+        ("act_quant_delay", model.ACT_QUANT_DELAY),
+        ("learning_rate", model.LEARNING_RATE),
+        ("momentum", model.MOMENTUM),
+        ("n_params", len(pk)),
+        ("n_bn", len(bk)),
+        ("n_ranges", len(rk)),
+        ("param_keys", ",".join(pk)),
+        ("bn_keys", ",".join(bk)),
+        ("range_keys", ",".join(rk)),
+        ("export_keys", ",".join(cfg.export_keys())),
+        ("train_scalars", "act_quant_on,w_quant_on,act_ceiling,w_qmax,a_qmax"),
+    ]
+    with open(os.path.join(vdir, "model_spec.txt"), "w") as f:
+        for k, v in spec_lines:
+            f.write(f"{k} = {v}\n")
+    print(f"wrote artifact set {vdir} ({len(tensors)} init tensors)")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts", help="artifact directory")
+    parser.add_argument("--seed", type=int, default=0)
+    parser.add_argument(
+        "--variants",
+        default="all",
+        help="comma-separated variant names, or 'all' / 'base'",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.variants == "all":
+        selected = list(VARIANTS)
+    elif args.variants == "base":
+        selected = ["base"]
+    else:
+        selected = args.variants.split(",")
+    for name in selected:
+        emit_variant(args.out, name, VARIANTS[name], args.seed)
+
+    # Quickstart kernel artifact + its demo constants.
+    text = to_hlo_text(
+        quickstart_fn,
+        [
+            spec((QUICKSTART_M, QUICKSTART_K), jnp.uint8),
+            spec((QUICKSTART_K, QUICKSTART_N), jnp.uint8),
+            spec((QUICKSTART_M,), jnp.int32),
+        ],
+    )
+    with open(os.path.join(args.out, "quickstart.hlo.txt"), "w") as f:
+        f.write(text)
+    with open(os.path.join(args.out, "quickstart_spec.txt"), "w") as f:
+        f.write(f"mkn = {QUICKSTART_M},{QUICKSTART_K},{QUICKSTART_N}\n")
+        f.write(f"zps = {QS_Z1},{QS_Z2},{QS_Z3}\n")
+        f.write(f"multiplier = {QS_M0},{QS_SHIFT}\n")
+    print(f"wrote {args.out}/quickstart.hlo.txt ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: simulated quantization (eq. 12) with an STE gradient.
+
+This is the op injected throughout the QAT training graph (fig. 1.1b,
+"wt quant" / "act quant" nodes). The forward pass reproduces, in f32, the
+exact rounding behaviour of the integer inference engine (nudged affine
+parameters, clamp, round-to-nearest); the backward pass is the
+straight-through estimator: gradients pass through where the input lies
+inside the (nudged) representable range and are zero outside, matching
+TensorFlow's FakeQuantWithMinMaxVars gradient.
+
+All four quantization parameters (rmin, rmax, qmin, qmax) are *traced*
+values packed into one length-4 vector operand, so a single compiled train
+step can sweep bit depths (Tables 4.7/4.8) and the narrow weight range.
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the kernel is purely
+elementwise, so the BlockSpec tiles it along the leading axis in VMEM-sized
+chunks; on CPU we run interpret=True, which lowers to the same HLO the
+oracle produces.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nudged(rmin, rmax, qmin, qmax):
+    """Nudged (scale, zero_point); must mirror compile.quant.nudged_params."""
+    rmin = jnp.minimum(rmin, 0.0)
+    rmax = jnp.maximum(rmax, 0.0)
+    degenerate = rmax - rmin < 1e-30
+    scale = jnp.where(degenerate, 1.0, (rmax - rmin) / (qmax - qmin))
+    zp = jnp.clip(jnp.round(qmin - rmin / scale), qmin, qmax)
+    zp = jnp.where(degenerate, qmin, zp)
+    return scale, zp
+
+
+def _fake_quant_kernel(x_ref, qparams_ref, o_ref):
+    x = x_ref[...]
+    rmin, rmax, qmin, qmax = (
+        qparams_ref[0],
+        qparams_ref[1],
+        qparams_ref[2],
+        qparams_ref[3],
+    )
+    scale, zp = _nudged(rmin, rmax, qmin, qmax)
+    q = jnp.clip(jnp.round(x / scale) + zp, qmin, qmax)
+    o_ref[...] = (scale * (q - zp)).astype(x.dtype)
+
+
+def fake_quant_pallas(x, rmin, rmax, qmin, qmax):
+    """Raw Pallas forward (no gradient rule). All parameters traced."""
+    qparams = jnp.stack(
+        [
+            jnp.asarray(rmin, jnp.float32),
+            jnp.asarray(rmax, jnp.float32),
+            jnp.asarray(qmin, jnp.float32),
+            jnp.asarray(qmax, jnp.float32),
+        ]
+    ).reshape(4)
+    return pl.pallas_call(
+        _fake_quant_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, qparams)
+
+
+@jax.custom_vjp
+def fake_quant_ste(x, rmin, rmax, qmin, qmax):
+    """Fake-quantize with the straight-through estimator."""
+    return fake_quant_pallas(x, rmin, rmax, qmin, qmax)
+
+
+def _fq_fwd(x, rmin, rmax, qmin, qmax):
+    out = fake_quant_pallas(x, rmin, rmax, qmin, qmax)
+    return out, (x, rmin, rmax, qmin, qmax)
+
+
+def _fq_bwd(res, g):
+    x, rmin, rmax, qmin, qmax = res
+    scale, zp = _nudged(
+        jnp.asarray(rmin, jnp.float32),
+        jnp.asarray(rmax, jnp.float32),
+        jnp.asarray(qmin, jnp.float32),
+        jnp.asarray(qmax, jnp.float32),
+    )
+    lo = scale * (jnp.asarray(qmin, jnp.float32) - zp)
+    hi = scale * (jnp.asarray(qmax, jnp.float32) - zp)
+    mask = jnp.logical_and(x >= lo, x <= hi).astype(g.dtype)
+    # Ranges are driven by min/max statistics and EMAs (section 3.1), not by
+    # gradient descent, so they receive zero cotangents; so do the bit-depth
+    # bounds.
+    zeros = (
+        jnp.zeros_like(jnp.asarray(rmin, jnp.float32)),
+        jnp.zeros_like(jnp.asarray(rmax, jnp.float32)),
+        jnp.zeros_like(jnp.asarray(qmin, jnp.float32)),
+        jnp.zeros_like(jnp.asarray(qmax, jnp.float32)),
+    )
+    return (g * mask,) + zeros
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_weights_ste(w, bits: int = 8):
+    """Weight fake-quant: range from min/max with the narrow-range tweak."""
+    from compile import quant
+
+    qmin, qmax = quant.quant_range(bits, narrow=True)
+    rmin = jnp.min(jax.lax.stop_gradient(w))
+    rmax = jnp.max(jax.lax.stop_gradient(w))
+    return fake_quant_ste(w, rmin, rmax, jnp.float32(qmin), jnp.float32(qmax))

@@ -1,0 +1,150 @@
+"""L1 Pallas kernel: integer-arithmetic-only matrix multiplication.
+
+The compute hot-spot of quantized inference (eq. 7 + the section 2.4 fused
+pipeline) expressed as a Pallas kernel:
+
+* uint8 operands, int32 accumulator (eq. 10),
+* zero-point handling via the eq. 7 row/column-sum decomposition — the
+  O(N^2) corrections are computed inside the tile so the inner product
+  stays the plain uint8 x uint8 accumulation of eq. 9,
+* int32 bias add (eq. 11),
+* fixed-point requantization: SQRDMULH by the Q0.31 mantissa `m0` then a
+  correctly-rounding right shift (eq. 6 / App. B),
+* saturating cast to uint8 + fused activation clamp.
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the grid tiles M and N
+in 128-unit MXU-shaped blocks with K resident; VMEM per step is
+bm*K + K*bn (u8) + bm*bn*4 (i32) which for bm = bn = 128 and K = 1024 is
+about 0.3 MiB, far under the ~16 MiB VMEM budget, leaving room for double
+buffering. On CPU we must run interpret=True (the real TPU lowering emits a
+Mosaic custom-call the CPU plugin cannot execute), so correctness is
+validated through the interpret path against `ref.qmatmul_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tiles (128x128 systolic array).
+DEFAULT_BLOCK = 128
+
+
+def _srdhm(a, b):
+    """SQRDMULH on int32 blocks (App. B), int64 intermediate."""
+    ab = a.astype(jnp.int64) * b.astype(jnp.int64)
+    nudge = jnp.where(ab >= 0, 1 << 30, 1 - (1 << 30)).astype(jnp.int64)
+    total = ab + nudge
+    # Truncating division toward zero.
+    out = jnp.where(total >= 0, total // (1 << 31), -((-total) // (1 << 31)))
+    sat = jnp.logical_and(a == jnp.int32(-(2**31)), b == jnp.int32(-(2**31)))
+    return jnp.where(sat, jnp.int64(2**31 - 1), out).astype(jnp.int32)
+
+
+def _rounding_shift(x, exponent: int):
+    if exponent == 0:
+        return x
+    mask = jnp.int32((1 << exponent) - 1)
+    remainder = jnp.bitwise_and(x, mask)
+    threshold = (mask >> 1) + jnp.where(x < 0, 1, 0).astype(jnp.int32)
+    return (x >> exponent) + jnp.where(remainder > threshold, 1, 0).astype(jnp.int32)
+
+
+def _qmatmul_kernel(
+    q1_ref,
+    q2_ref,
+    bias_ref,
+    o_ref,
+    *,
+    k: int,
+    z1: int,
+    z2: int,
+    m0: int,
+    right_shift: int,
+    z3: int,
+    clamp_min: int,
+    clamp_max: int,
+):
+    a1 = q1_ref[...].astype(jnp.int32)  # (bm, K) weights tile
+    a2 = q2_ref[...].astype(jnp.int32)  # (K, bn) activations tile
+    # eq. 9: the core integer accumulation — this is the MXU contraction.
+    raw = jnp.dot(a1, a2)
+    # eq. 7/8: O(N^2) zero-point corrections from row/col sums.
+    row_sums = jnp.sum(a1, axis=1, keepdims=True)
+    col_sums = jnp.sum(a2, axis=0, keepdims=True)
+    acc = raw + jnp.int32(k * z1 * z2) - jnp.int32(z1) * col_sums - jnp.int32(z2) * row_sums
+    # eq. 11 bias (int32, S_bias = S1*S2, Z_bias = 0).
+    acc = acc + bias_ref[...].astype(jnp.int32)[:, None]
+    # section 2.4 down-scale: fixed-point multiply + rounding shift.
+    scaled = _rounding_shift(_srdhm(acc, jnp.full_like(acc, jnp.int32(m0))), right_shift)
+    q = scaled + jnp.int32(z3)
+    q = jnp.clip(q, 0, 255)
+    q = jnp.clip(q, clamp_min, clamp_max)
+    o_ref[...] = q.astype(jnp.uint8)
+
+
+def qmatmul_pallas(
+    q1,
+    q2,
+    z1: int,
+    z2: int,
+    bias,
+    m0: int,
+    right_shift: int,
+    z3: int,
+    clamp_min: int = 0,
+    clamp_max: int = 255,
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+):
+    """Tiled integer matmul `uint8[M,K] x uint8[K,N] -> uint8[M,N]`.
+
+    Tile sizes clamp to the matrix dimensions; dimensions need not divide
+    the block (Pallas pads the tail block and we mask via the grid index
+    map's clamping in interpret mode).
+    """
+    m, k = q1.shape
+    k2, n = q2.shape
+    assert k == k2, (q1.shape, q2.shape)
+    if bias is None:
+        bias = jnp.zeros((m,), jnp.int32)
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    # Grid must cover M and N exactly; require divisibility for the AOT
+    # path (model shapes are chosen MXU-friendly), fall back to one tile
+    # otherwise.
+    if m % bm != 0 or n % bn != 0:
+        bm, bn = m, n
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(
+        _qmatmul_kernel,
+        k=k,
+        z1=int(z1),
+        z2=int(z2),
+        m0=int(m0),
+        right_shift=int(right_shift),
+        z3=int(z3),
+        clamp_min=int(clamp_min),
+        clamp_max=int(clamp_max),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),  # weights row-panel
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),  # activations col-panel
+            pl.BlockSpec((bm,), lambda i, j: (i,)),  # per-row bias
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint8),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q1, q2, bias)
+
+
+def vmem_bytes_estimate(block_m: int, block_n: int, k: int) -> int:
+    """Static VMEM footprint of one grid step (for DESIGN.md's roofline
+    estimate): two uint8 operand panels plus the int32 accumulator tile."""
+    return block_m * k + k * block_n + 4 * block_m * block_n

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Two oracles:
+
+* ``fake_quant_ref`` — eq. 12 simulated quantization, shared with
+  ``compile.quant.fake_quant_reference``.
+* ``qmatmul_ref`` — the full integer-arithmetic-only matmul of sections
+  2.2-2.4: uint8 operands, int32 accumulation via the eq. 7 zero-point
+  decomposition, int32 bias, fixed-point requantization (eq. 6 multiplier,
+  SQRDMULH + correctly-rounding shift), saturating cast and clamp. This is
+  the bit-exact reference the Rust `gemm` module must also match.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile import quant
+
+
+def fake_quant_ref(x, rmin, rmax, qmin: float, qmax: float):
+    """Eq. 12 oracle (delegates to the shared jnp implementation)."""
+    return quant.fake_quant_reference(x, rmin, rmax, qmin, qmax)
+
+
+def qmatmul_ref(
+    q1,  # uint8 [M, K]  (weights)
+    q2,  # uint8 [K, N]  (activations)
+    z1: int,
+    z2: int,
+    bias,  # int32 [M] or None
+    m0: int,
+    right_shift: int,
+    z3: int,
+    clamp_min: int = 0,
+    clamp_max: int = 255,
+):
+    """Integer-only quantized matmul, eq. 7 + the section 2.4 pipeline.
+
+    Everything is integer arithmetic: the only real-number input, the
+    multiplier M = S1*S2/S3, has already been normalized offline into
+    (m0, right_shift) per eq. 6.
+    """
+    k = q1.shape[1]
+    a1 = q1.astype(jnp.int32)
+    a2 = q2.astype(jnp.int32)
+    raw = jnp.matmul(a1, a2)  # eq. 9: the O(N^3) core on raw uint8 codes
+    row_sums = jnp.sum(a1, axis=1, keepdims=True)  # a-bar_1 (eq. 8)
+    col_sums = jnp.sum(a2, axis=0, keepdims=True)  # a_2 (eq. 8)
+    acc = raw + k * z1 * z2 - z1 * col_sums - z2 * row_sums  # eq. 7
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)[:, None]  # eq. 11 bias
+    scaled = quant.apply_multiplier(acc, m0, right_shift)
+    q = scaled + jnp.int32(z3)
+    q = jnp.clip(q, 0, 255)  # saturating cast to uint8
+    q = jnp.clip(q, clamp_min, clamp_max)  # fused activation clamp
+    return q.astype(jnp.uint8)
+
+
+def qmatmul_float_view(q1, q2, s1, s2, z1, z2, bias_real, s3, z3):
+    """What the quantized matmul *means* in real numbers: dequantize inputs,
+    real matmul, quantize output. Used to bound the integer pipeline's error
+    in tests (they must agree to within one output LSB)."""
+    r1 = s1 * (q1.astype(jnp.float32) - z1)
+    r2 = s2 * (q2.astype(jnp.float32) - z2)
+    r3 = jnp.matmul(r1, r2)
+    if bias_real is not None:
+        r3 = r3 + bias_real[:, None]
+    q = jnp.clip(jnp.round(r3 / s3) + z3, 0, 255)
+    return q.astype(jnp.uint8)

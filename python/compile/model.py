@@ -1,0 +1,426 @@
+"""L2: the QAT model family ("PaperNet") — JAX forward/backward with
+simulated quantization (section 3), batch-norm folding (section 3.2,
+figs. C.7/C.8), EMA activation ranges (section 3.1) and delayed activation
+quantization.
+
+The architecture family is config-driven (depth blocks, width multiplier,
+input resolution) so the Rust harness can reproduce the paper's sweeps
+(Table 4.1 depths, the MobileNet DM x resolution figures) from a handful of
+AOT artifacts. Quantization *knobs* are traced scalars — weight-quant
+on/off, activation ceiling (ReLU vs ReLU6), weight/activation bit depths —
+so a single compiled train step covers float baselines, Table 4.3's
+nonlinearity comparison and Tables 4.7/4.8's bit-depth grid.
+
+Folding during training follows fig. C.7: the convolution is evaluated once
+with raw weights to obtain batch statistics, the weights are folded with
+those statistics, fake-quantized, and applied in a second convolution —
+"quantize weights after they have been scaled by the batch normalization
+parameters". Export folds with the EMA statistics (eq. 14, fig. C.6) and
+transposes to the Rust engine's OHWI layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile import quant
+from compile.kernels import fake_quant as fq_kernel
+
+BN_EPS = 1e-3
+BN_DECAY = 0.9
+RANGE_DECAY = 0.99
+LEARNING_RATE = 0.03
+MOMENTUM = 0.9  # the paper's ResNet protocol (App. D.1) uses momentum 0.9
+ACT_QUANT_DELAY = 100  # steps; section 3.1's delayed activation quantization
+RELU6_CEIL = 6.0
+RELU_CEIL = 1e9  # "ReLU": effectively uncapped
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """One member of the PaperNet family."""
+
+    depth_blocks: int = 1  # extra (dw s1 + pw) pairs at the middle stage
+    width_mult: float = 1.0
+    resolution: int = 16
+    channels: int = 3
+    num_classes: int = 16
+    batch: int = 32
+
+    def width(self, base: int) -> int:
+        return max(4, int(round(base * self.width_mult / 4.0)) * 4)
+
+    def layers(self):
+        """[(name, kind, stride, cin, cout)] with kind in {conv, dw}."""
+        w8, w16, w32 = self.width(8), self.width(16), self.width(32)
+        layers = [("conv0", "conv", 1, self.channels, w8)]
+        layers += [("dw1", "dw", 2, w8, w8), ("pw1", "conv", 1, w8, w16)]
+        for i in range(self.depth_blocks - 1):
+            layers += [
+                (f"mdw{i}", "dw", 1, w16, w16),
+                (f"mpw{i}", "conv", 1, w16, w16),
+            ]
+        layers += [("dw2", "dw", 2, w16, w16), ("pw2", "conv", 1, w16, w32)]
+        return layers
+
+    @property
+    def fc_in(self) -> int:
+        return self.width(32)
+
+    @property
+    def conv_layer_count(self) -> int:
+        return len(self.layers()) + 1  # + fc, the paper's depth counting
+
+    def param_keys(self):
+        return [f"{n}/{p}" for (n, _, _, _, _) in self.layers() for p in ("w", "gamma", "beta")] + [
+            "fc/w",
+            "fc/b",
+        ]
+
+    def bn_keys(self):
+        return [f"{n}/{p}" for (n, _, _, _, _) in self.layers() for p in ("mean", "var")]
+
+    def range_keys(self):
+        return [f"{n}/act" for (n, _, _, _, _) in self.layers()] + ["logits/act"]
+
+    def export_keys(self):
+        return [f"{n}/{p}" for (n, _, _, _, _) in self.layers() for p in ("w", "b")] + [
+            "fc/w",
+            "fc/b",
+        ]
+
+
+DEFAULT = Config()
+
+# Module-level views of the default config (used by tests and the quickstart
+# artifact; variant-specific values live in each artifact's spec file).
+LAYERS = DEFAULT.layers()
+FC_IN = DEFAULT.fc_in
+RESOLUTION = DEFAULT.resolution
+CHANNELS = DEFAULT.channels
+NUM_CLASSES = DEFAULT.num_classes
+BATCH = DEFAULT.batch
+PARAM_KEYS = DEFAULT.param_keys()
+BN_KEYS = DEFAULT.bn_keys()
+RANGE_KEYS = DEFAULT.range_keys()
+EXPORT_KEYS = DEFAULT.export_keys()
+
+
+def param_shapes(config: Config = DEFAULT) -> dict[str, tuple[int, ...]]:
+    shapes: dict[str, tuple[int, ...]] = {}
+    for name, kind, _, cin, cout in config.layers():
+        if kind == "conv":
+            k = 3 if name == "conv0" else 1  # stem is 3x3, pointwise are 1x1
+            shapes[f"{name}/w"] = (k, k, cin, cout)  # HWIO
+        else:
+            shapes[f"{name}/w"] = (3, 3, 1, cout)  # depthwise HWIO (groups=C)
+        shapes[f"{name}/gamma"] = (cout,)
+        shapes[f"{name}/beta"] = (cout,)
+    shapes["fc/w"] = (config.fc_in, config.num_classes)
+    shapes["fc/b"] = (config.num_classes,)
+    return shapes
+
+
+def init_params(seed: int = 0, config: Config = DEFAULT) -> dict[str, jnp.ndarray]:
+    key = jax.random.PRNGKey(seed)
+    params: dict[str, jnp.ndarray] = {}
+    for name, shape in param_shapes(config).items():
+        key, sub = jax.random.split(key)
+        if name.endswith("/w"):
+            fan_in = int(jnp.prod(jnp.array(shape[:-1])))
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+            )
+        elif name.endswith("gamma"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+def init_bn_state(config: Config = DEFAULT) -> dict[str, jnp.ndarray]:
+    state: dict[str, jnp.ndarray] = {}
+    for name, _, _, _, cout in config.layers():
+        state[f"{name}/mean"] = jnp.zeros((cout,), jnp.float32)
+        state[f"{name}/var"] = jnp.ones((cout,), jnp.float32)
+    return state
+
+
+def init_ranges(config: Config = DEFAULT) -> dict[str, jnp.ndarray]:
+    # Start at the ReLU6 natural range; EMAs take over from the first step.
+    return {k: jnp.array([0.0, 6.0], jnp.float32) for k in config.range_keys()}
+
+
+def init_momenta(params) -> dict[str, jnp.ndarray]:
+    return {k: jnp.zeros_like(v) for k, v in params.items()}
+
+
+# ---------------------------------------------------------------------------
+# Forward pass.
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, stride: int, depthwise: bool):
+    if depthwise:
+        groups = w.shape[-1]
+        return jax.lax.conv_general_dilated(
+            x,
+            w,
+            window_strides=(stride, stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups,
+        )
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _fq(x, rmin, rmax, qmin, qmax, use_pallas: bool):
+    if use_pallas:
+        return fq_kernel.fake_quant_ste(x, rmin, rmax, qmin, qmax)
+    return _ref_ste(x, rmin, rmax, qmin, qmax)
+
+
+def _fq_weights(w, w_qmax, use_pallas: bool):
+    # Narrow range [1, qmax]: int8 never takes -128 (section 3.1, App. B).
+    rmin = jnp.min(jax.lax.stop_gradient(w))
+    rmax = jnp.max(jax.lax.stop_gradient(w))
+    return _fq(w, rmin, rmax, jnp.float32(1.0), w_qmax, use_pallas)
+
+
+@jax.custom_vjp
+def _ref_ste(x, rmin, rmax, qmin, qmax):
+    return quant.fake_quant_reference(x, rmin, rmax, qmin, qmax)
+
+
+def _ref_ste_fwd(x, rmin, rmax, qmin, qmax):
+    return quant.fake_quant_reference(x, rmin, rmax, qmin, qmax), (x, rmin, rmax, qmin, qmax)
+
+
+def _ref_ste_bwd(res, g):
+    x, rmin, rmax, qmin, qmax = res
+    scale, zp = quant.nudged_params(rmin, rmax, qmin, qmax)
+    lo = scale * (qmin - zp)
+    hi = scale * (qmax - zp)
+    mask = jnp.logical_and(x >= lo, x <= hi).astype(g.dtype)
+    zero = jnp.zeros_like(rmin)
+    return (g * mask, zero, zero, jnp.zeros_like(qmin), jnp.zeros_like(qmax))
+
+
+_ref_ste.defvjp(_ref_ste_fwd, _ref_ste_bwd)
+
+
+def forward(
+    params,
+    bn_state,
+    ranges,
+    x,
+    *,
+    training: bool,
+    quantize: bool,
+    act_quant_on,
+    w_quant_on=1.0,
+    act_ceiling=RELU6_CEIL,
+    w_qmax=255.0,
+    a_qmax=255.0,
+    use_pallas: bool = False,
+    config: Config = DEFAULT,
+):
+    """PaperNet forward.
+
+    Returns (logits, new_bn_state, new_ranges). In eval modes the returned
+    states equal the inputs. `act_quant_on`, `w_quant_on`, `act_ceiling`,
+    `w_qmax`, `a_qmax` are traced scalars so one compiled step covers the
+    delayed-activation schedule, float baselines, ReLU-vs-ReLU6 and the
+    bit-depth grid.
+    """
+    act_quant_on = jnp.float32(act_quant_on)
+    w_quant_on = jnp.float32(w_quant_on)
+    act_ceiling = jnp.float32(act_ceiling)
+    w_qmax = jnp.float32(w_qmax)
+    a_qmax = jnp.float32(a_qmax)
+    a_qmin = jnp.float32(0.0)
+
+    new_bn = dict(bn_state)
+    new_ranges = dict(ranges)
+    h = x
+    for name, kind, stride, _cin, _cout in config.layers():
+        w = params[f"{name}/w"]
+        gamma = params[f"{name}/gamma"]
+        beta = params[f"{name}/beta"]
+        depthwise = kind == "dw"
+        if training:
+            # fig. C.7: first conv with raw weights for batch statistics.
+            y_raw = _conv(h, w, stride, depthwise)
+            axes = (0, 1, 2)
+            mu = jnp.mean(y_raw, axis=axes)
+            var = jnp.var(y_raw, axis=axes)
+            new_bn[f"{name}/mean"] = BN_DECAY * bn_state[f"{name}/mean"] + (1 - BN_DECAY) * mu
+            new_bn[f"{name}/var"] = BN_DECAY * bn_state[f"{name}/var"] + (1 - BN_DECAY) * var
+        else:
+            mu = bn_state[f"{name}/mean"]
+            var = bn_state[f"{name}/var"]
+        scales = gamma / jnp.sqrt(var + BN_EPS)  # eq. 14
+        b_fold = beta - scales * mu
+        w_fold = w * scales  # broadcast over the HWIO output-channel axis
+        if quantize:
+            wq = _fq_weights(w_fold, w_qmax, use_pallas)
+            w_fold = w_quant_on * wq + (1.0 - w_quant_on) * w_fold
+        y = _conv(h, w_fold, stride, depthwise) + b_fold
+        y = jnp.clip(y, 0.0, act_ceiling)
+        if quantize:
+            rng_key = f"{name}/act"
+            if training:
+                bmin = jnp.min(jax.lax.stop_gradient(y))
+                bmax = jnp.max(jax.lax.stop_gradient(y))
+                nmin, nmax = quant.ema_update(
+                    ranges[rng_key][0], ranges[rng_key][1], bmin, bmax, RANGE_DECAY
+                )
+                new_ranges[rng_key] = jnp.stack([nmin, nmax])
+            pair = new_ranges[rng_key] if training else ranges[rng_key]
+            yq = _fq(y, pair[0], pair[1], a_qmin, a_qmax, use_pallas)
+            y = act_quant_on * yq + (1.0 - act_quant_on) * y
+        h = y
+    # Global average pool + FC head.
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ params["fc/w"] + params["fc/b"]
+    if quantize:
+        key = "logits/act"
+        if training:
+            bmin = jnp.min(jax.lax.stop_gradient(logits))
+            bmax = jnp.max(jax.lax.stop_gradient(logits))
+            nmin, nmax = quant.ema_update(
+                ranges[key][0], ranges[key][1], bmin, bmax, RANGE_DECAY
+            )
+            new_ranges[key] = jnp.stack([nmin, nmax])
+        pair = new_ranges[key] if training else ranges[key]
+        lq = _fq(logits, pair[0], pair[1], a_qmin, a_qmax, False)
+        logits = act_quant_on * lq + (1.0 - act_quant_on) * logits
+    return logits, new_bn, new_ranges
+
+
+def cross_entropy(logits, labels, num_classes: int):
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Train step (SGD with momentum, App. D.1 protocol scaled down).
+# ---------------------------------------------------------------------------
+
+
+def train_step(
+    params,
+    momenta,
+    bn_state,
+    ranges,
+    x,
+    labels,
+    act_quant_on,
+    w_quant_on=1.0,
+    act_ceiling=RELU6_CEIL,
+    w_qmax=255.0,
+    a_qmax=255.0,
+    *,
+    use_pallas: bool = False,
+    config: Config = DEFAULT,
+):
+    """One QAT SGD-momentum step. Functional: returns all new state.
+
+    With `w_quant_on = act_quant_on = 0` the same compiled step trains the
+    float baseline (BN statistics still flow through the folded graph)."""
+
+    def loss_fn(p):
+        logits, new_bn, new_ranges = forward(
+            p,
+            bn_state,
+            ranges,
+            x,
+            training=True,
+            quantize=True,
+            act_quant_on=act_quant_on,
+            w_quant_on=w_quant_on,
+            act_ceiling=act_ceiling,
+            w_qmax=w_qmax,
+            a_qmax=a_qmax,
+            use_pallas=use_pallas,
+            config=config,
+        )
+        return cross_entropy(logits, labels, config.num_classes), (new_bn, new_ranges)
+
+    (loss, (new_bn, new_ranges)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    new_params = {}
+    new_momenta = {}
+    for k in params:
+        v = MOMENTUM * momenta[k] + grads[k]
+        new_momenta[k] = v
+        new_params[k] = params[k] - LEARNING_RATE * v
+    return new_params, new_momenta, new_bn, new_ranges, loss
+
+
+def eval_logits(
+    params,
+    bn_state,
+    ranges,
+    x,
+    *,
+    quantize: bool,
+    act_ceiling=RELU6_CEIL,
+    w_qmax=255.0,
+    a_qmax=255.0,
+    use_pallas: bool = False,
+    config: Config = DEFAULT,
+):
+    """Eval forward: float (`quantize=False`) or quant-sim (`True`)."""
+    logits, _, _ = forward(
+        params,
+        bn_state,
+        ranges,
+        x,
+        training=False,
+        quantize=quantize,
+        act_quant_on=jnp.float32(1.0),
+        w_quant_on=jnp.float32(1.0),
+        act_ceiling=act_ceiling,
+        w_qmax=w_qmax,
+        a_qmax=a_qmax,
+        use_pallas=use_pallas,
+        config=config,
+    )
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Export: folded inference parameters (eq. 14) in the Rust OHWI layout.
+# ---------------------------------------------------------------------------
+
+
+def export_folded(params, bn_state, config: Config = DEFAULT):
+    """Fold BN into weights/biases with the EMA statistics (fig. C.6) and
+    transpose into the layouts `rust/src/graph/builders.rs::papernet`
+    expects: conv OHWI `[cout, kh, kw, cin]`, depthwise `[1, kh, kw, c]`,
+    fc `[units, in]`."""
+    out: dict[str, jnp.ndarray] = {}
+    for name, kind, _stride, _cin, _cout in config.layers():
+        w = params[f"{name}/w"]
+        scales = params[f"{name}/gamma"] / jnp.sqrt(bn_state[f"{name}/var"] + BN_EPS)
+        b_fold = params[f"{name}/beta"] - scales * bn_state[f"{name}/mean"]
+        w_fold = w * scales
+        if kind == "conv":
+            out[f"{name}/w"] = jnp.transpose(w_fold, (3, 0, 1, 2))  # HWIO -> OHWI
+        else:
+            out[f"{name}/w"] = jnp.transpose(w_fold, (2, 0, 1, 3))  # HWI(C) -> 1HWC
+        out[f"{name}/b"] = b_fold
+    out["fc/w"] = jnp.transpose(params["fc/w"], (1, 0))  # [in,out] -> [out,in]
+    out["fc/b"] = params["fc/b"]
+    return out

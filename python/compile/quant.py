@@ -1,0 +1,133 @@
+"""Quantization math in JAX (build-time only).
+
+Implements the paper's quantization scheme (eq. 1, eq. 12-13) in jnp so the
+L2 training graph simulates *exactly* the arithmetic of the Rust inference
+engine (`rust/src/quant`): nudged affine parameters with an exactly
+representable real zero, narrow-range weights (int8 never takes -128,
+App. B), and the B-bit generalization used by the bit-depth ablations
+(Tables 4.7/4.8).
+
+Everything here is pure and differentiable-friendly; the straight-through
+estimator lives with the fake-quant kernels in `kernels/`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+UINT8_MAX = 255.0
+
+
+def quant_range(bits: int, narrow: bool) -> tuple[float, float]:
+    """Quantized range [qmin, qmax] for B-bit storage.
+
+    `narrow=True` drops the lowest code so symmetric int8 weights avoid
+    -128, enabling the App. B int16-pairwise trick.
+    """
+    assert 2 <= bits <= 8, bits
+    return (1.0 if narrow else 0.0), float(2**bits - 1)
+
+
+def nudged_params(rmin, rmax, qmin: float, qmax: float):
+    """Scale and zero-point from an observed real range (eq. 13).
+
+    The range is widened to include 0.0 and the zero-point is rounded to an
+    integer so real 0.0 is exactly representable (the zero-padding
+    requirement of section 2.1). Mirrors
+    `rust/src/quant/mod.rs::QuantParams::from_min_max` bit-for-bit at f64.
+    """
+    rmin = jnp.minimum(rmin, 0.0)
+    rmax = jnp.maximum(rmax, 0.0)
+    degenerate = rmax - rmin < 1e-30
+    scale = jnp.where(degenerate, 1.0, (rmax - rmin) / (qmax - qmin))
+    zp_real = qmin - rmin / scale
+    zero_point = jnp.clip(jnp.round(zp_real), qmin, qmax)
+    zero_point = jnp.where(degenerate, qmin, zero_point)
+    return scale, zero_point
+
+
+def fake_quant_reference(x, rmin, rmax, qmin: float, qmax: float):
+    """Eq. 12: clamp -> affine quantize -> round -> dequantize, in f32.
+
+    The pure-jnp oracle for the Pallas kernel and the forward arithmetic of
+    simulated-quantization training (fig. 1.1b).
+    """
+    scale, zero_point = nudged_params(rmin, rmax, qmin, qmax)
+    q = jnp.clip(jnp.round(x / scale) + zero_point, qmin, qmax)
+    return scale * (q - zero_point)
+
+
+def quantize_reference(x, rmin, rmax, qmin: float, qmax: float):
+    """Integer codes (as f32 values) for `x` under the nudged parameters."""
+    scale, zero_point = nudged_params(rmin, rmax, qmin, qmax)
+    return jnp.clip(jnp.round(x / scale) + zero_point, qmin, qmax)
+
+
+def weight_range(w):
+    """Weight quantization range: a := min w, b := max w (section 3.1)."""
+    return jnp.min(w), jnp.max(w)
+
+
+def fake_quant_weights(w, bits: int = 8):
+    """Weight fake-quantization with the narrow-range tweak (section 3.1)."""
+    qmin, qmax = quant_range(bits, narrow=True)
+    rmin, rmax = weight_range(w)
+    return fake_quant_reference(w, rmin, rmax, qmin, qmax)
+
+
+def ema_update(old_min, old_max, batch_min, batch_max, decay: float):
+    """Section 3.1 activation-range EMA ('smoothing parameter close to 1')."""
+    new_min = decay * old_min + (1.0 - decay) * batch_min
+    new_max = decay * old_max + (1.0 - decay) * batch_max
+    return new_min, new_max
+
+
+def normalize_multiplier(m: float) -> tuple[int, int]:
+    """Offline eq. 6 normalization M = 2^-n * M0 (python ints, build path).
+
+    Returns (m0_q31, right_shift) exactly like
+    `rust/src/quant/multiplier.rs::QuantizedMultiplier::from_f64`.
+    """
+    assert m > 0.0, m
+    shift = 0
+    m0 = float(m)
+    while m0 < 0.5:
+        m0 *= 2.0
+        shift -= 1
+    while m0 >= 1.0:
+        m0 /= 2.0
+        shift += 1
+    q = int(round(m0 * (1 << 31)))
+    if q == 1 << 31:
+        q //= 2
+        shift += 1
+    assert (1 << 30) <= q < (1 << 31)
+    return q, -shift
+
+
+def srdhm(a, b):
+    """SQRDMULH on int32 jnp arrays (App. B), matching `fixedpoint::srdhm`."""
+    a64 = a.astype(jnp.int64)
+    b64 = b.astype(jnp.int64)
+    ab = a64 * b64
+    nudge = jnp.where(ab >= 0, 1 << 30, 1 - (1 << 30)).astype(jnp.int64)
+    # Truncating division toward zero, as in the C++ reference.
+    out = (ab + nudge) // (1 << 31)
+    out = jnp.where((ab + nudge) < 0, -((-(ab + nudge)) // (1 << 31)), out)
+    sat = (a == jnp.int32(-(2**31))) & (b == jnp.int32(-(2**31)))
+    return jnp.where(sat, jnp.int32(2**31 - 1), out.astype(jnp.int32))
+
+
+def rounding_div_by_pot(x, exponent: int):
+    """Round-to-nearest (ties away from zero) right shift, per App. B."""
+    if exponent == 0:
+        return x
+    mask = jnp.int32((1 << exponent) - 1)
+    remainder = jnp.bitwise_and(x, mask)
+    threshold = (mask >> 1) + jnp.where(x < 0, 1, 0).astype(jnp.int32)
+    return (x >> exponent) + jnp.where(remainder > threshold, 1, 0).astype(jnp.int32)
+
+
+def apply_multiplier(acc, m0: int, right_shift: int):
+    """Integer requantization: srdhm by m0 then rounding right shift."""
+    return rounding_div_by_pot(srdhm(acc, jnp.int32(m0)), right_shift)

@@ -1,0 +1,191 @@
+"""Kernel vs reference oracle — the CORE correctness signal for L1.
+
+hypothesis sweeps shapes, ranges and bit depths; every Pallas kernel output
+must match the pure-jnp oracle exactly (same float ops) or within one LSB
+where integer rounding orders differ (they don't: bit-exact asserts below).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+from compile.kernels import fake_quant as fq
+from compile.kernels import qmatmul as qm
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# fake_quant kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 17),
+    cols=st.integers(1, 33),
+    rmin=st.floats(-8.0, -0.01),
+    rmax=st.floats(0.01, 8.0),
+    bits=st.integers(4, 8),
+    narrow=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_pallas_matches_ref(rows, cols, rmin, rmax, bits, narrow, seed):
+    qmin, qmax = quant.quant_range(bits, narrow)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(rmin * 1.5, rmax * 1.5, (rows, cols)), jnp.float32)
+    got = fq.fake_quant_pallas(x, jnp.float32(rmin), jnp.float32(rmax), qmin, qmax)
+    want = ref.fake_quant_ref(x, jnp.float32(rmin), jnp.float32(rmax), qmin, qmax)
+    # XLA (ref) and interpret-mode numpy (pallas) may differ by float ulps in
+    # the scale computation; any *code* disagreement would show up as a full
+    # quantization-step difference, far above this tolerance.
+    scale = (max(rmax, 0.0) - min(rmin, 0.0)) / (qmax - qmin)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=scale * 1e-3)
+
+
+def test_fake_quant_zero_is_exact():
+    # Section 2.1: real 0.0 must be exactly representable after quantization.
+    for rmin, rmax in [(-1.0, 1.0), (-0.3, 2.7), (-6.0, 0.5)]:
+        out = fq.fake_quant_pallas(
+            jnp.zeros((4, 4), jnp.float32), jnp.float32(rmin), jnp.float32(rmax), 0.0, 255.0
+        )
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_fake_quant_is_idempotent():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.uniform(-2, 2, (8, 8)), jnp.float32)
+    once = fq.fake_quant_pallas(x, jnp.float32(-1.5), jnp.float32(1.5), 0.0, 255.0)
+    twice = fq.fake_quant_pallas(once, jnp.float32(-1.5), jnp.float32(1.5), 0.0, 255.0)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_fake_quant_ste_gradient_is_masked_passthrough():
+    # Nudged range for [-1, 1] is [-0.9961, 1.0039] (zero-point 127), so
+    # -1.0 falls just outside while +1.0 falls inside.
+    x = jnp.asarray([-10.0, -0.99, 0.0, 0.5, 1.0, 10.0], jnp.float32)
+    rmin, rmax = jnp.float32(-1.0), jnp.float32(1.0)
+
+    def f(v):
+        return jnp.sum(fq.fake_quant_ste(v, rmin, rmax, 0.0, 255.0))
+
+    g = jax.grad(f)(x)
+    # Inside the representable range: gradient 1; outside: 0.
+    np.testing.assert_allclose(np.asarray(g), [0, 1, 1, 1, 1, 0], atol=1e-6)
+
+
+def test_fake_quant_range_gradients_are_zero():
+    x = jnp.ones((3,), jnp.float32)
+
+    def f(rmin, rmax):
+        return jnp.sum(fq.fake_quant_ste(x, rmin, rmax, 0.0, 255.0))
+
+    g1, g2 = jax.grad(f, argnums=(0, 1))(jnp.float32(-1.0), jnp.float32(2.0))
+    assert float(g1) == 0.0 and float(g2) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# qmatmul kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 64),
+    n=st.integers(1, 24),
+    z1=st.integers(0, 255),
+    z2=st.integers(0, 255),
+    z3=st.integers(0, 255),
+    mult=st.floats(1e-4, 0.99),
+    use_bias=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_pallas_matches_ref(m, k, n, z1, z2, z3, mult, use_bias, seed):
+    rng = np.random.default_rng(seed)
+    q1 = jnp.asarray(rng.integers(1, 256, (m, k)), jnp.uint8)  # narrow weights
+    q2 = jnp.asarray(rng.integers(0, 256, (k, n)), jnp.uint8)
+    bias = jnp.asarray(rng.integers(-5000, 5000, (m,)), jnp.int32) if use_bias else None
+    m0, shift = quant.normalize_multiplier(mult)
+    got = qm.qmatmul_pallas(q1, q2, z1, z2, bias, m0, shift, z3)
+    want = ref.qmatmul_ref(q1, q2, z1, z2, bias, m0, shift, z3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_qmatmul_tiled_grid_matches_single_tile(seed):
+    # Shapes that exercise the (M//bm, N//bn) grid with multiple tiles.
+    rng = np.random.default_rng(seed)
+    m, k, n = 8, 16, 12
+    q1 = jnp.asarray(rng.integers(1, 256, (m, k)), jnp.uint8)
+    q2 = jnp.asarray(rng.integers(0, 256, (k, n)), jnp.uint8)
+    m0, shift = quant.normalize_multiplier(0.01)
+    tiled = qm.qmatmul_pallas(q1, q2, 100, 90, None, m0, shift, 7, block_m=4, block_n=4)
+    single = qm.qmatmul_pallas(q1, q2, 100, 90, None, m0, shift, 7, block_m=8, block_n=12)
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(single))
+
+
+def test_qmatmul_integer_path_tracks_real_arithmetic():
+    # Dequantized integer output must be within one output LSB of the
+    # real-number computation (the section 2.2 guarantee).
+    rng = np.random.default_rng(3)
+    m, k, n = 6, 40, 5
+    s1, s2, s3 = 0.007, 0.02, 0.05
+    z1, z2, z3 = 128, 110, 15
+    q1 = jnp.asarray(rng.integers(1, 256, (m, k)), jnp.uint8)
+    q2 = jnp.asarray(rng.integers(0, 256, (k, n)), jnp.uint8)
+    m0, shift = quant.normalize_multiplier(s1 * s2 / s3)
+    got = qm.qmatmul_pallas(q1, q2, z1, z2, None, m0, shift, z3)
+    want = ref.qmatmul_float_view(q1, q2, s1, s2, z1, z2, None, s3, z3)
+    diff = np.abs(np.asarray(got, np.int32) - np.asarray(want, np.int32))
+    assert diff.max() <= 1, f"max LSB diff {diff.max()}"
+
+
+def test_qmatmul_rejects_mismatched_k():
+    with pytest.raises(AssertionError):
+        qm.qmatmul_pallas(
+            jnp.zeros((2, 3), jnp.uint8), jnp.zeros((4, 2), jnp.uint8), 0, 0, None, 1 << 30, 1, 0
+        )
+
+
+def test_vmem_estimate_is_under_budget():
+    # DESIGN.md section Perf: default MXU tiles with K = 1024 stay well
+    # under a 16 MiB VMEM budget, with room for double buffering.
+    bytes_ = qm.vmem_bytes_estimate(qm.DEFAULT_BLOCK, qm.DEFAULT_BLOCK, 1024)
+    assert bytes_ * 2 < 16 * 1024 * 1024, bytes_
+
+
+# ---------------------------------------------------------------------------
+# integer helpers vs the Rust semantics (same constants as fixedpoint tests)
+# ---------------------------------------------------------------------------
+
+
+def test_srdhm_matches_fixedpoint_reference_cases():
+    cases = [(1 << 30, 1 << 30, 1 << 29), (0, -(2**31), 0)]
+    for a, b, want in cases:
+        got = int(quant.srdhm(jnp.int32(a), jnp.int32(b)))
+        assert got == want, (a, b, got, want)
+    sat = int(quant.srdhm(jnp.int32(-(2**31)), jnp.int32(-(2**31))))
+    assert sat == 2**31 - 1
+
+
+def test_rounding_shift_ties_away_from_zero():
+    # The App. B example: -12 >> 3 must round to -2, not -1.
+    assert int(quant.rounding_div_by_pot(jnp.int32(-12), 3)) == -2
+    assert int(quant.rounding_div_by_pot(jnp.int32(12), 3)) == 2
+    assert int(quant.rounding_div_by_pot(jnp.int32(-11), 3)) == -1
+
+
+@settings(max_examples=50, deadline=None)
+@given(acc=st.integers(-(2**30), 2**30), mult=st.floats(1e-5, 0.999))
+def test_apply_multiplier_tracks_real_product(acc, mult):
+    m0, shift = quant.normalize_multiplier(mult)
+    got = int(quant.apply_multiplier(jnp.int32(acc), m0, shift))
+    want = round(acc * mult)
+    assert abs(got - want) <= 1, (acc, mult, got, want)

@@ -1,0 +1,194 @@
+"""L2 model tests: shapes, BN-fold equivalence, QAT training sanity and the
+pallas/ref path equality inside the full forward."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def synth_batch(seed: int, batch: int = model.BATCH):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        rng.uniform(-1, 1, (batch, model.RESOLUTION, model.RESOLUTION, model.CHANNELS)),
+        jnp.float32,
+    )
+    # Learnable toy labels: mean-brightness quadrant + channel dominance.
+    means = np.asarray(x).mean(axis=(1, 2))  # [B, C]
+    labels = (
+        (means[:, 0] > 0).astype(np.int32) * 8
+        + (means[:, 1] > 0).astype(np.int32) * 4
+        + (means[:, 2] > 0).astype(np.int32) * 2
+        + (np.asarray(x)[:, :8].mean(axis=(1, 2, 3)) > 0).astype(np.int32)
+    )
+    return x, jnp.asarray(labels % model.NUM_CLASSES, jnp.int32)
+
+
+def fresh_state(seed=0):
+    p = model.init_params(seed)
+    return p, model.init_momenta(p), model.init_bn_state(), model.init_ranges()
+
+
+def test_forward_shapes():
+    p, _, bn, rg = fresh_state()
+    x, _ = synth_batch(0)
+    logits, new_bn, new_rg = model.forward(
+        p, bn, rg, x, training=False, quantize=False, act_quant_on=jnp.float32(0.0)
+    )
+    assert logits.shape == (model.BATCH, model.NUM_CLASSES)
+    # Eval must not mutate state.
+    for k in bn:
+        np.testing.assert_array_equal(np.asarray(new_bn[k]), np.asarray(bn[k]))
+
+
+def test_param_counts_match_spec():
+    p, _, bn, rg = fresh_state()
+    assert sorted(p.keys()) == sorted(model.PARAM_KEYS)
+    assert sorted(bn.keys()) == sorted(model.BN_KEYS)
+    assert sorted(rg.keys()) == sorted(model.RANGE_KEYS)
+    shapes = model.param_shapes()
+    for k, v in p.items():
+        assert tuple(v.shape) == shapes[k], k
+
+
+def test_train_step_decreases_loss():
+    """Loss must trend down over QAT steps (memorization of a small fixed
+    set) — the end-to-end signal that STE gradients and folding are sane."""
+    p, m, bn, rg = fresh_state(1)
+    step = jax.jit(
+        lambda p, m, bn, rg, x, y, on: model.train_step(p, m, bn, rg, x, y, on)
+    )
+    batches = [synth_batch(i) for i in range(4)]
+    first = None
+    last = None
+    for i in range(120):
+        x, y = batches[i % 4]
+        act_on = jnp.float32(1.0 if i >= 20 else 0.0)  # scaled-down delay
+        p, m, bn, rg, loss = step(p, m, bn, rg, x, y, act_on)
+        if i < 4:
+            first = float(loss) if first is None else max(first, float(loss))
+        last = float(loss)
+    assert last < first * 0.7, f"loss did not decrease: first {first}, last {last}"
+
+
+def test_ranges_update_only_in_training():
+    p, m, bn, rg = fresh_state(2)
+    x, y = synth_batch(3)
+    _, _, _, rg2, _ = model.train_step(p, m, bn, rg, x, y, jnp.float32(1.0))
+    moved = any(
+        float(jnp.max(jnp.abs(rg2[k] - rg[k]))) > 0 for k in model.RANGE_KEYS
+    )
+    assert moved, "EMA ranges must move during training"
+
+
+def test_qsim_eval_matches_float_when_ranges_are_wide():
+    """With effectively-disabled quantization (huge ranges, 8-bit), the
+    quant-sim logits approximate the float logits coarsely; with trained
+    tight ranges they should be close. Here: check the wiring by comparing
+    quant-sim against itself through the pallas and ref paths (bit-equal up
+    to float ulps)."""
+    p, _, bn, rg = fresh_state(4)
+    x, _ = synth_batch(5, batch=4)
+    ref_logits = model.eval_logits(p, bn, rg, x, quantize=True, use_pallas=False)
+    pal_logits = model.eval_logits(p, bn, rg, x, quantize=True, use_pallas=True)
+    np.testing.assert_allclose(
+        np.asarray(ref_logits), np.asarray(pal_logits), rtol=0, atol=1e-4
+    )
+
+
+def test_folded_training_matches_eval_semantics():
+    """After training steps, eval_float with EMA stats must be consistent
+    with the folded export: running the folded weights manually reproduces
+    eval_float's logits (fig. C.6 == eq. 14 folding)."""
+    p, m, bn, rg = fresh_state(6)
+    for i in range(5):
+        x, y = synth_batch(10 + i)
+        p, m, bn, rg, _ = model.train_step(p, m, bn, rg, x, y, jnp.float32(0.0))
+    x, _ = synth_batch(99, batch=4)
+    want = model.eval_logits(p, bn, rg, x, quantize=False)
+
+    folded = model.export_folded(p, bn)
+    h = x
+    for name, kind, stride, _cin, _cout in model.LAYERS:
+        w = folded[f"{name}/w"]
+        if kind == "conv":
+            w_hwio = jnp.transpose(w, (1, 2, 3, 0))  # OHWI -> HWIO
+        else:
+            w_hwio = jnp.transpose(w, (1, 2, 0, 3))  # 1HWC -> HW1C
+        h = model._conv(h, w_hwio, stride, kind == "dw") + folded[f"{name}/b"]
+        h = jnp.clip(h, 0.0, 6.0)
+    h = jnp.mean(h, axis=(1, 2))
+    got = h @ jnp.transpose(folded["fc/w"]) + folded["fc/b"]
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), rtol=0, atol=1e-4)
+
+
+def test_export_shapes_are_rust_layouts():
+    p, _, bn, _ = fresh_state(7)
+    folded = model.export_folded(p, bn)
+    assert folded["conv0/w"].shape == (8, 3, 3, 3)  # OHWI
+    assert folded["dw1/w"].shape == (1, 3, 3, 8)  # 1HWC
+    assert folded["pw2/w"].shape == (32, 1, 1, 16)
+    assert folded["fc/w"].shape == (model.NUM_CLASSES, model.FC_IN)
+    assert set(folded.keys()) == set(model.EXPORT_KEYS)
+
+
+def test_relu_variant_runs():
+    # Table 4.3's ReLU-vs-ReLU6 comparison: the activation ceiling is a
+    # traced scalar (6.0 for ReLU6, huge for ReLU).
+    p, m, bn, rg = fresh_state(8)
+    x, y = synth_batch(1)
+    out = model.train_step(
+        p, m, bn, rg, x, y, jnp.float32(1.0), act_ceiling=jnp.float32(model.RELU_CEIL)
+    )
+    assert np.isfinite(float(out[-1]))
+
+
+def test_bit_depth_variants_run():
+    # Tables 4.7/4.8: 4..8-bit weight/activation combinations must train;
+    # bit depths enter as traced qmax scalars.
+    p, m, bn, rg = fresh_state(9)
+    x, y = synth_batch(2)
+    for wb, ab in [(8, 8), (7, 7), (4, 8), (8, 4), (4, 4)]:
+        out = model.train_step(
+            p, m, bn, rg, x, y,
+            jnp.float32(1.0),
+            w_qmax=jnp.float32(2**wb - 1),
+            a_qmax=jnp.float32(2**ab - 1),
+        )
+        assert np.isfinite(float(out[-1])), (wb, ab)
+
+
+def test_float_baseline_via_traced_knobs():
+    # w_quant_on = act_quant_on = 0 turns the same step into float training.
+    p, m, bn, rg = fresh_state(10)
+    x, y = synth_batch(3)
+    p2, _, _, _, loss = model.train_step(
+        p, m, bn, rg, x, y, jnp.float32(0.0), jnp.float32(0.0)
+    )
+    assert np.isfinite(float(loss))
+    moved = any(float(jnp.max(jnp.abs(p2[k] - p[k]))) > 0 for k in p)
+    assert moved
+
+
+def test_depth_and_width_variants():
+    # Config-driven family (Table 4.1 depths, figure DM sweep).
+    for cfg in [
+        model.Config(depth_blocks=2),
+        model.Config(width_mult=0.5),
+        model.Config(width_mult=2.0, resolution=24),
+    ]:
+        p = model.init_params(0, cfg)
+        bn = model.init_bn_state(cfg)
+        rg = model.init_ranges(cfg)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(
+            rng.uniform(-1, 1, (2, cfg.resolution, cfg.resolution, cfg.channels)),
+            jnp.float32,
+        )
+        logits = model.eval_logits(p, bn, rg, x, quantize=True, config=cfg)
+        assert logits.shape == (2, cfg.num_classes)
+    assert model.Config(depth_blocks=2).conv_layer_count == model.DEFAULT.conv_layer_count + 2

@@ -1,0 +1,110 @@
+"""Properties of the quantization math shared between L1/L2 and the Rust
+engine (`compile.quant` mirrors `rust/src/quant`)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rmin=st.floats(-100.0, 100.0),
+    rmax=st.floats(-100.0, 100.0),
+    bits=st.integers(2, 8),
+    narrow=st.booleans(),
+)
+def test_zero_exactly_representable(rmin, rmax, bits, narrow):
+    """Section 2.1: the real value 0.0 must map to an integer code with no
+    quantization error — for any observed range."""
+    if rmax < rmin:
+        rmin, rmax = rmax, rmin
+    qmin, qmax = quant.quant_range(bits, narrow)
+    scale, zp = quant.nudged_params(jnp.float64(rmin), jnp.float64(rmax), qmin, qmax)
+    assert float(zp) == round(float(zp))  # integer zero-point
+    assert qmin <= float(zp) <= qmax
+    fq0 = quant.fake_quant_reference(jnp.float64(0.0), jnp.float64(rmin), jnp.float64(rmax), qmin, qmax)
+    assert float(fq0) == 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rmin=st.floats(-10.0, -0.1),
+    rmax=st.floats(0.1, 10.0),
+)
+def test_fake_quant_error_bounded(seed, rmin, rmax):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(rmin, rmax, (64,)), jnp.float64)
+    out = quant.fake_quant_reference(x, jnp.float64(rmin), jnp.float64(rmax), 0.0, 255.0)
+    scale = (max(rmax, 0.0) - min(rmin, 0.0)) / 255.0
+    # Interior points are within scale/2; the zero-nudge adds at most
+    # another scale/2 near the boundaries.
+    assert float(jnp.max(jnp.abs(out - x))) <= scale + 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(2, 8))
+def test_weight_fake_quant_narrow_range(seed, bits):
+    """Section 3.1/App. B: quantized weights must avoid the lowest code, so
+    the int8 view never takes -128."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1, (128,)), jnp.float64)
+    qmin, qmax = quant.quant_range(bits, narrow=True)
+    rmin, rmax = quant.weight_range(w)
+    codes = quant.quantize_reference(w, rmin, rmax, qmin, qmax)
+    assert float(jnp.min(codes)) >= 1.0
+    assert float(jnp.max(codes)) <= float(2**bits - 1)
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=st.floats(1e-6, 0.999999))
+def test_normalize_multiplier_eq6(m):
+    """Eq. 6 invariants: m0 in [0.5, 1) as Q0.31 with >= 30 bits of
+    relative accuracy, non-negative shift count."""
+    m0, right_shift = quant.normalize_multiplier(m)
+    assert (1 << 30) <= m0 < (1 << 31)
+    assert right_shift >= 0
+    reconstructed = m0 / 2**31 * 2**-right_shift
+    assert abs(reconstructed - m) / m < 1e-9
+
+
+def test_ema_matches_paper_semantics():
+    mn, mx = quant.ema_update(
+        jnp.float32(-1.0), jnp.float32(1.0), jnp.float32(-3.0), jnp.float32(3.0), 0.9
+    )
+    assert abs(float(mn) + 1.2) < 1e-6
+    assert abs(float(mx) - 1.2) < 1e-6
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=st.integers(-(2**31), 2**31 - 1), b=st.integers(-(2**31), 2**31 - 1))
+def test_srdhm_matches_int_reference(a, b):
+    """jnp srdhm == the integer reference == the Rust `fixedpoint::srdhm`."""
+    got = int(quant.srdhm(jnp.int32(a), jnp.int32(b)))
+    if a == -(2**31) and b == -(2**31):
+        want = 2**31 - 1
+    else:
+        ab = a * b
+        nudge = (1 << 30) if ab >= 0 else 1 - (1 << 30)
+        total = ab + nudge
+        want = total // (1 << 31) if total >= 0 else -((-total) // (1 << 31))
+    assert got == want, (a, b, got, want)
+
+
+@settings(max_examples=60, deadline=None)
+@given(x=st.integers(-(2**31), 2**31 - 1), e=st.integers(1, 20))
+def test_rounding_shift_matches_round_half_away(x, e):
+    got = int(quant.rounding_div_by_pot(jnp.int32(x), e))
+    exact = x / 2**e
+    frac = exact - int(exact)
+    if abs(frac) == 0.5:
+        want = int(exact) + (1 if exact > 0 else -1)
+    else:
+        want = round(exact)
+    assert got == want, (x, e, got, want)

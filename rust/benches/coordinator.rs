@@ -1,0 +1,66 @@
+//! Coordinator benchmark: serving throughput and latency under different
+//! batching policies — quantifies the dynamic batcher's contribution on
+//! top of the integer engine's per-image win (the L3 serving story).
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use iaoi::coordinator::{BatchPolicy, Coordinator, EngineKind};
+use iaoi::data::{ClassificationSet, Rng};
+use iaoi::graph::builders::papernet_random;
+use iaoi::nn::FusedActivation;
+use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::tensor::Tensor;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let float_model = papernet_random(16, FusedActivation::Relu6, 3);
+    let mut rng = Rng::seeded(9);
+    let calib: Vec<Tensor<f32>> = (0..3)
+        .map(|_| {
+            let mut d = vec![0f32; 2 * 16 * 16 * 3];
+            for v in d.iter_mut() {
+                *v = rng.range_f32(-1.0, 1.0);
+            }
+            Tensor::from_vec(&[2, 16, 16, 3], d)
+        })
+        .collect();
+    let (folded, int8_model) = quantize_graph(&float_model, &calib, QuantizeOptions::default());
+    let ds = ClassificationSet::new(16, 16, 11);
+    let requests = 1024usize;
+
+    println!("== coordinator throughput (1024 closed-loop requests, burst 32) ==");
+    for (label, engine) in [
+        ("int8", EngineKind::Quant(Arc::new(int8_model))),
+        ("float32", EngineKind::Float(Arc::new(folded))),
+    ] {
+        for max_batch in [1usize, 4, 8, 16] {
+            let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(1) };
+            let coord = Coordinator::start(engine.clone(), policy, 1);
+            let client = coord.client();
+            let start = Instant::now();
+            let mut done = 0usize;
+            while done < requests {
+                let burst: Vec<_> = (0..32.min(requests - done))
+                    .map(|i| {
+                        let (img, _) = ds.example(3, (done + i) as u64);
+                        client.submit(img).expect("submit")
+                    })
+                    .collect();
+                done += burst.len();
+                for (_, rx) in burst {
+                    rx.recv().expect("response");
+                }
+            }
+            let wall = start.elapsed().as_secs_f64();
+            let m = coord.shutdown();
+            let (p50, p95, _, _) = m.latency_summary_us();
+            println!(
+                "{label:<8} max_batch={max_batch:<3} {:>8.0} req/s   p50 {p50:>6}us  p95 {p95:>6}us  mean batch {:.2}",
+                requests as f64 / wall,
+                m.mean_batch_size()
+            );
+        }
+        println!();
+    }
+}

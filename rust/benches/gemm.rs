@@ -1,0 +1,50 @@
+//! GEMM micro-benchmarks: the paper's core claim is that the uint8 integer
+//! GEMM (eq. 9 + output pipeline) beats the float GEMM on the same shapes.
+//! Sweeps MobileNet-representative shapes across all three inner kernels
+//! plus the f32 baseline, and reports effective GMAC/s.
+//!
+//! Run: `cargo bench --bench gemm`
+
+use iaoi::bench_util::bench;
+use iaoi::data::Rng;
+use iaoi::gemm::{gemm_f32, output::OutputStage, Kernel, QGemm};
+use iaoi::quant::QuantizedMultiplier;
+
+fn main() {
+    // (M, K, N) conv-as-GEMM shapes: (Cout, KhKwCin, spatial positions).
+    let shapes = [
+        (32, 27, 1024),   // 3x3x3 stem at 32x32
+        (64, 288, 256),   // 3x3x32 mid layer
+        (128, 1152, 64),  // 3x3x128 deep layer
+        (256, 256, 196),  // 1x1 pointwise
+        (1024, 1024, 16), // late pointwise, small spatial
+    ];
+    println!("== quantized vs float GEMM (host, single thread) ==");
+    for (m, k, n) in shapes {
+        let mut rng = Rng::seeded((m * k + n) as u64);
+        let lhs_q: Vec<u8> = (0..m * k).map(|_| 1 + rng.below(255) as u8).collect();
+        let rhs_q: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        let lhs_f: Vec<f32> = lhs_q.iter().map(|&v| f32::from(v) / 255.0 - 0.5).collect();
+        let rhs_f: Vec<f32> = rhs_q.iter().map(|&v| f32::from(v) / 255.0 - 0.5).collect();
+        let g = QGemm::new(m, k, n, 128, 120);
+        let stage = OutputStage::bare(QuantizedMultiplier::from_f64(0.002), 7);
+        let mut out_q = vec![0u8; m * n];
+        let mut out_f = vec![0f32; m * n];
+        let macs = (m * k * n) as f64;
+
+        let report = |label: &str, med_ms: f64| {
+            println!("    -> {label}: {:.2} GMAC/s", macs / (med_ms / 1e3) / 1e9);
+        };
+        let s = bench(&format!("f32 gemm {m}x{k}x{n}"), 5, || {
+            gemm_f32(m, k, n, &lhs_f, &rhs_f, &mut out_f);
+        });
+        report("f32", s.median_ms());
+        for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+            let s = bench(&format!("u8 gemm {kern:?} {m}x{k}x{n}"), 5, || {
+                g.run(kern, &lhs_q, &rhs_q, &stage, &mut out_q);
+            });
+            report(&format!("{kern:?}"), s.median_ms());
+        }
+        println!();
+    }
+}

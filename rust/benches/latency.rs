@@ -1,0 +1,54 @@
+//! End-to-end model latency (figs. 1.1c / 4.1 / 4.2 measured half):
+//! MobileNet at the paper's DM sweep, float engine vs integer engine,
+//! single image, single thread — the host-measured analogue of the
+//! latency axis in the latency-vs-accuracy figures (the accuracy axis and
+//! per-core estimates come from `iaoi bench --fig <id>`).
+//!
+//! Run: `cargo bench --bench latency`
+
+use iaoi::bench_util::bench;
+use iaoi::data::Rng;
+use iaoi::graph::builders::mobilenet;
+use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::sim::{ArmCoreModel, Dtype};
+use iaoi::tensor::Tensor;
+
+fn main() {
+    // Scaled-down sweep: paper uses DM x {96..224}; the host float engine
+    // is a reference implementation, so resolutions are kept moderate.
+    let sweep = [(0.25f64, 32usize), (0.25, 64), (0.5, 32), (0.5, 64), (1.0, 32)];
+    println!("== MobileNet end-to-end latency: float vs integer-only engine ==");
+    for (dm, res) in sweep {
+        let g = mobilenet(dm, 16, false, 1);
+        let folded = g.fold_batch_norms();
+        let mut rng = Rng::seeded(5);
+        let calib: Vec<Tensor<f32>> = (0..2)
+            .map(|_| {
+                let mut d = vec![0f32; res * res * 3];
+                for v in d.iter_mut() {
+                    *v = rng.range_f32(-1.0, 1.0);
+                }
+                Tensor::from_vec(&[1, res, res, 3], d)
+            })
+            .collect();
+        let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
+        let x = &calib[0];
+
+        let sf = bench(&format!("mobilenet dm={dm} res={res} f32"), 3, || {
+            let _ = folded.run(x);
+        });
+        let sq = bench(&format!("mobilenet dm={dm} res={res} int8"), 3, || {
+            let _ = q.run(x);
+        });
+        let macs = folded.mac_count(&[1, res, res, 3]);
+        println!(
+            "    -> {:.1}M MACs | int8 speedup {:.2}x | est. S835-big: f32 {:.1}ms int8 {:.1}ms | est. S835-LITTLE: f32 {:.1}ms int8 {:.1}ms\n",
+            macs as f64 / 1e6,
+            sf.median_ms() / sq.median_ms(),
+            ArmCoreModel::s835_big().latency_ms(&folded, &[1, res, res, 3], Dtype::F32),
+            ArmCoreModel::s835_big().latency_ms(&folded, &[1, res, res, 3], Dtype::Int8),
+            ArmCoreModel::s835_little().latency_ms(&folded, &[1, res, res, 3], Dtype::F32),
+            ArmCoreModel::s835_little().latency_ms(&folded, &[1, res, res, 3], Dtype::Int8),
+        );
+    }
+}

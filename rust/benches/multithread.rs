@@ -1,0 +1,37 @@
+//! Multi-threaded GEMM benchmark (Table 4.6's measured half): the
+//! column-strip parallel quantized GEMM at 1/2/4 threads on detector-sized
+//! shapes. This testbed exposes a single core, so threads > 1 measure the
+//! coordination overhead (the Snapdragon multi-core *estimates* come from
+//! `iaoi bench --table 4.6`'s fitted core model).
+//!
+//! Run: `cargo bench --bench multithread`
+
+use iaoi::bench_util::bench;
+use iaoi::data::Rng;
+use iaoi::gemm::{output::OutputStage, parallel::run_parallel, Kernel, QGemm};
+use iaoi::quant::QuantizedMultiplier;
+
+fn main() {
+    println!("== parallel quantized GEMM scaling (host cores: {}) ==",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    for (m, k, n) in [(72, 648, 1024), (40, 360, 1024), (24, 216, 1024)] {
+        let mut rng = Rng::seeded(7);
+        let lhs: Vec<u8> = (0..m * k).map(|_| 1 + rng.below(255) as u8).collect();
+        let rhs: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        let g = QGemm::new(m, k, n, 128, 111);
+        let stage = OutputStage::bare(QuantizedMultiplier::from_f64(0.003), 10);
+        let mut out = vec![0u8; m * n];
+        let mut base_ms = 0.0;
+        for threads in [1usize, 2, 4] {
+            let s = bench(&format!("qgemm {m}x{k}x{n} threads={threads}"), 5, || {
+                run_parallel(&g, Kernel::Int8Pairwise, &lhs, &rhs, &stage, &mut out, threads);
+            });
+            if threads == 1 {
+                base_ms = s.median_ms();
+            } else {
+                println!("    -> scaling vs 1 thread: {:.2}x", base_ms / s.median_ms());
+            }
+        }
+        println!();
+    }
+}

@@ -1,0 +1,76 @@
+//! Minimal benchmarking harness for the `cargo bench` targets (the offline
+//! build has no criterion). Reports min/median/p95/mean over timed
+//! iterations after warmup, with enough repetitions for stable medians on
+//! this single-core testbed.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub min_us: f64,
+    pub median_us: f64,
+    pub p95_us: f64,
+    pub mean_us: f64,
+}
+
+impl Sample {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  min {:>10.1}us  median {:>10.1}us  p95 {:>10.1}us  mean {:>10.1}us",
+            self.name, self.iters, self.min_us, self.median_us, self.p95_us, self.mean_us
+        )
+    }
+
+    /// Median milliseconds (for ratio reporting).
+    pub fn median_ms(&self) -> f64 {
+        self.median_us / 1e3
+    }
+}
+
+/// Time `f` adaptively: at least `min_iters` iterations and at least
+/// ~200 ms of total measurement, after 2 warmup calls.
+pub fn bench(name: &str, min_iters: usize, mut f: impl FnMut()) -> Sample {
+    f();
+    f();
+    let mut times_us: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while times_us.len() < min_iters || start.elapsed().as_secs_f64() < 0.2 {
+        let t = Instant::now();
+        f();
+        times_us.push(t.elapsed().as_secs_f64() * 1e6);
+        if times_us.len() > 100_000 {
+            break;
+        }
+    }
+    let mut sorted = times_us.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |p: f64| sorted[((sorted.len() - 1) as f64 * p) as usize];
+    let sample = Sample {
+        name: name.to_string(),
+        iters: sorted.len(),
+        min_us: sorted[0],
+        median_us: pick(0.5),
+        p95_us: pick(0.95),
+        mean_us: times_us.iter().sum::<f64>() / times_us.len() as f64,
+    };
+    println!("{}", sample.row());
+    sample
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_ordered_stats() {
+        let s = bench("noop-spin", 50, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 50);
+        assert!(s.min_us <= s.median_us);
+        assert!(s.median_us <= s.p95_us);
+    }
+}

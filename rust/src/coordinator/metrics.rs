@@ -1,0 +1,149 @@
+//! Serving metrics: latency distribution, batch-size distribution and
+//! throughput, collected by the coordinator workers.
+
+use std::time::Duration;
+
+/// Aggregated serving statistics.
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    pub engine: &'static str,
+    pub completed: u64,
+    pub batches: u64,
+    /// Sum of batch sizes (== completed; kept for averaging convenience).
+    pub batched_requests: u64,
+    /// Request latencies in microseconds (bounded reservoir).
+    latencies_us: Vec<u64>,
+    /// Engine compute time per batch, microseconds.
+    compute_us: Vec<u64>,
+    /// Batch size histogram indexed by size (0 unused).
+    pub batch_sizes: Vec<u64>,
+}
+
+const RESERVOIR: usize = 100_000;
+
+impl Metrics {
+    pub fn new(engine: &'static str) -> Self {
+        Self {
+            engine,
+            completed: 0,
+            batches: 0,
+            batched_requests: 0,
+            latencies_us: Vec::new(),
+            compute_us: Vec::new(),
+            batch_sizes: vec![0; 64],
+        }
+    }
+
+    pub fn record_latency(&mut self, latency: Duration) {
+        self.completed += 1;
+        if self.latencies_us.len() < RESERVOIR {
+            self.latencies_us.push(latency.as_micros() as u64);
+        }
+    }
+
+    pub fn record_batch(&mut self, size: usize, compute: Duration) {
+        self.batches += 1;
+        self.batched_requests += size as u64;
+        if size < self.batch_sizes.len() {
+            self.batch_sizes[size] += 1;
+        }
+        if self.compute_us.len() < RESERVOIR {
+            self.compute_us.push(compute.as_micros() as u64);
+        }
+    }
+
+    fn percentile(sorted: &[u64], p: f64) -> u64 {
+        if sorted.is_empty() {
+            return 0;
+        }
+        let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+        sorted[idx]
+    }
+
+    /// (p50, p95, p99, mean) request latency in microseconds.
+    pub fn latency_summary_us(&self) -> (u64, u64, u64, u64) {
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let mean = if v.is_empty() { 0 } else { v.iter().sum::<u64>() / v.len() as u64 };
+        (
+            Self::percentile(&v, 0.50),
+            Self::percentile(&v, 0.95),
+            Self::percentile(&v, 0.99),
+            mean,
+        )
+    }
+
+    /// Mean engine compute time per batch, microseconds.
+    pub fn mean_compute_us(&self) -> u64 {
+        if self.compute_us.is_empty() {
+            0
+        } else {
+            self.compute_us.iter().sum::<u64>() / self.compute_us.len() as u64
+        }
+    }
+
+    /// Mean realized batch size.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let (p50, p95, p99, mean) = self.latency_summary_us();
+        format!(
+            "[{}] {} reqs in {} batches (mean size {:.2}) | latency us p50={} p95={} p99={} mean={} | compute/batch={}us",
+            self.engine,
+            self.completed,
+            self.batches,
+            self.mean_batch_size(),
+            p50,
+            p95,
+            p99,
+            mean,
+            self.mean_compute_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut m = Metrics::new("test");
+        for us in [100u64, 200, 300, 400, 500, 600, 700, 800, 900, 1000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        let (p50, p95, p99, mean) = m.latency_summary_us();
+        assert!((500..=600).contains(&p50), "{p50}");
+        assert!(p95 >= 900, "{p95}");
+        assert!(p99 >= 900, "{p99}");
+        assert_eq!(mean, 550);
+        assert_eq!(m.completed, 10);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::new("test");
+        m.record_batch(4, Duration::from_micros(100));
+        m.record_batch(2, Duration::from_micros(50));
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.mean_batch_size(), 3.0);
+        assert_eq!(m.batch_sizes[4], 1);
+        assert_eq!(m.batch_sizes[2], 1);
+        assert_eq!(m.mean_compute_us(), 75);
+    }
+
+    #[test]
+    fn empty_metrics_do_not_panic() {
+        let m = Metrics::new("test");
+        assert_eq!(m.latency_summary_us(), (0, 0, 0, 0));
+        assert_eq!(m.mean_batch_size(), 0.0);
+        assert!(!m.summary().is_empty());
+    }
+}

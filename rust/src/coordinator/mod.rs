@@ -1,0 +1,335 @@
+//! Serving coordinator (the L3 system shape for an inference paper):
+//! a request router feeding a dynamic batcher in front of engine workers
+//! that run either the integer-only or the float graph.
+//!
+//! Python never appears here: the quantized graph is pure Rust
+//! ([`crate::graph::QGraph`]), so the request hot path is
+//! submit → batch → uint8 engine → reply.
+//!
+//! Architecture (std::thread + mpsc; this offline build has no tokio):
+//!
+//! ```text
+//! clients ──▶ router (mpsc) ──▶ batcher thread ──▶ worker threads ──▶ reply
+//!                               max_batch / max_delay        │
+//!                               policy (§ vLLM-style)        └─▶ metrics
+//! ```
+//!
+//! Invariants (property-tested in `tests/coordinator.rs`): every submitted
+//! request completes exactly once; batch sizes lie in `[1, max_batch]`;
+//! requests within a batch preserve submission order; shutdown drains the
+//! queue.
+
+pub mod metrics;
+
+use crate::graph::{FloatGraph, QGraph};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use metrics::Metrics;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which engine the workers run.
+#[derive(Clone)]
+pub enum EngineKind {
+    Float(Arc<FloatGraph>),
+    Quant(Arc<QGraph>),
+}
+
+impl EngineKind {
+    /// Run a stacked NHWC batch, returning per-example output rows.
+    fn run_batch(&self, batch: &Tensor<f32>) -> Vec<Vec<f32>> {
+        let out = match self {
+            EngineKind::Float(g) => g.run(batch),
+            EngineKind::Quant(g) => g.run(batch),
+        };
+        let n = batch.dim(0);
+        let per = out.len() / n;
+        (0..n).map(|i| out.data()[i * per..(i + 1) * per].to_vec()).collect()
+    }
+
+    /// Human label for logs/metrics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Float(_) => "float32",
+            EngineKind::Quant(_) => "int8",
+        }
+    }
+}
+
+/// One inference request.
+struct Request {
+    id: u64,
+    image: Tensor<f32>,
+    submitted: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+/// A completed inference.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<f32>,
+    /// Queueing + batching + compute latency, end to end.
+    pub latency: Duration,
+    /// Size of the batch this request rode in (observability).
+    pub batch_size: usize,
+}
+
+/// Dynamic batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum requests fused into one engine call.
+    pub max_batch: usize,
+    /// Maximum time the head-of-line request may wait for co-riders.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// Handle for submitting requests; cloneable across client threads. The
+/// sender is revocable: [`Coordinator::shutdown`] nulls it out so live
+/// clones turn into polite errors instead of keeping the batcher alive.
+#[derive(Clone)]
+pub struct Client {
+    tx: Arc<Mutex<Option<mpsc::Sender<Request>>>>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Client {
+    /// Submit one image; returns a receiver for the response.
+    pub fn submit(&self, image: Tensor<f32>) -> Result<(u64, mpsc::Receiver<Response>)> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let guard = self.tx.lock().expect("client sender poisoned");
+        let tx = guard.as_ref().ok_or_else(|| anyhow!("coordinator is shut down"))?;
+        tx.send(Request { id, image, submitted: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow!("coordinator is shut down"))?;
+        Ok((id, reply_rx))
+    }
+
+    /// Submit and wait (convenience for closed-loop clients).
+    pub fn infer(&self, image: Tensor<f32>) -> Result<Response> {
+        let (_, rx) = self.submit(image)?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))
+    }
+}
+
+/// The running coordinator: batcher + worker threads.
+pub struct Coordinator {
+    client: Client,
+    metrics: Arc<Mutex<Metrics>>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the coordinator with `workers` engine threads.
+    pub fn start(engine: EngineKind, policy: BatchPolicy, workers: usize) -> Self {
+        assert!(workers >= 1 && policy.max_batch >= 1);
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let metrics = Arc::new(Mutex::new(Metrics::new(engine.label())));
+
+        // Batcher: pull the head request, then co-batch whatever arrives
+        // within max_delay, up to max_batch.
+        let batcher = std::thread::spawn(move || {
+            while let Ok(head) = req_rx.recv() {
+                let deadline = Instant::now() + policy.max_delay;
+                let mut batch = vec![head];
+                while batch.len() < policy.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match req_rx.recv_timeout(deadline - now) {
+                        Ok(r) => batch.push(r),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            let _ = batch_tx.send(batch);
+                            return;
+                        }
+                    }
+                }
+                if batch_tx.send(batch).is_err() {
+                    return;
+                }
+            }
+        });
+
+        // Workers: execute batches, reply per request, record metrics.
+        let mut worker_handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let engine = engine.clone();
+            let batch_rx = Arc::clone(&batch_rx);
+            let metrics = Arc::clone(&metrics);
+            worker_handles.push(std::thread::spawn(move || loop {
+                let batch = {
+                    let guard = batch_rx.lock().expect("batch queue poisoned");
+                    guard.recv()
+                };
+                let Ok(batch) = batch else { return };
+                let size = batch.len();
+                // Stack images into one NHWC tensor.
+                let mut shape = batch[0].image.shape().to_vec();
+                shape[0] = size;
+                let per = batch[0].image.len();
+                let mut stacked = vec![0f32; per * size];
+                for (i, r) in batch.iter().enumerate() {
+                    stacked[i * per..(i + 1) * per].copy_from_slice(r.image.data());
+                }
+                let compute_start = Instant::now();
+                let rows = engine.run_batch(&Tensor::from_vec(&shape, stacked));
+                let compute = compute_start.elapsed();
+                let now = Instant::now();
+                {
+                    let mut m = metrics.lock().expect("metrics poisoned");
+                    m.record_batch(size, compute);
+                    for r in &batch {
+                        m.record_latency(now - r.submitted);
+                    }
+                }
+                for (r, output) in batch.into_iter().zip(rows) {
+                    let latency = now - r.submitted;
+                    // Receiver may have gone away; dropping is fine.
+                    let _ = r.reply.send(Response { id: r.id, output, latency, batch_size: size });
+                }
+            }));
+        }
+
+        Self {
+            client: Client {
+                tx: Arc::new(Mutex::new(Some(req_tx))),
+                next_id: Arc::new(AtomicU64::new(0)),
+            },
+            metrics,
+            batcher: Some(batcher),
+            workers: worker_handles,
+        }
+    }
+
+    /// A cloneable submission handle.
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    /// Snapshot of the metrics so far.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().expect("metrics poisoned").clone()
+    }
+
+    /// Drain and stop: all already-submitted requests complete first.
+    pub fn shutdown(mut self) -> Metrics {
+        // Revoke the sender (this also disarms every Client clone); the
+        // batcher sees the disconnect and drains, whose sender-drop ends
+        // the workers.
+        self.client.tx.lock().expect("client sender poisoned").take();
+        drop(self.client);
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.lock().expect("metrics poisoned").clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builders;
+    use crate::nn::FusedActivation;
+    use crate::quantize::{quantize_graph, QuantizeOptions};
+
+    fn tiny_quant_engine() -> EngineKind {
+        let g = builders::papernet_random(4, FusedActivation::Relu6, 5);
+        let mut rng = crate::data::Rng::seeded(5);
+        let batches: Vec<Tensor<f32>> = (0..2)
+            .map(|_| {
+                let mut d = vec![0f32; 2 * 16 * 16 * 3];
+                for v in d.iter_mut() {
+                    *v = rng.range_f32(-1.0, 1.0);
+                }
+                Tensor::from_vec(&[2, 16, 16, 3], d)
+            })
+            .collect();
+        let (_, q) = quantize_graph(&g, &batches, QuantizeOptions::default());
+        EngineKind::Quant(Arc::new(q))
+    }
+
+    fn image(seed: u64) -> Tensor<f32> {
+        let mut rng = crate::data::Rng::seeded(seed);
+        let mut d = vec![0f32; 16 * 16 * 3];
+        for v in d.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        Tensor::from_vec(&[1, 16, 16, 3], d)
+    }
+
+    #[test]
+    fn all_requests_complete_exactly_once() {
+        let coord = Coordinator::start(tiny_quant_engine(), BatchPolicy::default(), 2);
+        let client = coord.client();
+        let receivers: Vec<_> = (0..20).map(|i| client.submit(image(i)).unwrap()).collect();
+        let mut ids: Vec<u64> = receivers
+            .into_iter()
+            .map(|(id, rx)| {
+                let resp = rx.recv().expect("response");
+                assert_eq!(resp.id, id);
+                assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+                assert_eq!(resp.output.len(), 4);
+                id
+            })
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 20, "every id exactly once");
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 20);
+    }
+
+    #[test]
+    fn batching_fuses_bursts() {
+        let policy = BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(50) };
+        let coord = Coordinator::start(tiny_quant_engine(), policy, 1);
+        let client = coord.client();
+        let receivers: Vec<_> = (0..8).map(|i| client.submit(image(i)).unwrap()).collect();
+        let sizes: Vec<usize> =
+            receivers.into_iter().map(|(_, rx)| rx.recv().unwrap().batch_size).collect();
+        // A synchronous burst of 8 with a generous window must produce at
+        // least one multi-request batch.
+        assert!(sizes.iter().any(|&s| s > 1), "sizes {sizes:?}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_inflight_requests() {
+        let coord = Coordinator::start(tiny_quant_engine(), BatchPolicy::default(), 1);
+        let client = coord.client();
+        let pending: Vec<_> = (0..5).map(|i| client.submit(image(i)).unwrap()).collect();
+        let metrics = coord.shutdown();
+        assert_eq!(metrics.completed, 5);
+        for (_, rx) in pending {
+            assert!(rx.recv().is_ok(), "request must complete before shutdown");
+        }
+    }
+
+    #[test]
+    fn float_engine_works_too() {
+        let g = builders::papernet_random(4, FusedActivation::Relu6, 6);
+        let coord = Coordinator::start(
+            EngineKind::Float(Arc::new(g)),
+            BatchPolicy::default(),
+            1,
+        );
+        let resp = coord.client().infer(image(1)).unwrap();
+        assert_eq!(resp.output.len(), 4);
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,195 @@
+//! Deterministic synthetic datasets substituting for the paper's ImageNet /
+//! COCO / Flickr-face workloads (DESIGN.md §Substitutions), plus the seeded
+//! PRNG everything in the repo uses (the offline build has no `rand`).
+//!
+//! Three tasks mirror the paper's evaluation settings:
+//! * [`ClassificationSet`] — "SynthShapes": multi-class images of rendered
+//!   geometric shapes with texture and noise (ImageNet stand-in, §4.1/4.2.1).
+//! * [`DetectionSet`] — small bright objects on clutter with SSD-style grid
+//!   targets (COCO / face-detection stand-in, §4.2.2/4.2.3).
+//! * [`AttributeSet`] — images with binary attributes plus a scalar "age"
+//!   target (face-attributes stand-in, §4.2.4, Tables 4.7/4.8).
+//!
+//! Everything is procedurally generated from a seed: the same (seed, index)
+//! always yields the same example, so train/eval splits are exact and the
+//! Python (L2) and Rust (L3) sides can generate identical batches.
+
+pub mod synth;
+
+pub use synth::{AttributeSet, ClassificationSet, DetectionSet};
+
+/// PCG32 (PCG-XSH-RR 64/32): small, fast, and good enough for data
+/// synthesis and weight init. Deterministic across platforms.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+impl Rng {
+    /// Seed with an arbitrary (seed, stream) pair.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience single-seed constructor.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Next raw 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        (u64::from(self.next_u32()) << 32) | u64::from(self.next_u32())
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be positive.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((u64::from(self.next_u32()) * n as u64) >> 32) as usize
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 / (1u32 << 24) as f32
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f32().max(1e-7);
+        let u2 = self.f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn bool(&mut self, p: f32) -> bool {
+        self.f32() < p
+    }
+
+    /// Fill a slice with N(0, stddev²) values (weight init).
+    pub fn fill_normal(&mut self, out: &mut [f32], stddev: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal() * stddev;
+        }
+    }
+}
+
+/// A minimal seeded property-test driver (the offline build has no
+/// proptest). Runs `f` against `cases` generated inputs; on failure the
+/// panic message carries the case seed so the exact input can be replayed
+/// with [`replay`].
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    f: impl Fn(&T) -> bool,
+) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut rng = Rng::seeded(seed);
+        let input = gen(&mut rng);
+        assert!(
+            f(&input),
+            "property `{name}` failed on case {case} (replay seed {seed:#x}): {input:?}"
+        );
+    }
+}
+
+/// Re-generate the failing input of a [`check`] run from its seed.
+pub fn replay<T>(seed: u64, gen: impl Fn(&mut Rng) -> T) -> T {
+    let mut rng = Rng::seeded(seed);
+    gen(&mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn rng_streams_differ() {
+        let mut a = Rng::new(42, 1);
+        let mut b = Rng::new(42, 2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Rng::seeded(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all 10 buckets should be hit in 1000 draws");
+    }
+
+    #[test]
+    fn f32_in_unit_interval_with_sane_mean() {
+        let mut rng = Rng::seeded(3);
+        let mut sum = 0f64;
+        for _ in 0..10_000 {
+            let v = rng.f32();
+            assert!((0.0..1.0).contains(&v));
+            sum += f64::from(v);
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut rng = Rng::seeded(9);
+        let n = 20_000;
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().map(|&x| f64::from(x)).sum::<f64>() / n as f64;
+        let var = xs.iter().map(|&x| (f64::from(x) - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn property_harness_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always_false", 3, |r| r.below(100), |_| false);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+        let v = replay(0x5EED_0000, |r| r.below(100));
+        let v2 = replay(0x5EED_0000, |r| r.below(100));
+        assert_eq!(v, v2);
+    }
+}

@@ -1,0 +1,459 @@
+//! Procedural image tasks. See the module docs in [`super`] and
+//! DESIGN.md §Substitutions for why each stands in for the paper's dataset.
+
+use super::Rng;
+use crate::tensor::Tensor;
+
+/// Shape families composing the classification classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ShapeKind {
+    Disk,
+    Square,
+    Cross,
+    Stripes,
+}
+
+const KINDS: [ShapeKind; 4] = [ShapeKind::Disk, ShapeKind::Square, ShapeKind::Cross, ShapeKind::Stripes];
+
+/// Render one shape into `img` (NHWC with n=0, c channels) centred at
+/// (cy, cx) with half-extent `r`, intensity `amp`, rotation `theta`.
+#[allow(clippy::too_many_arguments)]
+fn render_shape(
+    img: &mut Tensor<f32>,
+    kind: ShapeKind,
+    cy: f32,
+    cx: f32,
+    r: f32,
+    amp: f32,
+    theta: f32,
+    channel_gains: &[f32],
+) {
+    let (h, w, c) = (img.dim(1), img.dim(2), img.dim(3));
+    let (sin_t, cos_t) = theta.sin_cos();
+    for y in 0..h {
+        for x in 0..w {
+            let dy = y as f32 - cy;
+            let dx = x as f32 - cx;
+            // Rotate into the shape frame.
+            let u = cos_t * dx + sin_t * dy;
+            let v = -sin_t * dx + cos_t * dy;
+            let inside = match kind {
+                ShapeKind::Disk => (u * u + v * v).sqrt() <= r,
+                ShapeKind::Square => u.abs() <= r && v.abs() <= r,
+                ShapeKind::Cross => {
+                    (u.abs() <= r * 0.35 && v.abs() <= r) || (v.abs() <= r * 0.35 && u.abs() <= r)
+                }
+                ShapeKind::Stripes => {
+                    (u * u + v * v).sqrt() <= r && ((v / r * 3.0).floor() as i32).rem_euclid(2) == 0
+                }
+            };
+            if inside {
+                for ch in 0..c.min(channel_gains.len()) {
+                    let cur = img.at4(0, y, x, ch);
+                    img.set4(0, y, x, ch, cur + amp * channel_gains[ch]);
+                }
+            }
+        }
+    }
+}
+
+fn add_noise(img: &mut Tensor<f32>, rng: &mut Rng, sigma: f32) {
+    for v in img.data_mut() {
+        *v += rng.normal() * sigma;
+    }
+}
+
+fn clamp_unit(img: &mut Tensor<f32>) {
+    for v in img.data_mut() {
+        *v = v.clamp(-1.0, 1.0);
+    }
+}
+
+/// "SynthShapes" classification (ImageNet stand-in).
+///
+/// A class is a (shape kind, size bucket, orientation bucket) triple —
+/// `4 × 2 × 2 = 16` classes by default. Position, exact size/angle within
+/// the bucket, per-channel colour, background gradient and pixel noise are
+/// all randomized, so the task needs real feature learning but is solvable
+/// by a small CNN.
+#[derive(Clone, Debug)]
+pub struct ClassificationSet {
+    pub resolution: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub seed: u64,
+}
+
+impl ClassificationSet {
+    pub fn new(resolution: usize, num_classes: usize, seed: u64) -> Self {
+        assert!(num_classes <= 16, "at most 16 composable classes");
+        assert!(resolution >= 8);
+        Self { resolution, channels: 3, num_classes, seed }
+    }
+
+    /// Deterministically generate example `index` of split `split`
+    /// (0 = train, 1 = eval). Image values are in `[-1, 1]` (the paper's
+    /// preprocessing for detection/attributes normalizes to `[-1, 1]`).
+    pub fn example(&self, split: u64, index: u64) -> (Tensor<f32>, usize) {
+        let mut rng = Rng::new(self.seed ^ (split.wrapping_mul(0x9E37_79B9)), index);
+        let label = rng.below(self.num_classes);
+        let img = self.render_class(label, &mut rng);
+        (img, label)
+    }
+
+    fn render_class(&self, label: usize, rng: &mut Rng) -> Tensor<f32> {
+        let res = self.resolution;
+        let mut img = Tensor::zeros(&[1, res, res, self.channels]);
+        // Background: soft gradient + DC offset.
+        let gx = rng.range_f32(-0.3, 0.3) / res as f32;
+        let gy = rng.range_f32(-0.3, 0.3) / res as f32;
+        let dc = rng.range_f32(-0.2, 0.2);
+        for y in 0..res {
+            for x in 0..res {
+                for ch in 0..self.channels {
+                    img.set4(0, y, x, ch, dc + gx * x as f32 + gy * y as f32);
+                }
+            }
+        }
+        // Class decomposition: kind (low 2 bits), size bucket, angle bucket.
+        let kind = KINDS[label % 4];
+        let big = (label / 4) % 2 == 1;
+        let tilted = (label / 8) % 2 == 1;
+        let r_frac = if big { rng.range_f32(0.28, 0.38) } else { rng.range_f32(0.12, 0.2) };
+        let r = r_frac * res as f32;
+        let theta = if tilted {
+            std::f32::consts::FRAC_PI_4 + rng.range_f32(-0.15, 0.15)
+        } else {
+            rng.range_f32(-0.15, 0.15)
+        };
+        let cy = rng.range_f32(r + 1.0, res as f32 - r - 1.0);
+        let cx = rng.range_f32(r + 1.0, res as f32 - r - 1.0);
+        let gains: Vec<f32> = (0..self.channels).map(|_| rng.range_f32(0.5, 1.0)).collect();
+        let amp = rng.range_f32(0.6, 0.9) * if rng.bool(0.5) { 1.0 } else { -1.0 };
+        render_shape(&mut img, kind, cy, cx, r, amp, theta, &gains);
+        add_noise(&mut img, rng, 0.08);
+        clamp_unit(&mut img);
+        img
+    }
+
+    /// A batch as one NHWC tensor plus labels.
+    pub fn batch(&self, split: u64, start: u64, batch: usize) -> (Tensor<f32>, Vec<usize>) {
+        let res = self.resolution;
+        let mut out = Tensor::zeros(&[batch, res, res, self.channels]);
+        let mut labels = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let (img, label) = self.example(split, start + b as u64);
+            let stride = res * res * self.channels;
+            out.data_mut()[b * stride..(b + 1) * stride].copy_from_slice(img.data());
+            labels.push(label);
+        }
+        (out, labels)
+    }
+}
+
+/// A ground-truth box in pixel coordinates (y0, x0, y1, x1) with a class.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GtBox {
+    pub y0: f32,
+    pub x0: f32,
+    pub y1: f32,
+    pub x1: f32,
+    pub class: usize,
+}
+
+impl GtBox {
+    /// Intersection-over-union with another box.
+    pub fn iou(&self, o: &GtBox) -> f32 {
+        let iy0 = self.y0.max(o.y0);
+        let ix0 = self.x0.max(o.x0);
+        let iy1 = self.y1.min(o.y1);
+        let ix1 = self.x1.min(o.x1);
+        let inter = (iy1 - iy0).max(0.0) * (ix1 - ix0).max(0.0);
+        let a = (self.y1 - self.y0) * (self.x1 - self.x0);
+        let b = (o.y1 - o.y0) * (o.x1 - o.x0);
+        if inter <= 0.0 {
+            0.0
+        } else {
+            inter / (a + b - inter)
+        }
+    }
+}
+
+/// Single-shot detection set (COCO / face-detection stand-in): 1–3 shapes
+/// ("objects") of distinct classes on a cluttered background. Targets are an
+/// SSD-style `G×G` grid: per cell (objectness, class, dy, dx, log dh, log dw)
+/// with the object assigned to the cell containing its centre.
+#[derive(Clone, Debug)]
+pub struct DetectionSet {
+    pub resolution: usize,
+    pub grid: usize,
+    pub num_classes: usize,
+    pub seed: u64,
+}
+
+impl DetectionSet {
+    pub fn new(resolution: usize, grid: usize, num_classes: usize, seed: u64) -> Self {
+        assert!(resolution % grid == 0, "grid must divide resolution");
+        assert!(num_classes <= 4);
+        Self { resolution, grid, num_classes, seed }
+    }
+
+    /// Generate example `index`: image in `[-1,1]` plus ground-truth boxes.
+    pub fn example(&self, split: u64, index: u64) -> (Tensor<f32>, Vec<GtBox>) {
+        let mut rng = Rng::new(self.seed ^ (0xDE7E_C7 + split * 0x9E37_79B9), index);
+        let res = self.resolution;
+        let mut img = Tensor::zeros(&[1, res, res, 3]);
+        // Clutter: low-amplitude random blobs.
+        for _ in 0..4 {
+            let r = rng.range_f32(2.0, res as f32 * 0.15);
+            let cy = rng.range_f32(0.0, res as f32);
+            let cx = rng.range_f32(0.0, res as f32);
+            let gains = [rng.range_f32(0.2, 0.5); 3];
+            render_shape(&mut img, ShapeKind::Disk, cy, cx, r, rng.range_f32(-0.25, 0.25), 0.0, &gains);
+        }
+        let count = 1 + rng.below(3);
+        let mut boxes: Vec<GtBox> = Vec::new();
+        for _ in 0..count {
+            let class = rng.below(self.num_classes);
+            let r = rng.range_f32(res as f32 * 0.08, res as f32 * 0.18);
+            let cy = rng.range_f32(r + 1.0, res as f32 - r - 1.0);
+            let cx = rng.range_f32(r + 1.0, res as f32 - r - 1.0);
+            let candidate = GtBox { y0: cy - r, x0: cx - r, y1: cy + r, x1: cx + r, class };
+            // Avoid heavy overlap so the grid assignment stays unambiguous.
+            if boxes.iter().any(|b| b.iou(&candidate) > 0.2) {
+                continue;
+            }
+            let gains = [1.0, 0.9, 0.8];
+            render_shape(&mut img, KINDS[class % 4], cy, cx, r, 0.9, 0.0, &gains);
+            boxes.push(candidate);
+        }
+        add_noise(&mut img, &mut rng, 0.06);
+        clamp_unit(&mut img);
+        (img, boxes)
+    }
+
+    /// Encode ground truth boxes into the SSD grid target tensor
+    /// `[1, G, G, 5 + num_classes]`: (objectness, dy, dx, log h, log w,
+    /// one-hot class).
+    pub fn encode_targets(&self, boxes: &[GtBox]) -> Tensor<f32> {
+        let g = self.grid;
+        let cell = (self.resolution / self.grid) as f32;
+        let mut t = Tensor::zeros(&[1, g, g, 5 + self.num_classes]);
+        for b in boxes {
+            let cy = (b.y0 + b.y1) / 2.0;
+            let cx = (b.x0 + b.x1) / 2.0;
+            let gy = ((cy / cell) as usize).min(g - 1);
+            let gx = ((cx / cell) as usize).min(g - 1);
+            t.set4(0, gy, gx, 0, 1.0);
+            t.set4(0, gy, gx, 1, cy / cell - gy as f32 - 0.5);
+            t.set4(0, gy, gx, 2, cx / cell - gx as f32 - 0.5);
+            t.set4(0, gy, gx, 3, ((b.y1 - b.y0) / cell).ln());
+            t.set4(0, gy, gx, 4, ((b.x1 - b.x0) / cell).ln());
+            t.set4(0, gy, gx, 5 + b.class, 1.0);
+        }
+        t
+    }
+
+    /// Decode a prediction tensor `[1, G, G, 5 + C]` back into boxes with
+    /// scores above `threshold` (sigmoid applied to objectness logit).
+    pub fn decode_predictions(&self, pred: &Tensor<f32>, threshold: f32) -> Vec<(GtBox, f32)> {
+        let g = self.grid;
+        let cell = (self.resolution / self.grid) as f32;
+        let mut out = Vec::new();
+        for gy in 0..g {
+            for gx in 0..g {
+                let obj = 1.0 / (1.0 + (-pred.at4(0, gy, gx, 0)).exp());
+                if obj < threshold {
+                    continue;
+                }
+                let cy = (gy as f32 + 0.5 + pred.at4(0, gy, gx, 1)) * cell;
+                let cx = (gx as f32 + 0.5 + pred.at4(0, gy, gx, 2)) * cell;
+                let hh = pred.at4(0, gy, gx, 3).exp() * cell;
+                let ww = pred.at4(0, gy, gx, 4).exp() * cell;
+                let mut best = 0;
+                let mut best_v = f32::NEG_INFINITY;
+                for c in 0..self.num_classes {
+                    let v = pred.at4(0, gy, gx, 5 + c);
+                    if v > best_v {
+                        best_v = v;
+                        best = c;
+                    }
+                }
+                out.push((
+                    GtBox { y0: cy - hh / 2.0, x0: cx - ww / 2.0, y1: cy + hh / 2.0, x1: cx + ww / 2.0, class: best },
+                    obj,
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Attribute task (face-attributes stand-in): each image has one object;
+/// binary attributes are properties of it, "age" is its radius in pixels.
+///
+/// Attributes: 0 = is-bright, 1 = is-round (disk vs square), 2 = is-tilted,
+/// 3 = is-large. Age target = radius (a real value the paper's Table 4.8
+/// "age precision at 5 years" metric maps onto as radius-within-Δ).
+#[derive(Clone, Debug)]
+pub struct AttributeSet {
+    pub resolution: usize,
+    pub seed: u64,
+}
+
+pub const NUM_ATTRIBUTES: usize = 4;
+
+impl AttributeSet {
+    pub fn new(resolution: usize, seed: u64) -> Self {
+        Self { resolution, seed }
+    }
+
+    /// (image in [-1,1], binary attributes, age scalar).
+    pub fn example(&self, split: u64, index: u64) -> (Tensor<f32>, [bool; NUM_ATTRIBUTES], f32) {
+        let mut rng = Rng::new(self.seed ^ (0xA77E + split * 0x9E37_79B9), index);
+        let res = self.resolution;
+        let bright = rng.bool(0.5);
+        let round = rng.bool(0.5);
+        let tilted = rng.bool(0.5);
+        let large = rng.bool(0.5);
+        let r = if large {
+            rng.range_f32(res as f32 * 0.25, res as f32 * 0.4)
+        } else {
+            rng.range_f32(res as f32 * 0.1, res as f32 * 0.2)
+        };
+        let mut img = Tensor::zeros(&[1, res, res, 3]);
+        let cy = rng.range_f32(r + 1.0, res as f32 - r - 1.0);
+        let cx = rng.range_f32(r + 1.0, res as f32 - r - 1.0);
+        let amp = if bright { rng.range_f32(0.7, 0.95) } else { rng.range_f32(0.25, 0.45) };
+        let theta = if tilted { std::f32::consts::FRAC_PI_4 } else { 0.0 };
+        let kind = if round { ShapeKind::Disk } else { ShapeKind::Square };
+        render_shape(&mut img, kind, cy, cx, r, amp, theta, &[1.0, 1.0, 1.0]);
+        add_noise(&mut img, &mut rng, 0.05);
+        clamp_unit(&mut img);
+        (img, [bright, round, tilted, large], r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_is_deterministic() {
+        let ds = ClassificationSet::new(16, 16, 99);
+        let (a, la) = ds.example(0, 7);
+        let (b, lb) = ds.example(0, 7);
+        assert_eq!(la, lb);
+        assert_eq!(a.data(), b.data());
+        let (c, _) = ds.example(1, 7); // different split differs
+        assert_ne!(a.data(), c.data());
+    }
+
+    #[test]
+    fn classification_values_in_range_and_informative() {
+        let ds = ClassificationSet::new(16, 16, 1);
+        for i in 0..8 {
+            let (img, label) = ds.example(0, i);
+            assert!(label < 16);
+            let (mn, mx) = img.min_max();
+            assert!(mn >= -1.0 && mx <= 1.0);
+            assert!(mx - mn > 0.3, "image {i} should have contrast, got range {mn}..{mx}");
+        }
+    }
+
+    #[test]
+    fn classification_labels_cover_all_classes() {
+        let ds = ClassificationSet::new(8, 16, 5);
+        let mut seen = [false; 16];
+        for i in 0..400 {
+            let (_, l) = ds.example(0, i);
+            seen[l] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn batch_concatenates_examples() {
+        let ds = ClassificationSet::new(8, 4, 2);
+        let (batch, labels) = ds.batch(0, 10, 3);
+        assert_eq!(batch.shape(), &[3, 8, 8, 3]);
+        assert_eq!(labels.len(), 3);
+        let (single, l0) = ds.example(0, 10);
+        assert_eq!(&batch.data()[..single.len()], single.data());
+        assert_eq!(labels[0], l0);
+    }
+
+    #[test]
+    fn iou_properties() {
+        let a = GtBox { y0: 0.0, x0: 0.0, y1: 10.0, x1: 10.0, class: 0 };
+        assert!((a.iou(&a) - 1.0).abs() < 1e-6);
+        let b = GtBox { y0: 20.0, x0: 20.0, y1: 30.0, x1: 30.0, class: 0 };
+        assert_eq!(a.iou(&b), 0.0);
+        let c = GtBox { y0: 0.0, x0: 5.0, y1: 10.0, x1: 15.0, class: 0 };
+        assert!((a.iou(&c) - 1.0 / 3.0).abs() < 1e-6);
+        // Symmetry.
+        assert_eq!(a.iou(&c), c.iou(&a));
+    }
+
+    #[test]
+    fn detection_targets_roundtrip() {
+        let ds = DetectionSet::new(32, 4, 3, 11);
+        for i in 0..10 {
+            let (_, boxes) = ds.example(0, i);
+            assert!(!boxes.is_empty() && boxes.len() <= 3);
+            let t = ds.encode_targets(&boxes);
+            // Perfect predictions (logit +inf ~ 10) must decode back to the
+            // encoded boxes with IoU ~1.
+            let mut pred = t.clone();
+            for gy in 0..4 {
+                for gx in 0..4 {
+                    let obj = pred.at4(0, gy, gx, 0);
+                    pred.set4(0, gy, gx, 0, if obj > 0.5 { 10.0 } else { -10.0 });
+                }
+            }
+            let decoded = ds.decode_predictions(&pred, 0.5);
+            assert_eq!(decoded.len(), boxes.len(), "example {i}");
+            for b in &boxes {
+                let best = decoded.iter().map(|(d, _)| d.iou(b)).fold(0.0f32, f32::max);
+                assert!(best > 0.95, "example {i}: box not recovered, best IoU {best}");
+            }
+        }
+    }
+
+    #[test]
+    fn detection_grid_cells_unique_per_box() {
+        let ds = DetectionSet::new(32, 4, 3, 13);
+        for i in 0..20 {
+            let (_, boxes) = ds.example(0, i);
+            let t = ds.encode_targets(&boxes);
+            let cells: usize = (0..4)
+                .flat_map(|gy| (0..4).map(move |gx| (gy, gx)))
+                .filter(|&(gy, gx)| t.at4(0, gy, gx, 0) > 0.5)
+                .count();
+            assert!(cells >= 1);
+        }
+    }
+
+    #[test]
+    fn attributes_deterministic_and_consistent() {
+        let ds = AttributeSet::new(16, 3);
+        let (img1, attrs1, age1) = ds.example(0, 5);
+        let (img2, attrs2, age2) = ds.example(0, 5);
+        assert_eq!(img1.data(), img2.data());
+        assert_eq!(attrs1, attrs2);
+        assert_eq!(age1, age2);
+        // Age correlates with the "large" attribute by construction.
+        let mut large_ages = vec![];
+        let mut small_ages = vec![];
+        for i in 0..100 {
+            let (_, attrs, age) = ds.example(0, i);
+            if attrs[3] {
+                large_ages.push(age);
+            } else {
+                small_ages.push(age);
+            }
+        }
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        assert!(mean(&large_ages) > mean(&small_ages));
+    }
+}

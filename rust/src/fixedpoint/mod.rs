@@ -1,0 +1,334 @@
+//! Fixed-point arithmetic primitives, a faithful Rust port of the semantics
+//! of gemmlowp's `fixedpoint` library that the paper relies on (§2.2, App. B).
+//!
+//! The paper's inference engine never touches floating point at run time.
+//! Every real-valued multiplier `M ∈ (0,1)` is normalized offline to
+//! `M = 2^-n · M0` with `M0 ∈ [0.5, 1)` stored as a Q0.31 int32, and applied
+//! with two primitives:
+//!
+//! * [`srdhm`] — *saturating rounding doubling high multiply*, the exact
+//!   semantics of the ARM NEON `SQRDMULH` instruction (App. B stresses the
+//!   correctly-rounding `SQRDMULH`, not `SQDMULH`).
+//! * [`rounding_div_by_pot`] — rounding right shift with round-to-nearest,
+//!   *ties away from zero*. App. B explains why NEON's `RSHL` (ties upward)
+//!   is wrong: it biases results upward and measurably hurts accuracy.
+//!
+//! On top of these, [`Fp`] provides a typed fixed-point value with a
+//! compile-time number of integer bits, mirroring gemmlowp's
+//! `FixedPoint<tIntegerBits>`, used by the transcendental functions
+//! (App. A.1) in [`transcendental`].
+
+pub mod transcendental;
+
+pub use transcendental::{exp_on_negative_values, logistic, tanh};
+
+/// Saturating rounding doubling high multiply: `(a * b * 2 + 2^30) >> 31`
+/// with saturation on the single overflow case `a == b == i32::MIN`.
+///
+/// This is the exact arithmetic of ARM NEON `SQRDMULH` (App. B) and is the
+/// workhorse of fixed-point multiplication: for Q0.31 operands it computes
+/// the Q0.31 product rounded to nearest.
+#[inline]
+pub fn srdhm(a: i32, b: i32) -> i32 {
+    if a == i32::MIN && b == i32::MIN {
+        return i32::MAX;
+    }
+    let ab = i64::from(a) * i64::from(b);
+    let nudge: i64 = if ab >= 0 { 1 << 30 } else { 1 - (1 << 30) };
+    // (ab + nudge) / 2^31 with truncation toward zero, as in gemmlowp.
+    ((ab + nudge) / (1i64 << 31)) as i32
+}
+
+/// Rounding right shift by `exponent` with round-to-nearest and ties
+/// rounded *away from zero*.
+///
+/// App. B: NEON's `RSHL` rounds ties upward (e.g. `-12 >> 3` gives `-1`
+/// instead of `-2`), creating an upward bias that degrades end-to-end
+/// accuracy; this function implements the fix-up semantics gemmlowp uses.
+#[inline]
+pub fn rounding_div_by_pot(x: i32, exponent: i32) -> i32 {
+    debug_assert!((0..=31).contains(&exponent));
+    if exponent == 0 {
+        return x;
+    }
+    let mask: i32 = (1i64 << exponent).wrapping_sub(1) as i32;
+    let remainder = x & mask;
+    let threshold = (mask >> 1) + i32::from(x < 0);
+    (x >> exponent) + i32::from(remainder > threshold)
+}
+
+/// Saturating multiplication by a power of two `2^exponent`.
+///
+/// Negative exponents are rounding right shifts; positive exponents are
+/// left shifts that saturate instead of wrapping (gemmlowp
+/// `SaturatingRoundingMultiplyByPOT`).
+#[inline]
+pub fn saturating_rounding_mul_by_pot(x: i32, exponent: i32) -> i32 {
+    if exponent <= 0 {
+        rounding_div_by_pot(x, -exponent)
+    } else {
+        let min = i32::MIN >> exponent;
+        let max = i32::MAX >> exponent;
+        if x > max {
+            i32::MAX
+        } else if x < min {
+            i32::MIN
+        } else {
+            x << exponent
+        }
+    }
+}
+
+/// Apply a normalized quantized multiplier `M = M0 · 2^-shift` (eq. 6) to an
+/// int32 accumulator: `srdhm` by the Q0.31 mantissa `m0`, then rounding
+/// right shift.
+///
+/// This is the scale-down step of the fused layer (§2.4): it maps the int32
+/// accumulator (scale `S1·S2`) onto the output activation scale `S3`.
+#[inline]
+pub fn multiply_by_quantized_multiplier(acc: i32, m0: i32, right_shift: i32) -> i32 {
+    debug_assert!(m0 >= 0, "normalized multiplier mantissa is non-negative");
+    rounding_div_by_pot(srdhm(acc, m0), right_shift)
+}
+
+/// As [`multiply_by_quantized_multiplier`] but supporting multipliers ≥ 1
+/// (`shift > 0` applies a saturating left shift before the fixed-point
+/// multiply). The paper finds `M ∈ (0,1)` empirically for matmul (§2.2), but
+/// Add rescaling (App. A.2) can produce `M ≥ 1`.
+#[inline]
+pub fn multiply_by_quantized_multiplier_signed_shift(acc: i32, m0: i32, shift: i32) -> i32 {
+    let left = shift.max(0);
+    let right = (-shift).max(0);
+    rounding_div_by_pot(srdhm(saturating_rounding_mul_by_pot(acc, left), m0), right)
+}
+
+/// A fixed-point value with `IB` integer bits and `31 - IB` fractional bits
+/// stored in an `i32` (plus sign bit) — gemmlowp's `FixedPoint<tIntegerBits>`.
+///
+/// `Fp<0>` is Q0.31 covering (−1, 1); `Fp<5>` covers (−32, 32) etc. The
+/// transcendental functions (App. A.1) are built from this type using only
+/// integer arithmetic — "no lookup tables needed" (§2.1 eschews LUTs as they
+/// perform poorly on SIMD hardware).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Fp<const IB: i32> {
+    raw: i32,
+}
+
+impl<const IB: i32> Fp<IB> {
+    pub const INTEGER_BITS: i32 = IB;
+    pub const FRACTIONAL_BITS: i32 = 31 - IB;
+
+    /// Wrap a raw integer as a fixed-point value (no scaling).
+    #[inline]
+    pub fn from_raw(raw: i32) -> Self {
+        Self { raw }
+    }
+
+    #[inline]
+    pub fn raw(self) -> i32 {
+        self.raw
+    }
+
+    /// The value 1, saturated if `IB == 0` (Q0.31 cannot represent 1.0
+    /// exactly; gemmlowp saturates to `i32::MAX` in that case).
+    #[inline]
+    pub fn one() -> Self {
+        if IB == 0 {
+            Self::from_raw(i32::MAX)
+        } else {
+            Self::from_raw(1i32 << Self::FRACTIONAL_BITS)
+        }
+    }
+
+    #[inline]
+    pub fn zero() -> Self {
+        Self::from_raw(0)
+    }
+
+    /// The constant `2^exponent`, representable iff `-FRACTIONAL_BITS <=
+    /// exponent < IB`.
+    #[inline]
+    pub fn constant_pot(exponent: i32) -> Self {
+        let offset = Self::FRACTIONAL_BITS + exponent;
+        debug_assert!(
+            (0..31).contains(&offset),
+            "2^{exponent} not representable with {IB} integer bits"
+        );
+        Self::from_raw(1i32 << offset)
+    }
+
+    /// Nearest fixed-point value to the real `x` (for building constants;
+    /// never used on the inference hot path).
+    pub fn from_f64(x: f64) -> Self {
+        let scaled = x * 2f64.powi(Self::FRACTIONAL_BITS);
+        Self::from_raw(scaled.round().clamp(f64::from(i32::MIN), f64::from(i32::MAX)) as i32)
+    }
+
+    /// The real value this fixed-point number represents (test/debug only).
+    pub fn to_f64(self) -> f64 {
+        f64::from(self.raw) / 2f64.powi(Self::FRACTIONAL_BITS)
+    }
+
+    /// Change the number of integer bits, preserving the represented value
+    /// (gemmlowp `Rescale<tIntegerBitsDst>`).
+    #[inline]
+    pub fn rescale<const IB2: i32>(self) -> Fp<IB2> {
+        let exponent = IB - IB2;
+        Fp::<IB2>::from_raw(saturating_rounding_mul_by_pot(self.raw, exponent))
+    }
+
+    /// Saturating fixed-point addition.
+    #[inline]
+    pub fn add(self, rhs: Self) -> Self {
+        Self::from_raw(self.raw.saturating_add(rhs.raw))
+    }
+
+    /// Saturating fixed-point subtraction.
+    #[inline]
+    pub fn sub(self, rhs: Self) -> Self {
+        Self::from_raw(self.raw.saturating_sub(rhs.raw))
+    }
+
+    /// Same-type fixed-point product. Exact gemmlowp semantics for
+    /// `FixedPoint<a> * FixedPoint<b>` require the output to carry `a+b`
+    /// integer bits; for `IB == 0` (the transcendental hot case) the output
+    /// type is unchanged, which is what this method implements. For mixed
+    /// integer-bit products use [`Fp::mul_into`].
+    #[inline]
+    pub fn mul(self, rhs: Self) -> Fp<0>
+    where
+        Self: Sized,
+    {
+        // srdhm on raw values yields raw with IB_l + IB_r integer bits; the
+        // caller re-interprets. For IB == 0 this is already Q0.31.
+        Fp::<0>::from_raw(srdhm(self.raw, rhs.raw))
+    }
+
+    /// Fixed-point product producing a value with `IBO = IB + IB2` integer
+    /// bits (checked with a debug assertion).
+    #[inline]
+    pub fn mul_into<const IB2: i32, const IBO: i32>(self, rhs: Fp<IB2>) -> Fp<IBO> {
+        debug_assert!(IBO == IB + IB2, "fixed-point mul output must carry IB_lhs + IB_rhs integer bits");
+        Fp::<IBO>::from_raw(srdhm(self.raw, rhs.raw))
+    }
+
+    /// Multiply by `2^exponent` with saturation.
+    #[inline]
+    pub fn mul_by_pot(self, exponent: i32) -> Self {
+        Self::from_raw(saturating_rounding_mul_by_pot(self.raw, exponent))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn srdhm_basic_products() {
+        assert_eq!(srdhm(1 << 30, 1 << 30), 1 << 29); // 0.5 * 0.5 = 0.25
+        assert_eq!(srdhm(i32::MAX, i32::MAX), i32::MAX - 1); // (~1.0)^2
+        assert_eq!(srdhm(i32::MIN, i32::MIN), i32::MAX); // saturation case
+        assert_eq!(srdhm(0, i32::MIN), 0);
+        assert_eq!(srdhm(i32::MIN, i32::MAX), -i32::MAX); // -1.0 * ~1.0
+    }
+
+    #[test]
+    fn srdhm_rounding_against_reference() {
+        for &(a, b) in &[
+            (123456789, 987654321),
+            (-123456789, 987654321),
+            (1 << 20, -(1 << 25)),
+            (-7, 5),
+            (3, 3),
+            (i32::MAX, 1),
+            (i32::MIN + 1, i32::MIN + 1),
+        ] {
+            let exact = i64::from(a) * i64::from(b);
+            let nudge: i64 = if exact >= 0 { 1 << 30 } else { 1 - (1 << 30) };
+            let want = ((exact + nudge) / (1i64 << 31)) as i32;
+            assert_eq!(srdhm(a, b), want, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn rounding_div_ties_away_from_zero() {
+        // The App. B example: -12 / 2^3 must be -2 (away from zero), not -1.
+        assert_eq!(rounding_div_by_pot(-12, 3), -2);
+        assert_eq!(rounding_div_by_pot(12, 3), 2);
+        assert_eq!(rounding_div_by_pot(-11, 3), -1);
+        assert_eq!(rounding_div_by_pot(11, 3), 1);
+        assert_eq!(rounding_div_by_pot(-13, 3), -2);
+        assert_eq!(rounding_div_by_pot(13, 3), 2);
+        assert_eq!(rounding_div_by_pot(5, 0), 5);
+        assert_eq!(rounding_div_by_pot(i32::MIN, 1), -(1 << 30));
+    }
+
+    #[test]
+    fn rounding_div_matches_f64_rounding() {
+        for x in [-1000i32, -999, -17, -1, 0, 1, 17, 999, 1000, 123456] {
+            for e in 1..8 {
+                let exact = f64::from(x) / 2f64.powi(e);
+                let want = if (exact.fract()).abs() == 0.5 {
+                    exact.trunc() + exact.signum()
+                } else {
+                    exact.round()
+                } as i32;
+                assert_eq!(rounding_div_by_pot(x, e), want, "x={x} e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturating_pot_saturates() {
+        assert_eq!(saturating_rounding_mul_by_pot(1 << 30, 2), i32::MAX);
+        assert_eq!(saturating_rounding_mul_by_pot(-(1 << 30), 2), i32::MIN);
+        assert_eq!(saturating_rounding_mul_by_pot(3, 2), 12);
+        assert_eq!(saturating_rounding_mul_by_pot(12, -2), 3);
+    }
+
+    #[test]
+    fn quantized_multiplier_primitive() {
+        let m0 = 1 << 30; // 0.5 in Q0.31
+        assert_eq!(multiply_by_quantized_multiplier(1000, m0, 0), 500);
+        assert_eq!(multiply_by_quantized_multiplier(1000, m0, 1), 250);
+        assert_eq!(multiply_by_quantized_multiplier(-1000, m0, 1), -250);
+    }
+
+    #[test]
+    fn signed_shift_multiplier_handles_m_ge_1() {
+        // M = 1.5 = 0.75 * 2^1 → m0 = 0.75 in Q0.31, shift = +1.
+        let m0 = Fp::<0>::from_f64(0.75).raw();
+        let got = multiply_by_quantized_multiplier_signed_shift(1000, m0, 1);
+        assert_eq!(got, 1500);
+    }
+
+    #[test]
+    fn fp_constants_and_rescale() {
+        let one = Fp::<5>::one();
+        assert!((one.to_f64() - 1.0).abs() < 1e-9);
+        let half = Fp::<5>::constant_pot(-1);
+        assert!((half.to_f64() - 0.5).abs() < 1e-9);
+        let r: Fp<2> = half.rescale::<2>();
+        assert!((r.to_f64() - 0.5).abs() < 1e-8);
+    }
+
+    #[test]
+    fn fp_mul_is_accurate() {
+        let a = Fp::<0>::from_f64(0.75);
+        let b = Fp::<0>::from_f64(-0.5);
+        let c = a.mul(b);
+        assert!((c.to_f64() + 0.375).abs() < 1e-8, "{}", c.to_f64());
+    }
+
+    #[test]
+    fn fp_from_to_f64_roundtrip() {
+        for &x in &[0.0, 0.1, -0.9999, 0.5, -0.25] {
+            let v = Fp::<0>::from_f64(x);
+            assert!((v.to_f64() - x).abs() < 1e-8);
+        }
+        for &x in &[0.0, 1.0, -3.75, 15.9, -15.9] {
+            let v = Fp::<4>::from_f64(x);
+            assert!((v.to_f64() - x).abs() < 1e-6);
+        }
+    }
+}

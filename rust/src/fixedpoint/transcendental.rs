@@ -1,0 +1,285 @@
+//! Pure fixed-point transcendental functions (paper App. A.1).
+//!
+//! "Math functions such as hyperbolic tangent, the logistic function, and
+//! softmax often appear in neural networks. No lookup tables are needed
+//! since these functions are implemented in pure fixed-point arithmetic" —
+//! these are structural ports of the SIMD-ready, branch-free implementations
+//! in gemmlowp's `fixedpoint` directory: a 4th-order Taylor core for
+//! `exp` on `[-1/4, 0)`, a barrel shifter of precomputed `exp(-2^k)`
+//! constants for the integer part, and Newton–Raphson division for the
+//! rational forms of `tanh` and `logistic`.
+//!
+//! All functions take a [`Fp`] with `IB` integer bits and return `Fp<0>`
+//! (Q0.31), matching gemmlowp's signatures. Accuracy is verified against
+//! `f64` in the tests below and (via the quantized ops in [`crate::nn`])
+//! against the JAX reference graphs.
+
+use super::{srdhm, Fp};
+
+/// Rounding half-sum `(a + b + 1) / 2` computed in 64-bit to avoid overflow
+/// (gemmlowp `RoundingHalfSum`).
+#[inline]
+fn rounding_half_sum(a: i32, b: i32) -> i32 {
+    ((i64::from(a) + i64::from(b) + 1) >> 1) as i32
+}
+
+/// `exp(x)` for `x ∈ [-1/4, 0)`, input and output Q0.31.
+///
+/// Computes `exp(-1/8) · exp(x + 1/8)` with a 4th-order Taylor expansion of
+/// the second factor around 0, exactly as gemmlowp's
+/// `exp_on_interval_between_negative_one_quarter_and_0_excl`.
+fn exp_on_interval_neg_quarter_to_0(a: Fp<0>) -> Fp<0> {
+    let constant_term = Fp::<0>::from_raw(1_895_147_668); // exp(-1/8) in Q0.31
+    let constant_1_over_3 = Fp::<0>::from_raw(715_827_883); // 1/3 in Q0.31
+    let x = a.add(Fp::<0>::constant_pot(-3)); // x = a + 1/8 ∈ [-1/8, 1/8)
+    let x2 = x.mul(x);
+    let x3 = x2.mul(x);
+    let x4 = x2.mul(x2);
+    let x4_over_4 = x4.mul_by_pot(-2);
+    // ((x⁴/4 + x³)/3 + x²)/2 = x⁴/24 + x³/6 + x²/2
+    let poly = x4_over_4.add(x3).mul(constant_1_over_3).add(x2).mul_by_pot(-1);
+    constant_term.add(constant_term.mul(x.add(poly)))
+}
+
+/// `exp(a)` for `a ≤ 0`, with `IB` integer bits of input range.
+///
+/// Splits `a` into a multiple of 1/4 plus a remainder in `[-1/4, 0)`; the
+/// remainder goes through the Taylor core, and each set bit of the integer
+/// part multiplies in a precomputed `exp(-2^k)` Q0.31 constant (the "barrel
+/// shifter"). Branch structure matches gemmlowp `exp_on_negative_values`.
+pub fn exp_on_negative_values<const IB: i32>(a: Fp<IB>) -> Fp<0> {
+    debug_assert!(a.raw() <= 0, "exp_on_negative_values requires a <= 0");
+    let k_fractional_bits: i32 = 31 - IB;
+    let one_quarter = Fp::<IB>::constant_pot(-2);
+    let mask = one_quarter.raw() - 1;
+    // a mod 1/4, shifted into [-1/4, 0).
+    let a_mod_quarter_minus_one_quarter = (a.raw() & mask) - one_quarter.raw();
+    let rescaled = Fp::<IB>::from_raw(a_mod_quarter_minus_one_quarter).rescale::<0>();
+    let mut result = exp_on_interval_neg_quarter_to_0(rescaled);
+    // The multiples of 1/4 we still owe: a_mod - a >= 0.
+    let remainder = a_mod_quarter_minus_one_quarter.wrapping_sub(a.raw());
+
+    // (exponent k, exp(-2^k) in Q0.31)
+    const BARREL: [(i32, i32); 7] = [
+        (-2, 1_672_461_947), // exp(-1/4)
+        (-1, 1_302_514_674), // exp(-1/2)
+        (0, 790_015_084),    // exp(-1)
+        (1, 290_630_308),    // exp(-2)
+        (2, 39_332_535),     // exp(-4)
+        (3, 720_401),        // exp(-8)
+        (4, 242),            // exp(-16)
+    ];
+    for (exponent, multiplier) in BARREL {
+        if IB > exponent {
+            let shift = k_fractional_bits + exponent;
+            if (0..31).contains(&shift) && (remainder & (1i32 << shift)) != 0 {
+                result = result.mul(Fp::<0>::from_raw(multiplier));
+            }
+        }
+    }
+    if IB > 5 {
+        // Beyond -32 the result underflows Q0.31 entirely.
+        let clamp_bound = -(1i64 << (k_fractional_bits + 5)).min(i64::from(i32::MAX)) as i32;
+        if a.raw() < clamp_bound {
+            result = Fp::<0>::zero();
+        }
+    }
+    if a.raw() == 0 {
+        Fp::<0>::one()
+    } else {
+        result
+    }
+}
+
+/// Newton–Raphson reciprocal: returns `x ≈ 2 / (1 + a)` as `Fp<2>`, for
+/// `a ∈ [0, 1)` Q0.31 (gemmlowp's core of `one_over_one_plus_x_for_x_in_0_1`).
+fn two_over_one_plus_x(a: Fp<0>) -> Fp<2> {
+    debug_assert!(a.raw() >= 0);
+    // half_denominator = (1 + a) / 2 ∈ [1/2, 1), Q0.31.
+    let half_denominator = Fp::<0>::from_raw(rounding_half_sum(a.raw(), i32::MAX));
+    // Initial estimate x0 = 48/17 - 32/17 * d, the classic NR seed.
+    let constant_48_over_17 = Fp::<2>::from_raw(1_515_870_810); // 48/17 in Q2.29
+    let constant_neg_32_over_17 = Fp::<2>::from_raw(-1_010_580_540); // -32/17 in Q2.29
+    // F0 * F2 product carries 2 integer bits: raw srdhm is correct Q2.29.
+    let mut x = constant_48_over_17
+        .add(Fp::<2>::from_raw(srdhm(half_denominator.raw(), constant_neg_32_over_17.raw())));
+    for _ in 0..3 {
+        let half_denominator_times_x = Fp::<2>::from_raw(srdhm(half_denominator.raw(), x.raw()));
+        let one_minus = Fp::<2>::one().sub(half_denominator_times_x);
+        // x * one_minus is Q4.27; rescale back to Q2.29 and accumulate.
+        let delta = Fp::<4>::from_raw(srdhm(x.raw(), one_minus.raw())).rescale::<2>();
+        x = x.add(delta);
+    }
+    x // ≈ 1 / half_denominator = 2 / (1 + a)
+}
+
+/// `1 / (1 + x)` for `x ∈ [0, 1)`, Q0.31 → Q0.31.
+pub fn one_over_one_plus_x_for_x_in_0_1(a: Fp<0>) -> Fp<0> {
+    let x = two_over_one_plus_x(a);
+    // Halve (exact shift) then drop the integer bits: x/2 ∈ (1/2, 1].
+    Fp::<2>::from_raw(x.raw()).mul_by_pot(-1).rescale::<0>()
+}
+
+/// `(1 - x) / (1 + x)` for `x ∈ [0, 1)`, Q0.31 → Q0.31 — the rational core
+/// of `tanh` (gemmlowp `one_minus_x_over_one_plus_x_for_x_in_0_1`).
+pub fn one_minus_x_over_one_plus_x_for_x_in_0_1(a: Fp<0>) -> Fp<0> {
+    let x = two_over_one_plus_x(a);
+    // 2/(1+a) - 1 = (1-a)/(1+a).
+    x.sub(Fp::<2>::one()).rescale::<0>()
+}
+
+/// Hyperbolic tangent on fixed-point input: `tanh(a) = (1 - e^{-2a}) / (1 +
+/// e^{-2a})` for `a ≥ 0`, odd-extended to negative inputs.
+pub fn tanh<const IB: i32>(a: Fp<IB>) -> Fp<0> {
+    let negative = a.raw() < 0;
+    let abs_raw = if a.raw() == i32::MIN { i32::MAX } else { a.raw().abs() };
+    // -2|a|, saturating.
+    let minus_two_abs = Fp::<IB>::from_raw(abs_raw.saturating_neg()).mul_by_pot(1);
+    let e = exp_on_negative_values(minus_two_abs);
+    let t = one_minus_x_over_one_plus_x_for_x_in_0_1(e);
+    if negative {
+        Fp::<0>::from_raw(t.raw().saturating_neg())
+    } else {
+        t
+    }
+}
+
+/// Logistic function `1 / (1 + e^{-a})` on fixed-point input, using
+/// `logistic(-a) = 1 - logistic(a)` for negative inputs.
+pub fn logistic<const IB: i32>(a: Fp<IB>) -> Fp<0> {
+    let negative = a.raw() < 0;
+    let abs_raw = if a.raw() == i32::MIN { i32::MAX } else { a.raw().abs() };
+    let e = exp_on_negative_values(Fp::<IB>::from_raw(abs_raw.saturating_neg()));
+    let p = one_over_one_plus_x_for_x_in_0_1(e);
+    if negative {
+        // 1 - p in Q0.31 (one() saturates to i32::MAX ≈ 1).
+        Fp::<0>::from_raw(i32::MAX - p.raw())
+    } else {
+        p
+    }
+}
+
+/// Rounding division of two int32s with round-to-nearest, used by the
+/// quantized softmax to renormalize (`sum` is positive).
+#[inline]
+pub fn rounding_div(numerator: i64, denominator: i64) -> i32 {
+    debug_assert!(denominator > 0);
+    let half = denominator / 2;
+    let n = if numerator >= 0 { numerator + half } else { numerator - half };
+    (n / denominator) as i32
+}
+
+pub use super::Fp as FixedPoint;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_exp<const IB: i32>(x: f64, tol: f64) {
+        let a = Fp::<IB>::from_f64(x);
+        let got = exp_on_negative_values(a).to_f64();
+        let want = a.to_f64().exp();
+        assert!((got - want).abs() < tol, "exp({x}) [IB={IB}]: got {got}, want {want}");
+    }
+
+    #[test]
+    fn exp_matches_f64_ib0() {
+        for i in 0..=100 {
+            check_exp::<0>(-(i as f64) / 101.0, 3e-7);
+        }
+    }
+
+    #[test]
+    fn exp_matches_f64_ib5() {
+        for i in 0..=100 {
+            check_exp::<5>(-(i as f64) * 31.0 / 100.0, 2e-6);
+        }
+    }
+
+    #[test]
+    fn exp_at_zero_is_one() {
+        assert_eq!(exp_on_negative_values(Fp::<5>::zero()).raw(), i32::MAX);
+    }
+
+    #[test]
+    fn exp_is_monotonic() {
+        let mut prev = -1.0;
+        for i in (0..=1000).rev() {
+            let a = Fp::<5>::from_f64(-(i as f64) * 20.0 / 1000.0);
+            let v = exp_on_negative_values(a).to_f64();
+            assert!(v >= prev, "exp not monotone at {}", a.to_f64());
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn reciprocal_matches_f64() {
+        for i in 0..100 {
+            let x = i as f64 / 100.0;
+            let got = one_over_one_plus_x_for_x_in_0_1(Fp::<0>::from_f64(x)).to_f64();
+            let want = 1.0 / (1.0 + x);
+            assert!((got - want).abs() < 1e-6, "1/(1+{x}): got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn one_minus_over_one_plus_matches_f64() {
+        for i in 0..100 {
+            let x = i as f64 / 100.0;
+            let got = one_minus_x_over_one_plus_x_for_x_in_0_1(Fp::<0>::from_f64(x)).to_f64();
+            let want = (1.0 - x) / (1.0 + x);
+            assert!((got - want).abs() < 1e-6, "(1-x)/(1+x) at {x}: got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn tanh_matches_f64() {
+        for i in -80..=80 {
+            let x = i as f64 / 10.0;
+            let got = tanh(Fp::<4>::from_f64(x)).to_f64();
+            let want = x.tanh();
+            assert!((got - want).abs() < 2e-6, "tanh({x}): got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn tanh_is_odd() {
+        for i in 1..50 {
+            let x = i as f64 / 7.0;
+            let p = tanh(Fp::<4>::from_f64(x)).raw();
+            let n = tanh(Fp::<4>::from_f64(-x)).raw();
+            assert_eq!(p, n.saturating_neg(), "tanh not odd at {x}");
+        }
+    }
+
+    #[test]
+    fn logistic_matches_f64() {
+        for i in -80..=80 {
+            let x = i as f64 / 10.0;
+            let got = logistic(Fp::<4>::from_f64(x)).to_f64();
+            let want = 1.0 / (1.0 + (-x).exp());
+            assert!((got - want).abs() < 2e-6, "logistic({x}): got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn logistic_symmetry() {
+        // logistic(x) + logistic(-x) == 1 (up to 1 ulp of Q0.31).
+        for i in 0..50 {
+            let x = i as f64 / 5.0;
+            let p = logistic(Fp::<4>::from_f64(x)).raw() as i64;
+            let n = logistic(Fp::<4>::from_f64(-x)).raw() as i64;
+            // Within a few Q0.31 ulps (~4e-9): the Newton-Raphson reciprocal
+            // is not exactly symmetric around its fixed point.
+            assert!((p + n - i64::from(i32::MAX)).abs() <= 8, "asymmetric at {x}");
+        }
+    }
+
+    #[test]
+    fn rounding_div_rounds_to_nearest() {
+        assert_eq!(rounding_div(7, 2), 4); // 3.5 → away from zero
+        assert_eq!(rounding_div(-7, 2), -4);
+        assert_eq!(rounding_div(10, 3), 3);
+        assert_eq!(rounding_div(11, 3), 4);
+    }
+}

@@ -1,0 +1,193 @@
+//! The App. B ARM NEON accumulation trick, in portable form.
+//!
+//! On NEON the fastest uint8 GEMM path recentres both operands to int8 by
+//! subtracting 128 (adjusting zero-points accordingly: `q − Z =
+//! (q−128) − (Z−128)`, so eq. 7 is unchanged with primed values). Quantized
+//! training guarantees weights never take −128 (§3.1), so every product
+//! `|a·b| ≤ 127·128 < 2^14`, and **two** products fit a local int16
+//! accumulator before being widened into the int32 accumulator — the
+//! SMULL → SMLAL → SADALP sequence. Here we express the same schedule in
+//! scalar Rust: LLVM maps the i16 pair-accumulate loop onto `pmaddwd`-class
+//! SIMD on x86, doubling the effective lane width exactly as the trick does
+//! on NEON.
+//!
+//! The overflow-safety invariant (weights ∈ [−127,127] ⇒ pairwise i16 sums
+//! cannot wrap) is property-tested below and enforced at conversion time by
+//! [`crate::quant::QuantParams::for_weights`]'s narrow range.
+
+use super::QGemm;
+
+/// K-dimension cache block (even so pairs never straddle blocks).
+const KC: usize = 256;
+/// Columns per packed panel block. 16 i32 lanes = one AVX-512 register /
+/// two AVX2 registers; the pair-product loop below compiles to the
+/// pmaddwd-class pattern at this width (EXPERIMENTS.md §Perf).
+const NR: usize = 16;
+
+/// Accumulate eq. 7 using the int8/i16-pairwise schedule.
+pub fn accumulate_int8_pairwise(g: &QGemm, lhs: &[u8], rhs: &[u8], acc: &mut [i32]) {
+    let (m, k, n) = (g.m, g.k, g.n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    acc.fill(0);
+
+    // Recentre once: u8 → i8 by XOR 0x80 (equivalent to subtracting 128).
+    let lhs_s: Vec<i8> = lhs.iter().map(|&v| (v ^ 0x80) as i8).collect();
+    let rhs_s: Vec<i8> = rhs.iter().map(|&v| (v ^ 0x80) as i8).collect();
+
+    let mut packed = vec![0i8; KC * n.div_ceil(NR) * NR];
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        pack_rhs_panel_i8(&rhs_s, k0, kc, n, &mut packed);
+        for i in 0..m {
+            let lrow = &lhs_s[i * k + k0..i * k + k0 + kc];
+            for b in 0..n.div_ceil(NR) {
+                let n0 = b * NR;
+                let nr = NR.min(n - n0);
+                let panel = &packed[b * kc * NR..(b + 1) * kc * NR];
+                let mut tile = [0i32; NR];
+                // Process K in pairs — the paper's SMULL/SMLAL/SADALP
+                // schedule. Each pairwise product sum fits 16 bits (lhs ∈
+                // [−127,127], see `pairwise_sum_fits_i16`), which is what
+                // lets NEON keep a local i16 accumulator and x86 use the
+                // pmaddwd i16×i16→i32 pairwise form; writing the pair sum
+                // directly in i32 lets LLVM pick that instruction (an
+                // explicit i16 intermediate blocks the pattern match).
+                let pairs = kc / 2;
+                for p in 0..pairs {
+                    let a0 = i32::from(lrow[2 * p]);
+                    let a1 = i32::from(lrow[2 * p + 1]);
+                    let r0 = &panel[2 * p * NR..2 * p * NR + NR];
+                    let r1 = &panel[(2 * p + 1) * NR..(2 * p + 1) * NR + NR];
+                    for c in 0..NR {
+                        tile[c] += a0 * i32::from(r0[c]) + a1 * i32::from(r1[c]);
+                    }
+                }
+                if kc % 2 == 1 {
+                    let a = i32::from(lrow[kc - 1]);
+                    let r = &panel[(kc - 1) * NR..(kc - 1) * NR + NR];
+                    for c in 0..NR {
+                        tile[c] += a * i32::from(r[c]);
+                    }
+                }
+                let out = &mut acc[i * n + n0..i * n + n0 + nr];
+                for c in 0..nr {
+                    out[c] += tile[c];
+                }
+            }
+        }
+    }
+
+    // Zero-point corrections with the recentred zero points Z' = Z − 128.
+    let g_prime = QGemm { lhs_zero: g.lhs_zero - 128, rhs_zero: g.rhs_zero - 128, ..g.clone() };
+    let rs = row_sums_i8(&lhs_s, m, k);
+    let cs = col_sums_i8(&rhs_s, k, n);
+    apply_corrections_i32(&g_prime, acc, &rs, &cs);
+}
+
+fn pack_rhs_panel_i8(rhs: &[i8], k0: usize, kc: usize, n: usize, packed: &mut [i8]) {
+    for b in 0..n.div_ceil(NR) {
+        let n0 = b * NR;
+        let nr = NR.min(n - n0);
+        let dst_base = b * kc * NR;
+        for j in 0..kc {
+            let src = &rhs[(k0 + j) * n + n0..(k0 + j) * n + n0 + nr];
+            let dst = &mut packed[dst_base + j * NR..dst_base + j * NR + NR];
+            dst[..nr].copy_from_slice(src);
+            dst[nr..].fill(0);
+        }
+    }
+}
+
+fn row_sums_i8(lhs: &[i8], m: usize, k: usize) -> Vec<i32> {
+    (0..m)
+        .map(|i| lhs[i * k..(i + 1) * k].iter().map(|&v| i32::from(v)).sum())
+        .collect()
+}
+
+fn col_sums_i8(rhs: &[i8], k: usize, n: usize) -> Vec<i32> {
+    let mut sums = vec![0i32; n];
+    for j in 0..k {
+        for (s, &v) in sums.iter_mut().zip(&rhs[j * n..(j + 1) * n]) {
+            *s += i32::from(v);
+        }
+    }
+    sums
+}
+
+fn apply_corrections_i32(g: &QGemm, acc: &mut [i32], row_sums: &[i32], col_sums: &[i32]) {
+    let kzz = g.k as i32 * g.lhs_zero * g.rhs_zero;
+    for i in 0..g.m {
+        let row_term = kzz - g.rhs_zero * row_sums[i];
+        for (o, &cs) in acc[i * g.n..(i + 1) * g.n].iter_mut().zip(col_sums) {
+            *o += row_term - g.lhs_zero * cs;
+        }
+    }
+}
+
+/// The invariant that makes the trick sound: with weights restricted to
+/// int8 values in [−127, 127], any pairwise product sum fits in i16.
+/// Exposed for the property tests and the converter's debug checks.
+pub fn pairwise_sum_fits_i16(w0: i8, w1: i8, a0: i8, a1: i8) -> bool {
+    if w0 == -128 || w1 == -128 {
+        return false; // the case training excludes
+    }
+    let s = i32::from(w0) * i32::from(a0) + i32::from(w1) * i32::from(a1);
+    (i32::from(i16::MIN)..=i32::from(i16::MAX)).contains(&s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Kernel;
+
+    fn pseudo(seed: u64, n: usize, lo: u8) -> Vec<u8> {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(99);
+                let v = (state >> 56) as u8;
+                v.max(lo)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn int8_path_equals_reference() {
+        for (m, k, n) in [(1, 2, 1), (3, 7, 5), (4, 255, 9), (6, 257, 12), (5, 513, 3)] {
+            // lhs narrow range [1,255] — the training guarantee.
+            let lhs = pseudo(1 + m as u64, m * k, 1);
+            let rhs = pseudo(2 + n as u64, k * n, 0);
+            let g = QGemm::new(m, k, n, 90, 133);
+            let mut want = vec![0i32; m * n];
+            let mut got = vec![0i32; m * n];
+            g.accumulate(Kernel::Reference, &lhs, &rhs, &mut want);
+            accumulate_int8_pairwise(&g, &lhs, &rhs, &mut got);
+            assert_eq!(want, got, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn worst_case_pair_fits_i16() {
+        // |w| ≤ 127, |a| ≤ 128 ⇒ |w·a| ≤ 16256 < 2^14; two fit i16.
+        assert!(pairwise_sum_fits_i16(127, 127, -128, -128));
+        assert!(pairwise_sum_fits_i16(-127, -127, -128, -128));
+        assert!(pairwise_sum_fits_i16(127, -127, 127, -128));
+        // The excluded value would overflow: (-128)·(-128)·2 = 32768 > i16::MAX.
+        assert!(!pairwise_sum_fits_i16(-128, -128, -128, -128));
+    }
+
+    #[test]
+    fn exhaustive_pair_safety_on_boundary_weights() {
+        for w0 in [-127i8, -1, 0, 1, 127] {
+            for w1 in [-127i8, -1, 0, 1, 127] {
+                for a0 in [-128i8, -1, 0, 127] {
+                    for a1 in [-128i8, -1, 0, 127] {
+                        assert!(pairwise_sum_fits_i16(w0, w1, a0, a1), "{w0},{w1},{a0},{a1}");
+                    }
+                }
+            }
+        }
+    }
+}

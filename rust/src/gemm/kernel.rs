@@ -1,0 +1,174 @@
+//! Cache-blocked, panel-packed uint8 GEMM kernel.
+//!
+//! Computes the eq. 9 core `Σ_j q1(i,j)·q2(j,k)` as raw uint8 products with
+//! int32 accumulation, then applies the `O(M·N)` zero-point corrections of
+//! eq. 7 — exactly the structure gemmlowp uses so that "anything but the
+//! smallest values of N" pay no zero-point overhead (§2.3).
+//!
+//! Blocking: the K dimension is tiled so a packed LHS panel (`MR×KC`) and a
+//! packed RHS panel (`KC×NR` column-major-ish) stay in L1/L2; registers hold
+//! an `MR×NR` accumulator tile. Sizes are tuned for the single x86-64 core
+//! this testbed provides (see EXPERIMENTS.md §Perf for the measurements that
+//! picked them).
+
+use super::QGemm;
+
+/// Rows of LHS per register tile.
+const MR: usize = 8;
+/// Columns of RHS per register tile (16 i32 lanes = one AVX-512 register).
+const NR: usize = 16;
+/// K-dimension cache block.
+const KC: usize = 256;
+
+/// Blocked accumulation of eq. 7 into `acc` (row-major `M×N`).
+pub fn accumulate_blocked(g: &QGemm, lhs: &[u8], rhs: &[u8], acc: &mut [i32]) {
+    let (m, k, n) = (g.m, g.k, g.n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    acc.fill(0);
+
+    // Raw Σ q1·q2 with blocking over K.
+    let mut packed_rhs = vec![0u8; KC * n.div_ceil(NR) * NR];
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        // Pack the RHS panel so the micro-kernel reads it sequentially:
+        // layout [n0/NR][j][nr] — NR consecutive columns interleaved by j.
+        pack_rhs_panel(rhs, k0, kc, n, &mut packed_rhs);
+        for i0 in (0..m).step_by(MR) {
+            let mr = MR.min(m - i0);
+            for n0 in (0..n).step_by(NR) {
+                let nr = NR.min(n - n0);
+                micro_kernel(
+                    lhs, acc, i0, mr, k0, kc, k, n0, nr, n, &packed_rhs,
+                );
+            }
+        }
+    }
+
+    // O(M·N) zero-point corrections (eq. 7).
+    let rs = g.lhs_row_sums(lhs);
+    let cs = g.rhs_col_sums(rhs);
+    g.apply_zero_point_corrections(acc, &rs, &cs);
+}
+
+/// Pack `kc` rows of the RHS starting at row `k0` into `[ceil(n/NR)][kc][NR]`
+/// order (zero-padded in the tail column block).
+fn pack_rhs_panel(rhs: &[u8], k0: usize, kc: usize, n: usize, packed: &mut [u8]) {
+    let blocks = n.div_ceil(NR);
+    for b in 0..blocks {
+        let n0 = b * NR;
+        let nr = NR.min(n - n0);
+        let dst_base = b * kc * NR;
+        for j in 0..kc {
+            let src = &rhs[(k0 + j) * n + n0..(k0 + j) * n + n0 + nr];
+            let dst = &mut packed[dst_base + j * NR..dst_base + j * NR + NR];
+            dst[..nr].copy_from_slice(src);
+            dst[nr..].fill(0);
+        }
+    }
+}
+
+/// MR×NR register-tile micro-kernel over one K block, reading the packed RHS.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_kernel(
+    lhs: &[u8],
+    acc: &mut [i32],
+    i0: usize,
+    mr: usize,
+    k0: usize,
+    kc: usize,
+    k: usize,
+    n0: usize,
+    nr: usize,
+    n: usize,
+    packed_rhs: &[u8],
+) {
+    let block = n0 / NR;
+    let panel = &packed_rhs[block * kc * NR..(block + 1) * kc * NR];
+    // Local accumulator tile; NR-wide rows vectorize.
+    let mut tile = [[0i32; NR]; MR];
+    for (j, rhs_row) in panel.chunks_exact(NR).enumerate() {
+        for r in 0..mr {
+            let a = i32::from(lhs[(i0 + r) * k + k0 + j]);
+            let t = &mut tile[r];
+            for c in 0..NR {
+                t[c] += a * i32::from(rhs_row[c]);
+            }
+        }
+    }
+    for r in 0..mr {
+        let out = &mut acc[(i0 + r) * n + n0..(i0 + r) * n + n0 + nr];
+        for c in 0..nr {
+            out[c] += tile[r][c];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Kernel;
+
+    fn pseudo(seed: u64, n: usize) -> Vec<u8> {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (state >> 56) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn blocked_equals_reference_over_awkward_shapes() {
+        // Shapes chosen to hit every tail case: m % MR, n % NR, k % KC.
+        for (m, k, n) in [
+            (1, 1, 1),
+            (MR, KC, NR),
+            (MR + 1, KC + 1, NR + 1),
+            (MR - 1, 3, NR - 1),
+            (9, 300, 19),
+            (2, 513, 2),
+        ] {
+            let g = QGemm::new(m, k, n, 77, 201);
+            let lhs = pseudo(m as u64 * 31 + k as u64, m * k);
+            let rhs = pseudo(n as u64 * 17 + k as u64, k * n);
+            let mut want = vec![0i32; m * n];
+            let mut got = vec![0i32; m * n];
+            g.accumulate(Kernel::Reference, &lhs, &rhs, &mut want);
+            accumulate_blocked(&g, &lhs, &rhs, &mut got);
+            assert_eq!(want, got, "mismatch at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn packing_is_lossless() {
+        let n = 19; // not a multiple of NR
+        let k = 7;
+        let rhs = pseudo(3, k * n);
+        let mut packed = vec![0u8; k * n.div_ceil(NR) * NR];
+        pack_rhs_panel(&rhs, 0, k, n, &mut packed);
+        for j in 0..k {
+            for c in 0..n {
+                let block = c / NR;
+                let within = c % NR;
+                assert_eq!(packed[block * k * NR + j * NR + within], rhs[j * n + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn accumulators_never_overflow_for_max_k() {
+        // 255*255*K fits i32 for K up to ~33000; our largest layer K is
+        // far below. Sanity-check the extreme at K = 8192.
+        let (m, k, n) = (1, 8192, 1);
+        let g = QGemm::new(m, k, n, 0, 0);
+        let lhs = vec![255u8; k];
+        let rhs = vec![255u8; k];
+        let mut acc = vec![0i32; 1];
+        accumulate_blocked(&g, &lhs, &rhs, &mut acc);
+        assert_eq!(acc[0], 255 * 255 * k as i32);
+    }
+}

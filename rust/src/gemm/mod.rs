@@ -1,0 +1,323 @@
+//! Integer-arithmetic-only matrix multiplication (§2.2–2.4) — the Rust
+//! counterpart of gemmlowp's `GemmWithOutputPipeline`.
+//!
+//! The core computation is eq. 7: the product of two quantized matrices
+//! reduces to one uint8 integer GEMM accumulation `Σ_j q1·q2` (eq. 9, the
+//! only `O(M·N·K)` term) plus `O(M·N)` corrections built from row sums of
+//! the LHS and column sums of the RHS — the paper's "efficient handling of
+//! zero-points" (§2.3). The int32 accumulators then pass through the fused
+//! output pipeline (§2.4): int32 bias addition, fixed-point multiplication
+//! by the normalized multiplier `M = 2^-n·M0`, saturating cast to uint8 and
+//! the clamp that subsumes ReLU/ReLU6.
+//!
+//! Three interchangeable inner kernels compute eq. 9:
+//! * [`Kernel::Reference`] — the obviously-correct triple loop;
+//! * [`Kernel::Blocked`] — cache-blocked and panel-packed ([`kernel`]);
+//! * [`Kernel::Int8Pairwise`] — the App. B trick: operands recentred to
+//!   int8 (weights guaranteed in [−127,127] by training), two products
+//!   accumulated in an int16 before widening (SMULL/SMLAL/SADALP analogue).
+//!
+//! All kernels are bit-identical; tests enforce it.
+
+pub mod int8_trick;
+pub mod kernel;
+pub mod output;
+pub mod parallel;
+
+pub use output::OutputStage;
+
+use crate::quant::QuantizedMultiplier;
+
+/// Which inner kernel computes the eq. 9 accumulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Kernel {
+    /// Naive triple loop (correctness oracle).
+    Reference,
+    /// Cache-blocked, panel-packed u8 kernel. Default: with AVX-512 on this
+    /// host the widened MR×NR i32 tile out-runs the pairwise path (see
+    /// EXPERIMENTS.md §Perf for the measured iteration log).
+    #[default]
+    Blocked,
+    /// App. B int8 path with i16 pairwise accumulation — the faithful ARM
+    /// NEON (SMULL/SMLAL/SADALP) schedule.
+    Int8Pairwise,
+}
+
+/// Geometry and quantization of one quantized GEMM: `LHS (M×K) · RHS (K×N)`.
+///
+/// By §2.4 convention the LHS is the weights matrix (`Z1 = lhs_zero`) and
+/// the RHS is the activations matrix (`Z2 = rhs_zero`); the output carries
+/// `Z3 = out_zero` inside the [`OutputStage`].
+#[derive(Clone, Debug)]
+pub struct QGemm {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Zero-point of the LHS (weights), `Z1`.
+    pub lhs_zero: i32,
+    /// Zero-point of the RHS (activations), `Z2`.
+    pub rhs_zero: i32,
+}
+
+impl QGemm {
+    pub fn new(m: usize, k: usize, n: usize, lhs_zero: i32, rhs_zero: i32) -> Self {
+        assert!(
+            (0..=255).contains(&lhs_zero) && (0..=255).contains(&rhs_zero),
+            "zero points are quantized values (§2.1)"
+        );
+        Self { m, k, n, lhs_zero, rhs_zero }
+    }
+
+    /// Full quantized GEMM: eq. 7 + output pipeline, writing uint8 outputs.
+    ///
+    /// `lhs` is row-major `M×K`, `rhs` row-major `K×N`, `out` row-major
+    /// `M×N`.
+    pub fn run(&self, kern: Kernel, lhs: &[u8], rhs: &[u8], stage: &OutputStage, out: &mut [u8]) {
+        let mut acc = vec![0i32; self.m * self.n];
+        self.accumulate(kern, lhs, rhs, &mut acc);
+        stage.apply(&acc, self.m, self.n, out);
+    }
+
+    /// Compute the corrected int32 accumulators
+    /// `Σ_j (q1−Z1)(q2−Z2) = K·Z1·Z2 − Z1·a2 − Z2·ā1 + Σ_j q1·q2` (eq. 7)
+    /// without applying the output stage (used by bias-less fusions and by
+    /// tests).
+    pub fn accumulate(&self, kern: Kernel, lhs: &[u8], rhs: &[u8], acc: &mut [i32]) {
+        assert_eq!(lhs.len(), self.m * self.k, "lhs must be M*K");
+        assert_eq!(rhs.len(), self.k * self.n, "rhs must be K*N");
+        assert_eq!(acc.len(), self.m * self.n, "out must be M*N");
+        match kern {
+            Kernel::Reference => self.accumulate_reference(lhs, rhs, acc),
+            Kernel::Blocked => kernel::accumulate_blocked(self, lhs, rhs, acc),
+            Kernel::Int8Pairwise => int8_trick::accumulate_int8_pairwise(self, lhs, rhs, acc),
+        }
+    }
+
+    /// Reference implementation: direct evaluation of eq. 4, `2·M·N·K`
+    /// subtractions and all — the form §2.3 exists to avoid. Kept as the
+    /// correctness oracle for the optimized kernels.
+    fn accumulate_reference(&self, lhs: &[u8], rhs: &[u8], acc: &mut [i32]) {
+        for i in 0..self.m {
+            for col in 0..self.n {
+                let mut sum = 0i32;
+                for j in 0..self.k {
+                    let a = i32::from(lhs[i * self.k + j]) - self.lhs_zero;
+                    let b = i32::from(rhs[j * self.n + col]) - self.rhs_zero;
+                    sum += a * b;
+                }
+                acc[i * self.n + col] = sum;
+            }
+        }
+    }
+
+    /// Row sums `ā1(i) = Σ_j q1(i,j)` of the LHS (eq. 8). `O(M·K)`.
+    pub fn lhs_row_sums(&self, lhs: &[u8]) -> Vec<i32> {
+        let mut sums = vec![0i32; self.m];
+        for i in 0..self.m {
+            let row = &lhs[i * self.k..(i + 1) * self.k];
+            sums[i] = row.iter().map(|&v| i32::from(v)).sum();
+        }
+        sums
+    }
+
+    /// Column sums `a2(k) = Σ_j q2(j,k)` of the RHS (eq. 8). `O(K·N)`.
+    pub fn rhs_col_sums(&self, rhs: &[u8]) -> Vec<i32> {
+        let mut sums = vec![0i32; self.n];
+        for j in 0..self.k {
+            let row = &rhs[j * self.n..(j + 1) * self.n];
+            for (s, &v) in sums.iter_mut().zip(row) {
+                *s += i32::from(v);
+            }
+        }
+        sums
+    }
+
+    /// Apply the eq. 7 zero-point corrections to raw `Σ q1·q2` accumulators.
+    pub fn apply_zero_point_corrections(
+        &self,
+        raw: &mut [i32],
+        lhs_row_sums: &[i32],
+        rhs_col_sums: &[i32],
+    ) {
+        let kzz = self.k as i32 * self.lhs_zero * self.rhs_zero;
+        for i in 0..self.m {
+            let row_term = kzz - self.rhs_zero * lhs_row_sums[i];
+            let out_row = &mut raw[i * self.n..(i + 1) * self.n];
+            for (o, &cs) in out_row.iter_mut().zip(rhs_col_sums) {
+                *o += row_term - self.lhs_zero * cs;
+            }
+        }
+    }
+}
+
+/// Plain f32 GEMM, row-major `M×K · K×N` — the "Eigen" baseline the paper
+/// benchmarks float inference with (§4). Blocked the same way as the
+/// quantized kernel so the comparison is fair.
+pub fn gemm_f32(m: usize, k: usize, n: usize, lhs: &[f32], rhs: &[f32], out: &mut [f32]) {
+    assert_eq!(lhs.len(), m * k);
+    assert_eq!(rhs.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    // Loop order i-j-col keeps rhs row access contiguous and lets LLVM
+    // vectorize the inner axpy.
+    for i in 0..m {
+        let out_row = &mut out[i * n..(i + 1) * n];
+        for j in 0..k {
+            let a = lhs[i * k + j];
+            if a == 0.0 {
+                continue;
+            }
+            let rhs_row = &rhs[j * n..(j + 1) * n];
+            for (o, &b) in out_row.iter_mut().zip(rhs_row) {
+                *o += a * b;
+            }
+        }
+    }
+}
+
+/// Convenience: the requantization multiplier for a GEMM with the given
+/// input/weight/output scales (eq. 5 + 6).
+pub fn gemm_multiplier(s_weights: f64, s_input: f64, s_output: f64) -> QuantizedMultiplier {
+    crate::quant::quantize_multiplier(s_weights, s_input, s_output)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantParams;
+
+    fn pseudo(seed: u64, n: usize, lo: u8, hi: u8) -> Vec<u8> {
+        // Small deterministic LCG for test data.
+        let mut state = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let span = u64::from(hi) - u64::from(lo) + 1;
+                lo + ((state >> 33) % span) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_kernels_bit_identical() {
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (8, 16, 8), (13, 31, 17), (32, 64, 48)] {
+            let g = QGemm::new(m, k, n, 131, 119);
+            // Narrow-range lhs (weights never hit 0 → int8 never -128).
+            let lhs = pseudo(m as u64, m * k, 1, 255);
+            let rhs = pseudo(n as u64, k * n, 0, 255);
+            let mut a = vec![0i32; m * n];
+            let mut b = vec![0i32; m * n];
+            let mut c = vec![0i32; m * n];
+            g.accumulate(Kernel::Reference, &lhs, &rhs, &mut a);
+            g.accumulate(Kernel::Blocked, &lhs, &rhs, &mut b);
+            g.accumulate(Kernel::Int8Pairwise, &lhs, &rhs, &mut c);
+            assert_eq!(a, b, "blocked != reference at ({m},{k},{n})");
+            assert_eq!(a, c, "int8 != reference at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn zero_point_corrections_match_direct_form() {
+        // Eq. 7 == eq. 4: raw Σq1q2 + corrections must equal the direct
+        // subtract-then-multiply evaluation.
+        let (m, k, n) = (5, 9, 6);
+        let g = QGemm::new(m, k, n, 100, 50);
+        let lhs = pseudo(7, m * k, 0, 255);
+        let rhs = pseudo(9, k * n, 0, 255);
+        let mut direct = vec![0i32; m * n];
+        g.accumulate(Kernel::Reference, &lhs, &rhs, &mut direct);
+
+        // Raw uint8 products only (the eq. 9 core).
+        let mut raw = vec![0i32; m * n];
+        for i in 0..m {
+            for col in 0..n {
+                let mut s = 0i32;
+                for j in 0..k {
+                    s += i32::from(lhs[i * k + j]) * i32::from(rhs[j * n + col]);
+                }
+                raw[i * n + col] = s;
+            }
+        }
+        let rs = g.lhs_row_sums(&lhs);
+        let cs = g.rhs_col_sums(&rhs);
+        g.apply_zero_point_corrections(&mut raw, &rs, &cs);
+        assert_eq!(raw, direct);
+    }
+
+    #[test]
+    fn quantized_gemm_tracks_real_matmul() {
+        // End-to-end §2.2 semantics: dequantize(q3) ≈ r1 · r2 within the
+        // output scale's rounding error plus input quantization error.
+        let (m, k, n) = (4, 32, 4);
+        let lhs_p = QuantParams::from_min_max(-1.0, 1.0, 1, 255);
+        let rhs_p = QuantParams::from_min_max(-2.0, 2.0, 0, 255);
+        // Generous output range so M < 1.
+        let out_p = QuantParams::from_min_max(-40.0, 40.0, 0, 255);
+
+        let lhs_r: Vec<f32> = (0..m * k).map(|i| ((i * 37 % 101) as f32 / 50.0) - 1.0).collect();
+        let rhs_r: Vec<f32> = (0..k * n).map(|i| ((i * 53 % 89) as f32 / 22.0) - 2.0).collect();
+        let lhs_q: Vec<u8> = lhs_r.iter().map(|&v| lhs_p.quantize(v) as u8).collect();
+        let rhs_q: Vec<u8> = rhs_r.iter().map(|&v| rhs_p.quantize(v) as u8).collect();
+
+        let g = QGemm::new(m, k, n, lhs_p.zero_point, rhs_p.zero_point);
+        let stage = OutputStage {
+            bias: vec![],
+            multiplier: gemm_multiplier(lhs_p.scale, rhs_p.scale, out_p.scale),
+            out_zero: out_p.zero_point,
+            clamp_min: 0,
+            clamp_max: 255,
+        };
+        let mut out = vec![0u8; m * n];
+        g.run(Kernel::Int8Pairwise, &lhs_q, &rhs_q, &stage, &mut out);
+
+        // Real matmul of the *dequantized* inputs: the integer pipeline must
+        // reproduce it to within half an output LSB (plus fixed-point
+        // rounding slack).
+        for i in 0..m {
+            for col in 0..n {
+                let mut r = 0f64;
+                for j in 0..k {
+                    r += f64::from(lhs_p.dequantize(i32::from(lhs_q[i * k + j])))
+                        * f64::from(rhs_p.dequantize(i32::from(rhs_q[j * n + col])));
+                }
+                let got = f64::from(out_p.dequantize(i32::from(out[i * n + col])));
+                assert!(
+                    (got - r).abs() <= out_p.scale * 0.51 + 1e-6,
+                    "({i},{col}): got {got}, real {r}, scale {}",
+                    out_p.scale
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_gemm_matches_naive() {
+        let (m, k, n) = (7, 13, 9);
+        let lhs: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let rhs: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.53).cos()).collect();
+        let mut out = vec![0f32; m * n];
+        gemm_f32(m, k, n, &lhs, &rhs, &mut out);
+        for i in 0..m {
+            for col in 0..n {
+                let want: f32 = (0..k).map(|j| lhs[i * k + j] * rhs[j * n + col]).sum();
+                assert!((out[i * n + col] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn row_and_col_sums() {
+        let g = QGemm::new(2, 3, 2, 0, 0);
+        let lhs = vec![1u8, 2, 3, 4, 5, 6]; // rows [1,2,3],[4,5,6]
+        let rhs = vec![1u8, 10, 2, 20, 3, 30]; // rows [1,10],[2,20],[3,30]
+        assert_eq!(g.lhs_row_sums(&lhs), vec![6, 15]);
+        assert_eq!(g.rhs_col_sums(&rhs), vec![6, 60]);
+    }
+
+    #[test]
+    fn empty_dims_are_ok() {
+        let g = QGemm::new(0, 4, 0, 10, 10);
+        let mut acc: Vec<i32> = vec![];
+        g.accumulate(Kernel::Blocked, &[], &[], &mut acc);
+    }
+}

@@ -1,0 +1,200 @@
+//! The fused output pipeline of §2.4 — gemmlowp's `GemmWithOutputPipeline`.
+//!
+//! With the final int32 accumulator in hand, "there remain three things left
+//! to do: scale down to the final scale used by the 8-bit output activations,
+//! cast down to uint8 and apply the activation function":
+//!
+//! 1. **int32 bias addition** — the bias vector is quantized with
+//!    `S_bias = S1·S2` (the accumulator's scale) and `Z_bias = 0` (eq. 11),
+//!    so it adds directly onto the accumulator.
+//! 2. **Down-scale** — fixed-point multiplication by the normalized
+//!    multiplier `M0` plus a correctly-rounding right shift (eq. 6).
+//! 3. **Saturating cast + clamp** — saturate to `[0, 255]`, then clamp to
+//!    the activation's sub-interval. The paper notes trained models learn to
+//!    use the whole interval so the clamp usually degenerates into the
+//!    saturating cast itself.
+
+use crate::quant::QuantizedMultiplier;
+
+
+/// Fused bias + requantization + activation stage applied to the int32
+/// accumulators of one GEMM (rows = output channels).
+#[derive(Clone, Debug)]
+pub struct OutputStage {
+    /// Per-row (output-channel) int32 bias, already quantized per eq. 11.
+    /// Empty means no bias.
+    pub bias: Vec<i32>,
+    /// The normalized requantization multiplier `M = S1·S2/S3` (eq. 5–6).
+    pub multiplier: QuantizedMultiplier,
+    /// Output zero-point `Z3`.
+    pub out_zero: i32,
+    /// Fused activation clamp lower bound (quantized units).
+    pub clamp_min: u8,
+    /// Fused activation clamp upper bound (quantized units).
+    pub clamp_max: u8,
+}
+
+impl OutputStage {
+    /// Identity-ish stage used in tests: no bias, multiplier M, full clamp.
+    pub fn bare(multiplier: QuantizedMultiplier, out_zero: i32) -> Self {
+        Self { bias: vec![], multiplier, out_zero, clamp_min: 0, clamp_max: 255 }
+    }
+
+    /// Apply the pipeline to row-major `m×n` accumulators, writing uint8.
+    pub fn apply(&self, acc: &[i32], m: usize, n: usize, out: &mut [u8]) {
+        assert_eq!(acc.len(), m * n);
+        assert_eq!(out.len(), m * n);
+        assert!(self.bias.is_empty() || self.bias.len() == m, "bias is per output row");
+        assert!(self.clamp_min <= self.clamp_max);
+        for i in 0..m {
+            let b = if self.bias.is_empty() { 0 } else { self.bias[i] };
+            let src = &acc[i * n..(i + 1) * n];
+            let dst = &mut out[i * n..(i + 1) * n];
+            for (o, &a) in dst.iter_mut().zip(src) {
+                *o = self.requantize_one(a.wrapping_add(b));
+            }
+        }
+    }
+
+    /// Requantize a single biased accumulator value.
+    #[inline]
+    pub fn requantize_one(&self, acc: i32) -> u8 {
+        let scaled = self.multiplier.apply(acc);
+        let q = scaled.saturating_add(self.out_zero);
+        // Saturating cast to uint8, then the fused activation clamp.
+        (q.clamp(0, 255) as u8).clamp(self.clamp_min, self.clamp_max)
+    }
+
+    /// Apply to an i32 slice producing i32 requantized values without the
+    /// u8 cast — used by layers whose consumers need wider intermediate
+    /// values (e.g. the softmax input recentering).
+    pub fn requantize_i32(&self, acc: &[i32], m: usize, out: &mut [i32]) {
+        assert_eq!(acc.len(), out.len());
+        let n = if m == 0 { 0 } else { acc.len() / m };
+        for i in 0..m {
+            let b = if self.bias.is_empty() { 0 } else { self.bias[i] };
+            for idx in i * n..(i + 1) * n {
+                out[idx] = self.multiplier.apply(acc[idx].wrapping_add(b)).saturating_add(self.out_zero);
+            }
+        }
+    }
+}
+
+/// Clamp bounds for the fused activation functions the engine supports
+/// (§2.4 focuses on "mere clamps": ReLU, ReLU6, or none).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FusedActivation {
+    /// No activation: clamp is exactly the saturating uint8 cast.
+    #[default]
+    None,
+    /// max(0, x) in real space.
+    Relu,
+    /// min(6, max(0, x)) in real space.
+    Relu6,
+}
+
+impl FusedActivation {
+    /// The quantized clamp interval implementing this activation under the
+    /// output quantization `(scale, zero_point)`.
+    pub fn clamp_bounds(self, scale: f64, zero_point: i32) -> (u8, u8) {
+        match self {
+            FusedActivation::None => (0, 255),
+            FusedActivation::Relu => (zero_point.clamp(0, 255) as u8, 255),
+            FusedActivation::Relu6 => {
+                let hi = (f64::from(zero_point) + 6.0 / scale).round();
+                (zero_point.clamp(0, 255) as u8, hi.clamp(0.0, 255.0) as u8)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{QuantizedMultiplier, QuantParams};
+
+    #[test]
+    fn pipeline_matches_real_arithmetic() {
+        // acc of scale Sw*Si requantized to So must equal the real-number
+        // computation within 1 LSB.
+        let (sw, si, so) = (0.02, 0.05, 0.25);
+        let mult = QuantizedMultiplier::from_f64(sw * si / so);
+        let stage = OutputStage { bias: vec![100, -50], multiplier: mult, out_zero: 30, clamp_min: 0, clamp_max: 255 };
+        let acc = vec![10_000, -2_000, 1_000_000, 0, 123_456, -123_456];
+        let mut out = vec![0u8; 6];
+        stage.apply(&acc, 2, 3, &mut out);
+        for i in 0..2 {
+            for c in 0..3 {
+                let a = f64::from(acc[i * 3 + c] + stage.bias[i]);
+                let want = (a * (sw * si / so)).round() + 30.0;
+                let want = want.clamp(0.0, 255.0) as i64;
+                let got = i64::from(out[i * 3 + c]);
+                assert!((got - want).abs() <= 1, "i={i} c={c} got={got} want={want}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturating_cast_bounds() {
+        let stage = OutputStage::bare(QuantizedMultiplier::from_f64(0.9999), 0);
+        assert_eq!(stage.requantize_one(i32::MAX), 255);
+        assert_eq!(stage.requantize_one(i32::MIN), 0);
+    }
+
+    #[test]
+    fn relu6_clamp_bounds() {
+        // Output quantized with range [0, 6]: clamp should span the whole
+        // uint8 interval — the paper's "activation no longer does anything".
+        let p = QuantParams::from_min_max(0.0, 6.0, 0, 255);
+        let (lo, hi) = FusedActivation::Relu6.clamp_bounds(p.scale, p.zero_point);
+        assert_eq!(lo, 0);
+        assert_eq!(hi, 255);
+        // Wider output range [−3, 9]: clamp must cut at q(0) and q(6).
+        let p2 = QuantParams::from_min_max(-3.0, 9.0, 0, 255);
+        let (lo2, hi2) = FusedActivation::Relu6.clamp_bounds(p2.scale, p2.zero_point);
+        assert_eq!(i32::from(lo2), p2.zero_point);
+        assert_eq!(i32::from(hi2), p2.quantize(6.0));
+    }
+
+    #[test]
+    fn relu_clamp_is_zero_point() {
+        let p = QuantParams::from_min_max(-2.0, 2.0, 0, 255);
+        let (lo, hi) = FusedActivation::Relu.clamp_bounds(p.scale, p.zero_point);
+        assert_eq!(i32::from(lo), p.zero_point);
+        assert_eq!(hi, 255);
+    }
+
+    #[test]
+    fn bias_is_per_row() {
+        let stage = OutputStage {
+            bias: vec![1000, 0],
+            multiplier: QuantizedMultiplier::from_f64(0.01),
+            out_zero: 0,
+            clamp_min: 0,
+            clamp_max: 255,
+        };
+        let acc = vec![0, 0, 0, 0];
+        let mut out = vec![0u8; 4];
+        stage.apply(&acc, 2, 2, &mut out);
+        assert_eq!(out, vec![10, 10, 0, 0]);
+    }
+
+    #[test]
+    fn requantize_i32_matches_u8_path_in_range() {
+        let stage = OutputStage {
+            bias: vec![7],
+            multiplier: QuantizedMultiplier::from_f64(0.125),
+            out_zero: 5,
+            clamp_min: 0,
+            clamp_max: 255,
+        };
+        let acc = vec![100, 555, -40];
+        let mut wide = vec![0i32; 3];
+        stage.requantize_i32(&acc, 1, &mut wide);
+        let mut narrow = vec![0u8; 3];
+        stage.apply(&acc, 1, 3, &mut narrow);
+        for i in 0..3 {
+            assert_eq!(i32::from(narrow[i]), wide[i].clamp(0, 255));
+        }
+    }
+}

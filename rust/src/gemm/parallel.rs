@@ -1,0 +1,119 @@
+//! Multi-threaded quantized GEMM (paper §4.2.3, Table 4.6).
+//!
+//! The paper reports 1.5–2.2× speedups from running the face detector on
+//! 2 and 4 cores. gemmlowp parallelizes by splitting the *result* matrix;
+//! we split the RHS (activations) along N — each worker computes a disjoint
+//! column strip `LHS · RHS[:, n0..n1]` including its own output-pipeline
+//! application, so workers share only read-only inputs and never contend on
+//! writes. Workers are plain `std::thread::scope` threads (this offline
+//! build has no rayon; see DESIGN.md §Offline-substitutions). On this
+//! single-core testbed thread counts > 1 measure scheduling overhead;
+//! `sim::ArmCoreModel` provides the multi-core latency estimates for
+//! Table 4.6 (DESIGN.md §Hardware-Adaptation).
+
+use super::{output::OutputStage, Kernel, QGemm};
+
+/// Run the full quantized GEMM splitting the N dimension into `threads`
+/// strips, each computed on its own OS thread.
+pub fn run_parallel(
+    g: &QGemm,
+    kern: Kernel,
+    lhs: &[u8],
+    rhs: &[u8],
+    stage: &OutputStage,
+    out: &mut [u8],
+    threads: usize,
+) {
+    assert!(threads >= 1);
+    assert_eq!(out.len(), g.m * g.n);
+    if threads == 1 || g.n < 2 * threads {
+        g.run(kern, lhs, rhs, stage, out);
+        return;
+    }
+    let strip = g.n.div_ceil(threads);
+    let strips: Vec<(usize, usize)> = (0..threads)
+        .map(|t| (t * strip, ((t + 1) * strip).min(g.n)))
+        .filter(|(a, b)| a < b)
+        .collect();
+
+    let results: Vec<(usize, usize, Vec<u8>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = strips
+            .iter()
+            .map(|&(n0, n1)| {
+                scope.spawn(move || {
+                    let nn = n1 - n0;
+                    // Gather the RHS strip (rows stay K, columns n0..n1).
+                    let mut rhs_strip = vec![0u8; g.k * nn];
+                    for j in 0..g.k {
+                        rhs_strip[j * nn..(j + 1) * nn]
+                            .copy_from_slice(&rhs[j * g.n + n0..j * g.n + n1]);
+                    }
+                    let sub = QGemm { n: nn, ..g.clone() };
+                    let mut sub_out = vec![0u8; g.m * nn];
+                    sub.run(kern, lhs, &rhs_strip, stage, &mut sub_out);
+                    (n0, n1, sub_out)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
+    });
+
+    for (n0, n1, sub_out) in results {
+        let nn = n1 - n0;
+        for i in 0..g.m {
+            out[i * g.n + n0..i * g.n + n1].copy_from_slice(&sub_out[i * nn..(i + 1) * nn]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantizedMultiplier;
+
+    fn pseudo(seed: u64, n: usize) -> Vec<u8> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(17);
+                (s >> 56) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_matches_serial_for_all_thread_counts() {
+        let (m, k, n) = (6, 40, 37);
+        let g = QGemm::new(m, k, n, 120, 99);
+        let lhs = pseudo(5, m * k);
+        let rhs = pseudo(6, k * n);
+        let stage = OutputStage {
+            bias: (0..m as i32).map(|i| i * 100 - 200).collect(),
+            multiplier: QuantizedMultiplier::from_f64(0.003),
+            out_zero: 17,
+            clamp_min: 3,
+            clamp_max: 250,
+        };
+        let mut want = vec![0u8; m * n];
+        g.run(Kernel::Int8Pairwise, &lhs, &rhs, &stage, &mut want);
+        for threads in [1, 2, 3, 4, 8] {
+            let mut got = vec![0u8; m * n];
+            run_parallel(&g, Kernel::Int8Pairwise, &lhs, &rhs, &stage, &mut got, threads);
+            assert_eq!(want, got, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn degenerate_narrow_n_falls_back_to_serial() {
+        let (m, k, n) = (4, 16, 3);
+        let g = QGemm::new(m, k, n, 0, 0);
+        let lhs = pseudo(1, m * k);
+        let rhs = pseudo(2, k * n);
+        let stage = OutputStage::bare(QuantizedMultiplier::from_f64(0.01), 0);
+        let mut a = vec![0u8; m * n];
+        let mut b = vec![0u8; m * n];
+        g.run(Kernel::Blocked, &lhs, &rhs, &stage, &mut a);
+        run_parallel(&g, Kernel::Blocked, &lhs, &rhs, &stage, &mut b, 4);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,448 @@
+//! Model builders for every architecture the experiments need.
+//!
+//! * [`mobilenet`] — MobileNet v1 with depth multiplier and resolution knobs
+//!   (the paper's §4.2.1 sweep axes).
+//! * [`mini_resnet`] — `6n+2`-layer CIFAR-style ResNet (Table 4.1's depth
+//!   sweep, scaled to this testbed).
+//! * [`papernet`] / [`papernet_random`] — the small QAT ConvNet whose JAX
+//!   twin lives in `python/compile/model.py`; [`papernet`] instantiates it
+//!   from trained parameters exported by the L2 side.
+//! * [`ssd_lite`] — detection backbone + separable prediction head
+//!   (§4.2.2's "replace SSD convs with separable convolutions").
+//! * [`attribute_net`] — the face-attributes stand-in (§4.2.4).
+//!
+//! All builders emit conv→BN→activation triples so the PTQ pipeline
+//! exercises batch-norm folding (eq. 14) exactly as the paper describes.
+
+use std::collections::HashMap;
+
+use crate::data::Rng;
+use crate::graph::{BatchNorm, FloatGraph, FloatOp, NodeRef};
+use crate::nn::conv::Conv2d;
+use crate::nn::depthwise::DepthwiseConv2d;
+use crate::nn::fc::FullyConnected;
+use crate::nn::{FusedActivation, Padding};
+use crate::tensor::Tensor;
+
+/// Named parameter collection (the interchange with the Python L2 side).
+pub type ParamMap = HashMap<String, Tensor<f32>>;
+
+fn he_conv(rng: &mut Rng, cout: usize, kh: usize, kw: usize, cin: usize) -> Tensor<f32> {
+    let fan_in = (kh * kw * cin) as f32;
+    let std = (2.0 / fan_in).sqrt();
+    let mut w = vec![0f32; cout * kh * kw * cin];
+    rng.fill_normal(&mut w, std);
+    Tensor::from_vec(&[cout, kh, kw, cin], w)
+}
+
+fn he_dw(rng: &mut Rng, kh: usize, kw: usize, c: usize) -> Tensor<f32> {
+    let std = (2.0 / (kh * kw) as f32).sqrt();
+    let mut w = vec![0f32; kh * kw * c];
+    rng.fill_normal(&mut w, std);
+    Tensor::from_vec(&[1, kh, kw, c], w)
+}
+
+fn fresh_bn(rng: &mut Rng, c: usize) -> BatchNorm {
+    // Mildly randomized BN statistics so folding is non-trivial in tests.
+    BatchNorm {
+        gamma: (0..c).map(|_| rng.range_f32(0.8, 1.2)).collect(),
+        beta: (0..c).map(|_| rng.range_f32(-0.1, 0.1)).collect(),
+        mean: (0..c).map(|_| rng.range_f32(-0.05, 0.05)).collect(),
+        var: (0..c).map(|_| rng.range_f32(0.8, 1.2)).collect(),
+        eps: 1e-3,
+    }
+}
+
+/// conv → BN → activation triple.
+fn conv_bn(
+    g: &mut FloatGraph,
+    rng: &mut Rng,
+    name: &str,
+    input: NodeRef,
+    cout: usize,
+    k: usize,
+    cin: usize,
+    stride: usize,
+    act: FusedActivation,
+) -> NodeRef {
+    let conv = Conv2d {
+        weights: he_conv(rng, cout, k, k, cin),
+        bias: vec![],
+        stride,
+        padding: Padding::Same,
+        activation: FusedActivation::None,
+    };
+    let c = g.push(format!("{name}/conv"), input, FloatOp::Conv(conv));
+    let b = g.push(format!("{name}/bn"), c, FloatOp::BatchNorm(fresh_bn(rng, cout)));
+    match act {
+        FusedActivation::None => b,
+        FusedActivation::Relu => g.push(format!("{name}/relu"), b, FloatOp::Relu),
+        FusedActivation::Relu6 => g.push(format!("{name}/relu6"), b, FloatOp::Relu6),
+    }
+}
+
+/// depthwise → BN → activation triple.
+fn dw_bn(
+    g: &mut FloatGraph,
+    rng: &mut Rng,
+    name: &str,
+    input: NodeRef,
+    c: usize,
+    stride: usize,
+    act: FusedActivation,
+) -> NodeRef {
+    let dw = DepthwiseConv2d {
+        weights: he_dw(rng, 3, 3, c),
+        bias: vec![],
+        stride,
+        padding: Padding::Same,
+        activation: FusedActivation::None,
+    };
+    let d = g.push(format!("{name}/dw"), input, FloatOp::Depthwise(dw));
+    let b = g.push(format!("{name}/bn"), d, FloatOp::BatchNorm(fresh_bn(rng, c)));
+    match act {
+        FusedActivation::None => b,
+        FusedActivation::Relu => g.push(format!("{name}/relu"), b, FloatOp::Relu),
+        FusedActivation::Relu6 => g.push(format!("{name}/relu6"), b, FloatOp::Relu6),
+    }
+}
+
+fn scale_channels(c: usize, dm: f64) -> usize {
+    (((c as f64 * dm / 8.0).round() as usize) * 8).max(8)
+}
+
+/// MobileNet v1 (§4.2.1): depth multiplier `dm` scales every channel count;
+/// spatial resolution is a property of the input fed to it. `with_softmax`
+/// appends the classifier softmax (off for latency benches so logits are
+/// the output, matching the paper's timing of the network body).
+pub fn mobilenet(dm: f64, num_classes: usize, with_softmax: bool, seed: u64) -> FloatGraph {
+    let mut rng = Rng::seeded(seed ^ 0x0b11e7);
+    let mut g = FloatGraph::default();
+    let act = FusedActivation::Relu6;
+    // (pointwise output channels, depthwise stride) per v1 block.
+    let blocks: [(usize, usize); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    let c0 = scale_channels(32, dm);
+    let mut cur = conv_bn(&mut g, &mut rng, "stem", NodeRef::Input, c0, 3, 3, 2, act);
+    let mut cin = c0;
+    for (i, (cout_base, stride)) in blocks.iter().enumerate() {
+        let cout = scale_channels(*cout_base, dm);
+        cur = dw_bn(&mut g, &mut rng, &format!("block{i}"), cur, cin, *stride, act);
+        cur = conv_bn(&mut g, &mut rng, &format!("block{i}/pw"), cur, cout, 1, cin, 1, act);
+        cin = cout;
+    }
+    cur = g.push("gap", cur, FloatOp::GlobalAvgPool);
+    let fc = FullyConnected {
+        weights: {
+            let std = (2.0 / cin as f32).sqrt();
+            let mut w = vec![0f32; num_classes * cin];
+            rng.fill_normal(&mut w, std);
+            Tensor::from_vec(&[num_classes, cin], w)
+        },
+        bias: vec![0.0; num_classes],
+        activation: FusedActivation::None,
+    };
+    cur = g.push("logits", cur, FloatOp::Fc(fc));
+    if with_softmax {
+        g.push("softmax", cur, FloatOp::Softmax);
+    }
+    g
+}
+
+/// CIFAR-style ResNet of depth `6n + 2` (Table 4.1's sweep, laptop scale):
+/// stem conv, then 3 stages of `n` residual blocks with channels
+/// (16, 32, 64), stride-2 downsampling (with 1×1 projection) entering
+/// stages 2 and 3, global pool and an FC classifier.
+pub fn mini_resnet(n: usize, num_classes: usize, seed: u64) -> FloatGraph {
+    assert!(n >= 1);
+    let mut rng = Rng::seeded(seed ^ 0x2e5);
+    let mut g = FloatGraph::default();
+    let act = FusedActivation::Relu;
+    let mut cur = conv_bn(&mut g, &mut rng, "stem", NodeRef::Input, 16, 3, 3, 1, act);
+    let mut cin = 16;
+    for (stage, &c) in [16usize, 32, 64].iter().enumerate() {
+        for block in 0..n {
+            let stride = if stage > 0 && block == 0 { 2 } else { 1 };
+            let name = format!("s{stage}b{block}");
+            // Main branch: conv-bn-relu, conv-bn.
+            let h = conv_bn(&mut g, &mut rng, &format!("{name}/c1"), cur, c, 3, cin, stride, act);
+            let h2 = conv_bn(&mut g, &mut rng, &format!("{name}/c2"), h, c, 3, c, 1, FusedActivation::None);
+            // Skip branch: identity, or 1x1 stride-2 projection when the
+            // shape changes.
+            let skip = if stride != 1 || cin != c {
+                conv_bn(&mut g, &mut rng, &format!("{name}/proj"), cur, c, 1, cin, stride, FusedActivation::None)
+            } else {
+                cur
+            };
+            let sum = g.push(format!("{name}/add"), h2, FloatOp::Add(skip));
+            cur = g.push(format!("{name}/relu"), sum, FloatOp::Relu);
+            cin = c;
+        }
+    }
+    cur = g.push("gap", cur, FloatOp::GlobalAvgPool);
+    let fc = FullyConnected {
+        weights: {
+            let mut w = vec![0f32; num_classes * cin];
+            rng.fill_normal(&mut w, (2.0 / cin as f32).sqrt());
+            Tensor::from_vec(&[num_classes, cin], w)
+        },
+        bias: vec![0.0; num_classes],
+        activation: FusedActivation::None,
+    };
+    g.push("logits", cur, FloatOp::Fc(fc));
+    g
+}
+
+/// The depth of a [`mini_resnet`] in the paper's counting (6n + 2).
+pub fn mini_resnet_depth(n: usize) -> usize {
+    6 * n + 2
+}
+
+/// PaperNet: the exact architecture of the JAX QAT model
+/// (`python/compile/model.py::PAPERNET`). Layer names and shapes must stay
+/// in lock-step with the Python side; `tests/parity.rs` enforces it through
+/// the AOT artifacts.
+///
+/// conv0 3×3 s1 c8 → dw1 s2 → pw1 c16 → dw2 s2 → pw2 c32 → GAP → FC.
+/// `act` is ReLU6 in the default configuration (Table 4.3 sweeps ReLU too).
+pub fn papernet_random(num_classes: usize, act: FusedActivation, seed: u64) -> FloatGraph {
+    let mut rng = Rng::seeded(seed ^ 0x9a9e2);
+    let mut g = FloatGraph::default();
+    let mut cur = conv_bn(&mut g, &mut rng, "conv0", NodeRef::Input, 8, 3, 3, 1, act);
+    cur = dw_bn(&mut g, &mut rng, "dw1", cur, 8, 2, act);
+    cur = conv_bn(&mut g, &mut rng, "pw1", cur, 16, 1, 8, 1, act);
+    cur = dw_bn(&mut g, &mut rng, "dw2", cur, 16, 2, act);
+    cur = conv_bn(&mut g, &mut rng, "pw2", cur, 32, 1, 16, 1, act);
+    cur = g.push("gap", cur, FloatOp::GlobalAvgPool);
+    let fc = FullyConnected {
+        weights: {
+            let mut w = vec![0f32; num_classes * 32];
+            rng.fill_normal(&mut w, 0.25);
+            Tensor::from_vec(&[num_classes, 32], w)
+        },
+        bias: vec![0.0; num_classes],
+        activation: FusedActivation::None,
+    };
+    g.push("logits", cur, FloatOp::Fc(fc));
+    g
+}
+
+/// PaperNet from *folded* trained parameters exported by the L2 side
+/// (`aot.py` exports `<layer>/w` and `<layer>/b` with BN already folded per
+/// eq. 14, which is exactly what inference needs — fig. C.6).
+pub fn papernet(params: &ParamMap, num_classes: usize, act: FusedActivation) -> FloatGraph {
+    let mut g = FloatGraph::default();
+    let get = |name: &str| -> Tensor<f32> {
+        params.get(name).unwrap_or_else(|| panic!("missing param {name}")).clone()
+    };
+    let bias_of = |name: &str| -> Vec<f32> { get(name).into_data() };
+
+    let conv = |g: &mut FloatGraph, name: &str, input, stride| -> NodeRef {
+        let c = Conv2d {
+            weights: get(&format!("{name}/w")),
+            bias: bias_of(&format!("{name}/b")),
+            stride,
+            padding: Padding::Same,
+            activation: act,
+        };
+        g.push(name, input, FloatOp::Conv(c))
+    };
+    let dw = |g: &mut FloatGraph, name: &str, input, stride| -> NodeRef {
+        let d = DepthwiseConv2d {
+            weights: get(&format!("{name}/w")),
+            bias: bias_of(&format!("{name}/b")),
+            stride,
+            padding: Padding::Same,
+            activation: act,
+        };
+        g.push(name, input, FloatOp::Depthwise(d))
+    };
+
+    let mut cur = conv(&mut g, "conv0", NodeRef::Input, 1);
+    cur = dw(&mut g, "dw1", cur, 2);
+    cur = conv(&mut g, "pw1", cur, 1);
+    cur = dw(&mut g, "dw2", cur, 2);
+    cur = conv(&mut g, "pw2", cur, 1);
+    cur = g.push("gap", cur, FloatOp::GlobalAvgPool);
+    let fc = FullyConnected {
+        weights: {
+            let w = get("fc/w");
+            assert_eq!(w.dim(0), num_classes);
+            w
+        },
+        bias: bias_of("fc/b"),
+        activation: FusedActivation::None,
+    };
+    g.push("logits", cur, FloatOp::Fc(fc));
+    g
+}
+
+/// SSD-lite detector (§4.2.2): small separable backbone, three stride-2
+/// reductions (res/8 grid), then a *separable* prediction head emitting
+/// `5 + num_classes` channels per cell — the paper's replacement of the
+/// regular SSD convs with depthwise + 1×1 projections.
+pub fn ssd_lite(dm: f64, num_classes: usize, seed: u64) -> FloatGraph {
+    let mut rng = Rng::seeded(seed ^ 0x55d);
+    let act = FusedActivation::Relu6;
+    let mut g = FloatGraph::default();
+    let c1 = scale_channels(16, dm);
+    let c2 = scale_channels(32, dm);
+    let c3 = scale_channels(64, dm);
+    let mut cur = conv_bn(&mut g, &mut rng, "stem", NodeRef::Input, c1, 3, 3, 2, act);
+    cur = dw_bn(&mut g, &mut rng, "b1", cur, c1, 2, act);
+    cur = conv_bn(&mut g, &mut rng, "b1/pw", cur, c2, 1, c1, 1, act);
+    cur = dw_bn(&mut g, &mut rng, "b2", cur, c2, 2, act);
+    cur = conv_bn(&mut g, &mut rng, "b2/pw", cur, c3, 1, c2, 1, act);
+    // Separable prediction head: dw3x3 + 1x1 projection, no activation.
+    cur = dw_bn(&mut g, &mut rng, "head", cur, c3, 1, act);
+    let out_ch = 5 + num_classes;
+    let proj = Conv2d {
+        weights: he_conv(&mut rng, out_ch, 1, 1, c3),
+        bias: vec![0.0; out_ch],
+        stride: 1,
+        padding: Padding::Same,
+        activation: FusedActivation::None,
+    };
+    g.push("head/proj", cur, FloatOp::Conv(proj));
+    g
+}
+
+/// Face-attributes stand-in network (§4.2.4): tiny separable ConvNet with a
+/// `NUM_ATTRIBUTES + 1` logit head (binary attributes + the "age" scalar).
+pub fn attribute_net(dm: f64, num_outputs: usize, seed: u64) -> FloatGraph {
+    let mut rng = Rng::seeded(seed ^ 0xa77);
+    let act = FusedActivation::Relu6;
+    let mut g = FloatGraph::default();
+    let c1 = scale_channels(8, dm);
+    let c2 = scale_channels(16, dm);
+    let mut cur = conv_bn(&mut g, &mut rng, "stem", NodeRef::Input, c1, 3, 3, 2, act);
+    cur = dw_bn(&mut g, &mut rng, "b1", cur, c1, 2, act);
+    cur = conv_bn(&mut g, &mut rng, "b1/pw", cur, c2, 1, c1, 1, act);
+    cur = g.push("gap", cur, FloatOp::GlobalAvgPool);
+    let fc = FullyConnected {
+        weights: {
+            let mut w = vec![0f32; num_outputs * c2];
+            rng.fill_normal(&mut w, (2.0 / c2 as f32).sqrt());
+            Tensor::from_vec(&[num_outputs, c2], w)
+        },
+        bias: vec![0.0; num_outputs],
+        activation: FusedActivation::None,
+    };
+    g.push("logits", cur, FloatOp::Fc(fc));
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobilenet_shapes_and_scaling() {
+        for (dm, res) in [(0.25, 32), (0.5, 32), (1.0, 64)] {
+            let g = mobilenet(dm, 16, true, 1);
+            let x = Tensor::zeros(&[1, res, res, 3]);
+            let y = g.run(&x);
+            assert_eq!(y.shape(), &[1, 16], "dm={dm} res={res}");
+        }
+        // Depth multiplier shrinks the model roughly quadratically.
+        let big = mobilenet(1.0, 16, false, 1).model_bytes();
+        let small = mobilenet(0.25, 16, false, 1).model_bytes();
+        assert!(big > small * 8, "dm=1.0 ({big}B) vs dm=0.25 ({small}B)");
+    }
+
+    #[test]
+    fn mobilenet_macs_scale_with_resolution() {
+        let g = mobilenet(0.25, 16, false, 1);
+        let m32 = g.mac_count(&[1, 32, 32, 3]);
+        let m64 = g.mac_count(&[1, 64, 64, 3]);
+        assert!(m64 > 3 * m32, "macs m32={m32} m64={m64}");
+    }
+
+    #[test]
+    fn mini_resnet_depths() {
+        assert_eq!(mini_resnet_depth(1), 8);
+        assert_eq!(mini_resnet_depth(2), 14);
+        assert_eq!(mini_resnet_depth(3), 20);
+        for n in [1, 2] {
+            let g = mini_resnet(n, 16, 7);
+            let y = g.run(&Tensor::zeros(&[1, 16, 16, 3]));
+            assert_eq!(y.shape(), &[1, 16], "n={n}");
+        }
+    }
+
+    #[test]
+    fn mini_resnet_fold_preserves_function() {
+        let g = mini_resnet(1, 8, 3);
+        let folded = g.fold_batch_norms();
+        let mut rng = crate::data::Rng::seeded(1);
+        let mut xd = vec![0f32; 16 * 16 * 3];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let x = Tensor::from_vec(&[1, 16, 16, 3], xd);
+        let d = g.run(&x).max_abs_diff(&folded.run(&x));
+        assert!(d < 1e-4, "fold diff {d}");
+    }
+
+    #[test]
+    fn papernet_variants_agree_on_shape() {
+        let g = papernet_random(16, FusedActivation::Relu6, 5);
+        let y = g.run(&Tensor::zeros(&[2, 16, 16, 3]));
+        assert_eq!(y.shape(), &[2, 16]);
+    }
+
+    #[test]
+    fn papernet_from_params_runs() {
+        // Build a parameter map with the expected names/shapes and check the
+        // graph assembles and runs.
+        let mut params = ParamMap::new();
+        let mut rng = Rng::seeded(11);
+        let mut add = |name: &str, shape: &[usize]| {
+            let mut w = vec![0f32; shape.iter().product()];
+            rng.fill_normal(&mut w, 0.2);
+            params.insert(name.to_string(), Tensor::from_vec(shape, w));
+        };
+        add("conv0/w", &[8, 3, 3, 3]);
+        add("conv0/b", &[8]);
+        add("dw1/w", &[1, 3, 3, 8]);
+        add("dw1/b", &[8]);
+        add("pw1/w", &[16, 1, 1, 8]);
+        add("pw1/b", &[16]);
+        add("dw2/w", &[1, 3, 3, 16]);
+        add("dw2/b", &[16]);
+        add("pw2/w", &[32, 1, 1, 16]);
+        add("pw2/b", &[32]);
+        add("fc/w", &[16, 32]);
+        add("fc/b", &[16]);
+        let g = papernet(&params, 16, FusedActivation::Relu6);
+        let y = g.run(&Tensor::zeros(&[1, 16, 16, 3]));
+        assert_eq!(y.shape(), &[1, 16]);
+    }
+
+    #[test]
+    fn ssd_lite_grid_output() {
+        let g = ssd_lite(0.5, 3, 9);
+        let y = g.run(&Tensor::zeros(&[1, 32, 32, 3]));
+        assert_eq!(y.shape(), &[1, 4, 4, 8]); // 32/8 grid, 5+3 channels
+    }
+
+    #[test]
+    fn attribute_net_output() {
+        let g = attribute_net(1.0, 5, 2);
+        let y = g.run(&Tensor::zeros(&[2, 16, 16, 3]));
+        assert_eq!(y.shape(), &[2, 5]);
+    }
+}

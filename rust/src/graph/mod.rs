@@ -1,0 +1,515 @@
+//! Model graphs: a float training/eval graph, its integer-only quantized
+//! counterpart, batch-norm folding (eq. 14), and the model builders used by
+//! the experiments (MobileNet, mini-ResNet, the QAT ConvNet mirror, and the
+//! SSD-lite detection head).
+//!
+//! Graphs are DAGs in topological order: node `i` may read the graph input
+//! or any node `j < i` (general enough for ResNet bypasses and SSD
+//! multi-head outputs, which is all the paper needs — see figs. C.3/C.4).
+
+pub mod builders;
+
+use crate::nn::activations::{logistic_f32, qlogistic, qsoftmax, softmax_f32};
+use crate::nn::conv::{Conv2d, QConv2d};
+use crate::nn::depthwise::{DepthwiseConv2d, QDepthwiseConv2d};
+use crate::nn::elementwise::{add_f32, concat_f32, qadd, qconcat};
+use crate::nn::fc::{FullyConnected, QFullyConnected};
+use crate::nn::pool::{
+    avg_pool_f32, global_avg_pool_f32, max_pool_f32, qavg_pool, qglobal_avg_pool, qmax_pool,
+};
+use crate::nn::{Padding, QTensor};
+use crate::quant::QuantParams;
+use crate::tensor::Tensor;
+
+/// Reference to a node's data source.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeRef {
+    /// The graph input tensor.
+    Input,
+    /// The output of an earlier node.
+    Node(usize),
+}
+
+/// Batch normalization (training-graph form; folded away for inference per
+/// §3.2 eq. 14).
+#[derive(Clone, Debug)]
+pub struct BatchNorm {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    /// `EMA(μ_B)` — moving-average mean.
+    pub mean: Vec<f32>,
+    /// `EMA(σ²_B)` — moving-average variance.
+    pub var: Vec<f32>,
+    pub eps: f32,
+}
+
+impl BatchNorm {
+    pub fn run(&self, x: &Tensor<f32>) -> Tensor<f32> {
+        let c = *x.shape().last().unwrap();
+        assert_eq!(self.gamma.len(), c);
+        let mut out = x.clone();
+        let lead = x.len() / c;
+        let od = out.data_mut();
+        for i in 0..lead {
+            for ch in 0..c {
+                let v = od[i * c + ch];
+                od[i * c + ch] = self.gamma[ch] * (v - self.mean[ch])
+                    / (self.var[ch] + self.eps).sqrt()
+                    + self.beta[ch];
+            }
+        }
+        out
+    }
+
+    /// Per-channel folding factors `γ / sqrt(EMA(σ²) + ε)` (eq. 14).
+    pub fn fold_scales(&self) -> Vec<f32> {
+        self.gamma
+            .iter()
+            .zip(&self.var)
+            .map(|(g, v)| g / (v + self.eps).sqrt())
+            .collect()
+    }
+
+    /// Folded bias `β − scale · EMA(μ)` to add to the conv bias.
+    pub fn fold_biases(&self) -> Vec<f32> {
+        self.fold_scales()
+            .iter()
+            .zip(self.beta.iter().zip(&self.mean))
+            .map(|(s, (b, m))| b - s * m)
+            .collect()
+    }
+}
+
+/// Float-graph operations.
+#[derive(Clone, Debug)]
+pub enum FloatOp {
+    Conv(Conv2d),
+    Depthwise(DepthwiseConv2d),
+    Fc(FullyConnected),
+    BatchNorm(BatchNorm),
+    AvgPool { kernel: usize, stride: usize, padding: Padding },
+    MaxPool { kernel: usize, stride: usize, padding: Padding },
+    GlobalAvgPool,
+    Add(NodeRef),
+    Concat(Vec<NodeRef>),
+    Softmax,
+    Logistic,
+    Relu,
+    Relu6,
+}
+
+/// One node of the float graph.
+#[derive(Clone, Debug)]
+pub struct FloatNode {
+    pub name: String,
+    pub input: NodeRef,
+    pub op: FloatOp,
+}
+
+/// A float model: the paper's baseline inference path and the source for
+/// post-training quantization.
+#[derive(Clone, Debug, Default)]
+pub struct FloatGraph {
+    pub nodes: Vec<FloatNode>,
+}
+
+impl FloatGraph {
+    pub fn push(&mut self, name: impl Into<String>, input: NodeRef, op: FloatOp) -> NodeRef {
+        self.nodes.push(FloatNode { name: name.into(), input, op });
+        NodeRef::Node(self.nodes.len() - 1)
+    }
+
+    /// Execute, returning every node's output (used by calibration).
+    pub fn run_all(&self, input: &Tensor<f32>) -> Vec<Tensor<f32>> {
+        let mut outs: Vec<Tensor<f32>> = Vec::with_capacity(self.nodes.len());
+        let fetch = |outs: &Vec<Tensor<f32>>, r: NodeRef| -> Tensor<f32> {
+            match r {
+                NodeRef::Input => input.clone(),
+                NodeRef::Node(i) => outs[i].clone(),
+            }
+        };
+        for node in &self.nodes {
+            let x = fetch(&outs, node.input);
+            let y = match &node.op {
+                FloatOp::Conv(op) => op.run(&x),
+                FloatOp::Depthwise(op) => op.run(&x),
+                FloatOp::Fc(op) => op.run(&x),
+                FloatOp::BatchNorm(op) => op.run(&x),
+                FloatOp::AvgPool { kernel, stride, padding } => avg_pool_f32(&x, *kernel, *stride, *padding),
+                FloatOp::MaxPool { kernel, stride, padding } => max_pool_f32(&x, *kernel, *stride, *padding),
+                FloatOp::GlobalAvgPool => global_avg_pool_f32(&x),
+                FloatOp::Add(other) => add_f32(&x, &fetch(&outs, *other)),
+                FloatOp::Concat(others) => {
+                    let rest: Vec<Tensor<f32>> = others.iter().map(|r| fetch(&outs, *r)).collect();
+                    let mut all: Vec<&Tensor<f32>> = vec![&x];
+                    all.extend(rest.iter());
+                    concat_f32(&all)
+                }
+                FloatOp::Softmax => softmax_f32(&x),
+                FloatOp::Logistic => logistic_f32(&x),
+                FloatOp::Relu => x.map(|v| v.max(0.0)),
+                FloatOp::Relu6 => x.map(|v| v.clamp(0.0, 6.0)),
+            };
+            outs.push(y);
+        }
+        outs
+    }
+
+    /// Execute and return the final node's output.
+    pub fn run(&self, input: &Tensor<f32>) -> Tensor<f32> {
+        self.run_all(input).pop().expect("empty graph")
+    }
+
+    /// Fold every BatchNorm node into the preceding Conv/Depthwise (eq. 14),
+    /// returning an equivalent graph without BN nodes — §3.2's inference
+    /// transformation (figs. C.5 → C.6).
+    ///
+    /// Requires each BN to directly follow its conv (the builders guarantee
+    /// this). Node indices shift; all `NodeRef`s are remapped.
+    pub fn fold_batch_norms(&self) -> FloatGraph {
+        // old index -> new index (after removals), where a BN maps to its
+        // producer's new index.
+        let mut remap: Vec<usize> = Vec::with_capacity(self.nodes.len());
+        let mut out = FloatGraph::default();
+        for (idx, node) in self.nodes.iter().enumerate() {
+            match &node.op {
+                FloatOp::BatchNorm(bn) => {
+                    let NodeRef::Node(prev_old) = node.input else {
+                        panic!("BatchNorm cannot be the first node");
+                    };
+                    let prev_new = remap[prev_old];
+                    let scales = bn.fold_scales();
+                    let extra = bn.fold_biases();
+                    match &mut out.nodes[prev_new].op {
+                        FloatOp::Conv(conv) => fold_into_conv(conv, &scales, &extra),
+                        FloatOp::Depthwise(dw) => fold_into_depthwise(dw, &scales, &extra),
+                        other => panic!("BatchNorm must follow Conv/Depthwise, found {other:?}"),
+                    }
+                    remap.push(prev_new);
+                    debug_assert_eq!(remap.len(), idx + 1);
+                }
+                _ => {
+                    let mut node = node.clone();
+                    let fix = |r: NodeRef| match r {
+                        NodeRef::Input => NodeRef::Input,
+                        NodeRef::Node(i) => NodeRef::Node(remap[i]),
+                    };
+                    node.input = fix(node.input);
+                    match &mut node.op {
+                        FloatOp::Add(o) => *o = fix(*o),
+                        FloatOp::Concat(os) => {
+                            for o in os.iter_mut() {
+                                *o = fix(*o);
+                            }
+                        }
+                        _ => {}
+                    }
+                    out.nodes.push(node);
+                    remap.push(out.nodes.len() - 1);
+                }
+            }
+        }
+        out
+    }
+
+    /// Total weight bytes of the float model (f32 weights + biases).
+    pub fn model_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                FloatOp::Conv(c) => 4 * (c.weights.len() + c.bias.len()),
+                FloatOp::Depthwise(d) => 4 * (d.weights.len() + d.bias.len()),
+                FloatOp::Fc(f) => 4 * (f.weights.len() + f.bias.len()),
+                FloatOp::BatchNorm(b) => 4 * 4 * b.gamma.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Multiply-accumulate count for one inference at the given input shape
+    /// (drives the ARM core cost model in [`crate::sim`]).
+    pub fn mac_count(&self, input_shape: &[usize]) -> u64 {
+        let probe = Tensor::<f32>::zeros(input_shape);
+        let outs = self.run_all(&probe);
+        let mut macs = 0u64;
+        for (i, node) in self.nodes.iter().enumerate() {
+            let out_shape = outs[i].shape();
+            let out_elems: u64 = out_shape.iter().product::<usize>() as u64;
+            macs += match &node.op {
+                FloatOp::Conv(c) => {
+                    let k = (c.weights.len() / c.weights.dim(0)) as u64;
+                    out_elems * k
+                }
+                FloatOp::Depthwise(d) => {
+                    let taps = (d.weights.dim(1) * d.weights.dim(2)) as u64;
+                    out_elems * taps
+                }
+                FloatOp::Fc(f) => out_elems * f.weights.dim(1) as u64,
+                FloatOp::AvgPool { kernel, .. } | FloatOp::MaxPool { kernel, .. } => {
+                    out_elems * (*kernel * *kernel) as u64
+                }
+                FloatOp::GlobalAvgPool => {
+                    let in_shape = match node.input {
+                        NodeRef::Input => input_shape.to_vec(),
+                        NodeRef::Node(j) => outs[j].shape().to_vec(),
+                    };
+                    in_shape.iter().product::<usize>() as u64
+                }
+                _ => out_elems,
+            };
+        }
+        macs
+    }
+}
+
+/// `w_fold = γ·w / sqrt(EMA(σ²)+ε)` per output channel (eq. 14) plus the
+/// corresponding bias fold.
+fn fold_into_conv(conv: &mut Conv2d, scales: &[f32], extra_bias: &[f32]) {
+    let cout = conv.weights.dim(0);
+    assert_eq!(scales.len(), cout, "BN width must equal conv output channels");
+    let per_out = conv.weights.len() / cout;
+    {
+        let wd = conv.weights.data_mut();
+        for o in 0..cout {
+            for t in 0..per_out {
+                wd[o * per_out + t] *= scales[o];
+            }
+        }
+    }
+    if conv.bias.is_empty() {
+        conv.bias = extra_bias.to_vec();
+    } else {
+        for (b, (s, e)) in conv.bias.iter_mut().zip(scales.iter().zip(extra_bias)) {
+            *b = *b * s + e;
+        }
+    }
+}
+
+/// Depthwise weights are `[1, KH, KW, C]`: the channel axis is innermost.
+fn fold_into_depthwise(dw: &mut DepthwiseConv2d, scales: &[f32], extra_bias: &[f32]) {
+    let c = dw.weights.dim(3);
+    assert_eq!(scales.len(), c);
+    let taps = dw.weights.len() / c;
+    {
+        let wd = dw.weights.data_mut();
+        for t in 0..taps {
+            for ch in 0..c {
+                wd[t * c + ch] *= scales[ch];
+            }
+        }
+    }
+    if dw.bias.is_empty() {
+        dw.bias = extra_bias.to_vec();
+    } else {
+        for (b, (s, e)) in dw.bias.iter_mut().zip(scales.iter().zip(extra_bias)) {
+            *b = *b * s + e;
+        }
+    }
+}
+
+/// Quantized-graph operations (integer-only at run time).
+#[derive(Clone, Debug)]
+pub enum QOp {
+    Conv(QConv2d),
+    Depthwise(QDepthwiseConv2d),
+    Fc(QFullyConnected),
+    AvgPool { kernel: usize, stride: usize, padding: Padding },
+    MaxPool { kernel: usize, stride: usize, padding: Padding },
+    GlobalAvgPool,
+    Add { other: NodeRef, out_params: QuantParams },
+    Concat { others: Vec<NodeRef>, out_params: QuantParams },
+    Softmax,
+    Logistic,
+}
+
+/// One node of the quantized graph.
+#[derive(Clone, Debug)]
+pub struct QNode {
+    pub name: String,
+    pub input: NodeRef,
+    pub op: QOp,
+}
+
+/// The integer-only model: uint8 activations everywhere, fig. 1.1a per layer.
+#[derive(Clone, Debug)]
+pub struct QGraph {
+    pub input_params: QuantParams,
+    pub nodes: Vec<QNode>,
+    /// GEMM kernel selection for all conv/fc nodes.
+    pub kernel: crate::gemm::Kernel,
+}
+
+impl QGraph {
+    /// Quantize a float input and run the integer graph end-to-end,
+    /// returning every node's quantized output.
+    pub fn run_all(&self, input: &Tensor<f32>) -> Vec<QTensor> {
+        let qin = QTensor::quantize(input, self.input_params);
+        self.run_all_q(&qin)
+    }
+
+    /// Run from an already-quantized input (the hot path: no float anywhere).
+    pub fn run_all_q(&self, qin: &QTensor) -> Vec<QTensor> {
+        let mut outs: Vec<QTensor> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let y = {
+                let fetch = |r: &NodeRef| -> &QTensor {
+                    match r {
+                        NodeRef::Input => qin,
+                        NodeRef::Node(i) => &outs[*i],
+                    }
+                };
+                let x: &QTensor = fetch(&node.input);
+                match &node.op {
+                    QOp::Conv(op) => op.run(x, self.kernel),
+                    QOp::Depthwise(op) => op.run(x),
+                    QOp::Fc(op) => op.run(x, self.kernel),
+                    QOp::AvgPool { kernel, stride, padding } => qavg_pool(x, *kernel, *stride, *padding),
+                    QOp::MaxPool { kernel, stride, padding } => qmax_pool(x, *kernel, *stride, *padding),
+                    QOp::GlobalAvgPool => qglobal_avg_pool(x),
+                    QOp::Add { other, out_params } => qadd(x, fetch(other), *out_params),
+                    QOp::Concat { others, out_params } => {
+                        let rest: Vec<&QTensor> = others.iter().map(&fetch).collect();
+                        let mut all = vec![x];
+                        all.extend(rest);
+                        qconcat(&all, *out_params)
+                    }
+                    QOp::Softmax => qsoftmax(x),
+                    QOp::Logistic => qlogistic(x),
+                }
+            };
+            outs.push(y);
+        }
+        outs
+    }
+
+    /// Convenience: final output, dequantized to float for the caller.
+    pub fn run(&self, input: &Tensor<f32>) -> Tensor<f32> {
+        self.run_all(input).pop().expect("empty graph").dequantize()
+    }
+
+    /// Final output without leaving the quantized domain.
+    pub fn run_q(&self, qin: &QTensor) -> QTensor {
+        self.run_all_q(qin).pop().expect("empty graph")
+    }
+
+    /// Total weight bytes (uint8 weights + int32 biases) — the paper's 4×
+    /// model-size reduction claim is checked against this.
+    pub fn model_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                QOp::Conv(c) => c.weights.len() + 4 * c.bias.len(),
+                QOp::Depthwise(d) => d.weights.len() + 4 * d.bias.len(),
+                QOp::Fc(f) => f.weights.len() + 4 * f.bias.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::nn::FusedActivation;
+
+    fn conv_bn_relu_graph(rng: &mut Rng) -> FloatGraph {
+        let mut g = FloatGraph::default();
+        let mut w = vec![0f32; 4 * 3 * 3 * 3];
+        rng.fill_normal(&mut w, 0.3);
+        let conv = Conv2d {
+            weights: Tensor::from_vec(&[4, 3, 3, 3], w),
+            bias: vec![0.1, -0.1, 0.2, 0.0],
+            stride: 1,
+            padding: Padding::Same,
+            activation: FusedActivation::None,
+        };
+        let c = g.push("conv0", NodeRef::Input, FloatOp::Conv(conv));
+        let bn = BatchNorm {
+            gamma: vec![1.2, 0.8, 1.0, 0.5],
+            beta: vec![0.1, 0.0, -0.2, 0.3],
+            mean: vec![0.05, -0.02, 0.1, 0.0],
+            var: vec![0.8, 1.1, 0.9, 1.3],
+            eps: 1e-3,
+        };
+        let b = g.push("bn0", c, FloatOp::BatchNorm(bn));
+        g.push("relu0", b, FloatOp::Relu6);
+        g
+    }
+
+    #[test]
+    fn bn_fold_preserves_function() {
+        // Eq. 14: the folded graph must compute the same function.
+        let mut rng = Rng::seeded(101);
+        let g = conv_bn_relu_graph(&mut rng);
+        let folded = g.fold_batch_norms();
+        assert_eq!(folded.nodes.len(), g.nodes.len() - 1);
+        let mut xd = vec![0f32; 2 * 6 * 6 * 3];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let x = Tensor::from_vec(&[2, 6, 6, 3], xd);
+        let want = g.run(&x);
+        let got = folded.run(&x);
+        assert!(want.max_abs_diff(&got) < 1e-5, "diff {}", want.max_abs_diff(&got));
+    }
+
+    #[test]
+    fn bn_fold_handles_depthwise_and_remaps_skips() {
+        let mut rng = Rng::seeded(102);
+        let mut g = FloatGraph::default();
+        let mut w = vec![0f32; 9 * 3];
+        rng.fill_normal(&mut w, 0.4);
+        let dw = DepthwiseConv2d {
+            weights: Tensor::from_vec(&[1, 3, 3, 3], w),
+            bias: vec![],
+            stride: 1,
+            padding: Padding::Same,
+            activation: FusedActivation::None,
+        };
+        let d = g.push("dw", NodeRef::Input, FloatOp::Depthwise(dw));
+        let bn = BatchNorm {
+            gamma: vec![0.9, 1.1, 1.0],
+            beta: vec![0.0, 0.1, -0.1],
+            mean: vec![0.0, 0.05, 0.0],
+            var: vec![1.0, 0.9, 1.2],
+            eps: 1e-3,
+        };
+        let b = g.push("bn", d, FloatOp::BatchNorm(bn));
+        // Bypass connection over the BN (fig. C.3 style).
+        g.push("add", b, FloatOp::Add(NodeRef::Input));
+
+        let folded = g.fold_batch_norms();
+        let mut xd = vec![0f32; 5 * 5 * 3];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let x = Tensor::from_vec(&[1, 5, 5, 3], xd);
+        assert!(g.run(&x).max_abs_diff(&folded.run(&x)) < 1e-5);
+    }
+
+    #[test]
+    fn graph_executor_handles_concat_and_pool() {
+        let mut g = FloatGraph::default();
+        let a = g.push("relu", NodeRef::Input, FloatOp::Relu);
+        let b = g.push(
+            "pool",
+            NodeRef::Input,
+            FloatOp::MaxPool { kernel: 1, stride: 1, padding: Padding::Valid },
+        );
+        g.push("cat", a, FloatOp::Concat(vec![b]));
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![-1.0f32, 2.0, -3.0, 4.0]);
+        let y = g.run(&x);
+        assert_eq!(y.shape(), &[1, 2, 2, 2]);
+        assert_eq!(y.data(), &[0.0, -1.0, 2.0, 2.0, 0.0, -3.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn mac_count_sane_for_known_conv() {
+        let mut rng = Rng::seeded(104);
+        let g = conv_bn_relu_graph(&mut rng);
+        // conv: out 1*8*8*4 elems × K = 3*3*3 = 27 → 6912; BN + relu ≈ +512.
+        let macs = g.mac_count(&[1, 8, 8, 3]);
+        assert!(macs >= 6912 && macs < 8000, "macs {macs}");
+    }
+}

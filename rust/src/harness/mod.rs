@@ -1,0 +1,486 @@
+//! Experiment harnesses: the CLI-visible commands (`train`, `eval`,
+//! `serve`, `quickstart`) plus one regeneration routine per table and
+//! figure of the paper's evaluation (DESIGN.md §6 maps each to its
+//! modules). Output is printed in the paper's row/series layout so results
+//! can be pasted into EXPERIMENTS.md.
+
+pub mod detection;
+pub mod figures;
+pub mod tables;
+
+use crate::coordinator::{BatchPolicy, Coordinator, EngineKind};
+use crate::data::ClassificationSet;
+use crate::gemm::Kernel;
+use crate::graph::builders::ParamMap;
+use crate::graph::{FloatGraph, FloatOp, NodeRef, QGraph};
+use crate::io;
+use crate::nn::conv::Conv2d;
+use crate::nn::depthwise::DepthwiseConv2d;
+use crate::nn::fc::FullyConnected;
+use crate::nn::{FusedActivation, Padding};
+use crate::quant::EmaRange;
+use crate::quantize::{convert, Calibration, QuantizeOptions};
+use crate::tensor::Tensor;
+use crate::train::{Knobs, Trainer};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Run the standalone Pallas quickstart artifact and verify the Rust gemm
+/// computes the *bit-identical* integer result — the cross-layer anchor
+/// proving L1 (Pallas), the AOT path, and the L3 engine share one
+/// arithmetic definition.
+pub fn quickstart(artifacts: &Path) -> Result<()> {
+    use crate::gemm::{output::OutputStage, QGemm};
+    use crate::quant::QuantizedMultiplier;
+    use crate::runtime::{literal_i32, literal_u8, u8_tensor_from_literal, Engine};
+
+    let spec = io::read_kv(&artifacts.join("quickstart_spec.txt"))?;
+    let get = |k: &str| -> Result<Vec<i64>> {
+        spec.iter()
+            .find(|(key, _)| key == k)
+            .map(|(_, v)| v.split(',').map(|s| s.trim().parse().unwrap()).collect())
+            .ok_or_else(|| anyhow!("quickstart_spec missing {k}"))
+    };
+    let mkn = get("mkn")?;
+    let zps = get("zps")?;
+    let mult = get("multiplier")?;
+    let (m, k, n) = (mkn[0] as usize, mkn[1] as usize, mkn[2] as usize);
+    let (z1, z2, z3) = (zps[0] as i32, zps[1] as i32, zps[2] as i32);
+
+    // Deterministic demo inputs.
+    let mut rng = crate::data::Rng::seeded(42);
+    let q1: Vec<u8> = (0..m * k).map(|_| 1 + (rng.below(255) as u8)).collect();
+    let q2: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+    let bias: Vec<i32> = (0..m).map(|_| rng.below(10_000) as i32 - 5_000).collect();
+
+    let mut engine = Engine::new(artifacts)?;
+    println!("PJRT platform: {}", engine.platform());
+    let outs = engine.run(
+        "quickstart.hlo.txt",
+        &[
+            literal_u8(&q1, &[m as i64, k as i64])?,
+            literal_u8(&q2, &[k as i64, n as i64])?,
+            literal_i32(&bias, &[m as i64])?,
+        ],
+    )?;
+    let pallas_out = u8_tensor_from_literal(&outs[0])?;
+
+    // Same computation on the pure-Rust integer engine.
+    let g = QGemm::new(m, k, n, z1, z2);
+    let stage = OutputStage {
+        bias,
+        multiplier: QuantizedMultiplier { m0: mult[0] as i32, shift: -(mult[1] as i32) },
+        out_zero: z3,
+        clamp_min: 0,
+        clamp_max: 255,
+    };
+    let mut rust_out = vec![0u8; m * n];
+    g.run(Kernel::Int8Pairwise, &q1, &q2, &stage, &mut rust_out);
+
+    println!("pallas (via PJRT): {:?}", pallas_out.data());
+    println!("rust integer gemm: {rust_out:?}");
+    anyhow::ensure!(
+        pallas_out.data() == &rust_out[..],
+        "Pallas kernel and Rust engine disagree — integer arithmetic definitions diverged"
+    );
+    println!("OK: L1 Pallas kernel == L3 Rust engine, bit-exact ({m}x{k}x{n}).");
+    Ok(())
+}
+
+/// `iaoi train`: QAT-train the base PaperNet via the AOT train_step and
+/// save folded weights + learned ranges.
+pub fn train(artifacts: &Path, steps: u64, seed: u64, eval_every: u64, out: &Path) -> Result<()> {
+    let base = artifacts.join("base");
+    let mut trainer = Trainer::new(&base, seed)?;
+    println!(
+        "training PaperNet ({} conv layers, res {}, batch {}) for {steps} QAT steps",
+        trainer.spec.param_keys.len() / 3,
+        trainer.spec.resolution,
+        trainer.spec.batch
+    );
+    let start = Instant::now();
+    for s in 0..steps {
+        let loss = trainer.train_step()?;
+        if s % 20 == 0 || s + 1 == steps {
+            println!("step {s:>5}  loss {loss:.4}");
+        }
+        if eval_every > 0 && s > 0 && s % eval_every == 0 {
+            let acc_f = trainer.eval_float(4)?;
+            let acc_q = trainer.eval_qsim(4)?;
+            println!("step {s:>5}  eval: float {:.1}%  quant-sim {:.1}%", acc_f * 100.0, acc_q * 100.0);
+        }
+    }
+    let secs = start.elapsed().as_secs_f64();
+    println!("trained {steps} steps in {secs:.1}s ({:.1} steps/s)", steps as f64 / secs);
+    let acc_f = trainer.eval_float(8)?;
+    let acc_q = trainer.eval_qsim(8)?;
+    println!("final eval: float {:.2}%  quant-sim {:.2}%", acc_f * 100.0, acc_q * 100.0);
+    trainer.save(out)?;
+    println!("saved folded weights + learned ranges to {out:?}");
+    Ok(())
+}
+
+/// Kind and stride of a PaperNet layer, reconstructed from its name.
+fn layer_desc(name: &str) -> (bool, usize) {
+    // (is_depthwise, stride)
+    if name.starts_with("dw") {
+        (true, 2)
+    } else if name.starts_with("mdw") {
+        (true, 1)
+    } else {
+        (false, 1)
+    }
+}
+
+/// Build the float PaperNet graph from exported folded params, driven by
+/// the spec's export-key order (so it works for every variant).
+pub fn papernet_from_params(
+    params: &ParamMap,
+    export_keys: &[String],
+    act: FusedActivation,
+) -> Result<FloatGraph> {
+    let mut g = FloatGraph::default();
+    let mut cur = NodeRef::Input;
+    let layer_names: Vec<&str> = export_keys
+        .iter()
+        .filter_map(|k| k.strip_suffix("/w"))
+        .filter(|n| *n != "fc")
+        .collect();
+    for name in &layer_names {
+        let w = params
+            .get(&format!("{name}/w"))
+            .ok_or_else(|| anyhow!("missing {name}/w"))?
+            .clone();
+        let b = params
+            .get(&format!("{name}/b"))
+            .ok_or_else(|| anyhow!("missing {name}/b"))?
+            .clone()
+            .into_data();
+        let (depthwise, stride) = layer_desc(name);
+        if depthwise {
+            g.push(
+                *name,
+                cur,
+                FloatOp::Depthwise(DepthwiseConv2d {
+                    weights: w,
+                    bias: b,
+                    stride,
+                    padding: Padding::Same,
+                    activation: act,
+                }),
+            );
+        } else {
+            g.push(
+                *name,
+                cur,
+                FloatOp::Conv(Conv2d {
+                    weights: w,
+                    bias: b,
+                    stride,
+                    padding: Padding::Same,
+                    activation: act,
+                }),
+            );
+        }
+        cur = NodeRef::Node(g.nodes.len() - 1);
+    }
+    cur = g.push("gap", cur, FloatOp::GlobalAvgPool);
+    g.push(
+        "logits",
+        cur,
+        FloatOp::Fc(FullyConnected {
+            weights: params.get("fc/w").ok_or_else(|| anyhow!("missing fc/w"))?.clone(),
+            bias: params.get("fc/b").ok_or_else(|| anyhow!("missing fc/b"))?.clone().into_data(),
+            activation: FusedActivation::None,
+        }),
+    );
+    Ok(g)
+}
+
+/// Build the integer-only graph from folded params + the QAT-learned
+/// ranges (Algorithm 1 step 4: the converter consumes training statistics,
+/// no post-hoc calibration needed).
+pub fn papernet_int8(
+    params: &ParamMap,
+    ranges: &[(String, (f64, f64))],
+    export_keys: &[String],
+    act: FusedActivation,
+    opts: QuantizeOptions,
+) -> Result<QGraph> {
+    let float_graph = papernet_from_params(params, export_keys, act)?;
+    let find = |key: &str| -> Result<(f64, f64)> {
+        ranges
+            .iter()
+            .find(|(name, _)| name == key)
+            .map(|(_, r)| *r)
+            .ok_or_else(|| anyhow!("missing learned range {key}"))
+    };
+    let mk = |r: (f64, f64)| {
+        let mut e = EmaRange::new(0.9);
+        e.update(r.0, r.1);
+        e
+    };
+    // One range per graph node, in node order: layers, gap (inherits the
+    // previous activation range), logits.
+    let mut node_ranges = Vec::new();
+    let mut last = (0.0, 6.0);
+    for node in &float_graph.nodes {
+        match node.name.as_str() {
+            "gap" => node_ranges.push(mk(last)),
+            "logits" => node_ranges.push(mk(find("logits/act")?)),
+            name => {
+                let r = find(&format!("{name}/act"))?;
+                last = r;
+                node_ranges.push(mk(r));
+            }
+        }
+    }
+    let calib = Calibration { input: mk((-1.0, 1.0)), ranges: node_ranges };
+    Ok(convert(&float_graph, &calib, opts))
+}
+
+/// A trained model bundle loaded from disk.
+pub struct TrainedModel {
+    pub params: ParamMap,
+    pub ranges: Vec<(String, (f64, f64))>,
+}
+
+pub fn load_trained(path: &Path) -> Result<TrainedModel> {
+    let all = io::read_params(path).with_context(|| format!("load model {path:?}"))?;
+    let ranges = io::read_ranges(&all);
+    let params: ParamMap =
+        all.into_iter().filter(|(k, _)| !k.starts_with("range:")).collect();
+    Ok(TrainedModel { params, ranges })
+}
+
+/// Top-1 accuracy of a logits-producing engine on the synthetic eval split.
+pub fn accuracy(
+    run: &mut dyn FnMut(&Tensor<f32>) -> Tensor<f32>,
+    ds: &ClassificationSet,
+    batches: usize,
+    batch_size: usize,
+) -> f32 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in 0..batches {
+        let (x, labels) = ds.batch(1, (b * batch_size) as u64, batch_size);
+        let logits = run(&x);
+        let classes = logits.dim(logits.rank() - 1);
+        for (row, &label) in labels.iter().enumerate() {
+            let data = &logits.data()[row * classes..(row + 1) * classes];
+            let argmax = data
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += usize::from(argmax == label);
+            total += 1;
+        }
+    }
+    correct as f32 / total as f32
+}
+
+/// Top-k accuracy (recall@k) — Table 4.3's "recall 5" and Table 4.8's
+/// second-metric substitute use k = 2 on 16 classes.
+pub fn topk_accuracy(
+    run: &mut dyn FnMut(&Tensor<f32>) -> Tensor<f32>,
+    ds: &ClassificationSet,
+    batches: usize,
+    batch_size: usize,
+    k: usize,
+) -> f32 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in 0..batches {
+        let (x, labels) = ds.batch(1, (b * batch_size) as u64, batch_size);
+        let logits = run(&x);
+        let classes = logits.dim(logits.rank() - 1);
+        for (row, &label) in labels.iter().enumerate() {
+            let data = &logits.data()[row * classes..(row + 1) * classes];
+            let mut idx: Vec<usize> = (0..classes).collect();
+            idx.sort_by(|&a, &b| data[b].partial_cmp(&data[a]).unwrap());
+            correct += usize::from(idx[..k].contains(&label));
+            total += 1;
+        }
+    }
+    correct as f32 / total as f32
+}
+
+/// Median wall-clock of `f` over `iters` runs after one warmup.
+pub fn time_median_ms(iters: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// `iaoi eval`: compare float vs integer-only engines on a trained model.
+pub fn eval(artifacts: &Path, model_path: &Path, batches: usize) -> Result<()> {
+    let base = artifacts.join("base");
+    let spec = crate::train::ModelSpec::load(&base)?;
+    let model = load_trained(model_path)?;
+    let float_graph =
+        papernet_from_params(&model.params, &spec.export_keys, FusedActivation::Relu6)?;
+    let int8_graph = papernet_int8(
+        &model.params,
+        &model.ranges,
+        &spec.export_keys,
+        FusedActivation::Relu6,
+        QuantizeOptions::default(),
+    )?;
+    let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 0);
+
+    let acc_f = accuracy(&mut |x| float_graph.run(x), &ds, batches, spec.batch);
+    let acc_q = accuracy(&mut |x| int8_graph.run(x), &ds, batches, spec.batch);
+    let (x1, _) = ds.batch(1, 0, 1);
+    let ms_f = time_median_ms(20, || {
+        let _ = float_graph.run(&x1);
+    });
+    let ms_q = time_median_ms(20, || {
+        let _ = int8_graph.run(&x1);
+    });
+    println!("model: {model_path:?}");
+    println!(
+        "  float32 engine : top-1 {:.2}%  latency {ms_f:.3} ms/img  {} weight bytes",
+        acc_f * 100.0,
+        float_graph.model_bytes()
+    );
+    println!(
+        "  int8 engine    : top-1 {:.2}%  latency {ms_q:.3} ms/img  {} weight bytes",
+        acc_q * 100.0,
+        int8_graph.model_bytes()
+    );
+    println!(
+        "  accuracy gap {:+.2}%  speedup {:.2}x  size ratio {:.2}x",
+        (acc_q - acc_f) * 100.0,
+        ms_f / ms_q,
+        float_graph.model_bytes() as f64 / int8_graph.model_bytes() as f64
+    );
+    Ok(())
+}
+
+/// `iaoi serve`: closed-loop serving demo through the coordinator.
+pub fn serve(
+    artifacts: &Path,
+    model_path: &Path,
+    requests: usize,
+    max_batch: usize,
+    workers: usize,
+) -> Result<()> {
+    let base = artifacts.join("base");
+    let spec = crate::train::ModelSpec::load(&base)?;
+    let model = load_trained(model_path)?;
+    let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 7);
+    for (label, engine) in [
+        (
+            "int8",
+            EngineKind::Quant(Arc::new(papernet_int8(
+                &model.params,
+                &model.ranges,
+                &spec.export_keys,
+                FusedActivation::Relu6,
+                QuantizeOptions::default(),
+            )?)),
+        ),
+        (
+            "float32",
+            EngineKind::Float(Arc::new(papernet_from_params(
+                &model.params,
+                &spec.export_keys,
+                FusedActivation::Relu6,
+            )?)),
+        ),
+    ] {
+        let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(2) };
+        let coord = Coordinator::start(engine, policy, workers);
+        let client = coord.client();
+        let start = Instant::now();
+        let pending: Vec<_> = (0..requests)
+            .map(|i| {
+                let (img, _) = ds.example(2, i as u64);
+                client.submit(img).expect("submit")
+            })
+            .collect();
+        for (_, rx) in pending {
+            rx.recv().expect("response");
+        }
+        let wall = start.elapsed().as_secs_f64();
+        let metrics = coord.shutdown();
+        println!("{}", metrics.summary());
+        println!("  [{label}] throughput {:.1} req/s over {requests} requests", requests as f64 / wall);
+    }
+    Ok(())
+}
+
+/// Dispatch `iaoi bench --table <id>`.
+pub fn run_table(id: &str, fast: bool) -> Result<()> {
+    match id {
+        "4.1" => tables::table_4_1(fast),
+        "4.2" => tables::table_4_2(fast),
+        "4.3" => tables::table_4_3(fast),
+        "4.4" => detection::table_4_4(fast),
+        "4.5" => detection::table_4_5(fast),
+        "4.6" => detection::table_4_6(fast),
+        "4.7" => tables::table_4_7(fast),
+        "4.8" => tables::table_4_8(fast),
+        other => Err(anyhow!("unknown table {other} (4.1-4.8)")),
+    }
+}
+
+/// Dispatch `iaoi bench --fig <id>`.
+pub fn run_figure(id: &str, fast: bool) -> Result<()> {
+    match id {
+        "1.1c" => figures::latency_accuracy("S835-LITTLE", fast),
+        "4.1" => figures::latency_accuracy("S835-big", fast),
+        "4.2" => figures::latency_accuracy("S821-big", fast),
+        "4.3" => figures::latency_accuracy_attributes(fast),
+        other => Err(anyhow!("unknown figure {other} (1.1c, 4.1, 4.2, 4.3)")),
+    }
+}
+
+/// Train one variant with the given knobs; returns (trainer, float_acc,
+/// int8_engine_acc). Shared by the table/figure harnesses.
+pub fn train_and_eval(
+    artifacts: &Path,
+    variant: &str,
+    knobs: Knobs,
+    steps: u64,
+    seed: u64,
+    eval_batches: usize,
+) -> Result<(f32, f32)> {
+    let dir = artifacts.join(variant);
+    let mut trainer = Trainer::new(&dir, seed)?.with_knobs(knobs);
+    for _ in 0..steps {
+        trainer.train_step()?;
+    }
+    let acc_float = trainer.eval_float(eval_batches)?;
+    // For the quantized number, run the *real* integer engine on exported
+    // folded weights + learned ranges (not just quant-sim).
+    let act = if knobs.act_ceiling > 100.0 { FusedActivation::Relu } else { FusedActivation::Relu6 };
+    let params = trainer.export_folded()?;
+    let ranges = trainer.learned_ranges()?;
+    let spec = &trainer.spec;
+    let int8 = papernet_int8(
+        &params,
+        &ranges,
+        &spec.export_keys,
+        act,
+        QuantizeOptions {
+            weight_bits: knobs.weight_bits,
+            activation_bits: knobs.act_bits,
+            kernel: Kernel::default(),
+        },
+    )?;
+    let ds = ClassificationSet::new(spec.resolution, spec.num_classes, seed);
+    let acc_int8 = accuracy(&mut |x| int8.run(x), &ds, eval_batches, spec.batch);
+    Ok((acc_float, acc_int8))
+}

@@ -1,0 +1,287 @@
+//! Accuracy tables (4.1, 4.2, 4.3, 4.7, 4.8): every number comes from a
+//! real QAT or float training run driven through the AOT train_step,
+//! evaluated on the synthetic stand-in task (DESIGN.md §Substitutions),
+//! with the quantized numbers measured on the *integer-only Rust engine*.
+
+use super::{accuracy, load_trained, papernet_from_params, train_and_eval, topk_accuracy};
+use crate::data::ClassificationSet;
+use crate::nn::FusedActivation;
+use crate::quant::schemes::WeightScheme;
+use crate::quantize::apply_weight_scheme;
+use crate::train::{Knobs, Trainer, RELU_CEIL};
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+fn artifacts() -> PathBuf {
+    PathBuf::from("artifacts")
+}
+
+fn steps(fast: bool) -> u64 {
+    if fast {
+        120
+    } else {
+        400
+    }
+}
+
+fn eval_batches(fast: bool) -> usize {
+    if fast {
+        4
+    } else {
+        10
+    }
+}
+
+/// Table 4.1 — float vs integer-quantized accuracy across network depths.
+/// Paper: ResNet-{50,100,150} on ImageNet, gap within ~2%. Ours:
+/// PaperNet-{6,8,10 conv layers} on SynthShapes; same protocol (separate
+/// float and QAT runs, integer engine for the quantized number).
+pub fn table_4_1(fast: bool) -> Result<()> {
+    println!("# Table 4.1 — float vs integer-quantized accuracy across depths");
+    println!("| depth (conv layers) | float acc | int8 acc | gap |");
+    println!("|---|---|---|---|");
+    for (variant, depth) in [("base", 6), ("d2", 8), ("d3", 10)] {
+        let (float_acc, _) =
+            train_and_eval(&artifacts(), variant, Knobs::float_baseline(), steps(fast), 1, eval_batches(fast))?;
+        let (_, int8_acc) =
+            train_and_eval(&artifacts(), variant, Knobs::default(), steps(fast), 1, eval_batches(fast))?;
+        println!(
+            "| {depth} | {:.1}% | {:.1}% | {:+.1}% |",
+            float_acc * 100.0,
+            int8_acc * 100.0,
+            (int8_acc - float_acc) * 100.0
+        );
+    }
+    Ok(())
+}
+
+/// Table 4.2 — accuracy under different quantization schemes. Paper:
+/// BWN/TWN/INQ/FGQ vs ours on ResNet50. Ours: the same weight-only
+/// baselines applied to the float-trained PaperNet (running on the float
+/// engine, as those schemes deploy), vs our full integer path.
+pub fn table_4_2(fast: bool) -> Result<()> {
+    println!("# Table 4.2 — accuracy under various quantization schemes");
+    let arts = artifacts();
+    let dir = arts.join("base");
+    // One float training run; schemes post-process its weights.
+    let mut trainer = Trainer::new(&dir, 2)?.with_knobs(Knobs::float_baseline());
+    for _ in 0..steps(fast) {
+        trainer.train_step()?;
+    }
+    let params = trainer.export_folded()?;
+    let spec = trainer.spec.clone();
+    let float_graph = papernet_from_params(&params, &spec.export_keys, FusedActivation::Relu6)?;
+    let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 2);
+    let base_acc = accuracy(&mut |x| float_graph.run(x), &ds, eval_batches(fast), spec.batch);
+
+    // Our scheme: QAT + integer engine.
+    let (_, ours_acc) =
+        train_and_eval(&arts, "base", Knobs::default(), steps(fast), 2, eval_batches(fast))?;
+
+    println!("| scheme | weight bits | act bits | accuracy |");
+    println!("|---|---|---|---|");
+    println!("| float baseline | 32 | float32 | {:.1}% |", base_acc * 100.0);
+    for (name, scheme) in [
+        ("BWN (binary)", WeightScheme::Binary),
+        ("TWN (ternary)", WeightScheme::Ternary),
+        ("INQ (pow2, 5-bit)", WeightScheme::PowerOfTwo { bits: 5 }),
+        ("FGQ (group ternary)", WeightScheme::FineGrainedTernary { group_size: 4 }),
+    ] {
+        let g = apply_weight_scheme(&float_graph, scheme);
+        let acc = accuracy(&mut |x| g.run(x), &ds, eval_batches(fast), spec.batch);
+        println!(
+            "| {name} | {} | float32 | {:.1}% |",
+            scheme.weight_bits(),
+            acc * 100.0
+        );
+    }
+    println!("| **Ours (integer-only)** | 8 | 8 | {:.1}% |", ours_acc * 100.0);
+    Ok(())
+}
+
+/// Table 4.3 — ReLU vs ReLU6 at float/8/7 bits, mean ± std over seeds.
+/// Paper: Inception v3 on ImageNet. Ours: PaperNet on SynthShapes with the
+/// activation ceiling and bit depth as traced knobs of one artifact.
+pub fn table_4_3(fast: bool) -> Result<()> {
+    println!("# Table 4.3 — accuracy and recall@2 by activation fn and bit depth");
+    println!("| act | type | top-1 mean | top-1 std | recall@2 mean |");
+    println!("|---|---|---|---|---|");
+    let seeds: &[u64] = if fast { &[1, 2] } else { &[1, 2, 3] };
+    for (act_name, ceiling) in [("ReLU6", 6.0f32), ("ReLU", RELU_CEIL)] {
+        for (ty, bits) in [("floats", 0u32), ("8 bits", 8), ("7 bits", 7)] {
+            let mut top1 = Vec::new();
+            let mut top2 = Vec::new();
+            for &seed in seeds {
+                let knobs = if bits == 0 {
+                    Knobs { w_quant_on: 0.0, act_ceiling: ceiling, ..Knobs::default() }
+                } else {
+                    Knobs { act_ceiling: ceiling, weight_bits: bits, act_bits: bits, ..Knobs::default() }
+                };
+                let (acc1, acc2) = run_with_recall(&artifacts(), knobs, steps(fast), seed, eval_batches(fast))?;
+                top1.push(acc1);
+                top2.push(acc2);
+            }
+            let (m1, s1) = mean_std(&top1);
+            let (m2, _) = mean_std(&top2);
+            println!(
+                "| {act_name} | {ty} | {:.1}% | {:.1}% | {:.1}% |",
+                m1 * 100.0,
+                s1 * 100.0,
+                m2 * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+/// One training run returning (top-1, top-2) on the appropriate engine.
+fn run_with_recall(
+    arts: &Path,
+    knobs: Knobs,
+    steps: u64,
+    seed: u64,
+    batches: usize,
+) -> Result<(f32, f32)> {
+    let dir = arts.join("base");
+    let mut trainer = Trainer::new(&dir, seed)?.with_knobs(knobs);
+    for _ in 0..steps {
+        trainer.train_step()?;
+    }
+    let spec = trainer.spec.clone();
+    let ds = ClassificationSet::new(spec.resolution, spec.num_classes, seed);
+    let act = if knobs.act_ceiling > 100.0 { FusedActivation::Relu } else { FusedActivation::Relu6 };
+    if knobs.w_quant_on == 0.0 {
+        // Float model: evaluate the float engine on folded weights.
+        let params = trainer.export_folded()?;
+        let g = papernet_from_params(&params, &spec.export_keys, act)?;
+        let a1 = accuracy(&mut |x| g.run(x), &ds, batches, spec.batch);
+        let a2 = topk_accuracy(&mut |x| g.run(x), &ds, batches, spec.batch, 2);
+        Ok((a1, a2))
+    } else {
+        let params = trainer.export_folded()?;
+        let ranges = trainer.learned_ranges()?;
+        let g = super::papernet_int8(
+            &params,
+            &ranges,
+            &spec.export_keys,
+            act,
+            crate::quantize::QuantizeOptions {
+                weight_bits: knobs.weight_bits,
+                activation_bits: knobs.act_bits,
+                kernel: crate::gemm::Kernel::default(),
+            },
+        )?;
+        let a1 = accuracy(&mut |x| g.run(x), &ds, batches, spec.batch);
+        let a2 = topk_accuracy(&mut |x| g.run(x), &ds, batches, spec.batch, 2);
+        Ok((a1, a2))
+    }
+}
+
+fn mean_std(xs: &[f32]) -> (f32, f32) {
+    let n = xs.len() as f32;
+    let mean = xs.iter().sum::<f32>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+    (mean, var.sqrt())
+}
+
+/// Tables 4.7/4.8 — bit-depth ablation grid. Paper: face-attribute mAP and
+/// age precision vs (weight bits × activation bits), relative to float.
+/// Ours: top-1 (4.7) and recall@2 (4.8) on SynthShapes, relative to the
+/// float baseline, integer engine throughout.
+fn bit_grid(fast: bool, metric_topk: usize, title: &str) -> Result<()> {
+    println!("# {title}");
+    let arts = artifacts();
+    let bit_list: &[u32] = if fast { &[8, 6, 4] } else { &[8, 7, 6, 5, 4] };
+    // Float baseline once.
+    let (baseline, _) = {
+        let knobs = Knobs::float_baseline();
+        let dir = arts.join("base");
+        let mut trainer = Trainer::new(&dir, 3)?.with_knobs(knobs);
+        for _ in 0..steps(fast) {
+            trainer.train_step()?;
+        }
+        let spec = trainer.spec.clone();
+        let params = trainer.export_folded()?;
+        let g = papernet_from_params(&params, &spec.export_keys, FusedActivation::Relu6)?;
+        let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 3);
+        let a = if metric_topk == 1 {
+            accuracy(&mut |x| g.run(x), &ds, eval_batches(fast), spec.batch)
+        } else {
+            topk_accuracy(&mut |x| g.run(x), &ds, eval_batches(fast), spec.batch, metric_topk)
+        };
+        (a, 0.0)
+    };
+    println!("float baseline: {:.1}%", baseline * 100.0);
+    print!("| wt \\\\ act |");
+    for ab in bit_list {
+        print!(" {ab} |");
+    }
+    println!();
+    print!("|---|");
+    for _ in bit_list {
+        print!("---|");
+    }
+    println!();
+    for &wb in bit_list {
+        print!("| {wb} |");
+        for &ab in bit_list {
+            let knobs = Knobs { weight_bits: wb, act_bits: ab, ..Knobs::default() };
+            let dir = arts.join("base");
+            let mut trainer = Trainer::new(&dir, 3)?.with_knobs(knobs);
+            for _ in 0..steps(fast) {
+                trainer.train_step()?;
+            }
+            let spec = trainer.spec.clone();
+            let params = trainer.export_folded()?;
+            let ranges = trainer.learned_ranges()?;
+            let g = super::papernet_int8(
+                &params,
+                &ranges,
+                &spec.export_keys,
+                FusedActivation::Relu6,
+                crate::quantize::QuantizeOptions {
+                    weight_bits: wb,
+                    activation_bits: ab,
+                    kernel: crate::gemm::Kernel::default(),
+                },
+            )?;
+            let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 3);
+            let a = if metric_topk == 1 {
+                accuracy(&mut |x| g.run(x), &ds, eval_batches(fast), spec.batch)
+            } else {
+                topk_accuracy(&mut |x| g.run(x), &ds, eval_batches(fast), spec.batch, metric_topk)
+            };
+            print!(" {:+.1}% |", (a - baseline) * 100.0);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Table 4.7 — top-1 accuracy relative to float, by (weight, act) bits.
+pub fn table_4_7(fast: bool) -> Result<()> {
+    bit_grid(
+        fast,
+        1,
+        "Table 4.7 — relative top-1 accuracy vs float, by weight x activation bit depth",
+    )
+}
+
+/// Table 4.8 — second metric (recall@2) relative to float, same grid.
+pub fn table_4_8(fast: bool) -> Result<()> {
+    bit_grid(
+        fast,
+        2,
+        "Table 4.8 — relative recall@2 vs float, by weight x activation bit depth (age-precision substitute)",
+    )
+}
+
+/// Used by `eval` when a saved model exists; re-exported for tests.
+pub fn quick_eval(model_path: &Path) -> Result<f32> {
+    let arts = artifacts();
+    let spec = crate::train::ModelSpec::load(&arts.join("base"))?;
+    let model = load_trained(model_path)?;
+    let g = papernet_from_params(&model.params, &spec.export_keys, FusedActivation::Relu6)?;
+    let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 0);
+    Ok(accuracy(&mut |x| g.run(x), &ds, 4, spec.batch))
+}

@@ -1,0 +1,195 @@
+//! Binary interchange between the Python build path (L2) and the Rust
+//! runtime (L3): named tensors (trained parameters, QAT-learned ranges) in
+//! a small self-describing format both sides implement.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic  b"IAOI"          4 bytes
+//! version u32             currently 1
+//! count  u32
+//! repeat count times:
+//!   name_len u16, name utf-8
+//!   dtype u8              0 = f32, 1 = u8, 2 = i32
+//!   rank u8, dims u32 × rank
+//!   data                  elem_size × Π dims
+//! ```
+
+use crate::graph::builders::ParamMap;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"IAOI";
+const VERSION: u32 = 1;
+
+/// Write named f32 tensors.
+pub fn write_params(path: &Path, params: &[(String, Tensor<f32>)]) -> Result<()> {
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for (name, t) in params {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[0u8])?; // dtype f32
+        f.write_all(&[t.rank() as u8])?;
+        for &d in t.shape() {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_exact<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
+    let mut buf = [0u8; N];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Read named f32 tensors into a [`ParamMap`].
+pub fn read_params(path: &Path) -> Result<ParamMap> {
+    let mut f =
+        std::io::BufReader::new(std::fs::File::open(path).with_context(|| format!("open {path:?}"))?);
+    let magic = read_exact::<4>(&mut f)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let version = u32::from_le_bytes(read_exact::<4>(&mut f)?);
+    if version != VERSION {
+        bail!("{path:?}: unsupported version {version}");
+    }
+    let count = u32::from_le_bytes(read_exact::<4>(&mut f)?);
+    let mut out = ParamMap::new();
+    for _ in 0..count {
+        let name_len = u16::from_le_bytes(read_exact::<2>(&mut f)?) as usize;
+        let mut name_bytes = vec![0u8; name_len];
+        f.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes).context("tensor name is not utf-8")?;
+        let dtype = read_exact::<1>(&mut f)?[0];
+        if dtype != 0 {
+            bail!("{path:?}: tensor {name}: only f32 (dtype 0) supported here, got {dtype}");
+        }
+        let rank = read_exact::<1>(&mut f)?[0] as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(u32::from_le_bytes(read_exact::<4>(&mut f)?) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        let mut raw = vec![0u8; 4 * n];
+        f.read_exact(&mut raw)?;
+        for (i, chunk) in raw.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        out.insert(name, Tensor::from_vec(&shape, data));
+    }
+    Ok(out)
+}
+
+/// Read QAT-learned activation ranges exported by the L2 side: every tensor
+/// named `range:<key>` of shape `[2]` becomes `(key, (min, max))`.
+pub fn read_ranges(params: &ParamMap) -> Vec<(String, (f64, f64))> {
+    let mut out: Vec<(String, (f64, f64))> = params
+        .iter()
+        .filter_map(|(name, t)| {
+            let key = name.strip_prefix("range:")?;
+            assert_eq!(t.len(), 2, "range tensor {name} must have 2 entries");
+            Some((key.to_string(), (f64::from(t.data()[0]), f64::from(t.data()[1]))))
+        })
+        .collect();
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+/// A tiny key=value text config (one per line, `#` comments) used for the
+/// model-spec interchange where JSON would normally go (offline build: no
+/// serde). Values stay strings; callers parse.
+pub fn read_kv(path: &Path) -> Result<Vec<(String, String)>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("bad config line: {line}");
+        };
+        out.push((k.trim().to_string(), v.trim().to_string()));
+    }
+    Ok(out)
+}
+
+/// Write a key=value text config.
+pub fn write_kv(path: &Path, pairs: &[(String, String)]) -> Result<()> {
+    let mut s = String::new();
+    for (k, v) in pairs {
+        s.push_str(&format!("{k} = {v}\n"));
+    }
+    std::fs::write(path, s).with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("iaoi-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let path = tmpfile("roundtrip.bin");
+        let params = vec![
+            ("conv0/w".to_string(), Tensor::from_vec(&[2, 3], vec![1.0f32, -2.5, 3.25, 0.0, 1e-8, -1e8])),
+            ("fc/b".to_string(), Tensor::from_vec(&[4], vec![0.1f32, 0.2, 0.3, 0.4])),
+            ("scalarish".to_string(), Tensor::from_vec(&[1], vec![42.0f32])),
+        ];
+        write_params(&path, &params).unwrap();
+        let back = read_params(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        for (name, t) in &params {
+            let rt = &back[name];
+            assert_eq!(rt.shape(), t.shape(), "{name}");
+            assert_eq!(rt.data(), t.data(), "{name}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("bad.bin");
+        std::fs::write(&path, b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(read_params(&path).is_err());
+    }
+
+    #[test]
+    fn ranges_extracted_from_params() {
+        let mut pm = ParamMap::new();
+        pm.insert("range:conv0".into(), Tensor::from_vec(&[2], vec![-1.5f32, 2.5]));
+        pm.insert("conv0/w".into(), Tensor::from_vec(&[1], vec![0.0f32]));
+        let ranges = read_ranges(&pm);
+        assert_eq!(ranges.len(), 1);
+        assert_eq!(ranges[0].0, "conv0");
+        assert_eq!(ranges[0].1, (-1.5, 2.5));
+    }
+
+    #[test]
+    fn kv_roundtrip() {
+        let path = tmpfile("cfg.txt");
+        let pairs = vec![
+            ("model".to_string(), "papernet".to_string()),
+            ("num_classes".to_string(), "16".to_string()),
+        ];
+        write_kv(&path, &pairs).unwrap();
+        let back = read_kv(&path).unwrap();
+        assert_eq!(back, pairs);
+    }
+}

@@ -1,0 +1,36 @@
+//! # iaoi — Integer-Arithmetic-Only Inference
+//!
+//! A reproduction of *"Quantization and Training of Neural Networks for
+//! Efficient Integer-Arithmetic-Only Inference"* (Jacob et al., 2017) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build time)** — fake-quantization and quantized-matmul
+//!   kernels in `python/compile/kernels/`, validated against a pure-`jnp`
+//!   oracle.
+//! * **Layer 2 (JAX, build time)** — the quantization-aware-training (QAT)
+//!   model graph in `python/compile/model.py`, AOT-lowered to HLO text
+//!   artifacts consumed by the Rust runtime.
+//! * **Layer 3 (Rust, run time)** — everything in this crate: a gemmlowp-style
+//!   integer-only inference engine ([`gemm`], [`fixedpoint`], [`nn`],
+//!   [`graph`]), post-training quantization tooling ([`quantize`]), the QAT
+//!   training driver over the AOT artifacts ([`train`]), and a serving
+//!   coordinator with dynamic batching ([`coordinator`]).
+//!
+//! Python never runs on the request path: once `make artifacts` has produced
+//! the HLO files, the `iaoi` binary is self-contained.
+
+pub mod fixedpoint;
+pub mod quant;
+pub mod tensor;
+pub mod gemm;
+pub mod nn;
+pub mod graph;
+pub mod quantize;
+pub mod runtime;
+pub mod train;
+pub mod coordinator;
+pub mod sim;
+pub mod data;
+pub mod io;
+pub mod harness;
+pub mod bench_util;

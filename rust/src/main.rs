@@ -1,0 +1,108 @@
+//! `iaoi` — the leader binary: QAT training driver, integer-only engine
+//! evaluation, serving coordinator, and the paper's benchmark harnesses.
+//!
+//! Subcommands (hand-rolled parser; this offline build has no clap):
+//!
+//! ```text
+//! iaoi train      --steps N [--artifacts DIR] [--out FILE] [--seed S]
+//! iaoi eval       --model FILE [--artifacts DIR] [--batches N]
+//! iaoi serve      --model FILE [--requests N] [--max-batch B] [--workers W]
+//! iaoi quickstart [--artifacts DIR]
+//! iaoi bench      --table 4.1|4.2|4.3|4.4|4.5|4.6|4.7|4.8 | --fig 1.1c|4.1|4.2|4.3 [--fast]
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use iaoi::harness;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got {}", args[i]))?;
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            out.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            out.insert(key.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(out)
+}
+
+fn get<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(String::as_str).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "eval" => cmd_eval(&flags),
+        "serve" => cmd_serve(&flags),
+        "quickstart" => harness::quickstart(&PathBuf::from(get(&flags, "artifacts", "artifacts"))),
+        "bench" => cmd_bench(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `iaoi help`)"),
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "iaoi — integer-arithmetic-only inference (Jacob et al. 2017 reproduction)\n\
+         \n\
+         usage:\n  iaoi train      --steps N [--artifacts DIR] [--out FILE] [--seed S]\n  \
+         iaoi eval       --model FILE [--artifacts DIR] [--batches N]\n  \
+         iaoi serve      --model FILE [--requests N] [--max-batch B] [--workers W]\n  \
+         iaoi quickstart [--artifacts DIR]\n  \
+         iaoi bench      --table <id> | --fig <id> [--fast]\n"
+    );
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let artifacts = PathBuf::from(get(flags, "artifacts", "artifacts"));
+    let steps: u64 = get(flags, "steps", "300").parse()?;
+    let seed: u64 = get(flags, "seed", "0").parse()?;
+    let out = PathBuf::from(get(flags, "out", "artifacts/model_trained.bin"));
+    let eval_every: u64 = get(flags, "eval-every", "100").parse()?;
+    harness::train(&artifacts, steps, seed, eval_every, &out)
+}
+
+fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
+    let artifacts = PathBuf::from(get(flags, "artifacts", "artifacts"));
+    let model = PathBuf::from(get(flags, "model", "artifacts/model_trained.bin"));
+    let batches: usize = get(flags, "batches", "16").parse()?;
+    harness::eval(&artifacts, &model, batches)
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let artifacts = PathBuf::from(get(flags, "artifacts", "artifacts"));
+    let model = PathBuf::from(get(flags, "model", "artifacts/model_trained.bin"));
+    let requests: usize = get(flags, "requests", "256").parse()?;
+    let max_batch: usize = get(flags, "max-batch", "8").parse()?;
+    let workers: usize = get(flags, "workers", "1").parse()?;
+    harness::serve(&artifacts, &model, requests, max_batch, workers)
+}
+
+fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
+    let fast = flags.contains_key("fast");
+    if let Some(table) = flags.get("table") {
+        return harness::run_table(table, fast);
+    }
+    if let Some(fig) = flags.get("fig") {
+        return harness::run_figure(fig, fast);
+    }
+    bail!("bench requires --table <id> or --fig <id>")
+}

@@ -1,0 +1,211 @@
+//! Quantized math-function activations (App. A.1): softmax, logistic, tanh
+//! computed in pure fixed-point arithmetic — no lookup tables — on top of
+//! [`crate::fixedpoint::transcendental`], plus float references.
+//!
+//! Following TFLite's quantized kernels, softmax and logistic produce
+//! outputs with the *fixed* quantization `S = 1/256, Z = 0` (probabilities
+//! in `[0, 255/256]`) and tanh with `S = 1/128, Z = 128` — the natural
+//! ranges of these functions, independent of learned statistics.
+
+use crate::fixedpoint::transcendental::{exp_on_negative_values, rounding_div};
+use crate::fixedpoint::{logistic as fp_logistic, rounding_div_by_pot, tanh as fp_tanh, Fp};
+use crate::nn::QTensor;
+use crate::quant::{QuantParams, QuantizedMultiplier};
+use crate::tensor::Tensor;
+
+/// Integer bits used for the fixed-point input domain of exp/logistic/tanh.
+/// `Fp<5>` covers (−32, 32), far beyond where the functions saturate.
+const INPUT_IB: i32 = 5;
+
+/// Output params of quantized softmax / logistic: scale 1/256, zero 0.
+pub fn prob_output_params() -> QuantParams {
+    QuantParams { scale: 1.0 / 256.0, zero_point: 0, qmin: 0, qmax: 255 }
+}
+
+/// Output params of quantized tanh: scale 1/128, zero 128.
+pub fn tanh_output_params() -> QuantParams {
+    QuantParams { scale: 1.0 / 128.0, zero_point: 128, qmin: 0, qmax: 255 }
+}
+
+/// Multiplier mapping integer input deltas `(q − ref)` onto `Fp<INPUT_IB>`
+/// raw units: `raw = (q − ref) · S_in · 2^(31 − IB)`.
+fn input_multiplier(scale: f64) -> QuantizedMultiplier {
+    QuantizedMultiplier::from_f64(scale * 2f64.powi(31 - INPUT_IB))
+}
+
+/// Quantized softmax over the last axis (App. A.1).
+///
+/// For each row: subtract the row max (all diffs ≤ 0), convert to
+/// fixed-point, `exp` each diff with the gemmlowp kernel, then renormalize
+/// with an integer division — every step integer-only.
+pub fn qsoftmax(input: &QTensor) -> QTensor {
+    let rank = input.data.rank();
+    let c = input.shape()[rank - 1];
+    let rows: usize = input.shape()[..rank - 1].iter().product();
+    let mult = input_multiplier(input.params.scale);
+    let xd = input.data.data();
+    let mut out = vec![0u8; xd.len()];
+    for r in 0..rows {
+        let row = &xd[r * c..(r + 1) * c];
+        let max_q = i32::from(*row.iter().max().expect("non-empty row"));
+        // exp(S(q - max)) in Q0.31.
+        let mut exps = vec![0i64; c];
+        let mut sum: i64 = 0;
+        for (i, &q) in row.iter().enumerate() {
+            let diff = i32::from(q) - max_q; // <= 0
+            let raw = mult.apply(diff).max(i32::MIN + 1);
+            let e = exp_on_negative_values(Fp::<INPUT_IB>::from_raw(raw.min(0)));
+            exps[i] = i64::from(e.raw());
+            sum += exps[i];
+        }
+        // out = e / sum scaled to [0, 256): integer rounding division.
+        for (i, &e) in exps.iter().enumerate() {
+            let q = rounding_div(e * 256, sum);
+            out[r * c + i] = q.clamp(0, 255) as u8;
+        }
+    }
+    QTensor {
+        data: Tensor::from_vec(input.shape(), out),
+        params: prob_output_params(),
+    }
+}
+
+/// Quantized logistic (sigmoid) elementwise (App. A.1).
+pub fn qlogistic(input: &QTensor) -> QTensor {
+    let mult = input_multiplier(input.params.scale);
+    let z = input.params.zero_point;
+    let data: Vec<u8> = input
+        .data
+        .data()
+        .iter()
+        .map(|&q| {
+            let raw = mult.apply(i32::from(q) - z);
+            let p = fp_logistic(Fp::<INPUT_IB>::from_raw(raw));
+            // Q0.31 → [0, 256): divide by 2^23 with rounding.
+            rounding_div_by_pot(p.raw(), 23).clamp(0, 255) as u8
+        })
+        .collect();
+    QTensor { data: Tensor::from_vec(input.shape(), data), params: prob_output_params() }
+}
+
+/// Quantized tanh elementwise (App. A.1).
+pub fn qtanh(input: &QTensor) -> QTensor {
+    let mult = input_multiplier(input.params.scale);
+    let z = input.params.zero_point;
+    let data: Vec<u8> = input
+        .data
+        .data()
+        .iter()
+        .map(|&q| {
+            let raw = mult.apply(i32::from(q) - z);
+            let t = fp_tanh(Fp::<INPUT_IB>::from_raw(raw));
+            // Q0.31 in (−1,1) → [0,256) centred at 128.
+            (rounding_div_by_pot(t.raw(), 24) + 128).clamp(0, 255) as u8
+        })
+        .collect();
+    QTensor { data: Tensor::from_vec(input.shape(), data), params: tanh_output_params() }
+}
+
+/// Float reference softmax over the last axis.
+pub fn softmax_f32(x: &Tensor<f32>) -> Tensor<f32> {
+    let rank = x.rank();
+    let c = x.shape()[rank - 1];
+    let rows: usize = x.shape()[..rank - 1].iter().product();
+    let xd = x.data();
+    let mut out = vec![0f32; xd.len()];
+    for r in 0..rows {
+        let row = &xd[r * c..(r + 1) * c];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let exps: Vec<f32> = row.iter().map(|&v| (v - m).exp()).collect();
+        let s: f32 = exps.iter().sum();
+        for (i, e) in exps.iter().enumerate() {
+            out[r * c + i] = e / s;
+        }
+    }
+    Tensor::from_vec(x.shape(), out)
+}
+
+/// Float reference logistic.
+pub fn logistic_f32(x: &Tensor<f32>) -> Tensor<f32> {
+    x.map(|v| 1.0 / (1.0 + (-v).exp()))
+}
+
+/// Float reference tanh.
+pub fn tanh_f32(x: &Tensor<f32>) -> Tensor<f32> {
+    x.map(f32::tanh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn qsoftmax_tracks_float_softmax() {
+        let mut rng = Rng::seeded(91);
+        let p = QuantParams::from_min_max(-8.0, 8.0, 0, 255);
+        let mut xd = vec![0f32; 6 * 10];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-8.0, 8.0);
+        }
+        let x = Tensor::from_vec(&[6, 10], xd);
+        let q = QTensor::quantize(&x, p);
+        let got = qsoftmax(&q).dequantize();
+        let want = softmax_f32(&q.dequantize());
+        let diff = want.max_abs_diff(&got);
+        // Probabilities to within ~1.5/256 plus input-grid effects.
+        assert!(diff < 0.015, "softmax diff {diff}");
+    }
+
+    #[test]
+    fn qsoftmax_rows_sum_to_one() {
+        let mut rng = Rng::seeded(92);
+        let p = QuantParams::from_min_max(-4.0, 4.0, 0, 255);
+        let mut xd = vec![0f32; 4 * 7];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-4.0, 4.0);
+        }
+        let q = QTensor::quantize(&Tensor::from_vec(&[4, 7], xd), p);
+        let out = qsoftmax(&q);
+        for r in 0..4 {
+            let s: i32 = out.data.data()[r * 7..(r + 1) * 7].iter().map(|&v| i32::from(v)).sum();
+            // Σ q/256 ≈ 1 → Σ q ≈ 256, within per-element rounding.
+            assert!((s - 256).abs() <= 7, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn qsoftmax_argmax_preserved() {
+        let p = QuantParams::from_min_max(-6.0, 6.0, 0, 255);
+        let x = Tensor::from_vec(&[1, 5], vec![-1.0f32, 3.0, 0.0, -5.0, 2.0]);
+        let q = QTensor::quantize(&x, p);
+        let out = qsoftmax(&q);
+        let arg = out.data.data().iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        assert_eq!(arg, 1);
+    }
+
+    #[test]
+    fn qlogistic_tracks_float() {
+        let p = QuantParams::from_min_max(-8.0, 8.0, 0, 255);
+        let xs: Vec<f32> = (-16..=16).map(|i| i as f32 / 2.0).collect();
+        let n = xs.len();
+        let q = QTensor::quantize(&Tensor::from_vec(&[n], xs), p);
+        let got = qlogistic(&q).dequantize();
+        let want = logistic_f32(&q.dequantize());
+        assert!(want.max_abs_diff(&got) < 0.01);
+    }
+
+    #[test]
+    fn qtanh_tracks_float_and_is_centred() {
+        let p = QuantParams::from_min_max(-4.0, 4.0, 0, 255);
+        let xs: Vec<f32> = (-16..=16).map(|i| i as f32 / 4.0).collect();
+        let n = xs.len();
+        let q = QTensor::quantize(&Tensor::from_vec(&[n], xs.clone()), p);
+        let got = qtanh(&q).dequantize();
+        let want = tanh_f32(&q.dequantize());
+        assert!(want.max_abs_diff(&got) < 0.02);
+        // tanh(0) must map to exactly the zero point.
+        let zero_q = QTensor::quantize(&Tensor::from_vec(&[1], vec![0.0f32]), p);
+        assert_eq!(qtanh(&zero_q).data.data()[0], 128);
+    }
+}

@@ -1,0 +1,341 @@
+//! 2-D convolution as im2col + the quantized GEMM of §2.2–2.4, plus its
+//! float32 twin.
+//!
+//! Patches are gathered into a `K×N` matrix (`K = KH·KW·Cin`, `N = batch ×
+//! output positions`) whose **padding entries are filled with the input's
+//! zero-point** — this is exactly why §2.1 requires real 0.0 to be exactly
+//! representable. The weights form the `M×K` LHS (`M = Cout`), so the bias /
+//! requantize / clamp output pipeline applies per output channel, matching
+//! the fused-layer layout of figure 1.1a.
+
+use crate::gemm::{output::OutputStage, Kernel, QGemm};
+use crate::nn::{FusedActivation, Padding, QTensor};
+use crate::quant::{QuantParams, QuantizedMultiplier};
+use crate::tensor::Tensor;
+
+/// A fused quantized convolution layer: uint8 in → uint8 out (fig. 1.1a).
+#[derive(Clone, Debug)]
+pub struct QConv2d {
+    /// Weights, OHWI layout `[Cout, KH, KW, Cin]`, uint8 narrow range.
+    pub weights: Tensor<u8>,
+    pub weight_params: QuantParams,
+    /// int32 bias quantized per eq. 11 (empty = no bias).
+    pub bias: Vec<i32>,
+    pub stride: usize,
+    pub padding: Padding,
+    /// Input activation quantization (fixed at conversion time).
+    pub input_params: QuantParams,
+    /// Output activation quantization.
+    pub output_params: QuantParams,
+    pub activation: FusedActivation,
+}
+
+impl QConv2d {
+    /// Derived output stage (multiplier per eq. 5, clamp per activation).
+    pub fn output_stage(&self) -> OutputStage {
+        let multiplier = QuantizedMultiplier::from_f64(
+            self.weight_params.scale * self.input_params.scale / self.output_params.scale,
+        );
+        let (clamp_min, clamp_max) = self
+            .activation
+            .clamp_bounds(self.output_params.scale, self.output_params.zero_point);
+        OutputStage {
+            bias: self.bias.clone(),
+            multiplier,
+            out_zero: self.output_params.zero_point,
+            clamp_min,
+            clamp_max,
+        }
+    }
+
+    /// Run the layer on a quantized input (NHWC).
+    pub fn run(&self, input: &QTensor, kern: Kernel) -> QTensor {
+        assert_eq!(
+            input.params.zero_point, self.input_params.zero_point,
+            "input must be quantized with the layer's input params"
+        );
+        let x = &input.data;
+        let (batch, ih, iw, cin) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+        let (cout, kh, kw, wcin) = (
+            self.weights.dim(0),
+            self.weights.dim(1),
+            self.weights.dim(2),
+            self.weights.dim(3),
+        );
+        assert_eq!(cin, wcin, "channel mismatch");
+        let (oh, pad_h) = self.padding.resolve(ih, kh, self.stride);
+        let (ow, pad_w) = self.padding.resolve(iw, kw, self.stride);
+
+        let k = kh * kw * cin;
+        let n = batch * oh * ow;
+        // im2col with zero-point padding (§2.1).
+        let cols = im2col(x, kh, kw, self.stride, pad_h, pad_w, oh, ow, input.params.zero_point as u8);
+        debug_assert_eq!(cols.len(), k * n);
+
+        let g = QGemm::new(cout, k, n, self.weight_params.zero_point, input.params.zero_point);
+        let stage = self.output_stage();
+        let mut out_cm = vec![0u8; cout * n]; // [Cout][N] channel-major
+        g.run(kern, self.weights.data(), &cols, &stage, &mut out_cm);
+
+        // Scatter back to NHWC.
+        let mut out = Tensor::zeros(&[batch, oh, ow, cout]);
+        let od = out.data_mut();
+        for c in 0..cout {
+            let row = &out_cm[c * n..(c + 1) * n];
+            for (pos, &v) in row.iter().enumerate() {
+                od[pos * cout + c] = v;
+            }
+        }
+        QTensor { data: out, params: self.output_params }
+    }
+}
+
+/// Gather convolution patches into a row-major `K×N` matrix
+/// (`K = KH·KW·Cin` rows, `N = batch·OH·OW` columns); out-of-bounds taps
+/// read the zero-point.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &Tensor<u8>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    oh: usize,
+    ow: usize,
+    zero: u8,
+) -> Vec<u8> {
+    let (batch, ih, iw, cin) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let k = kh * kw * cin;
+    let n = batch * oh * ow;
+    let mut cols = vec![zero; k * n];
+    let xd = x.data();
+    for b in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let col = (b * oh + oy) * ow + ox;
+                for ky in 0..kh {
+                    let y = (oy * stride + ky) as isize - pad_h as isize;
+                    if y < 0 || y >= ih as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let xx = (ox * stride + kx) as isize - pad_w as isize;
+                        if xx < 0 || xx >= iw as isize {
+                            continue;
+                        }
+                        let src = ((b * ih + y as usize) * iw + xx as usize) * cin;
+                        let row0 = (ky * kw + kx) * cin;
+                        for c in 0..cin {
+                            cols[(row0 + c) * n + col] = xd[src + c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// Float reference convolution (the paper's float baseline path).
+#[derive(Clone, Debug)]
+pub struct Conv2d {
+    /// Weights OHWI `[Cout, KH, KW, Cin]`.
+    pub weights: Tensor<f32>,
+    pub bias: Vec<f32>,
+    pub stride: usize,
+    pub padding: Padding,
+    pub activation: FusedActivation,
+}
+
+impl Conv2d {
+    pub fn run(&self, x: &Tensor<f32>) -> Tensor<f32> {
+        let (batch, ih, iw, cin) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+        let (cout, kh, kw, wcin) = (
+            self.weights.dim(0),
+            self.weights.dim(1),
+            self.weights.dim(2),
+            self.weights.dim(3),
+        );
+        assert_eq!(cin, wcin);
+        let (oh, pad_h) = self.padding.resolve(ih, kh, self.stride);
+        let (ow, pad_w) = self.padding.resolve(iw, kw, self.stride);
+        let mut out = Tensor::zeros(&[batch, oh, ow, cout]);
+        let wd = self.weights.data();
+        for b in 0..batch {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for co in 0..cout {
+                        let mut acc = if self.bias.is_empty() { 0.0 } else { self.bias[co] };
+                        for ky in 0..kh {
+                            let y = (oy * self.stride + ky) as isize - pad_h as isize;
+                            if y < 0 || y >= ih as isize {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let xx = (ox * self.stride + kx) as isize - pad_w as isize;
+                                if xx < 0 || xx >= iw as isize {
+                                    continue;
+                                }
+                                for c in 0..cin {
+                                    acc += x.at4(b, y as usize, xx as usize, c)
+                                        * wd[((co * kh + ky) * kw + kx) * cin + c];
+                                }
+                            }
+                        }
+                        out.set4(b, oy, ox, co, apply_activation_f32(acc, self.activation));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Float-side fused activation.
+#[inline]
+pub fn apply_activation_f32(x: f32, act: FusedActivation) -> f32 {
+    match act {
+        FusedActivation::None => x,
+        FusedActivation::Relu => x.max(0.0),
+        FusedActivation::Relu6 => x.clamp(0.0, 6.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    /// Build a quantized layer mirroring a float layer, with output params
+    /// calibrated from the float output's true range.
+    fn quantize_layer(fl: &Conv2d, input_params: QuantParams, out_min: f32, out_max: f32) -> QConv2d {
+        let wp = QuantParams::for_weights(fl.weights.data(), 8);
+        let weights = fl.weights.map(|v| wp.quantize(v) as u8);
+        let bp = QuantParams::for_bias(&wp, &input_params);
+        let bias = bp.quantize_bias_slice(&fl.bias);
+        QConv2d {
+            weights,
+            weight_params: wp,
+            bias,
+            stride: fl.stride,
+            padding: fl.padding,
+            input_params,
+            output_params: QuantParams::from_min_max(f64::from(out_min), f64::from(out_max), 0, 255),
+            activation: fl.activation,
+        }
+    }
+
+    fn random_float_conv(rng: &mut Rng, cout: usize, kh: usize, kw: usize, cin: usize) -> Conv2d {
+        let mut w = vec![0f32; cout * kh * kw * cin];
+        rng.fill_normal(&mut w, 0.3);
+        let bias: Vec<f32> = (0..cout).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        Conv2d {
+            weights: Tensor::from_vec(&[cout, kh, kw, cin], w),
+            bias,
+            stride: 1,
+            padding: Padding::Same,
+            activation: FusedActivation::None,
+        }
+    }
+
+    #[test]
+    fn quantized_conv_tracks_float_conv() {
+        let mut rng = Rng::seeded(21);
+        for (stride, padding, act) in [
+            (1, Padding::Same, FusedActivation::None),
+            (2, Padding::Same, FusedActivation::Relu),
+            (1, Padding::Valid, FusedActivation::Relu6),
+        ] {
+            let mut fl = random_float_conv(&mut rng, 6, 3, 3, 4);
+            fl.stride = stride;
+            fl.padding = padding;
+            fl.activation = act;
+
+            let mut xd = vec![0f32; 2 * 8 * 8 * 4];
+            for v in xd.iter_mut() {
+                *v = rng.range_f32(-1.0, 1.0);
+            }
+            let x = Tensor::from_vec(&[2, 8, 8, 4], xd);
+            let want = fl.run(&x);
+            let (omin, omax) = want.min_max();
+
+            let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+            let ql = quantize_layer(&fl, ip, omin, omax);
+            let qx = QTensor::quantize(&x, ip);
+            let got = ql.run(&qx, Kernel::Int8Pairwise).dequantize();
+
+            // Error budget: input quant (S_in/2 per tap, amplified by L1 of
+            // weights) + weight quant + output rounding. Empirically well
+            // under 4 output LSBs for these magnitudes.
+            let tol = (ql.output_params.scale * 4.0) as f32 + 0.02;
+            let diff = want.max_abs_diff(&got);
+            assert!(diff < tol, "stride={stride} {padding:?} {act:?}: diff {diff} tol {tol}");
+        }
+    }
+
+    #[test]
+    fn conv_kernels_agree() {
+        let mut rng = Rng::seeded(5);
+        let fl = random_float_conv(&mut rng, 5, 3, 3, 3);
+        let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let ql = quantize_layer(&fl, ip, -4.0, 4.0);
+        let mut xd = vec![0f32; 1 * 7 * 7 * 3];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let qx = QTensor::quantize(&Tensor::from_vec(&[1, 7, 7, 3], xd), ip);
+        let a = ql.run(&qx, Kernel::Reference);
+        let b = ql.run(&qx, Kernel::Blocked);
+        let c = ql.run(&qx, Kernel::Int8Pairwise);
+        assert_eq!(a.data.data(), b.data.data());
+        assert_eq!(a.data.data(), c.data.data());
+    }
+
+    #[test]
+    fn padding_uses_zero_point() {
+        // A conv over an all-real-zero input with SAME padding must behave
+        // as if the padded border is also real zero — i.e. output = bias.
+        let w = Tensor::from_vec(&[1, 3, 3, 1], vec![0.5f32; 9]);
+        let fl = Conv2d {
+            weights: w,
+            bias: vec![0.25],
+            stride: 1,
+            padding: Padding::Same,
+            activation: FusedActivation::None,
+        };
+        let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let ql = quantize_layer(&fl, ip, -1.0, 1.0);
+        let x = Tensor::from_vec(&[1, 4, 4, 1], vec![0.0f32; 16]);
+        let got = ql.run(&QTensor::quantize(&x, ip), Kernel::Reference).dequantize();
+        for &v in got.data() {
+            assert!((v - 0.25).abs() < (ql.output_params.scale * 1.5) as f32, "{v}");
+        }
+    }
+
+    #[test]
+    fn output_shapes() {
+        let mut rng = Rng::seeded(2);
+        let fl = random_float_conv(&mut rng, 4, 3, 3, 2);
+        let x = Tensor::zeros(&[2, 9, 9, 2]);
+        assert_eq!(fl.run(&x).shape(), &[2, 9, 9, 4]);
+        let mut fl2 = random_float_conv(&mut rng, 4, 3, 3, 2);
+        fl2.stride = 2;
+        assert_eq!(fl2.run(&x).shape(), &[2, 5, 5, 4]);
+        fl2.padding = Padding::Valid;
+        assert_eq!(fl2.run(&x).shape(), &[2, 4, 4, 4]);
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1, no pad: im2col is a pure transpose.
+        let x = Tensor::from_vec(&[1, 2, 2, 3], (0..12).map(|v| v as u8).collect());
+        let cols = im2col(&x, 1, 1, 1, 0, 0, 2, 2, 99);
+        // K=3 rows, N=4 cols; cols[c*4 + pos] = x[pos*3 + c]
+        for pos in 0..4 {
+            for c in 0..3 {
+                assert_eq!(cols[c * 4 + pos], x.data()[pos * 3 + c]);
+            }
+        }
+    }
+}

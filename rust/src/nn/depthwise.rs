@@ -1,0 +1,241 @@
+//! Depthwise 2-D convolution — the workhorse of MobileNets (§4.2) and of
+//! the separable SSD prediction layers the paper swaps in for COCO (§4.2.2).
+//!
+//! Each input channel is convolved with its own `KH×KW` filter; there is no
+//! cross-channel reduction, so the op is computed directly (im2col would
+//! build a block-diagonal matrix of zeros). The integer arithmetic per
+//! output value is exactly the fused-layer recipe of §2.4: int32 accumulate
+//! of `(q_w − Z_w)(q_x − Z_x)`, int32 bias, fixed-point requantize,
+//! saturate, clamp.
+
+use crate::gemm::output::OutputStage;
+use crate::nn::{conv::apply_activation_f32, FusedActivation, Padding, QTensor};
+use crate::quant::{QuantParams, QuantizedMultiplier};
+use crate::tensor::Tensor;
+
+/// Fused quantized depthwise convolution (channel multiplier 1).
+#[derive(Clone, Debug)]
+pub struct QDepthwiseConv2d {
+    /// Weights `[1, KH, KW, C]` (TFLite depthwise layout, multiplier 1).
+    pub weights: Tensor<u8>,
+    pub weight_params: QuantParams,
+    /// Per-channel int32 bias (eq. 11), empty = none.
+    pub bias: Vec<i32>,
+    pub stride: usize,
+    pub padding: Padding,
+    pub input_params: QuantParams,
+    pub output_params: QuantParams,
+    pub activation: FusedActivation,
+}
+
+impl QDepthwiseConv2d {
+    fn stage(&self) -> OutputStage {
+        let multiplier = QuantizedMultiplier::from_f64(
+            self.weight_params.scale * self.input_params.scale / self.output_params.scale,
+        );
+        let (clamp_min, clamp_max) = self
+            .activation
+            .clamp_bounds(self.output_params.scale, self.output_params.zero_point);
+        OutputStage {
+            bias: vec![], // applied per-channel inline below
+            multiplier,
+            out_zero: self.output_params.zero_point,
+            clamp_min,
+            clamp_max,
+        }
+    }
+
+    pub fn run(&self, input: &QTensor) -> QTensor {
+        let x = &input.data;
+        let (batch, ih, iw, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+        let (kh, kw) = (self.weights.dim(1), self.weights.dim(2));
+        assert_eq!(self.weights.dim(3), c, "depthwise channel mismatch");
+        let (oh, pad_h) = self.padding.resolve(ih, kh, self.stride);
+        let (ow, pad_w) = self.padding.resolve(iw, kw, self.stride);
+        let zw = self.weight_params.zero_point;
+        let zx = self.input_params.zero_point;
+        let stage = self.stage();
+        let xd = x.data();
+        // Channel-innermost schedule: pre-centre the weights once, then for
+        // each output pixel accumulate tap-by-tap over the contiguous
+        // channel vector — LLVM vectorizes the per-channel loops (the
+        // original per-channel tap loop was the engine's top bottleneck
+        // after the GEMM pass; EXPERIMENTS.md §Perf).
+        let w_centered: Vec<i32> =
+            self.weights.data().iter().map(|&w| i32::from(w) - zw).collect();
+
+        let mut out = Tensor::zeros(&[batch, oh, ow, c]);
+        let od = out.data_mut();
+        let mut acc = vec![0i32; c];
+        for b in 0..batch {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let obase = ((b * oh + oy) * ow + ox) * c;
+                    if self.bias.is_empty() {
+                        acc.fill(0);
+                    } else {
+                        acc.copy_from_slice(&self.bias);
+                    }
+                    for ky in 0..kh {
+                        let y = (oy * self.stride + ky) as isize - pad_h as isize;
+                        if y < 0 || y >= ih as isize {
+                            continue; // padded taps contribute (Z_x − Z_x)·w = 0
+                        }
+                        for kx in 0..kw {
+                            let xx = (ox * self.stride + kx) as isize - pad_w as isize;
+                            if xx < 0 || xx >= iw as isize {
+                                continue;
+                            }
+                            let wrow = &w_centered[(ky * kw + kx) * c..(ky * kw + kx) * c + c];
+                            let xbase = ((b * ih + y as usize) * iw + xx as usize) * c;
+                            let xrow = &xd[xbase..xbase + c];
+                            for ch in 0..c {
+                                acc[ch] += wrow[ch] * (i32::from(xrow[ch]) - zx);
+                            }
+                        }
+                    }
+                    for ch in 0..c {
+                        od[obase + ch] = stage.requantize_one(acc[ch]);
+                    }
+                }
+            }
+        }
+        QTensor { data: out, params: self.output_params }
+    }
+}
+
+/// Float reference depthwise convolution.
+#[derive(Clone, Debug)]
+pub struct DepthwiseConv2d {
+    pub weights: Tensor<f32>,
+    pub bias: Vec<f32>,
+    pub stride: usize,
+    pub padding: Padding,
+    pub activation: FusedActivation,
+}
+
+impl DepthwiseConv2d {
+    pub fn run(&self, x: &Tensor<f32>) -> Tensor<f32> {
+        let (batch, ih, iw, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+        let (kh, kw) = (self.weights.dim(1), self.weights.dim(2));
+        assert_eq!(self.weights.dim(3), c);
+        let (oh, pad_h) = self.padding.resolve(ih, kh, self.stride);
+        let (ow, pad_w) = self.padding.resolve(iw, kw, self.stride);
+        let wd = self.weights.data();
+        let mut out = Tensor::zeros(&[batch, oh, ow, c]);
+        for b in 0..batch {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ch in 0..c {
+                        let mut acc = if self.bias.is_empty() { 0.0 } else { self.bias[ch] };
+                        for ky in 0..kh {
+                            let y = (oy * self.stride + ky) as isize - pad_h as isize;
+                            if y < 0 || y >= ih as isize {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let xx = (ox * self.stride + kx) as isize - pad_w as isize;
+                                if xx < 0 || xx >= iw as isize {
+                                    continue;
+                                }
+                                acc += x.at4(b, y as usize, xx as usize, ch)
+                                    * wd[(ky * kw + kx) * c + ch];
+                            }
+                        }
+                        out.set4(b, oy, ox, ch, apply_activation_f32(acc, self.activation));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn make_pair(rng: &mut Rng, c: usize, stride: usize, act: FusedActivation) -> (DepthwiseConv2d, QDepthwiseConv2d) {
+        let mut w = vec![0f32; 9 * c];
+        rng.fill_normal(&mut w, 0.4);
+        let bias: Vec<f32> = (0..c).map(|_| rng.range_f32(-0.3, 0.3)).collect();
+        let fl = DepthwiseConv2d {
+            weights: Tensor::from_vec(&[1, 3, 3, c], w),
+            bias,
+            stride,
+            padding: Padding::Same,
+            activation: act,
+        };
+        let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let wp = QuantParams::for_weights(fl.weights.data(), 8);
+        let bp = QuantParams::for_bias(&wp, &ip);
+        let ql = QDepthwiseConv2d {
+            weights: fl.weights.map(|v| wp.quantize(v) as u8),
+            weight_params: wp,
+            bias: bp.quantize_bias_slice(&fl.bias),
+            stride,
+            padding: Padding::Same,
+            input_params: ip,
+            output_params: QuantParams::from_min_max(-4.0, 4.0, 0, 255),
+            activation: act,
+        };
+        (fl, ql)
+    }
+
+    #[test]
+    fn quantized_depthwise_tracks_float() {
+        let mut rng = Rng::seeded(31);
+        for (stride, act) in [(1, FusedActivation::None), (2, FusedActivation::Relu6)] {
+            let (fl, ql) = make_pair(&mut rng, 6, stride, act);
+            let mut xd = vec![0f32; 2 * 8 * 8 * 6];
+            for v in xd.iter_mut() {
+                *v = rng.range_f32(-1.0, 1.0);
+            }
+            let x = Tensor::from_vec(&[2, 8, 8, 6], xd);
+            let want = fl.run(&x);
+            let qx = QTensor::quantize(&x, ql.input_params);
+            let got = ql.run(&qx).dequantize();
+            let tol = (ql.output_params.scale * 3.0) as f32 + 0.02;
+            let diff = want.max_abs_diff(&got);
+            assert!(diff < tol, "stride={stride} {act:?}: diff {diff} tol {tol}");
+        }
+    }
+
+    #[test]
+    fn depthwise_channels_are_independent() {
+        // Zeroing one channel's weights must zero only that channel's output
+        // (up to the bias) — no cross-channel leakage.
+        let mut rng = Rng::seeded(17);
+        let (_, mut ql) = make_pair(&mut rng, 3, 1, FusedActivation::None);
+        ql.bias = vec![0; 3];
+        // Set channel-1 weights to the zero-point (= real 0).
+        let c = 3;
+        {
+            let wd = ql.weights.data_mut();
+            for t in 0..9 {
+                wd[t * c + 1] = ql.weight_params.zero_point as u8;
+            }
+        }
+        let ip = ql.input_params;
+        let mut xd = vec![0f32; 6 * 6 * 3];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let qx = QTensor::quantize(&Tensor::from_vec(&[1, 6, 6, 3], xd), ip);
+        let got = ql.run(&qx).dequantize();
+        for y in 0..6 {
+            for x in 0..6 {
+                assert!(got.at4(0, y, x, 1).abs() <= (ql.output_params.scale * 1.01) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn shape_matches_regular_conv_rules() {
+        let mut rng = Rng::seeded(8);
+        let (fl, _) = make_pair(&mut rng, 4, 2, FusedActivation::None);
+        let x = Tensor::zeros(&[1, 9, 9, 4]);
+        assert_eq!(fl.run(&x).shape(), &[1, 5, 5, 4]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Elementwise layers: Addition (App. A.2) and Concatenation (App. A.3).
+//!
+//! **Addition** needs *rescaling*: the two inputs generally carry different
+//! scales, so each `(q − Z)` is brought onto a common high-precision scale
+//! with a fixed-point multiply before the integer add, and the sum is
+//! rescaled once more onto the output's scale — "more expensive in
+//! quantized inference compared to floating-point" exactly as App. A.2
+//! notes.
+//!
+//! **Concatenation** is required to be lossless: instead of rescaling uint8
+//! values (lossy), the converter forces all inputs and the output of a
+//! concat to share one set of quantization parameters, making the op free
+//! of arithmetic (App. A.3). [`qconcat`] asserts that contract.
+
+use crate::fixedpoint::rounding_div_by_pot;
+use crate::nn::QTensor;
+use crate::quant::{QuantParams, QuantizedMultiplier};
+use crate::tensor::Tensor;
+
+/// Internal headroom for the Add rescale: inputs are promoted to a common
+/// `2^-SHIFT`-grained fixed-point scale before summation. 16 bits keeps
+/// `(q−Z) · 2^16 · M` within i32 for `M ≤ 64`.
+const ADD_LEFT_SHIFT: i32 = 16;
+
+/// Quantized elementwise addition with rescaling (App. A.2).
+pub fn qadd(a: &QTensor, b: &QTensor, out_params: QuantParams) -> QTensor {
+    assert_eq!(a.shape(), b.shape(), "add operands must have equal shapes");
+    // Promote both inputs onto the scale out_scale·2^-SHIFT.
+    let twopow = (1i64 << ADD_LEFT_SHIFT) as f64;
+    let ma = QuantizedMultiplier::from_f64(a.params.scale / out_params.scale * twopow);
+    let mb = QuantizedMultiplier::from_f64(b.params.scale / out_params.scale * twopow);
+    let za = a.params.zero_point;
+    let zb = b.params.zero_point;
+    let zo = out_params.zero_point;
+    let data: Vec<u8> = a
+        .data
+        .data()
+        .iter()
+        .zip(b.data.data())
+        .map(|(&qa, &qb)| {
+            let ra = ma.apply(i32::from(qa) - za);
+            let rb = mb.apply(i32::from(qb) - zb);
+            let sum = ra.saturating_add(rb);
+            let q = rounding_div_by_pot(sum, ADD_LEFT_SHIFT).saturating_add(zo);
+            q.clamp(0, 255) as u8
+        })
+        .collect();
+    QTensor { data: Tensor::from_vec(a.shape(), data), params: out_params }
+}
+
+/// Quantized concatenation along the channel (last) axis. All inputs and the
+/// output must share quantization parameters (App. A.3) — enforced here.
+pub fn qconcat(inputs: &[&QTensor], out_params: QuantParams) -> QTensor {
+    assert!(!inputs.is_empty());
+    for t in inputs {
+        assert_eq!(
+            (t.params.scale, t.params.zero_point),
+            (out_params.scale, out_params.zero_point),
+            "concat requires identical quantization parameters on every operand (App. A.3)"
+        );
+        assert_eq!(t.data.rank(), inputs[0].data.rank());
+    }
+    let rank = inputs[0].data.rank();
+    let lead: usize = inputs[0].shape()[..rank - 1].iter().product();
+    for t in inputs {
+        assert_eq!(t.shape()[..rank - 1], inputs[0].shape()[..rank - 1], "leading dims must match");
+    }
+    let c_total: usize = inputs.iter().map(|t| t.shape()[rank - 1]).sum();
+    let mut shape = inputs[0].shape().to_vec();
+    shape[rank - 1] = c_total;
+    let mut data = vec![0u8; lead * c_total];
+    for row in 0..lead {
+        let mut off = 0;
+        for t in inputs {
+            let c = t.shape()[rank - 1];
+            data[row * c_total + off..row * c_total + off + c]
+                .copy_from_slice(&t.data.data()[row * c..(row + 1) * c]);
+            off += c;
+        }
+    }
+    QTensor { data: Tensor::from_vec(&shape, data), params: out_params }
+}
+
+/// Float reference add.
+pub fn add_f32(a: &Tensor<f32>, b: &Tensor<f32>) -> Tensor<f32> {
+    assert_eq!(a.shape(), b.shape());
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x + y).collect();
+    Tensor::from_vec(a.shape(), data)
+}
+
+/// Float reference channel concat.
+pub fn concat_f32(inputs: &[&Tensor<f32>]) -> Tensor<f32> {
+    let rank = inputs[0].rank();
+    let lead: usize = inputs[0].shape()[..rank - 1].iter().product();
+    let c_total: usize = inputs.iter().map(|t| t.shape()[rank - 1]).sum();
+    let mut shape = inputs[0].shape().to_vec();
+    shape[rank - 1] = c_total;
+    let mut data = vec![0f32; lead * c_total];
+    for row in 0..lead {
+        let mut off = 0;
+        for t in inputs {
+            let c = t.shape()[rank - 1];
+            data[row * c_total + off..row * c_total + off + c]
+                .copy_from_slice(&t.data()[row * c..(row + 1) * c]);
+            off += c;
+        }
+    }
+    Tensor::from_vec(&shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn qadd_tracks_float_add_across_mismatched_scales() {
+        let mut rng = Rng::seeded(77);
+        let pa = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let pb = QuantParams::from_min_max(-4.0, 2.0, 0, 255); // different scale
+        let po = QuantParams::from_min_max(-5.0, 3.0, 0, 255);
+        let mut av = vec![0f32; 64];
+        let mut bv = vec![0f32; 64];
+        for v in av.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        for v in bv.iter_mut() {
+            *v = rng.range_f32(-4.0, 2.0);
+        }
+        let at = Tensor::from_vec(&[1, 4, 4, 4], av);
+        let bt = Tensor::from_vec(&[1, 4, 4, 4], bv);
+        let qa = QTensor::quantize(&at, pa);
+        let qb = QTensor::quantize(&bt, pb);
+        let got = qadd(&qa, &qb, po).dequantize();
+        let want = add_f32(&qa.dequantize(), &qb.dequantize());
+        // One output LSB plus the two rescale roundings.
+        let tol = (po.scale * 1.5) as f32;
+        assert!(want.max_abs_diff(&got) <= tol, "diff {}", want.max_abs_diff(&got));
+    }
+
+    #[test]
+    fn qadd_saturates_gracefully() {
+        let p = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let po = QuantParams::from_min_max(-0.5, 0.5, 0, 255); // output too narrow
+        let ones = Tensor::from_vec(&[4], vec![1.0f32; 4]);
+        let qa = QTensor::quantize(&ones, p);
+        let out = qadd(&qa, &qa, po); // real sum 2.0 ≫ 0.5
+        for &q in out.data.data() {
+            assert_eq!(q, 255, "must clamp at qmax");
+        }
+    }
+
+    #[test]
+    fn qconcat_is_lossless() {
+        let p = QuantParams::from_min_max(-2.0, 2.0, 0, 255);
+        let a = QTensor::quantize(&Tensor::from_vec(&[1, 2, 2, 2], vec![0.1f32; 8]), p);
+        let b = QTensor::quantize(&Tensor::from_vec(&[1, 2, 2, 3], vec![-0.7f32; 12]), p);
+        let out = qconcat(&[&a, &b], p);
+        assert_eq!(out.shape(), &[1, 2, 2, 5]);
+        // Bit-exact copies: concat performs no arithmetic.
+        for row in 0..4 {
+            assert_eq!(&out.data.data()[row * 5..row * 5 + 2], &a.data.data()[row * 2..row * 2 + 2]);
+            assert_eq!(&out.data.data()[row * 5 + 2..row * 5 + 5], &b.data.data()[row * 3..row * 3 + 3]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "identical quantization parameters")]
+    fn qconcat_rejects_mismatched_params() {
+        let p1 = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let p2 = QuantParams::from_min_max(-2.0, 2.0, 0, 255);
+        let a = QTensor::real_zeros(&[1, 1, 1, 2], p1);
+        let b = QTensor::real_zeros(&[1, 1, 1, 2], p2);
+        let _ = qconcat(&[&a, &b], p1);
+    }
+
+    #[test]
+    fn concat_f32_matches_layout() {
+        let a = Tensor::from_vec(&[1, 1, 2, 1], vec![1.0f32, 2.0]);
+        let b = Tensor::from_vec(&[1, 1, 2, 2], vec![3.0f32, 4.0, 5.0, 6.0]);
+        let out = concat_f32(&[&a, &b]);
+        assert_eq!(out.shape(), &[1, 1, 2, 3]);
+        assert_eq!(out.data(), &[1.0, 3.0, 4.0, 2.0, 5.0, 6.0]);
+    }
+}

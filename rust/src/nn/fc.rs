@@ -1,0 +1,181 @@
+//! Fully-connected (inner product) layer — the §2.4 reference fusion is
+//! specified for exactly this op in TFLite, and it is the matmul of §2.2
+//! with `M = units`, `K = input features`, `N = batch`.
+
+use crate::gemm::{output::OutputStage, Kernel, QGemm};
+use crate::nn::{conv::apply_activation_f32, FusedActivation, QTensor};
+use crate::quant::{QuantParams, QuantizedMultiplier};
+use crate::tensor::Tensor;
+
+/// Fused quantized fully-connected layer.
+#[derive(Clone, Debug)]
+pub struct QFullyConnected {
+    /// Weights `[units, in_features]`, uint8 narrow range.
+    pub weights: Tensor<u8>,
+    pub weight_params: QuantParams,
+    pub bias: Vec<i32>,
+    pub input_params: QuantParams,
+    pub output_params: QuantParams,
+    pub activation: FusedActivation,
+}
+
+impl QFullyConnected {
+    pub fn run(&self, input: &QTensor, kern: Kernel) -> QTensor {
+        let x = &input.data;
+        let batch = x.dim(0);
+        let feat: usize = x.shape()[1..].iter().product();
+        let units = self.weights.dim(0);
+        assert_eq!(self.weights.dim(1), feat, "feature mismatch");
+
+        // RHS must be K×N = features × batch: transpose the input.
+        let xd = x.data();
+        let mut rhs = vec![0u8; feat * batch];
+        for b in 0..batch {
+            for f in 0..feat {
+                rhs[f * batch + b] = xd[b * feat + f];
+            }
+        }
+        let multiplier = QuantizedMultiplier::from_f64(
+            self.weight_params.scale * self.input_params.scale / self.output_params.scale,
+        );
+        let (clamp_min, clamp_max) = self
+            .activation
+            .clamp_bounds(self.output_params.scale, self.output_params.zero_point);
+        let stage = OutputStage {
+            bias: self.bias.clone(),
+            multiplier,
+            out_zero: self.output_params.zero_point,
+            clamp_min,
+            clamp_max,
+        };
+        let g = QGemm::new(units, feat, batch, self.weight_params.zero_point, self.input_params.zero_point);
+        let mut out_cm = vec![0u8; units * batch];
+        g.run(kern, self.weights.data(), &rhs, &stage, &mut out_cm);
+
+        // Back to [batch, units].
+        let mut out = Tensor::zeros(&[batch, units]);
+        let od = out.data_mut();
+        for u in 0..units {
+            for b in 0..batch {
+                od[b * units + u] = out_cm[u * batch + b];
+            }
+        }
+        QTensor { data: out, params: self.output_params }
+    }
+}
+
+/// Float reference fully-connected layer.
+#[derive(Clone, Debug)]
+pub struct FullyConnected {
+    pub weights: Tensor<f32>,
+    pub bias: Vec<f32>,
+    pub activation: FusedActivation,
+}
+
+impl FullyConnected {
+    pub fn run(&self, x: &Tensor<f32>) -> Tensor<f32> {
+        let batch = x.dim(0);
+        let feat: usize = x.shape()[1..].iter().product();
+        let units = self.weights.dim(0);
+        assert_eq!(self.weights.dim(1), feat);
+        let xd = x.data();
+        let wd = self.weights.data();
+        let mut out = Tensor::zeros(&[batch, units]);
+        let od = out.data_mut();
+        for b in 0..batch {
+            for u in 0..units {
+                let mut acc = if self.bias.is_empty() { 0.0 } else { self.bias[u] };
+                for f in 0..feat {
+                    acc += xd[b * feat + f] * wd[u * feat + f];
+                }
+                od[b * units + u] = apply_activation_f32(acc, self.activation);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn quantized_fc_tracks_float() {
+        let mut rng = Rng::seeded(41);
+        let (units, feat, batch) = (10, 32, 4);
+        let mut w = vec![0f32; units * feat];
+        rng.fill_normal(&mut w, 0.25);
+        let bias: Vec<f32> = (0..units).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        let fl = FullyConnected {
+            weights: Tensor::from_vec(&[units, feat], w),
+            bias,
+            activation: FusedActivation::None,
+        };
+        let mut xd = vec![0f32; batch * feat];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let x = Tensor::from_vec(&[batch, feat], xd);
+        let want = fl.run(&x);
+        let (omin, omax) = want.min_max();
+
+        let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let wp = QuantParams::for_weights(fl.weights.data(), 8);
+        let bp = QuantParams::for_bias(&wp, &ip);
+        let ql = QFullyConnected {
+            weights: fl.weights.map(|v| wp.quantize(v) as u8),
+            weight_params: wp,
+            bias: bp.quantize_bias_slice(&fl.bias),
+            input_params: ip,
+            output_params: QuantParams::from_min_max(f64::from(omin), f64::from(omax), 0, 255),
+            activation: FusedActivation::None,
+        };
+        let got = ql.run(&QTensor::quantize(&x, ip), Kernel::Int8Pairwise).dequantize();
+        let tol = (ql.output_params.scale * 4.0) as f32 + 0.02;
+        let diff = want.max_abs_diff(&got);
+        assert!(diff < tol, "diff {diff} tol {tol}");
+    }
+
+    #[test]
+    fn fc_flattens_rank4_inputs() {
+        let mut rng = Rng::seeded(6);
+        let mut w = vec![0f32; 3 * 18];
+        rng.fill_normal(&mut w, 0.3);
+        let fl = FullyConnected {
+            weights: Tensor::from_vec(&[3, 18], w),
+            bias: vec![],
+            activation: FusedActivation::None,
+        };
+        let x = Tensor::zeros(&[2, 3, 3, 2]); // 18 features
+        assert_eq!(fl.run(&x).shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn batch_rows_are_independent() {
+        let mut rng = Rng::seeded(61);
+        let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let mut w = vec![0f32; 4 * 8];
+        rng.fill_normal(&mut w, 0.3);
+        let wp = QuantParams::for_weights(&w, 8);
+        let wq = Tensor::from_vec(&[4, 8], wp.quantize_slice(&w));
+        let ql = QFullyConnected {
+            weights: wq,
+            weight_params: wp,
+            bias: vec![],
+            input_params: ip,
+            output_params: QuantParams::from_min_max(-3.0, 3.0, 0, 255),
+            activation: FusedActivation::None,
+        };
+        let mut x1 = vec![0f32; 8];
+        let mut x2 = vec![0f32; 8];
+        rng.fill_normal(&mut x1, 0.5);
+        rng.fill_normal(&mut x2, 0.5);
+        let both: Vec<f32> = x1.iter().chain(&x2).copied().collect();
+        let qb = ql.run(&QTensor::quantize(&Tensor::from_vec(&[2, 8], both), ip), Kernel::Blocked);
+        let q1 = ql.run(&QTensor::quantize(&Tensor::from_vec(&[1, 8], x1), ip), Kernel::Blocked);
+        let q2 = ql.run(&QTensor::quantize(&Tensor::from_vec(&[1, 8], x2), ip), Kernel::Blocked);
+        assert_eq!(&qb.data.data()[..4], q1.data.data());
+        assert_eq!(&qb.data.data()[4..], q2.data.data());
+    }
+}

@@ -1,0 +1,124 @@
+//! Quantized neural-network operators (§2.4, App. A) and their float32
+//! reference twins.
+//!
+//! Every quantized op consumes/produces [`QTensor`]s — uint8 data plus the
+//! affine [`QuantParams`] of eq. 1 — and computes with integers only;
+//! the matching `*_f32` twin is the float path the paper benchmarks against
+//! (its "Eigen" baseline). The op set covers what MobileNet-style
+//! classifiers and SSD-lite detectors need:
+//!
+//! * [`conv`] — conv2d as im2col + the quantized GEMM (fused bias/requant/clamp)
+//! * [`depthwise`] — depthwise conv2d (direct, §4.2.2's separable convs)
+//! * [`fc`] — fully connected
+//! * [`elementwise`] — Add with rescaling (App. A.2), Concat with shared
+//!   params (App. A.3)
+//! * [`pool`] — average / max pooling on quantized values
+//! * [`activations`] — fixed-point softmax / logistic / tanh (App. A.1)
+
+pub mod activations;
+pub mod conv;
+pub mod depthwise;
+pub mod elementwise;
+pub mod fc;
+pub mod pool;
+
+pub use crate::gemm::output::FusedActivation;
+use crate::quant::QuantParams;
+use crate::tensor::Tensor;
+
+/// A quantized activation array: uint8 storage plus its quantization
+/// parameters — the paper's "quantized buffer" data structure (§2.1).
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub data: Tensor<u8>,
+    pub params: QuantParams,
+}
+
+impl QTensor {
+    /// Quantize a real-valued tensor under `params`.
+    pub fn quantize(real: &Tensor<f32>, params: QuantParams) -> Self {
+        let data = real.map(|v| params.quantize(v) as u8);
+        Self { data, params }
+    }
+
+    /// Dequantize back to real values (eq. 1).
+    pub fn dequantize(&self) -> Tensor<f32> {
+        let p = self.params;
+        self.data.map(|q| p.dequantize(i32::from(q)))
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.data.shape()
+    }
+
+    /// A tensor of zeros *in real space*: filled with the zero-point, which
+    /// is exactly why the zero-point must exist (§2.1 zero-padding).
+    pub fn real_zeros(shape: &[usize], params: QuantParams) -> Self {
+        Self { data: Tensor::full(shape, params.zero_point as u8), params }
+    }
+}
+
+/// Spatial padding mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Padding {
+    /// Output spatial size = ceil(input / stride); zero-pads evenly.
+    Same,
+    /// No padding; output = floor((input - kernel) / stride) + 1.
+    Valid,
+}
+
+impl Padding {
+    /// (output size, pad before) along one spatial dim.
+    pub fn resolve(self, input: usize, kernel: usize, stride: usize) -> (usize, usize) {
+        match self {
+            Padding::Valid => {
+                assert!(input >= kernel, "VALID padding needs input >= kernel");
+                ((input - kernel) / stride + 1, 0)
+            }
+            Padding::Same => {
+                let out = input.div_ceil(stride);
+                let needed = ((out - 1) * stride + kernel).saturating_sub(input);
+                (out, needed / 2)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qtensor_roundtrip() {
+        let p = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let real = Tensor::from_vec(&[1, 2, 2, 1], vec![-1.0f32, -0.5, 0.5, 1.0]);
+        let q = QTensor::quantize(&real, p);
+        let back = q.dequantize();
+        assert!(real.max_abs_diff(&back) <= p.scale as f32);
+    }
+
+    #[test]
+    fn real_zeros_dequantize_to_exactly_zero() {
+        let p = QuantParams::from_min_max(-3.7, 9.1, 0, 255);
+        let z = QTensor::real_zeros(&[1, 2, 2, 3], p);
+        for &v in z.dequantize().data() {
+            assert_eq!(v, 0.0);
+        }
+    }
+
+    #[test]
+    fn padding_same_resolves() {
+        // 8 input, 3 kernel, stride 1 → out 8, pad 1.
+        assert_eq!(Padding::Same.resolve(8, 3, 1), (8, 1));
+        // stride 2 → out 4, total pad 1 (before 0).
+        assert_eq!(Padding::Same.resolve(8, 3, 2), (4, 0));
+        assert_eq!(Padding::Same.resolve(9, 3, 2), (5, 1));
+    }
+
+    #[test]
+    fn padding_valid_resolves() {
+        assert_eq!(Padding::Valid.resolve(8, 3, 1), (6, 0));
+        assert_eq!(Padding::Valid.resolve(8, 3, 2), (3, 0));
+        assert_eq!(Padding::Valid.resolve(8, 8, 1), (1, 0));
+    }
+}

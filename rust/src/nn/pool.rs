@@ -1,0 +1,248 @@
+//! Pooling on quantized activations.
+//!
+//! Max pooling is monotone in `q` so it runs directly on the uint8 values
+//! with unchanged quantization parameters. Average pooling keeps the input
+//! parameters too (the mean of values in `[a,b]` stays in `[a,b]`) and
+//! computes the integer mean with round-to-nearest — no requantization
+//! needed, as in TFLite.
+
+use crate::nn::{Padding, QTensor};
+use crate::tensor::Tensor;
+
+/// Quantized max pooling, NHWC.
+pub fn qmax_pool(input: &QTensor, kernel: usize, stride: usize, padding: Padding) -> QTensor {
+    let x = &input.data;
+    let (batch, ih, iw, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, pad_h) = padding.resolve(ih, kernel, stride);
+    let (ow, pad_w) = padding.resolve(iw, kernel, stride);
+    let mut out = Tensor::zeros(&[batch, oh, ow, c]);
+    for b in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let mut best = u8::MIN;
+                    let mut any = false;
+                    for ky in 0..kernel {
+                        let y = (oy * stride + ky) as isize - pad_h as isize;
+                        if y < 0 || y >= ih as isize {
+                            continue;
+                        }
+                        for kx in 0..kernel {
+                            let xx = (ox * stride + kx) as isize - pad_w as isize;
+                            if xx < 0 || xx >= iw as isize {
+                                continue;
+                            }
+                            best = best.max(x.at4(b, y as usize, xx as usize, ch));
+                            any = true;
+                        }
+                    }
+                    // Padding taps are excluded (TFLite semantics); a window
+                    // fully in padding can't occur with SAME/VALID resolve.
+                    debug_assert!(any);
+                    out.set4(b, oy, ox, ch, best);
+                }
+            }
+        }
+    }
+    QTensor { data: out, params: input.params }
+}
+
+/// Quantized average pooling with round-to-nearest integer mean, NHWC.
+pub fn qavg_pool(input: &QTensor, kernel: usize, stride: usize, padding: Padding) -> QTensor {
+    let x = &input.data;
+    let (batch, ih, iw, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, pad_h) = padding.resolve(ih, kernel, stride);
+    let (ow, pad_w) = padding.resolve(iw, kernel, stride);
+    let mut out = Tensor::zeros(&[batch, oh, ow, c]);
+    for b in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let mut sum = 0i32;
+                    let mut count = 0i32;
+                    for ky in 0..kernel {
+                        let y = (oy * stride + ky) as isize - pad_h as isize;
+                        if y < 0 || y >= ih as isize {
+                            continue;
+                        }
+                        for kx in 0..kernel {
+                            let xx = (ox * stride + kx) as isize - pad_w as isize;
+                            if xx < 0 || xx >= iw as isize {
+                                continue;
+                            }
+                            sum += i32::from(x.at4(b, y as usize, xx as usize, ch));
+                            count += 1;
+                        }
+                    }
+                    let avg = (sum + count / 2) / count; // round-to-nearest
+                    out.set4(b, oy, ox, ch, avg as u8);
+                }
+            }
+        }
+    }
+    QTensor { data: out, params: input.params }
+}
+
+/// Global average pooling: NHWC → [batch, 1, 1, C].
+pub fn qglobal_avg_pool(input: &QTensor) -> QTensor {
+    let x = &input.data;
+    let (batch, ih, iw, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let area = (ih * iw) as i32;
+    let mut out = Tensor::zeros(&[batch, 1, 1, c]);
+    for b in 0..batch {
+        for ch in 0..c {
+            let mut sum = 0i32;
+            for y in 0..ih {
+                for xx in 0..iw {
+                    sum += i32::from(x.at4(b, y, xx, ch));
+                }
+            }
+            out.set4(b, 0, 0, ch, ((sum + area / 2) / area) as u8);
+        }
+    }
+    QTensor { data: out, params: input.params }
+}
+
+/// Float reference average pool.
+pub fn avg_pool_f32(x: &Tensor<f32>, kernel: usize, stride: usize, padding: Padding) -> Tensor<f32> {
+    let (batch, ih, iw, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, pad_h) = padding.resolve(ih, kernel, stride);
+    let (ow, pad_w) = padding.resolve(iw, kernel, stride);
+    let mut out = Tensor::zeros(&[batch, oh, ow, c]);
+    for b in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let mut sum = 0f32;
+                    let mut count = 0f32;
+                    for ky in 0..kernel {
+                        let y = (oy * stride + ky) as isize - pad_h as isize;
+                        if y < 0 || y >= ih as isize {
+                            continue;
+                        }
+                        for kx in 0..kernel {
+                            let xx = (ox * stride + kx) as isize - pad_w as isize;
+                            if xx < 0 || xx >= iw as isize {
+                                continue;
+                            }
+                            sum += x.at4(b, y as usize, xx as usize, ch);
+                            count += 1.0;
+                        }
+                    }
+                    out.set4(b, oy, ox, ch, sum / count);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Float reference global average pool.
+pub fn global_avg_pool_f32(x: &Tensor<f32>) -> Tensor<f32> {
+    let (batch, ih, iw, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let mut out = Tensor::zeros(&[batch, 1, 1, c]);
+    for b in 0..batch {
+        for ch in 0..c {
+            let mut sum = 0f32;
+            for y in 0..ih {
+                for xx in 0..iw {
+                    sum += x.at4(b, y, xx, ch);
+                }
+            }
+            out.set4(b, 0, 0, ch, sum / (ih * iw) as f32);
+        }
+    }
+    out
+}
+
+/// Float reference max pool.
+pub fn max_pool_f32(x: &Tensor<f32>, kernel: usize, stride: usize, padding: Padding) -> Tensor<f32> {
+    let (batch, ih, iw, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (oh, pad_h) = padding.resolve(ih, kernel, stride);
+    let (ow, pad_w) = padding.resolve(iw, kernel, stride);
+    let mut out = Tensor::zeros(&[batch, oh, ow, c]);
+    for b in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    for ky in 0..kernel {
+                        let y = (oy * stride + ky) as isize - pad_h as isize;
+                        if y < 0 || y >= ih as isize {
+                            continue;
+                        }
+                        for kx in 0..kernel {
+                            let xx = (ox * stride + kx) as isize - pad_w as isize;
+                            if xx < 0 || xx >= iw as isize {
+                                continue;
+                            }
+                            best = best.max(x.at4(b, y as usize, xx as usize, ch));
+                        }
+                    }
+                    out.set4(b, oy, ox, ch, best);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::quant::QuantParams;
+
+    #[test]
+    fn qavg_tracks_float_avg() {
+        let mut rng = Rng::seeded(55);
+        let p = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let mut xd = vec![0f32; 8 * 8 * 3];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let x = Tensor::from_vec(&[1, 8, 8, 3], xd);
+        let q = QTensor::quantize(&x, p);
+        let got = qavg_pool(&q, 2, 2, Padding::Valid).dequantize();
+        let want = avg_pool_f32(&q.dequantize(), 2, 2, Padding::Valid);
+        assert!(want.max_abs_diff(&got) <= p.scale as f32);
+    }
+
+    #[test]
+    fn qmax_is_exact_in_quantized_domain() {
+        // Max over q equals quantize(max over r): monotone map.
+        let mut rng = Rng::seeded(56);
+        let p = QuantParams::from_min_max(-2.0, 2.0, 0, 255);
+        let mut xd = vec![0f32; 6 * 6 * 2];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-2.0, 2.0);
+        }
+        let x = Tensor::from_vec(&[1, 6, 6, 2], xd);
+        let q = QTensor::quantize(&x, p);
+        let got = qmax_pool(&q, 3, 3, Padding::Valid);
+        let want_f = max_pool_f32(&q.dequantize(), 3, 3, Padding::Valid);
+        let want = QTensor::quantize(&want_f, p);
+        assert_eq!(got.data.data(), want.data.data());
+    }
+
+    #[test]
+    fn global_avg_shapes_and_value() {
+        let p = QuantParams::from_min_max(0.0, 1.0, 0, 255);
+        let x = Tensor::from_vec(&[2, 2, 2, 1], vec![0.0f32, 0.0, 1.0, 1.0, 0.25, 0.25, 0.25, 0.25]);
+        let q = QTensor::quantize(&x, p);
+        let out = qglobal_avg_pool(&q);
+        assert_eq!(out.shape(), &[2, 1, 1, 1]);
+        let d = out.dequantize();
+        assert!((d.data()[0] - 0.5).abs() <= p.scale as f32);
+        assert!((d.data()[1] - 0.25).abs() <= p.scale as f32);
+    }
+
+    #[test]
+    fn pooling_preserves_params() {
+        let p = QuantParams::from_min_max(-1.0, 3.0, 0, 255);
+        let q = QTensor::real_zeros(&[1, 4, 4, 2], p);
+        assert_eq!(qmax_pool(&q, 2, 2, Padding::Valid).params, p);
+        assert_eq!(qavg_pool(&q, 2, 2, Padding::Valid).params, p);
+        assert_eq!(qglobal_avg_pool(&q).params, p);
+    }
+}

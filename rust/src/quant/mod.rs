@@ -1,0 +1,347 @@
+//! The paper's quantization scheme (§2.1): the affine map `r = S(q − Z)`.
+//!
+//! One [`QuantParams`] instance exists per weights array and per activations
+//! array (a single set of parameters for all values within an array; separate
+//! arrays use separate parameters). `S` is a positive real scale, `Z` a
+//! zero-point of the same integer type as `q`, constructed so the real value
+//! 0.0 is *exactly* representable — required so zero-padding introduces no
+//! error (§2.1).
+//!
+//! Submodules:
+//! * [`multiplier`] — offline normalization of `M = S1·S2/S3` into
+//!   `2^-n · M0` (eq. 5–6).
+//! * [`schemes`] — baseline weight quantizers (binary / ternary /
+//!   power-of-two / fine-grained) used for the Table 4.2 comparison.
+
+pub mod multiplier;
+pub mod schemes;
+
+pub use multiplier::{quantize_multiplier, QuantizedMultiplier};
+
+
+
+/// Affine quantization parameters for one array: `r = scale · (q − zero_point)`.
+///
+/// `qmin`/`qmax` carry the quantized range so the same struct covers 8-bit
+/// activations, B-bit ablations (Tables 4.7/4.8) and the narrow weight range
+/// `[1, 255]` (i.e. int8 `[-127, 127]`) used for the App. B optimization.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    /// The scale `S`: an arbitrary positive real (eq. 1). Stored as `f64` at
+    /// build/calibration time; it never appears on the integer hot path —
+    /// only the normalized multiplier derived from it does (§2.2).
+    pub scale: f64,
+    /// The zero-point `Z`: the quantized value corresponding to real 0.0.
+    pub zero_point: i32,
+    /// Smallest representable quantized value (0 for uint8, 1 for
+    /// narrow-range weights).
+    pub qmin: i32,
+    /// Largest representable quantized value (255 for uint8; `2^B − 1`).
+    pub qmax: i32,
+}
+
+impl QuantParams {
+    /// Unit scale, zero zero-point — identity-ish params for testing.
+    pub fn unit(qmin: i32, qmax: i32) -> Self {
+        Self { scale: 1.0, zero_point: 0, qmin, qmax }
+    }
+
+    /// Standard uint8 range `[0, 255]`.
+    pub fn uint8_range() -> (i32, i32) {
+        (0, 255)
+    }
+
+    /// Quantized range for `bits`-bit quantization stored in uint8
+    /// (Tables 4.7/4.8 sweep `bits ∈ {4..8}`); `narrow` drops the lowest
+    /// value so symmetric int8 weights avoid −128 (App. B, §3.1).
+    pub fn range_for_bits(bits: u32, narrow: bool) -> (i32, i32) {
+        assert!((2..=8).contains(&bits), "bit depth must be in [2, 8]");
+        (i32::from(narrow), (1i32 << bits) - 1)
+    }
+
+    /// Choose quantization parameters from an observed real range
+    /// `[rmin, rmax]` (§3.1, eq. 13).
+    ///
+    /// The range is first widened to include 0.0 (so that `Z` exists), the
+    /// scale is `s(a,b,n) = (b − a)/(n − 1)` and the zero-point is *nudged*
+    /// to an integer so that real 0.0 maps exactly onto it — the paper's
+    /// "boundaries [a; b] are nudged so that value 0.0 is exactly
+    /// representable".
+    pub fn from_min_max(rmin: f64, rmax: f64, qmin: i32, qmax: i32) -> Self {
+        assert!(qmax > qmin);
+        // Widen to contain zero; a degenerate range still yields valid params.
+        let rmin = rmin.min(0.0);
+        let rmax = rmax.max(0.0);
+        if rmin == rmax {
+            return Self { scale: 1.0, zero_point: qmin, qmin, qmax };
+        }
+        let scale = (rmax - rmin) / f64::from(qmax - qmin);
+        // Ideal (real-valued) zero point, then nudge to the nearest integer
+        // in range. Following the TFLite converter we pick the candidate
+        // that minimizes the error on whichever boundary is closer to 0.
+        let zp_from_min = f64::from(qmin) - rmin / scale;
+        let zero_point = if zp_from_min < f64::from(qmin) {
+            qmin
+        } else if zp_from_min > f64::from(qmax) {
+            qmax
+        } else {
+            zp_from_min.round() as i32
+        };
+        Self { scale, zero_point, qmin, qmax }
+    }
+
+    /// Weight-array parameters: `a := min w, b := max w` with the narrow
+    /// range tweak so int8 weights never take −128 (§3.1, App. B).
+    pub fn for_weights(w: &[f32], bits: u32) -> Self {
+        let (mut mn, mut mx) = (0f32, 0f32);
+        for &v in w {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        let (qmin, qmax) = Self::range_for_bits(bits, true);
+        Self::from_min_max(f64::from(mn), f64::from(mx), qmin, qmax)
+    }
+
+    /// Bias-vector parameters (§2.4, eq. 11): int32 storage,
+    /// `S_bias = S_weights · S_input`, `Z_bias = 0`.
+    pub fn for_bias(weights: &QuantParams, input: &QuantParams) -> Self {
+        Self {
+            scale: weights.scale * input.scale,
+            zero_point: 0,
+            qmin: i32::MIN,
+            qmax: i32::MAX,
+        }
+    }
+
+    /// Quantize one real value: `q = clamp(round(r/S) + Z)`.
+    #[inline]
+    pub fn quantize(&self, r: f32) -> i32 {
+        let q = (f64::from(r) / self.scale).round() as i64 + i64::from(self.zero_point);
+        q.clamp(i64::from(self.qmin), i64::from(self.qmax)) as i32
+    }
+
+    /// Dequantize: `r = S (q − Z)` (eq. 1).
+    #[inline]
+    pub fn dequantize(&self, q: i32) -> f32 {
+        (self.scale * f64::from(q - self.zero_point)) as f32
+    }
+
+    /// Quantize a slice into u8 storage (valid when `qmax ≤ 255`).
+    pub fn quantize_slice(&self, r: &[f32]) -> Vec<u8> {
+        debug_assert!(self.qmax <= 255 && self.qmin >= 0);
+        r.iter().map(|&v| self.quantize(v) as u8).collect()
+    }
+
+    /// Quantize a bias slice into i32 storage.
+    pub fn quantize_bias_slice(&self, r: &[f32]) -> Vec<i32> {
+        r.iter().map(|&v| self.quantize(v)).collect()
+    }
+
+    /// Dequantize a u8 slice.
+    pub fn dequantize_slice(&self, q: &[u8]) -> Vec<f32> {
+        q.iter().map(|&v| self.dequantize(i32::from(v))).collect()
+    }
+
+    /// The real range `[a, b]` representable by these parameters.
+    pub fn real_range(&self) -> (f64, f64) {
+        (
+            self.scale * f64::from(self.qmin - self.zero_point),
+            self.scale * f64::from(self.qmax - self.zero_point),
+        )
+    }
+
+    /// Number of quantization levels `n` (eq. 12).
+    pub fn levels(&self) -> i64 {
+        i64::from(self.qmax) - i64::from(self.qmin) + 1
+    }
+}
+
+/// Simulated ("fake") quantization of a real value (eq. 12): quantize then
+/// dequantize in floating point — the forward arithmetic of the QAT graph,
+/// which the L1 Pallas kernel mirrors bit-for-bit.
+#[inline]
+pub fn fake_quantize(params: &QuantParams, r: f32) -> f32 {
+    params.dequantize(params.quantize(r))
+}
+
+/// Fake-quantize a slice in place.
+pub fn fake_quantize_slice(params: &QuantParams, r: &mut [f32]) {
+    for v in r.iter_mut() {
+        *v = fake_quantize(params, *v);
+    }
+}
+
+/// Track the min/max range of activations with an exponential moving average
+/// (§3.1): "we collect [a; b] ranges seen on activations during training and
+/// then aggregate them via EMA with the smoothing parameter close to 1".
+#[derive(Clone, Copy, Debug)]
+pub struct EmaRange {
+    pub min: f64,
+    pub max: f64,
+    pub decay: f64,
+    initialized: bool,
+}
+
+impl EmaRange {
+    pub fn new(decay: f64) -> Self {
+        assert!((0.0..1.0).contains(&decay));
+        Self { min: 0.0, max: 0.0, decay, initialized: false }
+    }
+
+    /// Fold one observed batch range into the EMA.
+    pub fn update(&mut self, batch_min: f64, batch_max: f64) {
+        if !self.initialized {
+            self.min = batch_min;
+            self.max = batch_max;
+            self.initialized = true;
+        } else {
+            self.min = self.decay * self.min + (1.0 - self.decay) * batch_min;
+            self.max = self.decay * self.max + (1.0 - self.decay) * batch_max;
+        }
+    }
+
+    /// Observe a slice of activations.
+    pub fn observe(&mut self, xs: &[f32]) {
+        if xs.is_empty() {
+            return;
+        }
+        let (mut mn, mut mx) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &x in xs {
+            mn = mn.min(f64::from(x));
+            mx = mx.max(f64::from(x));
+        }
+        self.update(mn, mx);
+    }
+
+    pub fn is_initialized(&self) -> bool {
+        self.initialized
+    }
+
+    /// Materialize quantization parameters from the smoothed range.
+    pub fn params(&self, qmin: i32, qmax: i32) -> QuantParams {
+        QuantParams::from_min_max(self.min, self.max, qmin, qmax)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_is_exactly_representable() {
+        // §2.1: real 0.0 must map to an integer zero-point with no error.
+        for (mn, mx) in [(-1.0, 1.0), (-0.3, 2.7), (0.1, 5.0), (-6.0, -0.01), (-128.3, 0.0)] {
+            let p = QuantParams::from_min_max(mn, mx, 0, 255);
+            let z = p.quantize(0.0);
+            assert_eq!(z, p.zero_point);
+            assert_eq!(p.dequantize(z), 0.0, "range ({mn},{mx})");
+        }
+    }
+
+    #[test]
+    fn range_widened_to_include_zero() {
+        let p = QuantParams::from_min_max(0.5, 2.0, 0, 255);
+        let (a, b) = p.real_range();
+        assert!(a <= 0.0 && b >= 2.0 - p.scale, "range ({a},{b})");
+    }
+
+    #[test]
+    fn quantize_dequantize_error_bounded_by_scale() {
+        // Interior points are within scale/2 of a grid point; because the
+        // grid is nudged (by up to scale/2) so that 0.0 is exact, boundary
+        // values can be up to one full scale away (§3.1).
+        let p = QuantParams::from_min_max(-3.0, 5.0, 0, 255);
+        for i in 0..1000 {
+            let r = -3.0 + 8.0 * (i as f32) / 1000.0;
+            let rq = p.dequantize(p.quantize(r));
+            assert!(
+                (f64::from(r) - f64::from(rq)).abs() <= p.scale + 1e-9,
+                "r={r} rq={rq} scale={}",
+                p.scale
+            );
+        }
+        // Away from the boundaries the half-scale bound holds.
+        for i in 0..1000 {
+            let r = -2.9 + 7.8 * (i as f32) / 1000.0;
+            let rq = p.dequantize(p.quantize(r));
+            assert!(
+                (f64::from(r) - f64::from(rq)).abs() <= p.scale / 2.0 + 1e-9,
+                "interior r={r} rq={rq}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_saturates_out_of_range() {
+        let p = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        assert_eq!(p.quantize(100.0), 255);
+        assert_eq!(p.quantize(-100.0), 0);
+    }
+
+    #[test]
+    fn narrow_range_weights_avoid_neg128() {
+        // App. B: int8 weights must stay in [-127, 127]; with uint8 storage
+        // and Z ∈ [1,255] that means q ∈ [1, 255].
+        let w: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) / 10.0).collect();
+        let p = QuantParams::for_weights(&w, 8);
+        assert!(p.qmin == 1 && p.qmax == 255);
+        for &v in &w {
+            let q = p.quantize(v);
+            assert!((1..=255).contains(&q));
+            // int8 view: q - 128 ∈ [-127, 127]
+            assert!((q - 128).abs() <= 127);
+        }
+    }
+
+    #[test]
+    fn bias_params_follow_eq_11() {
+        let wp = QuantParams::from_min_max(-0.5, 0.5, 1, 255);
+        let ip = QuantParams::from_min_max(0.0, 6.0, 0, 255);
+        let bp = QuantParams::for_bias(&wp, &ip);
+        assert_eq!(bp.zero_point, 0);
+        assert!((bp.scale - wp.scale * ip.scale).abs() < 1e-15);
+    }
+
+    #[test]
+    fn bit_depth_ranges() {
+        assert_eq!(QuantParams::range_for_bits(8, false), (0, 255));
+        assert_eq!(QuantParams::range_for_bits(8, true), (1, 255));
+        assert_eq!(QuantParams::range_for_bits(7, false), (0, 127));
+        assert_eq!(QuantParams::range_for_bits(4, false), (0, 15));
+    }
+
+    #[test]
+    fn fake_quant_is_idempotent() {
+        let p = QuantParams::from_min_max(-2.0, 2.0, 0, 255);
+        for i in 0..100 {
+            let r = -2.0 + 4.0 * (i as f32) / 100.0;
+            let once = fake_quantize(&p, r);
+            let twice = fake_quantize(&p, once);
+            assert_eq!(once, twice);
+        }
+    }
+
+    #[test]
+    fn ema_range_smooths() {
+        let mut ema = EmaRange::new(0.9);
+        ema.update(-1.0, 1.0);
+        assert_eq!((ema.min, ema.max), (-1.0, 1.0)); // first obs initializes
+        ema.update(-3.0, 3.0);
+        assert!((ema.min - (-1.2)).abs() < 1e-12);
+        assert!((ema.max - 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_range_is_valid() {
+        let p = QuantParams::from_min_max(0.0, 0.0, 0, 255);
+        assert_eq!(p.quantize(0.0), p.zero_point);
+        assert_eq!(p.dequantize(p.zero_point), 0.0);
+    }
+
+    #[test]
+    fn levels_match_bit_depth() {
+        let (qmin, qmax) = QuantParams::range_for_bits(7, false);
+        let p = QuantParams::from_min_max(-1.0, 1.0, qmin, qmax);
+        assert_eq!(p.levels(), 128);
+    }
+}

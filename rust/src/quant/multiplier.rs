@@ -1,0 +1,164 @@
+//! Offline normalization of the real multiplier `M = S1·S2/S3` (eq. 5) into
+//! the integer-friendly form `M = 2^-n · M0` with `M0 ∈ [0.5, 1)` (eq. 6).
+//!
+//! `M0` is stored as the int32 nearest to `2^31·M0`; because `M0 ≥ 0.5` the
+//! stored value is at least `2^30`, guaranteeing ≥30 bits of relative
+//! accuracy (§2.2). At run time the pair is applied with
+//! [`crate::fixedpoint::multiply_by_quantized_multiplier`]:
+//! a `SQRDMULH`-style fixed-point multiply followed by a correctly-rounding
+//! right shift.
+
+use crate::fixedpoint::{multiply_by_quantized_multiplier_signed_shift, srdhm, rounding_div_by_pot};
+
+
+/// A real multiplier normalized for integer-only application.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantizedMultiplier {
+    /// Q0.31 mantissa, `round(2^31 · M0)` with `M0 ∈ [0.5, 1)`; 0 encodes M = 0.
+    pub m0: i32,
+    /// Total binary exponent: `M = M0 · 2^shift`. Negative for `M < 1`
+    /// (the common matmul case, where `shift = -n`), positive allowed for
+    /// the Add-layer rescale (App. A.2).
+    pub shift: i32,
+}
+
+impl QuantizedMultiplier {
+    /// Normalize a real multiplier. Requires `m ≥ 0` and
+    /// `m < 2^30` (far beyond any multiplier arising from eq. 5).
+    pub fn from_f64(m: f64) -> Self {
+        assert!(m >= 0.0 && m.is_finite(), "multiplier must be finite and non-negative, got {m}");
+        if m == 0.0 {
+            return Self { m0: 0, shift: 0 };
+        }
+        // m = m0 * 2^shift, m0 in [0.5, 1).
+        let mut shift = 0i32;
+        let mut m0 = m;
+        while m0 < 0.5 {
+            m0 *= 2.0;
+            shift -= 1;
+        }
+        while m0 >= 1.0 {
+            m0 /= 2.0;
+            shift += 1;
+        }
+        let mut q = (m0 * 2f64.powi(31)).round() as i64;
+        // Rounding can push the mantissa to exactly 2^31 (m0 == 1.0 - eps).
+        if q == 1i64 << 31 {
+            q /= 2;
+            shift += 1;
+        }
+        debug_assert!((1i64 << 30..1i64 << 31).contains(&q));
+        Self { m0: q as i32, shift }
+    }
+
+    /// The real value this normalized multiplier represents.
+    pub fn to_f64(self) -> f64 {
+        f64::from(self.m0) / 2f64.powi(31) * 2f64.powi(self.shift)
+    }
+
+    /// Apply to an int32 accumulator using only integer arithmetic.
+    #[inline]
+    pub fn apply(self, acc: i32) -> i32 {
+        multiply_by_quantized_multiplier_signed_shift(acc, self.m0, self.shift)
+    }
+
+    /// Apply assuming `M < 1` (hot path: avoids the left-shift branch).
+    #[inline]
+    pub fn apply_lt_one(self, acc: i32) -> i32 {
+        debug_assert!(self.shift <= 0, "apply_lt_one requires M < 1");
+        rounding_div_by_pot(srdhm(acc, self.m0), -self.shift)
+    }
+}
+
+/// Normalize the matmul requantization multiplier `M = S1·S2/S3` (eq. 5).
+/// The paper observes `M ∈ (0, 1)` empirically; we assert it so a violation
+/// (a mis-calibrated output scale) fails loudly at conversion time rather
+/// than silently saturating at run time.
+pub fn quantize_multiplier(s1: f64, s2: f64, s3: f64) -> QuantizedMultiplier {
+    assert!(s1 > 0.0 && s2 > 0.0 && s3 > 0.0, "scales must be positive");
+    let m = s1 * s2 / s3;
+    assert!(m < 1.0, "requantization multiplier M = {m} >= 1; output scale too small (eq. 5-6)");
+    QuantizedMultiplier::from_f64(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization_invariants() {
+        for &m in &[0.9999, 0.5, 0.25, 0.1, 1e-3, 1e-6, 0.7531, 2.0 / 3.0] {
+            let qm = QuantizedMultiplier::from_f64(m);
+            assert!(qm.m0 >= 1 << 30, "m0 has >= 30 bits of relative accuracy for m={m}");
+            assert!(qm.shift <= 0, "m={m} < 1 must have non-positive shift");
+            let rel_err = (qm.to_f64() - m).abs() / m;
+            assert!(rel_err < 1e-9, "m={m} rel_err={rel_err}");
+        }
+    }
+
+    #[test]
+    fn multipliers_ge_one_supported_for_add_rescale() {
+        for &m in &[1.0, 1.5, 3.75, 100.0] {
+            let qm = QuantizedMultiplier::from_f64(m);
+            let rel_err = (qm.to_f64() - m).abs() / m;
+            assert!(rel_err < 1e-9);
+            // application: 1000 * m
+            let got = qm.apply(1000);
+            assert!((f64::from(got) - 1000.0 * m).abs() <= 1.0, "m={m} got={got}");
+        }
+    }
+
+    #[test]
+    fn zero_multiplier() {
+        let qm = QuantizedMultiplier::from_f64(0.0);
+        assert_eq!(qm.apply(123456), 0);
+    }
+
+    #[test]
+    fn apply_matches_real_arithmetic() {
+        // Integer application must be within 1 of round(acc * M) — the
+        // paper's ≥30-bit relative accuracy claim.
+        let cases = [
+            (0.000_316_2, 1_234_567),
+            (0.007_812_5, -987_654),
+            (0.5, 2_000_000_000),
+            (0.999_999, -2_000_000_000),
+            (0.123_456_789, 1),
+            (0.75, -3),
+        ];
+        for (m, acc) in cases {
+            let qm = QuantizedMultiplier::from_f64(m);
+            let got = i64::from(qm.apply(acc));
+            let want = (f64::from(acc) * m).round() as i64;
+            assert!((got - want).abs() <= 1, "m={m} acc={acc} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn apply_lt_one_matches_apply() {
+        for &m in &[0.9, 0.5, 0.001, 0.33] {
+            let qm = QuantizedMultiplier::from_f64(m);
+            for &acc in &[0, 1, -1, 1000, -1000, i32::MAX / 2, i32::MIN / 2] {
+                assert_eq!(qm.apply(acc), qm.apply_lt_one(acc), "m={m} acc={acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_multiplier_in_unit_interval() {
+        let qm = quantize_multiplier(0.02, 0.05, 0.1);
+        assert!((qm.to_f64() - 0.01).abs() < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiplier M")]
+    fn matmul_multiplier_ge_one_panics() {
+        let _ = quantize_multiplier(1.0, 1.0, 0.5);
+    }
+
+    #[test]
+    fn exactly_representable_powers_of_two() {
+        let qm = QuantizedMultiplier::from_f64(0.25);
+        assert_eq!(qm.apply(1 << 20), 1 << 18);
+    }
+}

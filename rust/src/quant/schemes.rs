@@ -1,0 +1,256 @@
+//! Baseline weight-quantization schemes the paper compares against in
+//! Table 4.2: binary weight networks (BWN), ternary weight networks (TWN),
+//! incremental network quantization (INQ, power-of-two weights) and
+//! fine-grained quantization (FGQ, group-wise ternary).
+//!
+//! These are *weight-only* schemes (activations stay float32 in the paper's
+//! table, except FGQ), so each quantizer maps a float weight array to a
+//! quantized-then-dequantized float array that the float engine then runs —
+//! exactly how such schemes deploy on commodity hardware without an integer
+//! kernel. Our scheme ("Ours" in the table) is the full integer path in
+//! [`crate::gemm`] + [`crate::nn`].
+
+
+
+/// Which baseline to apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightScheme {
+    /// BWN: `w ≈ α · sign(w)` with `α = mean |w|` (1-bit weights).
+    Binary,
+    /// TWN: `w ≈ α · t, t ∈ {−1, 0, +1}` with threshold `Δ = 0.7 · mean |w|`
+    /// and `α = mean { |w| : |w| > Δ }` (2-bit weights).
+    Ternary,
+    /// INQ-style: each weight snapped to `± 2^k` or 0, `k` chosen from a
+    /// window of `bits − 1` exponents below the max-magnitude weight
+    /// (5 bits in Table 4.2).
+    PowerOfTwo { bits: u32 },
+    /// FGQ-style: ternary per group of `group_size` consecutive output
+    /// channels (finer-grained α than TWN; 2 bits in Table 4.2).
+    FineGrainedTernary { group_size: usize },
+    /// Ours: affine 8-bit (handled by [`crate::quant::QuantParams`]); present
+    /// here so the Table 4.2 harness can sweep one enum.
+    AffineUint8,
+}
+
+impl WeightScheme {
+    /// Effective weight bit-depth, for the table's "Weight bits" row.
+    pub fn weight_bits(&self) -> u32 {
+        match self {
+            WeightScheme::Binary => 1,
+            WeightScheme::Ternary => 2,
+            WeightScheme::PowerOfTwo { bits } => *bits,
+            WeightScheme::FineGrainedTernary { .. } => 2,
+            WeightScheme::AffineUint8 => 8,
+        }
+    }
+
+    /// Quantize-dequantize a weight array laid out with `ch_stride` values
+    /// per output channel (used only by the fine-grained scheme).
+    pub fn apply(&self, w: &[f32], ch_stride: usize) -> Vec<f32> {
+        match self {
+            WeightScheme::Binary => binary(w),
+            WeightScheme::Ternary => ternary(w),
+            WeightScheme::PowerOfTwo { bits } => power_of_two(w, *bits),
+            WeightScheme::FineGrainedTernary { group_size } => {
+                fine_grained_ternary(w, ch_stride, *group_size)
+            }
+            WeightScheme::AffineUint8 => {
+                let p = crate::quant::QuantParams::for_weights(w, 8);
+                w.iter().map(|&v| crate::quant::fake_quantize(&p, v)).collect()
+            }
+        }
+    }
+}
+
+fn mean_abs(w: &[f32]) -> f32 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    w.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32
+}
+
+/// BWN quantizer.
+pub fn binary(w: &[f32]) -> Vec<f32> {
+    let alpha = mean_abs(w);
+    w.iter().map(|&v| if v >= 0.0 { alpha } else { -alpha }).collect()
+}
+
+/// TWN quantizer with the standard 0.7·E|w| threshold.
+pub fn ternary(w: &[f32]) -> Vec<f32> {
+    let delta = 0.7 * mean_abs(w);
+    let kept: Vec<f32> = w.iter().filter(|v| v.abs() > delta).map(|v| v.abs()).collect();
+    let alpha = if kept.is_empty() { 0.0 } else { kept.iter().sum::<f32>() / kept.len() as f32 };
+    w.iter()
+        .map(|&v| {
+            if v > delta {
+                alpha
+            } else if v < -delta {
+                -alpha
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// INQ-style power-of-two quantizer: magnitudes snap to the nearest of
+/// `{0} ∪ {2^k : k ∈ [k_max − 2^(bits−1) + 2, k_max]}` where
+/// `k_max = floor(log2(max |w|))` — with `bits − 1` magnitude bits plus sign,
+/// matching INQ's 5-bit configuration in spirit.
+pub fn power_of_two(w: &[f32], bits: u32) -> Vec<f32> {
+    assert!(bits >= 2);
+    let max_abs = w.iter().fold(0f32, |m, v| m.max(v.abs()));
+    if max_abs == 0.0 {
+        return vec![0.0; w.len()];
+    }
+    let k_max = max_abs.log2().floor() as i32;
+    let n_levels = (1i32 << (bits - 1)) - 1; // distinct power-of-two magnitudes
+    let k_min = k_max - n_levels + 1;
+    w.iter()
+        .map(|&v| {
+            if v == 0.0 {
+                return 0.0;
+            }
+            let sign = v.signum();
+            let a = v.abs();
+            // Nearest power of two in [2^k_min, 2^k_max], or 0 if below the
+            // midpoint to the smallest level.
+            let k = a.log2().round().clamp(k_min as f32, k_max as f32) as i32;
+            let q = 2f32.powi(k);
+            if a < 2f32.powi(k_min) * 0.5 {
+                0.0
+            } else {
+                sign * q
+            }
+        })
+        .collect()
+}
+
+/// FGQ-style group-wise ternary: weights are grouped by blocks of
+/// `group_size` output channels (each channel spanning `ch_stride` values)
+/// and each group gets its own `(Δ, α)` — much finer granularity than TWN.
+pub fn fine_grained_ternary(w: &[f32], ch_stride: usize, group_size: usize) -> Vec<f32> {
+    assert!(ch_stride > 0 && group_size > 0);
+    let block = ch_stride * group_size;
+    let mut out = Vec::with_capacity(w.len());
+    for chunk in w.chunks(block) {
+        out.extend(ternary(chunk));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_weights(n: usize) -> Vec<f32> {
+        // Deterministic pseudo-Gaussian-ish spread including outliers.
+        (0..n)
+            .map(|i| {
+                let t = (i as f32 * 0.734_21).sin() * 0.4 + (i as f32 * 0.113).cos() * 0.1;
+                if i % 97 == 0 {
+                    t * 8.0 // outlier channel, the paper's failure mode 2
+                } else {
+                    t
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn binary_has_two_levels() {
+        let w = sample_weights(512);
+        let q = binary(&w);
+        let mut levels: Vec<i32> = q.iter().map(|v| (v * 1e6) as i32).collect();
+        levels.sort_unstable();
+        levels.dedup();
+        assert_eq!(levels.len(), 2);
+        // Signs preserved.
+        for (a, b) in w.iter().zip(&q) {
+            assert!(a * b >= 0.0);
+        }
+    }
+
+    #[test]
+    fn ternary_has_three_levels_and_zeroes_small_weights() {
+        let w = sample_weights(512);
+        let q = ternary(&w);
+        let mut levels: Vec<i32> = q.iter().map(|v| (v * 1e6) as i32).collect();
+        levels.sort_unstable();
+        levels.dedup();
+        assert!(levels.len() <= 3);
+        assert!(q.iter().any(|&v| v == 0.0), "threshold must zero some weights");
+    }
+
+    #[test]
+    fn power_of_two_values_are_powers_or_zero() {
+        let w = sample_weights(512);
+        let q = power_of_two(&w, 5);
+        for &v in &q {
+            if v != 0.0 {
+                let l = v.abs().log2();
+                assert!((l - l.round()).abs() < 1e-6, "{v} is not a power of two");
+            }
+        }
+    }
+
+    #[test]
+    fn power_of_two_level_count_respects_bits() {
+        let w = sample_weights(4096);
+        let q = power_of_two(&w, 5);
+        let mut mags: Vec<i32> = q.iter().filter(|v| **v != 0.0).map(|v| v.abs().log2().round() as i32).collect();
+        mags.sort_unstable();
+        mags.dedup();
+        assert!(mags.len() <= 15, "5-bit pow2 has <= 2^4 - 1 magnitudes, got {}", mags.len());
+    }
+
+    #[test]
+    fn fine_grained_beats_global_ternary_on_mse() {
+        // The whole point of FGQ: per-group scales track range variation
+        // across channels (the paper's failure mode 1).
+        let w = sample_weights(64 * 9 * 4);
+        let global = ternary(&w);
+        let fine = fine_grained_ternary(&w, 9, 4);
+        let mse = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>() / a.len() as f32
+        };
+        assert!(mse(&w, &fine) <= mse(&w, &global) + 1e-9);
+    }
+
+    #[test]
+    fn affine_uint8_is_most_accurate() {
+        let w = sample_weights(1024);
+        let mse = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>() / a.len() as f32
+        };
+        let ours = WeightScheme::AffineUint8.apply(&w, 1);
+        for scheme in [
+            WeightScheme::Binary,
+            WeightScheme::Ternary,
+            WeightScheme::PowerOfTwo { bits: 5 },
+            WeightScheme::FineGrainedTernary { group_size: 4 },
+        ] {
+            let q = scheme.apply(&w, 9);
+            assert!(
+                mse(&w, &ours) <= mse(&w, &q),
+                "8-bit affine should dominate {scheme:?} on reconstruction error"
+            );
+        }
+    }
+
+    #[test]
+    fn scheme_bit_depths_match_table_4_2() {
+        assert_eq!(WeightScheme::Binary.weight_bits(), 1);
+        assert_eq!(WeightScheme::Ternary.weight_bits(), 2);
+        assert_eq!(WeightScheme::PowerOfTwo { bits: 5 }.weight_bits(), 5);
+        assert_eq!(WeightScheme::FineGrainedTernary { group_size: 4 }.weight_bits(), 2);
+        assert_eq!(WeightScheme::AffineUint8.weight_bits(), 8);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        assert!(binary(&[]).is_empty());
+        assert!(ternary(&[]).is_empty());
+        assert!(power_of_two(&[], 5).is_empty());
+    }
+}

@@ -1,0 +1,122 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via the
+//! `xla` crate. This is the only place the Rust side touches XLA; the
+//! integer inference engine ([`crate::nn`]/[`crate::graph`]) never does.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits serialized protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §9).
+
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client plus a cache of compiled executables, keyed by
+/// artifact file name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU engine rooted at the artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self {
+            client,
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+            executables: HashMap::new(),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by name).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path is not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+        .with_context(|| format!("parse HLO text {path:?} (run `make artifacts`)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+            .with_context(|| format!("compile {name}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on positional literal inputs. The AOT side lowers
+    /// with `return_tuple=True`, so the single output is a tuple that we
+    /// decompose into one literal per logical output.
+    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        let exe = self.executables.get(name).expect("loaded above");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+            .with_context(|| format!("execute {name}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+            .context("fetch result")?;
+        out.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}")).context("decompose result tuple")
+    }
+}
+
+/// Convert an f32 tensor into an XLA literal of the same shape.
+pub fn literal_f32(t: &Tensor<f32>) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data()).reshape(&dims).map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Convert an i32 slice into an XLA literal of the given dims.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Convert a u8 slice into an XLA literal of the given dims. `u8` is not a
+/// `NativeType` in the xla crate, so this goes through the untyped-bytes
+/// constructor.
+pub fn literal_u8(data: &[u8], dims: &[i64]) -> Result<xla::Literal> {
+    let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, &dims_usize, data)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read an XLA literal back into an f32 tensor.
+pub fn tensor_from_literal(lit: &xla::Literal) -> Result<Tensor<f32>> {
+    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Read a u8 literal back into a tensor.
+pub fn u8_tensor_from_literal(lit: &xla::Literal) -> Result<Tensor<u8>> {
+    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<u8>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Read a scalar f32 from a literal.
+pub fn scalar_from_literal(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?[0])
+}

@@ -1,0 +1,187 @@
+//! ARM-core latency cost model (DESIGN.md §Hardware-Adaptation).
+//!
+//! The paper measures on Qualcomm Snapdragon 835 big/LITTLE and 821 big
+//! cores, which this testbed does not have. The substitute has two parts:
+//!
+//! 1. *Measured* latency of the Rust engine (int8 vs f32) on the host CPU —
+//!    real end-to-end numbers, reported by `cargo bench` and the latency
+//!    harness.
+//! 2. *This module*: a first-order throughput model per core type, fitted
+//!    to the paper's own published numbers (Tables 4.4/4.6), that converts
+//!    a model's MAC/byte profile into estimated per-core milliseconds. It
+//!    regenerates the per-core *shape* of figs. 1.1c/4.1/4.2 — who wins,
+//!    by what factor, and how the gap differs between the float-optimized
+//!    821 and the 835.
+//!
+//! The model: `latency = macs / throughput(dtype) + nodes · dispatch +
+//! bytes / bandwidth`, with multi-core scaling following Amdahl with a
+//! model-size-dependent parallel fraction (Table 4.6 shows larger models
+//! parallelize better).
+
+use crate::graph::FloatGraph;
+
+/// Numeric path being modelled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    Int8,
+}
+
+/// A fitted core model.
+#[derive(Clone, Debug)]
+pub struct ArmCoreModel {
+    pub name: &'static str,
+    /// Effective f32 MAC throughput, GMAC/s (single core, dense conv mix).
+    pub f32_gmacs: f64,
+    /// Effective int8 MAC throughput, GMAC/s.
+    pub int8_gmacs: f64,
+    /// Fixed per-node dispatch overhead, microseconds.
+    pub dispatch_us: f64,
+    /// Effective memory bandwidth for weight traffic, GB/s.
+    pub mem_gbps: f64,
+}
+
+impl ArmCoreModel {
+    /// Snapdragon 835 big core (Pixel 2 performance cluster). Fitted to the
+    /// paper's face-detector numbers: DM=1.0 float 337 ms vs int8 154 ms.
+    pub fn s835_big() -> Self {
+        Self { name: "S835-big", f32_gmacs: 2.2, int8_gmacs: 5.0, dispatch_us: 12.0, mem_gbps: 12.0 }
+    }
+
+    /// Snapdragon 835 LITTLE core (efficiency cluster): ~2.2× slower than
+    /// big with a similar int8:f32 ratio (711 ms vs 372 ms at DM=1.0).
+    pub fn s835_little() -> Self {
+        Self { name: "S835-LITTLE", f32_gmacs: 1.0, int8_gmacs: 2.3, dispatch_us: 25.0, mem_gbps: 5.0 }
+    }
+
+    /// Snapdragon 821 big core (Pixel 1): floating-point is better
+    /// optimized relative to integer (§4.2.1: "less noticeable reduction in
+    /// latency for quantized models").
+    pub fn s821_big() -> Self {
+        Self { name: "S821-big", f32_gmacs: 2.6, int8_gmacs: 4.0, dispatch_us: 12.0, mem_gbps: 11.0 }
+    }
+
+    /// All three cores the paper evaluates.
+    pub fn all() -> Vec<ArmCoreModel> {
+        vec![Self::s835_little(), Self::s835_big(), Self::s821_big()]
+    }
+
+    /// Estimated single-core latency in milliseconds.
+    pub fn latency_ms(&self, graph: &FloatGraph, input_shape: &[usize], dtype: Dtype) -> f64 {
+        let macs = graph.mac_count(input_shape) as f64;
+        let weight_bytes = graph.model_bytes() as f64 / if dtype == Dtype::Int8 { 4.0 } else { 1.0 };
+        let gmacs = match dtype {
+            Dtype::F32 => self.f32_gmacs,
+            Dtype::Int8 => self.int8_gmacs,
+        };
+        let compute_ms = macs / (gmacs * 1e9) * 1e3;
+        let dispatch_ms = graph.nodes.len() as f64 * self.dispatch_us / 1e3;
+        let mem_ms = weight_bytes / (self.mem_gbps * 1e9) * 1e3;
+        compute_ms + dispatch_ms + mem_ms
+    }
+
+    /// Multi-core latency (Table 4.6): Amdahl scaling with a parallel
+    /// fraction that grows with model size — the paper's observation that
+    /// "speedup ratios ... are higher for larger models where the overhead
+    /// of multi-threading occupies a smaller fraction".
+    pub fn latency_ms_multicore(
+        &self,
+        graph: &FloatGraph,
+        input_shape: &[usize],
+        dtype: Dtype,
+        cores: usize,
+    ) -> f64 {
+        assert!(cores >= 1);
+        let single = self.latency_ms(graph, input_shape, dtype);
+        if cores == 1 {
+            return single;
+        }
+        let macs = graph.mac_count(input_shape) as f64;
+        let p = parallel_fraction(macs);
+        single * ((1.0 - p) + p / cores as f64)
+    }
+}
+
+/// Parallel fraction as a function of model MACs, fitted so a ~400-MMAC
+/// detector reaches the paper's 2.2× at 4 cores and a ~25-MMAC one its
+/// 1.55×: p = clamp(0.30 + 0.115·log10(macs/1e6), 0.30, 0.90).
+fn parallel_fraction(macs: f64) -> f64 {
+    let m = (macs / 1e6).max(1.0);
+    (0.30 + 0.115 * m.log10()).clamp(0.30, 0.90)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builders::mobilenet;
+
+    #[test]
+    fn int8_beats_f32_on_835() {
+        let g = mobilenet(0.5, 16, false, 1);
+        for core in [ArmCoreModel::s835_big(), ArmCoreModel::s835_little()] {
+            let f = core.latency_ms(&g, &[1, 64, 64, 3], Dtype::F32);
+            let q = core.latency_ms(&g, &[1, 64, 64, 3], Dtype::Int8);
+            let ratio = f / q;
+            assert!(
+                ratio > 1.5 && ratio < 3.0,
+                "{}: f32 {f:.2}ms int8 {q:.2}ms ratio {ratio:.2}",
+                core.name
+            );
+        }
+    }
+
+    #[test]
+    fn s821_gap_is_smaller_than_s835() {
+        // The paper's point about fig. 4.2: the float-optimized 821 shows a
+        // smaller int8 win than the 835.
+        let g = mobilenet(1.0, 16, false, 1);
+        let shape = [1usize, 96, 96, 3];
+        let r835 = {
+            let c = ArmCoreModel::s835_big();
+            c.latency_ms(&g, &shape, Dtype::F32) / c.latency_ms(&g, &shape, Dtype::Int8)
+        };
+        let r821 = {
+            let c = ArmCoreModel::s821_big();
+            c.latency_ms(&g, &shape, Dtype::F32) / c.latency_ms(&g, &shape, Dtype::Int8)
+        };
+        assert!(r821 < r835, "821 ratio {r821:.2} must be below 835 ratio {r835:.2}");
+    }
+
+    #[test]
+    fn little_core_is_slower_than_big() {
+        let g = mobilenet(0.5, 16, false, 2);
+        let shape = [1usize, 64, 64, 3];
+        let big = ArmCoreModel::s835_big().latency_ms(&g, &shape, Dtype::Int8);
+        let little = ArmCoreModel::s835_little().latency_ms(&g, &shape, Dtype::Int8);
+        assert!(little > 1.5 * big, "LITTLE {little:.2} vs big {big:.2}");
+    }
+
+    #[test]
+    fn multicore_speedup_matches_table_4_6_shape() {
+        let big_model = mobilenet(1.0, 16, false, 3);
+        let small_model = mobilenet(0.25, 16, false, 3);
+        let core = ArmCoreModel::s835_big();
+        let sp = |g: &FloatGraph, res: usize| {
+            let s1 = core.latency_ms_multicore(g, &[1, res, res, 3], Dtype::Int8, 1);
+            let s4 = core.latency_ms_multicore(g, &[1, res, res, 3], Dtype::Int8, 4);
+            s1 / s4
+        };
+        let big_speedup = sp(&big_model, 160);
+        let small_speedup = sp(&small_model, 64);
+        assert!(big_speedup > small_speedup, "big {big_speedup:.2} vs small {small_speedup:.2}");
+        assert!(big_speedup > 1.5 && big_speedup < 2.6, "{big_speedup:.2}");
+        assert!(small_speedup > 1.2, "{small_speedup:.2}");
+    }
+
+    #[test]
+    fn latency_monotone_in_resolution_and_dm() {
+        let core = ArmCoreModel::s835_little();
+        let small = mobilenet(0.25, 16, false, 4);
+        let big = mobilenet(1.0, 16, false, 4);
+        let l_small = core.latency_ms(&small, &[1, 96, 96, 3], Dtype::Int8);
+        let l_big = core.latency_ms(&big, &[1, 96, 96, 3], Dtype::Int8);
+        assert!(l_big > l_small);
+        let l_lowres = core.latency_ms(&big, &[1, 64, 64, 3], Dtype::Int8);
+        assert!(l_big > l_lowres);
+    }
+}

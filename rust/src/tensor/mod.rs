@@ -1,0 +1,210 @@
+//! Minimal dense tensor type used throughout the engine.
+//!
+//! Activations are NHWC (batch, height, width, channel) and weights are
+//! OHWI (output channel, kernel h, kernel w, input channel) — the layouts
+//! TFLite uses and the ones that make the im2col → GEMM lowering in
+//! [`crate::nn`] contiguous along the reduction dimension.
+
+
+
+/// A dense row-major tensor over element type `T`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-initialized (default-initialized) tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    /// Wrap existing data; `data.len()` must equal the shape volume.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// Filled with a constant.
+    pub fn full(shape: &[usize], value: T) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![value; n] }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical volume.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Size of dimension `i`.
+    #[inline]
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    /// Rank (number of dimensions).
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Flat index for an NHWC coordinate (rank-4 tensors).
+    #[inline]
+    pub fn idx4(&self, n: usize, h: usize, w: usize, c: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((n * self.shape[1] + h) * self.shape[2] + w) * self.shape[3] + c
+    }
+
+    /// NHWC element access.
+    #[inline]
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> T {
+        self.data[self.idx4(n, h, w, c)]
+    }
+
+    /// NHWC element write.
+    #[inline]
+    pub fn set4(&mut self, n: usize, h: usize, w: usize, c: usize, v: T) {
+        let i = self.idx4(n, h, w, c);
+        self.data[i] = v;
+    }
+
+    /// Map every element through `f` into a new tensor (possibly new type).
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&v| f(v)).collect() }
+    }
+}
+
+impl Tensor<f32> {
+    /// Min and max of the elements (0.0 for empty tensors).
+    pub fn min_max(&self) -> (f32, f32) {
+        if self.data.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in &self.data {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        (mn, mx)
+    }
+
+    /// Largest absolute elementwise difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor<f32>) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl Tensor<u8> {
+    /// Largest absolute elementwise difference in quantized units (LSBs).
+    pub fn max_lsb_diff(&self, other: &Tensor<u8>) -> i32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (i32::from(*a) - i32::from(*b)).abs())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t: Tensor<f32> = Tensor::zeros(&[2, 3, 4, 5]);
+        assert_eq!(t.len(), 120);
+        assert_eq!(t.shape(), &[2, 3, 4, 5]);
+        assert_eq!(t.rank(), 4);
+        assert_eq!(t.dim(3), 5);
+    }
+
+    #[test]
+    fn nhwc_indexing_is_row_major() {
+        let mut t: Tensor<i32> = Tensor::zeros(&[2, 2, 2, 3]);
+        t.set4(1, 0, 1, 2, 42);
+        assert_eq!(t.at4(1, 0, 1, 2), 42);
+        // Channel is innermost.
+        assert_eq!(t.idx4(0, 0, 0, 1) - t.idx4(0, 0, 0, 0), 1);
+        assert_eq!(t.idx4(0, 0, 1, 0) - t.idx4(0, 0, 0, 0), 3);
+        assert_eq!(t.idx4(0, 1, 0, 0) - t.idx4(0, 0, 0, 0), 6);
+        assert_eq!(t.idx4(1, 0, 0, 0) - t.idx4(0, 0, 0, 0), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn from_vec_checks_volume() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1f32; 5]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 6], (0..12).collect::<Vec<i32>>());
+        let r = t.clone().reshape(&[3, 4]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[3, 4]);
+    }
+
+    #[test]
+    fn map_changes_type() {
+        let t = Tensor::from_vec(&[4], vec![1u8, 2, 3, 255]);
+        let f = t.map(|v| f32::from(v) / 255.0);
+        assert!((f.data()[3] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn min_max_and_diffs() {
+        let a = Tensor::from_vec(&[3], vec![-1.5f32, 0.0, 2.5]);
+        assert_eq!(a.min_max(), (-1.5, 2.5));
+        let b = Tensor::from_vec(&[3], vec![-1.0f32, 0.5, 2.5]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+        let q1 = Tensor::from_vec(&[2], vec![10u8, 250]);
+        let q2 = Tensor::from_vec(&[2], vec![12u8, 245]);
+        assert_eq!(q1.max_lsb_diff(&q2), 5);
+    }
+}

@@ -1,0 +1,289 @@
+//! QAT training driver (L3): feeds synthetic batches through the AOT
+//! `train_step` artifact — the Rust binary *is* the trainer; Python only
+//! authored and lowered the graph (Algorithm 1 steps 1–3, driven from Rust).
+//!
+//! The driver owns the full functional training state (parameters, SGD
+//! momenta, BN EMA statistics, activation-range EMAs) as XLA literals in the
+//! canonical order recorded in `model_spec.txt`, implements the paper's
+//! *delayed activation quantization* by flipping the `act_quant_on` scalar
+//! after `act_quant_delay` steps (§3.1), and exports folded weights
+//! (eq. 14) plus learned ranges for the integer engine when training ends.
+
+use crate::data::ClassificationSet;
+use crate::graph::builders::ParamMap;
+use crate::io;
+use crate::runtime::{
+    literal_f32, literal_i32, literal_scalar_f32, scalar_from_literal, tensor_from_literal, Engine,
+};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Parsed `model_spec.txt`.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub resolution: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub batch: usize,
+    pub act_quant_delay: u64,
+    pub param_keys: Vec<String>,
+    pub bn_keys: Vec<String>,
+    pub range_keys: Vec<String>,
+    pub export_keys: Vec<String>,
+}
+
+impl ModelSpec {
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let kv = io::read_kv(&artifact_dir.join("model_spec.txt"))?;
+        let get = |k: &str| -> Result<String> {
+            kv.iter()
+                .find(|(key, _)| key == k)
+                .map(|(_, v)| v.clone())
+                .ok_or_else(|| anyhow!("model_spec.txt missing key {k}"))
+        };
+        let list = |k: &str| -> Result<Vec<String>> {
+            Ok(get(k)?.split(',').map(str::to_string).collect())
+        };
+        Ok(Self {
+            resolution: get("resolution")?.parse()?,
+            channels: get("channels")?.parse()?,
+            num_classes: get("num_classes")?.parse()?,
+            batch: get("batch")?.parse()?,
+            act_quant_delay: get("act_quant_delay")?.parse()?,
+            param_keys: list("param_keys")?,
+            bn_keys: list("bn_keys")?,
+            range_keys: list("range_keys")?,
+            export_keys: list("export_keys")?,
+        })
+    }
+
+    /// Total number of state tensors fed to / returned by `train_step`.
+    pub fn state_len(&self) -> usize {
+        2 * self.param_keys.len() + self.bn_keys.len() + self.range_keys.len()
+    }
+}
+
+/// Quantization knobs fed to the compiled train/eval steps as traced
+/// scalars (one artifact covers float baselines, ReLU/ReLU6 and the
+/// bit-depth grid).
+#[derive(Clone, Copy, Debug)]
+pub struct Knobs {
+    /// 1.0 = quantize weights (QAT); 0.0 = float baseline training.
+    pub w_quant_on: f32,
+    /// Activation ceiling: 6.0 = ReLU6, [`RELU_CEIL`] = plain ReLU.
+    pub act_ceiling: f32,
+    /// Weight bit depth (narrow range `[1, 2^bits - 1]`).
+    pub weight_bits: u32,
+    /// Activation bit depth (`[0, 2^bits - 1]`).
+    pub act_bits: u32,
+}
+
+/// The "uncapped" ceiling standing in for plain ReLU.
+pub const RELU_CEIL: f32 = 1e9;
+
+impl Default for Knobs {
+    fn default() -> Self {
+        Self { w_quant_on: 1.0, act_ceiling: 6.0, weight_bits: 8, act_bits: 8 }
+    }
+}
+
+impl Knobs {
+    /// Float-baseline training (no quantization at all).
+    pub fn float_baseline() -> Self {
+        Self { w_quant_on: 0.0, ..Default::default() }
+    }
+
+    pub fn w_qmax(&self) -> f32 {
+        ((1u32 << self.weight_bits) - 1) as f32
+    }
+
+    pub fn a_qmax(&self) -> f32 {
+        ((1u32 << self.act_bits) - 1) as f32
+    }
+}
+
+/// Training state as literals, in the canonical train_step order:
+/// params ++ momenta ++ bn ++ ranges.
+pub struct Trainer {
+    pub spec: ModelSpec,
+    engine: Engine,
+    state: Vec<xla::Literal>,
+    dataset: ClassificationSet,
+    pub knobs: Knobs,
+    pub step: u64,
+    pub losses: Vec<f32>,
+}
+
+impl Trainer {
+    /// Build a trainer from the artifact directory (spec + init params).
+    pub fn new(artifact_dir: &Path, seed: u64) -> Result<Self> {
+        let spec = ModelSpec::load(artifact_dir)?;
+        let engine = Engine::new(artifact_dir)?;
+        let init = io::read_params(&artifact_dir.join("params_init.bin"))?;
+        let mut state = Vec::with_capacity(spec.state_len());
+        for (prefix, keys) in [
+            ("param", &spec.param_keys),
+            ("mom", &spec.param_keys),
+            ("bn", &spec.bn_keys),
+            ("range", &spec.range_keys),
+        ] {
+            for key in keys {
+                let name = format!("{prefix}:{key}");
+                let t = init
+                    .get(&name)
+                    .ok_or_else(|| anyhow!("params_init.bin missing {name}"))?;
+                state.push(literal_f32(t)?);
+            }
+        }
+        let dataset = ClassificationSet::new(spec.resolution, spec.num_classes, seed);
+        Ok(Self {
+            spec,
+            engine,
+            state,
+            dataset,
+            knobs: Knobs::default(),
+            step: 0,
+            losses: Vec::new(),
+        })
+    }
+
+    /// Set the quantization knobs for subsequent steps/evals.
+    pub fn with_knobs(mut self, knobs: Knobs) -> Self {
+        self.knobs = knobs;
+        self
+    }
+
+    /// Generate the training batch for a step (deterministic in the seed).
+    pub fn batch(&self, split: u64, step: u64) -> (Tensor<f32>, Vec<i32>) {
+        let (x, labels) = self.dataset.batch(split, step * self.spec.batch as u64, self.spec.batch);
+        (x, labels.into_iter().map(|l| l as i32).collect())
+    }
+
+    /// Run one QAT train step; returns the loss.
+    pub fn train_step(&mut self) -> Result<f32> {
+        let (x, y) = self.batch(0, self.step);
+        // §3.1 delayed activation quantization; forced off entirely for the
+        // float baseline.
+        let act_on = if self.knobs.w_quant_on > 0.0 && self.step >= self.spec.act_quant_delay {
+            1.0
+        } else {
+            0.0
+        };
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.state.len() + 7);
+        // Literal has no cheap clone in the xla crate; rebuild inputs by
+        // draining and restoring state from outputs below.
+        inputs.append(&mut self.state);
+        inputs.push(literal_f32(&x)?);
+        inputs.push(literal_i32(&y, &[y.len() as i64])?);
+        inputs.push(literal_scalar_f32(act_on));
+        inputs.push(literal_scalar_f32(self.knobs.w_quant_on));
+        inputs.push(literal_scalar_f32(self.knobs.act_ceiling));
+        inputs.push(literal_scalar_f32(self.knobs.w_qmax()));
+        inputs.push(literal_scalar_f32(self.knobs.a_qmax()));
+        let mut outs = self.engine.run("train_step.hlo.txt", &inputs)?;
+        let loss_lit = outs.pop().ok_or_else(|| anyhow!("train_step returned nothing"))?;
+        anyhow::ensure!(outs.len() == self.spec.state_len(), "train_step output arity");
+        self.state = outs;
+        let loss = scalar_from_literal(&loss_lit)?;
+        self.losses.push(loss);
+        self.step += 1;
+        Ok(loss)
+    }
+
+    fn params_and_bn(&self) -> (usize, usize) {
+        (self.spec.param_keys.len(), self.spec.bn_keys.len())
+    }
+
+    /// Clone a slice of the state as fresh literals (via host roundtrip).
+    fn state_slice(&self, lo: usize, hi: usize) -> Result<Vec<xla::Literal>> {
+        self.state[lo..hi]
+            .iter()
+            .map(|l| literal_f32(&tensor_from_literal(l)?))
+            .collect()
+    }
+
+    /// Evaluate accuracy with the float graph (`eval_float.hlo.txt`).
+    pub fn eval_float(&mut self, batches: usize) -> Result<f32> {
+        self.eval(batches, false)
+    }
+
+    /// Evaluate accuracy with the quantization-simulation graph
+    /// (`eval_qsim.hlo.txt`, the L1 Pallas fake-quant path).
+    pub fn eval_qsim(&mut self, batches: usize) -> Result<f32> {
+        self.eval(batches, true)
+    }
+
+    fn eval(&mut self, batches: usize, qsim: bool) -> Result<f32> {
+        let (np, nb) = self.params_and_bn();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for b in 0..batches {
+            let (x, y) = self.batch(1, b as u64);
+            let mut inputs = self.state_slice(0, np)?; // params
+            inputs.extend(self.state_slice(2 * np, 2 * np + nb)?); // bn
+            if qsim {
+                inputs.extend(self.state_slice(2 * np + nb, self.spec.state_len())?); // ranges
+            }
+            inputs.push(literal_f32(&x)?);
+            inputs.push(literal_scalar_f32(self.knobs.act_ceiling));
+            if qsim {
+                inputs.push(literal_scalar_f32(self.knobs.w_qmax()));
+                inputs.push(literal_scalar_f32(self.knobs.a_qmax()));
+            }
+            let name = if qsim { "eval_qsim.hlo.txt" } else { "eval_float.hlo.txt" };
+            let outs = self.engine.run(name, &inputs)?;
+            let logits = tensor_from_literal(&outs[0])?;
+            let classes = logits.dim(1);
+            for (row, &label) in y.iter().enumerate() {
+                let data = &logits.data()[row * classes..(row + 1) * classes];
+                let argmax = data
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                correct += usize::from(argmax == label as usize);
+                total += 1;
+            }
+        }
+        Ok(correct as f32 / total as f32)
+    }
+
+    /// Export folded inference weights (eq. 14) via `export_fold.hlo.txt`.
+    pub fn export_folded(&mut self) -> Result<ParamMap> {
+        let (np, nb) = self.params_and_bn();
+        let mut inputs = self.state_slice(0, np)?;
+        inputs.extend(self.state_slice(2 * np, 2 * np + nb)?);
+        let outs = self.engine.run("export_fold.hlo.txt", &inputs)?;
+        anyhow::ensure!(outs.len() == self.spec.export_keys.len(), "export arity");
+        let mut map = ParamMap::new();
+        for (key, lit) in self.spec.export_keys.iter().zip(&outs) {
+            map.insert(key.clone(), tensor_from_literal(lit)?);
+        }
+        Ok(map)
+    }
+
+    /// The learned activation ranges (name, (min, max)) from the EMA state.
+    pub fn learned_ranges(&self) -> Result<Vec<(String, (f64, f64))>> {
+        let (np, nb) = self.params_and_bn();
+        let lo = 2 * np + nb;
+        let mut out = Vec::new();
+        for (i, key) in self.spec.range_keys.iter().enumerate() {
+            let t = tensor_from_literal(&self.state[lo + i])?;
+            out.push((key.clone(), (f64::from(t.data()[0]), f64::from(t.data()[1]))));
+        }
+        Ok(out)
+    }
+
+    /// Persist the trained state (params + ranges, folded weights) to disk.
+    pub fn save(&mut self, path: &Path) -> Result<()> {
+        let folded = self.export_folded()?;
+        let mut tensors: Vec<(String, Tensor<f32>)> = folded.into_iter().collect();
+        tensors.sort_by(|a, b| a.0.cmp(&b.0));
+        for (key, (mn, mx)) in self.learned_ranges()? {
+            tensors.push((format!("range:{key}"), Tensor::from_vec(&[2], vec![mn as f32, mx as f32])));
+        }
+        io::write_params(path, &tensors).context("save trained model")
+    }
+}

@@ -1,0 +1,156 @@
+//! Property tests over the serving coordinator's invariants (DESIGN.md §7),
+//! using the seeded property harness from `iaoi::data` (no proptest in this
+//! offline build — failures print a replay seed).
+
+use iaoi::coordinator::{BatchPolicy, Coordinator, EngineKind};
+use iaoi::data::{check, Rng};
+use iaoi::graph::builders::papernet_random;
+use iaoi::nn::FusedActivation;
+use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::tensor::Tensor;
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn engine(seed: u64) -> EngineKind {
+    let g = papernet_random(4, FusedActivation::Relu6, seed);
+    let mut rng = Rng::seeded(seed);
+    let calib: Vec<Tensor<f32>> = (0..2)
+        .map(|_| {
+            let mut d = vec![0f32; 16 * 16 * 3];
+            for v in d.iter_mut() {
+                *v = rng.range_f32(-1.0, 1.0);
+            }
+            Tensor::from_vec(&[1, 16, 16, 3], d)
+        })
+        .collect();
+    let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
+    EngineKind::Quant(Arc::new(q))
+}
+
+fn image(rng: &mut Rng) -> Tensor<f32> {
+    let mut d = vec![0f32; 16 * 16 * 3];
+    for v in d.iter_mut() {
+        *v = rng.range_f32(-1.0, 1.0);
+    }
+    Tensor::from_vec(&[1, 16, 16, 3], d)
+}
+
+#[derive(Debug)]
+struct Scenario {
+    requests: usize,
+    max_batch: usize,
+    max_delay_us: u64,
+    workers: usize,
+}
+
+fn gen_scenario(rng: &mut Rng) -> Scenario {
+    Scenario {
+        requests: 1 + rng.below(40),
+        max_batch: 1 + rng.below(12),
+        max_delay_us: 100 + rng.below(3000) as u64,
+        workers: 1 + rng.below(3),
+    }
+}
+
+#[test]
+fn prop_every_request_completes_exactly_once() {
+    check("exactly-once completion", 12, gen_scenario, |s| {
+        let coord = Coordinator::start(
+            engine(1),
+            BatchPolicy {
+                max_batch: s.max_batch,
+                max_delay: Duration::from_micros(s.max_delay_us),
+            },
+            s.workers,
+        );
+        let client = coord.client();
+        let mut rng = Rng::seeded(s.requests as u64);
+        let pending: Vec<_> =
+            (0..s.requests).map(|_| client.submit(image(&mut rng)).unwrap()).collect();
+        let mut seen = HashSet::new();
+        for (id, rx) in pending {
+            let resp = rx.recv().expect("response");
+            if resp.id != id || !seen.insert(resp.id) {
+                return false;
+            }
+        }
+        let m = coord.shutdown();
+        m.completed as usize == s.requests && seen.len() == s.requests
+    });
+}
+
+#[test]
+fn prop_batch_sizes_respect_policy() {
+    check("batch size bounds", 10, gen_scenario, |s| {
+        let coord = Coordinator::start(
+            engine(2),
+            BatchPolicy {
+                max_batch: s.max_batch,
+                max_delay: Duration::from_micros(s.max_delay_us),
+            },
+            s.workers,
+        );
+        let client = coord.client();
+        let mut rng = Rng::seeded(99 + s.requests as u64);
+        let pending: Vec<_> =
+            (0..s.requests).map(|_| client.submit(image(&mut rng)).unwrap()).collect();
+        let ok = pending.into_iter().all(|(_, rx)| {
+            let r = rx.recv().expect("response");
+            r.batch_size >= 1 && r.batch_size <= s.max_batch
+        });
+        let m = coord.shutdown();
+        // The histogram must also respect the bound.
+        let hist_ok = m
+            .batch_sizes
+            .iter()
+            .enumerate()
+            .all(|(size, &count)| count == 0 || (1..=s.max_batch).contains(&size));
+        ok && hist_ok
+    });
+}
+
+#[test]
+fn prop_responses_are_deterministic_per_input() {
+    // The same image must produce identical outputs no matter how it gets
+    // batched: quantized inference is bitwise deterministic.
+    check("batching-invariant outputs", 6, gen_scenario, |s| {
+        let eng = engine(3);
+        let mut rng = Rng::seeded(7);
+        let img = image(&mut rng);
+        // Reference: direct single-request run.
+        let coord1 = Coordinator::start(eng.clone(), BatchPolicy { max_batch: 1, max_delay: Duration::ZERO }, 1);
+        let want = coord1.client().infer(img.clone()).unwrap().output;
+        coord1.shutdown();
+        // Same image inside a noisy burst under the scenario's policy.
+        let coord = Coordinator::start(
+            eng.clone(),
+            BatchPolicy {
+                max_batch: s.max_batch,
+                max_delay: Duration::from_micros(s.max_delay_us),
+            },
+            s.workers,
+        );
+        let client = coord.client();
+        let mut others = Vec::new();
+        for _ in 0..s.requests.min(10) {
+            others.push(client.submit(image(&mut rng)).unwrap());
+        }
+        let (_, rx) = client.submit(img.clone()).unwrap();
+        let got = rx.recv().unwrap().output;
+        for (_, orx) in others {
+            let _ = orx.recv();
+        }
+        coord.shutdown();
+        got == want
+    });
+}
+
+#[test]
+fn submit_after_shutdown_errors_cleanly() {
+    let coord = Coordinator::start(engine(4), BatchPolicy::default(), 1);
+    let client = coord.client();
+    coord.shutdown();
+    let mut rng = Rng::seeded(1);
+    assert!(client.submit(image(&mut rng)).is_err());
+}

@@ -1,0 +1,208 @@
+//! Cross-layer integration tests over the AOT artifacts: these are the
+//! anchors tying L1 (Pallas), L2 (JAX graphs) and L3 (Rust engine) to one
+//! arithmetic definition. They require `make artifacts` to have run; each
+//! test skips (with a loud message) when the artifacts are absent so
+//! `cargo test` stays green on a fresh checkout.
+
+use iaoi::data::ClassificationSet;
+use iaoi::harness::{self, papernet_from_params, papernet_int8};
+use iaoi::nn::FusedActivation;
+use iaoi::quantize::QuantizeOptions;
+use iaoi::train::{Knobs, Trainer};
+use std::path::{Path, PathBuf};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from("artifacts");
+    if p.join("base").join("train_step.hlo.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn pallas_kernel_matches_rust_engine_bit_exact() {
+    // The quickstart harness asserts bit-exact equality between the AOT
+    // Pallas qmatmul (via PJRT) and the Rust integer GEMM.
+    let Some(arts) = artifacts() else { return };
+    harness::quickstart(&arts).expect("pallas/rust parity");
+}
+
+#[test]
+fn train_step_reduces_loss_and_exports() {
+    let Some(arts) = artifacts() else { return };
+    let mut tr = Trainer::new(&arts.join("base"), 13).expect("trainer");
+    let mut first = 0f32;
+    for s in 0..60 {
+        let loss = tr.train_step().expect("step");
+        assert!(loss.is_finite(), "loss must stay finite");
+        if s == 0 {
+            first = loss;
+        }
+    }
+    let last = *tr.losses.last().unwrap();
+    assert!(
+        last < first,
+        "QAT loss should decrease over 60 steps: first {first}, last {last}"
+    );
+    // Exported folded params feed both Rust engines.
+    let params = tr.export_folded().expect("export");
+    let ranges = tr.learned_ranges().expect("ranges");
+    assert!(!params.is_empty() && !ranges.is_empty());
+    let spec = tr.spec.clone();
+    let fgraph = papernet_from_params(&params, &spec.export_keys, FusedActivation::Relu6).unwrap();
+    let qgraph = papernet_int8(
+        &params,
+        &ranges,
+        &spec.export_keys,
+        FusedActivation::Relu6,
+        QuantizeOptions::default(),
+    )
+    .unwrap();
+    let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 13);
+    let (x, _) = ds.batch(1, 0, 2);
+    assert_eq!(fgraph.run(&x).shape(), &[2, spec.num_classes]);
+    assert_eq!(qgraph.run(&x).shape(), &[2, spec.num_classes]);
+}
+
+#[test]
+fn rust_float_engine_matches_aot_eval_float() {
+    // The Rust float engine on exported folded weights must reproduce the
+    // L2 eval_float graph's logits: same eq. 14 folding, same topology.
+    let Some(arts) = artifacts() else { return };
+    let mut tr = Trainer::new(&arts.join("base"), 21).expect("trainer");
+    for _ in 0..20 {
+        tr.train_step().expect("step");
+    }
+    let spec = tr.spec.clone();
+    // AOT float accuracy vs Rust float-engine accuracy on the same split:
+    // identical arithmetic => identical predictions => identical accuracy.
+    let aot_acc = tr.eval_float(4).expect("aot eval");
+    let params = tr.export_folded().expect("export");
+    let fgraph = papernet_from_params(&params, &spec.export_keys, FusedActivation::Relu6).unwrap();
+    let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 21);
+    let rust_acc = harness::accuracy(&mut |x| fgraph.run(x), &ds, 4, spec.batch);
+    assert!(
+        (aot_acc - rust_acc).abs() < 0.02,
+        "float engines diverged: AOT {aot_acc}, Rust {rust_acc}"
+    );
+}
+
+#[test]
+fn quant_sim_matches_integer_engine_accuracy() {
+    // The paper's co-design requirement: the training-side simulation
+    // (fig. 1.1b, AOT eval_qsim with the Pallas fake-quant kernel) and the
+    // integer-only inference engine (fig. 1.1a, pure Rust) must agree.
+    let Some(arts) = artifacts() else { return };
+    let mut tr = Trainer::new(&arts.join("base"), 31)
+        .expect("trainer")
+        .with_knobs(Knobs::default());
+    for _ in 0..80 {
+        tr.train_step().expect("step");
+    }
+    let spec = tr.spec.clone();
+    let qsim_acc = tr.eval_qsim(4).expect("qsim");
+    let params = tr.export_folded().expect("export");
+    let ranges = tr.learned_ranges().expect("ranges");
+    let qgraph = papernet_int8(
+        &params,
+        &ranges,
+        &spec.export_keys,
+        FusedActivation::Relu6,
+        QuantizeOptions::default(),
+    )
+    .unwrap();
+    let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 31);
+    let engine_acc = harness::accuracy(&mut |x| qgraph.run(x), &ds, 4, spec.batch);
+    assert!(
+        (qsim_acc - engine_acc).abs() <= 0.05,
+        "training arithmetic (qsim {qsim_acc}) and inference arithmetic (engine {engine_acc}) diverged"
+    );
+}
+
+#[test]
+fn trained_model_roundtrips_through_disk() {
+    let Some(arts) = artifacts() else { return };
+    let mut tr = Trainer::new(&arts.join("base"), 41).expect("trainer");
+    for _ in 0..5 {
+        tr.train_step().expect("step");
+    }
+    let out = std::env::temp_dir().join("iaoi-test-model.bin");
+    tr.save(&out).expect("save");
+    let loaded = harness::load_trained(&out).expect("load");
+    assert!(!loaded.params.is_empty());
+    assert!(!loaded.ranges.is_empty());
+    let spec = tr.spec.clone();
+    let g = papernet_from_params(&loaded.params, &spec.export_keys, FusedActivation::Relu6).unwrap();
+    let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 41);
+    let (x, _) = ds.batch(1, 0, 1);
+    assert_eq!(g.run(&x).dim(1), spec.num_classes);
+}
+
+#[test]
+fn variant_artifacts_are_loadable() {
+    // Every architecture variant emitted by aot.py must train.
+    let Some(arts) = artifacts() else { return };
+    for variant in ["d2", "dm050_r16"] {
+        let dir = arts.join(variant);
+        if !dir.exists() {
+            eprintln!("SKIP variant {variant}");
+            continue;
+        }
+        let mut tr = Trainer::new(&dir, 3).expect("trainer");
+        let loss = tr.train_step().expect("step");
+        assert!(loss.is_finite(), "{variant} first loss finite");
+    }
+}
+
+#[test]
+fn bit_depth_knobs_affect_training() {
+    let Some(arts) = artifacts() else { return };
+    // 4-bit QAT must still run; its folded export differs from 8-bit.
+    let dir = arts.join("base");
+    let mut t8 = Trainer::new(&dir, 51).expect("t8").with_knobs(Knobs::default());
+    let mut t4 = Trainer::new(&dir, 51)
+        .expect("t4")
+        .with_knobs(Knobs { weight_bits: 4, act_bits: 4, ..Knobs::default() });
+    for _ in 0..15 {
+        t8.train_step().expect("step8");
+        t4.train_step().expect("step4");
+    }
+    let p8 = t8.export_folded().expect("e8");
+    let p4 = t4.export_folded().expect("e4");
+    let w8 = &p8["conv0/w"];
+    let w4 = &p4["conv0/w"];
+    assert!(w8.max_abs_diff(w4) > 1e-6, "bit-depth knob had no effect on training");
+}
+
+/// Guard that artifacts dir referenced by the default CLI path matches the
+/// layout the binary expects.
+#[test]
+fn artifact_layout_contract() {
+    let Some(arts) = artifacts() else { return };
+    for f in [
+        "base/train_step.hlo.txt",
+        "base/eval_float.hlo.txt",
+        "base/eval_qsim.hlo.txt",
+        "base/export_fold.hlo.txt",
+        "base/params_init.bin",
+        "base/model_spec.txt",
+        "quickstart.hlo.txt",
+        "quickstart_spec.txt",
+    ] {
+        assert!(arts.join(f).exists(), "missing artifact {f}");
+    }
+    // Python must never be needed at run time: no .py files in artifacts.
+    fn no_py(dir: &Path) {
+        for e in std::fs::read_dir(dir).unwrap().flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                no_py(&p);
+            } else {
+                assert_ne!(p.extension().and_then(|s| s.to_str()), Some("py"), "{p:?}");
+            }
+        }
+    }
+    no_py(&arts);
+}
