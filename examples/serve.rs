@@ -1,73 +1,115 @@
-//! Serving example: run the integer-only model behind the dynamic-batching
-//! coordinator and drive it with a bursty closed-loop workload, reporting
-//! latency percentiles, realized batch sizes and throughput — the serving
-//! shape of the paper's latency story (§4.2).
+//! Multi-model serving example: two quantized models exported as `.iaoiq`
+//! artifacts, loaded into a [`ModelRegistry`], and served *concurrently*
+//! through the multi-model coordinator — then one of them is **hot-swapped
+//! to a new version mid-run** without dropping a single in-flight request.
+//! This is the paper's deployment story (serialize once, serve the
+//! artifact) pushed to the ROADMAP's serving shape.
 //!
-//! Run: `cargo run --release --example serve [requests]`
-//! (works without artifacts: uses a PTQ-quantized random model when no
-//! trained model is present)
+//! Run: `cargo run --release --example serve [requests-per-model]`
+//! (fully self-contained: models are PTQ-quantized on the fly and written
+//! to a temp directory)
 
 use anyhow::Result;
-use iaoi::coordinator::{BatchPolicy, Coordinator, EngineKind};
-use iaoi::data::{ClassificationSet, Rng};
-use iaoi::graph::builders::papernet_random;
-use iaoi::nn::FusedActivation;
-use iaoi::quantize::{quantize_graph, QuantizeOptions};
-use iaoi::tensor::Tensor;
-use std::sync::Arc;
+use iaoi::coordinator::registry::ModelRegistry;
+use iaoi::coordinator::{BatchPolicy, MultiCoordinator};
+use iaoi::data::ClassificationSet;
+use iaoi::harness::demo_artifact;
+use iaoi::model_format;
+use std::collections::BTreeSet;
 use std::time::{Duration, Instant};
 
 fn main() -> Result<()> {
-    let requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+    let requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
 
-    // Build an int8 engine (PTQ of a random model keeps the example
-    // self-contained; `iaoi serve` uses the QAT-trained weights).
-    let float_model = papernet_random(16, FusedActivation::Relu6, 3);
-    let mut rng = Rng::seeded(9);
-    let calib: Vec<Tensor<f32>> = (0..3)
-        .map(|_| {
-            let mut d = vec![0f32; 2 * 16 * 16 * 3];
-            for v in d.iter_mut() {
-                *v = rng.range_f32(-1.0, 1.0);
-            }
-            Tensor::from_vec(&[2, 16, 16, 3], d)
-        })
-        .collect();
-    let (folded, int8_model) = quantize_graph(&float_model, &calib, QuantizeOptions::default());
+    // --- Export two distinct models as .iaoiq artifacts. ---
+    let dir = std::env::temp_dir().join(format!("iaoi-serve-example-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    // alpha: 16-class classifier; beta: 8-class (different output arity
+    // makes cross-model routing mistakes impossible to miss).
+    model_format::write_file(&dir.join("alpha.iaoiq"), &demo_artifact("alpha", 1, 16, 3))?;
+    model_format::write_file(&dir.join("beta.iaoiq"), &demo_artifact("beta", 1, 8, 11))?;
+    // alpha v2 (retrained stand-in: different seed => different weights),
+    // exported up front so the swap below is just a registry call.
+    let alpha_v2 = dir.join("alpha_v2.iaoiq");
+    model_format::write_file(&alpha_v2, &demo_artifact("alpha", 2, 16, 42))?;
 
-    let ds = ClassificationSet::new(16, 16, 11);
-    for (label, engine) in [
-        ("int8", EngineKind::Quant(Arc::new(int8_model))),
-        ("float32", EngineKind::Float(Arc::new(folded))),
-    ] {
-        for max_batch in [1usize, 8] {
-            let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(1) };
-            let coord = Coordinator::start(engine.clone(), policy, 1);
-            let client = coord.client();
-            let start = Instant::now();
-            // Bursty open-ish loop: issue in bursts of 16, await each burst.
-            let mut done = 0usize;
-            while done < requests {
-                let burst: Vec<_> = (0..16.min(requests - done))
-                    .map(|i| {
-                        let (img, _) = ds.example(3, (done + i) as u64);
-                        client.submit(img).expect("submit")
-                    })
-                    .collect();
-                done += burst.len();
-                for (_, rx) in burst {
-                    rx.recv().expect("response");
-                }
-            }
-            let wall = start.elapsed().as_secs_f64();
-            let m = coord.shutdown();
-            println!("{}", m.summary());
-            println!(
-                "  engine={label} max_batch={max_batch} -> {:.0} req/s",
-                requests as f64 / wall
-            );
+    // --- Load the registry and start serving. ---
+    let registry = ModelRegistry::load_dir(&dir)?;
+    // load_dir already prefers the highest version per name; for the demo,
+    // roll alpha back to v1 so the mid-run swap has something to do.
+    registry.swap("alpha", &dir.join("alpha.iaoiq"))?;
+    println!("serving models: {:?}", registry.names());
+
+    let policy = BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) };
+    let coord = MultiCoordinator::start(registry.clone(), policy, 2);
+    let start = Instant::now();
+
+    // --- Drive both models from concurrent client threads. ---
+    let results = std::thread::scope(|s| {
+        let handles: Vec<_> = [("alpha", 16usize), ("beta", 8usize)]
+            .into_iter()
+            .map(|(name, classes)| {
+                let client = coord.client();
+                s.spawn(move || {
+                    let ds = ClassificationSet::new(16, classes, 5);
+                    let mut versions = BTreeSet::new();
+                    let mut completed = 0usize;
+                    let mut done = 0usize;
+                    while done < requests {
+                        let burst: Vec<_> = (0..16.min(requests - done))
+                            .map(|i| {
+                                let (img, _) = ds.example(2, (done + i) as u64);
+                                client.submit(name, img).expect("submit")
+                            })
+                            .collect();
+                        done += burst.len();
+                        for (id, rx) in burst {
+                            let resp = rx.recv().expect("response");
+                            assert_eq!(resp.id, id);
+                            assert_eq!(resp.model, name);
+                            assert_eq!(resp.output.len(), classes, "routing mixed models!");
+                            versions.insert(resp.version);
+                            completed += 1;
+                        }
+                    }
+                    (name, completed, versions)
+                })
+            })
+            .collect();
+
+        // --- Hot-swap alpha to v2 while both clients are mid-run. ---
+        std::thread::sleep(Duration::from_millis(5));
+        let (old, new) = registry.swap("alpha", &alpha_v2).expect("hot swap");
+        println!("hot-swapped alpha v{old:?} -> v{new} at t={:?}", start.elapsed());
+        assert_eq!((old, new), (Some(1), 2));
+
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect::<Vec<_>>()
+    });
+
+    // Post-swap, new traffic must deterministically land on alpha v2 while
+    // beta keeps serving v1.
+    let probe = ClassificationSet::new(16, 16, 9);
+    let resp = coord.client().infer("alpha", probe.example(2, 0).0)?;
+    assert_eq!((resp.version, resp.output.len()), (2, 16), "post-swap alpha must serve v2");
+
+    let wall = start.elapsed().as_secs_f64();
+    for m in coord.shutdown() {
+        println!("{}", m.summary());
+    }
+    let mut total = 0usize;
+    for (name, completed, versions) in results {
+        total += completed;
+        println!("  {name}: {completed}/{requests} completed, served by version(s) {versions:?}");
+        assert_eq!(completed, requests, "{name} dropped requests");
+        if name == "beta" {
+            assert_eq!(versions, BTreeSet::from([1]), "beta must be untouched by alpha's swap");
         }
     }
-    println!("serve example OK — compare int8 vs float32 throughput and the max_batch=1 vs 8 batching win");
+    println!(
+        "serve example OK — {total} requests across 2 models in {wall:.2}s ({:.0} req/s), \
+         one model hot-swapped mid-run with zero dropped requests",
+        total as f64 / wall
+    );
+    let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }

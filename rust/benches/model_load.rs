@@ -1,0 +1,64 @@
+//! Artifact cold-start benchmark: time to decode a `.iaoiq` artifact and
+//! time to first inference from raw bytes — the latency a hot-swap
+//! ([`iaoi::coordinator::registry::ModelRegistry::swap`]) or a fresh
+//! serving process pays before the new model can take traffic.
+//!
+//! Run: `cargo bench --bench model_load`
+
+use iaoi::bench_util::bench;
+use iaoi::data::Rng;
+use iaoi::graph::builders::mobilenet;
+use iaoi::harness::demo_artifact;
+use iaoi::model_format::{self, ModelArtifact};
+use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::tensor::Tensor;
+
+fn mobilenet_artifact() -> ModelArtifact {
+    let g = mobilenet(0.25, 16, false, 1);
+    let mut rng = Rng::seeded(4);
+    let mut d = vec![0f32; 2 * 32 * 32 * 3];
+    for v in d.iter_mut() {
+        *v = rng.range_f32(-1.0, 1.0);
+    }
+    let calib = vec![Tensor::from_vec(&[2, 32, 32, 3], d)];
+    let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
+    ModelArtifact::new("mobilenet_dm025", 1, [32, 32, 3], q)
+}
+
+fn cold_start_case(label: &str, artifact: &ModelArtifact) {
+    let bytes = model_format::save(artifact);
+    let [h, w, c] = artifact.input_shape;
+    let img = Tensor::<f32>::zeros(&[1, h, w, c]);
+    println!(
+        "== {label}: {} nodes, {} weight bytes, {} artifact bytes ==",
+        artifact.graph.nodes.len(),
+        artifact.graph.model_bytes(),
+        bytes.len()
+    );
+    let decode = bench(&format!("{label}: decode artifact"), 20, || {
+        let loaded = model_format::load(&bytes).expect("load");
+        std::hint::black_box(loaded.graph.nodes.len());
+    });
+    let cold = bench(&format!("{label}: decode + first inference"), 10, || {
+        let loaded = model_format::load(&bytes).expect("load");
+        std::hint::black_box(loaded.graph.run(&img));
+    });
+    // Steady-state inference, for reference against the cold number.
+    let resident = model_format::load(&bytes).expect("load");
+    let warm = bench(&format!("{label}: resident inference"), 10, || {
+        std::hint::black_box(resident.graph.run(&img));
+    });
+    println!(
+        "    -> decode {:.2} ms | cold first-inference {:.2} ms | warm {:.2} ms | decode overhead {:.1}%\n",
+        decode.median_ms(),
+        cold.median_ms(),
+        warm.median_ms(),
+        100.0 * decode.median_ms() / cold.median_ms().max(1e-9),
+    );
+}
+
+fn main() {
+    println!("== .iaoiq cold-start: deserialize + first-inference latency ==\n");
+    cold_start_case("papernet (demo)", &demo_artifact("demo", 1, 16, 3));
+    cold_start_case("mobilenet dm=0.25", &mobilenet_artifact());
+}

@@ -1,0 +1,146 @@
+//! A minimal, offline stand-in for the `anyhow` crate covering exactly the
+//! API surface this repository uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Errors are stored as flattened message chains (`context: cause`)
+//! rather than as a source chain — enough for CLI diagnostics and tests.
+//!
+//! This is an independent implementation, not vendored code; replace the
+//! `anyhow` entry in the workspace manifest with the crates.io release if
+//! network access is available and richer backtraces are wanted.
+
+use std::fmt;
+
+/// A flattened error message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a printable message (what `anyhow!` expands to).
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string() }
+    }
+
+    /// Prepend a context layer, mirroring `anyhow::Error::context`.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Self { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`: that is what makes this blanket conversion (and
+// therefore `?` on std error types) coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Self { msg }
+    }
+}
+
+/// `Result` specialized to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{ctx}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let n: i32 = s.parse().context("not a number")?;
+        ensure!(n >= 0, "negative: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        assert_eq!(parse("17").unwrap(), 17);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("not a number"), "{e}");
+        let e = parse("-2").unwrap_err();
+        assert_eq!(e.to_string(), "negative: -2");
+        let e: Error = anyhow!("a {}", 1);
+        assert_eq!(format!("{e:?}"), "a 1");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u8).with_context(|| "x").unwrap(), 3);
+    }
+}

@@ -1,0 +1,166 @@
+//! Inert stand-in for the `xla` PJRT bindings used by the `iaoi` crate's
+//! AOT training path (`runtime`/`train`). The real bindings need the
+//! `xla_extension` C library, which offline build hosts do not have, so
+//! this shim keeps the crate compiling and fails gracefully at run time:
+//! [`PjRtClient::cpu`] returns an error, which every trainer/quickstart
+//! entry point surfaces as "PJRT runtime unavailable". The pure-Rust
+//! integer inference engine never touches this crate.
+//!
+//! To run the QAT training path, point the workspace's `xla` dependency at
+//! the real bindings instead; the API subset here matches their signatures.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` for the methods the repo calls.
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Self {
+        Self(
+            "PJRT runtime unavailable: this build uses the inert xla shim \
+             (rust/shims/xla); link the real xla_extension bindings to run \
+             AOT artifacts"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Element types of XLA literals (only the ones the repo names).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    U8,
+    S32,
+    F32,
+}
+
+/// Rust scalar types storable in a literal.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for u8 {}
+impl NativeType for i8 {}
+impl NativeType for u16 {}
+impl NativeType for i16 {}
+impl NativeType for u32 {}
+impl NativeType for i32 {}
+impl NativeType for u64 {}
+impl NativeType for i64 {}
+
+/// Host-side literal value. The shim stores nothing: literals can be
+/// constructed (so data-prep code runs), but every readback errors.
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal(()))
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Ok(Literal(()))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Shape of an array literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> Vec<i64> {
+        self.dims.clone()
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// Device-side buffer handle.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] is the single entry point, and
+/// in this shim it always errors — nothing downstream can be reached.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "shim".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}

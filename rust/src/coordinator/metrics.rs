@@ -6,7 +6,9 @@ use std::time::Duration;
 /// Aggregated serving statistics.
 #[derive(Clone, Debug)]
 pub struct Metrics {
-    pub engine: &'static str,
+    /// Engine or model label (e.g. `"int8"`, or a registry model name in
+    /// multi-model serving).
+    pub engine: String,
     pub completed: u64,
     pub batches: u64,
     /// Sum of batch sizes (== completed; kept for averaging convenience).
@@ -22,9 +24,9 @@ pub struct Metrics {
 const RESERVOIR: usize = 100_000;
 
 impl Metrics {
-    pub fn new(engine: &'static str) -> Self {
+    pub fn new(engine: impl Into<String>) -> Self {
         Self {
-            engine,
+            engine: engine.into(),
             completed: 0,
             batches: 0,
             batched_requests: 0,

@@ -18,13 +18,24 @@
 //! request completes exactly once; batch sizes lie in `[1, max_batch]`;
 //! requests within a batch preserve submission order; shutdown drains the
 //! queue.
+//!
+//! Two coordinator shapes share the batching policy:
+//! * [`Coordinator`] — one engine, the original single-model pipeline;
+//! * [`MultiCoordinator`] — a [`registry::ModelRegistry`] of named,
+//!   versioned models with per-request routing. The batcher keys pending
+//!   groups by model name, so **batches never mix models**, and
+//!   [`registry::ModelRegistry::swap`] hot-swaps a model atomically while
+//!   in-flight batches finish on the version they were formed against.
 
 pub mod metrics;
+pub mod registry;
 
 use crate::graph::{FloatGraph, QGraph};
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use metrics::Metrics;
+use registry::ModelRegistry;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -237,6 +248,265 @@ impl Coordinator {
             let _ = w.join();
         }
         self.metrics.lock().expect("metrics poisoned").clone()
+    }
+}
+
+/// One routed inference request (multi-model pipeline).
+struct RoutedRequest {
+    id: u64,
+    model: String,
+    image: Tensor<f32>,
+    submitted: Instant,
+    reply: mpsc::Sender<RoutedResponse>,
+}
+
+/// A completed routed inference, echoing which model *version* served it —
+/// the observable a hot-swap test (or a canary dashboard) keys on.
+#[derive(Clone, Debug)]
+pub struct RoutedResponse {
+    pub id: u64,
+    pub model: String,
+    /// Registry version of the entry that executed the batch.
+    pub version: u32,
+    pub output: Vec<f32>,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+/// Cloneable submission handle for the multi-model coordinator.
+#[derive(Clone)]
+pub struct RoutedClient {
+    tx: Arc<Mutex<Option<mpsc::Sender<RoutedRequest>>>>,
+    next_id: Arc<AtomicU64>,
+    registry: ModelRegistry,
+}
+
+impl RoutedClient {
+    /// Submit one image to the named model; returns a receiver for the
+    /// response. Routing and shape errors surface here, before the request
+    /// enters the queue.
+    pub fn submit(
+        &self,
+        model: &str,
+        image: Tensor<f32>,
+    ) -> Result<(u64, mpsc::Receiver<RoutedResponse>)> {
+        let entry = self.registry.resolve(model)?;
+        let want = entry.batched_shape(1);
+        if image.shape() != &want[..] {
+            bail!(
+                "model {model:?} expects input shape {want:?}, got {:?}",
+                image.shape()
+            );
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let guard = self.tx.lock().expect("client sender poisoned");
+        let tx = guard.as_ref().ok_or_else(|| anyhow!("coordinator is shut down"))?;
+        tx.send(RoutedRequest {
+            id,
+            model: model.to_string(),
+            image,
+            submitted: Instant::now(),
+            reply: reply_tx,
+        })
+        .map_err(|_| anyhow!("coordinator is shut down"))?;
+        Ok((id, reply_rx))
+    }
+
+    /// Submit and wait (closed-loop convenience).
+    pub fn infer(&self, model: &str, image: Tensor<f32>) -> Result<RoutedResponse> {
+        let (_, rx) = self.submit(model, image)?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))
+    }
+}
+
+/// A pending same-model batch accumulating co-riders.
+struct PendingGroup {
+    since: Instant,
+    reqs: Vec<RoutedRequest>,
+}
+
+/// Multi-model serving coordinator: per-request model routing over a shared
+/// [`ModelRegistry`], with the same dynamic-batching policy as
+/// [`Coordinator`] applied **per model**.
+pub struct MultiCoordinator {
+    client: RoutedClient,
+    registry: ModelRegistry,
+    metrics: Arc<Mutex<HashMap<String, Metrics>>>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl MultiCoordinator {
+    /// Start serving every model in `registry` with `workers` engine
+    /// threads. The registry handle stays live: `swap` on any clone of it
+    /// hot-swaps models under this coordinator without a restart.
+    pub fn start(registry: ModelRegistry, policy: BatchPolicy, workers: usize) -> Self {
+        assert!(workers >= 1 && policy.max_batch >= 1);
+        let (req_tx, req_rx) = mpsc::channel::<RoutedRequest>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<RoutedRequest>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let metrics: Arc<Mutex<HashMap<String, Metrics>>> = Arc::new(Mutex::new(HashMap::new()));
+
+        // Batcher: groups are keyed by model name, so a batch can only ever
+        // hold one model's requests. Each group flushes when it reaches
+        // max_batch or its head request has waited max_delay.
+        let batcher = std::thread::spawn(move || {
+            let mut pending: HashMap<String, PendingGroup> = HashMap::new();
+            let mut disconnected = false;
+            while !disconnected || !pending.is_empty() {
+                let now = Instant::now();
+                let due: Vec<String> = pending
+                    .iter()
+                    .filter(|(_, g)| {
+                        disconnected
+                            || g.reqs.len() >= policy.max_batch
+                            || now.duration_since(g.since) >= policy.max_delay
+                    })
+                    .map(|(k, _)| k.clone())
+                    .collect();
+                for key in due {
+                    if let Some(group) = pending.remove(&key) {
+                        if batch_tx.send(group.reqs).is_err() {
+                            return;
+                        }
+                    }
+                }
+                if disconnected {
+                    continue; // drain remaining groups, then exit
+                }
+                let next_deadline = pending.values().map(|g| g.since + policy.max_delay).min();
+                let received = match next_deadline {
+                    None => match req_rx.recv() {
+                        Ok(r) => Some(r),
+                        Err(_) => None,
+                    },
+                    Some(deadline) => {
+                        let now = Instant::now();
+                        if deadline <= now {
+                            continue;
+                        }
+                        match req_rx.recv_timeout(deadline - now) {
+                            Ok(r) => Some(r),
+                            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => None,
+                        }
+                    }
+                };
+                match received {
+                    Some(r) => pending
+                        .entry(r.model.clone())
+                        .or_insert_with(|| PendingGroup { since: Instant::now(), reqs: Vec::new() })
+                        .reqs
+                        .push(r),
+                    None => disconnected = true,
+                }
+            }
+        });
+
+        // Workers: snapshot the model entry once per batch — a concurrent
+        // swap cannot change the graph under a running batch, and the
+        // response echoes the snapshot's version.
+        let mut worker_handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let batch_rx = Arc::clone(&batch_rx);
+            let metrics = Arc::clone(&metrics);
+            let registry = registry.clone();
+            worker_handles.push(std::thread::spawn(move || loop {
+                let batch = {
+                    let guard = batch_rx.lock().expect("batch queue poisoned");
+                    guard.recv()
+                };
+                let Ok(batch) = batch else { return };
+                let size = batch.len();
+                let model_name = batch[0].model.clone();
+                debug_assert!(
+                    batch.iter().all(|r| r.model == model_name),
+                    "batcher must never mix models in one batch"
+                );
+                // A model can only disappear if a future registry grows a
+                // remove(); guard anyway so workers never panic.
+                let Some(entry) = registry.get(&model_name) else { continue };
+                let engine = EngineKind::Quant(Arc::clone(&entry.graph));
+
+                let mut shape = batch[0].image.shape().to_vec();
+                shape[0] = size;
+                let per = batch[0].image.len();
+                let mut stacked = vec![0f32; per * size];
+                for (i, r) in batch.iter().enumerate() {
+                    stacked[i * per..(i + 1) * per].copy_from_slice(r.image.data());
+                }
+                let compute_start = Instant::now();
+                let rows = engine.run_batch(&Tensor::from_vec(&shape, stacked));
+                let compute = compute_start.elapsed();
+                let now = Instant::now();
+                {
+                    let mut m = metrics.lock().expect("metrics poisoned");
+                    let m = m
+                        .entry(model_name.clone())
+                        .or_insert_with(|| Metrics::new(model_name.clone()));
+                    m.record_batch(size, compute);
+                    for r in &batch {
+                        m.record_latency(now - r.submitted);
+                    }
+                }
+                for (r, output) in batch.into_iter().zip(rows) {
+                    let latency = now - r.submitted;
+                    let _ = r.reply.send(RoutedResponse {
+                        id: r.id,
+                        model: r.model,
+                        version: entry.version,
+                        output,
+                        latency,
+                        batch_size: size,
+                    });
+                }
+            }));
+        }
+
+        Self {
+            client: RoutedClient {
+                tx: Arc::new(Mutex::new(Some(req_tx))),
+                next_id: Arc::new(AtomicU64::new(0)),
+                registry: registry.clone(),
+            },
+            registry,
+            metrics,
+            batcher: Some(batcher),
+            workers: worker_handles,
+        }
+    }
+
+    /// A cloneable routed submission handle.
+    pub fn client(&self) -> RoutedClient {
+        self.client.clone()
+    }
+
+    /// The shared registry handle (for hot-swapping while serving).
+    pub fn registry(&self) -> ModelRegistry {
+        self.registry.clone()
+    }
+
+    /// Snapshot of per-model metrics, sorted by model name.
+    pub fn metrics(&self) -> Vec<Metrics> {
+        let guard = self.metrics.lock().expect("metrics poisoned");
+        let mut out: Vec<Metrics> = guard.values().cloned().collect();
+        out.sort_by(|a, b| a.engine.cmp(&b.engine));
+        out
+    }
+
+    /// Drain and stop; every already-submitted request completes first.
+    pub fn shutdown(mut self) -> Vec<Metrics> {
+        // Taking the sender disarms every RoutedClient clone (they share the
+        // Option) and disconnects the batcher, which drains and exits.
+        self.client.tx.lock().expect("client sender poisoned").take();
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics()
     }
 }
 

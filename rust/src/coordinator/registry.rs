@@ -1,0 +1,264 @@
+//! Multi-model registry: named, versioned quantized models loaded from
+//! `.iaoiq` artifacts ([`crate::model_format`]), shared between the router,
+//! the batcher, and the workers, with **atomic hot-swap**.
+//!
+//! Swap semantics: [`ModelRegistry::swap`] decodes the new artifact fully
+//! *before* touching the table, then replaces the entry under a single
+//! write-lock — readers either see the old model or the new one, never a
+//! partial state. Workers snapshot an `Arc<ModelEntry>` when they pick up a
+//! batch, so requests already in flight finish on the model they were
+//! batched against and nothing is dropped mid-swap.
+
+use crate::graph::QGraph;
+use crate::model_format::{self, ModelArtifact};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+
+/// One resident model: immutable once registered (swaps replace the whole
+/// entry).
+#[derive(Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub version: u32,
+    /// Shape `[H, W, C]` of one input example.
+    pub input_shape: [usize; 3],
+    pub graph: Arc<QGraph>,
+    /// Artifact path the entry was loaded from (empty for in-memory
+    /// registrations).
+    pub source: PathBuf,
+}
+
+impl ModelEntry {
+    /// The batched NHWC input shape for a batch of `n`.
+    pub fn batched_shape(&self, n: usize) -> [usize; 4] {
+        [n, self.input_shape[0], self.input_shape[1], self.input_shape[2]]
+    }
+}
+
+/// Cloneable handle to the shared name → model table.
+#[derive(Clone, Default)]
+pub struct ModelRegistry {
+    inner: Arc<RwLock<HashMap<String, Arc<ModelEntry>>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Load every `*.iaoiq` artifact in `dir`. Files are visited in sorted
+    /// order; when several artifacts carry the same model name, the highest
+    /// version wins (ties broken by file order).
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let registry = Self::new();
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("read model directory {dir:?}"))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().and_then(|s| s.to_str()) == Some(model_format::EXTENSION))
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            bail!("no .{} artifacts in {dir:?}", model_format::EXTENSION);
+        }
+        for path in paths {
+            let artifact = model_format::read_file(&path)?;
+            let newer = match registry.get(&artifact.name) {
+                None => true,
+                Some(existing) => artifact.version >= existing.version,
+            };
+            if newer {
+                registry.install(artifact, path);
+            }
+        }
+        Ok(registry)
+    }
+
+    fn make_entry(artifact: ModelArtifact, source: PathBuf) -> Arc<ModelEntry> {
+        Arc::new(ModelEntry {
+            name: artifact.name.clone(),
+            version: artifact.version,
+            input_shape: artifact.input_shape,
+            graph: Arc::new(artifact.graph),
+            source,
+        })
+    }
+
+    /// Register (or replace) a model from an in-memory artifact.
+    pub fn install(&self, artifact: ModelArtifact, source: PathBuf) -> Arc<ModelEntry> {
+        let entry = Self::make_entry(artifact, source);
+        self.inner
+            .write()
+            .expect("registry poisoned")
+            .insert(entry.name.clone(), Arc::clone(&entry));
+        entry
+    }
+
+    /// Register a model from an artifact file under its embedded name.
+    pub fn register_file(&self, path: &Path) -> Result<Arc<ModelEntry>> {
+        let artifact = model_format::read_file(path)?;
+        Ok(self.install(artifact, path.to_path_buf()))
+    }
+
+    /// Atomically hot-swap the model served under `name` with the artifact
+    /// at `path`. The artifact must carry the same model name (a safety rail
+    /// against wiring model B's weights under model A's route) and the same
+    /// input shape — requests already validated against the resident model
+    /// may still be queued, so a geometry change would panic workers; a new
+    /// geometry is a new model name. The version may move in either
+    /// direction (rollbacks are legitimate swaps).
+    /// Returns `(previous_version, new_version)`.
+    ///
+    /// In-flight batches keep their snapshot of the previous entry and
+    /// complete normally; only batches formed after the swap see the new
+    /// graph.
+    pub fn swap(&self, name: &str, path: &Path) -> Result<(Option<u32>, u32)> {
+        let artifact = model_format::read_file(path)?;
+        if artifact.name != name {
+            bail!(
+                "artifact {path:?} names model {:?}, refusing to swap it in as {name:?}",
+                artifact.name
+            );
+        }
+        let new_version = artifact.version;
+        let entry = Self::make_entry(artifact, path.to_path_buf());
+        let mut table = self.inner.write().expect("registry poisoned");
+        if let Some(existing) = table.get(name) {
+            if existing.input_shape != entry.input_shape {
+                bail!(
+                    "refusing to hot-swap {name:?}: input shape {:?} -> {:?} would break \
+                     requests validated against the resident model; register the new \
+                     geometry under a new model name instead",
+                    existing.input_shape,
+                    entry.input_shape
+                );
+            }
+        }
+        let previous = table.insert(name.to_string(), entry).map(|old| old.version);
+        Ok((previous, new_version))
+    }
+
+    /// Snapshot the current entry for `name`.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.inner.read().expect("registry poisoned").get(name).cloned()
+    }
+
+    /// Like [`Self::get`] but with a routing-flavoured error.
+    pub fn resolve(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        self.get(name).ok_or_else(|| {
+            anyhow!("unknown model {name:?} (registered: {:?})", self.names())
+        })
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.inner.read().expect("registry poisoned").keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("registry poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::graph::builders::papernet_random;
+    use crate::nn::FusedActivation;
+    use crate::quantize::{quantize_graph, QuantizeOptions};
+    use crate::tensor::Tensor;
+
+    fn artifact(name: &str, version: u32, seed: u64) -> ModelArtifact {
+        let g = papernet_random(4, FusedActivation::Relu6, seed);
+        let mut rng = Rng::seeded(seed);
+        let calib: Vec<Tensor<f32>> = (0..2)
+            .map(|_| {
+                let mut d = vec![0f32; 16 * 16 * 3];
+                for v in d.iter_mut() {
+                    *v = rng.range_f32(-1.0, 1.0);
+                }
+                Tensor::from_vec(&[1, 16, 16, 3], d)
+            })
+            .collect();
+        let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
+        ModelArtifact::new(name, version, [16, 16, 3], q)
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("iaoi-registry-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn load_dir_keeps_highest_version_per_name() {
+        let dir = tmpdir("versions");
+        model_format::write_file(&dir.join("m_v1.iaoiq"), &artifact("m", 1, 1)).unwrap();
+        model_format::write_file(&dir.join("m_v2.iaoiq"), &artifact("m", 2, 2)).unwrap();
+        model_format::write_file(&dir.join("other.iaoiq"), &artifact("other", 7, 3)).unwrap();
+        let reg = ModelRegistry::load_dir(&dir).unwrap();
+        assert_eq!(reg.names(), vec!["m".to_string(), "other".to_string()]);
+        assert_eq!(reg.get("m").unwrap().version, 2);
+        assert_eq!(reg.get("other").unwrap().version, 7);
+    }
+
+    #[test]
+    fn swap_replaces_entry_but_old_snapshot_survives() {
+        let dir = tmpdir("swap");
+        let v2 = dir.join("m_v2.iaoiq");
+        model_format::write_file(&v2, &artifact("m", 2, 5)).unwrap();
+        let reg = ModelRegistry::new();
+        reg.install(artifact("m", 1, 4), PathBuf::new());
+        let snapshot = reg.get("m").unwrap();
+        let (old, new) = reg.swap("m", &v2).unwrap();
+        assert_eq!((old, new), (Some(1), 2));
+        assert_eq!(reg.get("m").unwrap().version, 2);
+        // The pre-swap snapshot (a worker mid-batch) still runs v1.
+        assert_eq!(snapshot.version, 1);
+        let x = Tensor::zeros(&[1, 16, 16, 3]);
+        assert_eq!(snapshot.graph.run(&x).shape(), &[1, 4]);
+    }
+
+    #[test]
+    fn swap_rejects_mismatched_name() {
+        let dir = tmpdir("mismatch");
+        let path = dir.join("b.iaoiq");
+        model_format::write_file(&path, &artifact("b", 1, 6)).unwrap();
+        let reg = ModelRegistry::new();
+        reg.install(artifact("a", 1, 7), PathBuf::new());
+        let err = reg.swap("a", &path).unwrap_err();
+        assert!(err.to_string().contains("refusing"), "{err}");
+        assert_eq!(reg.get("a").unwrap().version, 1);
+    }
+
+    #[test]
+    fn swap_rejects_input_shape_change() {
+        let dir = tmpdir("shape");
+        let path = dir.join("m_v2.iaoiq");
+        // Same graph, same name, but declared for a different input geometry.
+        let mut art = artifact("m", 2, 8);
+        art.input_shape = [8, 8, 3];
+        model_format::write_file(&path, &art).unwrap();
+        let reg = ModelRegistry::new();
+        reg.install(artifact("m", 1, 9), PathBuf::new());
+        let err = reg.swap("m", &path).unwrap_err();
+        assert!(err.to_string().contains("input shape"), "{err}");
+        assert_eq!(reg.get("m").unwrap().version, 1, "swap must not partially apply");
+    }
+
+    #[test]
+    fn empty_dir_is_an_error() {
+        let dir = tmpdir("empty");
+        assert!(ModelRegistry::load_dir(&dir).is_err());
+    }
+}

@@ -43,6 +43,28 @@ pub enum Kernel {
     Int8Pairwise,
 }
 
+impl Kernel {
+    /// Stable numeric code for binary model artifacts
+    /// ([`crate::model_format`]). Codes are append-only across versions.
+    pub fn code(self) -> u8 {
+        match self {
+            Kernel::Reference => 0,
+            Kernel::Blocked => 1,
+            Kernel::Int8Pairwise => 2,
+        }
+    }
+
+    /// Inverse of [`Self::code`]; `None` for unknown codes.
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(Kernel::Reference),
+            1 => Some(Kernel::Blocked),
+            2 => Some(Kernel::Int8Pairwise),
+            _ => None,
+        }
+    }
+}
+
 /// Geometry and quantization of one quantized GEMM: `LHS (M×K) · RHS (K×N)`.
 ///
 /// By §2.4 convention the LHS is the weights matrix (`Z1 = lhs_zero`) and

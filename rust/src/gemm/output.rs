@@ -94,6 +94,26 @@ pub enum FusedActivation {
 }
 
 impl FusedActivation {
+    /// Stable numeric code for binary model artifacts
+    /// ([`crate::model_format`]). Codes are append-only across versions.
+    pub fn code(self) -> u8 {
+        match self {
+            FusedActivation::None => 0,
+            FusedActivation::Relu => 1,
+            FusedActivation::Relu6 => 2,
+        }
+    }
+
+    /// Inverse of [`Self::code`]; `None` for unknown codes.
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(FusedActivation::None),
+            1 => Some(FusedActivation::Relu),
+            2 => Some(FusedActivation::Relu6),
+            _ => None,
+        }
+    }
+
     /// The quantized clamp interval implementing this activation under the
     /// output quantization `(scale, zero_point)`.
     pub fn clamp_bounds(self, scale: f64, zero_point: i32) -> (u8, u8) {

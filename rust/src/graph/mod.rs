@@ -322,12 +322,49 @@ pub enum QOp {
     Logistic,
 }
 
+impl QOp {
+    /// Human-readable op kind (error messages, artifact dumps).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            QOp::Conv(_) => "conv2d",
+            QOp::Depthwise(_) => "depthwise_conv2d",
+            QOp::Fc(_) => "fully_connected",
+            QOp::AvgPool { .. } => "avg_pool",
+            QOp::MaxPool { .. } => "max_pool",
+            QOp::GlobalAvgPool => "global_avg_pool",
+            QOp::Add { .. } => "add",
+            QOp::Concat { .. } => "concat",
+            QOp::Softmax => "softmax",
+            QOp::Logistic => "logistic",
+        }
+    }
+
+    /// Extra data inputs beyond the node's primary input (Add's other
+    /// operand, Concat's tail operands).
+    pub fn extra_inputs(&self) -> Vec<NodeRef> {
+        match self {
+            QOp::Add { other, .. } => vec![*other],
+            QOp::Concat { others, .. } => others.clone(),
+            _ => Vec::new(),
+        }
+    }
+}
+
 /// One node of the quantized graph.
 #[derive(Clone, Debug)]
 pub struct QNode {
     pub name: String,
     pub input: NodeRef,
     pub op: QOp,
+}
+
+impl QNode {
+    /// Every data input of this node (primary first).
+    pub fn inputs(&self) -> Vec<NodeRef> {
+        let mut refs = vec![self.input];
+        refs.extend(self.op.extra_inputs());
+        refs
+    }
 }
 
 /// The integer-only model: uint8 activations everywhere, fig. 1.1a per layer.
@@ -390,6 +427,27 @@ impl QGraph {
     /// Final output without leaving the quantized domain.
     pub fn run_q(&self, qin: &QTensor) -> QTensor {
         self.run_all_q(qin).pop().expect("empty graph")
+    }
+
+    /// Check the topological-order invariant every executor relies on:
+    /// node `i` may only read the graph input or a node `j < i`. Returns a
+    /// description of the first violation. Used by the artifact loader
+    /// ([`crate::model_format`]) so corrupt files fail before execution.
+    pub fn validate_topology(&self) -> Result<(), String> {
+        for (i, node) in self.nodes.iter().enumerate() {
+            for r in node.inputs() {
+                if let NodeRef::Node(j) = r {
+                    if j >= i {
+                        return Err(format!(
+                            "node {i} ({}, {}) reads node {j}, which is not earlier in the DAG",
+                            node.name,
+                            node.op.kind_name()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Total weight bytes (uint8 weights + int32 biases) — the paper's 4×

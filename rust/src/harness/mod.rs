@@ -8,18 +8,20 @@ pub mod detection;
 pub mod figures;
 pub mod tables;
 
-use crate::coordinator::{BatchPolicy, Coordinator, EngineKind};
+use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::{BatchPolicy, Coordinator, EngineKind, MultiCoordinator};
 use crate::data::ClassificationSet;
 use crate::gemm::Kernel;
-use crate::graph::builders::ParamMap;
+use crate::graph::builders::{papernet_random, ParamMap};
 use crate::graph::{FloatGraph, FloatOp, NodeRef, QGraph};
 use crate::io;
+use crate::model_format::{self, ModelArtifact};
 use crate::nn::conv::Conv2d;
 use crate::nn::depthwise::DepthwiseConv2d;
 use crate::nn::fc::FullyConnected;
 use crate::nn::{FusedActivation, Padding};
 use crate::quant::EmaRange;
-use crate::quantize::{convert, Calibration, QuantizeOptions};
+use crate::quantize::{convert, quantize_graph, Calibration, QuantizeOptions};
 use crate::tensor::Tensor;
 use crate::train::{Knobs, Trainer};
 use anyhow::{anyhow, Context, Result};
@@ -418,6 +420,135 @@ pub fn serve(
         println!("{}", metrics.summary());
         println!("  [{label}] throughput {:.1} req/s over {requests} requests", requests as f64 / wall);
     }
+    Ok(())
+}
+
+/// PTQ-quantize the self-contained demo PaperNet (random weights, synthetic
+/// calibration) into a `.iaoiq`-ready artifact. Needs no AOT artifacts, so
+/// `iaoi export` and the serving demos work on a fresh checkout; different
+/// seeds give genuinely different weights (useful for hot-swap demos).
+pub fn demo_artifact(name: &str, version: u32, classes: usize, seed: u64) -> ModelArtifact {
+    let float_model = papernet_random(classes, FusedActivation::Relu6, seed);
+    let mut rng = crate::data::Rng::seeded(seed ^ 0xca11b);
+    let calib: Vec<Tensor<f32>> = (0..3)
+        .map(|_| {
+            let mut d = vec![0f32; 2 * 16 * 16 * 3];
+            for v in d.iter_mut() {
+                *v = rng.range_f32(-1.0, 1.0);
+            }
+            Tensor::from_vec(&[2, 16, 16, 3], d)
+        })
+        .collect();
+    let (_, q) = quantize_graph(&float_model, &calib, QuantizeOptions::default());
+    ModelArtifact::new(name, version, [16, 16, 3], q)
+}
+
+/// `iaoi export`: serialize a quantized model to a `.iaoiq` artifact.
+/// With `trained = Some((artifacts, model))` the QAT-trained checkpoint is
+/// converted (Algorithm 1 step 4, using the learned ranges); otherwise the
+/// self-contained PTQ demo model is exported.
+pub fn export_model(
+    out: &Path,
+    name: &str,
+    version: u32,
+    classes: usize,
+    seed: u64,
+    trained: Option<(&Path, &Path)>,
+) -> Result<()> {
+    let artifact = match trained {
+        Some((artifacts, model_path)) => {
+            let spec = crate::train::ModelSpec::load(&artifacts.join("base"))?;
+            let model = load_trained(model_path)?;
+            let graph = papernet_int8(
+                &model.params,
+                &model.ranges,
+                &spec.export_keys,
+                FusedActivation::Relu6,
+                QuantizeOptions::default(),
+            )?;
+            ModelArtifact::new(
+                name,
+                version,
+                [spec.resolution, spec.resolution, spec.channels],
+                graph,
+            )
+        }
+        None => demo_artifact(name, version, classes, seed),
+    };
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).with_context(|| format!("create {parent:?}"))?;
+        }
+    }
+    model_format::write_file(out, &artifact)?;
+    println!(
+        "exported model {:?} v{} -> {out:?} ({} nodes, {} weight bytes, input {:?})",
+        artifact.name,
+        artifact.version,
+        artifact.graph.nodes.len(),
+        artifact.graph.model_bytes(),
+        artifact.input_shape,
+    );
+    Ok(())
+}
+
+/// `iaoi serve --models DIR`: load every artifact in the directory into a
+/// [`ModelRegistry`] and drive the multi-model coordinator with a
+/// closed-loop workload round-robined across the registered models.
+pub fn serve_registry(
+    models_dir: &Path,
+    requests: usize,
+    max_batch: usize,
+    workers: usize,
+) -> Result<()> {
+    let registry = ModelRegistry::load_dir(models_dir)?;
+    let names = registry.names();
+    println!("registry: {} model(s) from {models_dir:?}", names.len());
+    for name in &names {
+        let entry = registry.resolve(name)?;
+        println!(
+            "  {name} v{} ({} nodes, input {:?}, from {:?})",
+            entry.version,
+            entry.graph.nodes.len(),
+            entry.input_shape,
+            entry.source
+        );
+    }
+    let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(2) };
+    let coord = MultiCoordinator::start(registry.clone(), policy, workers);
+    let client = coord.client();
+    // Deterministic random inputs matched to each model's exact [H, W, C] —
+    // artifacts are free to declare any geometry.
+    let shapes: Vec<[usize; 3]> = names
+        .iter()
+        .map(|n| registry.resolve(n).expect("listed above").input_shape)
+        .collect();
+    let mut rng = crate::data::Rng::seeded(7);
+    let start = Instant::now();
+    let mut done = 0usize;
+    while done < requests {
+        let burst: Vec<_> = (0..32.min(requests - done))
+            .map(|i| {
+                let which = (done + i) % names.len();
+                let [h, w, c] = shapes[which];
+                let mut d = vec![0f32; h * w * c];
+                for v in d.iter_mut() {
+                    *v = rng.range_f32(-1.0, 1.0);
+                }
+                let img = Tensor::from_vec(&[1, h, w, c], d);
+                client.submit(&names[which], img).expect("submit")
+            })
+            .collect();
+        done += burst.len();
+        for (_, rx) in burst {
+            rx.recv().expect("response");
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+    for m in coord.shutdown() {
+        println!("{}", m.summary());
+    }
+    println!("  {requests} requests across {} models in {wall:.2}s ({:.1} req/s)", names.len(), requests as f64 / wall);
     Ok(())
 }
 

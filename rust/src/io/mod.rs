@@ -16,33 +16,75 @@
 
 use crate::graph::builders::ParamMap;
 use crate::tensor::Tensor;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"IAOI";
 const VERSION: u32 = 1;
 
-/// Write named f32 tensors.
-pub fn write_params(path: &Path, params: &[(String, Tensor<f32>)]) -> Result<()> {
+/// A named tensor of any dtype the header format declares.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NamedTensor {
+    F32(Tensor<f32>),
+    U8(Tensor<u8>),
+    I32(Tensor<i32>),
+}
+
+impl NamedTensor {
+    /// The wire dtype code (0 = f32, 1 = u8, 2 = i32).
+    pub fn dtype_code(&self) -> u8 {
+        match self {
+            NamedTensor::F32(_) => 0,
+            NamedTensor::U8(_) => 1,
+            NamedTensor::I32(_) => 2,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            NamedTensor::F32(t) => t.shape(),
+            NamedTensor::U8(t) => t.shape(),
+            NamedTensor::I32(t) => t.shape(),
+        }
+    }
+
+    fn element_bytes(&self) -> Vec<u8> {
+        match self {
+            NamedTensor::F32(t) => t.data().iter().flat_map(|v| v.to_le_bytes()).collect(),
+            NamedTensor::U8(t) => t.data().to_vec(),
+            NamedTensor::I32(t) => t.data().iter().flat_map(|v| v.to_le_bytes()).collect(),
+        }
+    }
+}
+
+/// Write named tensors of any supported dtype.
+pub fn write_tensors(path: &Path, tensors: &[(String, NamedTensor)]) -> Result<()> {
     let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     f.write_all(MAGIC)?;
     f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&(params.len() as u32).to_le_bytes())?;
-    for (name, t) in params {
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
         let nb = name.as_bytes();
         f.write_all(&(nb.len() as u16).to_le_bytes())?;
         f.write_all(nb)?;
-        f.write_all(&[0u8])?; // dtype f32
-        f.write_all(&[t.rank() as u8])?;
+        f.write_all(&[t.dtype_code()])?;
+        f.write_all(&[t.shape().len() as u8])?;
         for &d in t.shape() {
             f.write_all(&(d as u32).to_le_bytes())?;
         }
-        for &v in t.data() {
-            f.write_all(&v.to_le_bytes())?;
-        }
+        f.write_all(&t.element_bytes())?;
     }
     Ok(())
+}
+
+/// Write named f32 tensors (the trained-parameter interchange).
+pub fn write_params(path: &Path, params: &[(String, Tensor<f32>)]) -> Result<()> {
+    let tensors: Vec<(String, NamedTensor)> = params
+        .iter()
+        .map(|(name, t)| (name.clone(), NamedTensor::F32(t.clone())))
+        .collect();
+    write_tensors(path, &tensors)
 }
 
 fn read_exact<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
@@ -51,8 +93,10 @@ fn read_exact<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
     Ok(buf)
 }
 
-/// Read named f32 tensors into a [`ParamMap`].
-pub fn read_params(path: &Path) -> Result<ParamMap> {
+/// Read named tensors of every dtype the format declares (0 = f32,
+/// 1 = u8, 2 = i32), in file order.
+pub fn read_tensors(path: &Path) -> Result<Vec<(String, NamedTensor)>> {
+    let file_len = std::fs::metadata(path).with_context(|| format!("stat {path:?}"))?.len();
     let mut f =
         std::io::BufReader::new(std::fs::File::open(path).with_context(|| format!("open {path:?}"))?);
     let magic = read_exact::<4>(&mut f)?;
@@ -64,29 +108,73 @@ pub fn read_params(path: &Path) -> Result<ParamMap> {
         bail!("{path:?}: unsupported version {version}");
     }
     let count = u32::from_le_bytes(read_exact::<4>(&mut f)?);
-    let mut out = ParamMap::new();
+    // No pre-allocation from the untrusted count: grow as tensors decode.
+    let mut out = Vec::new();
     for _ in 0..count {
         let name_len = u16::from_le_bytes(read_exact::<2>(&mut f)?) as usize;
         let mut name_bytes = vec![0u8; name_len];
         f.read_exact(&mut name_bytes)?;
         let name = String::from_utf8(name_bytes).context("tensor name is not utf-8")?;
         let dtype = read_exact::<1>(&mut f)?[0];
-        if dtype != 0 {
-            bail!("{path:?}: tensor {name}: only f32 (dtype 0) supported here, got {dtype}");
-        }
         let rank = read_exact::<1>(&mut f)?[0] as usize;
         let mut shape = Vec::with_capacity(rank);
         for _ in 0..rank {
             shape.push(u32::from_le_bytes(read_exact::<4>(&mut f)?) as usize);
         }
-        let n: usize = shape.iter().product();
-        let mut data = vec![0f32; n];
-        let mut raw = vec![0u8; 4 * n];
+        let elem_size: usize = match dtype {
+            0 | 2 => 4,
+            1 => 1,
+            other => bail!("{path:?}: tensor {name}: unknown dtype {other}"),
+        };
+        // Bound the allocation by the bytes the file can actually hold: a
+        // corrupt shape must fail cleanly, not overflow or exhaust memory.
+        let n = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .filter(|&n| {
+                n.checked_mul(elem_size).is_some_and(|b| b as u64 <= file_len)
+            })
+            .ok_or_else(|| {
+                anyhow!("{path:?}: tensor {name}: declared shape {shape:?} exceeds file size")
+            })?;
+        let mut raw = vec![0u8; n * elem_size];
         f.read_exact(&mut raw)?;
-        for (i, chunk) in raw.chunks_exact(4).enumerate() {
-            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        let tensor = match dtype {
+            0 => {
+                let data: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                NamedTensor::F32(Tensor::from_vec(&shape, data))
+            }
+            1 => NamedTensor::U8(Tensor::from_vec(&shape, raw)),
+            _ => {
+                let data: Vec<i32> = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                NamedTensor::I32(Tensor::from_vec(&shape, data))
+            }
+        };
+        out.push((name, tensor));
+    }
+    Ok(out)
+}
+
+/// Read named f32 tensors into a [`ParamMap`]; rejects files carrying
+/// other dtypes (trained-parameter files are f32-only by contract).
+pub fn read_params(path: &Path) -> Result<ParamMap> {
+    let mut out = ParamMap::new();
+    for (name, tensor) in read_tensors(path)? {
+        match tensor {
+            NamedTensor::F32(t) => {
+                out.insert(name, t);
+            }
+            other => bail!(
+                "{path:?}: tensor {name}: only f32 (dtype 0) supported here, got {}",
+                other.dtype_code()
+            ),
         }
-        out.insert(name, Tensor::from_vec(&shape, data));
     }
     Ok(out)
 }
@@ -161,6 +249,31 @@ mod tests {
             assert_eq!(rt.shape(), t.shape(), "{name}");
             assert_eq!(rt.data(), t.data(), "{name}");
         }
+    }
+
+    #[test]
+    fn mixed_dtypes_roundtrip() {
+        // The header format has always declared u8 and i32 dtypes; they
+        // must round-trip exactly alongside f32.
+        let path = tmpfile("mixed.bin");
+        let tensors = vec![
+            ("weights/q".to_string(), NamedTensor::U8(Tensor::from_vec(&[2, 2], vec![0u8, 1, 128, 255]))),
+            ("bias/q".to_string(), NamedTensor::I32(Tensor::from_vec(&[3], vec![i32::MIN, 0, i32::MAX]))),
+            ("scale".to_string(), NamedTensor::F32(Tensor::from_vec(&[1], vec![0.125f32]))),
+        ];
+        write_tensors(&path, &tensors).unwrap();
+        let back = read_tensors(&path).unwrap();
+        assert_eq!(back, tensors);
+    }
+
+    #[test]
+    fn read_params_rejects_non_f32() {
+        let path = tmpfile("non_f32.bin");
+        let tensors =
+            vec![("q".to_string(), NamedTensor::U8(Tensor::from_vec(&[1], vec![7u8])))];
+        write_tensors(&path, &tensors).unwrap();
+        let err = read_params(&path).unwrap_err();
+        assert!(err.to_string().contains("only f32"), "{err}");
     }
 
     #[test]

@@ -13,11 +13,28 @@
 //! * **Layer 3 (Rust, run time)** — everything in this crate: a gemmlowp-style
 //!   integer-only inference engine ([`gemm`], [`fixedpoint`], [`nn`],
 //!   [`graph`]), post-training quantization tooling ([`quantize`]), the QAT
-//!   training driver over the AOT artifacts ([`train`]), and a serving
-//!   coordinator with dynamic batching ([`coordinator`]).
+//!   training driver over the AOT artifacts ([`train`]), the `.iaoiq`
+//!   quantized-model artifact format ([`model_format`]), and a serving
+//!   coordinator with dynamic batching and a hot-swappable multi-model
+//!   registry ([`coordinator`]).
 //!
 //! Python never runs on the request path: once `make artifacts` has produced
 //! the HLO files, the `iaoi` binary is self-contained.
+//!
+//! ## Deployment artifacts and serving
+//!
+//! A quantized model is persisted as a self-describing `.iaoiq` binary —
+//! the deployment unit, mirroring the paper's TFLite-flatbuffer story.
+//! Reloading is lossless, so a served model is bit-identical to the graph
+//! the converter produced:
+//!
+//! * `iaoi export --out model.iaoiq` — quantize and serialize a model
+//!   (PTQ of the demo net, or a QAT-trained checkpoint via `--model`);
+//! * `iaoi serve --models DIR` — serve every artifact in a directory
+//!   through the multi-model coordinator, with per-request routing and
+//!   atomic hot-swap ([`coordinator::registry::ModelRegistry::swap`]);
+//! * `iaoi serve --model FILE` — the original single-model path;
+//! * `iaoi train` / `eval` / `quickstart` / `bench` — paper harnesses.
 
 pub mod fixedpoint;
 pub mod quant;
@@ -26,6 +43,7 @@ pub mod gemm;
 pub mod nn;
 pub mod graph;
 pub mod quantize;
+pub mod model_format;
 pub mod runtime;
 pub mod train;
 pub mod coordinator;

@@ -6,10 +6,17 @@
 //! ```text
 //! iaoi train      --steps N [--artifacts DIR] [--out FILE] [--seed S]
 //! iaoi eval       --model FILE [--artifacts DIR] [--batches N]
-//! iaoi serve      --model FILE [--requests N] [--max-batch B] [--workers W]
+//! iaoi export     --out FILE [--name N] [--model-version V] [--classes C]
+//!                 [--seed S] [--model FILE --artifacts DIR]
+//! iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B]
+//!                 [--workers W]
 //! iaoi quickstart [--artifacts DIR]
 //! iaoi bench      --table 4.1|4.2|4.3|4.4|4.5|4.6|4.7|4.8 | --fig 1.1c|4.1|4.2|4.3 [--fast]
 //! ```
+//!
+//! `export` writes a `.iaoiq` quantized-model artifact; `serve --models`
+//! loads every artifact in a directory into the hot-swappable multi-model
+//! registry and routes requests per model.
 
 use anyhow::{anyhow, bail, Result};
 use iaoi::harness;
@@ -48,6 +55,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&flags),
         "eval" => cmd_eval(&flags),
+        "export" => cmd_export(&flags),
         "serve" => cmd_serve(&flags),
         "quickstart" => harness::quickstart(&PathBuf::from(get(&flags, "artifacts", "artifacts"))),
         "bench" => cmd_bench(&flags),
@@ -65,7 +73,8 @@ fn print_usage() {
          \n\
          usage:\n  iaoi train      --steps N [--artifacts DIR] [--out FILE] [--seed S]\n  \
          iaoi eval       --model FILE [--artifacts DIR] [--batches N]\n  \
-         iaoi serve      --model FILE [--requests N] [--max-batch B] [--workers W]\n  \
+         iaoi export     --out FILE [--name N] [--model-version V] [--classes C] [--seed S] [--model FILE --artifacts DIR]\n  \
+         iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B] [--workers W]\n  \
          iaoi quickstart [--artifacts DIR]\n  \
          iaoi bench      --table <id> | --fig <id> [--fast]\n"
     );
@@ -87,12 +96,36 @@ fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
     harness::eval(&artifacts, &model, batches)
 }
 
-fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+/// `iaoi export`: write a `.iaoiq` quantized-model artifact. By default a
+/// self-contained PTQ demo model is exported; `--model` (with
+/// `--artifacts`) converts a QAT-trained checkpoint instead.
+fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
+    let out = PathBuf::from(get(flags, "out", "models/demo.iaoiq"));
+    let name = get(flags, "name", "demo");
+    let version: u32 = get(flags, "model-version", "1").parse()?;
+    let classes: usize = get(flags, "classes", "16").parse()?;
+    let seed: u64 = get(flags, "seed", "0").parse()?;
     let artifacts = PathBuf::from(get(flags, "artifacts", "artifacts"));
-    let model = PathBuf::from(get(flags, "model", "artifacts/model_trained.bin"));
+    let trained = flags.get("model").map(PathBuf::from);
+    harness::export_model(
+        &out,
+        name,
+        version,
+        classes,
+        seed,
+        trained.as_deref().map(|m| (artifacts.as_path(), m)),
+    )
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let requests: usize = get(flags, "requests", "256").parse()?;
     let max_batch: usize = get(flags, "max-batch", "8").parse()?;
     let workers: usize = get(flags, "workers", "1").parse()?;
+    if let Some(models_dir) = flags.get("models") {
+        return harness::serve_registry(&PathBuf::from(models_dir), requests, max_batch, workers);
+    }
+    let artifacts = PathBuf::from(get(flags, "artifacts", "artifacts"));
+    let model = PathBuf::from(get(flags, "model", "artifacts/model_trained.bin"));
     harness::serve(&artifacts, &model, requests, max_batch, workers)
 }
 

@@ -1,0 +1,628 @@
+//! The `.iaoiq` quantized-model artifact format: a self-describing binary
+//! serialization of a complete integer-only [`QGraph`] — the repo's
+//! counterpart of the TFLite flatbuffer the paper deploys through gemmlowp.
+//! A model is quantized once (PTQ or QAT export), written to disk, and from
+//! then on every serving process loads the artifact directly; reloading is
+//! lossless, so inference from a loaded graph is **bit-identical** to the
+//! in-memory original.
+//!
+//! ## Layout (version 1, all little-endian)
+//!
+//! ```text
+//! magic        b"IAOQ"                                    4 bytes
+//! version      u32                                        currently 1
+//! name         u16 len + utf-8                            registry model name
+//! model_ver    u32                                        registry version
+//! input_shape  u32 × 3                                    H, W, C of one example
+//! kernel       u8                                         GEMM kernel code
+//! input_qp     QuantParams wire                           20 bytes (f64 scale,
+//!                                                         i32 zp/qmin/qmax)
+//! node_count   u32
+//! node × count:
+//!   name       u16 len + utf-8
+//!   input      u32                                        0xFFFF_FFFF = graph
+//!                                                         input, else node idx
+//!   op_code    u8                                         see table below
+//!   payload    op-specific (see `encode_op`)
+//! ```
+//!
+//! Op codes: 0 conv2d, 1 depthwise, 2 fully-connected, 3 avg-pool,
+//! 4 max-pool, 5 global-avg-pool, 6 add, 7 concat, 8 softmax, 9 logistic.
+//! Conv-like payloads carry the uint8 weight tensor, per-array
+//! [`QuantParams`], the int32 bias vector (eq. 11), stride/padding, the
+//! fused-activation code, and the normalized requantization multiplier
+//! `2^shift · M0` (eq. 5–6). The multiplier is redundant with the three
+//! scales; the loader recomputes it and rejects the file on mismatch, so
+//! bit-rot in any of the four fields is caught at load time.
+//!
+//! Decoding is fully bounds-checked ([`wire::Reader`]) and never panics or
+//! over-allocates on corrupt input; every failure is a structured
+//! [`DecodeError`].
+
+pub mod wire;
+
+use crate::gemm::Kernel;
+use crate::graph::{NodeRef, QGraph, QNode, QOp};
+use crate::nn::conv::QConv2d;
+use crate::nn::depthwise::QDepthwiseConv2d;
+use crate::nn::fc::QFullyConnected;
+use crate::nn::{FusedActivation, Padding};
+use crate::quant::{QuantParams, QuantizedMultiplier};
+use anyhow::{Context, Result};
+use std::fmt;
+use std::path::Path;
+use wire::{Reader, Writer};
+
+/// File magic.
+pub const MAGIC: &[u8; 4] = b"IAOQ";
+/// Current format version.
+pub const FORMAT_VERSION: u32 = 1;
+/// Canonical file extension (without the dot).
+pub const EXTENSION: &str = "iaoiq";
+
+const INPUT_REF: u32 = u32::MAX;
+
+const OP_CONV: u8 = 0;
+const OP_DEPTHWISE: u8 = 1;
+const OP_FC: u8 = 2;
+const OP_AVG_POOL: u8 = 3;
+const OP_MAX_POOL: u8 = 4;
+const OP_GLOBAL_AVG_POOL: u8 = 5;
+const OP_ADD: u8 = 6;
+const OP_CONCAT: u8 = 7;
+const OP_SOFTMAX: u8 = 8;
+const OP_LOGISTIC: u8 = 9;
+
+/// Structured decode failure: what went wrong and where.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The buffer ended before a field: `needed` more bytes at `offset`.
+    Truncated { offset: usize, needed: usize },
+    /// First four bytes are not [`MAGIC`].
+    BadMagic { found: [u8; 4] },
+    /// Format version newer than this build understands.
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// A length-prefixed string is not UTF-8.
+    BadUtf8 { offset: usize },
+    /// Unknown op code on a node.
+    BadOpCode { node: usize, code: u8 },
+    /// An enum field (padding, activation, kernel, rank) holds an unknown
+    /// code.
+    BadEnum { what: &'static str, value: u8 },
+    /// A node references the graph input sentinel incorrectly or a node
+    /// that is not strictly earlier in the DAG.
+    BadNodeRef { node: usize, reference: u32 },
+    /// A header field fails semantic validation (empty model name, zero
+    /// input dimension, bad graph-input quant params).
+    InvalidHeader { what: &'static str },
+    /// A node field decoded but fails semantic validation (shape arity,
+    /// bias length, non-positive scale, zero stride, …).
+    InvalidField { node: usize, what: &'static str },
+    /// Nodes decoded individually but the graph fails whole-topology
+    /// validation; carries the validator's description.
+    InvalidGraph { detail: String },
+    /// The stored requantization multiplier does not match the one derived
+    /// from the stored scales (eq. 5) — the file is corrupt.
+    MultiplierMismatch { node: usize },
+    /// Well-formed artifact followed by junk bytes.
+    TrailingBytes { extra: usize },
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::Truncated { offset, needed } => {
+                write!(f, "truncated artifact: needed {needed} more bytes at offset {offset}")
+            }
+            DecodeError::BadMagic { found } => {
+                write!(f, "bad magic {found:?} (expected {MAGIC:?}) — not an .iaoiq artifact")
+            }
+            DecodeError::UnsupportedVersion { found, supported } => {
+                write!(f, "artifact format version {found} is newer than supported version {supported}")
+            }
+            DecodeError::BadUtf8 { offset } => write!(f, "non-UTF-8 name at offset {offset}"),
+            DecodeError::BadOpCode { node, code } => {
+                write!(f, "node {node}: unknown op code {code}")
+            }
+            DecodeError::BadEnum { what, value } => write!(f, "unknown {what} code {value}"),
+            DecodeError::BadNodeRef { node, reference } => {
+                write!(f, "node {node}: reference {reference} is not an earlier node")
+            }
+            DecodeError::InvalidHeader { what } => write!(f, "invalid artifact header: {what}"),
+            DecodeError::InvalidField { node, what } => write!(f, "node {node}: invalid {what}"),
+            DecodeError::InvalidGraph { detail } => write!(f, "invalid graph: {detail}"),
+            DecodeError::MultiplierMismatch { node } => {
+                write!(f, "node {node}: stored requantization multiplier disagrees with stored scales")
+            }
+            DecodeError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after a complete artifact")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// A serialized-model unit: the quantized graph plus the registry metadata
+/// ([`crate::coordinator::registry`]) that names and versions it.
+#[derive(Clone, Debug)]
+pub struct ModelArtifact {
+    /// Registry name (non-empty).
+    pub name: String,
+    /// Monotonic model version — bumped on each retrain/hot-swap.
+    pub version: u32,
+    /// Shape `[H, W, C]` of one input example (batch dim excluded).
+    pub input_shape: [usize; 3],
+    /// The integer-only graph.
+    pub graph: QGraph,
+}
+
+impl ModelArtifact {
+    pub fn new(
+        name: impl Into<String>,
+        version: u32,
+        input_shape: [usize; 3],
+        graph: QGraph,
+    ) -> Self {
+        let name = name.into();
+        assert!(!name.is_empty(), "artifact name must be non-empty");
+        Self { name, version, input_shape, graph }
+    }
+
+    /// The batched NHWC input shape for a batch of `n`.
+    pub fn batched_shape(&self, n: usize) -> [usize; 4] {
+        [n, self.input_shape[0], self.input_shape[1], self.input_shape[2]]
+    }
+}
+
+/// The eq. 5 requantization multiplier of a conv-like node, normalized for
+/// integer application. `None` when a scale combination is degenerate
+/// (possible only in corrupt files; valid converters always produce
+/// positive finite scales).
+fn requant_multiplier(
+    weight: &QuantParams,
+    input: &QuantParams,
+    output: &QuantParams,
+) -> Option<QuantizedMultiplier> {
+    let m = weight.scale * input.scale / output.scale;
+    if m.is_finite() && m > 0.0 {
+        Some(QuantizedMultiplier::from_f64(m))
+    } else {
+        None
+    }
+}
+
+fn encode_ref(w: &mut Writer, r: NodeRef) {
+    match r {
+        NodeRef::Input => w.put_u32(INPUT_REF),
+        NodeRef::Node(i) => {
+            assert!((i as u64) < u64::from(INPUT_REF), "node index overflows wire format");
+            w.put_u32(i as u32);
+        }
+    }
+}
+
+fn decode_ref(raw: u32, node: usize) -> Result<NodeRef, DecodeError> {
+    if raw == INPUT_REF {
+        return Ok(NodeRef::Input);
+    }
+    if (raw as usize) < node {
+        Ok(NodeRef::Node(raw as usize))
+    } else {
+        Err(DecodeError::BadNodeRef { node, reference: raw })
+    }
+}
+
+fn decode_quant_params(
+    r: &mut Reader,
+    node: usize,
+    what: &'static str,
+) -> Result<QuantParams, DecodeError> {
+    let p = r.quant_params()?;
+    if p.wire_valid() {
+        Ok(p)
+    } else {
+        Err(DecodeError::InvalidField { node, what })
+    }
+}
+
+fn encode_op(w: &mut Writer, op: &QOp) {
+    match op {
+        QOp::Conv(c) => {
+            w.put_u8(OP_CONV);
+            w.put_u8_tensor(&c.weights);
+            w.put_quant_params(&c.weight_params);
+            w.put_i32_slice(&c.bias);
+            w.put_u32(c.stride as u32);
+            w.put_u8(c.padding.code());
+            w.put_quant_params(&c.input_params);
+            w.put_quant_params(&c.output_params);
+            w.put_u8(c.activation.code());
+            let m = requant_multiplier(&c.weight_params, &c.input_params, &c.output_params)
+                .expect("valid graph has finite requant multiplier");
+            w.put_i32(m.m0);
+            w.put_i32(m.shift);
+        }
+        QOp::Depthwise(d) => {
+            w.put_u8(OP_DEPTHWISE);
+            w.put_u8_tensor(&d.weights);
+            w.put_quant_params(&d.weight_params);
+            w.put_i32_slice(&d.bias);
+            w.put_u32(d.stride as u32);
+            w.put_u8(d.padding.code());
+            w.put_quant_params(&d.input_params);
+            w.put_quant_params(&d.output_params);
+            w.put_u8(d.activation.code());
+            let m = requant_multiplier(&d.weight_params, &d.input_params, &d.output_params)
+                .expect("valid graph has finite requant multiplier");
+            w.put_i32(m.m0);
+            w.put_i32(m.shift);
+        }
+        QOp::Fc(fc) => {
+            w.put_u8(OP_FC);
+            w.put_u8_tensor(&fc.weights);
+            w.put_quant_params(&fc.weight_params);
+            w.put_i32_slice(&fc.bias);
+            w.put_quant_params(&fc.input_params);
+            w.put_quant_params(&fc.output_params);
+            w.put_u8(fc.activation.code());
+            let m = requant_multiplier(&fc.weight_params, &fc.input_params, &fc.output_params)
+                .expect("valid graph has finite requant multiplier");
+            w.put_i32(m.m0);
+            w.put_i32(m.shift);
+        }
+        QOp::AvgPool { kernel, stride, padding } => {
+            w.put_u8(OP_AVG_POOL);
+            w.put_u32(*kernel as u32);
+            w.put_u32(*stride as u32);
+            w.put_u8(padding.code());
+        }
+        QOp::MaxPool { kernel, stride, padding } => {
+            w.put_u8(OP_MAX_POOL);
+            w.put_u32(*kernel as u32);
+            w.put_u32(*stride as u32);
+            w.put_u8(padding.code());
+        }
+        QOp::GlobalAvgPool => w.put_u8(OP_GLOBAL_AVG_POOL),
+        QOp::Add { other, out_params } => {
+            w.put_u8(OP_ADD);
+            encode_ref(w, *other);
+            w.put_quant_params(out_params);
+        }
+        QOp::Concat { others, out_params } => {
+            w.put_u8(OP_CONCAT);
+            assert!(others.len() <= u32::MAX as usize);
+            w.put_u32(others.len() as u32);
+            for r in others {
+                encode_ref(w, *r);
+            }
+            w.put_quant_params(out_params);
+        }
+        QOp::Softmax => w.put_u8(OP_SOFTMAX),
+        QOp::Logistic => w.put_u8(OP_LOGISTIC),
+    }
+}
+
+/// Decode the conv-like common tail: stride, padding, the three parameter
+/// sets, activation, and the integrity-checked multiplier.
+struct ConvTail {
+    stride: usize,
+    padding: Padding,
+    input_params: QuantParams,
+    output_params: QuantParams,
+    activation: FusedActivation,
+}
+
+fn decode_conv_tail(
+    r: &mut Reader,
+    node: usize,
+    weight_params: &QuantParams,
+    with_geometry: bool,
+) -> Result<ConvTail, DecodeError> {
+    let (stride, padding) = if with_geometry {
+        let stride = r.u32()? as usize;
+        if stride == 0 {
+            return Err(DecodeError::InvalidField { node, what: "stride" });
+        }
+        let pad_code = r.u8()?;
+        let padding = Padding::from_code(pad_code)
+            .ok_or(DecodeError::BadEnum { what: "padding", value: pad_code })?;
+        (stride, padding)
+    } else {
+        (1, Padding::Same)
+    };
+    let input_params = decode_quant_params(r, node, "input quant params")?;
+    let output_params = decode_quant_params(r, node, "output quant params")?;
+    let act_code = r.u8()?;
+    let activation = FusedActivation::from_code(act_code)
+        .ok_or(DecodeError::BadEnum { what: "activation", value: act_code })?;
+    let stored = QuantizedMultiplier { m0: r.i32()?, shift: r.i32()? };
+    let derived = requant_multiplier(weight_params, &input_params, &output_params)
+        .ok_or(DecodeError::InvalidField { node, what: "requant multiplier" })?;
+    if stored != derived {
+        return Err(DecodeError::MultiplierMismatch { node });
+    }
+    Ok(ConvTail { stride, padding, input_params, output_params, activation })
+}
+
+fn decode_op(r: &mut Reader, node: usize) -> Result<QOp, DecodeError> {
+    let code = r.u8()?;
+    match code {
+        OP_CONV => {
+            let weights = r.u8_tensor()?;
+            if weights.rank() != 4 {
+                return Err(DecodeError::InvalidField { node, what: "conv weight rank" });
+            }
+            let weight_params = decode_quant_params(r, node, "weight quant params")?;
+            let bias = r.i32_slice()?;
+            if !bias.is_empty() && bias.len() != weights.dim(0) {
+                return Err(DecodeError::InvalidField { node, what: "conv bias length" });
+            }
+            let tail = decode_conv_tail(r, node, &weight_params, true)?;
+            Ok(QOp::Conv(QConv2d {
+                weights,
+                weight_params,
+                bias,
+                stride: tail.stride,
+                padding: tail.padding,
+                input_params: tail.input_params,
+                output_params: tail.output_params,
+                activation: tail.activation,
+            }))
+        }
+        OP_DEPTHWISE => {
+            let weights = r.u8_tensor()?;
+            if weights.rank() != 4 || weights.dim(0) != 1 {
+                return Err(DecodeError::InvalidField { node, what: "depthwise weight shape" });
+            }
+            let weight_params = decode_quant_params(r, node, "weight quant params")?;
+            let bias = r.i32_slice()?;
+            if !bias.is_empty() && bias.len() != weights.dim(3) {
+                return Err(DecodeError::InvalidField { node, what: "depthwise bias length" });
+            }
+            let tail = decode_conv_tail(r, node, &weight_params, true)?;
+            Ok(QOp::Depthwise(QDepthwiseConv2d {
+                weights,
+                weight_params,
+                bias,
+                stride: tail.stride,
+                padding: tail.padding,
+                input_params: tail.input_params,
+                output_params: tail.output_params,
+                activation: tail.activation,
+            }))
+        }
+        OP_FC => {
+            let weights = r.u8_tensor()?;
+            if weights.rank() != 2 {
+                return Err(DecodeError::InvalidField { node, what: "fc weight rank" });
+            }
+            let weight_params = decode_quant_params(r, node, "weight quant params")?;
+            let bias = r.i32_slice()?;
+            if !bias.is_empty() && bias.len() != weights.dim(0) {
+                return Err(DecodeError::InvalidField { node, what: "fc bias length" });
+            }
+            let tail = decode_conv_tail(r, node, &weight_params, false)?;
+            Ok(QOp::Fc(QFullyConnected {
+                weights,
+                weight_params,
+                bias,
+                input_params: tail.input_params,
+                output_params: tail.output_params,
+                activation: tail.activation,
+            }))
+        }
+        OP_AVG_POOL | OP_MAX_POOL => {
+            let kernel = r.u32()? as usize;
+            let stride = r.u32()? as usize;
+            if kernel == 0 || stride == 0 {
+                return Err(DecodeError::InvalidField { node, what: "pool geometry" });
+            }
+            let pad_code = r.u8()?;
+            let padding = Padding::from_code(pad_code)
+                .ok_or(DecodeError::BadEnum { what: "padding", value: pad_code })?;
+            Ok(if code == OP_AVG_POOL {
+                QOp::AvgPool { kernel, stride, padding }
+            } else {
+                QOp::MaxPool { kernel, stride, padding }
+            })
+        }
+        OP_GLOBAL_AVG_POOL => Ok(QOp::GlobalAvgPool),
+        OP_ADD => {
+            let other = decode_ref(r.u32()?, node)?;
+            let out_params = decode_quant_params(r, node, "add output quant params")?;
+            Ok(QOp::Add { other, out_params })
+        }
+        OP_CONCAT => {
+            let count = r.u32()? as usize;
+            // Each ref is 4 bytes; bound before allocating.
+            if count.saturating_mul(4) > r.remaining_bytes() {
+                return Err(DecodeError::Truncated {
+                    offset: r.offset(),
+                    needed: count.saturating_mul(4),
+                });
+            }
+            let mut others = Vec::with_capacity(count);
+            for _ in 0..count {
+                others.push(decode_ref(r.u32()?, node)?);
+            }
+            let out_params = decode_quant_params(r, node, "concat output quant params")?;
+            Ok(QOp::Concat { others, out_params })
+        }
+        OP_SOFTMAX => Ok(QOp::Softmax),
+        OP_LOGISTIC => Ok(QOp::Logistic),
+        other => Err(DecodeError::BadOpCode { node, code: other }),
+    }
+}
+
+/// Serialize an artifact to bytes. Total order of fields is documented in
+/// the module header; the encoding is deterministic, so equal graphs yield
+/// byte-equal artifacts (used by tests as a losslessness oracle).
+pub fn save(artifact: &ModelArtifact) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_bytes(MAGIC);
+    w.put_u32(FORMAT_VERSION);
+    w.put_str(&artifact.name);
+    w.put_u32(artifact.version);
+    for &d in &artifact.input_shape {
+        assert!(d >= 1 && d <= u32::MAX as usize, "input shape dims must be positive");
+        w.put_u32(d as u32);
+    }
+    w.put_u8(artifact.graph.kernel.code());
+    w.put_quant_params(&artifact.graph.input_params);
+    assert!(artifact.graph.nodes.len() <= u32::MAX as usize);
+    w.put_u32(artifact.graph.nodes.len() as u32);
+    for node in &artifact.graph.nodes {
+        w.put_str(&node.name);
+        encode_ref(&mut w, node.input);
+        encode_op(&mut w, &node.op);
+    }
+    w.into_bytes()
+}
+
+/// Deserialize an artifact, validating structure, enums, DAG ordering, and
+/// the per-layer multiplier integrity check. Never panics on corrupt input.
+pub fn load(bytes: &[u8]) -> Result<ModelArtifact, DecodeError> {
+    let mut r = Reader::new(bytes);
+    let magic: [u8; 4] = r.take(4)?.try_into().unwrap();
+    if &magic != MAGIC {
+        return Err(DecodeError::BadMagic { found: magic });
+    }
+    let version = r.u32()?;
+    if version > FORMAT_VERSION {
+        return Err(DecodeError::UnsupportedVersion { found: version, supported: FORMAT_VERSION });
+    }
+    let name = r.str()?;
+    if name.is_empty() {
+        return Err(DecodeError::InvalidHeader { what: "empty model name" });
+    }
+    let model_version = r.u32()?;
+    let mut input_shape = [0usize; 3];
+    for d in &mut input_shape {
+        *d = r.u32()? as usize;
+        if *d == 0 {
+            return Err(DecodeError::InvalidHeader { what: "zero input shape dimension" });
+        }
+    }
+    let kernel_code = r.u8()?;
+    let kernel = Kernel::from_code(kernel_code)
+        .ok_or(DecodeError::BadEnum { what: "gemm kernel", value: kernel_code })?;
+    let input_params = r.quant_params()?;
+    if !input_params.wire_valid() {
+        return Err(DecodeError::InvalidHeader { what: "graph input quant params" });
+    }
+    let node_count = r.u32()? as usize;
+    let mut nodes: Vec<QNode> = Vec::new();
+    for idx in 0..node_count {
+        let node_name = r.str()?;
+        let input = decode_ref(r.u32()?, idx)?;
+        let op = decode_op(&mut r, idx)?;
+        nodes.push(QNode { name: node_name, input, op });
+    }
+    r.finish()?;
+    let graph = QGraph { input_params, nodes, kernel };
+    // Belt-and-braces: decode_ref already enforces backward references, but
+    // run the graph-level validator so the invariant has a single source of
+    // truth shared with other producers.
+    if let Err(detail) = graph.validate_topology() {
+        return Err(DecodeError::InvalidGraph { detail });
+    }
+    Ok(ModelArtifact { name, version: model_version, input_shape, graph })
+}
+
+/// Write an artifact file (conventionally `<anything>.iaoiq`).
+pub fn write_file(path: &Path, artifact: &ModelArtifact) -> Result<()> {
+    std::fs::write(path, save(artifact)).with_context(|| format!("write artifact {path:?}"))?;
+    Ok(())
+}
+
+/// Read and decode an artifact file.
+pub fn read_file(path: &Path) -> Result<ModelArtifact> {
+    let bytes = std::fs::read(path).with_context(|| format!("read artifact {path:?}"))?;
+    let artifact = load(&bytes).with_context(|| format!("decode artifact {path:?}"))?;
+    Ok(artifact)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::graph::builders::papernet_random;
+    use crate::quantize::{quantize_graph, QuantizeOptions};
+    use crate::tensor::Tensor;
+
+    fn demo_artifact(seed: u64) -> ModelArtifact {
+        let g = papernet_random(8, FusedActivation::Relu6, seed);
+        let mut rng = Rng::seeded(seed);
+        let calib: Vec<Tensor<f32>> = (0..2)
+            .map(|_| {
+                let mut d = vec![0f32; 16 * 16 * 3];
+                for v in d.iter_mut() {
+                    *v = rng.range_f32(-1.0, 1.0);
+                }
+                Tensor::from_vec(&[1, 16, 16, 3], d)
+            })
+            .collect();
+        let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
+        ModelArtifact::new("demo", 3, [16, 16, 3], q)
+    }
+
+    #[test]
+    fn save_load_save_is_byte_identical() {
+        // Deterministic encoding + lossless decoding ⇒ a second round trip
+        // reproduces the bytes exactly.
+        let art = demo_artifact(11);
+        let bytes = save(&art);
+        let loaded = load(&bytes).expect("load");
+        assert_eq!(loaded.name, "demo");
+        assert_eq!(loaded.version, 3);
+        assert_eq!(loaded.input_shape, [16, 16, 3]);
+        assert_eq!(loaded.graph.nodes.len(), art.graph.nodes.len());
+        assert_eq!(save(&loaded), bytes);
+    }
+
+    #[test]
+    fn header_errors_are_structured() {
+        let art = demo_artifact(12);
+        let bytes = save(&art);
+
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(matches!(load(&bad), Err(DecodeError::BadMagic { .. })));
+
+        let mut future = bytes.clone();
+        future[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert_eq!(
+            load(&future).unwrap_err(),
+            DecodeError::UnsupportedVersion { found: 99, supported: FORMAT_VERSION }
+        );
+
+        let mut trailing = bytes.clone();
+        trailing.extend_from_slice(&[1, 2, 3]);
+        assert_eq!(load(&trailing).unwrap_err(), DecodeError::TrailingBytes { extra: 3 });
+
+        assert!(matches!(load(&bytes[..5]), Err(DecodeError::Truncated { .. })));
+    }
+
+    #[test]
+    fn multiplier_integrity_check_fires() {
+        let art = demo_artifact(13);
+        let mut bytes = save(&art);
+        // The final node is the FC classifier; its multiplier is the last
+        // 8 bytes of the file. Corrupt the mantissa.
+        let n = bytes.len();
+        bytes[n - 8] ^= 0x40;
+        match load(&bytes) {
+            Err(DecodeError::MultiplierMismatch { .. }) => {}
+            other => panic!("expected MultiplierMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn display_messages_are_informative() {
+        let e = DecodeError::Truncated { offset: 12, needed: 4 };
+        assert!(e.to_string().contains("offset 12"));
+        let e = DecodeError::UnsupportedVersion { found: 9, supported: 1 };
+        assert!(e.to_string().contains('9'));
+    }
+}

@@ -1,0 +1,272 @@
+//! Little-endian wire primitives for the `.iaoiq` artifact format: a
+//! growable [`Writer`] and a bounds-checked, never-panicking [`Reader`].
+//!
+//! The reader reports [`DecodeError::Truncated`] with the offset and the
+//! number of bytes it needed, so corrupt or cut-off files fail with a
+//! precise diagnostic instead of a panic or an unbounded allocation: every
+//! variable-length field is checked against the bytes actually remaining
+//! before anything is allocated.
+
+use super::DecodeError;
+use crate::quant::QuantParams;
+use crate::tensor::Tensor;
+
+/// Append-only little-endian encoder.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// `u16` length-prefixed UTF-8. Names longer than 64 KiB are a caller
+    /// bug, not a data condition.
+    pub fn put_str(&mut self, s: &str) {
+        assert!(s.len() <= usize::from(u16::MAX), "name too long for u16 length prefix");
+        self.put_u16(s.len() as u16);
+        self.put_bytes(s.as_bytes());
+    }
+
+    pub fn put_quant_params(&mut self, p: &QuantParams) {
+        self.put_bytes(&p.to_wire());
+    }
+
+    /// Rank-prefixed shape followed by the raw element bytes.
+    pub fn put_u8_tensor(&mut self, t: &Tensor<u8>) {
+        assert!(t.rank() <= 8, "tensor rank exceeds wire limit");
+        self.put_u8(t.rank() as u8);
+        for &d in t.shape() {
+            assert!(d <= u32::MAX as usize);
+            self.put_u32(d as u32);
+        }
+        self.put_bytes(t.data());
+    }
+
+    /// `u32` count-prefixed i32 vector (biases).
+    pub fn put_i32_slice(&mut self, v: &[i32]) {
+        assert!(v.len() <= u32::MAX as usize);
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_i32(x);
+        }
+    }
+}
+
+/// Bounds-checked little-endian decoder over a borrowed buffer.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Current byte offset (for error reporting).
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left to read — callers use this to bound count-prefixed
+    /// allocations before reserving capacity.
+    pub fn remaining_bytes(&self) -> usize {
+        self.remaining()
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Take `n` raw bytes or fail with a [`DecodeError::Truncated`] carrying
+    /// the exact offset/need.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.remaining() < n {
+            return Err(DecodeError::Truncated { offset: self.pos, needed: n });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, DecodeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> Result<i32, DecodeError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String, DecodeError> {
+        let len = usize::from(self.u16()?);
+        let offset = self.pos;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| DecodeError::BadUtf8 { offset })
+    }
+
+    pub fn quant_params(&mut self) -> Result<QuantParams, DecodeError> {
+        let bytes: &[u8; QuantParams::WIRE_BYTES] =
+            self.take(QuantParams::WIRE_BYTES)?.try_into().unwrap();
+        Ok(QuantParams::from_wire(bytes))
+    }
+
+    pub fn u8_tensor(&mut self) -> Result<Tensor<u8>, DecodeError> {
+        let rank = usize::from(self.u8()?);
+        if rank > 8 {
+            return Err(DecodeError::BadEnum { what: "tensor rank", value: rank as u8 });
+        }
+        let mut shape = Vec::with_capacity(rank);
+        let mut volume: u64 = 1;
+        for _ in 0..rank {
+            let d = u64::from(self.u32()?);
+            volume = volume.saturating_mul(d);
+            shape.push(d as usize);
+        }
+        // Bound the allocation by the bytes actually present.
+        if volume > self.remaining() as u64 {
+            return Err(DecodeError::Truncated { offset: self.pos, needed: volume as usize });
+        }
+        let data = self.take(volume as usize)?.to_vec();
+        Ok(Tensor::from_vec(&shape, data))
+    }
+
+    pub fn i32_slice(&mut self) -> Result<Vec<i32>, DecodeError> {
+        let count = self.u32()? as usize;
+        let bytes = count.checked_mul(4).unwrap_or(usize::MAX);
+        if bytes > self.remaining() {
+            return Err(DecodeError::Truncated { offset: self.pos, needed: bytes });
+        }
+        let raw = self.take(bytes)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Assert the buffer is fully consumed.
+    pub fn finish(self) -> Result<(), DecodeError> {
+        if self.remaining() != 0 {
+            return Err(DecodeError::TrailingBytes { extra: self.remaining() });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u16(300);
+        w.put_u32(70_000);
+        w.put_i32(-5);
+        w.put_str("hello");
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 300);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.i32().unwrap(), -5);
+        assert_eq!(r.str().unwrap(), "hello");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_reports_offset_and_need() {
+        let mut w = Writer::new();
+        w.put_u32(1);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes[..2]);
+        match r.u32() {
+            Err(DecodeError::Truncated { offset: 0, needed: 4 }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tensor_roundtrip_and_oversized_dims_rejected() {
+        let t = Tensor::from_vec(&[2, 3], (0..6u8).collect::<Vec<_>>());
+        let mut w = Writer::new();
+        w.put_u8_tensor(&t);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8_tensor().unwrap(), t);
+        r.finish().unwrap();
+
+        // A huge declared volume must fail fast without allocating.
+        let mut w = Writer::new();
+        w.put_u8(2);
+        w.put_u32(u32::MAX);
+        w.put_u32(u32::MAX);
+        let bytes = w.into_bytes();
+        assert!(matches!(
+            Reader::new(&bytes).u8_tensor(),
+            Err(DecodeError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn i32_slice_roundtrip() {
+        let v = vec![1, -2, i32::MAX, i32::MIN];
+        let mut w = Writer::new();
+        w.put_i32_slice(&v);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.i32_slice().unwrap(), v);
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut w = Writer::new();
+        w.put_u8(1);
+        let mut bytes = w.into_bytes();
+        bytes.push(0);
+        let mut r = Reader::new(&bytes);
+        r.u8().unwrap();
+        assert!(matches!(r.finish(), Err(DecodeError::TrailingBytes { extra: 1 })));
+    }
+
+    #[test]
+    fn bad_utf8_rejected() {
+        let mut w = Writer::new();
+        w.put_u16(2);
+        w.put_bytes(&[0xff, 0xfe]);
+        let bytes = w.into_bytes();
+        assert!(matches!(Reader::new(&bytes).str(), Err(DecodeError::BadUtf8 { .. })));
+    }
+}

@@ -68,6 +68,24 @@ pub enum Padding {
 }
 
 impl Padding {
+    /// Stable numeric code for binary model artifacts
+    /// ([`crate::model_format`]). Codes are append-only across versions.
+    pub fn code(self) -> u8 {
+        match self {
+            Padding::Same => 0,
+            Padding::Valid => 1,
+        }
+    }
+
+    /// Inverse of [`Self::code`]; `None` for unknown codes.
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(Padding::Same),
+            1 => Some(Padding::Valid),
+            _ => None,
+        }
+    }
+
     /// (output size, pad before) along one spatial dim.
     pub fn resolve(self, input: usize, kernel: usize, stride: usize) -> (usize, usize) {
         match self {

@@ -154,6 +154,39 @@ impl QuantParams {
     pub fn levels(&self) -> i64 {
         i64::from(self.qmax) - i64::from(self.qmin) + 1
     }
+
+    /// Size of the little-endian wire encoding used by
+    /// [`crate::model_format`] and any other binary interchange.
+    pub const WIRE_BYTES: usize = 20;
+
+    /// Encode as little-endian bytes: `scale` f64, then `zero_point`,
+    /// `qmin`, `qmax` as i32. Lossless: `f64::to_le_bytes` preserves the
+    /// exact scale, so a decoded graph requantizes bit-identically.
+    pub fn to_wire(&self) -> [u8; Self::WIRE_BYTES] {
+        let mut out = [0u8; Self::WIRE_BYTES];
+        out[0..8].copy_from_slice(&self.scale.to_le_bytes());
+        out[8..12].copy_from_slice(&self.zero_point.to_le_bytes());
+        out[12..16].copy_from_slice(&self.qmin.to_le_bytes());
+        out[16..20].copy_from_slice(&self.qmax.to_le_bytes());
+        out
+    }
+
+    /// Decode the [`Self::to_wire`] encoding. Performs no range validation;
+    /// callers that read untrusted bytes should check [`Self::wire_valid`].
+    pub fn from_wire(b: &[u8; Self::WIRE_BYTES]) -> Self {
+        Self {
+            scale: f64::from_le_bytes(b[0..8].try_into().unwrap()),
+            zero_point: i32::from_le_bytes(b[8..12].try_into().unwrap()),
+            qmin: i32::from_le_bytes(b[12..16].try_into().unwrap()),
+            qmax: i32::from_le_bytes(b[16..20].try_into().unwrap()),
+        }
+    }
+
+    /// Whether decoded parameters are sane: positive finite scale and a
+    /// non-empty quantized range (§2.1 requires `S > 0`).
+    pub fn wire_valid(&self) -> bool {
+        self.scale.is_finite() && self.scale > 0.0 && self.qmax > self.qmin
+    }
 }
 
 /// Simulated ("fake") quantization of a real value (eq. 12): quantize then
@@ -336,6 +369,18 @@ mod tests {
         let p = QuantParams::from_min_max(0.0, 0.0, 0, 255);
         assert_eq!(p.quantize(0.0), p.zero_point);
         assert_eq!(p.dequantize(p.zero_point), 0.0);
+    }
+
+    #[test]
+    fn wire_roundtrip_is_exact() {
+        for (mn, mx) in [(-1.0, 1.0), (-0.37, 12.9), (0.0, 1e-6), (-1e9, 3.5)] {
+            let p = QuantParams::from_min_max(mn, mx, 0, 255);
+            let back = QuantParams::from_wire(&p.to_wire());
+            assert_eq!(p, back, "({mn},{mx})");
+            assert!(back.wire_valid());
+        }
+        let bad = QuantParams { scale: f64::NAN, zero_point: 0, qmin: 0, qmax: 255 };
+        assert!(!QuantParams::from_wire(&bad.to_wire()).wire_valid());
     }
 
     #[test]

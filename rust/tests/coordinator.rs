@@ -1,14 +1,20 @@
 //! Property tests over the serving coordinator's invariants (DESIGN.md §7),
 //! using the seeded property harness from `iaoi::data` (no proptest in this
-//! offline build — failures print a replay seed).
+//! offline build — failures print a replay seed), plus the multi-model
+//! registry pipeline: per-model batching (batches never mix models) and
+//! atomic hot-swap that drops no in-flight request.
 
-use iaoi::coordinator::{BatchPolicy, Coordinator, EngineKind};
+use iaoi::coordinator::registry::ModelRegistry;
+use iaoi::coordinator::{BatchPolicy, Coordinator, EngineKind, MultiCoordinator};
 use iaoi::data::{check, Rng};
 use iaoi::graph::builders::papernet_random;
+use iaoi::harness::demo_artifact;
+use iaoi::model_format;
 use iaoi::nn::FusedActivation;
 use iaoi::quantize::{quantize_graph, QuantizeOptions};
 use iaoi::tensor::Tensor;
 use std::collections::HashSet;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -153,4 +159,117 @@ fn submit_after_shutdown_errors_cleanly() {
     coord.shutdown();
     let mut rng = Rng::seeded(1);
     assert!(client.submit(image(&mut rng)).is_err());
+}
+
+// ---- multi-model registry pipeline ----
+
+fn two_model_registry() -> ModelRegistry {
+    let registry = ModelRegistry::new();
+    // Different class counts make any cross-model batch mix-up visible in
+    // the output arity.
+    registry.install(demo_artifact("wide", 1, 16, 100), PathBuf::new());
+    registry.install(demo_artifact("narrow", 1, 4, 200), PathBuf::new());
+    registry
+}
+
+#[test]
+fn routed_requests_complete_on_their_own_model() {
+    let coord = MultiCoordinator::start(
+        two_model_registry(),
+        BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(5) },
+        2,
+    );
+    let client = coord.client();
+    let mut rng = Rng::seeded(11);
+    // Interleave the two models aggressively inside the batching window.
+    let pending: Vec<_> = (0..40)
+        .map(|i| {
+            let name = if i % 2 == 0 { "wide" } else { "narrow" };
+            (name, client.submit(name, image(&mut rng)).unwrap())
+        })
+        .collect();
+    let mut seen = HashSet::new();
+    for (name, (id, rx)) in pending {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.model, name);
+        let want_classes = if name == "wide" { 16 } else { 4 };
+        assert_eq!(resp.output.len(), want_classes, "batch mixed models!");
+        assert!(seen.insert(id), "duplicate completion");
+    }
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.len(), 2);
+    assert_eq!(metrics.iter().map(|m| m.completed).sum::<u64>(), 40);
+    for m in &metrics {
+        assert_eq!(m.completed, 20, "{}", m.engine);
+    }
+}
+
+#[test]
+fn unknown_model_and_bad_shape_error_at_submit() {
+    let coord = MultiCoordinator::start(two_model_registry(), BatchPolicy::default(), 1);
+    let client = coord.client();
+    let mut rng = Rng::seeded(3);
+    let err = client.submit("missing", image(&mut rng)).unwrap_err();
+    assert!(err.to_string().contains("unknown model"), "{err}");
+    let bad = Tensor::<f32>::zeros(&[1, 8, 8, 3]);
+    let err = client.submit("wide", bad).unwrap_err();
+    assert!(err.to_string().contains("input shape"), "{err}");
+    coord.shutdown();
+}
+
+#[test]
+fn hot_swap_mid_stream_drops_nothing_and_routes_new_traffic_to_v2() {
+    let dir = std::env::temp_dir()
+        .join(format!("iaoi-coord-swap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let v2_path = dir.join("wide_v2.iaoiq");
+    model_format::write_file(&v2_path, &demo_artifact("wide", 2, 16, 300)).unwrap();
+
+    let registry = two_model_registry();
+    let coord = MultiCoordinator::start(
+        registry.clone(),
+        BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(20) },
+        2,
+    );
+    let client = coord.client();
+    let mut rng = Rng::seeded(17);
+    // Phase 1: keep a burst in flight across the swap.
+    let inflight: Vec<_> = (0..12).map(|_| client.submit("wide", image(&mut rng)).unwrap()).collect();
+    let (old, new) = registry.swap("wide", &v2_path).expect("swap");
+    assert_eq!((old, new), (Some(1), 2));
+    for (id, rx) in inflight {
+        let resp = rx.recv().expect("in-flight request must survive the swap");
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.output.len(), 16);
+        assert!(resp.version == 1 || resp.version == 2, "version {}", resp.version);
+    }
+    // Phase 2: everything submitted after the swap drained must be v2.
+    for _ in 0..8 {
+        let resp = client.infer("wide", image(&mut rng)).unwrap();
+        assert_eq!(resp.version, 2, "post-swap traffic must hit the new model");
+    }
+    // The sibling model is untouched.
+    let resp = client.infer("narrow", image(&mut rng)).unwrap();
+    assert_eq!((resp.version, resp.output.len()), (1, 4));
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn multi_shutdown_drains_inflight() {
+    let coord = MultiCoordinator::start(two_model_registry(), BatchPolicy::default(), 1);
+    let client = coord.client();
+    let mut rng = Rng::seeded(23);
+    let pending: Vec<_> = (0..10)
+        .map(|i| {
+            let name = if i % 2 == 0 { "wide" } else { "narrow" };
+            client.submit(name, image(&mut rng)).unwrap()
+        })
+        .collect();
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.iter().map(|m| m.completed).sum::<u64>(), 10);
+    for (_, rx) in pending {
+        assert!(rx.recv().is_ok(), "request must complete before shutdown");
+    }
 }

@@ -1,0 +1,247 @@
+//! `.iaoiq` artifact format tests: lossless round-trip (serialize →
+//! deserialize → **bit-identical** uint8 inference on random inputs, the
+//! acceptance bar for the deployment artifact) plus malformed-input
+//! behaviour — truncated files, bad magic, future versions, flipped bytes —
+//! which must yield structured [`DecodeError`]s, never panics.
+
+use iaoi::data::{check, Rng};
+use iaoi::graph::builders::{mini_resnet, papernet_random};
+use iaoi::graph::{FloatGraph, FloatOp, NodeRef};
+use iaoi::model_format::{self, DecodeError, ModelArtifact};
+use iaoi::nn::conv::Conv2d;
+use iaoi::nn::fc::FullyConnected;
+use iaoi::nn::{FusedActivation, Padding};
+use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::tensor::Tensor;
+
+fn random_batches(rng: &mut Rng, shape: &[usize], count: usize) -> Vec<Tensor<f32>> {
+    (0..count)
+        .map(|_| {
+            let mut d = vec![0f32; shape.iter().product()];
+            for v in d.iter_mut() {
+                *v = rng.range_f32(-1.0, 1.0);
+            }
+            Tensor::from_vec(shape, d)
+        })
+        .collect()
+}
+
+fn ptq_artifact(g: &FloatGraph, input_hw: usize, seed: u64) -> ModelArtifact {
+    let mut rng = Rng::seeded(seed);
+    let calib = random_batches(&mut rng, &[2, input_hw, input_hw, 3], 3);
+    let (_, q) = quantize_graph(g, &calib, QuantizeOptions::default());
+    ModelArtifact::new("test-model", 1, [input_hw, input_hw, 3], q)
+}
+
+/// The acceptance property: a reloaded graph produces bit-identical
+/// quantized outputs at *every* node, for every input.
+fn assert_bit_identical(art: &ModelArtifact, inputs: &[Tensor<f32>]) {
+    let bytes = model_format::save(art);
+    let loaded = model_format::load(&bytes).expect("load");
+    assert_eq!(loaded.graph.nodes.len(), art.graph.nodes.len());
+    for x in inputs {
+        let want = art.graph.run_all(x);
+        let got = loaded.graph.run_all(x);
+        assert_eq!(want.len(), got.len());
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w.params, g.params, "node {i} params");
+            assert_eq!(w.data, g.data, "node {i} uint8 output differs after reload");
+        }
+    }
+    // Determinism oracle: re-serializing the loaded graph reproduces the
+    // bytes exactly, so nothing was lost or renormalized in flight.
+    assert_eq!(model_format::save(&loaded), bytes);
+}
+
+#[test]
+fn papernet_roundtrip_bit_identical() {
+    let g = papernet_random(16, FusedActivation::Relu6, 7);
+    let art = ptq_artifact(&g, 16, 7);
+    let mut rng = Rng::seeded(99);
+    let inputs = random_batches(&mut rng, &[2, 16, 16, 3], 3);
+    assert_bit_identical(&art, &inputs);
+}
+
+#[test]
+fn resnet_with_bypass_roundtrip_bit_identical() {
+    // mini_resnet exercises Add nodes, 1x1 projections and ReLU fusion.
+    let g = mini_resnet(1, 8, 21);
+    let art = ptq_artifact(&g, 12, 21);
+    let mut rng = Rng::seeded(22);
+    let inputs = random_batches(&mut rng, &[1, 12, 12, 3], 2);
+    assert_bit_identical(&art, &inputs);
+}
+
+#[test]
+fn concat_pool_softmax_roundtrip_bit_identical() {
+    // Hand-built graph covering the ops the model builders don't: Concat
+    // (App. A.3 shared params), both pool kinds, and Softmax.
+    let mut rng = Rng::seeded(31);
+    let mut g = FloatGraph::default();
+    let mut w = vec![0f32; 4 * 3 * 3 * 3];
+    rng.fill_normal(&mut w, 0.3);
+    let conv = Conv2d {
+        weights: Tensor::from_vec(&[4, 3, 3, 3], w),
+        bias: vec![0.1, -0.1, 0.2, 0.0],
+        stride: 1,
+        padding: Padding::Same,
+        activation: FusedActivation::None,
+    };
+    let c = g.push("conv", NodeRef::Input, FloatOp::Conv(conv));
+    let r = g.push("relu", c, FloatOp::Relu6);
+    let p1 = g.push("maxpool", r, FloatOp::MaxPool { kernel: 2, stride: 2, padding: Padding::Valid });
+    let p2 = g.push("avgpool", r, FloatOp::AvgPool { kernel: 2, stride: 2, padding: Padding::Valid });
+    let cat = g.push("cat", p1, FloatOp::Concat(vec![p2]));
+    let gap = g.push("gap", cat, FloatOp::GlobalAvgPool);
+    let mut fw = vec![0f32; 5 * 8];
+    rng.fill_normal(&mut fw, 0.3);
+    let fc = g.push(
+        "logits",
+        gap,
+        FloatOp::Fc(FullyConnected {
+            weights: Tensor::from_vec(&[5, 8], fw),
+            bias: vec![0.0; 5],
+            activation: FusedActivation::None,
+        }),
+    );
+    g.push("softmax", fc, FloatOp::Softmax);
+
+    let art = ptq_artifact(&g, 8, 31);
+    let mut rng = Rng::seeded(32);
+    let inputs = random_batches(&mut rng, &[2, 8, 8, 3], 2);
+    assert_bit_identical(&art, &inputs);
+}
+
+#[test]
+fn prop_random_models_roundtrip_bit_identical() {
+    // Seeded property sweep: random architecture knobs, random inputs.
+    check(
+        "artifact round-trip is lossless",
+        6,
+        |rng| {
+            (
+                4 + rng.below(16),                   // classes
+                rng.below(3) as u64 + rng.next_u64() % 1000, // model seed
+            )
+        },
+        |&(classes, seed)| {
+            let act = if seed % 2 == 0 { FusedActivation::Relu6 } else { FusedActivation::Relu };
+            let g = papernet_random(classes, act, seed);
+            let art = ptq_artifact(&g, 16, seed ^ 0xabc);
+            let mut rng = Rng::seeded(seed ^ 0xdef);
+            let inputs = random_batches(&mut rng, &[1, 16, 16, 3], 1);
+            let bytes = model_format::save(&art);
+            let loaded = match model_format::load(&bytes) {
+                Ok(l) => l,
+                Err(_) => return false,
+            };
+            let want = art.graph.run_q(&iaoi::nn::QTensor::quantize(&inputs[0], art.graph.input_params));
+            let got = loaded.graph.run_q(&iaoi::nn::QTensor::quantize(&inputs[0], loaded.graph.input_params));
+            want.data == got.data && want.params == got.params
+        },
+    );
+}
+
+#[test]
+fn truncated_files_error_never_panic() {
+    let g = papernet_random(8, FusedActivation::Relu6, 3);
+    let art = ptq_artifact(&g, 16, 3);
+    let bytes = model_format::save(&art);
+    // Every strict prefix must decode to a structured error.
+    for len in 0..bytes.len() {
+        let result = model_format::load(&bytes[..len]);
+        assert!(result.is_err(), "prefix of {len} bytes decoded successfully?!");
+    }
+}
+
+#[test]
+fn corrupt_bytes_error_or_stay_wellformed_never_panic() {
+    let g = papernet_random(4, FusedActivation::Relu6, 5);
+    let art = ptq_artifact(&g, 16, 5);
+    let bytes = model_format::save(&art);
+    // Flipping any single byte must never panic: either a structured error
+    // (structure damaged) or a clean decode (payload-only damage, e.g. a
+    // weight byte).
+    for pos in (0..bytes.len()).step_by(7) {
+        let mut corrupt = bytes.clone();
+        corrupt[pos] ^= 0xa5;
+        let _ = model_format::load(&corrupt);
+    }
+}
+
+#[test]
+fn malformed_headers_are_structured_errors() {
+    let g = papernet_random(4, FusedActivation::Relu6, 9);
+    let art = ptq_artifact(&g, 16, 9);
+    let bytes = model_format::save(&art);
+
+    // Bad magic.
+    let mut bad_magic = bytes.clone();
+    bad_magic[..4].copy_from_slice(b"NOPE");
+    assert_eq!(
+        model_format::load(&bad_magic).unwrap_err(),
+        DecodeError::BadMagic { found: *b"NOPE" }
+    );
+
+    // Version from the future.
+    let mut future = bytes.clone();
+    future[4..8].copy_from_slice(&7u32.to_le_bytes());
+    assert_eq!(
+        model_format::load(&future).unwrap_err(),
+        DecodeError::UnsupportedVersion {
+            found: 7,
+            supported: model_format::FORMAT_VERSION
+        }
+    );
+
+    // Trailing garbage after a complete artifact.
+    let mut trailing = bytes.clone();
+    trailing.extend_from_slice(&[0; 5]);
+    assert_eq!(
+        model_format::load(&trailing).unwrap_err(),
+        DecodeError::TrailingBytes { extra: 5 }
+    );
+
+    // Empty and tiny buffers.
+    assert!(matches!(model_format::load(&[]), Err(DecodeError::Truncated { .. })));
+    assert!(matches!(model_format::load(b"IA"), Err(DecodeError::Truncated { .. })));
+}
+
+#[test]
+fn unknown_op_code_is_rejected() {
+    // A single-node Softmax graph ends with its op code as the final byte.
+    let graph = {
+        let g = papernet_random(4, FusedActivation::Relu6, 13);
+        let art = ptq_artifact(&g, 16, 13);
+        art.graph
+    };
+    let mut one_node = graph.clone();
+    one_node.nodes.truncate(0);
+    one_node.nodes.push(iaoi::graph::QNode {
+        name: "sm".to_string(),
+        input: NodeRef::Input,
+        op: iaoi::graph::QOp::Softmax,
+    });
+    let art = ModelArtifact::new("tiny", 1, [4, 4, 3], one_node);
+    let mut bytes = model_format::save(&art);
+    let n = bytes.len();
+    bytes[n - 1] = 0xee;
+    assert_eq!(
+        model_format::load(&bytes).unwrap_err(),
+        DecodeError::BadOpCode { node: 0, code: 0xee }
+    );
+}
+
+#[test]
+fn file_roundtrip_and_extension() {
+    let g = papernet_random(4, FusedActivation::Relu6, 17);
+    let art = ptq_artifact(&g, 16, 17);
+    let dir = std::env::temp_dir().join(format!("iaoi-mf-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("m.{}", model_format::EXTENSION));
+    model_format::write_file(&path, &art).unwrap();
+    let loaded = model_format::read_file(&path).unwrap();
+    assert_eq!(loaded.name, art.name);
+    assert_eq!(model_format::save(&loaded), model_format::save(&art));
+    let _ = std::fs::remove_dir_all(&dir);
+}
