@@ -27,9 +27,10 @@ fn main() {
         .collect();
     let (folded, int8_model) = quantize_graph(&float_model, &calib, QuantizeOptions::default());
     let ds = ClassificationSet::new(16, 16, 11);
-    let requests = 1024usize;
+    // Smoke mode (CI): enough requests to exercise batching, not to measure.
+    let requests = if iaoi::bench_util::smoke_mode() { 32usize } else { 1024 };
 
-    println!("== coordinator throughput (1024 closed-loop requests, burst 32) ==");
+    println!("== coordinator throughput ({requests} closed-loop requests, burst 32) ==");
     for (label, engine) in [
         ("int8", EngineKind::Quant(Arc::new(int8_model))),
         ("float32", EngineKind::Float(Arc::new(folded))),

@@ -1,0 +1,130 @@
+//! End-to-end graph inference: prepared plans vs. the unprepared engine.
+//!
+//! Measures the payoff of the pack-once / zero-alloc-steady-state execution
+//! layer ([`iaoi::graph::PreparedGraph`]) on whole models, single-image and
+//! batched, and emits `BENCH_graph.json` with ops/sec so future PRs have a
+//! perf trajectory to regress against. The unprepared numbers run the
+//! original [`iaoi::graph::QGraph::run_q`] path, which re-derives all
+//! weight-side state (packing, row sums, output stages) and reallocates
+//! every intermediate per request.
+//!
+//! Run: `cargo bench --bench graph_inference`
+//! (CI runs it under `IAOI_BENCH_SMOKE=1`, whose numbers are not meaningful.)
+
+use iaoi::bench_util::{bench, smoke_mode, Sample};
+use iaoi::data::Rng;
+use iaoi::graph::builders::mobilenet;
+use iaoi::graph::{ExecState, QGraph};
+use iaoi::harness::demo_artifact;
+use iaoi::nn::QTensor;
+use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::tensor::Tensor;
+
+struct Case {
+    model: &'static str,
+    batch: usize,
+    unprepared: Sample,
+    prepared: Sample,
+}
+
+impl Case {
+    /// Inferences per second at this batch size.
+    fn ops(&self, s: &Sample) -> f64 {
+        self.batch as f64 * 1e6 / s.median_us.max(1e-9)
+    }
+
+    fn speedup(&self) -> f64 {
+        self.unprepared.median_us / self.prepared.median_us.max(1e-9)
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "    {{\"model\": \"{}\", \"batch\": {}, \"unprepared_ops_per_sec\": {:.2}, \"prepared_ops_per_sec\": {:.2}, \"speedup\": {:.3}}}",
+            self.model,
+            self.batch,
+            self.ops(&self.unprepared),
+            self.ops(&self.prepared),
+            self.speedup(),
+        )
+    }
+}
+
+fn random_input(rng: &mut Rng, batch: usize, res: usize) -> Tensor<f32> {
+    let mut d = vec![0f32; batch * res * res * 3];
+    for v in d.iter_mut() {
+        *v = rng.range_f32(-1.0, 1.0);
+    }
+    Tensor::from_vec(&[batch, res, res, 3], d)
+}
+
+fn run_case(model: &'static str, q: &QGraph, res: usize, batch: usize) -> Case {
+    let mut rng = Rng::seeded(9 + batch as u64);
+    let x = random_input(&mut rng, batch, res);
+    let qin = QTensor::quantize(&x, q.input_params);
+
+    let unprepared = bench(&format!("{model} batch={batch} unprepared"), 5, || {
+        std::hint::black_box(q.run_q(&qin));
+    });
+
+    let plan = q.prepare();
+    let mut state = ExecState::new();
+    // Warm-up so the steady state (reused buffers) is what gets measured.
+    plan.run_q(&qin, &mut state);
+    let prepared = bench(&format!("{model} batch={batch} prepared"), 5, || {
+        std::hint::black_box(plan.run_q(&qin, &mut state).data.len());
+    });
+
+    // The two paths must agree bit-for-bit or the numbers mean nothing.
+    let want = q.run_q(&qin);
+    let got = plan.run_q(&qin, &mut state);
+    assert_eq!(want.data.data(), got.data.data(), "{model} prepared path diverged");
+
+    Case { model, batch, unprepared, prepared }
+}
+
+fn main() {
+    println!("== end-to-end graph inference: prepared vs unprepared ==\n");
+
+    // The conv-dominated demo graph (papernet: conv/dw/pw stack + GAP + FC).
+    let demo = demo_artifact("demo", 1, 16, 3).graph;
+    // MobileNet dm=0.25 at 32px: the deeper serving-shaped workload.
+    let mn = {
+        let g = mobilenet(0.25, 16, false, 7);
+        let mut rng = Rng::seeded(7);
+        let calib = vec![random_input(&mut rng, 2, 32)];
+        let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
+        q
+    };
+
+    let mut cases = Vec::new();
+    for &batch in &[1usize, 8] {
+        cases.push(run_case("papernet_demo", &demo, 16, batch));
+    }
+    for &batch in &[1usize, 4] {
+        cases.push(run_case("mobilenet_dm025", &mn, 32, batch));
+    }
+
+    println!();
+    for c in &cases {
+        println!(
+            "{:<18} batch={}  unprepared {:>9.1} ops/s  prepared {:>9.1} ops/s  speedup {:.2}x",
+            c.model,
+            c.batch,
+            c.ops(&c.unprepared),
+            c.ops(&c.prepared),
+            c.speedup(),
+        );
+    }
+
+    let demo_single = cases.iter().find(|c| c.model == "papernet_demo" && c.batch == 1).unwrap();
+    let demo_batched = cases.iter().find(|c| c.model == "papernet_demo" && c.batch == 8).unwrap();
+    let json = format!(
+        "{{\n  \"bench\": \"graph_inference\",\n  \"smoke\": {},\n  \"cases\": [\n{}\n  ],\n  \"demo_speedup_single\": {:.3},\n  \"demo_speedup_batched\": {:.3}\n}}\n",
+        smoke_mode(),
+        cases.iter().map(Case::json).collect::<Vec<_>>().join(",\n"),
+        demo_single.speedup(),
+        demo_batched.speedup(),
+    );
+    std::fs::write("BENCH_graph.json", &json).expect("write BENCH_graph.json");
+    println!("\nwrote BENCH_graph.json");
+}

@@ -30,14 +30,27 @@ impl Sample {
     }
 }
 
+/// True when `IAOI_BENCH_SMOKE` is set: benches run a couple of iterations
+/// per case instead of the full adaptive schedule. CI uses this to keep
+/// bench code compiling and executing without paying measurement time;
+/// numbers produced under smoke mode are *not* meaningful.
+pub fn smoke_mode() -> bool {
+    std::env::var_os("IAOI_BENCH_SMOKE").is_some()
+}
+
 /// Time `f` adaptively: at least `min_iters` iterations and at least
-/// ~200 ms of total measurement, after 2 warmup calls.
+/// ~200 ms of total measurement, after 2 warmup calls. Under
+/// [`smoke_mode`] the schedule collapses to at most 2 timed iterations.
 pub fn bench(name: &str, min_iters: usize, mut f: impl FnMut()) -> Sample {
     f();
     f();
+    let smoke = smoke_mode();
+    let target_iters = if smoke { min_iters.clamp(1, 2) } else { min_iters };
     let mut times_us: Vec<f64> = Vec::new();
     let start = Instant::now();
-    while times_us.len() < min_iters || start.elapsed().as_secs_f64() < 0.2 {
+    while times_us.len() < target_iters
+        || (!smoke && start.elapsed().as_secs_f64() < 0.2)
+    {
         let t = Instant::now();
         f();
         times_us.push(t.elapsed().as_secs_f64() * 1e6);

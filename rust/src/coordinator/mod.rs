@@ -30,7 +30,7 @@
 pub mod metrics;
 pub mod registry;
 
-use crate::graph::{FloatGraph, QGraph};
+use crate::graph::{ExecState, FloatGraph, PreparedGraph, QGraph};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
 use metrics::Metrics;
@@ -48,22 +48,47 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
-    /// Run a stacked NHWC batch, returning per-example output rows.
-    fn run_batch(&self, batch: &Tensor<f32>) -> Vec<Vec<f32>> {
-        let out = match self {
-            EngineKind::Float(g) => g.run(batch),
-            EngineKind::Quant(g) => g.run(batch),
-        };
-        let n = batch.dim(0);
-        let per = out.len() / n;
-        (0..n).map(|i| out.data()[i * per..(i + 1) * per].to_vec()).collect()
-    }
-
     /// Human label for logs/metrics.
     pub fn label(&self) -> &'static str {
         match self {
             EngineKind::Float(_) => "float32",
             EngineKind::Quant(_) => "int8",
+        }
+    }
+}
+
+/// Split a stacked batch output into per-example rows.
+fn split_rows(out: &Tensor<f32>, n: usize) -> Vec<Vec<f32>> {
+    let per = out.len() / n;
+    (0..n).map(|i| out.data()[i * per..(i + 1) * per].to_vec()).collect()
+}
+
+/// The per-worker execution engine. Quantized models run through a shared
+/// prepared plan (weights packed once, at [`Coordinator::start`]) with a
+/// worker-owned [`ExecState`], so the scratch arena persists across batches
+/// and steady-state integer inference allocates nothing.
+enum WorkerEngine {
+    Float(Arc<FloatGraph>),
+    Prepared { plan: Arc<PreparedGraph>, state: ExecState },
+}
+
+impl WorkerEngine {
+    fn from_engine(engine: &EngineKind, plan: &Option<Arc<PreparedGraph>>) -> Self {
+        match engine {
+            EngineKind::Float(g) => WorkerEngine::Float(Arc::clone(g)),
+            EngineKind::Quant(_) => WorkerEngine::Prepared {
+                plan: Arc::clone(plan.as_ref().expect("quant engine has a plan")),
+                state: ExecState::new(),
+            },
+        }
+    }
+
+    /// Run a stacked NHWC batch, returning per-example output rows.
+    fn run_batch(&mut self, batch: &Tensor<f32>) -> Vec<Vec<f32>> {
+        let n = batch.dim(0);
+        match self {
+            WorkerEngine::Float(g) => split_rows(&g.run(batch), n),
+            WorkerEngine::Prepared { plan, state } => split_rows(&plan.run(batch, state), n),
         }
     }
 }
@@ -146,6 +171,12 @@ impl Coordinator {
         let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let metrics = Arc::new(Mutex::new(Metrics::new(engine.label())));
+        // Pack-once: build the prepared plan at startup, shared read-only by
+        // every worker; each worker owns its ExecState across batches.
+        let plan: Option<Arc<PreparedGraph>> = match &engine {
+            EngineKind::Quant(g) => Some(Arc::new(g.prepare())),
+            EngineKind::Float(_) => None,
+        };
 
         // Batcher: pull the head request, then co-batch whatever arrives
         // within max_delay, up to max_batch.
@@ -176,7 +207,7 @@ impl Coordinator {
         // Workers: execute batches, reply per request, record metrics.
         let mut worker_handles = Vec::with_capacity(workers);
         for _ in 0..workers {
-            let engine = engine.clone();
+            let mut worker_engine = WorkerEngine::from_engine(&engine, &plan);
             let batch_rx = Arc::clone(&batch_rx);
             let metrics = Arc::clone(&metrics);
             worker_handles.push(std::thread::spawn(move || loop {
@@ -195,7 +226,7 @@ impl Coordinator {
                     stacked[i * per..(i + 1) * per].copy_from_slice(r.image.data());
                 }
                 let compute_start = Instant::now();
-                let rows = engine.run_batch(&Tensor::from_vec(&shape, stacked));
+                let rows = worker_engine.run_batch(&Tensor::from_vec(&shape, stacked));
                 let compute = compute_start.elapsed();
                 let now = Instant::now();
                 {
@@ -406,12 +437,16 @@ impl MultiCoordinator {
 
         // Workers: snapshot the model entry once per batch — a concurrent
         // swap cannot change the graph under a running batch, and the
-        // response echoes the snapshot's version.
+        // response echoes the snapshot's version. Each worker owns one
+        // ExecState for its lifetime: the scratch buffers are
+        // shape-agnostic, so one arena serves every resident model across
+        // batches without reallocation once warmed up.
         let mut worker_handles = Vec::with_capacity(workers);
         for _ in 0..workers {
             let batch_rx = Arc::clone(&batch_rx);
             let metrics = Arc::clone(&metrics);
             let registry = registry.clone();
+            let mut state = ExecState::new();
             worker_handles.push(std::thread::spawn(move || loop {
                 let batch = {
                     let guard = batch_rx.lock().expect("batch queue poisoned");
@@ -427,7 +462,6 @@ impl MultiCoordinator {
                 // A model can only disappear if a future registry grows a
                 // remove(); guard anyway so workers never panic.
                 let Some(entry) = registry.get(&model_name) else { continue };
-                let engine = EngineKind::Quant(Arc::clone(&entry.graph));
 
                 let mut shape = batch[0].image.shape().to_vec();
                 shape[0] = size;
@@ -437,7 +471,8 @@ impl MultiCoordinator {
                     stacked[i * per..(i + 1) * per].copy_from_slice(r.image.data());
                 }
                 let compute_start = Instant::now();
-                let rows = engine.run_batch(&Tensor::from_vec(&shape, stacked));
+                let out = entry.plan.run(&Tensor::from_vec(&shape, stacked), &mut state);
+                let rows = split_rows(&out, size);
                 let compute = compute_start.elapsed();
                 let now = Instant::now();
                 {

@@ -9,7 +9,7 @@
 //! batch, so requests already in flight finish on the model they were
 //! batched against and nothing is dropped mid-swap.
 
-use crate::graph::QGraph;
+use crate::graph::{PreparedGraph, QGraph};
 use crate::model_format::{self, ModelArtifact};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -25,6 +25,11 @@ pub struct ModelEntry {
     /// Shape `[H, W, C]` of one input example.
     pub input_shape: [usize; 3],
     pub graph: Arc<QGraph>,
+    /// The prepared execution plan (weights packed, output stages built),
+    /// constructed once at install/load time so no worker ever pays the
+    /// weight-side cost per request. Workers share it read-only, each with
+    /// its own [`crate::graph::ExecState`].
+    pub plan: Arc<PreparedGraph>,
     /// Artifact path the entry was loaded from (empty for in-memory
     /// registrations).
     pub source: PathBuf,
@@ -76,11 +81,15 @@ impl ModelRegistry {
     }
 
     fn make_entry(artifact: ModelArtifact, source: PathBuf) -> Arc<ModelEntry> {
+        // Pack-once: decode → prepare happens here, off the request path;
+        // a hot-swap pays it before the new entry becomes visible.
+        let plan = Arc::new(artifact.graph.prepare());
         Arc::new(ModelEntry {
             name: artifact.name.clone(),
             version: artifact.version,
             input_shape: artifact.input_shape,
             graph: Arc::new(artifact.graph),
+            plan,
             source,
         })
     }
@@ -227,6 +236,22 @@ mod tests {
         assert_eq!(snapshot.version, 1);
         let x = Tensor::zeros(&[1, 16, 16, 3]);
         assert_eq!(snapshot.graph.run(&x).shape(), &[1, 4]);
+    }
+
+    #[test]
+    fn entries_carry_prepared_plans_matching_their_graphs() {
+        let reg = ModelRegistry::new();
+        let entry = reg.install(artifact("m", 1, 44), PathBuf::new());
+        let mut rng = Rng::seeded(44);
+        let mut d = vec![0f32; 2 * 16 * 16 * 3];
+        for v in d.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let x = Tensor::from_vec(&[2, 16, 16, 3], d);
+        let want = entry.graph.run(&x);
+        let mut state = crate::graph::ExecState::new();
+        let got = entry.plan.run(&x, &mut state);
+        assert_eq!(want.data(), got.data(), "plan must be bit-identical to the graph");
     }
 
     #[test]

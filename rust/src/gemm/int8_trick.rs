@@ -116,14 +116,12 @@ fn col_sums_i8(rhs: &[i8], k: usize, n: usize) -> Vec<i32> {
     sums
 }
 
+/// Eq. 7 corrections with this path's recentred parameters — delegates to
+/// the shared implementation in [`super::prepared`].
 fn apply_corrections_i32(g: &QGemm, acc: &mut [i32], row_sums: &[i32], col_sums: &[i32]) {
-    let kzz = g.k as i32 * g.lhs_zero * g.rhs_zero;
-    for i in 0..g.m {
-        let row_term = kzz - g.rhs_zero * row_sums[i];
-        for (o, &cs) in acc[i * g.n..(i + 1) * g.n].iter_mut().zip(col_sums) {
-            *o += row_term - g.lhs_zero * cs;
-        }
-    }
+    super::prepared::apply_corrections(
+        g.m, g.n, g.k, g.lhs_zero, g.rhs_zero, acc, row_sums, col_sums,
+    );
 }
 
 /// The invariant that makes the trick sound: with weights restricted to

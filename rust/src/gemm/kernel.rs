@@ -13,12 +13,14 @@
 
 use super::QGemm;
 
-/// Rows of LHS per register tile.
-const MR: usize = 8;
+/// Rows of LHS per register tile. Shared with the prepared-plan path
+/// ([`super::prepared`]) so packed-LHS panels line up with this kernel's
+/// register tiling.
+pub(crate) const MR: usize = 8;
 /// Columns of RHS per register tile (16 i32 lanes = one AVX-512 register).
-const NR: usize = 16;
+pub(crate) const NR: usize = 16;
 /// K-dimension cache block.
-const KC: usize = 256;
+pub(crate) const KC: usize = 256;
 
 /// Blocked accumulation of eq. 7 into `acc` (row-major `M×N`).
 pub fn accumulate_blocked(g: &QGemm, lhs: &[u8], rhs: &[u8], acc: &mut [i32]) {

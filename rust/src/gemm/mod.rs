@@ -23,8 +23,10 @@ pub mod int8_trick;
 pub mod kernel;
 pub mod output;
 pub mod parallel;
+pub mod prepared;
 
 pub use output::OutputStage;
+pub use prepared::{PreparedGemm, Scratch};
 
 use crate::quant::QuantizedMultiplier;
 
@@ -181,14 +183,14 @@ pub fn gemm_f32(m: usize, k: usize, n: usize, lhs: &[f32], rhs: &[f32], out: &mu
     assert_eq!(out.len(), m * n);
     out.fill(0.0);
     // Loop order i-j-col keeps rhs row access contiguous and lets LLVM
-    // vectorize the inner axpy.
+    // vectorize the inner axpy. No zero-skip: a data-dependent branch would
+    // make the float baseline's cost vary with weight sparsity and the
+    // quantized-vs-float speedup numbers dishonest (§4 compares dense
+    // kernels on both sides).
     for i in 0..m {
         let out_row = &mut out[i * n..(i + 1) * n];
         for j in 0..k {
             let a = lhs[i * k + j];
-            if a == 0.0 {
-                continue;
-            }
             let rhs_row = &rhs[j * n..(j + 1) * n];
             for (o, &b) in out_row.iter_mut().zip(rhs_row) {
                 *o += a * b;

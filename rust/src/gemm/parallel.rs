@@ -2,19 +2,27 @@
 //!
 //! The paper reports 1.5–2.2× speedups from running the face detector on
 //! 2 and 4 cores. gemmlowp parallelizes by splitting the *result* matrix;
-//! we split the RHS (activations) along N — each worker computes a disjoint
+//! we split along N (activation columns) — each worker computes a disjoint
 //! column strip `LHS · RHS[:, n0..n1]` including its own output-pipeline
-//! application, so workers share only read-only inputs and never contend on
-//! writes. Workers are plain `std::thread::scope` threads (this offline
-//! build has no rayon; see DESIGN.md §Offline-substitutions). On this
-//! single-core testbed thread counts > 1 measure scheduling overhead;
+//! application. Workers cooperate with prepared plans
+//! ([`super::prepared::PreparedGemm`]): they share the single packed-weight
+//! panel read-only, pack their RHS strip **directly from the strided
+//! source** into their own scratch (no intermediate strip copy), and write
+//! through disjoint `&mut` splits of the one output buffer (no per-thread
+//! `sub_out` gather). Workers are plain `std::thread::scope` threads (this
+//! offline build has no rayon; see DESIGN.md §Offline-substitutions). On
+//! this single-core testbed thread counts > 1 measure scheduling overhead;
 //! `sim::ArmCoreModel` provides the multi-core latency estimates for
 //! Table 4.6 (DESIGN.md §Hardware-Adaptation).
 
+use super::prepared::{PreparedGemm, Scratch};
 use super::{output::OutputStage, Kernel, QGemm};
 
 /// Run the full quantized GEMM splitting the N dimension into `threads`
-/// strips, each computed on its own OS thread.
+/// strips, each computed on its own OS thread. Packs the weights into a
+/// one-shot prepared plan; callers that run the same weights repeatedly
+/// should build a [`PreparedGemm`] themselves and call
+/// [`run_parallel_prepared`] to pay the packing cost once.
 pub fn run_parallel(
     g: &QGemm,
     kern: Kernel,
@@ -30,40 +38,67 @@ pub fn run_parallel(
         g.run(kern, lhs, rhs, stage, out);
         return;
     }
-    let strip = g.n.div_ceil(threads);
+    let plan = PreparedGemm::from_qgemm(g, kern, lhs, stage.clone());
+    run_parallel_prepared(&plan, rhs, g.n, out, threads);
+}
+
+/// Multi-threaded execution of a prepared plan over a row-major `K×N` RHS.
+/// The plan (packed weights, row sums, output stage) is shared read-only;
+/// each worker owns a [`Scratch`] and a disjoint set of per-row output
+/// segments, so no worker ever copies its strip out of or back into a
+/// gather buffer.
+pub fn run_parallel_prepared(
+    plan: &PreparedGemm,
+    rhs: &[u8],
+    n: usize,
+    out: &mut [u8],
+    threads: usize,
+) {
+    assert!(threads >= 1);
+    let m = plan.m();
+    assert_eq!(rhs.len(), plan.k() * n, "rhs must be K*N");
+    assert_eq!(out.len(), m * n, "out must be M*N");
+    if threads == 1 || n < 2 * threads {
+        plan.run(n, rhs, out, &mut Scratch::new());
+        return;
+    }
+    let strip = n.div_ceil(threads);
     let strips: Vec<(usize, usize)> = (0..threads)
-        .map(|t| (t * strip, ((t + 1) * strip).min(g.n)))
+        .map(|t| (t * strip, ((t + 1) * strip).min(n)))
         .filter(|(a, b)| a < b)
         .collect();
 
-    let results: Vec<(usize, usize, Vec<u8>)> = std::thread::scope(|scope| {
+    // Carve the output into disjoint &mut row segments, one set per worker:
+    // worker w gets rows' sub-slices [n0_w, n1_w) for every row.
+    let mut per_worker: Vec<Vec<&mut [u8]>> =
+        strips.iter().map(|_| Vec::with_capacity(m)).collect();
+    let mut rest: &mut [u8] = out;
+    for _ in 0..m {
+        let (row, tail) = rest.split_at_mut(n);
+        rest = tail;
+        let mut row_rest = row;
+        for (w, &(n0, n1)) in strips.iter().enumerate() {
+            let (seg, t) = row_rest.split_at_mut(n1 - n0);
+            row_rest = t;
+            per_worker[w].push(seg);
+        }
+    }
+
+    std::thread::scope(|scope| {
         let handles: Vec<_> = strips
             .iter()
-            .map(|&(n0, n1)| {
+            .zip(per_worker)
+            .map(|(&(n0, _), mut segs)| {
                 scope.spawn(move || {
-                    let nn = n1 - n0;
-                    // Gather the RHS strip (rows stay K, columns n0..n1).
-                    let mut rhs_strip = vec![0u8; g.k * nn];
-                    for j in 0..g.k {
-                        rhs_strip[j * nn..(j + 1) * nn]
-                            .copy_from_slice(&rhs[j * g.n + n0..j * g.n + n1]);
-                    }
-                    let sub = QGemm { n: nn, ..g.clone() };
-                    let mut sub_out = vec![0u8; g.m * nn];
-                    sub.run(kern, lhs, &rhs_strip, stage, &mut sub_out);
-                    (n0, n1, sub_out)
+                    let mut scratch = Scratch::new();
+                    plan.run_strip(rhs, n, n0, &mut segs, &mut scratch);
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
-    });
-
-    for (n0, n1, sub_out) in results {
-        let nn = n1 - n0;
-        for i in 0..g.m {
-            out[i * g.n + n0..i * g.n + n1].copy_from_slice(&sub_out[i * nn..(i + 1) * nn]);
+        for h in handles {
+            h.join().expect("gemm worker panicked");
         }
-    }
+    });
 }
 
 #[cfg(test)]
@@ -100,6 +135,31 @@ mod tests {
             let mut got = vec![0u8; m * n];
             run_parallel(&g, Kernel::Int8Pairwise, &lhs, &rhs, &stage, &mut got, threads);
             assert_eq!(want, got, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn prepared_parallel_matches_serial_across_kernels() {
+        let (m, k, n) = (9, 65, 52);
+        let g = QGemm::new(m, k, n, 88, 140);
+        let lhs = pseudo(7, m * k).iter().map(|&v| v.max(1)).collect::<Vec<_>>();
+        let rhs = pseudo(8, k * n);
+        let stage = OutputStage {
+            bias: (0..m as i32).map(|i| 50 - i * 13).collect(),
+            multiplier: QuantizedMultiplier::from_f64(0.0017),
+            out_zero: 9,
+            clamp_min: 0,
+            clamp_max: 255,
+        };
+        for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+            let plan = PreparedGemm::from_qgemm(&g, kern, &lhs, stage.clone());
+            let mut want = vec![0u8; m * n];
+            plan.run(n, &rhs, &mut want, &mut Scratch::new());
+            for threads in [2, 3, 5] {
+                let mut got = vec![0u8; m * n];
+                run_parallel_prepared(&plan, &rhs, n, &mut got, threads);
+                assert_eq!(want, got, "{kern:?} threads={threads}");
+            }
         }
     }
 

@@ -1,0 +1,673 @@
+//! Prepared GEMM plans: pack-once weights, zero-alloc per-request execution.
+//!
+//! The paper's latency numbers (§2.3–2.4, Table 4.1) assume gemmlowp's
+//! execution model: the weights matrix is constant across requests, so all
+//! weight-side work — packing into cache-friendly panels, the row sums `ā1`
+//! of eq. 8, the fused [`OutputStage`] of §2.4 — is done **once** at model
+//! preparation time, and only the activation side is processed per
+//! inference. A [`PreparedGemm`] is that one-time product; running it needs
+//! only a [`Scratch`] arena of reusable buffers, so steady-state inference
+//! performs zero heap allocations (property-tested in `rust/tests/alloc.rs`).
+//!
+//! All three kernels are covered:
+//! * [`Kernel::Reference`] keeps a raw copy of the weights (oracle path);
+//! * [`Kernel::Blocked`] packs the LHS into `MR×KC` panels so the
+//!   micro-kernel reads both operands sequentially (the unprepared kernel
+//!   reads the LHS strided straight out of the row-major buffer);
+//! * [`Kernel::Int8Pairwise`] recentres the weights to int8 at pack time
+//!   (the App. B trick's `q − 128` shift) and stores the recentred row sums.
+//!
+//! Plans are built for a fixed `M×K` weights matrix but serve any `N`
+//! (batch × positions varies per request); every integer is exact, so the
+//! prepared path is bit-identical to the unprepared kernels — enforced by
+//! the tests below and by `conv_kernels_agree`-style tests in `nn`.
+
+use super::kernel::{KC, MR, NR};
+use super::output::OutputStage;
+use super::{Kernel, QGemm};
+
+/// Reusable per-thread buffers for [`PreparedGemm`] execution. One instance
+/// per worker thread; every buffer grows to its high-water mark on the first
+/// requests and is then reused allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    /// int32 accumulators (`M×N`).
+    acc: Vec<i32>,
+    /// Packed RHS panel for the blocked u8 kernel.
+    packed_rhs: Vec<u8>,
+    /// Packed, recentred RHS panel for the int8-pairwise kernel.
+    packed_rhs_i8: Vec<i8>,
+    /// RHS column sums `a2` (eq. 8), recomputed per request.
+    col_sums: Vec<i32>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Grow-only buffer access: resizes to at least `len` (allocating only when
+/// the high-water mark rises) and returns the leading `len` elements.
+/// Contents beyond what the caller overwrites are unspecified. Shared with
+/// the prepared layer paths in [`crate::nn`].
+pub(crate) fn grow<T: Copy + Default>(v: &mut Vec<T>, len: usize) -> &mut [T] {
+    if v.len() < len {
+        v.resize(len, T::default());
+    }
+    &mut v[..len]
+}
+
+/// The eq. 7 zero-point correction applied to raw `Σ q1·q2` accumulators:
+/// `acc += K·Z1·Z2 − Z2·ā1(i) − Z1·a2(j)`. Shared by the prepared path and
+/// [`super::int8_trick`] (with recentred zero points there).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn apply_corrections(
+    m: usize,
+    n: usize,
+    k: usize,
+    lhs_zero: i32,
+    rhs_zero: i32,
+    acc: &mut [i32],
+    row_sums: &[i32],
+    col_sums: &[i32],
+) {
+    let kzz = k as i32 * lhs_zero * rhs_zero;
+    for i in 0..m {
+        let row_term = kzz - rhs_zero * row_sums[i];
+        for (o, &cs) in acc[i * n..(i + 1) * n].iter_mut().zip(col_sums) {
+            *o += row_term - lhs_zero * cs;
+        }
+    }
+}
+
+/// Weight-side storage of a plan, laid out for its kernel's access pattern.
+#[derive(Clone, Debug)]
+enum PackedLhs {
+    /// Raw row-major `M×K` copy (the reference triple loop reads it as-is).
+    Reference(Vec<u8>),
+    /// `MR`-row panels: for each `KC` block starting at `k0` and each row
+    /// block `ib`, a `kc×MR` panel at offset `ibn·MR·k0 + ib·kc·MR` whose
+    /// element `(j, r)` is `lhs[(ib·MR + r)·K + k0 + j]`; tail rows are
+    /// zero-padded. The micro-kernel reads `MR` weights contiguously per
+    /// depth step instead of striding by `K`.
+    Blocked(Vec<u8>),
+    /// Row-major `M×K` weights recentred to int8 (`q ^ 0x80`, i.e. `q−128`)
+    /// once at pack time — the App. B precondition.
+    Int8(Vec<i8>),
+}
+
+/// A fully prepared quantized GEMM: geometry + quantization + packed
+/// weights + precomputed row sums + the built-once output stage. Immutable
+/// and `Sync`; share one plan read-only across worker threads, give each
+/// worker its own [`Scratch`].
+#[derive(Clone, Debug)]
+pub struct PreparedGemm {
+    m: usize,
+    k: usize,
+    /// Zero-point of the weights (`Z1`).
+    lhs_zero: i32,
+    /// Zero-point of the activations (`Z2`), fixed at conversion time.
+    rhs_zero: i32,
+    kernel: Kernel,
+    stage: OutputStage,
+    packed: PackedLhs,
+    /// `ā1` of eq. 8: u8 row sums for Blocked, recentred-int8 row sums for
+    /// Int8Pairwise, empty for Reference (which needs no corrections).
+    row_sums: Vec<i32>,
+}
+
+impl PreparedGemm {
+    /// Build a plan from row-major `M×K` weights. All weight-side cost
+    /// (packing, row sums, the output stage) is paid here, never per run.
+    pub fn new(
+        kernel: Kernel,
+        m: usize,
+        k: usize,
+        lhs_zero: i32,
+        rhs_zero: i32,
+        lhs: &[u8],
+        stage: OutputStage,
+    ) -> Self {
+        assert_eq!(lhs.len(), m * k, "lhs must be M*K");
+        assert!(
+            (0..=255).contains(&lhs_zero) && (0..=255).contains(&rhs_zero),
+            "zero points are quantized values (§2.1)"
+        );
+        let (packed, row_sums) = match kernel {
+            // The reference path evaluates eq. 4 directly — it never applies
+            // the eq. 8 corrections, so it carries no row sums.
+            Kernel::Reference => (PackedLhs::Reference(lhs.to_vec()), Vec::new()),
+            Kernel::Blocked => {
+                (PackedLhs::Blocked(pack_lhs_blocked(lhs, m, k)), row_sums_u8(lhs, m, k))
+            }
+            Kernel::Int8Pairwise => {
+                let recentred: Vec<i8> = lhs.iter().map(|&v| (v ^ 0x80) as i8).collect();
+                let sums = (0..m)
+                    .map(|i| recentred[i * k..(i + 1) * k].iter().map(|&v| i32::from(v)).sum())
+                    .collect();
+                (PackedLhs::Int8(recentred), sums)
+            }
+        };
+        Self { m, k, lhs_zero, rhs_zero, kernel, stage, packed, row_sums }
+    }
+
+    /// Convenience: build from an existing [`QGemm`] description (its `n` is
+    /// ignored — plans serve any N).
+    pub fn from_qgemm(g: &QGemm, kernel: Kernel, lhs: &[u8], stage: OutputStage) -> Self {
+        Self::new(kernel, g.m, g.k, g.lhs_zero, g.rhs_zero, lhs, stage)
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    pub fn stage(&self) -> &OutputStage {
+        &self.stage
+    }
+
+    /// Full quantized GEMM against a row-major `K×N` RHS: eq. 7 accumulation
+    /// plus the §2.4 output pipeline, writing uint8 into `out` (`M×N`).
+    /// Allocation-free once `scratch` has warmed up.
+    pub fn run(&self, n: usize, rhs: &[u8], out: &mut [u8], scratch: &mut Scratch) {
+        assert_eq!(rhs.len(), self.k * n, "rhs must be K*N");
+        assert_eq!(out.len(), self.m * n, "out must be M*N");
+        let Scratch { acc, packed_rhs, packed_rhs_i8, col_sums } = scratch;
+        let acc = grow(acc, self.m * n);
+        self.accumulate_cols(rhs, n, 0, n, acc, packed_rhs, packed_rhs_i8, col_sums);
+        self.stage.apply(acc, self.m, n, out);
+    }
+
+    /// Corrected int32 accumulators only (eq. 7 without the output stage) —
+    /// the prepared counterpart of [`QGemm::accumulate`].
+    pub fn accumulate(&self, n: usize, rhs: &[u8], acc: &mut [i32], scratch: &mut Scratch) {
+        assert_eq!(rhs.len(), self.k * n, "rhs must be K*N");
+        assert_eq!(acc.len(), self.m * n, "acc must be M*N");
+        let Scratch { packed_rhs, packed_rhs_i8, col_sums, .. } = scratch;
+        self.accumulate_cols(rhs, n, 0, n, acc, packed_rhs, packed_rhs_i8, col_sums);
+    }
+
+    /// Compute one column strip `[n0, n0 + nn)` of the output directly from
+    /// the full strided RHS (row stride `stride`), writing through per-row
+    /// `&mut` segments — the multi-threaded path
+    /// ([`super::parallel::run_parallel_prepared`]) hands each worker
+    /// disjoint splits of the one output buffer, so there is no per-thread
+    /// `sub_out` gather and no intermediate RHS strip copy.
+    pub fn run_strip(
+        &self,
+        rhs: &[u8],
+        stride: usize,
+        n0: usize,
+        segs: &mut [&mut [u8]],
+        scratch: &mut Scratch,
+    ) {
+        assert_eq!(segs.len(), self.m, "one output segment per row");
+        let nn = segs.first().map_or(0, |s| s.len());
+        assert!(n0 + nn <= stride, "strip exceeds RHS width");
+        assert_eq!(rhs.len(), self.k * stride, "rhs must be K*stride");
+        if self.m == 0 || nn == 0 {
+            return;
+        }
+        let Scratch { acc, packed_rhs, packed_rhs_i8, col_sums } = scratch;
+        let acc = grow(acc, self.m * nn);
+        self.accumulate_cols(rhs, stride, n0, nn, acc, packed_rhs, packed_rhs_i8, col_sums);
+        let bias = &self.stage.bias;
+        for (i, seg) in segs.iter_mut().enumerate() {
+            assert_eq!(seg.len(), nn, "ragged output segments");
+            let b = if bias.is_empty() { 0 } else { bias[i] };
+            for (o, &a) in seg.iter_mut().zip(&acc[i * nn..(i + 1) * nn]) {
+                *o = self.stage.requantize_one(a.wrapping_add(b));
+            }
+        }
+    }
+
+    /// Dispatch eq. 7 over the columns `[n0, n0 + nn)` of a strided RHS into
+    /// `acc` (`M×nn`, overwritten).
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate_cols(
+        &self,
+        rhs: &[u8],
+        stride: usize,
+        n0: usize,
+        nn: usize,
+        acc: &mut [i32],
+        packed_rhs: &mut Vec<u8>,
+        packed_rhs_i8: &mut Vec<i8>,
+        col_sums: &mut Vec<i32>,
+    ) {
+        if self.m == 0 || nn == 0 {
+            return;
+        }
+        match &self.packed {
+            PackedLhs::Reference(lhs) => {
+                self.accumulate_reference(lhs, rhs, stride, n0, nn, acc);
+            }
+            PackedLhs::Blocked(packed) => {
+                self.accumulate_blocked(packed, rhs, stride, n0, nn, acc, packed_rhs);
+                let cs = grow(col_sums, nn);
+                col_sums_u8_strided(rhs, self.k, stride, n0, nn, cs);
+                apply_corrections(
+                    self.m, nn, self.k, self.lhs_zero, self.rhs_zero, acc, &self.row_sums, cs,
+                );
+            }
+            PackedLhs::Int8(lhs_s) => {
+                self.accumulate_int8(lhs_s, rhs, stride, n0, nn, acc, packed_rhs_i8);
+                let cs = grow(col_sums, nn);
+                col_sums_i8_strided(rhs, self.k, stride, n0, nn, cs);
+                // Recentred zero points Z' = Z − 128 (App. B).
+                apply_corrections(
+                    self.m,
+                    nn,
+                    self.k,
+                    self.lhs_zero - 128,
+                    self.rhs_zero - 128,
+                    acc,
+                    &self.row_sums,
+                    cs,
+                );
+            }
+        }
+    }
+
+    /// Direct eq. 4 evaluation over a strided RHS (correctness oracle).
+    fn accumulate_reference(
+        &self,
+        lhs: &[u8],
+        rhs: &[u8],
+        stride: usize,
+        n0: usize,
+        nn: usize,
+        acc: &mut [i32],
+    ) {
+        let k = self.k;
+        for i in 0..self.m {
+            for col in 0..nn {
+                let mut sum = 0i32;
+                for j in 0..k {
+                    let a = i32::from(lhs[i * k + j]) - self.lhs_zero;
+                    let b = i32::from(rhs[j * stride + n0 + col]) - self.rhs_zero;
+                    sum += a * b;
+                }
+                acc[i * nn + col] = sum;
+            }
+        }
+    }
+
+    /// The blocked kernel over a pre-packed LHS: identical arithmetic to
+    /// [`kernel::accumulate_blocked`], but the LHS panel reads are
+    /// contiguous `MR`-wide rows instead of `K`-strided scalar loads.
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate_blocked(
+        &self,
+        packed_lhs: &[u8],
+        rhs: &[u8],
+        stride: usize,
+        n0: usize,
+        nn: usize,
+        acc: &mut [i32],
+        packed_rhs: &mut Vec<u8>,
+    ) {
+        let (m, k) = (self.m, self.k);
+        acc[..m * nn].fill(0);
+        let pr = grow(packed_rhs, KC * nn.div_ceil(NR) * NR);
+        let ibn = m.div_ceil(MR);
+        for k0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - k0);
+            pack_rhs_panel_strided(rhs, k0, kc, stride, n0, nn, pr);
+            // Panels for this K block start after the ibn·MR·k0 elements of
+            // all previous (full-KC) blocks.
+            let kb_base = ibn * MR * k0;
+            for ib in 0..ibn {
+                let i0 = ib * MR;
+                let mr = MR.min(m - i0);
+                let lhs_panel = &packed_lhs[kb_base + ib * kc * MR..kb_base + (ib + 1) * kc * MR];
+                for b in 0..nn.div_ceil(NR) {
+                    let nb0 = b * NR;
+                    let nr = NR.min(nn - nb0);
+                    let panel = &pr[b * kc * NR..(b + 1) * kc * NR];
+                    let mut tile = [[0i32; NR]; MR];
+                    for j in 0..kc {
+                        let lrow = &lhs_panel[j * MR..(j + 1) * MR];
+                        let rrow = &panel[j * NR..(j + 1) * NR];
+                        for r in 0..mr {
+                            let a = i32::from(lrow[r]);
+                            let t = &mut tile[r];
+                            for c in 0..NR {
+                                t[c] += a * i32::from(rrow[c]);
+                            }
+                        }
+                    }
+                    for r in 0..mr {
+                        let row = &mut acc[(i0 + r) * nn + nb0..(i0 + r) * nn + nb0 + nr];
+                        for (o, &t) in row.iter_mut().zip(&tile[r][..nr]) {
+                            *o += t;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The App. B int8/i16-pairwise schedule over pre-recentred weights;
+    /// the RHS is recentred on the fly while packing (one pass, no extra
+    /// buffer). Mirrors [`super::int8_trick::accumulate_int8_pairwise`].
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate_int8(
+        &self,
+        lhs_s: &[i8],
+        rhs: &[u8],
+        stride: usize,
+        n0: usize,
+        nn: usize,
+        acc: &mut [i32],
+        packed_rhs_i8: &mut Vec<i8>,
+    ) {
+        let (m, k) = (self.m, self.k);
+        acc[..m * nn].fill(0);
+        let pr = grow(packed_rhs_i8, KC * nn.div_ceil(NR) * NR);
+        for k0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - k0);
+            pack_rhs_panel_i8_strided(rhs, k0, kc, stride, n0, nn, pr);
+            for i in 0..m {
+                let lrow = &lhs_s[i * k + k0..i * k + k0 + kc];
+                for b in 0..nn.div_ceil(NR) {
+                    let nb0 = b * NR;
+                    let nr = NR.min(nn - nb0);
+                    let panel = &pr[b * kc * NR..(b + 1) * kc * NR];
+                    let mut tile = [0i32; NR];
+                    // K in pairs — the SMULL/SMLAL/SADALP schedule; see
+                    // int8_trick.rs for why the pair sum fits 16 bits.
+                    let pairs = kc / 2;
+                    for p in 0..pairs {
+                        let a0 = i32::from(lrow[2 * p]);
+                        let a1 = i32::from(lrow[2 * p + 1]);
+                        let r0 = &panel[2 * p * NR..2 * p * NR + NR];
+                        let r1 = &panel[(2 * p + 1) * NR..(2 * p + 1) * NR + NR];
+                        for c in 0..NR {
+                            tile[c] += a0 * i32::from(r0[c]) + a1 * i32::from(r1[c]);
+                        }
+                    }
+                    if kc % 2 == 1 {
+                        let a = i32::from(lrow[kc - 1]);
+                        let r = &panel[(kc - 1) * NR..(kc - 1) * NR + NR];
+                        for c in 0..NR {
+                            tile[c] += a * i32::from(r[c]);
+                        }
+                    }
+                    let out = &mut acc[i * nn + nb0..i * nn + nb0 + nr];
+                    for (o, &t) in out.iter_mut().zip(&tile[..nr]) {
+                        *o += t;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Row sums `ā1` over uint8 weights (eq. 8).
+fn row_sums_u8(lhs: &[u8], m: usize, k: usize) -> Vec<i32> {
+    (0..m)
+        .map(|i| lhs[i * k..(i + 1) * k].iter().map(|&v| i32::from(v)).sum())
+        .collect()
+}
+
+/// Pack row-major `M×K` weights into the [`PackedLhs::Blocked`] panel
+/// layout; tail rows (when `m % MR != 0`) stay zero.
+fn pack_lhs_blocked(lhs: &[u8], m: usize, k: usize) -> Vec<u8> {
+    let ibn = m.div_ceil(MR);
+    let mut packed = vec![0u8; ibn * MR * k];
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        let kb_base = ibn * MR * k0;
+        for ib in 0..ibn {
+            let i0 = ib * MR;
+            let mr = MR.min(m - i0);
+            let base = kb_base + ib * kc * MR;
+            for (r, row) in lhs[i0 * k..].chunks_exact(k).take(mr).enumerate() {
+                for (j, &v) in row[k0..k0 + kc].iter().enumerate() {
+                    packed[base + j * MR + r] = v;
+                }
+            }
+        }
+    }
+    packed
+}
+
+/// Pack `kc` rows of a *strided* RHS (row stride `stride`, columns
+/// `[n0, n0 + nn)`) into `[ceil(nn/NR)][kc][NR]` order, zero-padded in the
+/// tail column block — the kernel module's `pack_rhs_panel` generalized so
+/// parallel workers pack their strip straight from the shared source.
+fn pack_rhs_panel_strided(
+    rhs: &[u8],
+    k0: usize,
+    kc: usize,
+    stride: usize,
+    n0: usize,
+    nn: usize,
+    packed: &mut [u8],
+) {
+    for b in 0..nn.div_ceil(NR) {
+        let b0 = b * NR;
+        let nr = NR.min(nn - b0);
+        let dst_base = b * kc * NR;
+        for j in 0..kc {
+            let src = &rhs[(k0 + j) * stride + n0 + b0..(k0 + j) * stride + n0 + b0 + nr];
+            let dst = &mut packed[dst_base + j * NR..dst_base + j * NR + NR];
+            dst[..nr].copy_from_slice(src);
+            dst[nr..].fill(0);
+        }
+    }
+}
+
+/// As [`pack_rhs_panel_strided`], recentring u8 → i8 (`v ^ 0x80`) in the
+/// same pass — the int8 path's activation-side recentre costs no extra
+/// sweep over the data.
+fn pack_rhs_panel_i8_strided(
+    rhs: &[u8],
+    k0: usize,
+    kc: usize,
+    stride: usize,
+    n0: usize,
+    nn: usize,
+    packed: &mut [i8],
+) {
+    for b in 0..nn.div_ceil(NR) {
+        let b0 = b * NR;
+        let nr = NR.min(nn - b0);
+        let dst_base = b * kc * NR;
+        for j in 0..kc {
+            let src = &rhs[(k0 + j) * stride + n0 + b0..(k0 + j) * stride + n0 + b0 + nr];
+            let dst = &mut packed[dst_base + j * NR..dst_base + j * NR + NR];
+            for (d, &s) in dst[..nr].iter_mut().zip(src) {
+                *d = (s ^ 0x80) as i8;
+            }
+            dst[nr..].fill(0);
+        }
+    }
+}
+
+/// Column sums `a2` of a strided u8 RHS over columns `[n0, n0 + nn)`.
+fn col_sums_u8_strided(rhs: &[u8], k: usize, stride: usize, n0: usize, nn: usize, out: &mut [i32]) {
+    out.fill(0);
+    for j in 0..k {
+        let row = &rhs[j * stride + n0..j * stride + n0 + nn];
+        for (s, &v) in out.iter_mut().zip(row) {
+            *s += i32::from(v);
+        }
+    }
+}
+
+/// Column sums of a strided RHS recentred to int8 on the fly.
+fn col_sums_i8_strided(rhs: &[u8], k: usize, stride: usize, n0: usize, nn: usize, out: &mut [i32]) {
+    out.fill(0);
+    for j in 0..k {
+        let row = &rhs[j * stride + n0..j * stride + n0 + nn];
+        for (s, &v) in out.iter_mut().zip(row) {
+            *s += i32::from((v ^ 0x80) as i8);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantizedMultiplier;
+
+    fn pseudo(seed: u64, n: usize, lo: u8) -> Vec<u8> {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((state >> 56) as u8).max(lo)
+            })
+            .collect()
+    }
+
+    fn demo_stage(m: usize) -> OutputStage {
+        OutputStage {
+            bias: (0..m as i32).map(|i| i * 37 - 100).collect(),
+            multiplier: QuantizedMultiplier::from_f64(0.0041),
+            out_zero: 13,
+            clamp_min: 2,
+            clamp_max: 251,
+        }
+    }
+
+    /// Shapes covering every tail case: `m % MR`, `n % NR`, `k % KC`, plus
+    /// the degenerate 1×1×1.
+    const AWKWARD: [(usize, usize, usize); 7] = [
+        (1, 1, 1),
+        (MR, KC, NR),
+        (MR + 1, KC + 1, NR + 1),
+        (MR - 1, 3, NR - 1),
+        (9, 300, 19),
+        (2, 513, 2),
+        (17, 64, 33),
+    ];
+
+    #[test]
+    fn packed_lhs_round_trip_is_lossless() {
+        // Every lhs element must appear at its documented panel offset.
+        for (m, k) in [(1, 1), (MR, KC), (MR + 3, KC + 5), (9, 300), (MR - 1, 2)] {
+            let lhs = pseudo(m as u64 * 7 + k as u64, m * k, 0);
+            let packed = pack_lhs_blocked(&lhs, m, k);
+            let ibn = m.div_ceil(MR);
+            assert_eq!(packed.len(), ibn * MR * k);
+            for i in 0..m {
+                for j in 0..k {
+                    let k0 = (j / KC) * KC;
+                    let kc = KC.min(k - k0);
+                    let ib = i / MR;
+                    let off = ibn * MR * k0 + ib * kc * MR + (j - k0) * MR + (i - ib * MR);
+                    assert_eq!(packed[off], lhs[i * k + j], "({m},{k}) element ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_bit_identical_to_unprepared_all_kernels() {
+        for &(m, k, n) in &AWKWARD {
+            // Narrow-range lhs — the training guarantee the int8 path needs.
+            let lhs = pseudo(m as u64 * 31 + k as u64, m * k, 1);
+            let rhs = pseudo(n as u64 * 17 + k as u64, k * n, 0);
+            let g = QGemm::new(m, k, n, 77, 201);
+            let stage = demo_stage(m);
+            for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+                let mut want = vec![0u8; m * n];
+                g.run(kern, &lhs, &rhs, &stage, &mut want);
+                let plan = PreparedGemm::from_qgemm(&g, kern, &lhs, stage.clone());
+                let mut scratch = Scratch::new();
+                let mut got = vec![0u8; m * n];
+                plan.run(n, &rhs, &mut got, &mut scratch);
+                assert_eq!(want, got, "{kern:?} ({m},{k},{n})");
+                // And again with the warm scratch (reuse must not corrupt).
+                let mut again = vec![0u8; m * n];
+                plan.run(n, &rhs, &mut again, &mut scratch);
+                assert_eq!(want, again, "{kern:?} warm ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_accumulate_matches_unprepared() {
+        for &(m, k, n) in &AWKWARD {
+            let lhs = pseudo(3 + m as u64, m * k, 1);
+            let rhs = pseudo(5 + n as u64, k * n, 0);
+            let g = QGemm::new(m, k, n, 120, 9);
+            for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+                let mut want = vec![0i32; m * n];
+                g.accumulate(kern, &lhs, &rhs, &mut want);
+                let plan = PreparedGemm::from_qgemm(&g, kern, &lhs, demo_stage(m));
+                let mut got = vec![0i32; m * n];
+                plan.accumulate(n, &rhs, &mut got, &mut Scratch::new());
+                assert_eq!(want, got, "{kern:?} ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn one_plan_serves_many_batch_widths() {
+        // The same prepared weights must serve varying N (batch sizes) from
+        // one scratch, shrinking and growing between requests.
+        let (m, k) = (6, 70);
+        let lhs = pseudo(11, m * k, 1);
+        let g = QGemm::new(m, k, 1, 50, 60);
+        let stage = demo_stage(m);
+        let plan = PreparedGemm::from_qgemm(&g, Kernel::Blocked, &lhs, stage.clone());
+        let mut scratch = Scratch::new();
+        for n in [5, 33, 1, 16, 7] {
+            let rhs = pseudo(n as u64, k * n, 0);
+            let gn = QGemm::new(m, k, n, 50, 60);
+            let mut want = vec![0u8; m * n];
+            gn.run(Kernel::Blocked, &lhs, &rhs, &stage, &mut want);
+            let mut got = vec![0u8; m * n];
+            plan.run(n, &rhs, &mut got, &mut scratch);
+            assert_eq!(want, got, "n={n}");
+        }
+    }
+
+    #[test]
+    fn run_strip_matches_full_run() {
+        let (m, k, n) = (7, 90, 41);
+        let lhs = pseudo(21, m * k, 1);
+        let rhs = pseudo(22, k * n, 0);
+        let g = QGemm::new(m, k, n, 130, 44);
+        let stage = demo_stage(m);
+        for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+            let plan = PreparedGemm::from_qgemm(&g, kern, &lhs, stage.clone());
+            let mut want = vec![0u8; m * n];
+            plan.run(n, &rhs, &mut want, &mut Scratch::new());
+            // Compute in two strips through disjoint row segments.
+            let mut got = vec![0u8; m * n];
+            let split = 17;
+            for (n0, n1) in [(0usize, split), (split, n)] {
+                let mut segs: Vec<&mut [u8]> = Vec::with_capacity(m);
+                let mut rest = &mut got[..];
+                for _ in 0..m {
+                    let (row, tail) = rest.split_at_mut(n);
+                    rest = tail;
+                    segs.push(&mut row[n0..n1]);
+                }
+                plan.run_strip(&rhs, n, n0, &mut segs, &mut Scratch::new());
+            }
+            assert_eq!(want, got, "{kern:?}");
+        }
+    }
+
+    #[test]
+    fn empty_dims_are_ok() {
+        let stage = OutputStage::bare(QuantizedMultiplier::from_f64(0.01), 0);
+        let plan = PreparedGemm::new(Kernel::Blocked, 0, 4, 10, 10, &[], stage);
+        let mut out: Vec<u8> = vec![];
+        plan.run(0, &[], &mut out, &mut Scratch::new());
+    }
+}

@@ -10,14 +10,15 @@
 pub mod builders;
 
 use crate::nn::activations::{logistic_f32, qlogistic, qsoftmax, softmax_f32};
-use crate::nn::conv::{Conv2d, QConv2d};
-use crate::nn::depthwise::{DepthwiseConv2d, QDepthwiseConv2d};
-use crate::nn::elementwise::{add_f32, concat_f32, qadd, qconcat};
-use crate::nn::fc::{FullyConnected, QFullyConnected};
+use crate::nn::conv::{Conv2d, PreparedConv2d, QConv2d};
+use crate::nn::depthwise::{DepthwiseConv2d, PreparedDepthwiseConv2d, QDepthwiseConv2d};
+use crate::nn::elementwise::{add_f32, concat_f32, qadd, qadd_into, qconcat, qconcat_into};
+use crate::nn::fc::{FullyConnected, PreparedFullyConnected, QFullyConnected};
 use crate::nn::pool::{
-    avg_pool_f32, global_avg_pool_f32, max_pool_f32, qavg_pool, qglobal_avg_pool, qmax_pool,
+    avg_pool_f32, global_avg_pool_f32, max_pool_f32, qavg_pool, qavg_pool_into,
+    qglobal_avg_pool, qglobal_avg_pool_into, qmax_pool, qmax_pool_into,
 };
-use crate::nn::{Padding, QTensor};
+use crate::nn::{LayerScratch, Padding, QTensor};
 use crate::quant::QuantParams;
 use crate::tensor::Tensor;
 
@@ -463,6 +464,162 @@ impl QGraph {
             })
             .sum()
     }
+
+    /// Build the prepared execution plan: per-node weight packing, row sums
+    /// and output stages, all computed once. Call at conversion time or at
+    /// `.iaoiq` load time ([`crate::model_format`]); the plan is immutable
+    /// and `Sync`, so serving threads share it read-only (each with its own
+    /// [`ExecState`]). Prepared execution is bit-identical to
+    /// [`QGraph::run_q`].
+    pub fn prepare(&self) -> PreparedGraph {
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| PreparedNode {
+                name: n.name.clone(),
+                input: n.input,
+                op: match &n.op {
+                    QOp::Conv(c) => PreparedOp::Conv(c.prepare(self.kernel)),
+                    QOp::Depthwise(d) => PreparedOp::Depthwise(d.prepare()),
+                    QOp::Fc(f) => PreparedOp::Fc(f.prepare(self.kernel)),
+                    QOp::AvgPool { kernel, stride, padding } => {
+                        PreparedOp::AvgPool { kernel: *kernel, stride: *stride, padding: *padding }
+                    }
+                    QOp::MaxPool { kernel, stride, padding } => {
+                        PreparedOp::MaxPool { kernel: *kernel, stride: *stride, padding: *padding }
+                    }
+                    QOp::GlobalAvgPool => PreparedOp::GlobalAvgPool,
+                    QOp::Add { other, out_params } => {
+                        PreparedOp::Add { other: *other, out_params: *out_params }
+                    }
+                    QOp::Concat { others, out_params } => {
+                        PreparedOp::Concat { others: others.clone(), out_params: *out_params }
+                    }
+                    QOp::Softmax => PreparedOp::Softmax,
+                    QOp::Logistic => PreparedOp::Logistic,
+                },
+            })
+            .collect();
+        PreparedGraph { input_params: self.input_params, nodes }
+    }
+}
+
+/// Prepared per-node operation: conv-like nodes carry their packed plans;
+/// the rest execute through the `_into` zero-alloc op variants.
+#[derive(Clone, Debug)]
+enum PreparedOp {
+    Conv(PreparedConv2d),
+    Depthwise(PreparedDepthwiseConv2d),
+    Fc(PreparedFullyConnected),
+    AvgPool { kernel: usize, stride: usize, padding: Padding },
+    MaxPool { kernel: usize, stride: usize, padding: Padding },
+    GlobalAvgPool,
+    Add { other: NodeRef, out_params: QuantParams },
+    Concat { others: Vec<NodeRef>, out_params: QuantParams },
+    Softmax,
+    Logistic,
+}
+
+/// One node of the prepared graph.
+#[derive(Clone, Debug)]
+struct PreparedNode {
+    #[allow(dead_code)] // surfaced in panics/debug dumps
+    name: String,
+    input: NodeRef,
+    op: PreparedOp,
+}
+
+/// The prepared form of a [`QGraph`]: every weight-side and
+/// allocation-shaped cost hoisted out of the per-request path. Immutable
+/// and shareable across threads; pair with one [`ExecState`] per worker.
+#[derive(Clone, Debug)]
+pub struct PreparedGraph {
+    pub input_params: QuantParams,
+    nodes: Vec<PreparedNode>,
+}
+
+/// Per-worker mutable execution state: the layer scratch arena plus
+/// reusable per-node output tensors (and a reusable quantized-input slot).
+/// After a warm-up run at a given input shape, [`PreparedGraph::run_q`]
+/// performs **zero heap allocations** (enforced by `rust/tests/alloc.rs`)
+/// — except on graphs containing Concat (a short-lived operand-ref `Vec`)
+/// or Softmax/Logistic (which fall back to the allocating ops).
+#[derive(Clone, Debug, Default)]
+pub struct ExecState {
+    scratch: LayerScratch,
+    outs: Vec<QTensor>,
+    qin: QTensor,
+}
+
+impl ExecState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl PreparedGraph {
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Run from an already-quantized input — the serving hot path. Returns
+    /// a borrow of the final node's output slot inside `state` (copy it out
+    /// if it must outlive the next run).
+    pub fn run_q<'a>(&self, qin: &QTensor, state: &'a mut ExecState) -> &'a QTensor {
+        assert!(!self.nodes.is_empty(), "empty graph");
+        while state.outs.len() < self.nodes.len() {
+            state.outs.push(QTensor::default());
+        }
+        for (i, node) in self.nodes.iter().enumerate() {
+            // Split so earlier outputs stay readable while node i's slot is
+            // written — the DAG invariant (validate_topology) guarantees
+            // inputs are strictly earlier.
+            let (done, rest) = state.outs.split_at_mut(i);
+            let dst = &mut rest[0];
+            let fetch = |r: &NodeRef| -> &QTensor {
+                match r {
+                    NodeRef::Input => qin,
+                    NodeRef::Node(j) => &done[*j],
+                }
+            };
+            let x = fetch(&node.input);
+            match &node.op {
+                PreparedOp::Conv(p) => p.run_into(x, dst, &mut state.scratch),
+                PreparedOp::Depthwise(p) => p.run_into(x, dst, &mut state.scratch),
+                PreparedOp::Fc(p) => p.run_into(x, dst, &mut state.scratch),
+                PreparedOp::AvgPool { kernel, stride, padding } => {
+                    qavg_pool_into(x, *kernel, *stride, *padding, dst)
+                }
+                PreparedOp::MaxPool { kernel, stride, padding } => {
+                    qmax_pool_into(x, *kernel, *stride, *padding, dst)
+                }
+                PreparedOp::GlobalAvgPool => qglobal_avg_pool_into(x, dst),
+                PreparedOp::Add { other, out_params } => {
+                    qadd_into(x, fetch(other), *out_params, dst)
+                }
+                PreparedOp::Concat { others, out_params } => {
+                    let mut all: Vec<&QTensor> = Vec::with_capacity(others.len() + 1);
+                    all.push(x);
+                    all.extend(others.iter().map(&fetch));
+                    qconcat_into(&all, *out_params, dst);
+                }
+                PreparedOp::Softmax => *dst = qsoftmax(x),
+                PreparedOp::Logistic => *dst = qlogistic(x),
+            }
+        }
+        &state.outs[self.nodes.len() - 1]
+    }
+
+    /// Quantize a float input (into the state's reusable slot) and run,
+    /// returning the dequantized final output — the float-boundary
+    /// convenience mirroring [`QGraph::run`].
+    pub fn run(&self, input: &Tensor<f32>, state: &mut ExecState) -> Tensor<f32> {
+        let mut qin = std::mem::take(&mut state.qin);
+        qin.quantize_from(input, self.input_params);
+        let out = self.run_q(&qin, state).dequantize();
+        state.qin = qin;
+        out
+    }
 }
 
 #[cfg(test)]
@@ -560,6 +717,79 @@ mod tests {
         let y = g.run(&x);
         assert_eq!(y.shape(), &[1, 2, 2, 2]);
         assert_eq!(y.data(), &[0.0, -1.0, 2.0, 2.0, 0.0, -3.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn prepared_graph_matches_unprepared_bit_for_bit() {
+        use crate::graph::builders;
+        use crate::quantize::{quantize_graph, QuantizeOptions};
+        let mut rng = Rng::seeded(211);
+        let batches: Vec<Tensor<f32>> = (0..2)
+            .map(|_| {
+                let mut d = vec![0f32; 2 * 16 * 16 * 3];
+                for v in d.iter_mut() {
+                    *v = rng.range_f32(-1.0, 1.0);
+                }
+                Tensor::from_vec(&[2, 16, 16, 3], d)
+            })
+            .collect();
+        for kern in [
+            crate::gemm::Kernel::Reference,
+            crate::gemm::Kernel::Blocked,
+            crate::gemm::Kernel::Int8Pairwise,
+        ] {
+            let g = builders::papernet_random(6, FusedActivation::Relu6, 211);
+            let (_, mut q) = quantize_graph(&g, &batches, QuantizeOptions::default());
+            q.kernel = kern;
+            let plan = q.prepare();
+            let mut state = ExecState::new();
+            let qin = QTensor::quantize(&batches[0], q.input_params);
+            let want = q.run_q(&qin);
+            let got = plan.run_q(&qin, &mut state);
+            assert_eq!(want.shape(), got.shape(), "{kern:?}");
+            assert_eq!(want.data.data(), got.data.data(), "{kern:?}");
+            // Warm rerun and a different batch size through the same state.
+            let got2 = plan.run_q(&qin, &mut state);
+            assert_eq!(want.data.data(), got2.data.data(), "{kern:?} warm");
+            let single = QTensor {
+                data: Tensor::from_vec(
+                    &[1, 16, 16, 3],
+                    qin.data.data()[..16 * 16 * 3].to_vec(),
+                ),
+                params: qin.params,
+            };
+            let want1 = q.run_q(&single);
+            let got1 = plan.run_q(&single, &mut state);
+            assert_eq!(want1.data.data(), got1.data.data(), "{kern:?} batch=1");
+        }
+    }
+
+    #[test]
+    fn prepared_graph_handles_resnet_adds() {
+        use crate::graph::builders;
+        use crate::quantize::{quantize_graph, QuantizeOptions};
+        let mut rng = Rng::seeded(212);
+        let batches: Vec<Tensor<f32>> = (0..2)
+            .map(|_| {
+                let mut d = vec![0f32; 12 * 12 * 3];
+                for v in d.iter_mut() {
+                    *v = rng.range_f32(-1.0, 1.0);
+                }
+                Tensor::from_vec(&[1, 12, 12, 3], d)
+            })
+            .collect();
+        let g = builders::mini_resnet(1, 4, 212);
+        let (_, q) = quantize_graph(&g, &batches, QuantizeOptions::default());
+        let plan = q.prepare();
+        let mut state = ExecState::new();
+        let qin = QTensor::quantize(&batches[1], q.input_params);
+        let want = q.run_q(&qin);
+        let got = plan.run_q(&qin, &mut state);
+        assert_eq!(want.data.data(), got.data.data());
+        // The float-boundary convenience must agree with QGraph::run.
+        let wantf = q.run(&batches[1]);
+        let gotf = plan.run(&batches[1], &mut state);
+        assert_eq!(wantf.data(), gotf.data());
     }
 
     #[test]

@@ -173,6 +173,15 @@ impl ModelArtifact {
     pub fn batched_shape(&self, n: usize) -> [usize; 4] {
         [n, self.input_shape[0], self.input_shape[1], self.input_shape[2]]
     }
+
+    /// Build the prepared execution plan for serving this artifact —
+    /// load → prepare is the deployment path ([`crate::coordinator::registry`]
+    /// does this at install/swap time): weights are packed and output stages
+    /// built once here, never per request. Prepared inference is
+    /// bit-identical to running [`Self::graph`] directly.
+    pub fn prepare(&self) -> crate::graph::PreparedGraph {
+        self.graph.prepare()
+    }
 }
 
 /// The eq. 5 requantization multiplier of a conv-like node, normalized for

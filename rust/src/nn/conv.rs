@@ -8,8 +8,9 @@
 //! requantize / clamp output pipeline applies per output channel, matching
 //! the fused-layer layout of figure 1.1a.
 
-use crate::gemm::{output::OutputStage, Kernel, QGemm};
-use crate::nn::{FusedActivation, Padding, QTensor};
+use crate::gemm::prepared::grow;
+use crate::gemm::{output::OutputStage, Kernel, PreparedGemm, QGemm};
+use crate::nn::{FusedActivation, LayerScratch, Padding, QTensor};
 use crate::quant::{QuantParams, QuantizedMultiplier};
 use crate::tensor::Tensor;
 
@@ -79,14 +80,100 @@ impl QConv2d {
 
         // Scatter back to NHWC.
         let mut out = Tensor::zeros(&[batch, oh, ow, cout]);
-        let od = out.data_mut();
-        for c in 0..cout {
-            let row = &out_cm[c * n..(c + 1) * n];
-            for (pos, &v) in row.iter().enumerate() {
-                od[pos * cout + c] = v;
-            }
-        }
+        scatter_cm_to_nhwc(&out_cm, cout, n, out.data_mut());
         QTensor { data: out, params: self.output_params }
+    }
+
+    /// Build the prepared plan for this layer: weights packed for `kern`,
+    /// row sums and output stage computed once. All per-request cost after
+    /// this is activation-side only.
+    pub fn prepare(&self, kern: Kernel) -> PreparedConv2d {
+        let (cout, kh, kw, cin) = (
+            self.weights.dim(0),
+            self.weights.dim(1),
+            self.weights.dim(2),
+            self.weights.dim(3),
+        );
+        let k = kh * kw * cin;
+        let plan = PreparedGemm::new(
+            kern,
+            cout,
+            k,
+            self.weight_params.zero_point,
+            self.input_params.zero_point,
+            self.weights.data(),
+            self.output_stage(),
+        );
+        PreparedConv2d {
+            plan,
+            kh,
+            kw,
+            cin,
+            cout,
+            stride: self.stride,
+            padding: self.padding,
+            input_zero: self.input_params.zero_point,
+            output_params: self.output_params,
+        }
+    }
+}
+
+/// A [`QConv2d`] with all weight-side work hoisted out of the request path:
+/// packed weights, precomputed row sums, built-once output stage. `run_into`
+/// is allocation-free once the scratch and output have warmed up, and
+/// bit-identical to [`QConv2d::run`].
+#[derive(Clone, Debug)]
+pub struct PreparedConv2d {
+    plan: PreparedGemm,
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    padding: Padding,
+    input_zero: i32,
+    output_params: QuantParams,
+}
+
+impl PreparedConv2d {
+    /// Run the layer, writing the NHWC result into `out` (reshaped in
+    /// place, allocation reused).
+    pub fn run_into(&self, input: &QTensor, out: &mut QTensor, scratch: &mut LayerScratch) {
+        assert_eq!(
+            input.params.zero_point, self.input_zero,
+            "input must be quantized with the layer's input params"
+        );
+        let x = &input.data;
+        let (batch, ih, iw, cin) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+        assert_eq!(cin, self.cin, "channel mismatch");
+        let (oh, pad_h) = self.padding.resolve(ih, self.kh, self.stride);
+        let (ow, pad_w) = self.padding.resolve(iw, self.kw, self.stride);
+        let k = self.kh * self.kw * cin;
+        let n = batch * oh * ow;
+
+        let LayerScratch { gemm, cols, staging, .. } = scratch;
+        let cols = grow(cols, k * n);
+        im2col_into(x, self.kh, self.kw, self.stride, pad_h, pad_w, oh, ow, self.input_zero as u8, cols);
+        let staging = grow(staging, self.cout * n);
+        self.plan.run(n, cols, staging, gemm);
+
+        out.params = self.output_params;
+        // Safe: the scatter below writes every output element exactly once.
+        out.data.reset_for_overwrite(&[batch, oh, ow, self.cout]);
+        scatter_cm_to_nhwc(staging, self.cout, n, out.data.data_mut());
+    }
+}
+
+/// Transpose a channel-major `[C][N]` GEMM result into NHWC order (channel
+/// innermost): `dst[pos*C + c] = src[c*N + pos]`.
+fn scatter_cm_to_nhwc(src: &[u8], c_total: usize, n: usize, dst: &mut [u8]) {
+    debug_assert_eq!(src.len(), c_total * n);
+    debug_assert_eq!(dst.len(), c_total * n);
+    for c in 0..c_total {
+        let row = &src[c * n..(c + 1) * n];
+        for (pos, &v) in row.iter().enumerate() {
+            dst[pos * c_total + c] = v;
+        }
     }
 }
 
@@ -105,10 +192,32 @@ pub fn im2col(
     ow: usize,
     zero: u8,
 ) -> Vec<u8> {
+    let (batch, cin) = (x.dim(0), x.dim(3));
+    let mut cols = vec![0u8; kh * kw * cin * batch * oh * ow];
+    im2col_into(x, kh, kw, stride, pad_h, pad_w, oh, ow, zero, &mut cols);
+    cols
+}
+
+/// [`im2col`] into a caller-provided buffer (the prepared path's reusable
+/// scratch); `cols` must hold exactly `K×N` bytes and is fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(
+    x: &Tensor<u8>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    oh: usize,
+    ow: usize,
+    zero: u8,
+    cols: &mut [u8],
+) {
     let (batch, ih, iw, cin) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     let k = kh * kw * cin;
     let n = batch * oh * ow;
-    let mut cols = vec![zero; k * n];
+    assert_eq!(cols.len(), k * n, "cols must be K*N");
+    cols.fill(zero);
     let xd = x.data();
     for b in 0..batch {
         for oy in 0..oh {
@@ -134,7 +243,6 @@ pub fn im2col(
             }
         }
     }
-    cols
 }
 
 /// Float reference convolution (the paper's float baseline path).
@@ -290,6 +398,32 @@ mod tests {
         let c = ql.run(&qx, Kernel::Int8Pairwise);
         assert_eq!(a.data.data(), b.data.data());
         assert_eq!(a.data.data(), c.data.data());
+    }
+
+    #[test]
+    fn prepared_conv_is_bit_identical() {
+        let mut rng = Rng::seeded(9);
+        let mut fl = random_float_conv(&mut rng, 6, 3, 3, 4);
+        fl.stride = 2;
+        let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let ql = quantize_layer(&fl, ip, -4.0, 4.0);
+        let mut xd = vec![0f32; 2 * 9 * 9 * 4];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let qx = QTensor::quantize(&Tensor::from_vec(&[2, 9, 9, 4], xd), ip);
+        let mut scratch = crate::nn::LayerScratch::new();
+        let mut got = QTensor::default();
+        for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+            let want = ql.run(&qx, kern);
+            let plan = ql.prepare(kern);
+            plan.run_into(&qx, &mut got, &mut scratch);
+            assert_eq!(want.shape(), got.shape(), "{kern:?}");
+            assert_eq!(want.data.data(), got.data.data(), "{kern:?}");
+            // Warm buffers (shared across kernels) must not corrupt results.
+            plan.run_into(&qx, &mut got, &mut scratch);
+            assert_eq!(want.data.data(), got.data.data(), "{kern:?} warm");
+        }
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! saturate, clamp.
 
 use crate::gemm::output::OutputStage;
-use crate::nn::{conv::apply_activation_f32, FusedActivation, Padding, QTensor};
+use crate::gemm::prepared::grow;
+use crate::nn::{conv::apply_activation_f32, FusedActivation, LayerScratch, Padding, QTensor};
 use crate::quant::{QuantParams, QuantizedMultiplier};
 use crate::tensor::Tensor;
 
@@ -101,6 +102,103 @@ impl QDepthwiseConv2d {
             }
         }
         QTensor { data: out, params: self.output_params }
+    }
+
+    /// Build the prepared plan: weights pre-centred once, the output stage
+    /// built once. Depthwise has no GEMM, so "packing" is the `(q_w − Z_w)`
+    /// recentre the unprepared path redoes every call.
+    pub fn prepare(&self) -> PreparedDepthwiseConv2d {
+        let zw = self.weight_params.zero_point;
+        PreparedDepthwiseConv2d {
+            w_centered: self.weights.data().iter().map(|&w| i32::from(w) - zw).collect(),
+            bias: self.bias.clone(),
+            stage: self.stage(),
+            kh: self.weights.dim(1),
+            kw: self.weights.dim(2),
+            c: self.weights.dim(3),
+            stride: self.stride,
+            padding: self.padding,
+            input_zero: self.input_params.zero_point,
+            output_params: self.output_params,
+        }
+    }
+}
+
+/// A [`QDepthwiseConv2d`] with the weight recentre and output stage hoisted
+/// out of the request path; `run_into` is allocation-free once warmed up and
+/// bit-identical to [`QDepthwiseConv2d::run`].
+#[derive(Clone, Debug)]
+pub struct PreparedDepthwiseConv2d {
+    /// `(q_w − Z_w)` per tap, the per-call recentre of the unprepared path.
+    w_centered: Vec<i32>,
+    bias: Vec<i32>,
+    /// Bias-free stage; the per-channel bias is seeded into the
+    /// accumulators directly (same as the unprepared path).
+    stage: OutputStage,
+    kh: usize,
+    kw: usize,
+    c: usize,
+    stride: usize,
+    padding: Padding,
+    input_zero: i32,
+    output_params: QuantParams,
+}
+
+impl PreparedDepthwiseConv2d {
+    /// Run the layer, writing the NHWC result into `out` (reshaped in
+    /// place, allocation reused).
+    pub fn run_into(&self, input: &QTensor, out: &mut QTensor, scratch: &mut LayerScratch) {
+        assert_eq!(
+            input.params.zero_point, self.input_zero,
+            "input must be quantized with the layer's input params"
+        );
+        let x = &input.data;
+        let (batch, ih, iw, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+        assert_eq!(c, self.c, "depthwise channel mismatch");
+        let (oh, pad_h) = self.padding.resolve(ih, self.kh, self.stride);
+        let (ow, pad_w) = self.padding.resolve(iw, self.kw, self.stride);
+        let zx = self.input_zero;
+        let xd = x.data();
+
+        out.params = self.output_params;
+        // Safe: the loop below requantizes into every output element.
+        out.data.reset_for_overwrite(&[batch, oh, ow, c]);
+        let od = out.data.data_mut();
+        let acc = grow(&mut scratch.acc32, c);
+        for b in 0..batch {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let obase = ((b * oh + oy) * ow + ox) * c;
+                    if self.bias.is_empty() {
+                        acc.fill(0);
+                    } else {
+                        acc.copy_from_slice(&self.bias);
+                    }
+                    for ky in 0..self.kh {
+                        let y = (oy * self.stride + ky) as isize - pad_h as isize;
+                        if y < 0 || y >= ih as isize {
+                            continue; // padded taps contribute (Z_x − Z_x)·w = 0
+                        }
+                        for kx in 0..self.kw {
+                            let xx = (ox * self.stride + kx) as isize - pad_w as isize;
+                            if xx < 0 || xx >= iw as isize {
+                                continue;
+                            }
+                            let wrow = &self.w_centered
+                                [(ky * self.kw + kx) * c..(ky * self.kw + kx) * c + c];
+                            let xbase = ((b * ih + y as usize) * iw + xx as usize) * c;
+                            let xrow = &xd[xbase..xbase + c];
+                            for ch in 0..c {
+                                acc[ch] += wrow[ch] * (i32::from(xrow[ch]) - zx);
+                            }
+                        }
+                    }
+                    for ch in 0..c {
+                        od[obase + ch] = self.stage.requantize_one(acc[ch]);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -200,6 +298,26 @@ mod tests {
             let diff = want.max_abs_diff(&got);
             assert!(diff < tol, "stride={stride} {act:?}: diff {diff} tol {tol}");
         }
+    }
+
+    #[test]
+    fn prepared_depthwise_is_bit_identical() {
+        let mut rng = Rng::seeded(77);
+        let (_, ql) = make_pair(&mut rng, 5, 2, FusedActivation::Relu6);
+        let mut xd = vec![0f32; 2 * 9 * 9 * 5];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let qx = QTensor::quantize(&Tensor::from_vec(&[2, 9, 9, 5], xd), ql.input_params);
+        let want = ql.run(&qx);
+        let plan = ql.prepare();
+        let mut got = QTensor::default();
+        let mut scratch = crate::nn::LayerScratch::new();
+        plan.run_into(&qx, &mut got, &mut scratch);
+        assert_eq!(want.shape(), got.shape());
+        assert_eq!(want.data.data(), got.data.data());
+        plan.run_into(&qx, &mut got, &mut scratch);
+        assert_eq!(want.data.data(), got.data.data(), "warm rerun");
     }
 
     #[test]

@@ -24,6 +24,14 @@ const ADD_LEFT_SHIFT: i32 = 16;
 
 /// Quantized elementwise addition with rescaling (App. A.2).
 pub fn qadd(a: &QTensor, b: &QTensor, out_params: QuantParams) -> QTensor {
+    let mut out = QTensor::default();
+    qadd_into(a, b, out_params, &mut out);
+    out
+}
+
+/// [`qadd`] into a reusable output (the prepared path's zero-alloc steady
+/// state).
+pub fn qadd_into(a: &QTensor, b: &QTensor, out_params: QuantParams, dst: &mut QTensor) {
     assert_eq!(a.shape(), b.shape(), "add operands must have equal shapes");
     // Promote both inputs onto the scale out_scale·2^-SHIFT.
     let twopow = (1i64 << ADD_LEFT_SHIFT) as f64;
@@ -32,25 +40,31 @@ pub fn qadd(a: &QTensor, b: &QTensor, out_params: QuantParams) -> QTensor {
     let za = a.params.zero_point;
     let zb = b.params.zero_point;
     let zo = out_params.zero_point;
-    let data: Vec<u8> = a
-        .data
-        .data()
-        .iter()
-        .zip(b.data.data())
-        .map(|(&qa, &qb)| {
-            let ra = ma.apply(i32::from(qa) - za);
-            let rb = mb.apply(i32::from(qb) - zb);
-            let sum = ra.saturating_add(rb);
-            let q = rounding_div_by_pot(sum, ADD_LEFT_SHIFT).saturating_add(zo);
-            q.clamp(0, 255) as u8
-        })
-        .collect();
-    QTensor { data: Tensor::from_vec(a.shape(), data), params: out_params }
+    dst.params = out_params;
+    // Safe: the loop below writes every output element.
+    dst.data.reset_for_overwrite(a.shape());
+    for ((o, &qa), &qb) in dst.data.data_mut().iter_mut().zip(a.data.data()).zip(b.data.data()) {
+        let ra = ma.apply(i32::from(qa) - za);
+        let rb = mb.apply(i32::from(qb) - zb);
+        let sum = ra.saturating_add(rb);
+        let q = rounding_div_by_pot(sum, ADD_LEFT_SHIFT).saturating_add(zo);
+        *o = q.clamp(0, 255) as u8;
+    }
 }
 
 /// Quantized concatenation along the channel (last) axis. All inputs and the
 /// output must share quantization parameters (App. A.3) — enforced here.
 pub fn qconcat(inputs: &[&QTensor], out_params: QuantParams) -> QTensor {
+    let mut out = QTensor::default();
+    qconcat_into(inputs, out_params, &mut out);
+    out
+}
+
+/// [`qconcat`] into a reusable output. The destination's *data* allocation
+/// is reused; note the prepared graph executor still gathers its operand
+/// references into a short-lived `Vec` per call (see
+/// [`crate::graph::PreparedGraph`] docs).
+pub fn qconcat_into(inputs: &[&QTensor], out_params: QuantParams, dst: &mut QTensor) {
     assert!(!inputs.is_empty());
     for t in inputs {
         assert_eq!(
@@ -68,7 +82,10 @@ pub fn qconcat(inputs: &[&QTensor], out_params: QuantParams) -> QTensor {
     let c_total: usize = inputs.iter().map(|t| t.shape()[rank - 1]).sum();
     let mut shape = inputs[0].shape().to_vec();
     shape[rank - 1] = c_total;
-    let mut data = vec![0u8; lead * c_total];
+    dst.params = out_params;
+    // Safe: every row copies its full span of c_total channels.
+    dst.data.reset_for_overwrite(&shape);
+    let data = dst.data.data_mut();
     for row in 0..lead {
         let mut off = 0;
         for t in inputs {
@@ -78,7 +95,6 @@ pub fn qconcat(inputs: &[&QTensor], out_params: QuantParams) -> QTensor {
             off += c;
         }
     }
-    QTensor { data: Tensor::from_vec(&shape, data), params: out_params }
 }
 
 /// Float reference add.

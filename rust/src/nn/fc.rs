@@ -2,8 +2,9 @@
 //! specified for exactly this op in TFLite, and it is the matmul of §2.2
 //! with `M = units`, `K = input features`, `N = batch`.
 
-use crate::gemm::{output::OutputStage, Kernel, QGemm};
-use crate::nn::{conv::apply_activation_f32, FusedActivation, QTensor};
+use crate::gemm::prepared::grow;
+use crate::gemm::{output::OutputStage, Kernel, PreparedGemm, QGemm};
+use crate::nn::{conv::apply_activation_f32, FusedActivation, LayerScratch, QTensor};
 use crate::quant::{QuantParams, QuantizedMultiplier};
 use crate::tensor::Tensor;
 
@@ -20,6 +21,46 @@ pub struct QFullyConnected {
 }
 
 impl QFullyConnected {
+    /// Derived output stage (multiplier per eq. 5, clamp per activation).
+    pub fn output_stage(&self) -> OutputStage {
+        let multiplier = QuantizedMultiplier::from_f64(
+            self.weight_params.scale * self.input_params.scale / self.output_params.scale,
+        );
+        let (clamp_min, clamp_max) = self
+            .activation
+            .clamp_bounds(self.output_params.scale, self.output_params.zero_point);
+        OutputStage {
+            bias: self.bias.clone(),
+            multiplier,
+            out_zero: self.output_params.zero_point,
+            clamp_min,
+            clamp_max,
+        }
+    }
+
+    /// Build the prepared plan for this layer (weights packed once for
+    /// `kern`, output stage built once).
+    pub fn prepare(&self, kern: Kernel) -> PreparedFullyConnected {
+        let units = self.weights.dim(0);
+        let feat = self.weights.dim(1);
+        let plan = PreparedGemm::new(
+            kern,
+            units,
+            feat,
+            self.weight_params.zero_point,
+            self.input_params.zero_point,
+            self.weights.data(),
+            self.output_stage(),
+        );
+        PreparedFullyConnected {
+            plan,
+            units,
+            feat,
+            input_zero: self.input_params.zero_point,
+            output_params: self.output_params,
+        }
+    }
+
     pub fn run(&self, input: &QTensor, kern: Kernel) -> QTensor {
         let x = &input.data;
         let batch = x.dim(0);
@@ -35,19 +76,7 @@ impl QFullyConnected {
                 rhs[f * batch + b] = xd[b * feat + f];
             }
         }
-        let multiplier = QuantizedMultiplier::from_f64(
-            self.weight_params.scale * self.input_params.scale / self.output_params.scale,
-        );
-        let (clamp_min, clamp_max) = self
-            .activation
-            .clamp_bounds(self.output_params.scale, self.output_params.zero_point);
-        let stage = OutputStage {
-            bias: self.bias.clone(),
-            multiplier,
-            out_zero: self.output_params.zero_point,
-            clamp_min,
-            clamp_max,
-        };
+        let stage = self.output_stage();
         let g = QGemm::new(units, feat, batch, self.weight_params.zero_point, self.input_params.zero_point);
         let mut out_cm = vec![0u8; units * batch];
         g.run(kern, self.weights.data(), &rhs, &stage, &mut out_cm);
@@ -61,6 +90,55 @@ impl QFullyConnected {
             }
         }
         QTensor { data: out, params: self.output_params }
+    }
+}
+
+/// A [`QFullyConnected`] with packed weights and built-once output stage;
+/// `run_into` is allocation-free once warmed up and bit-identical to
+/// [`QFullyConnected::run`].
+#[derive(Clone, Debug)]
+pub struct PreparedFullyConnected {
+    plan: PreparedGemm,
+    units: usize,
+    feat: usize,
+    input_zero: i32,
+    output_params: QuantParams,
+}
+
+impl PreparedFullyConnected {
+    /// Run the layer, writing `[batch, units]` into `out` (reshaped in
+    /// place, allocation reused).
+    pub fn run_into(&self, input: &QTensor, out: &mut QTensor, scratch: &mut LayerScratch) {
+        assert_eq!(
+            input.params.zero_point, self.input_zero,
+            "input must be quantized with the layer's input params"
+        );
+        let x = &input.data;
+        let batch = x.dim(0);
+        let feat: usize = x.shape()[1..].iter().product();
+        assert_eq!(feat, self.feat, "feature mismatch");
+
+        // RHS must be K×N = features × batch: transpose into scratch.
+        let LayerScratch { gemm, cols, staging, .. } = scratch;
+        let rhs = grow(cols, feat * batch);
+        let xd = x.data();
+        for b in 0..batch {
+            for f in 0..feat {
+                rhs[f * batch + b] = xd[b * feat + f];
+            }
+        }
+        let out_cm = grow(staging, self.units * batch);
+        self.plan.run(batch, rhs, out_cm, gemm);
+
+        // Back to [batch, units]. Safe: the transpose writes every element.
+        out.params = self.output_params;
+        out.data.reset_for_overwrite(&[batch, self.units]);
+        let od = out.data.data_mut();
+        for u in 0..self.units {
+            for b in 0..batch {
+                od[b * self.units + u] = out_cm[u * batch + b];
+            }
+        }
     }
 }
 
@@ -149,6 +227,40 @@ mod tests {
         };
         let x = Tensor::zeros(&[2, 3, 3, 2]); // 18 features
         assert_eq!(fl.run(&x).shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn prepared_fc_is_bit_identical() {
+        let mut rng = Rng::seeded(71);
+        let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let (units, feat) = (5, 19);
+        let mut w = vec![0f32; units * feat];
+        rng.fill_normal(&mut w, 0.3);
+        let wp = QuantParams::for_weights(&w, 8);
+        let bp = QuantParams::for_bias(&wp, &ip);
+        let bias: Vec<f32> = (0..units).map(|_| rng.range_f32(-0.4, 0.4)).collect();
+        let ql = QFullyConnected {
+            weights: Tensor::from_vec(&[units, feat], wp.quantize_slice(&w)),
+            weight_params: wp,
+            bias: bp.quantize_bias_slice(&bias),
+            input_params: ip,
+            output_params: QuantParams::from_min_max(-3.0, 3.0, 0, 255),
+            activation: FusedActivation::Relu,
+        };
+        let mut scratch = crate::nn::LayerScratch::new();
+        let mut got = QTensor::default();
+        for batch in [1usize, 3, 7] {
+            let mut xd = vec![0f32; batch * feat];
+            rng.fill_normal(&mut xd, 0.5);
+            let qx = QTensor::quantize(&Tensor::from_vec(&[batch, feat], xd), ip);
+            for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+                let want = ql.run(&qx, kern);
+                let plan = ql.prepare(kern);
+                plan.run_into(&qx, &mut got, &mut scratch);
+                assert_eq!(want.shape(), got.shape(), "{kern:?} batch={batch}");
+                assert_eq!(want.data.data(), got.data.data(), "{kern:?} batch={batch}");
+            }
+        }
     }
 
     #[test]

@@ -34,11 +34,31 @@ pub struct QTensor {
     pub params: QuantParams,
 }
 
+impl Default for QTensor {
+    /// An empty placeholder (shape `[0]`, unit params) — the initial state
+    /// of reusable output slots in [`crate::graph::ExecState`].
+    fn default() -> Self {
+        Self { data: Tensor::zeros(&[0]), params: QuantParams::unit(0, 255) }
+    }
+}
+
 impl QTensor {
     /// Quantize a real-valued tensor under `params`.
     pub fn quantize(real: &Tensor<f32>, params: QuantParams) -> Self {
         let data = real.map(|v| params.quantize(v) as u8);
         Self { data, params }
+    }
+
+    /// Quantize `real` into this tensor in place, reusing its allocation —
+    /// the zero-alloc counterpart of [`Self::quantize`] for the prepared
+    /// serving path.
+    pub fn quantize_from(&mut self, real: &Tensor<f32>, params: QuantParams) {
+        self.params = params;
+        // Safe: the loop below writes every element.
+        self.data.reset_for_overwrite(real.shape());
+        for (d, &v) in self.data.data_mut().iter_mut().zip(real.data()) {
+            *d = params.quantize(v) as u8;
+        }
     }
 
     /// Dequantize back to real values (eq. 1).
@@ -55,6 +75,30 @@ impl QTensor {
     /// is exactly why the zero-point must exist (§2.1 zero-padding).
     pub fn real_zeros(shape: &[usize], params: QuantParams) -> Self {
         Self { data: Tensor::full(shape, params.zero_point as u8), params }
+    }
+}
+
+/// Reusable per-worker buffers for the prepared layer paths
+/// ([`conv::PreparedConv2d`], [`depthwise::PreparedDepthwiseConv2d`],
+/// [`fc::PreparedFullyConnected`]): the GEMM scratch plus the layer-level
+/// staging buffers (im2col patches, channel-major GEMM output, depthwise
+/// accumulators). One instance per worker thread; every buffer grows to its
+/// high-water mark during warm-up and is then reused allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct LayerScratch {
+    /// GEMM-side buffers (packed RHS panels, i32 accumulators, column sums).
+    pub gemm: crate::gemm::Scratch,
+    /// im2col patch matrix (conv) / feature-major transposed input (fc).
+    pub cols: Vec<u8>,
+    /// Channel-major uint8 GEMM output staged before the NHWC scatter.
+    pub staging: Vec<u8>,
+    /// Per-channel int32 accumulators (depthwise).
+    pub acc32: Vec<i32>,
+}
+
+impl LayerScratch {
+    pub fn new() -> Self {
+        Self::default()
     }
 }
 

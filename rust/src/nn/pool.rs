@@ -11,11 +11,28 @@ use crate::tensor::Tensor;
 
 /// Quantized max pooling, NHWC.
 pub fn qmax_pool(input: &QTensor, kernel: usize, stride: usize, padding: Padding) -> QTensor {
+    let mut out = QTensor::default();
+    qmax_pool_into(input, kernel, stride, padding, &mut out);
+    out
+}
+
+/// [`qmax_pool`] into a reusable output (the prepared path's zero-alloc
+/// steady state).
+pub fn qmax_pool_into(
+    input: &QTensor,
+    kernel: usize,
+    stride: usize,
+    padding: Padding,
+    dst: &mut QTensor,
+) {
     let x = &input.data;
     let (batch, ih, iw, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     let (oh, pad_h) = padding.resolve(ih, kernel, stride);
     let (ow, pad_w) = padding.resolve(iw, kernel, stride);
-    let mut out = Tensor::zeros(&[batch, oh, ow, c]);
+    dst.params = input.params;
+    // Safe: the loops below write every output position.
+    dst.data.reset_for_overwrite(&[batch, oh, ow, c]);
+    let out = &mut dst.data;
     for b in 0..batch {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -44,16 +61,31 @@ pub fn qmax_pool(input: &QTensor, kernel: usize, stride: usize, padding: Padding
             }
         }
     }
-    QTensor { data: out, params: input.params }
 }
 
 /// Quantized average pooling with round-to-nearest integer mean, NHWC.
 pub fn qavg_pool(input: &QTensor, kernel: usize, stride: usize, padding: Padding) -> QTensor {
+    let mut out = QTensor::default();
+    qavg_pool_into(input, kernel, stride, padding, &mut out);
+    out
+}
+
+/// [`qavg_pool`] into a reusable output.
+pub fn qavg_pool_into(
+    input: &QTensor,
+    kernel: usize,
+    stride: usize,
+    padding: Padding,
+    dst: &mut QTensor,
+) {
     let x = &input.data;
     let (batch, ih, iw, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     let (oh, pad_h) = padding.resolve(ih, kernel, stride);
     let (ow, pad_w) = padding.resolve(iw, kernel, stride);
-    let mut out = Tensor::zeros(&[batch, oh, ow, c]);
+    dst.params = input.params;
+    // Safe: the loops below write every output position.
+    dst.data.reset_for_overwrite(&[batch, oh, ow, c]);
+    let out = &mut dst.data;
     for b in 0..batch {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -80,15 +112,24 @@ pub fn qavg_pool(input: &QTensor, kernel: usize, stride: usize, padding: Padding
             }
         }
     }
-    QTensor { data: out, params: input.params }
 }
 
 /// Global average pooling: NHWC → [batch, 1, 1, C].
 pub fn qglobal_avg_pool(input: &QTensor) -> QTensor {
+    let mut out = QTensor::default();
+    qglobal_avg_pool_into(input, &mut out);
+    out
+}
+
+/// [`qglobal_avg_pool`] into a reusable output.
+pub fn qglobal_avg_pool_into(input: &QTensor, dst: &mut QTensor) {
     let x = &input.data;
     let (batch, ih, iw, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     let area = (ih * iw) as i32;
-    let mut out = Tensor::zeros(&[batch, 1, 1, c]);
+    dst.params = input.params;
+    // Safe: the loops below write every output position.
+    dst.data.reset_for_overwrite(&[batch, 1, 1, c]);
+    let out = &mut dst.data;
     for b in 0..batch {
         for ch in 0..c {
             let mut sum = 0i32;
@@ -100,7 +141,6 @@ pub fn qglobal_avg_pool(input: &QTensor) -> QTensor {
             out.set4(b, 0, 0, ch, ((sum + area / 2) / area) as u8);
         }
     }
-    QTensor { data: out, params: input.params }
 }
 
 /// Float reference average pool.

@@ -74,6 +74,34 @@ impl<T: Copy + Default> Tensor<T> {
         self
     }
 
+    /// Re-shape in place to `shape`, resetting every element to the default
+    /// value. Unlike [`Self::zeros`] this reuses the existing allocation when
+    /// capacity allows, so a tensor cycled through the same shapes performs
+    /// no heap allocation after the first pass — the property the prepared
+    /// execution path ([`crate::graph::PreparedGraph`]) relies on for its
+    /// zero-alloc steady state.
+    pub fn reset(&mut self, shape: &[usize]) {
+        let n = shape.iter().product();
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        self.data.clear();
+        self.data.resize(n, T::default());
+    }
+
+    /// [`Self::reset`] without the element fill: prior contents (up to the
+    /// old length) are left in place, so the caller **must overwrite every
+    /// element**. This skips a full memset pass per call — the prepared
+    /// layer paths use it because they write each output element exactly
+    /// once.
+    pub fn reset_for_overwrite(&mut self, shape: &[usize]) {
+        let n = shape.iter().product();
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        if self.data.len() != n {
+            self.data.resize(n, T::default());
+        }
+    }
+
     /// Size of dimension `i`.
     #[inline]
     pub fn dim(&self, i: usize) -> usize {
@@ -188,6 +216,28 @@ mod tests {
         let r = t.clone().reshape(&[3, 4]);
         assert_eq!(r.data(), t.data());
         assert_eq!(r.shape(), &[3, 4]);
+    }
+
+    #[test]
+    fn reset_reuses_allocation_and_zeroes() {
+        let mut t = Tensor::from_vec(&[2, 3], vec![7u8; 6]);
+        t.reset(&[1, 4]);
+        assert_eq!(t.shape(), &[1, 4]);
+        assert_eq!(t.data(), &[0u8; 4]);
+        // Growing within a prior high-water mark must not lose elements.
+        t.reset(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn reset_for_overwrite_keeps_stale_contents_but_fixes_geometry() {
+        let mut t = Tensor::from_vec(&[2, 2], vec![9u8; 4]);
+        t.reset_for_overwrite(&[4, 1]);
+        assert_eq!(t.shape(), &[4, 1]);
+        assert_eq!(t.data(), &[9u8; 4], "same volume: contents untouched");
+        t.reset_for_overwrite(&[2, 3]);
+        assert_eq!(t.len(), 6, "grown to the new volume");
     }
 
     #[test]

@@ -1,0 +1,113 @@
+//! Allocation-count regression test for the prepared execution path.
+//!
+//! A counting [`GlobalAlloc`] wraps the system allocator; the single test
+//! below (kept alone in this target so no concurrent test can allocate
+//! while the counter is armed) asserts that a prepared
+//! [`iaoi::graph::PreparedGraph::run_q`] performs **zero** heap
+//! allocations in steady state — i.e. after a warm-up pass has grown every
+//! scratch buffer and output slot to its high-water mark — and, as a guard
+//! that the counter itself works, that the unprepared [`QGraph::run_q`]
+//! path does allocate.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use iaoi::data::Rng;
+use iaoi::graph::builders::papernet_random;
+use iaoi::graph::ExecState;
+use iaoi::nn::{FusedActivation, QTensor};
+use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::tensor::Tensor;
+
+/// Counts allocation events (alloc / alloc_zeroed / realloc) while armed.
+struct CountingAlloc;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` with the counter armed, returning the number of allocation
+/// events it performed.
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    EVENTS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    f();
+    ARMED.store(false, Ordering::SeqCst);
+    EVENTS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn prepared_run_q_is_allocation_free_in_steady_state() {
+    // Build the conv-dominated demo net (conv, depthwise, pointwise, GAP,
+    // FC — every op on the zero-alloc path).
+    let g = papernet_random(8, FusedActivation::Relu6, 91);
+    let mut rng = Rng::seeded(91);
+    let mk = |rng: &mut Rng, batch: usize| {
+        let mut d = vec![0f32; batch * 16 * 16 * 3];
+        for v in d.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        Tensor::from_vec(&[batch, 16, 16, 3], d)
+    };
+    let calib = vec![mk(&mut rng, 2), mk(&mut rng, 2)];
+    let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
+
+    let plan = q.prepare();
+    let mut state = ExecState::new();
+    let qin = QTensor::quantize(&mk(&mut rng, 4), q.input_params);
+
+    // Warm-up: first runs may grow scratch buffers and output slots.
+    plan.run_q(&qin, &mut state);
+    plan.run_q(&qin, &mut state);
+
+    // Steady state: same shape again — not one allocation event allowed.
+    let steady = count_allocs(|| {
+        plan.run_q(&qin, &mut state);
+    });
+    assert_eq!(steady, 0, "prepared run_q made {steady} allocations in steady state");
+
+    // Guard: the counter must actually count — the unprepared path
+    // reallocates intermediates every call.
+    let unprepared = count_allocs(|| {
+        let _ = q.run_q(&qin);
+    });
+    assert!(unprepared > 0, "allocation counter appears broken (unprepared counted 0)");
+
+    // A smaller batch through the warmed state stays within the high-water
+    // mark, so it is also allocation-free.
+    let small = QTensor::quantize(&mk(&mut rng, 1), q.input_params);
+    plan.run_q(&small, &mut state);
+    let steady_small = count_allocs(|| {
+        plan.run_q(&small, &mut state);
+    });
+    assert_eq!(steady_small, 0, "batch-1 steady state made {steady_small} allocations");
+}

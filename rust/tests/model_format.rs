@@ -143,6 +143,32 @@ fn prop_random_models_roundtrip_bit_identical() {
 }
 
 #[test]
+fn load_then_prepare_matches_in_memory_conversion_bit_for_bit() {
+    // The deployment path — serialize → load → prepare → infer — must be
+    // bit-identical to preparing the in-memory graph the converter
+    // produced, and both must match the unprepared executor.
+    let g = mini_resnet(1, 6, 41);
+    let art = ptq_artifact(&g, 12, 41);
+    let bytes = model_format::save(&art);
+    let loaded = model_format::load(&bytes).expect("load");
+
+    let plan_mem = art.graph.prepare();
+    let plan_loaded = loaded.prepare();
+    let mut state_mem = iaoi::graph::ExecState::new();
+    let mut state_loaded = iaoi::graph::ExecState::new();
+
+    let mut rng = Rng::seeded(42);
+    for x in random_batches(&mut rng, &[2, 12, 12, 3], 3) {
+        let qin = iaoi::nn::QTensor::quantize(&x, art.graph.input_params);
+        let want = art.graph.run_q(&qin);
+        let got_mem = plan_mem.run_q(&qin, &mut state_mem);
+        assert_eq!(want.data, got_mem.data, "prepared(in-memory) diverged");
+        let got_loaded = plan_loaded.run_q(&qin, &mut state_loaded);
+        assert_eq!(want.data, got_loaded.data, "prepared(loaded) diverged");
+    }
+}
+
+#[test]
 fn truncated_files_error_never_panic() {
     let g = papernet_random(8, FusedActivation::Relu6, 3);
     let art = ptq_artifact(&g, 16, 3);
