@@ -40,7 +40,7 @@ fn main() -> Result<()> {
     registry.swap("alpha", &dir.join("alpha.iaoiq"))?;
     println!("serving models: {:?}", registry.names());
 
-    let policy = BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) };
+    let policy = BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1), ..Default::default() };
     let coord = MultiCoordinator::start(registry.clone(), policy, 2);
     let start = Instant::now();
 

@@ -36,7 +36,7 @@ fn main() {
         ("float32", EngineKind::Float(Arc::new(folded))),
     ] {
         for max_batch in [1usize, 4, 8, 16] {
-            let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(1) };
+            let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(1), ..Default::default() };
             let coord = Coordinator::start(engine.clone(), policy, 1);
             let client = coord.client();
             let start = Instant::now();

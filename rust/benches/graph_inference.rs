@@ -1,12 +1,18 @@
-//! End-to-end graph inference: prepared plans vs. the unprepared engine.
+//! End-to-end graph inference: prepared plans vs. the unprepared engine,
+//! for both weight-quantization modes.
 //!
 //! Measures the payoff of the pack-once / zero-alloc-steady-state execution
 //! layer ([`iaoi::graph::PreparedGraph`]) on whole models, single-image and
 //! batched, and emits `BENCH_graph.json` with ops/sec so future PRs have a
-//! perf trajectory to regress against. The unprepared numbers run the
-//! original [`iaoi::graph::QGraph::run_q`] path, which re-derives all
-//! weight-side state (packing, row sums, output stages) and reallocates
-//! every intermediate per request.
+//! perf trajectory to regress against. Every case is run under both
+//! [`QuantMode::PerTensor`] and [`QuantMode::PerChannel`] (tagged with a
+//! `quant_mode` field in the JSON): the per-channel requantization stage
+//! indexes one multiplier per output row, and this bench is the regression
+//! guard that the indexing costs nothing measurable on whole-model
+//! inference. The unprepared numbers run the original
+//! [`iaoi::graph::QGraph::run_q`] path, which re-derives all weight-side
+//! state (packing, row sums, output stages) and reallocates every
+//! intermediate per request.
 //!
 //! Run: `cargo bench --bench graph_inference`
 //! (CI runs it under `IAOI_BENCH_SMOKE=1`, whose numbers are not meaningful.)
@@ -15,13 +21,14 @@ use iaoi::bench_util::{bench, smoke_mode, Sample};
 use iaoi::data::Rng;
 use iaoi::graph::builders::mobilenet;
 use iaoi::graph::{ExecState, QGraph};
-use iaoi::harness::demo_artifact;
+use iaoi::harness::demo_artifact_with_mode;
 use iaoi::nn::QTensor;
-use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::quantize::{quantize_graph, QuantMode, QuantizeOptions};
 use iaoi::tensor::Tensor;
 
 struct Case {
     model: &'static str,
+    quant_mode: QuantMode,
     batch: usize,
     unprepared: Sample,
     prepared: Sample,
@@ -39,8 +46,9 @@ impl Case {
 
     fn json(&self) -> String {
         format!(
-            "    {{\"model\": \"{}\", \"batch\": {}, \"unprepared_ops_per_sec\": {:.2}, \"prepared_ops_per_sec\": {:.2}, \"speedup\": {:.3}}}",
+            "    {{\"model\": \"{}\", \"quant_mode\": \"{}\", \"batch\": {}, \"unprepared_ops_per_sec\": {:.2}, \"prepared_ops_per_sec\": {:.2}, \"speedup\": {:.3}}}",
             self.model,
+            self.quant_mode.label(),
             self.batch,
             self.ops(&self.unprepared),
             self.ops(&self.prepared),
@@ -57,12 +65,19 @@ fn random_input(rng: &mut Rng, batch: usize, res: usize) -> Tensor<f32> {
     Tensor::from_vec(&[batch, res, res, 3], d)
 }
 
-fn run_case(model: &'static str, q: &QGraph, res: usize, batch: usize) -> Case {
+fn run_case(
+    model: &'static str,
+    quant_mode: QuantMode,
+    q: &QGraph,
+    res: usize,
+    batch: usize,
+) -> Case {
     let mut rng = Rng::seeded(9 + batch as u64);
     let x = random_input(&mut rng, batch, res);
     let qin = QTensor::quantize(&x, q.input_params);
 
-    let unprepared = bench(&format!("{model} batch={batch} unprepared"), 5, || {
+    let tag = quant_mode.label();
+    let unprepared = bench(&format!("{model} [{tag}] batch={batch} unprepared"), 5, || {
         std::hint::black_box(q.run_q(&qin));
     });
 
@@ -70,45 +85,47 @@ fn run_case(model: &'static str, q: &QGraph, res: usize, batch: usize) -> Case {
     let mut state = ExecState::new();
     // Warm-up so the steady state (reused buffers) is what gets measured.
     plan.run_q(&qin, &mut state);
-    let prepared = bench(&format!("{model} batch={batch} prepared"), 5, || {
+    let prepared = bench(&format!("{model} [{tag}] batch={batch} prepared"), 5, || {
         std::hint::black_box(plan.run_q(&qin, &mut state).data.len());
     });
 
     // The two paths must agree bit-for-bit or the numbers mean nothing.
     let want = q.run_q(&qin);
     let got = plan.run_q(&qin, &mut state);
-    assert_eq!(want.data.data(), got.data.data(), "{model} prepared path diverged");
+    assert_eq!(want.data.data(), got.data.data(), "{model} [{tag}] prepared path diverged");
 
-    Case { model, batch, unprepared, prepared }
+    Case { model, quant_mode, batch, unprepared, prepared }
 }
 
 fn main() {
-    println!("== end-to-end graph inference: prepared vs unprepared ==\n");
-
-    // The conv-dominated demo graph (papernet: conv/dw/pw stack + GAP + FC).
-    let demo = demo_artifact("demo", 1, 16, 3).graph;
-    // MobileNet dm=0.25 at 32px: the deeper serving-shaped workload.
-    let mn = {
-        let g = mobilenet(0.25, 16, false, 7);
-        let mut rng = Rng::seeded(7);
-        let calib = vec![random_input(&mut rng, 2, 32)];
-        let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
-        q
-    };
+    println!("== end-to-end graph inference: prepared vs unprepared, both quant modes ==\n");
 
     let mut cases = Vec::new();
-    for &batch in &[1usize, 8] {
-        cases.push(run_case("papernet_demo", &demo, 16, batch));
-    }
-    for &batch in &[1usize, 4] {
-        cases.push(run_case("mobilenet_dm025", &mn, 32, batch));
+    for mode in [QuantMode::PerTensor, QuantMode::PerChannel] {
+        // The conv-dominated demo graph (papernet: conv/dw/pw stack + GAP + FC).
+        let demo = demo_artifact_with_mode("demo", 1, 16, 3, mode).graph;
+        // MobileNet dm=0.25 at 32px: the deeper serving-shaped workload.
+        let mn = {
+            let g = mobilenet(0.25, 16, false, 7);
+            let mut rng = Rng::seeded(7);
+            let calib = vec![random_input(&mut rng, 2, 32)];
+            let (_, q) = quantize_graph(&g, &calib, QuantizeOptions { mode, ..Default::default() });
+            q
+        };
+        for &batch in &[1usize, 8] {
+            cases.push(run_case("papernet_demo", mode, &demo, 16, batch));
+        }
+        for &batch in &[1usize, 4] {
+            cases.push(run_case("mobilenet_dm025", mode, &mn, 32, batch));
+        }
     }
 
     println!();
     for c in &cases {
         println!(
-            "{:<18} batch={}  unprepared {:>9.1} ops/s  prepared {:>9.1} ops/s  speedup {:.2}x",
+            "{:<18} {:<12} batch={}  unprepared {:>9.1} ops/s  prepared {:>9.1} ops/s  speedup {:.2}x",
             c.model,
+            c.quant_mode.label(),
             c.batch,
             c.ops(&c.unprepared),
             c.ops(&c.prepared),
@@ -116,8 +133,14 @@ fn main() {
         );
     }
 
-    let demo_single = cases.iter().find(|c| c.model == "papernet_demo" && c.batch == 1).unwrap();
-    let demo_batched = cases.iter().find(|c| c.model == "papernet_demo" && c.batch == 8).unwrap();
+    let find = |model: &str, batch: usize| {
+        cases
+            .iter()
+            .find(|c| c.model == model && c.batch == batch && c.quant_mode == QuantMode::PerTensor)
+            .unwrap()
+    };
+    let demo_single = find("papernet_demo", 1);
+    let demo_batched = find("papernet_demo", 8);
     let json = format!(
         "{{\n  \"bench\": \"graph_inference\",\n  \"smoke\": {},\n  \"cases\": [\n{}\n  ],\n  \"demo_speedup_single\": {:.3},\n  \"demo_speedup_batched\": {:.3}\n}}\n",
         smoke_mode(),

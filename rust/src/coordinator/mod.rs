@@ -119,11 +119,39 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// Maximum time the head-of-line request may wait for co-riders.
     pub max_delay: Duration,
+    /// GEMM output positions (`OH·OW` of the dominant conv layer) one
+    /// example contributes to the GEMM's `N = batch·OH·OW` dimension.
+    /// When set (> 1), full batches are capped at the largest size whose
+    /// `N` lands on a multiple of the kernel's `NR` tile width, so no GEMM
+    /// in the model pays a ragged tail column block on every full batch
+    /// (see `rust/src/gemm/kernel.rs`). 0/1 disables the preference.
+    pub positions_hint: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 8, max_delay: Duration::from_millis(2) }
+        Self { max_batch: 8, max_delay: Duration::from_millis(2), positions_hint: 1 }
+    }
+}
+
+impl BatchPolicy {
+    /// The batch size full batches actually flush at: the largest
+    /// `b ≤ max_batch` with `b · positions_hint` a multiple of `NR`, or
+    /// `max_batch` when no such size exists (then alignment is
+    /// unreachable and capping would only shrink batches for nothing).
+    /// Deadline flushes still send whatever has accumulated.
+    pub fn effective_max_batch(&self) -> usize {
+        if self.positions_hint <= 1 {
+            // No geometry hint: the preference is disabled (capping on a
+            // hint of 1 would shrink batches whenever max_batch >= NR for
+            // no modeled benefit).
+            return self.max_batch;
+        }
+        let nr = crate::gemm::kernel::NR;
+        (1..=self.max_batch)
+            .rev()
+            .find(|b| (b * self.positions_hint) % nr == 0)
+            .unwrap_or(self.max_batch)
     }
 }
 
@@ -179,12 +207,13 @@ impl Coordinator {
         };
 
         // Batcher: pull the head request, then co-batch whatever arrives
-        // within max_delay, up to max_batch.
+        // within max_delay, up to the NR-aligned effective max batch.
         let batcher = std::thread::spawn(move || {
+            let flush_at = policy.effective_max_batch();
             while let Ok(head) = req_rx.recv() {
                 let deadline = Instant::now() + policy.max_delay;
                 let mut batch = vec![head];
-                while batch.len() < policy.max_batch {
+                while batch.len() < flush_at {
                     let now = Instant::now();
                     if now >= deadline {
                         break;
@@ -380,9 +409,10 @@ impl MultiCoordinator {
         let metrics: Arc<Mutex<HashMap<String, Metrics>>> = Arc::new(Mutex::new(HashMap::new()));
 
         // Batcher: groups are keyed by model name, so a batch can only ever
-        // hold one model's requests. Each group flushes when it reaches
-        // max_batch or its head request has waited max_delay.
+        // hold one model's requests. Each group flushes when it reaches the
+        // NR-aligned effective max batch or its head has waited max_delay.
         let batcher = std::thread::spawn(move || {
+            let flush_at = policy.effective_max_batch();
             let mut pending: HashMap<String, PendingGroup> = HashMap::new();
             let mut disconnected = false;
             while !disconnected || !pending.is_empty() {
@@ -391,7 +421,7 @@ impl MultiCoordinator {
                     .iter()
                     .filter(|(_, g)| {
                         disconnected
-                            || g.reqs.len() >= policy.max_batch
+                            || g.reqs.len() >= flush_at
                             || now.duration_since(g.since) >= policy.max_delay
                     })
                     .map(|(k, _)| k.clone())
@@ -601,7 +631,7 @@ mod tests {
 
     #[test]
     fn batching_fuses_bursts() {
-        let policy = BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(50) };
+        let policy = BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(50), ..Default::default() };
         let coord = Coordinator::start(tiny_quant_engine(), policy, 1);
         let client = coord.client();
         let receivers: Vec<_> = (0..8).map(|i| client.submit(image(i)).unwrap()).collect();
@@ -610,6 +640,50 @@ mod tests {
         // A synchronous burst of 8 with a generous window must produce at
         // least one multi-request batch.
         assert!(sizes.iter().any(|&s| s > 1), "sizes {sizes:?}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn effective_max_batch_prefers_nr_aligned_sizes() {
+        let nr = crate::gemm::kernel::NR;
+        // No hint (or hint 1 with max_batch < NR): no aligned size exists,
+        // fall back to max_batch — the pre-hint behavior.
+        let p = BatchPolicy::default();
+        assert_eq!(p.effective_max_batch(), p.max_batch);
+        // hint 4, NR 16: aligned sizes are multiples of 4; 10 → 8.
+        let p = BatchPolicy { max_batch: 10, positions_hint: 4, ..Default::default() };
+        assert_eq!(p.effective_max_batch(), 8);
+        // Already aligned max_batch is kept.
+        let p = BatchPolicy { max_batch: 12, positions_hint: 4, ..Default::default() };
+        assert_eq!(p.effective_max_batch(), 12);
+        // hint 0/1 disables the preference entirely, even above NR.
+        let p = BatchPolicy { max_batch: nr + 4, positions_hint: 1, ..Default::default() };
+        assert_eq!(p.effective_max_batch(), nr + 4);
+        let p = BatchPolicy { max_batch: nr + 4, positions_hint: 0, ..Default::default() };
+        assert_eq!(p.effective_max_batch(), nr + 4);
+        // hint larger than NR but sharing a factor: 24·2 = 48 = 3·16.
+        let p = BatchPolicy { max_batch: 3, positions_hint: 24, ..Default::default() };
+        assert_eq!(p.effective_max_batch(), 2);
+    }
+
+    #[test]
+    fn batcher_caps_full_batches_at_the_aligned_size() {
+        // positions_hint 4 with max_batch 10 → full batches flush at 8.
+        let policy = BatchPolicy {
+            max_batch: 10,
+            max_delay: Duration::from_millis(100),
+            positions_hint: 4,
+        };
+        let coord = Coordinator::start(tiny_quant_engine(), policy, 1);
+        let client = coord.client();
+        let receivers: Vec<_> = (0..16).map(|i| client.submit(image(i)).unwrap()).collect();
+        let sizes: Vec<usize> =
+            receivers.into_iter().map(|(_, rx)| rx.recv().unwrap().batch_size).collect();
+        assert!(
+            sizes.iter().all(|&s| s <= 8),
+            "full batches must cap at the NR-aligned size, got {sizes:?}"
+        );
+        assert!(sizes.iter().any(|&s| s > 1), "burst should co-batch, got {sizes:?}");
         coord.shutdown();
     }
 

@@ -286,7 +286,11 @@ mod tests {
         let g = QGemm::new(m, k, n, lhs_p.zero_point, rhs_p.zero_point);
         let stage = OutputStage {
             bias: vec![],
-            multiplier: gemm_multiplier(lhs_p.scale, rhs_p.scale, out_p.scale),
+            multiplier: output::Requant::PerTensor(gemm_multiplier(
+                lhs_p.scale,
+                rhs_p.scale,
+                out_p.scale,
+            )),
             out_zero: out_p.zero_point,
             clamp_min: 0,
             clamp_max: 255,

@@ -9,13 +9,78 @@
 //!    so it adds directly onto the accumulator.
 //! 2. **Down-scale** — fixed-point multiplication by the normalized
 //!    multiplier `M0` plus a correctly-rounding right shift (eq. 6).
+//!    With per-channel weight scales ([`Requant::PerChannel`]) the
+//!    multiplier varies per output row; the apply loops hoist the row's
+//!    multiplier out of the column loop, so the vectorizable inner loop is
+//!    identical in both modes.
 //! 3. **Saturating cast + clamp** — saturate to `[0, 255]`, then clamp to
 //!    the activation's sub-interval. The paper notes trained models learn to
 //!    use the whole interval so the clamp usually degenerates into the
 //!    saturating cast itself.
 
-use crate::quant::QuantizedMultiplier;
+use crate::quant::{QuantizedMultiplier, WeightQuant};
 
+/// The requantization multiplier(s) of one GEMM output: one `M = S1·S2/S3`
+/// for the whole layer (eq. 5, the paper's scheme) or one per output row
+/// (per-channel weight scales, Krishnamoorthi 1806.08342).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Requant {
+    /// One normalized multiplier for every row.
+    PerTensor(QuantizedMultiplier),
+    /// `multipliers[row]` for row = output channel; length must equal the
+    /// GEMM's `M`.
+    PerChannel(Vec<QuantizedMultiplier>),
+}
+
+impl From<QuantizedMultiplier> for Requant {
+    fn from(m: QuantizedMultiplier) -> Self {
+        Requant::PerTensor(m)
+    }
+}
+
+impl Requant {
+    /// Build the stage multiplier(s) for a layer whose weights are
+    /// quantized as `wq`, with per-tensor input/output activation scales
+    /// (eq. 5 per row: `M_i = S_w(i)·S_in/S_out`). `rows` is the layer's
+    /// output-channel count; per-channel scale vectors must match it.
+    pub fn for_weights(wq: &WeightQuant, in_scale: f64, out_scale: f64, rows: usize) -> Self {
+        match wq {
+            WeightQuant::PerTensor(p) => Requant::PerTensor(QuantizedMultiplier::from_f64(
+                p.scale * in_scale / out_scale,
+            )),
+            WeightQuant::PerChannel(c) => {
+                assert_eq!(
+                    c.channels(),
+                    rows,
+                    "per-channel scale count must equal output channels"
+                );
+                Requant::PerChannel(
+                    c.scales
+                        .iter()
+                        .map(|&s| QuantizedMultiplier::from_f64(s * in_scale / out_scale))
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    /// The multiplier applied to output row `row`.
+    #[inline]
+    pub fn for_row(&self, row: usize) -> QuantizedMultiplier {
+        match self {
+            Requant::PerTensor(m) => *m,
+            Requant::PerChannel(v) => v[row],
+        }
+    }
+
+    /// Whether the variant is consistent with an `m`-row output.
+    pub fn rows_valid(&self, m: usize) -> bool {
+        match self {
+            Requant::PerTensor(_) => true,
+            Requant::PerChannel(v) => v.len() == m,
+        }
+    }
+}
 
 /// Fused bias + requantization + activation stage applied to the int32
 /// accumulators of one GEMM (rows = output channels).
@@ -24,8 +89,9 @@ pub struct OutputStage {
     /// Per-row (output-channel) int32 bias, already quantized per eq. 11.
     /// Empty means no bias.
     pub bias: Vec<i32>,
-    /// The normalized requantization multiplier `M = S1·S2/S3` (eq. 5–6).
-    pub multiplier: QuantizedMultiplier,
+    /// The normalized requantization multiplier(s) `M = S1·S2/S3`
+    /// (eq. 5–6), per-tensor or per-row.
+    pub multiplier: Requant,
     /// Output zero-point `Z3`.
     pub out_zero: i32,
     /// Fused activation clamp lower bound (quantized units).
@@ -37,7 +103,13 @@ pub struct OutputStage {
 impl OutputStage {
     /// Identity-ish stage used in tests: no bias, multiplier M, full clamp.
     pub fn bare(multiplier: QuantizedMultiplier, out_zero: i32) -> Self {
-        Self { bias: vec![], multiplier, out_zero, clamp_min: 0, clamp_max: 255 }
+        Self {
+            bias: vec![],
+            multiplier: Requant::PerTensor(multiplier),
+            out_zero,
+            clamp_min: 0,
+            clamp_max: 255,
+        }
     }
 
     /// Apply the pipeline to row-major `m×n` accumulators, writing uint8.
@@ -45,24 +117,32 @@ impl OutputStage {
         assert_eq!(acc.len(), m * n);
         assert_eq!(out.len(), m * n);
         assert!(self.bias.is_empty() || self.bias.len() == m, "bias is per output row");
+        assert!(self.multiplier.rows_valid(m), "one multiplier per output row");
         assert!(self.clamp_min <= self.clamp_max);
         for i in 0..m {
+            let mult = self.multiplier.for_row(i);
             let b = if self.bias.is_empty() { 0 } else { self.bias[i] };
             let src = &acc[i * n..(i + 1) * n];
             let dst = &mut out[i * n..(i + 1) * n];
             for (o, &a) in dst.iter_mut().zip(src) {
-                *o = self.requantize_one(a.wrapping_add(b));
+                *o = self.requantize_with(mult, a.wrapping_add(b));
             }
         }
     }
 
-    /// Requantize a single biased accumulator value.
+    /// Requantize one biased accumulator with an already-resolved row
+    /// multiplier (the hot inner-loop body, row lookup hoisted).
     #[inline]
-    pub fn requantize_one(&self, acc: i32) -> u8 {
-        let scaled = self.multiplier.apply(acc);
-        let q = scaled.saturating_add(self.out_zero);
+    pub(crate) fn requantize_with(&self, mult: QuantizedMultiplier, acc: i32) -> u8 {
+        let q = mult.apply(acc).saturating_add(self.out_zero);
         // Saturating cast to uint8, then the fused activation clamp.
         (q.clamp(0, 255) as u8).clamp(self.clamp_min, self.clamp_max)
+    }
+
+    /// Requantize a single biased accumulator value of output row `row`.
+    #[inline]
+    pub fn requantize_one(&self, row: usize, acc: i32) -> u8 {
+        self.requantize_with(self.multiplier.for_row(row), acc)
     }
 
     /// Apply to an i32 slice producing i32 requantized values without the
@@ -70,11 +150,13 @@ impl OutputStage {
     /// values (e.g. the softmax input recentering).
     pub fn requantize_i32(&self, acc: &[i32], m: usize, out: &mut [i32]) {
         assert_eq!(acc.len(), out.len());
+        assert!(self.multiplier.rows_valid(m), "one multiplier per output row");
         let n = if m == 0 { 0 } else { acc.len() / m };
         for i in 0..m {
+            let mult = self.multiplier.for_row(i);
             let b = if self.bias.is_empty() { 0 } else { self.bias[i] };
             for idx in i * n..(i + 1) * n {
-                out[idx] = self.multiplier.apply(acc[idx].wrapping_add(b)).saturating_add(self.out_zero);
+                out[idx] = mult.apply(acc[idx].wrapping_add(b)).saturating_add(self.out_zero);
             }
         }
     }
@@ -131,7 +213,7 @@ impl FusedActivation {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{QuantizedMultiplier, QuantParams};
+    use crate::quant::{QuantParams, QuantizedMultiplier};
 
     #[test]
     fn pipeline_matches_real_arithmetic() {
@@ -139,7 +221,13 @@ mod tests {
         // computation within 1 LSB.
         let (sw, si, so) = (0.02, 0.05, 0.25);
         let mult = QuantizedMultiplier::from_f64(sw * si / so);
-        let stage = OutputStage { bias: vec![100, -50], multiplier: mult, out_zero: 30, clamp_min: 0, clamp_max: 255 };
+        let stage = OutputStage {
+            bias: vec![100, -50],
+            multiplier: Requant::PerTensor(mult),
+            out_zero: 30,
+            clamp_min: 0,
+            clamp_max: 255,
+        };
         let acc = vec![10_000, -2_000, 1_000_000, 0, 123_456, -123_456];
         let mut out = vec![0u8; 6];
         stage.apply(&acc, 2, 3, &mut out);
@@ -155,10 +243,69 @@ mod tests {
     }
 
     #[test]
+    fn per_channel_multipliers_are_row_indexed() {
+        // Two rows with multipliers differing by 10x: identical accumulators
+        // must requantize to values differing by ~10x.
+        let stage = OutputStage {
+            bias: vec![],
+            multiplier: Requant::PerChannel(vec![
+                QuantizedMultiplier::from_f64(0.1),
+                QuantizedMultiplier::from_f64(0.01),
+            ]),
+            out_zero: 0,
+            clamp_min: 0,
+            clamp_max: 255,
+        };
+        let acc = vec![1000, 2000, 1000, 2000];
+        let mut out = vec![0u8; 4];
+        stage.apply(&acc, 2, 2, &mut out);
+        assert_eq!(out, vec![100, 200, 10, 20]);
+        assert_eq!(stage.requantize_one(0, 1000), 100);
+        assert_eq!(stage.requantize_one(1, 1000), 10);
+    }
+
+    #[test]
+    fn per_channel_with_equal_scales_matches_per_tensor() {
+        let m = QuantizedMultiplier::from_f64(0.0371);
+        let pt = OutputStage {
+            bias: vec![5, -5, 0],
+            multiplier: Requant::PerTensor(m),
+            out_zero: 17,
+            clamp_min: 3,
+            clamp_max: 250,
+        };
+        let pc = OutputStage { multiplier: Requant::PerChannel(vec![m; 3]), ..pt.clone() };
+        let acc: Vec<i32> = (0..12).map(|i| i * 977 - 4000).collect();
+        let (mut a, mut b) = (vec![0u8; 12], vec![0u8; 12]);
+        pt.apply(&acc, 3, 4, &mut a);
+        pc.apply(&acc, 3, 4, &mut b);
+        assert_eq!(a, b);
+        let (mut wa, mut wb) = (vec![0i32; 12], vec![0i32; 12]);
+        pt.requantize_i32(&acc, 3, &mut wa);
+        pc.requantize_i32(&acc, 3, &mut wb);
+        assert_eq!(wa, wb);
+    }
+
+    #[test]
+    #[should_panic(expected = "one multiplier per output row")]
+    fn per_channel_row_count_mismatch_panics() {
+        let stage = OutputStage {
+            bias: vec![],
+            multiplier: Requant::PerChannel(vec![QuantizedMultiplier::from_f64(0.1); 2]),
+            out_zero: 0,
+            clamp_min: 0,
+            clamp_max: 255,
+        };
+        let acc = vec![0i32; 9];
+        let mut out = vec![0u8; 9];
+        stage.apply(&acc, 3, 3, &mut out);
+    }
+
+    #[test]
     fn saturating_cast_bounds() {
         let stage = OutputStage::bare(QuantizedMultiplier::from_f64(0.9999), 0);
-        assert_eq!(stage.requantize_one(i32::MAX), 255);
-        assert_eq!(stage.requantize_one(i32::MIN), 0);
+        assert_eq!(stage.requantize_one(0, i32::MAX), 255);
+        assert_eq!(stage.requantize_one(0, i32::MIN), 0);
     }
 
     #[test]
@@ -188,7 +335,7 @@ mod tests {
     fn bias_is_per_row() {
         let stage = OutputStage {
             bias: vec![1000, 0],
-            multiplier: QuantizedMultiplier::from_f64(0.01),
+            multiplier: Requant::PerTensor(QuantizedMultiplier::from_f64(0.01)),
             out_zero: 0,
             clamp_min: 0,
             clamp_max: 255,
@@ -203,7 +350,7 @@ mod tests {
     fn requantize_i32_matches_u8_path_in_range() {
         let stage = OutputStage {
             bias: vec![7],
-            multiplier: QuantizedMultiplier::from_f64(0.125),
+            multiplier: Requant::PerTensor(QuantizedMultiplier::from_f64(0.125)),
             out_zero: 5,
             clamp_min: 0,
             clamp_max: 255,

@@ -124,7 +124,7 @@ mod tests {
         let rhs = pseudo(6, k * n);
         let stage = OutputStage {
             bias: (0..m as i32).map(|i| i * 100 - 200).collect(),
-            multiplier: QuantizedMultiplier::from_f64(0.003),
+            multiplier: QuantizedMultiplier::from_f64(0.003).into(),
             out_zero: 17,
             clamp_min: 3,
             clamp_max: 250,
@@ -146,7 +146,11 @@ mod tests {
         let rhs = pseudo(8, k * n);
         let stage = OutputStage {
             bias: (0..m as i32).map(|i| 50 - i * 13).collect(),
-            multiplier: QuantizedMultiplier::from_f64(0.0017),
+            multiplier: super::output::Requant::PerChannel(
+                (0..m)
+                    .map(|i| QuantizedMultiplier::from_f64(0.0017 * 1.3f64.powi(i as i32 % 5)))
+                    .collect(),
+            ),
             out_zero: 9,
             clamp_min: 0,
             clamp_max: 255,

@@ -222,9 +222,10 @@ impl PreparedGemm {
         let bias = &self.stage.bias;
         for (i, seg) in segs.iter_mut().enumerate() {
             assert_eq!(seg.len(), nn, "ragged output segments");
+            let mult = self.stage.multiplier.for_row(i);
             let b = if bias.is_empty() { 0 } else { bias[i] };
             for (o, &a) in seg.iter_mut().zip(&acc[i * nn..(i + 1) * nn]) {
-                *o = self.stage.requantize_one(a.wrapping_add(b));
+                *o = self.stage.requantize_with(mult, a.wrapping_add(b));
             }
         }
     }
@@ -534,10 +535,26 @@ mod tests {
     fn demo_stage(m: usize) -> OutputStage {
         OutputStage {
             bias: (0..m as i32).map(|i| i * 37 - 100).collect(),
-            multiplier: QuantizedMultiplier::from_f64(0.0041),
+            multiplier: super::output::Requant::PerTensor(QuantizedMultiplier::from_f64(0.0041)),
             out_zero: 13,
             clamp_min: 2,
             clamp_max: 251,
+        }
+    }
+
+    /// Per-row multipliers spanning a wide range — exercises the
+    /// per-channel stage through the packed/strip paths.
+    fn per_channel_stage(m: usize) -> OutputStage {
+        OutputStage {
+            bias: (0..m as i32).map(|i| i * 11 - 40).collect(),
+            multiplier: super::output::Requant::PerChannel(
+                (0..m)
+                    .map(|i| QuantizedMultiplier::from_f64(0.0008 * 1.7f64.powi(i as i32 % 7)))
+                    .collect(),
+            ),
+            out_zero: 9,
+            clamp_min: 0,
+            clamp_max: 255,
         }
     }
 
@@ -610,6 +627,38 @@ mod tests {
                 let mut got = vec![0i32; m * n];
                 plan.accumulate(n, &rhs, &mut got, &mut Scratch::new());
                 assert_eq!(want, got, "{kern:?} ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn per_channel_stage_bit_identical_prepared_vs_unprepared_and_strips() {
+        for &(m, k, n) in &AWKWARD {
+            let lhs = pseudo(m as u64 * 13 + k as u64, m * k, 1);
+            let rhs = pseudo(n as u64 * 19 + k as u64, k * n, 0);
+            let g = QGemm::new(m, k, n, 77, 201);
+            let stage = per_channel_stage(m);
+            for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+                let mut want = vec![0u8; m * n];
+                g.run(kern, &lhs, &rhs, &stage, &mut want);
+                let plan = PreparedGemm::from_qgemm(&g, kern, &lhs, stage.clone());
+                let mut got = vec![0u8; m * n];
+                plan.run(n, &rhs, &mut got, &mut Scratch::new());
+                assert_eq!(want, got, "{kern:?} ({m},{k},{n}) per-channel");
+                // Strip execution must index multipliers by absolute row.
+                let mut strip = vec![0u8; m * n];
+                let split = (n / 2).max(1).min(n);
+                for (n0, n1) in [(0usize, split), (split, n)] {
+                    let mut segs: Vec<&mut [u8]> = Vec::with_capacity(m);
+                    let mut rest = &mut strip[..];
+                    for _ in 0..m {
+                        let (row, tail) = rest.split_at_mut(n);
+                        rest = tail;
+                        segs.push(&mut row[n0..n1]);
+                    }
+                    plan.run_strip(&rhs, n, n0, &mut segs, &mut Scratch::new());
+                }
+                assert_eq!(want, strip, "{kern:?} ({m},{k},{n}) per-channel strips");
             }
         }
     }

@@ -240,6 +240,28 @@ pub fn papernet_random(num_classes: usize, act: FusedActivation, seed: u64) -> F
     g
 }
 
+/// PaperNet with per-channel-heterogeneous depthwise ranges: each depthwise
+/// channel's weights scaled by a different power of 3, mimicking an extreme
+/// BN fold (eq. 14) — the synth workload per-channel quantization
+/// (Krishnamoorthi 1806.08342) exists for. Used by the quant-mode accuracy
+/// harness and the converter tests.
+pub fn papernet_heterogeneous_dw(num_classes: usize, seed: u64) -> FloatGraph {
+    let mut g = papernet_random(num_classes, FusedActivation::Relu6, seed);
+    for node in &mut g.nodes {
+        if let FloatOp::Depthwise(d) = &mut node.op {
+            let c = d.weights.dim(3);
+            let wd = d.weights.data_mut();
+            for (i, w) in wd.iter_mut().enumerate() {
+                // 256x spread: the smallest channels fall below one
+                // per-tensor quantization step and get wiped, while
+                // per-channel scales keep them intact.
+                *w *= 0.03 * 4f32.powi(((i % c) % 5) as i32);
+            }
+        }
+    }
+    g
+}
+
 /// PaperNet from *folded* trained parameters exported by the L2 side
 /// (`aot.py` exports `<layer>/w` and `<layer>/b` with BN already folded per
 /// eq. 14, which is exactly what inference needs — fig. C.6).

@@ -9,10 +9,14 @@
 
 pub mod builders;
 
-use crate::nn::activations::{logistic_f32, qlogistic, qsoftmax, softmax_f32};
+use crate::nn::activations::{
+    logistic_f32, qlogistic, qlogistic_into, qsoftmax, qsoftmax_into, softmax_f32,
+};
 use crate::nn::conv::{Conv2d, PreparedConv2d, QConv2d};
 use crate::nn::depthwise::{DepthwiseConv2d, PreparedDepthwiseConv2d, QDepthwiseConv2d};
-use crate::nn::elementwise::{add_f32, concat_f32, qadd, qadd_into, qconcat, qconcat_into};
+use crate::nn::elementwise::{
+    add_f32, concat_f32, qadd, qadd_into, qconcat, qconcat_into_indexed,
+};
 use crate::nn::fc::{FullyConnected, PreparedFullyConnected, QFullyConnected};
 use crate::nn::pool::{
     avg_pool_f32, global_avg_pool_f32, max_pool_f32, qavg_pool, qavg_pool_into,
@@ -541,9 +545,9 @@ pub struct PreparedGraph {
 /// Per-worker mutable execution state: the layer scratch arena plus
 /// reusable per-node output tensors (and a reusable quantized-input slot).
 /// After a warm-up run at a given input shape, [`PreparedGraph::run_q`]
-/// performs **zero heap allocations** (enforced by `rust/tests/alloc.rs`)
-/// — except on graphs containing Concat (a short-lived operand-ref `Vec`)
-/// or Softmax/Logistic (which fall back to the allocating ops).
+/// performs **zero heap allocations** across every op — including Concat
+/// (operands resolved by index, no operand-ref `Vec`) and the fixed-point
+/// Softmax/Logistic `_into` variants — enforced by `rust/tests/alloc.rs`.
 #[derive(Clone, Debug, Default)]
 pub struct ExecState {
     scratch: LayerScratch,
@@ -598,13 +602,17 @@ impl PreparedGraph {
                     qadd_into(x, fetch(other), *out_params, dst)
                 }
                 PreparedOp::Concat { others, out_params } => {
-                    let mut all: Vec<&QTensor> = Vec::with_capacity(others.len() + 1);
-                    all.push(x);
-                    all.extend(others.iter().map(&fetch));
-                    qconcat_into(&all, *out_params, dst);
+                    // Operands resolved by index straight from the node
+                    // slots: no gather Vec, so concat stays zero-alloc.
+                    qconcat_into_indexed(
+                        others.len() + 1,
+                        |i| if i == 0 { x } else { fetch(&others[i - 1]) },
+                        *out_params,
+                        dst,
+                    );
                 }
-                PreparedOp::Softmax => *dst = qsoftmax(x),
-                PreparedOp::Logistic => *dst = qlogistic(x),
+                PreparedOp::Softmax => qsoftmax_into(x, dst, &mut state.scratch),
+                PreparedOp::Logistic => qlogistic_into(x, dst),
             }
         }
         &state.outs[self.nodes.len() - 1]

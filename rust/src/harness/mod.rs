@@ -21,7 +21,7 @@ use crate::nn::depthwise::DepthwiseConv2d;
 use crate::nn::fc::FullyConnected;
 use crate::nn::{FusedActivation, Padding};
 use crate::quant::EmaRange;
-use crate::quantize::{convert, quantize_graph, Calibration, QuantizeOptions};
+use crate::quantize::{convert, quantize_graph, Calibration, QuantMode, QuantizeOptions};
 use crate::tensor::Tensor;
 use crate::train::{Knobs, Trainer};
 use anyhow::{anyhow, Context, Result};
@@ -73,7 +73,7 @@ pub fn quickstart(artifacts: &Path) -> Result<()> {
     let g = QGemm::new(m, k, n, z1, z2);
     let stage = OutputStage {
         bias,
-        multiplier: QuantizedMultiplier { m0: mult[0] as i32, shift: -(mult[1] as i32) },
+        multiplier: QuantizedMultiplier { m0: mult[0] as i32, shift: -(mult[1] as i32) }.into(),
         out_zero: z3,
         clamp_min: 0,
         clamp_max: 255,
@@ -402,7 +402,7 @@ pub fn serve(
             )?)),
         ),
     ] {
-        let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(2) };
+        let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(2), ..Default::default() };
         let coord = Coordinator::start(engine, policy, workers);
         let client = coord.client();
         let start = Instant::now();
@@ -428,6 +428,18 @@ pub fn serve(
 /// `iaoi export` and the serving demos work on a fresh checkout; different
 /// seeds give genuinely different weights (useful for hot-swap demos).
 pub fn demo_artifact(name: &str, version: u32, classes: usize, seed: u64) -> ModelArtifact {
+    demo_artifact_with_mode(name, version, classes, seed, QuantMode::PerTensor)
+}
+
+/// [`demo_artifact`] with an explicit weight-quantization granularity
+/// (`iaoi export --quant-mode per-channel` and the quant-mode benches).
+pub fn demo_artifact_with_mode(
+    name: &str,
+    version: u32,
+    classes: usize,
+    seed: u64,
+    mode: QuantMode,
+) -> ModelArtifact {
     let float_model = papernet_random(classes, FusedActivation::Relu6, seed);
     let mut rng = crate::data::Rng::seeded(seed ^ 0xca11b);
     let calib: Vec<Tensor<f32>> = (0..3)
@@ -439,14 +451,15 @@ pub fn demo_artifact(name: &str, version: u32, classes: usize, seed: u64) -> Mod
             Tensor::from_vec(&[2, 16, 16, 3], d)
         })
         .collect();
-    let (_, q) = quantize_graph(&float_model, &calib, QuantizeOptions::default());
+    let (_, q) = quantize_graph(&float_model, &calib, QuantizeOptions { mode, ..Default::default() });
     ModelArtifact::new(name, version, [16, 16, 3], q)
 }
 
 /// `iaoi export`: serialize a quantized model to a `.iaoiq` artifact.
 /// With `trained = Some((artifacts, model))` the QAT-trained checkpoint is
 /// converted (Algorithm 1 step 4, using the learned ranges); otherwise the
-/// self-contained PTQ demo model is exported.
+/// self-contained PTQ demo model is exported. `mode` picks per-tensor or
+/// per-channel weight quantization for conv/depthwise layers.
 pub fn export_model(
     out: &Path,
     name: &str,
@@ -454,6 +467,7 @@ pub fn export_model(
     classes: usize,
     seed: u64,
     trained: Option<(&Path, &Path)>,
+    mode: QuantMode,
 ) -> Result<()> {
     let artifact = match trained {
         Some((artifacts, model_path)) => {
@@ -464,7 +478,7 @@ pub fn export_model(
                 &model.ranges,
                 &spec.export_keys,
                 FusedActivation::Relu6,
-                QuantizeOptions::default(),
+                QuantizeOptions { mode, ..Default::default() },
             )?;
             ModelArtifact::new(
                 name,
@@ -473,7 +487,7 @@ pub fn export_model(
                 graph,
             )
         }
-        None => demo_artifact(name, version, classes, seed),
+        None => demo_artifact_with_mode(name, version, classes, seed, mode),
     };
     if let Some(parent) = out.parent() {
         if !parent.as_os_str().is_empty() {
@@ -514,7 +528,7 @@ pub fn serve_registry(
             entry.source
         );
     }
-    let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(2) };
+    let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(2), ..Default::default() };
     let coord = MultiCoordinator::start(registry.clone(), policy, workers);
     let client = coord.client();
     // Deterministic random inputs matched to each model's exact [H, W, C] —
@@ -563,7 +577,8 @@ pub fn run_table(id: &str, fast: bool) -> Result<()> {
         "4.6" => detection::table_4_6(fast),
         "4.7" => tables::table_4_7(fast),
         "4.8" => tables::table_4_8(fast),
-        other => Err(anyhow!("unknown table {other} (4.1-4.8)")),
+        "quant-modes" => tables::table_quant_modes(fast),
+        other => Err(anyhow!("unknown table {other} (4.1-4.8, quant-modes)")),
     }
 }
 
@@ -608,7 +623,7 @@ pub fn train_and_eval(
         QuantizeOptions {
             weight_bits: knobs.weight_bits,
             activation_bits: knobs.act_bits,
-            kernel: Kernel::default(),
+            ..Default::default()
         },
     )?;
     let ds = ClassificationSet::new(spec.resolution, spec.num_classes, seed);

@@ -168,7 +168,7 @@ fn run_with_recall(
             crate::quantize::QuantizeOptions {
                 weight_bits: knobs.weight_bits,
                 activation_bits: knobs.act_bits,
-                kernel: crate::gemm::Kernel::default(),
+                ..Default::default()
             },
         )?;
         let a1 = accuracy(&mut |x| g.run(x), &ds, batches, spec.batch);
@@ -242,7 +242,7 @@ fn bit_grid(fast: bool, metric_topk: usize, title: &str) -> Result<()> {
                 crate::quantize::QuantizeOptions {
                     weight_bits: wb,
                     activation_bits: ab,
-                    kernel: crate::gemm::Kernel::default(),
+                    ..Default::default()
                 },
             )?;
             let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 3);
@@ -274,6 +274,101 @@ pub fn table_4_8(fast: bool) -> Result<()> {
         2,
         "Table 4.8 — relative recall@2 vs float, by weight x activation bit depth (age-precision substitute)",
     )
+}
+
+/// Per-tensor vs per-channel PTQ quality on the synth depthwise model
+/// (PaperNet with heterogeneous depthwise channel ranges — the BN-fold
+/// failure mode of Krishnamoorthi 1806.08342). The model is PTQ'd from
+/// builder weights, so label accuracy is chance for every engine; the
+/// table therefore reports *fidelity to the float engine* (argmax
+/// agreement on the synth eval split) plus the mean logit error — the
+/// quantization-quality measures that do not require a training run.
+pub struct QuantModeReport {
+    /// Fraction of eval examples whose argmax matches the float engine.
+    pub per_tensor_fidelity: f32,
+    pub per_channel_fidelity: f32,
+    /// Mean |logit difference| vs the float engine.
+    pub per_tensor_logit_err: f64,
+    pub per_channel_logit_err: f64,
+}
+
+/// Compute the quant-mode comparison (shared by the table printer and the
+/// acceptance test in `rust/tests/integration.rs`).
+pub fn quant_mode_report(fast: bool) -> QuantModeReport {
+    use crate::graph::builders;
+    use crate::quantize::{quantize_graph, QuantMode, QuantizeOptions};
+    use crate::tensor::Tensor;
+
+    let g = builders::papernet_heterogeneous_dw(16, 5);
+    let ds = ClassificationSet::new(16, 16, 5);
+    let batch = 16usize;
+    let calib: Vec<Tensor<f32>> =
+        (0..3).map(|b| ds.batch(0, (b * batch) as u64, batch).0).collect();
+    let (folded, q_pt) = quantize_graph(&g, &calib, QuantizeOptions::default());
+    let (_, q_pc) = quantize_graph(
+        &g,
+        &calib,
+        QuantizeOptions { mode: QuantMode::PerChannel, ..Default::default() },
+    );
+
+    let batches = eval_batches(fast);
+    let (mut agree_pt, mut agree_pc, mut total) = (0usize, 0usize, 0usize);
+    let (mut err_pt, mut err_pc, mut elems) = (0f64, 0f64, 0usize);
+    for b in 0..batches {
+        let (x, _) = ds.batch(1, (b * batch) as u64, batch);
+        let want = folded.run(&x);
+        let got_pt = q_pt.run(&x);
+        let got_pc = q_pc.run(&x);
+        let classes = want.dim(1);
+        let argmax = |t: &Tensor<f32>, row: usize| {
+            (0..classes)
+                .max_by(|&i, &j| {
+                    t.data()[row * classes + i].partial_cmp(&t.data()[row * classes + j]).unwrap()
+                })
+                .unwrap()
+        };
+        for row in 0..batch {
+            agree_pt += usize::from(argmax(&want, row) == argmax(&got_pt, row));
+            agree_pc += usize::from(argmax(&want, row) == argmax(&got_pc, row));
+            total += 1;
+        }
+        for ((w, p), c) in want.data().iter().zip(got_pt.data()).zip(got_pc.data()) {
+            err_pt += f64::from((w - p).abs());
+            err_pc += f64::from((w - c).abs());
+            elems += 1;
+        }
+    }
+    QuantModeReport {
+        per_tensor_fidelity: agree_pt as f32 / total as f32,
+        per_channel_fidelity: agree_pc as f32 / total as f32,
+        per_tensor_logit_err: err_pt / elems as f64,
+        per_channel_logit_err: err_pc / elems as f64,
+    }
+}
+
+/// `iaoi bench --table quant-modes` — per-tensor vs per-channel weight
+/// quantization on the synth depthwise model. Unlike the 4.x tables this
+/// needs no training run, so it works without the AOT artifacts.
+pub fn table_quant_modes(fast: bool) -> Result<()> {
+    let r = quant_mode_report(fast);
+    println!("# Quant modes — per-tensor vs per-channel on the synth depthwise model");
+    println!("| weight quantization | float-argmax fidelity | mean logit err |");
+    println!("|---|---|---|");
+    println!(
+        "| per-tensor (paper §2.1) | {:.1}% | {:.4} |",
+        r.per_tensor_fidelity * 100.0,
+        r.per_tensor_logit_err
+    );
+    println!(
+        "| per-channel (1806.08342) | {:.1}% | {:.4} |",
+        r.per_channel_fidelity * 100.0,
+        r.per_channel_logit_err
+    );
+    println!(
+        "\nper-channel improves mean logit error by {:.1}% on heterogeneous depthwise channels",
+        (1.0 - r.per_channel_logit_err / r.per_tensor_logit_err.max(1e-12)) * 100.0
+    );
+    Ok(())
 }
 
 /// Used by `eval` when a saved model exists; re-exported for tests.

@@ -8,10 +8,11 @@
 //! iaoi eval       --model FILE [--artifacts DIR] [--batches N]
 //! iaoi export     --out FILE [--name N] [--model-version V] [--classes C]
 //!                 [--seed S] [--model FILE --artifacts DIR]
+//!                 [--quant-mode per-tensor|per-channel]
 //! iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B]
 //!                 [--workers W]
 //! iaoi quickstart [--artifacts DIR]
-//! iaoi bench      --table 4.1|4.2|4.3|4.4|4.5|4.6|4.7|4.8 | --fig 1.1c|4.1|4.2|4.3 [--fast]
+//! iaoi bench      --table 4.1|...|4.8|quant-modes | --fig 1.1c|4.1|4.2|4.3 [--fast]
 //! ```
 //!
 //! `export` writes a `.iaoiq` quantized-model artifact; `serve --models`
@@ -73,10 +74,10 @@ fn print_usage() {
          \n\
          usage:\n  iaoi train      --steps N [--artifacts DIR] [--out FILE] [--seed S]\n  \
          iaoi eval       --model FILE [--artifacts DIR] [--batches N]\n  \
-         iaoi export     --out FILE [--name N] [--model-version V] [--classes C] [--seed S] [--model FILE --artifacts DIR]\n  \
+         iaoi export     --out FILE [--name N] [--model-version V] [--classes C] [--seed S] [--model FILE --artifacts DIR] [--quant-mode per-tensor|per-channel]\n  \
          iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B] [--workers W]\n  \
          iaoi quickstart [--artifacts DIR]\n  \
-         iaoi bench      --table <id> | --fig <id> [--fast]\n"
+         iaoi bench      --table <id> | --fig <id> [--fast]  (tables 4.1-4.8, quant-modes)\n"
     );
 }
 
@@ -96,9 +97,11 @@ fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
     harness::eval(&artifacts, &model, batches)
 }
 
-/// `iaoi export`: write a `.iaoiq` quantized-model artifact. By default a
-/// self-contained PTQ demo model is exported; `--model` (with
+/// `iaoi export`: write a `.iaoiq` quantized-model artifact (format v2;
+/// v1 readers cannot decode the output, this build still reads v1 files).
+/// By default a self-contained PTQ demo model is exported; `--model` (with
 /// `--artifacts`) converts a QAT-trained checkpoint instead.
+/// `--quant-mode per-channel` exports per-channel conv/depthwise weights.
 fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
     let out = PathBuf::from(get(flags, "out", "models/demo.iaoiq"));
     let name = get(flags, "name", "demo");
@@ -107,6 +110,9 @@ fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
     let seed: u64 = get(flags, "seed", "0").parse()?;
     let artifacts = PathBuf::from(get(flags, "artifacts", "artifacts"));
     let trained = flags.get("model").map(PathBuf::from);
+    let mode_label = get(flags, "quant-mode", "per-tensor");
+    let mode = iaoi::quantize::QuantMode::from_label(mode_label)
+        .ok_or_else(|| anyhow!("unknown --quant-mode {mode_label} (per-tensor | per-channel)"))?;
     harness::export_model(
         &out,
         name,
@@ -114,6 +120,7 @@ fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
         classes,
         seed,
         trained.as_deref().map(|m| (artifacts.as_path(), m)),
+        mode,
     )
 }
 

@@ -6,11 +6,11 @@
 //! lossless, so inference from a loaded graph is **bit-identical** to the
 //! in-memory original.
 //!
-//! ## Layout (version 1, all little-endian)
+//! ## Layout (version 2, all little-endian)
 //!
 //! ```text
 //! magic        b"IAOQ"                                    4 bytes
-//! version      u32                                        currently 1
+//! version      u32                                        currently 2
 //! name         u16 len + utf-8                            registry model name
 //! model_ver    u32                                        registry version
 //! input_shape  u32 × 3                                    H, W, C of one example
@@ -28,12 +28,22 @@
 //!
 //! Op codes: 0 conv2d, 1 depthwise, 2 fully-connected, 3 avg-pool,
 //! 4 max-pool, 5 global-avg-pool, 6 add, 7 concat, 8 softmax, 9 logistic.
-//! Conv-like payloads carry the uint8 weight tensor, per-array
-//! [`QuantParams`], the int32 bias vector (eq. 11), stride/padding, the
-//! fused-activation code, and the normalized requantization multiplier
-//! `2^shift · M0` (eq. 5–6). The multiplier is redundant with the three
-//! scales; the loader recomputes it and rejects the file on mismatch, so
-//! bit-rot in any of the four fields is caught at load time.
+//! Conv-like payloads carry the uint8 weight tensor, the weight
+//! quantization, the int32 bias vector (eq. 11), stride/padding, the
+//! fused-activation code, and the normalized requantization multiplier(s)
+//! `2^shift · M0` (eq. 5–6). The multipliers are redundant with the stored
+//! scales; the loader recomputes and rejects the file on mismatch, so
+//! bit-rot in any of the fields is caught at load time.
+//!
+//! **Version 2** (append-only): the conv-like weight-quantization field
+//! starts with a mode byte — 0 = per-tensor followed by the classic
+//! 20-byte [`QuantParams`], 1 = per-channel followed by `zero_point`,
+//! `qmin`, `qmax` (i32 each) and a count-prefixed f64 scale vector
+//! (one scale per output channel, Krishnamoorthi 1806.08342) — and the
+//! trailing multiplier block carries one `(m0, shift)` pair per channel.
+//! Version 1 artifacts (no mode byte, always per-tensor, single
+//! multiplier) still decode bit-identically; `rust/tests/model_format.rs`
+//! pins a golden v1 blob.
 //!
 //! Decoding is fully bounds-checked ([`wire::Reader`]) and never panics or
 //! over-allocates on corrupt input; every failure is a structured
@@ -47,7 +57,7 @@ use crate::nn::conv::QConv2d;
 use crate::nn::depthwise::QDepthwiseConv2d;
 use crate::nn::fc::QFullyConnected;
 use crate::nn::{FusedActivation, Padding};
-use crate::quant::{QuantParams, QuantizedMultiplier};
+use crate::quant::{ChannelQuantParams, QuantParams, QuantizedMultiplier, WeightQuant};
 use anyhow::{Context, Result};
 use std::fmt;
 use std::path::Path;
@@ -55,12 +65,17 @@ use wire::{Reader, Writer};
 
 /// File magic.
 pub const MAGIC: &[u8; 4] = b"IAOQ";
-/// Current format version.
-pub const FORMAT_VERSION: u32 = 1;
+/// Current format version (v2 = per-channel weight scales; v1 artifacts
+/// still load).
+pub const FORMAT_VERSION: u32 = 2;
 /// Canonical file extension (without the dot).
 pub const EXTENSION: &str = "iaoiq";
 
 const INPUT_REF: u32 = u32::MAX;
+
+/// Weight-quantization mode byte (v2+, append-only).
+const WQ_PER_TENSOR: u8 = 0;
+const WQ_PER_CHANNEL: u8 = 1;
 
 const OP_CONV: u8 = 0;
 const OP_DEPTHWISE: u8 = 1;
@@ -184,20 +199,86 @@ impl ModelArtifact {
     }
 }
 
-/// The eq. 5 requantization multiplier of a conv-like node, normalized for
-/// integer application. `None` when a scale combination is degenerate
+/// The eq. 5 requantization multiplier(s) of a conv-like node, normalized
+/// for integer application: one per output channel in per-channel mode,
+/// one total otherwise. `None` when a scale combination is degenerate
 /// (possible only in corrupt files; valid converters always produce
 /// positive finite scales).
-fn requant_multiplier(
-    weight: &QuantParams,
+fn requant_multipliers(
+    weight: &WeightQuant,
     input: &QuantParams,
     output: &QuantParams,
-) -> Option<QuantizedMultiplier> {
-    let m = weight.scale * input.scale / output.scale;
-    if m.is_finite() && m > 0.0 {
-        Some(QuantizedMultiplier::from_f64(m))
-    } else {
-        None
+) -> Option<Vec<QuantizedMultiplier>> {
+    let rows = weight.channels().unwrap_or(1);
+    (0..rows)
+        .map(|ch| {
+            let m = weight.scale(ch) * input.scale / output.scale;
+            if m.is_finite() && m > 0.0 {
+                Some(QuantizedMultiplier::from_f64(m))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Encode a conv-like node's weight quantization (v2 layout: mode byte then
+/// the mode-specific parameter block).
+fn encode_weight_quant(w: &mut Writer, wq: &WeightQuant) {
+    match wq {
+        WeightQuant::PerTensor(p) => {
+            w.put_u8(WQ_PER_TENSOR);
+            w.put_quant_params(p);
+        }
+        WeightQuant::PerChannel(c) => {
+            w.put_u8(WQ_PER_CHANNEL);
+            w.put_i32(c.zero_point);
+            w.put_i32(c.qmin);
+            w.put_i32(c.qmax);
+            w.put_f64_slice(&c.scales);
+        }
+    }
+}
+
+/// Decode a conv-like node's weight quantization. Version 1 files carry a
+/// bare per-tensor [`QuantParams`] with no mode byte.
+fn decode_weight_quant(
+    r: &mut Reader,
+    node: usize,
+    version: u32,
+) -> Result<WeightQuant, DecodeError> {
+    if version < 2 {
+        return Ok(WeightQuant::PerTensor(decode_quant_params(r, node, "weight quant params")?));
+    }
+    let mode = r.u8()?;
+    match mode {
+        WQ_PER_TENSOR => {
+            Ok(WeightQuant::PerTensor(decode_quant_params(r, node, "weight quant params")?))
+        }
+        WQ_PER_CHANNEL => {
+            let zero_point = r.i32()?;
+            let qmin = r.i32()?;
+            let qmax = r.i32()?;
+            let scales = r.f64_slice()?;
+            let c = ChannelQuantParams { scales, zero_point, qmin, qmax };
+            if c.wire_valid() {
+                Ok(WeightQuant::PerChannel(c))
+            } else {
+                Err(DecodeError::InvalidField { node, what: "per-channel weight quant params" })
+            }
+        }
+        other => Err(DecodeError::BadEnum { what: "weight quant mode", value: other }),
+    }
+}
+
+/// Encode the trailing multiplier block: one `(m0, shift)` pair per output
+/// channel (a single pair in per-tensor mode).
+fn encode_multipliers(w: &mut Writer, wq: &WeightQuant, input: &QuantParams, output: &QuantParams) {
+    let ms = requant_multipliers(wq, input, output)
+        .expect("valid graph has finite requant multipliers");
+    for m in ms {
+        w.put_i32(m.m0);
+        w.put_i32(m.shift);
     }
 }
 
@@ -240,45 +321,36 @@ fn encode_op(w: &mut Writer, op: &QOp) {
         QOp::Conv(c) => {
             w.put_u8(OP_CONV);
             w.put_u8_tensor(&c.weights);
-            w.put_quant_params(&c.weight_params);
+            encode_weight_quant(w, &c.weight_quant);
             w.put_i32_slice(&c.bias);
             w.put_u32(c.stride as u32);
             w.put_u8(c.padding.code());
             w.put_quant_params(&c.input_params);
             w.put_quant_params(&c.output_params);
             w.put_u8(c.activation.code());
-            let m = requant_multiplier(&c.weight_params, &c.input_params, &c.output_params)
-                .expect("valid graph has finite requant multiplier");
-            w.put_i32(m.m0);
-            w.put_i32(m.shift);
+            encode_multipliers(w, &c.weight_quant, &c.input_params, &c.output_params);
         }
         QOp::Depthwise(d) => {
             w.put_u8(OP_DEPTHWISE);
             w.put_u8_tensor(&d.weights);
-            w.put_quant_params(&d.weight_params);
+            encode_weight_quant(w, &d.weight_quant);
             w.put_i32_slice(&d.bias);
             w.put_u32(d.stride as u32);
             w.put_u8(d.padding.code());
             w.put_quant_params(&d.input_params);
             w.put_quant_params(&d.output_params);
             w.put_u8(d.activation.code());
-            let m = requant_multiplier(&d.weight_params, &d.input_params, &d.output_params)
-                .expect("valid graph has finite requant multiplier");
-            w.put_i32(m.m0);
-            w.put_i32(m.shift);
+            encode_multipliers(w, &d.weight_quant, &d.input_params, &d.output_params);
         }
         QOp::Fc(fc) => {
             w.put_u8(OP_FC);
             w.put_u8_tensor(&fc.weights);
-            w.put_quant_params(&fc.weight_params);
+            encode_weight_quant(w, &fc.weight_quant);
             w.put_i32_slice(&fc.bias);
             w.put_quant_params(&fc.input_params);
             w.put_quant_params(&fc.output_params);
             w.put_u8(fc.activation.code());
-            let m = requant_multiplier(&fc.weight_params, &fc.input_params, &fc.output_params)
-                .expect("valid graph has finite requant multiplier");
-            w.put_i32(m.m0);
-            w.put_i32(m.shift);
+            encode_multipliers(w, &fc.weight_quant, &fc.input_params, &fc.output_params);
         }
         QOp::AvgPool { kernel, stride, padding } => {
             w.put_u8(OP_AVG_POOL);
@@ -312,8 +384,9 @@ fn encode_op(w: &mut Writer, op: &QOp) {
     }
 }
 
-/// Decode the conv-like common tail: stride, padding, the three parameter
-/// sets, activation, and the integrity-checked multiplier.
+/// Decode the conv-like common tail: stride, padding, the activation-side
+/// parameter sets, activation, and the integrity-checked multiplier block
+/// (one `(m0, shift)` pair per output channel).
 struct ConvTail {
     stride: usize,
     padding: Padding,
@@ -325,7 +398,7 @@ struct ConvTail {
 fn decode_conv_tail(
     r: &mut Reader,
     node: usize,
-    weight_params: &QuantParams,
+    weight_quant: &WeightQuant,
     with_geometry: bool,
 ) -> Result<ConvTail, DecodeError> {
     let (stride, padding) = if with_geometry {
@@ -345,16 +418,33 @@ fn decode_conv_tail(
     let act_code = r.u8()?;
     let activation = FusedActivation::from_code(act_code)
         .ok_or(DecodeError::BadEnum { what: "activation", value: act_code })?;
-    let stored = QuantizedMultiplier { m0: r.i32()?, shift: r.i32()? };
-    let derived = requant_multiplier(weight_params, &input_params, &output_params)
+    let derived = requant_multipliers(weight_quant, &input_params, &output_params)
         .ok_or(DecodeError::InvalidField { node, what: "requant multiplier" })?;
-    if stored != derived {
-        return Err(DecodeError::MultiplierMismatch { node });
+    for d in derived {
+        let stored = QuantizedMultiplier { m0: r.i32()?, shift: r.i32()? };
+        if stored != d {
+            return Err(DecodeError::MultiplierMismatch { node });
+        }
     }
     Ok(ConvTail { stride, padding, input_params, output_params, activation })
 }
 
-fn decode_op(r: &mut Reader, node: usize) -> Result<QOp, DecodeError> {
+/// Per-channel scale vectors must be one-per-output-channel; `channels` is
+/// the op's channel dimension from the decoded weight tensor.
+fn check_weight_channels(
+    wq: &WeightQuant,
+    channels: usize,
+    node: usize,
+) -> Result<(), DecodeError> {
+    match wq.channels() {
+        Some(c) if c != channels => {
+            Err(DecodeError::InvalidField { node, what: "per-channel scale count" })
+        }
+        _ => Ok(()),
+    }
+}
+
+fn decode_op(r: &mut Reader, node: usize, version: u32) -> Result<QOp, DecodeError> {
     let code = r.u8()?;
     match code {
         OP_CONV => {
@@ -362,15 +452,16 @@ fn decode_op(r: &mut Reader, node: usize) -> Result<QOp, DecodeError> {
             if weights.rank() != 4 {
                 return Err(DecodeError::InvalidField { node, what: "conv weight rank" });
             }
-            let weight_params = decode_quant_params(r, node, "weight quant params")?;
+            let weight_quant = decode_weight_quant(r, node, version)?;
+            check_weight_channels(&weight_quant, weights.dim(0), node)?;
             let bias = r.i32_slice()?;
             if !bias.is_empty() && bias.len() != weights.dim(0) {
                 return Err(DecodeError::InvalidField { node, what: "conv bias length" });
             }
-            let tail = decode_conv_tail(r, node, &weight_params, true)?;
+            let tail = decode_conv_tail(r, node, &weight_quant, true)?;
             Ok(QOp::Conv(QConv2d {
                 weights,
-                weight_params,
+                weight_quant,
                 bias,
                 stride: tail.stride,
                 padding: tail.padding,
@@ -384,15 +475,16 @@ fn decode_op(r: &mut Reader, node: usize) -> Result<QOp, DecodeError> {
             if weights.rank() != 4 || weights.dim(0) != 1 {
                 return Err(DecodeError::InvalidField { node, what: "depthwise weight shape" });
             }
-            let weight_params = decode_quant_params(r, node, "weight quant params")?;
+            let weight_quant = decode_weight_quant(r, node, version)?;
+            check_weight_channels(&weight_quant, weights.dim(3), node)?;
             let bias = r.i32_slice()?;
             if !bias.is_empty() && bias.len() != weights.dim(3) {
                 return Err(DecodeError::InvalidField { node, what: "depthwise bias length" });
             }
-            let tail = decode_conv_tail(r, node, &weight_params, true)?;
+            let tail = decode_conv_tail(r, node, &weight_quant, true)?;
             Ok(QOp::Depthwise(QDepthwiseConv2d {
                 weights,
-                weight_params,
+                weight_quant,
                 bias,
                 stride: tail.stride,
                 padding: tail.padding,
@@ -406,15 +498,16 @@ fn decode_op(r: &mut Reader, node: usize) -> Result<QOp, DecodeError> {
             if weights.rank() != 2 {
                 return Err(DecodeError::InvalidField { node, what: "fc weight rank" });
             }
-            let weight_params = decode_quant_params(r, node, "weight quant params")?;
+            let weight_quant = decode_weight_quant(r, node, version)?;
+            check_weight_channels(&weight_quant, weights.dim(0), node)?;
             let bias = r.i32_slice()?;
             if !bias.is_empty() && bias.len() != weights.dim(0) {
                 return Err(DecodeError::InvalidField { node, what: "fc bias length" });
             }
-            let tail = decode_conv_tail(r, node, &weight_params, false)?;
+            let tail = decode_conv_tail(r, node, &weight_quant, false)?;
             Ok(QOp::Fc(QFullyConnected {
                 weights,
-                weight_params,
+                weight_quant,
                 bias,
                 input_params: tail.input_params,
                 output_params: tail.output_params,
@@ -525,7 +618,7 @@ pub fn load(bytes: &[u8]) -> Result<ModelArtifact, DecodeError> {
     for idx in 0..node_count {
         let node_name = r.str()?;
         let input = decode_ref(r.u32()?, idx)?;
-        let op = decode_op(&mut r, idx)?;
+        let op = decode_op(&mut r, idx, version)?;
         nodes.push(QNode { name: node_name, input, op });
     }
     r.finish()?;
@@ -557,10 +650,10 @@ mod tests {
     use super::*;
     use crate::data::Rng;
     use crate::graph::builders::papernet_random;
-    use crate::quantize::{quantize_graph, QuantizeOptions};
+    use crate::quantize::{quantize_graph, QuantMode, QuantizeOptions};
     use crate::tensor::Tensor;
 
-    fn demo_artifact(seed: u64) -> ModelArtifact {
+    fn demo_artifact_mode(seed: u64, mode: QuantMode) -> ModelArtifact {
         let g = papernet_random(8, FusedActivation::Relu6, seed);
         let mut rng = Rng::seeded(seed);
         let calib: Vec<Tensor<f32>> = (0..2)
@@ -572,8 +665,12 @@ mod tests {
                 Tensor::from_vec(&[1, 16, 16, 3], d)
             })
             .collect();
-        let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
+        let (_, q) = quantize_graph(&g, &calib, QuantizeOptions { mode, ..Default::default() });
         ModelArtifact::new("demo", 3, [16, 16, 3], q)
+    }
+
+    fn demo_artifact(seed: u64) -> ModelArtifact {
+        demo_artifact_mode(seed, QuantMode::PerTensor)
     }
 
     #[test]
@@ -625,6 +722,46 @@ mod tests {
             Err(DecodeError::MultiplierMismatch { .. }) => {}
             other => panic!("expected MultiplierMismatch, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn per_channel_artifact_roundtrips_and_checks_integrity() {
+        let art = demo_artifact_mode(29, QuantMode::PerChannel);
+        let bytes = save(&art);
+        let loaded = load(&bytes).expect("load per-channel artifact");
+        // Per-channel weight quantization survives the round trip exactly.
+        let mut saw_per_channel = false;
+        for (a, b) in art.graph.nodes.iter().zip(&loaded.graph.nodes) {
+            match (&a.op, &b.op) {
+                (QOp::Conv(x), QOp::Conv(y)) => {
+                    assert_eq!(x.weight_quant, y.weight_quant, "{}", a.name);
+                    saw_per_channel |= x.weight_quant.is_per_channel();
+                }
+                (QOp::Depthwise(x), QOp::Depthwise(y)) => {
+                    assert_eq!(x.weight_quant, y.weight_quant, "{}", a.name);
+                    saw_per_channel |= x.weight_quant.is_per_channel();
+                }
+                _ => {}
+            }
+        }
+        assert!(saw_per_channel, "converter should have produced per-channel nodes");
+        assert_eq!(save(&loaded), bytes, "deterministic re-encode");
+
+        // Corrupting one per-channel multiplier fires the integrity check.
+        // The first conv node's multiplier block sits right after its
+        // activation byte; flip a mantissa byte by scanning for the first
+        // difference a corrupted scale would produce — simplest robust
+        // probe: flip every byte and require no panic, and that at least
+        // one flip yields MultiplierMismatch.
+        let mut saw_mismatch = false;
+        for pos in (0..bytes.len()).step_by(3) {
+            let mut corrupt = bytes.clone();
+            corrupt[pos] ^= 0x20;
+            if let Err(DecodeError::MultiplierMismatch { .. }) = load(&corrupt) {
+                saw_mismatch = true;
+            }
+        }
+        assert!(saw_mismatch, "flipping multiplier bytes must be detected");
     }
 
     #[test]

@@ -42,6 +42,19 @@ impl Writer {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `u32` count-prefixed f64 vector (per-channel scale vectors).
+    pub fn put_f64_slice(&mut self, v: &[f64]) {
+        assert!(v.len() <= u32::MAX as usize);
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+
     pub fn put_bytes(&mut self, v: &[u8]) {
         self.buf.extend_from_slice(v);
     }
@@ -130,6 +143,22 @@ impl<'a> Reader<'a> {
 
     pub fn i32(&mut self) -> Result<i32, DecodeError> {
         Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Count-prefixed f64 vector; the count is bounded against the bytes
+    /// actually remaining before anything is allocated.
+    pub fn f64_slice(&mut self) -> Result<Vec<f64>, DecodeError> {
+        let count = self.u32()? as usize;
+        let bytes = count.checked_mul(8).unwrap_or(usize::MAX);
+        if bytes > self.remaining() {
+            return Err(DecodeError::Truncated { offset: self.pos, needed: bytes });
+        }
+        let raw = self.take(bytes)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
     pub fn str(&mut self) -> Result<String, DecodeError> {
@@ -248,6 +277,23 @@ mod tests {
         let bytes = w.into_bytes();
         let mut r = Reader::new(&bytes);
         assert_eq!(r.i32_slice().unwrap(), v);
+    }
+
+    #[test]
+    fn f64_slice_roundtrip_and_bounded() {
+        let v = vec![0.5, -1.25, 1e-300, f64::MAX];
+        let mut w = Writer::new();
+        w.put_f64_slice(&v);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.f64_slice().unwrap(), v);
+        r.finish().unwrap();
+
+        // A huge declared count must fail fast without allocating.
+        let mut w = Writer::new();
+        w.put_u32(u32::MAX);
+        let bytes = w.into_bytes();
+        assert!(matches!(Reader::new(&bytes).f64_slice(), Err(DecodeError::Truncated { .. })));
     }
 
     #[test]

@@ -39,17 +39,29 @@ fn input_multiplier(scale: f64) -> QuantizedMultiplier {
 /// fixed-point, `exp` each diff with the gemmlowp kernel, then renormalize
 /// with an integer division — every step integer-only.
 pub fn qsoftmax(input: &QTensor) -> QTensor {
+    let mut out = QTensor::default();
+    qsoftmax_into(input, &mut out, &mut crate::nn::LayerScratch::new());
+    out
+}
+
+/// [`qsoftmax`] into a reusable output, with the per-row exponential
+/// buffer drawn from `scratch.acc64` — the prepared path's zero-alloc
+/// steady state.
+pub fn qsoftmax_into(input: &QTensor, dst: &mut QTensor, scratch: &mut crate::nn::LayerScratch) {
     let rank = input.data.rank();
     let c = input.shape()[rank - 1];
     let rows: usize = input.shape()[..rank - 1].iter().product();
     let mult = input_multiplier(input.params.scale);
     let xd = input.data.data();
-    let mut out = vec![0u8; xd.len()];
+    dst.params = prob_output_params();
+    // Safe: the loop below writes every output element.
+    dst.data.reset_for_overwrite(input.shape());
+    let out = dst.data.data_mut();
+    let exps = crate::gemm::prepared::grow(&mut scratch.acc64, c);
     for r in 0..rows {
         let row = &xd[r * c..(r + 1) * c];
         let max_q = i32::from(*row.iter().max().expect("non-empty row"));
         // exp(S(q - max)) in Q0.31.
-        let mut exps = vec![0i64; c];
         let mut sum: i64 = 0;
         for (i, &q) in row.iter().enumerate() {
             let diff = i32::from(q) - max_q; // <= 0
@@ -64,28 +76,28 @@ pub fn qsoftmax(input: &QTensor) -> QTensor {
             out[r * c + i] = q.clamp(0, 255) as u8;
         }
     }
-    QTensor {
-        data: Tensor::from_vec(input.shape(), out),
-        params: prob_output_params(),
-    }
 }
 
 /// Quantized logistic (sigmoid) elementwise (App. A.1).
 pub fn qlogistic(input: &QTensor) -> QTensor {
+    let mut out = QTensor::default();
+    qlogistic_into(input, &mut out);
+    out
+}
+
+/// [`qlogistic`] into a reusable output (elementwise, no scratch needed).
+pub fn qlogistic_into(input: &QTensor, dst: &mut QTensor) {
     let mult = input_multiplier(input.params.scale);
     let z = input.params.zero_point;
-    let data: Vec<u8> = input
-        .data
-        .data()
-        .iter()
-        .map(|&q| {
-            let raw = mult.apply(i32::from(q) - z);
-            let p = fp_logistic(Fp::<INPUT_IB>::from_raw(raw));
-            // Q0.31 → [0, 256): divide by 2^23 with rounding.
-            rounding_div_by_pot(p.raw(), 23).clamp(0, 255) as u8
-        })
-        .collect();
-    QTensor { data: Tensor::from_vec(input.shape(), data), params: prob_output_params() }
+    dst.params = prob_output_params();
+    // Safe: the loop below writes every output element.
+    dst.data.reset_for_overwrite(input.shape());
+    for (o, &q) in dst.data.data_mut().iter_mut().zip(input.data.data()) {
+        let raw = mult.apply(i32::from(q) - z);
+        let p = fp_logistic(Fp::<INPUT_IB>::from_raw(raw));
+        // Q0.31 → [0, 256): divide by 2^23 with rounding.
+        *o = rounding_div_by_pot(p.raw(), 23).clamp(0, 255) as u8;
+    }
 }
 
 /// Quantized tanh elementwise (App. A.1).
@@ -182,6 +194,29 @@ mod tests {
         let out = qsoftmax(&q);
         let arg = out.data.data().iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
         assert_eq!(arg, 1);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ops_with_warm_buffers() {
+        let mut rng = Rng::seeded(93);
+        let p = QuantParams::from_min_max(-6.0, 6.0, 0, 255);
+        let mut scratch = crate::nn::LayerScratch::new();
+        let mut dst = QTensor::default();
+        for rows in [1usize, 4, 7] {
+            let mut xd = vec![0f32; rows * 9];
+            for v in xd.iter_mut() {
+                *v = rng.range_f32(-6.0, 6.0);
+            }
+            let q = QTensor::quantize(&Tensor::from_vec(&[rows, 9], xd), p);
+            let want = qsoftmax(&q);
+            qsoftmax_into(&q, &mut dst, &mut scratch);
+            assert_eq!(want.data, dst.data, "softmax rows={rows}");
+            assert_eq!(want.params, dst.params);
+            let want = qlogistic(&q);
+            qlogistic_into(&q, &mut dst);
+            assert_eq!(want.data, dst.data, "logistic rows={rows}");
+            assert_eq!(want.params, dst.params);
+        }
     }
 
     #[test]

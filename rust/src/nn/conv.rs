@@ -8,10 +8,11 @@
 //! requantize / clamp output pipeline applies per output channel, matching
 //! the fused-layer layout of figure 1.1a.
 
+use crate::gemm::output::Requant;
 use crate::gemm::prepared::grow;
 use crate::gemm::{output::OutputStage, Kernel, PreparedGemm, QGemm};
 use crate::nn::{FusedActivation, LayerScratch, Padding, QTensor};
-use crate::quant::{QuantParams, QuantizedMultiplier};
+use crate::quant::{QuantParams, WeightQuant};
 use crate::tensor::Tensor;
 
 /// A fused quantized convolution layer: uint8 in → uint8 out (fig. 1.1a).
@@ -19,7 +20,10 @@ use crate::tensor::Tensor;
 pub struct QConv2d {
     /// Weights, OHWI layout `[Cout, KH, KW, Cin]`, uint8 narrow range.
     pub weights: Tensor<u8>,
-    pub weight_params: QuantParams,
+    /// Weight quantization: per-tensor (§2.1) or per-output-channel scales
+    /// ([`WeightQuant::PerChannel`]) — either way one shared zero-point, so
+    /// the GEMM core below is identical in both modes.
+    pub weight_quant: WeightQuant,
     /// int32 bias quantized per eq. 11 (empty = no bias).
     pub bias: Vec<i32>,
     pub stride: usize,
@@ -32,10 +36,14 @@ pub struct QConv2d {
 }
 
 impl QConv2d {
-    /// Derived output stage (multiplier per eq. 5, clamp per activation).
+    /// Derived output stage (multiplier per eq. 5 — per output channel when
+    /// the weights carry per-channel scales; clamp per activation).
     pub fn output_stage(&self) -> OutputStage {
-        let multiplier = QuantizedMultiplier::from_f64(
-            self.weight_params.scale * self.input_params.scale / self.output_params.scale,
+        let multiplier = Requant::for_weights(
+            &self.weight_quant,
+            self.input_params.scale,
+            self.output_params.scale,
+            self.weights.dim(0),
         );
         let (clamp_min, clamp_max) = self
             .activation
@@ -73,7 +81,7 @@ impl QConv2d {
         let cols = im2col(x, kh, kw, self.stride, pad_h, pad_w, oh, ow, input.params.zero_point as u8);
         debug_assert_eq!(cols.len(), k * n);
 
-        let g = QGemm::new(cout, k, n, self.weight_params.zero_point, input.params.zero_point);
+        let g = QGemm::new(cout, k, n, self.weight_quant.zero_point(), input.params.zero_point);
         let stage = self.output_stage();
         let mut out_cm = vec![0u8; cout * n]; // [Cout][N] channel-major
         g.run(kern, self.weights.data(), &cols, &stage, &mut out_cm);
@@ -99,7 +107,7 @@ impl QConv2d {
             kern,
             cout,
             k,
-            self.weight_params.zero_point,
+            self.weight_quant.zero_point(),
             self.input_params.zero_point,
             self.weights.data(),
             self.output_stage(),
@@ -324,7 +332,7 @@ mod tests {
         let bias = bp.quantize_bias_slice(&fl.bias);
         QConv2d {
             weights,
-            weight_params: wp,
+            weight_quant: WeightQuant::PerTensor(wp),
             bias,
             stride: fl.stride,
             padding: fl.padding,
@@ -424,6 +432,99 @@ mod tests {
             plan.run_into(&qx, &mut got, &mut scratch);
             assert_eq!(want.data.data(), got.data.data(), "{kern:?} warm");
         }
+    }
+
+    #[test]
+    fn per_channel_with_uniform_scale_is_bit_identical_to_per_tensor() {
+        // Satellite property: a per-channel layer whose channels all share
+        // the per-tensor scale and zero-point must reproduce the per-tensor
+        // path bit for bit (same weights bytes, same multipliers).
+        use crate::quant::ChannelQuantParams;
+        let mut rng = Rng::seeded(133);
+        let fl = random_float_conv(&mut rng, 6, 3, 3, 4);
+        let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let pt = quantize_layer(&fl, ip, -4.0, 4.0);
+        let WeightQuant::PerTensor(wp) = pt.weight_quant.clone() else { unreachable!() };
+        let pc = QConv2d {
+            weight_quant: WeightQuant::PerChannel(ChannelQuantParams {
+                scales: vec![wp.scale; 6],
+                zero_point: wp.zero_point,
+                qmin: wp.qmin,
+                qmax: wp.qmax,
+            }),
+            ..pt.clone()
+        };
+        let mut xd = vec![0f32; 2 * 8 * 8 * 4];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let qx = QTensor::quantize(&Tensor::from_vec(&[2, 8, 8, 4], xd), ip);
+        let mut scratch = crate::nn::LayerScratch::new();
+        let mut got = QTensor::default();
+        for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+            let want = pt.run(&qx, kern);
+            let got_pc = pc.run(&qx, kern);
+            assert_eq!(want.data.data(), got_pc.data.data(), "{kern:?} unprepared");
+            pc.prepare(kern).run_into(&qx, &mut got, &mut scratch);
+            assert_eq!(want.data.data(), got.data.data(), "{kern:?} prepared");
+        }
+    }
+
+    #[test]
+    fn per_channel_conv_tracks_float_on_heterogeneous_channels() {
+        // Channels with 100x different magnitudes: per-channel scales keep
+        // every channel accurate where one shared scale cannot.
+        use crate::quant::{ChannelAxis, ChannelQuantParams};
+        let mut rng = Rng::seeded(134);
+        let mut fl = random_float_conv(&mut rng, 6, 3, 3, 4);
+        {
+            let cout = 6;
+            let per = fl.weights.len() / cout;
+            let wd = fl.weights.data_mut();
+            for o in 0..cout {
+                let gain = 0.05f32 * 3f32.powi(o as i32);
+                for t in 0..per {
+                    wd[o * per + t] *= gain;
+                }
+            }
+            for (o, b) in fl.bias.iter_mut().enumerate() {
+                *b *= 0.05 * 3f32.powi(o as i32);
+            }
+        }
+        let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let mut xd = vec![0f32; 2 * 8 * 8 * 4];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let x = Tensor::from_vec(&[2, 8, 8, 4], xd);
+        let want = fl.run(&x);
+        let (omin, omax) = want.min_max();
+        let op = QuantParams::from_min_max(f64::from(omin), f64::from(omax), 0, 255);
+
+        let cq = ChannelQuantParams::for_weights(fl.weights.data(), 6, ChannelAxis::Outer, 8);
+        let pc = QConv2d {
+            weights: Tensor::from_vec(
+                fl.weights.shape(),
+                cq.quantize_slice(fl.weights.data(), ChannelAxis::Outer),
+            ),
+            bias: cq.quantize_bias(&fl.bias, ip.scale),
+            weight_quant: WeightQuant::PerChannel(cq),
+            stride: fl.stride,
+            padding: fl.padding,
+            input_params: ip,
+            output_params: op,
+            activation: fl.activation,
+        };
+        let pt = quantize_layer(&fl, ip, omin, omax);
+        let qx = QTensor::quantize(&x, ip);
+        let pc_diff = want.max_abs_diff(&pc.run(&qx, Kernel::Int8Pairwise).dequantize());
+        let pt_diff = want.max_abs_diff(&pt.run(&qx, Kernel::Int8Pairwise).dequantize());
+        assert!(
+            pc_diff <= pt_diff + (op.scale * 0.5) as f32,
+            "per-channel ({pc_diff}) should not trail per-tensor ({pt_diff})"
+        );
+        // And it must still track the float layer within a few output LSBs.
+        assert!(pc_diff < (op.scale * 5.0) as f32 + 0.05, "pc diff {pc_diff}");
     }
 
     #[test]

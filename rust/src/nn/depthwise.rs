@@ -8,10 +8,10 @@
 //! of `(q_w − Z_w)(q_x − Z_x)`, int32 bias, fixed-point requantize,
 //! saturate, clamp.
 
-use crate::gemm::output::OutputStage;
+use crate::gemm::output::{OutputStage, Requant};
 use crate::gemm::prepared::grow;
 use crate::nn::{conv::apply_activation_f32, FusedActivation, LayerScratch, Padding, QTensor};
-use crate::quant::{QuantParams, QuantizedMultiplier};
+use crate::quant::{QuantParams, WeightQuant};
 use crate::tensor::Tensor;
 
 /// Fused quantized depthwise convolution (channel multiplier 1).
@@ -19,7 +19,10 @@ use crate::tensor::Tensor;
 pub struct QDepthwiseConv2d {
     /// Weights `[1, KH, KW, C]` (TFLite depthwise layout, multiplier 1).
     pub weights: Tensor<u8>,
-    pub weight_params: QuantParams,
+    /// Weight quantization; depthwise is where per-channel scales
+    /// ([`WeightQuant::PerChannel`], channel = innermost axis) recover the
+    /// most accuracy, since BN folding spreads channel ranges widely.
+    pub weight_quant: WeightQuant,
     /// Per-channel int32 bias (eq. 11), empty = none.
     pub bias: Vec<i32>,
     pub stride: usize,
@@ -31,8 +34,14 @@ pub struct QDepthwiseConv2d {
 
 impl QDepthwiseConv2d {
     fn stage(&self) -> OutputStage {
-        let multiplier = QuantizedMultiplier::from_f64(
-            self.weight_params.scale * self.input_params.scale / self.output_params.scale,
+        // Depthwise "rows" are the channels themselves: requantize_one is
+        // called with the channel index, so the per-channel multiplier
+        // vector is indexed exactly like the conv GEMM's output rows.
+        let multiplier = Requant::for_weights(
+            &self.weight_quant,
+            self.input_params.scale,
+            self.output_params.scale,
+            self.weights.dim(3),
         );
         let (clamp_min, clamp_max) = self
             .activation
@@ -53,7 +62,7 @@ impl QDepthwiseConv2d {
         assert_eq!(self.weights.dim(3), c, "depthwise channel mismatch");
         let (oh, pad_h) = self.padding.resolve(ih, kh, self.stride);
         let (ow, pad_w) = self.padding.resolve(iw, kw, self.stride);
-        let zw = self.weight_params.zero_point;
+        let zw = self.weight_quant.zero_point();
         let zx = self.input_params.zero_point;
         let stage = self.stage();
         let xd = x.data();
@@ -96,7 +105,7 @@ impl QDepthwiseConv2d {
                         }
                     }
                     for ch in 0..c {
-                        od[obase + ch] = stage.requantize_one(acc[ch]);
+                        od[obase + ch] = stage.requantize_one(ch, acc[ch]);
                     }
                 }
             }
@@ -108,7 +117,7 @@ impl QDepthwiseConv2d {
     /// built once. Depthwise has no GEMM, so "packing" is the `(q_w − Z_w)`
     /// recentre the unprepared path redoes every call.
     pub fn prepare(&self) -> PreparedDepthwiseConv2d {
-        let zw = self.weight_params.zero_point;
+        let zw = self.weight_quant.zero_point();
         PreparedDepthwiseConv2d {
             w_centered: self.weights.data().iter().map(|&w| i32::from(w) - zw).collect(),
             bias: self.bias.clone(),
@@ -194,7 +203,7 @@ impl PreparedDepthwiseConv2d {
                         }
                     }
                     for ch in 0..c {
-                        od[obase + ch] = self.stage.requantize_one(acc[ch]);
+                        od[obase + ch] = self.stage.requantize_one(ch, acc[ch]);
                     }
                 }
             }
@@ -270,7 +279,7 @@ mod tests {
         let bp = QuantParams::for_bias(&wp, &ip);
         let ql = QDepthwiseConv2d {
             weights: fl.weights.map(|v| wp.quantize(v) as u8),
-            weight_params: wp,
+            weight_quant: WeightQuant::PerTensor(wp),
             bias: bp.quantize_bias_slice(&fl.bias),
             stride,
             padding: Padding::Same,
@@ -279,6 +288,23 @@ mod tests {
             activation: act,
         };
         (fl, ql)
+    }
+
+    /// Per-channel twin of the layer built from the same float weights,
+    /// using the depthwise (innermost-channel) axis.
+    fn per_channel_twin(fl: &DepthwiseConv2d, ql: &QDepthwiseConv2d) -> QDepthwiseConv2d {
+        use crate::quant::{ChannelAxis, ChannelQuantParams};
+        let c = fl.weights.dim(3);
+        let cq = ChannelQuantParams::for_weights(fl.weights.data(), c, ChannelAxis::Inner, 8);
+        QDepthwiseConv2d {
+            weights: Tensor::from_vec(
+                fl.weights.shape(),
+                cq.quantize_slice(fl.weights.data(), ChannelAxis::Inner),
+            ),
+            bias: cq.quantize_bias(&fl.bias, ql.input_params.scale),
+            weight_quant: WeightQuant::PerChannel(cq),
+            ..ql.clone()
+        }
     }
 
     #[test]
@@ -321,6 +347,86 @@ mod tests {
     }
 
     #[test]
+    fn per_channel_with_uniform_scale_is_bit_identical_to_per_tensor() {
+        use crate::quant::ChannelQuantParams;
+        let mut rng = Rng::seeded(55);
+        let (_, pt) = make_pair(&mut rng, 5, 1, FusedActivation::None);
+        let WeightQuant::PerTensor(wp) = pt.weight_quant.clone() else { unreachable!() };
+        let pc = QDepthwiseConv2d {
+            weight_quant: WeightQuant::PerChannel(ChannelQuantParams {
+                scales: vec![wp.scale; 5],
+                zero_point: wp.zero_point,
+                qmin: wp.qmin,
+                qmax: wp.qmax,
+            }),
+            ..pt.clone()
+        };
+        let mut xd = vec![0f32; 7 * 7 * 5];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let qx = QTensor::quantize(&Tensor::from_vec(&[1, 7, 7, 5], xd), pt.input_params);
+        let want = pt.run(&qx);
+        assert_eq!(want.data.data(), pc.run(&qx).data.data(), "unprepared");
+        let mut got = QTensor::default();
+        pc.prepare().run_into(&qx, &mut got, &mut crate::nn::LayerScratch::new());
+        assert_eq!(want.data.data(), got.data.data(), "prepared");
+    }
+
+    #[test]
+    fn per_channel_recovers_heterogeneous_depthwise_channels() {
+        // Scale each channel's weights by a different power of 3 (the
+        // BN-fold γ/σ spread): one shared scale drowns the small channels;
+        // per-channel scales keep every channel accurate.
+        let mut rng = Rng::seeded(56);
+        let (mut fl, proto) = make_pair(&mut rng, 6, 1, FusedActivation::None);
+        {
+            let c = 6;
+            let wd = fl.weights.data_mut();
+            for (i, w) in wd.iter_mut().enumerate() {
+                *w *= 0.05 * 3f32.powi((i % c) as i32);
+            }
+            for (ch, b) in fl.bias.iter_mut().enumerate() {
+                *b *= 0.05 * 3f32.powi(ch as i32);
+            }
+        }
+        // Re-quantize per-tensor from the rescaled float weights; output
+        // range wide enough that neither mode saturates.
+        let ip = proto.input_params;
+        let wp = QuantParams::for_weights(fl.weights.data(), 8);
+        let bp = QuantParams::for_bias(&wp, &ip);
+        let pt = QDepthwiseConv2d {
+            weights: fl.weights.map(|v| wp.quantize(v) as u8),
+            weight_quant: WeightQuant::PerTensor(wp),
+            bias: bp.quantize_bias_slice(&fl.bias),
+            output_params: QuantParams::from_min_max(-40.0, 40.0, 0, 255),
+            ..proto.clone()
+        };
+        let pc = per_channel_twin(&fl, &pt);
+        let mut xd = vec![0f32; 8 * 8 * 6];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let x = Tensor::from_vec(&[1, 8, 8, 6], xd);
+        let want = fl.run(&x);
+        let qx = QTensor::quantize(&x, ip);
+        let mean_err = |got: &Tensor<f32>| -> f64 {
+            want.data()
+                .iter()
+                .zip(got.data())
+                .map(|(a, b)| f64::from((a - b).abs()))
+                .sum::<f64>()
+                / want.len() as f64
+        };
+        let pt_err = mean_err(&pt.run(&qx).dequantize());
+        let pc_err = mean_err(&pc.run(&qx).dequantize());
+        assert!(
+            pc_err < pt_err,
+            "per-channel ({pc_err}) must beat per-tensor ({pt_err}) on spread channels"
+        );
+    }
+
+    #[test]
     fn depthwise_channels_are_independent() {
         // Zeroing one channel's weights must zero only that channel's output
         // (up to the bias) — no cross-channel leakage.
@@ -330,9 +436,10 @@ mod tests {
         // Set channel-1 weights to the zero-point (= real 0).
         let c = 3;
         {
+            let zw = ql.weight_quant.zero_point() as u8;
             let wd = ql.weights.data_mut();
             for t in 0..9 {
-                wd[t * c + 1] = ql.weight_params.zero_point as u8;
+                wd[t * c + 1] = zw;
             }
         }
         let ip = ql.input_params;

@@ -60,35 +60,46 @@ pub fn qconcat(inputs: &[&QTensor], out_params: QuantParams) -> QTensor {
     out
 }
 
-/// [`qconcat`] into a reusable output. The destination's *data* allocation
-/// is reused; note the prepared graph executor still gathers its operand
-/// references into a short-lived `Vec` per call (see
-/// [`crate::graph::PreparedGraph`] docs).
+/// [`qconcat`] into a reusable output.
 pub fn qconcat_into(inputs: &[&QTensor], out_params: QuantParams, dst: &mut QTensor) {
-    assert!(!inputs.is_empty());
-    for t in inputs {
+    qconcat_into_indexed(inputs.len(), |i| inputs[i], out_params, dst);
+}
+
+/// [`qconcat_into`] with operands fetched by index instead of gathered into
+/// a slice: the prepared graph executor resolves each operand straight out
+/// of its node-output slots, so the concat path performs **zero heap
+/// allocations** in steady state (no short-lived operand-ref `Vec`; the
+/// output shape reuses the destination's shape buffer).
+pub fn qconcat_into_indexed<'a>(
+    count: usize,
+    get: impl Fn(usize) -> &'a QTensor,
+    out_params: QuantParams,
+    dst: &mut QTensor,
+) {
+    assert!(count > 0);
+    let first = get(0);
+    let rank = first.data.rank();
+    let mut c_total = 0usize;
+    for i in 0..count {
+        let t = get(i);
         assert_eq!(
             (t.params.scale, t.params.zero_point),
             (out_params.scale, out_params.zero_point),
             "concat requires identical quantization parameters on every operand (App. A.3)"
         );
-        assert_eq!(t.data.rank(), inputs[0].data.rank());
+        assert_eq!(t.data.rank(), rank);
+        assert_eq!(t.shape()[..rank - 1], first.shape()[..rank - 1], "leading dims must match");
+        c_total += t.shape()[rank - 1];
     }
-    let rank = inputs[0].data.rank();
-    let lead: usize = inputs[0].shape()[..rank - 1].iter().product();
-    for t in inputs {
-        assert_eq!(t.shape()[..rank - 1], inputs[0].shape()[..rank - 1], "leading dims must match");
-    }
-    let c_total: usize = inputs.iter().map(|t| t.shape()[rank - 1]).sum();
-    let mut shape = inputs[0].shape().to_vec();
-    shape[rank - 1] = c_total;
+    let lead: usize = first.shape()[..rank - 1].iter().product();
     dst.params = out_params;
     // Safe: every row copies its full span of c_total channels.
-    dst.data.reset_for_overwrite(&shape);
+    dst.data.reset_for_overwrite_last_dim(first.shape(), c_total);
     let data = dst.data.data_mut();
     for row in 0..lead {
         let mut off = 0;
-        for t in inputs {
+        for i in 0..count {
+            let t = get(i);
             let c = t.shape()[rank - 1];
             data[row * c_total + off..row * c_total + off + c]
                 .copy_from_slice(&t.data.data()[row * c..(row + 1) * c]);

@@ -2,10 +2,11 @@
 //! specified for exactly this op in TFLite, and it is the matmul of §2.2
 //! with `M = units`, `K = input features`, `N = batch`.
 
+use crate::gemm::output::Requant;
 use crate::gemm::prepared::grow;
 use crate::gemm::{output::OutputStage, Kernel, PreparedGemm, QGemm};
 use crate::nn::{conv::apply_activation_f32, FusedActivation, LayerScratch, QTensor};
-use crate::quant::{QuantParams, QuantizedMultiplier};
+use crate::quant::{QuantParams, WeightQuant};
 use crate::tensor::Tensor;
 
 /// Fused quantized fully-connected layer.
@@ -13,7 +14,9 @@ use crate::tensor::Tensor;
 pub struct QFullyConnected {
     /// Weights `[units, in_features]`, uint8 narrow range.
     pub weights: Tensor<u8>,
-    pub weight_params: QuantParams,
+    /// Weight quantization: per-tensor, or one scale per output unit (the
+    /// GEMM rows), same shared zero-point either way.
+    pub weight_quant: WeightQuant,
     pub bias: Vec<i32>,
     pub input_params: QuantParams,
     pub output_params: QuantParams,
@@ -21,10 +24,14 @@ pub struct QFullyConnected {
 }
 
 impl QFullyConnected {
-    /// Derived output stage (multiplier per eq. 5, clamp per activation).
+    /// Derived output stage (multiplier per eq. 5 — per output unit when
+    /// the weights carry per-channel scales; clamp per activation).
     pub fn output_stage(&self) -> OutputStage {
-        let multiplier = QuantizedMultiplier::from_f64(
-            self.weight_params.scale * self.input_params.scale / self.output_params.scale,
+        let multiplier = Requant::for_weights(
+            &self.weight_quant,
+            self.input_params.scale,
+            self.output_params.scale,
+            self.weights.dim(0),
         );
         let (clamp_min, clamp_max) = self
             .activation
@@ -47,7 +54,7 @@ impl QFullyConnected {
             kern,
             units,
             feat,
-            self.weight_params.zero_point,
+            self.weight_quant.zero_point(),
             self.input_params.zero_point,
             self.weights.data(),
             self.output_stage(),
@@ -77,7 +84,8 @@ impl QFullyConnected {
             }
         }
         let stage = self.output_stage();
-        let g = QGemm::new(units, feat, batch, self.weight_params.zero_point, self.input_params.zero_point);
+        let g =
+            QGemm::new(units, feat, batch, self.weight_quant.zero_point(), self.input_params.zero_point);
         let mut out_cm = vec![0u8; units * batch];
         g.run(kern, self.weights.data(), &rhs, &stage, &mut out_cm);
 
@@ -203,7 +211,7 @@ mod tests {
         let bp = QuantParams::for_bias(&wp, &ip);
         let ql = QFullyConnected {
             weights: fl.weights.map(|v| wp.quantize(v) as u8),
-            weight_params: wp,
+            weight_quant: WeightQuant::PerTensor(wp),
             bias: bp.quantize_bias_slice(&fl.bias),
             input_params: ip,
             output_params: QuantParams::from_min_max(f64::from(omin), f64::from(omax), 0, 255),
@@ -241,7 +249,7 @@ mod tests {
         let bias: Vec<f32> = (0..units).map(|_| rng.range_f32(-0.4, 0.4)).collect();
         let ql = QFullyConnected {
             weights: Tensor::from_vec(&[units, feat], wp.quantize_slice(&w)),
-            weight_params: wp,
+            weight_quant: WeightQuant::PerTensor(wp),
             bias: bp.quantize_bias_slice(&bias),
             input_params: ip,
             output_params: QuantParams::from_min_max(-3.0, 3.0, 0, 255),
@@ -264,6 +272,52 @@ mod tests {
     }
 
     #[test]
+    fn per_channel_with_uniform_scale_is_bit_identical_to_per_tensor() {
+        use crate::quant::ChannelQuantParams;
+        let mut rng = Rng::seeded(73);
+        let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let (units, feat) = (6, 23);
+        let mut w = vec![0f32; units * feat];
+        rng.fill_normal(&mut w, 0.3);
+        let wp = QuantParams::for_weights(&w, 8);
+        let pt = QFullyConnected {
+            weights: Tensor::from_vec(&[units, feat], wp.quantize_slice(&w)),
+            weight_quant: WeightQuant::PerTensor(wp),
+            bias: QuantParams::for_bias(&wp, &ip)
+                .quantize_bias_slice(&(0..units).map(|_| rng.range_f32(-0.4, 0.4)).collect::<Vec<_>>()),
+            input_params: ip,
+            output_params: QuantParams::from_min_max(-3.0, 3.0, 0, 255),
+            activation: FusedActivation::Relu,
+        };
+        let pc = QFullyConnected {
+            weight_quant: WeightQuant::PerChannel(ChannelQuantParams {
+                scales: vec![wp.scale; units],
+                zero_point: wp.zero_point,
+                qmin: wp.qmin,
+                qmax: wp.qmax,
+            }),
+            ..pt.clone()
+        };
+        let mut scratch = crate::nn::LayerScratch::new();
+        let mut got = QTensor::default();
+        for batch in [1usize, 5] {
+            let mut xd = vec![0f32; batch * feat];
+            rng.fill_normal(&mut xd, 0.5);
+            let qx = QTensor::quantize(&Tensor::from_vec(&[batch, feat], xd), ip);
+            for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+                let want = pt.run(&qx, kern);
+                assert_eq!(
+                    want.data.data(),
+                    pc.run(&qx, kern).data.data(),
+                    "{kern:?} batch={batch} unprepared"
+                );
+                pc.prepare(kern).run_into(&qx, &mut got, &mut scratch);
+                assert_eq!(want.data.data(), got.data.data(), "{kern:?} batch={batch} prepared");
+            }
+        }
+    }
+
+    #[test]
     fn batch_rows_are_independent() {
         let mut rng = Rng::seeded(61);
         let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
@@ -273,7 +327,7 @@ mod tests {
         let wq = Tensor::from_vec(&[4, 8], wp.quantize_slice(&w));
         let ql = QFullyConnected {
             weights: wq,
-            weight_params: wp,
+            weight_quant: WeightQuant::PerTensor(wp),
             bias: vec![],
             input_params: ip,
             output_params: QuantParams::from_min_max(-3.0, 3.0, 0, 255),

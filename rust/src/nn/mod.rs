@@ -94,6 +94,8 @@ pub struct LayerScratch {
     pub staging: Vec<u8>,
     /// Per-channel int32 accumulators (depthwise).
     pub acc32: Vec<i32>,
+    /// Per-row Q0.31 exponentials (fixed-point softmax).
+    pub acc64: Vec<i64>,
 }
 
 impl LayerScratch {

@@ -1,0 +1,347 @@
+//! Per-channel weight quantization (Krishnamoorthi 1806.08342 §3.1).
+//!
+//! The paper quantizes each weight array with a single `(S, Z)` pair
+//! (§2.1), which loses accuracy when output channels carry very different
+//! ranges — exactly the situation batch-norm folding (eq. 14) creates on
+//! depthwise layers, where the per-channel `γ/σ` factors spread weight
+//! magnitudes across orders of magnitude. Per-channel quantization gives
+//! each *output channel* its own scale while keeping one **shared,
+//! symmetric zero-point** (the uint8 midpoint), so:
+//!
+//! * activations stay per-tensor — nothing changes on the RHS of the GEMM;
+//! * the eq. 7 zero-point corrections still use one `Z1` — the int8 GEMM
+//!   accumulation core is untouched;
+//! * only the §2.4 requantization multiplier becomes per-row
+//!   ([`crate::gemm::output::Requant::PerChannel`]), applied once per
+//!   output row.
+//!
+//! [`WeightQuant`] is the weight-side parameter carrier every matmul-shaped
+//! layer ([`crate::nn::conv`], [`crate::nn::depthwise`], [`crate::nn::fc`])
+//! stores: the per-tensor case wraps the classic [`QuantParams`] and stays
+//! the cheap default.
+
+use super::QuantParams;
+
+/// Which axis of a weight tensor indexes the output channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChannelAxis {
+    /// Channel is the outermost dimension: conv OHWI `[Cout, KH, KW, Cin]`
+    /// and FC `[units, features]` — each channel's weights are contiguous.
+    Outer,
+    /// Channel is the innermost dimension: depthwise `[1, KH, KW, C]` —
+    /// channel `i % C` for flat index `i`.
+    Inner,
+}
+
+impl ChannelAxis {
+    /// Channel of flat element `i` in a `len`-element array with `channels`
+    /// channels.
+    #[inline]
+    fn channel_of(self, i: usize, len: usize, channels: usize) -> usize {
+        match self {
+            ChannelAxis::Outer => i / (len / channels),
+            ChannelAxis::Inner => i % channels,
+        }
+    }
+}
+
+/// Symmetric per-channel quantization parameters for one weight array:
+/// `r = scales[ch] · (q − zero_point)` with a single shared zero-point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChannelQuantParams {
+    /// One positive scale per output channel.
+    pub scales: Vec<f64>,
+    /// Shared zero-point — the storage midpoint `2^(bits−1)`, so symmetric
+    /// int8 weights stay in `[−(2^(bits−1)−1), 2^(bits−1)−1]` (App. B's
+    /// narrow-range precondition holds per construction).
+    pub zero_point: i32,
+    /// Smallest representable quantized value (narrow range: `qmin = 1`).
+    pub qmin: i32,
+    /// Largest representable quantized value (`2^bits − 1`).
+    pub qmax: i32,
+}
+
+impl ChannelQuantParams {
+    /// Choose symmetric per-channel parameters from a float weight array
+    /// with `channels` output channels along `axis`. Channels whose weights
+    /// are all zero get scale 1.0 (any positive scale represents them
+    /// exactly).
+    pub fn for_weights(w: &[f32], channels: usize, axis: ChannelAxis, bits: u32) -> Self {
+        assert!((2..=8).contains(&bits), "bit depth must be in [2, 8]");
+        assert!(channels > 0 && w.len() % channels == 0, "weight volume must split into channels");
+        let mut max_abs = vec![0f64; channels];
+        for (i, &v) in w.iter().enumerate() {
+            let ch = axis.channel_of(i, w.len(), channels);
+            max_abs[ch] = max_abs[ch].max(f64::from(v.abs()));
+        }
+        let half_levels = f64::from((1i32 << (bits - 1)) - 1);
+        let scales = max_abs
+            .into_iter()
+            .map(|m| if m == 0.0 { 1.0 } else { m / half_levels })
+            .collect();
+        Self {
+            scales,
+            zero_point: 1 << (bits - 1),
+            qmin: 1,
+            qmax: (1 << bits) - 1,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Quantize one real value belonging to channel `ch`.
+    #[inline]
+    pub fn quantize(&self, ch: usize, r: f32) -> i32 {
+        let q = (f64::from(r) / self.scales[ch]).round() as i64 + i64::from(self.zero_point);
+        q.clamp(i64::from(self.qmin), i64::from(self.qmax)) as i32
+    }
+
+    /// Dequantize one value of channel `ch`.
+    #[inline]
+    pub fn dequantize(&self, ch: usize, q: i32) -> f32 {
+        (self.scales[ch] * f64::from(q - self.zero_point)) as f32
+    }
+
+    /// Quantize a whole weight array laid out along `axis` into u8 storage.
+    pub fn quantize_slice(&self, w: &[f32], axis: ChannelAxis) -> Vec<u8> {
+        debug_assert!(self.qmax <= 255 && self.qmin >= 0);
+        let channels = self.channels();
+        w.iter()
+            .enumerate()
+            .map(|(i, &v)| self.quantize(axis.channel_of(i, w.len(), channels), v) as u8)
+            .collect()
+    }
+
+    /// Quantize a per-channel bias vector per eq. 11: element `ch` is stored
+    /// as int32 at scale `scales[ch] · input_scale` with zero-point 0.
+    pub fn quantize_bias(&self, bias: &[f32], input_scale: f64) -> Vec<i32> {
+        assert!(bias.is_empty() || bias.len() == self.channels(), "bias is per output channel");
+        bias.iter()
+            .enumerate()
+            .map(|(ch, &b)| {
+                let q = (f64::from(b) / (self.scales[ch] * input_scale)).round();
+                q.clamp(f64::from(i32::MIN), f64::from(i32::MAX)) as i32
+            })
+            .collect()
+    }
+
+    /// Whether decoded parameters are sane: positive finite scales, a
+    /// non-empty quantized range, and a zero-point valid as a u8 storage
+    /// value — the checks the `.iaoiq` loader applies to untrusted bytes.
+    pub fn wire_valid(&self) -> bool {
+        !self.scales.is_empty()
+            && self.scales.iter().all(|s| s.is_finite() && *s > 0.0)
+            && self.qmax > self.qmin
+            && (0..=255).contains(&self.zero_point)
+    }
+}
+
+/// Weight-side quantization of one matmul-shaped layer: the per-tensor
+/// affine scheme of §2.1, or symmetric per-channel scales.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WeightQuant {
+    /// One `(S, Z)` pair for the whole array (the paper's scheme).
+    PerTensor(QuantParams),
+    /// One scale per output channel, shared symmetric zero-point.
+    PerChannel(ChannelQuantParams),
+}
+
+impl WeightQuant {
+    /// The shared zero-point `Z1` the GEMM core subtracts — single-valued in
+    /// both modes by construction.
+    #[inline]
+    pub fn zero_point(&self) -> i32 {
+        match self {
+            WeightQuant::PerTensor(p) => p.zero_point,
+            WeightQuant::PerChannel(c) => c.zero_point,
+        }
+    }
+
+    /// The scale of output channel `ch` (per-tensor: the one scale).
+    #[inline]
+    pub fn scale(&self, ch: usize) -> f64 {
+        match self {
+            WeightQuant::PerTensor(p) => p.scale,
+            WeightQuant::PerChannel(c) => c.scales[ch],
+        }
+    }
+
+    /// Number of per-channel scales, `None` in per-tensor mode.
+    pub fn channels(&self) -> Option<usize> {
+        match self {
+            WeightQuant::PerTensor(_) => None,
+            WeightQuant::PerChannel(c) => Some(c.channels()),
+        }
+    }
+
+    pub fn is_per_channel(&self) -> bool {
+        matches!(self, WeightQuant::PerChannel(_))
+    }
+
+    /// Loader-side sanity check (see the per-variant `wire_valid`s).
+    pub fn wire_valid(&self) -> bool {
+        match self {
+            WeightQuant::PerTensor(p) => p.wire_valid(),
+            WeightQuant::PerChannel(c) => c.wire_valid(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Weights with channel ranges spanning two orders of magnitude — the
+    /// BN-folded depthwise failure mode per-channel quantization exists for.
+    fn heterogeneous(channels: usize, per: usize) -> Vec<f32> {
+        (0..channels * per)
+            .map(|i| {
+                let ch = i / per;
+                let gain = 0.05f32 * 4f32.powi((ch % 4) as i32);
+                gain * ((i as f32 * 0.73).sin())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn symmetric_zero_point_is_midpoint_and_zero_exact() {
+        let w = heterogeneous(4, 9);
+        let p = ChannelQuantParams::for_weights(&w, 4, ChannelAxis::Outer, 8);
+        assert_eq!(p.zero_point, 128);
+        assert_eq!((p.qmin, p.qmax), (1, 255));
+        for ch in 0..4 {
+            assert_eq!(p.quantize(ch, 0.0), 128);
+            assert_eq!(p.dequantize(ch, 128), 0.0);
+        }
+    }
+
+    #[test]
+    fn per_channel_stays_in_narrow_range() {
+        let w = heterogeneous(6, 16);
+        let p = ChannelQuantParams::for_weights(&w, 6, ChannelAxis::Outer, 8);
+        let q = p.quantize_slice(&w, ChannelAxis::Outer);
+        for &v in &q {
+            assert!((1..=255).contains(&i32::from(v)));
+            // int8 view: never −128 (App. B precondition).
+            assert!((i32::from(v) - 128).abs() <= 127);
+        }
+    }
+
+    #[test]
+    fn per_channel_reconstruction_beats_per_tensor_on_heterogeneous_channels() {
+        let w = heterogeneous(8, 27);
+        let pc = ChannelQuantParams::for_weights(&w, 8, ChannelAxis::Outer, 8);
+        let pt = QuantParams::for_weights(&w, 8);
+        let mse = |deq: &dyn Fn(usize, f32) -> f32| -> f64 {
+            w.iter()
+                .enumerate()
+                .map(|(i, &v)| {
+                    let d = f64::from(v) - f64::from(deq(i, v));
+                    d * d
+                })
+                .sum::<f64>()
+                / w.len() as f64
+        };
+        let per = w.len() / 8;
+        let pc_mse = mse(&|i, v| pc.dequantize(i / per, pc.quantize(i / per, v)));
+        let pt_mse = mse(&|_, v| pt.dequantize(pt.quantize(v)));
+        assert!(
+            pc_mse < pt_mse * 0.25,
+            "per-channel should sharply cut weight error: {pc_mse} vs {pt_mse}"
+        );
+    }
+
+    #[test]
+    fn inner_axis_matches_depthwise_layout() {
+        // Depthwise [1, KH, KW, C]: channel is innermost. Quantizing with
+        // Inner must give every element of channel ch the scale of ch.
+        let c = 3;
+        let taps = 9;
+        let w: Vec<f32> = (0..taps * c)
+            .map(|i| if i % c == 2 { 10.0 } else { 0.1 } * ((i as f32).cos()))
+            .collect();
+        let p = ChannelQuantParams::for_weights(&w, c, ChannelAxis::Inner, 8);
+        assert!(p.scales[2] > p.scales[0] * 10.0);
+        let q = p.quantize_slice(&w, ChannelAxis::Inner);
+        for (i, &qv) in q.iter().enumerate() {
+            let back = p.dequantize(i % c, i32::from(qv));
+            assert!(
+                (back - w[i]).abs() <= p.scales[i % c] as f32 * 0.51 + 1e-6,
+                "element {i}: {back} vs {}",
+                w[i]
+            );
+        }
+    }
+
+    #[test]
+    fn all_zero_channel_gets_valid_scale() {
+        let mut w = heterogeneous(4, 8);
+        for v in w[8..16].iter_mut() {
+            *v = 0.0;
+        }
+        let p = ChannelQuantParams::for_weights(&w, 4, ChannelAxis::Outer, 8);
+        assert_eq!(p.scales[1], 1.0);
+        assert!(p.wire_valid());
+        assert_eq!(p.quantize(1, 0.0), 128);
+    }
+
+    #[test]
+    fn bias_uses_per_channel_scale() {
+        let w = heterogeneous(4, 9);
+        let p = ChannelQuantParams::for_weights(&w, 4, ChannelAxis::Outer, 8);
+        let bias = [0.5f32, -0.25, 1.0, 0.0];
+        let q = p.quantize_bias(&bias, 0.02);
+        for ch in 0..4 {
+            let back = f64::from(q[ch]) * p.scales[ch] * 0.02;
+            assert!(
+                (back - f64::from(bias[ch])).abs() <= p.scales[ch] * 0.02 * 0.51,
+                "ch {ch}: {back} vs {}",
+                bias[ch]
+            );
+        }
+        assert!(p.quantize_bias(&[], 0.02).is_empty());
+    }
+
+    #[test]
+    fn weight_quant_accessors() {
+        let pt = WeightQuant::PerTensor(QuantParams::from_min_max(-1.0, 1.0, 1, 255));
+        assert!(!pt.is_per_channel());
+        assert_eq!(pt.channels(), None);
+        assert!(pt.wire_valid());
+
+        let w = heterogeneous(4, 9);
+        let pc = WeightQuant::PerChannel(ChannelQuantParams::for_weights(
+            &w,
+            4,
+            ChannelAxis::Outer,
+            8,
+        ));
+        assert!(pc.is_per_channel());
+        assert_eq!(pc.channels(), Some(4));
+        assert_eq!(pc.zero_point(), 128);
+        assert!(pc.scale(0) > 0.0);
+        assert!(pc.wire_valid());
+
+        let bad = WeightQuant::PerChannel(ChannelQuantParams {
+            scales: vec![1.0, f64::NAN],
+            zero_point: 128,
+            qmin: 1,
+            qmax: 255,
+        });
+        assert!(!bad.wire_valid());
+    }
+
+    #[test]
+    fn lower_bit_depths_scale_the_range() {
+        let w = heterogeneous(2, 8);
+        let p = ChannelQuantParams::for_weights(&w, 2, ChannelAxis::Outer, 4);
+        assert_eq!(p.zero_point, 8);
+        assert_eq!((p.qmin, p.qmax), (1, 15));
+        let q = p.quantize_slice(&w, ChannelAxis::Outer);
+        for &v in &q {
+            assert!((1..=15).contains(&i32::from(v)));
+        }
+    }
+}

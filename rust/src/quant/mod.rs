@@ -10,12 +10,17 @@
 //! Submodules:
 //! * [`multiplier`] — offline normalization of `M = S1·S2/S3` into
 //!   `2^-n · M0` (eq. 5–6).
+//! * [`channel`] — symmetric per-channel weight scales
+//!   (Krishnamoorthi 1806.08342) and the [`WeightQuant`] carrier the
+//!   matmul-shaped layers store.
 //! * [`schemes`] — baseline weight quantizers (binary / ternary /
 //!   power-of-two / fine-grained) used for the Table 4.2 comparison.
 
+pub mod channel;
 pub mod multiplier;
 pub mod schemes;
 
+pub use channel::{ChannelAxis, ChannelQuantParams, WeightQuant};
 pub use multiplier::{quantize_multiplier, QuantizedMultiplier};
 
 

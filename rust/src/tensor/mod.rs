@@ -102,6 +102,21 @@ impl<T: Copy + Default> Tensor<T> {
         }
     }
 
+    /// [`Self::reset_for_overwrite`] with the last dimension overridden:
+    /// the geometry becomes `shape[..rank-1] + [last]`. Lets the channel
+    /// concat shape its output without building a temporary shape `Vec`
+    /// (the zero-alloc steady state of [`crate::graph::PreparedGraph`]).
+    pub fn reset_for_overwrite_last_dim(&mut self, shape: &[usize], last: usize) {
+        assert!(!shape.is_empty(), "need at least one dimension to override");
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        *self.shape.last_mut().expect("non-empty shape") = last;
+        let n = self.shape.iter().product();
+        if self.data.len() != n {
+            self.data.resize(n, T::default());
+        }
+    }
+
     /// Size of dimension `i`.
     #[inline]
     pub fn dim(&self, i: usize) -> usize {
@@ -238,6 +253,14 @@ mod tests {
         assert_eq!(t.data(), &[9u8; 4], "same volume: contents untouched");
         t.reset_for_overwrite(&[2, 3]);
         assert_eq!(t.len(), 6, "grown to the new volume");
+    }
+
+    #[test]
+    fn reset_for_overwrite_last_dim_overrides_channel_count() {
+        let mut t = Tensor::from_vec(&[2, 2], vec![9u8; 4]);
+        t.reset_for_overwrite_last_dim(&[2, 3], 5);
+        assert_eq!(t.shape(), &[2, 5]);
+        assert_eq!(t.len(), 10);
     }
 
     #[test]

@@ -14,9 +14,11 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use iaoi::data::Rng;
 use iaoi::graph::builders::papernet_random;
-use iaoi::graph::ExecState;
-use iaoi::nn::{FusedActivation, QTensor};
-use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::graph::{ExecState, FloatGraph, FloatOp, NodeRef};
+use iaoi::nn::conv::Conv2d;
+use iaoi::nn::fc::FullyConnected;
+use iaoi::nn::{FusedActivation, Padding, QTensor};
+use iaoi::quantize::{quantize_graph, QuantMode, QuantizeOptions};
 use iaoi::tensor::Tensor;
 
 /// Counts allocation events (alloc / alloc_zeroed / realloc) while armed.
@@ -110,4 +112,81 @@ fn prepared_run_q_is_allocation_free_in_steady_state() {
         plan.run_q(&small, &mut state);
     });
     assert_eq!(steady_small, 0, "batch-1 steady state made {steady_small} allocations");
+
+    // Per-channel requantization must not cost any steady-state allocation
+    // either: the multiplier vectors live inside the prepared output stages.
+    let (_, qpc) =
+        quantize_graph(&g, &calib, QuantizeOptions { mode: QuantMode::PerChannel, ..Default::default() });
+    let plan_pc = qpc.prepare();
+    let mut state_pc = ExecState::new();
+    let qin_pc = QTensor::quantize(&mk(&mut rng, 2), qpc.input_params);
+    plan_pc.run_q(&qin_pc, &mut state_pc);
+    plan_pc.run_q(&qin_pc, &mut state_pc);
+    let steady_pc = count_allocs(|| {
+        plan_pc.run_q(&qin_pc, &mut state_pc);
+    });
+    assert_eq!(steady_pc, 0, "per-channel steady state made {steady_pc} allocations");
+
+    // Ops that allocated per call until PR 3 — Concat's operand gather and
+    // the fixed-point Softmax/Logistic — must now be zero-alloc too.
+    let gc = concat_softmax_logistic_graph();
+    let mut rng2 = Rng::seeded(17);
+    let mkc = |rng: &mut Rng, batch: usize| {
+        let mut d = vec![0f32; batch * 8 * 8 * 3];
+        for v in d.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        Tensor::from_vec(&[batch, 8, 8, 3], d)
+    };
+    let calib_c = vec![mkc(&mut rng2, 2), mkc(&mut rng2, 2)];
+    let (_, qc) = quantize_graph(&gc, &calib_c, QuantizeOptions::default());
+    let plan_c = qc.prepare();
+    let mut state_c = ExecState::new();
+    let qin_c = QTensor::quantize(&mkc(&mut rng2, 2), qc.input_params);
+    plan_c.run_q(&qin_c, &mut state_c);
+    plan_c.run_q(&qin_c, &mut state_c);
+    let steady_c = count_allocs(|| {
+        plan_c.run_q(&qin_c, &mut state_c);
+    });
+    assert_eq!(
+        steady_c, 0,
+        "concat/softmax/logistic steady state made {steady_c} allocations"
+    );
+}
+
+/// A graph exercising the three formerly-allocating prepared ops: a
+/// channel-duplicating Concat (its operands are one node twice, so the
+/// App. A.3 unified parameters hold by construction for any seed), pools,
+/// then FC → Logistic and a final Softmax.
+fn concat_softmax_logistic_graph() -> FloatGraph {
+    let mut rng = Rng::seeded(23);
+    let mut g = FloatGraph::default();
+    let mut w = vec![0f32; 4 * 3 * 3 * 3];
+    rng.fill_normal(&mut w, 0.3);
+    let conv = Conv2d {
+        weights: Tensor::from_vec(&[4, 3, 3, 3], w),
+        bias: vec![0.1, -0.1, 0.2, 0.0],
+        stride: 1,
+        padding: Padding::Same,
+        activation: FusedActivation::None,
+    };
+    let c = g.push("conv", NodeRef::Input, FloatOp::Conv(conv));
+    let r = g.push("relu", c, FloatOp::Relu6);
+    let cat = g.push("cat", r, FloatOp::Concat(vec![r]));
+    let p = g.push("maxpool", cat, FloatOp::MaxPool { kernel: 2, stride: 2, padding: Padding::Valid });
+    let gap = g.push("gap", p, FloatOp::GlobalAvgPool);
+    let mut fw = vec![0f32; 5 * 8];
+    rng.fill_normal(&mut fw, 0.3);
+    let fc = g.push(
+        "logits",
+        gap,
+        FloatOp::Fc(FullyConnected {
+            weights: Tensor::from_vec(&[5, 8], fw),
+            bias: vec![0.0; 5],
+            activation: FusedActivation::None,
+        }),
+    );
+    g.push("sigmoid", fc, FloatOp::Logistic);
+    g.push("softmax", fc, FloatOp::Softmax);
+    g
 }

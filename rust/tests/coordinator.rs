@@ -67,6 +67,7 @@ fn prop_every_request_completes_exactly_once() {
             BatchPolicy {
                 max_batch: s.max_batch,
                 max_delay: Duration::from_micros(s.max_delay_us),
+                ..Default::default()
             },
             s.workers,
         );
@@ -94,6 +95,7 @@ fn prop_batch_sizes_respect_policy() {
             BatchPolicy {
                 max_batch: s.max_batch,
                 max_delay: Duration::from_micros(s.max_delay_us),
+                ..Default::default()
             },
             s.workers,
         );
@@ -125,7 +127,7 @@ fn prop_responses_are_deterministic_per_input() {
         let mut rng = Rng::seeded(7);
         let img = image(&mut rng);
         // Reference: direct single-request run.
-        let coord1 = Coordinator::start(eng.clone(), BatchPolicy { max_batch: 1, max_delay: Duration::ZERO }, 1);
+        let coord1 = Coordinator::start(eng.clone(), BatchPolicy { max_batch: 1, max_delay: Duration::ZERO, ..Default::default() }, 1);
         let want = coord1.client().infer(img.clone()).unwrap().output;
         coord1.shutdown();
         // Same image inside a noisy burst under the scenario's policy.
@@ -134,6 +136,7 @@ fn prop_responses_are_deterministic_per_input() {
             BatchPolicy {
                 max_batch: s.max_batch,
                 max_delay: Duration::from_micros(s.max_delay_us),
+                ..Default::default()
             },
             s.workers,
         );
@@ -176,7 +179,7 @@ fn two_model_registry() -> ModelRegistry {
 fn routed_requests_complete_on_their_own_model() {
     let coord = MultiCoordinator::start(
         two_model_registry(),
-        BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(5) },
+        BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(5), ..Default::default() },
         2,
     );
     let client = coord.client();
@@ -229,7 +232,7 @@ fn hot_swap_mid_stream_drops_nothing_and_routes_new_traffic_to_v2() {
     let registry = two_model_registry();
     let coord = MultiCoordinator::start(
         registry.clone(),
-        BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(20) },
+        BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(20), ..Default::default() },
         2,
     );
     let client = coord.client();

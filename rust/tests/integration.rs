@@ -176,6 +176,33 @@ fn bit_depth_knobs_affect_training() {
     assert!(w8.max_abs_diff(w4) > 1e-6, "bit-depth knob had no effect on training");
 }
 
+#[test]
+fn per_channel_improves_or_ties_per_tensor_on_synth_depthwise_model() {
+    // Acceptance check for the per-channel requantization path: on the
+    // synth depthwise model (heterogeneous channel ranges), per-channel
+    // weight quantization must improve — or at worst tie — the harness
+    // accuracy table vs per-tensor, and must strictly reduce the logit
+    // error vs the float engine. Needs no AOT artifacts (pure PTQ), so it
+    // runs on a fresh checkout.
+    let r = harness::tables::quant_mode_report(true);
+    // Fidelity is a discrete metric (argmax agreement over the eval split);
+    // allow a one-example slack so the continuous logit-error assertion
+    // below carries the strict-improvement requirement.
+    let one_example = 1.0 / 64.0;
+    assert!(
+        r.per_channel_fidelity >= r.per_tensor_fidelity - one_example,
+        "per-channel fidelity {} must not trail per-tensor {}",
+        r.per_channel_fidelity,
+        r.per_tensor_fidelity
+    );
+    assert!(
+        r.per_channel_logit_err < r.per_tensor_logit_err,
+        "per-channel logit error {} must beat per-tensor {}",
+        r.per_channel_logit_err,
+        r.per_tensor_logit_err
+    );
+}
+
 /// Guard that artifacts dir referenced by the default CLI path matches the
 /// layout the binary expects.
 #[test]

@@ -5,13 +5,13 @@
 //! which must yield structured [`DecodeError`]s, never panics.
 
 use iaoi::data::{check, Rng};
-use iaoi::graph::builders::{mini_resnet, papernet_random};
+use iaoi::graph::builders::{mini_resnet, papernet_heterogeneous_dw, papernet_random};
 use iaoi::graph::{FloatGraph, FloatOp, NodeRef};
 use iaoi::model_format::{self, DecodeError, ModelArtifact};
 use iaoi::nn::conv::Conv2d;
 use iaoi::nn::fc::FullyConnected;
-use iaoi::nn::{FusedActivation, Padding};
-use iaoi::quantize::{quantize_graph, QuantizeOptions};
+use iaoi::nn::{FusedActivation, Padding, QTensor};
+use iaoi::quantize::{quantize_graph, QuantMode, QuantizeOptions};
 use iaoi::tensor::Tensor;
 
 fn random_batches(rng: &mut Rng, shape: &[usize], count: usize) -> Vec<Tensor<f32>> {
@@ -165,6 +165,80 @@ fn load_then_prepare_matches_in_memory_conversion_bit_for_bit() {
         assert_eq!(want.data, got_mem.data, "prepared(in-memory) diverged");
         let got_loaded = plan_loaded.run_q(&qin, &mut state_loaded);
         assert_eq!(want.data, got_loaded.data, "prepared(loaded) diverged");
+    }
+}
+
+/// A version-1 artifact produced before the v2 (per-channel) format landed:
+/// one FC node with hand-picked exactly-representable parameters
+/// (`S_w = S_in = 0.5`, `S_out = 128`, so `M = 2^-9` → `m0 = 2^30`,
+/// `shift = −8`). Golden backward-compat anchor: v1 files must keep
+/// decoding and producing bit-identical outputs forever.
+const GOLDEN_V1: &[u8] = include_bytes!("golden_v1.iaoiq");
+
+#[test]
+fn golden_v1_artifact_decodes_and_infers_bit_identically() {
+    let art = model_format::load(GOLDEN_V1).expect("v1 artifact must keep loading");
+    assert_eq!(art.name, "golden");
+    assert_eq!(art.version, 7);
+    assert_eq!(art.input_shape, [1, 1, 4]);
+    assert_eq!(art.graph.nodes.len(), 1);
+    let iaoi::graph::QOp::Fc(fc) = &art.graph.nodes[0].op else {
+        panic!("golden node must be the FC classifier");
+    };
+    assert!(!fc.weight_quant.is_per_channel(), "v1 is always per-tensor");
+    assert_eq!(fc.weight_quant.zero_point(), 128);
+    assert_eq!(fc.bias, vec![10, -10]);
+
+    // Fixed uint8 input through the decoded graph: the integer pipeline's
+    // output bytes are pinned (acc → ×2^-9 via srdhm + rounding shift).
+    let qin = QTensor {
+        data: Tensor::from_vec(&[1, 4], vec![0u8, 50, 100, 200]),
+        params: art.graph.input_params,
+    };
+    let out = art.graph.run_q(&qin);
+    assert_eq!(out.data.data(), &[29u8, 53], "v1 arithmetic drifted");
+
+    // And through the prepared deployment path.
+    let plan = art.prepare();
+    let mut state = iaoi::graph::ExecState::new();
+    let got = plan.run_q(&qin, &mut state);
+    assert_eq!(got.data.data(), &[29u8, 53], "v1 prepared arithmetic drifted");
+}
+
+#[test]
+fn per_channel_model_roundtrips_through_v2_bit_identically() {
+    // The acceptance path for the v2 format: a per-channel-quantized synth
+    // depthwise model must save → load → prepare → infer bit-identically.
+    let g = papernet_heterogeneous_dw(8, 61);
+    let mut rng = Rng::seeded(61);
+    let calib = random_batches(&mut rng, &[2, 16, 16, 3], 3);
+    let (_, q) = quantize_graph(
+        &g,
+        &calib,
+        QuantizeOptions { mode: QuantMode::PerChannel, ..Default::default() },
+    );
+    let art = ModelArtifact::new("pc-model", 2, [16, 16, 3], q);
+    let inputs = random_batches(&mut rng, &[2, 16, 16, 3], 3);
+    assert_bit_identical(&art, &inputs);
+
+    // Deployment path: loaded + prepared executor agrees too.
+    let bytes = model_format::save(&art);
+    let loaded = model_format::load(&bytes).expect("load v2");
+    let plan = loaded.prepare();
+    let mut state = iaoi::graph::ExecState::new();
+    for x in &inputs {
+        let qin = QTensor::quantize(x, art.graph.input_params);
+        let want = art.graph.run_q(&qin);
+        let got = plan.run_q(&qin, &mut state);
+        assert_eq!(want.data, got.data, "prepared(loaded v2) diverged");
+    }
+
+    // Corrupt sweep: flipped bytes in a per-channel artifact must never
+    // panic (structured errors or clean payload-only damage).
+    for pos in (0..bytes.len()).step_by(7) {
+        let mut corrupt = bytes.clone();
+        corrupt[pos] ^= 0xa5;
+        let _ = model_format::load(&corrupt);
     }
 }
 
