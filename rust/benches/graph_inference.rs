@@ -19,12 +19,14 @@
 
 use iaoi::bench_util::{bench, smoke_mode, Sample};
 use iaoi::data::Rng;
+use iaoi::gemm::{IntraOp, WorkerPool};
 use iaoi::graph::builders::mobilenet;
 use iaoi::graph::{ExecState, QGraph};
 use iaoi::harness::demo_artifact_with_mode;
 use iaoi::nn::QTensor;
 use iaoi::quantize::{quantize_graph, QuantMode, QuantizeOptions};
 use iaoi::tensor::Tensor;
+use std::sync::Arc;
 
 struct Case {
     model: &'static str,
@@ -55,6 +57,80 @@ impl Case {
             self.speedup(),
         )
     }
+}
+
+/// Whole-model intra-op parallelism: the same prepared plan run serial,
+/// with per-call scoped spawns, and through a persistent [`WorkerPool`].
+/// Scoped and pool use the identical strip partition and threshold, so
+/// `pool_vs_scoped` isolates exactly what the pool amortizes: per-GEMM
+/// thread provisioning.
+struct IntraCase {
+    model: &'static str,
+    batch: usize,
+    threads: usize,
+    serial: Sample,
+    scoped: Sample,
+    pool: Sample,
+}
+
+impl IntraCase {
+    fn pool_vs_scoped(&self) -> f64 {
+        self.scoped.median_us / self.pool.median_us.max(1e-9)
+    }
+
+    fn pool_vs_serial(&self) -> f64 {
+        self.serial.median_us / self.pool.median_us.max(1e-9)
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "    {{\"model\": \"{}\", \"batch\": {}, \"intra_threads\": {}, \"serial_us\": {:.1}, \"scoped_us\": {:.1}, \"pool_us\": {:.1}, \"pool_vs_scoped\": {:.3}, \"pool_vs_serial\": {:.3}}}",
+            self.model,
+            self.batch,
+            self.threads,
+            self.serial.median_us,
+            self.scoped.median_us,
+            self.pool.median_us,
+            self.pool_vs_scoped(),
+            self.pool_vs_serial(),
+        )
+    }
+}
+
+fn run_intra_case(
+    model: &'static str,
+    q: &QGraph,
+    res: usize,
+    batch: usize,
+    threads: usize,
+) -> IntraCase {
+    let min_n = iaoi::gemm::pool::DEFAULT_MIN_N;
+    let mut rng = Rng::seeded(31 + batch as u64);
+    let x = random_input(&mut rng, batch, res);
+    let qin = QTensor::quantize(&x, q.input_params);
+    let plan = q.prepare();
+
+    let mut state = ExecState::new();
+    plan.run_q(&qin, &mut state);
+    let want = plan.run_q(&qin, &mut state).data.data().to_vec();
+    let serial = bench(&format!("{model} batch={batch} intra=serial"), 5, || {
+        std::hint::black_box(plan.run_q(&qin, &mut state).data.len());
+    });
+
+    state.set_intra(IntraOp::scoped(threads, min_n));
+    assert_eq!(plan.run_q(&qin, &mut state).data.data(), &want[..], "scoped diverged");
+    let scoped = bench(&format!("{model} batch={batch} intra=scoped({threads})"), 5, || {
+        std::hint::black_box(plan.run_q(&qin, &mut state).data.len());
+    });
+
+    let pool_handle = Arc::new(WorkerPool::new(threads));
+    state.set_intra(IntraOp::pool(pool_handle, min_n));
+    assert_eq!(plan.run_q(&qin, &mut state).data.data(), &want[..], "pool diverged");
+    let pool = bench(&format!("{model} batch={batch} intra=pool({threads})"), 5, || {
+        std::hint::black_box(plan.run_q(&qin, &mut state).data.len());
+    });
+
+    IntraCase { model, batch, threads, serial, scoped, pool }
 }
 
 fn random_input(rng: &mut Rng, batch: usize, res: usize) -> Tensor<f32> {
@@ -100,23 +176,33 @@ fn run_case(
 fn main() {
     println!("== end-to-end graph inference: prepared vs unprepared, both quant modes ==\n");
 
+    // One (demo, mobilenet) pair per quant mode, built once and reused by
+    // both the prepared-vs-unprepared cases and the intra-op section.
+    let graphs: Vec<(QuantMode, QGraph, QGraph)> = [QuantMode::PerTensor, QuantMode::PerChannel]
+        .into_iter()
+        .map(|mode| {
+            // The conv-dominated demo graph (papernet: conv/dw/pw + GAP + FC).
+            let demo = demo_artifact_with_mode("demo", 1, 16, 3, mode).graph;
+            // MobileNet dm=0.25 at 32px: the deeper serving-shaped workload.
+            let mn = {
+                let g = mobilenet(0.25, 16, false, 7);
+                let mut rng = Rng::seeded(7);
+                let calib = vec![random_input(&mut rng, 2, 32)];
+                let (_, q) =
+                    quantize_graph(&g, &calib, QuantizeOptions { mode, ..Default::default() });
+                q
+            };
+            (mode, demo, mn)
+        })
+        .collect();
+
     let mut cases = Vec::new();
-    for mode in [QuantMode::PerTensor, QuantMode::PerChannel] {
-        // The conv-dominated demo graph (papernet: conv/dw/pw stack + GAP + FC).
-        let demo = demo_artifact_with_mode("demo", 1, 16, 3, mode).graph;
-        // MobileNet dm=0.25 at 32px: the deeper serving-shaped workload.
-        let mn = {
-            let g = mobilenet(0.25, 16, false, 7);
-            let mut rng = Rng::seeded(7);
-            let calib = vec![random_input(&mut rng, 2, 32)];
-            let (_, q) = quantize_graph(&g, &calib, QuantizeOptions { mode, ..Default::default() });
-            q
-        };
+    for (mode, demo, mn) in &graphs {
         for &batch in &[1usize, 8] {
-            cases.push(run_case("papernet_demo", mode, &demo, 16, batch));
+            cases.push(run_case("papernet_demo", *mode, demo, 16, batch));
         }
         for &batch in &[1usize, 4] {
-            cases.push(run_case("mobilenet_dm025", mode, &mn, 32, batch));
+            cases.push(run_case("mobilenet_dm025", *mode, mn, 32, batch));
         }
     }
 
@@ -133,6 +219,31 @@ fn main() {
         );
     }
 
+    // Intra-op parallelism on whole batched models: pool vs scoped-spawn vs
+    // serial at the default per-layer threshold. On single-core CI the
+    // absolute speedups sit at or below 1; pool_vs_scoped is the number the
+    // persistent pool exists for (it strips per-GEMM thread provisioning).
+    println!("\n== intra-op: serial vs scoped-spawn vs persistent pool ==\n");
+    let mut intra_cases = Vec::new();
+    {
+        let (_, demo_pt, mn_pt) = &graphs[0];
+        for &threads in &[2usize, 4] {
+            intra_cases.push(run_intra_case("papernet_demo", demo_pt, 16, 8, threads));
+            intra_cases.push(run_intra_case("mobilenet_dm025", mn_pt, 32, 4, threads));
+        }
+    }
+    println!();
+    for c in &intra_cases {
+        println!(
+            "{:<18} batch={} threads={}  pool vs scoped {:.2}x  pool vs serial {:.2}x",
+            c.model,
+            c.batch,
+            c.threads,
+            c.pool_vs_scoped(),
+            c.pool_vs_serial(),
+        );
+    }
+
     let find = |model: &str, batch: usize| {
         cases
             .iter()
@@ -141,12 +252,19 @@ fn main() {
     };
     let demo_single = find("papernet_demo", 1);
     let demo_batched = find("papernet_demo", 8);
+    let pool_vs_scoped_batched = intra_cases
+        .iter()
+        .find(|c| c.model == "papernet_demo" && c.threads == 4)
+        .map(IntraCase::pool_vs_scoped)
+        .unwrap_or(1.0);
     let json = format!(
-        "{{\n  \"bench\": \"graph_inference\",\n  \"smoke\": {},\n  \"cases\": [\n{}\n  ],\n  \"demo_speedup_single\": {:.3},\n  \"demo_speedup_batched\": {:.3}\n}}\n",
+        "{{\n  \"bench\": \"graph_inference\",\n  \"smoke\": {},\n  \"cases\": [\n{}\n  ],\n  \"intra_cases\": [\n{}\n  ],\n  \"demo_speedup_single\": {:.3},\n  \"demo_speedup_batched\": {:.3},\n  \"pool_vs_scoped_batched\": {:.3}\n}}\n",
         smoke_mode(),
         cases.iter().map(Case::json).collect::<Vec<_>>().join(",\n"),
+        intra_cases.iter().map(IntraCase::json).collect::<Vec<_>>().join(",\n"),
         demo_single.speedup(),
         demo_batched.speedup(),
+        pool_vs_scoped_batched,
     );
     std::fs::write("BENCH_graph.json", &json).expect("write BENCH_graph.json");
     println!("\nwrote BENCH_graph.json");

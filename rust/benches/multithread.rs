@@ -1,14 +1,18 @@
 //! Multi-threaded GEMM benchmark (Table 4.6's measured half): the
 //! column-strip parallel quantized GEMM at 1/2/4 threads on detector-sized
-//! shapes. This testbed exposes a single core, so threads > 1 measure the
-//! coordination overhead (the Snapdragon multi-core *estimates* come from
+//! shapes, comparing the per-call scoped-spawn baseline against the
+//! persistent [`WorkerPool`] (same strip partition, bit-identical results —
+//! the delta is pure thread provisioning). This testbed exposes a single
+//! core, so threads > 1 measure the coordination overhead the pool
+//! amortizes (the Snapdragon multi-core *estimates* come from
 //! `iaoi bench --table 4.6`'s fitted core model).
 //!
 //! Run: `cargo bench --bench multithread`
 
 use iaoi::bench_util::bench;
 use iaoi::data::Rng;
-use iaoi::gemm::{output::OutputStage, parallel::run_parallel, Kernel, QGemm};
+use iaoi::gemm::parallel::run_strips_scoped;
+use iaoi::gemm::{output::OutputStage, Kernel, PreparedGemm, QGemm, Scratch, WorkerPool};
 use iaoi::quant::QuantizedMultiplier;
 
 fn main() {
@@ -20,16 +24,29 @@ fn main() {
         let rhs: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
         let g = QGemm::new(m, k, n, 128, 111);
         let stage = OutputStage::bare(QuantizedMultiplier::from_f64(0.003), 10);
-        let mut out = vec![0u8; m * n];
+        let plan = PreparedGemm::from_qgemm(&g, Kernel::Int8Pairwise, &lhs, stage);
+        let mut scoped_out = vec![0u8; m * n];
+        let mut pool_out = vec![0u8; m * n];
         let mut base_ms = 0.0;
         for threads in [1usize, 2, 4] {
-            let s = bench(&format!("qgemm {m}x{k}x{n} threads={threads}"), 5, || {
-                run_parallel(&g, Kernel::Int8Pairwise, &lhs, &rhs, &stage, &mut out, threads);
+            let s = bench(&format!("qgemm {m}x{k}x{n} scoped threads={threads}"), 5, || {
+                run_strips_scoped(&plan, &rhs, n, &mut scoped_out, threads);
             });
+            let pool = WorkerPool::new(threads);
+            let mut scratch = Scratch::new();
+            let p = bench(&format!("qgemm {m}x{k}x{n} pool   threads={threads}"), 5, || {
+                pool.run_strips(&plan, &rhs, n, &mut pool_out, &mut scratch);
+            });
+            assert_eq!(scoped_out, pool_out, "pool and scoped paths diverged");
             if threads == 1 {
                 base_ms = s.median_ms();
             } else {
-                println!("    -> scaling vs 1 thread: {:.2}x", base_ms / s.median_ms());
+                println!(
+                    "    -> scoped vs 1 thread: {:.2}x   pool vs 1 thread: {:.2}x   pool vs scoped: {:.2}x",
+                    base_ms / s.median_ms(),
+                    base_ms / p.median_ms(),
+                    s.median_ms() / p.median_ms()
+                );
             }
         }
         println!();

@@ -73,13 +73,26 @@ enum WorkerEngine {
 }
 
 impl WorkerEngine {
-    fn from_engine(engine: &EngineKind, plan: &Option<Arc<PreparedGraph>>) -> Self {
+    fn from_engine(
+        engine: &EngineKind,
+        plan: &Option<Arc<PreparedGraph>>,
+        intra_pool: &Option<Arc<crate::gemm::WorkerPool>>,
+    ) -> Self {
         match engine {
             EngineKind::Float(g) => WorkerEngine::Float(Arc::clone(g)),
-            EngineKind::Quant(_) => WorkerEngine::Prepared {
-                plan: Arc::clone(plan.as_ref().expect("quant engine has a plan")),
-                state: ExecState::new(),
-            },
+            EngineKind::Quant(_) => {
+                let mut state = ExecState::new();
+                if let Some(pool) = intra_pool {
+                    state.set_intra(crate::gemm::IntraOp::pool(
+                        Arc::clone(pool),
+                        crate::gemm::pool::DEFAULT_MIN_N,
+                    ));
+                }
+                WorkerEngine::Prepared {
+                    plan: Arc::clone(plan.as_ref().expect("quant engine has a plan")),
+                    state,
+                }
+            }
         }
     }
 
@@ -125,12 +138,32 @@ pub struct BatchPolicy {
     /// `N` lands on a multiple of the kernel's `NR` tile width, so no GEMM
     /// in the model pays a ragged tail column block on every full batch
     /// (see `rust/src/gemm/kernel.rs`). 0/1 disables the preference.
+    ///
+    /// [`Coordinator`] (single model) uses this value directly — the
+    /// serving harness derives it from the loaded model's geometry
+    /// ([`crate::graph::QGraph::dominant_positions`]). The multi-model
+    /// batcher ignores it in favour of each entry's own
+    /// [`registry::ModelEntry::positions_hint`], since resident models can
+    /// have different geometries.
     pub positions_hint: usize,
+    /// Intra-op GEMM parallelism degree (counting the batch worker itself).
+    /// When > 1 the coordinator constructs **one** persistent
+    /// [`crate::gemm::WorkerPool`] of this size, shared by every batch
+    /// worker (and, in the multi-model pipeline, every resident model):
+    /// large `N = batch·OH·OW` conv/FC GEMMs split across the pool while
+    /// small layers stay serial. 1 (the default) keeps the fully serial,
+    /// zero-alloc per-worker path. CLI: `iaoi serve --intra-threads N`.
+    pub intra_threads: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 8, max_delay: Duration::from_millis(2), positions_hint: 1 }
+        Self {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+            positions_hint: 1,
+            intra_threads: 1,
+        }
     }
 }
 
@@ -141,7 +174,14 @@ impl BatchPolicy {
     /// unreachable and capping would only shrink batches for nothing).
     /// Deadline flushes still send whatever has accumulated.
     pub fn effective_max_batch(&self) -> usize {
-        if self.positions_hint <= 1 {
+        self.effective_max_batch_for(self.positions_hint)
+    }
+
+    /// [`Self::effective_max_batch`] under an explicit positions hint —
+    /// the multi-model batcher calls this per group with the model's own
+    /// geometry-derived hint.
+    pub fn effective_max_batch_for(&self, positions_hint: usize) -> usize {
+        if positions_hint <= 1 {
             // No geometry hint: the preference is disabled (capping on a
             // hint of 1 would shrink batches whenever max_batch >= NR for
             // no modeled benefit).
@@ -150,8 +190,13 @@ impl BatchPolicy {
         let nr = crate::gemm::kernel::NR;
         (1..=self.max_batch)
             .rev()
-            .find(|b| (b * self.positions_hint) % nr == 0)
+            .find(|b| (b * positions_hint) % nr == 0)
             .unwrap_or(self.max_batch)
+    }
+
+    /// The shared intra-op worker pool this policy asks for, if any.
+    fn intra_pool(&self) -> Option<Arc<crate::gemm::WorkerPool>> {
+        (self.intra_threads > 1).then(|| Arc::new(crate::gemm::WorkerPool::new(self.intra_threads)))
     }
 }
 
@@ -205,6 +250,12 @@ impl Coordinator {
             EngineKind::Quant(g) => Some(Arc::new(g.prepare())),
             EngineKind::Float(_) => None,
         };
+        // One persistent intra-op pool shared by every batch worker; only
+        // the quantized engine routes GEMMs through it.
+        let intra_pool = match &engine {
+            EngineKind::Quant(_) => policy.intra_pool(),
+            EngineKind::Float(_) => None,
+        };
 
         // Batcher: pull the head request, then co-batch whatever arrives
         // within max_delay, up to the NR-aligned effective max batch.
@@ -236,7 +287,7 @@ impl Coordinator {
         // Workers: execute batches, reply per request, record metrics.
         let mut worker_handles = Vec::with_capacity(workers);
         for _ in 0..workers {
-            let mut worker_engine = WorkerEngine::from_engine(&engine, &plan);
+            let mut worker_engine = WorkerEngine::from_engine(&engine, &plan, &intra_pool);
             let batch_rx = Arc::clone(&batch_rx);
             let metrics = Arc::clone(&metrics);
             worker_handles.push(std::thread::spawn(move || loop {
@@ -315,6 +366,11 @@ impl Coordinator {
 struct RoutedRequest {
     id: u64,
     model: String,
+    /// The target model's geometry-derived `positions_hint`, snapshotted at
+    /// submit time (the client already resolves the entry to validate the
+    /// input shape). The batcher uses it to compute the model's NR-aligned
+    /// flush size without ever touching the registry itself.
+    positions: usize,
     image: Tensor<f32>,
     submitted: Instant,
     reply: mpsc::Sender<RoutedResponse>,
@@ -365,6 +421,7 @@ impl RoutedClient {
         tx.send(RoutedRequest {
             id,
             model: model.to_string(),
+            positions: entry.positions_hint,
             image,
             submitted: Instant::now(),
             reply: reply_tx,
@@ -383,6 +440,10 @@ impl RoutedClient {
 /// A pending same-model batch accumulating co-riders.
 struct PendingGroup {
     since: Instant,
+    /// This model's NR-aligned full-batch size
+    /// ([`BatchPolicy::effective_max_batch_for`] under the model's own
+    /// geometry hint), fixed when the group forms.
+    flush_at: usize,
     reqs: Vec<RoutedRequest>,
 }
 
@@ -409,10 +470,10 @@ impl MultiCoordinator {
         let metrics: Arc<Mutex<HashMap<String, Metrics>>> = Arc::new(Mutex::new(HashMap::new()));
 
         // Batcher: groups are keyed by model name, so a batch can only ever
-        // hold one model's requests. Each group flushes when it reaches the
-        // NR-aligned effective max batch or its head has waited max_delay.
+        // hold one model's requests. Each group flushes when it reaches its
+        // model's NR-aligned effective max batch (per-model geometry hint,
+        // carried on the requests) or its head has waited max_delay.
         let batcher = std::thread::spawn(move || {
-            let flush_at = policy.effective_max_batch();
             let mut pending: HashMap<String, PendingGroup> = HashMap::new();
             let mut disconnected = false;
             while !disconnected || !pending.is_empty() {
@@ -421,7 +482,7 @@ impl MultiCoordinator {
                     .iter()
                     .filter(|(_, g)| {
                         disconnected
-                            || g.reqs.len() >= flush_at
+                            || g.reqs.len() >= g.flush_at
                             || now.duration_since(g.since) >= policy.max_delay
                     })
                     .map(|(k, _)| k.clone())
@@ -455,11 +516,18 @@ impl MultiCoordinator {
                     }
                 };
                 match received {
-                    Some(r) => pending
-                        .entry(r.model.clone())
-                        .or_insert_with(|| PendingGroup { since: Instant::now(), reqs: Vec::new() })
-                        .reqs
-                        .push(r),
+                    Some(r) => {
+                        let flush_at = policy.effective_max_batch_for(r.positions);
+                        pending
+                            .entry(r.model.clone())
+                            .or_insert_with(|| PendingGroup {
+                                since: Instant::now(),
+                                flush_at,
+                                reqs: Vec::new(),
+                            })
+                            .reqs
+                            .push(r);
+                    }
                     None => disconnected = true,
                 }
             }
@@ -471,12 +539,21 @@ impl MultiCoordinator {
         // ExecState for its lifetime: the scratch buffers are
         // shape-agnostic, so one arena serves every resident model across
         // batches without reallocation once warmed up.
+        let intra_pool = policy.intra_pool();
         let mut worker_handles = Vec::with_capacity(workers);
         for _ in 0..workers {
             let batch_rx = Arc::clone(&batch_rx);
             let metrics = Arc::clone(&metrics);
             let registry = registry.clone();
             let mut state = ExecState::new();
+            if let Some(pool) = &intra_pool {
+                // Every resident (and future hot-swapped) model's large
+                // GEMMs share this one pool through the worker's state.
+                state.set_intra(crate::gemm::IntraOp::pool(
+                    Arc::clone(pool),
+                    crate::gemm::pool::DEFAULT_MIN_N,
+                ));
+            }
             worker_handles.push(std::thread::spawn(move || loop {
                 let batch = {
                     let guard = batch_rx.lock().expect("batch queue poisoned");
@@ -673,6 +750,7 @@ mod tests {
             max_batch: 10,
             max_delay: Duration::from_millis(100),
             positions_hint: 4,
+            ..Default::default()
         };
         let coord = Coordinator::start(tiny_quant_engine(), policy, 1);
         let client = coord.client();
@@ -685,6 +763,30 @@ mod tests {
         );
         assert!(sizes.iter().any(|&s| s > 1), "burst should co-batch, got {sizes:?}");
         coord.shutdown();
+    }
+
+    #[test]
+    fn intra_pool_serving_matches_serial_serving_bit_for_bit() {
+        // --intra-threads > 1 only changes who computes each GEMM strip:
+        // responses must be byte-identical to the serial coordinator's.
+        let eng = tiny_quant_engine();
+        let imgs: Vec<Tensor<f32>> = (0..6).map(|i| image(40 + i)).collect();
+        let serial = Coordinator::start(eng.clone(), BatchPolicy::default(), 1);
+        let want: Vec<Vec<f32>> =
+            imgs.iter().map(|x| serial.client().infer(x.clone()).unwrap().output).collect();
+        serial.shutdown();
+
+        let policy = BatchPolicy { intra_threads: 3, ..Default::default() };
+        let coord = Coordinator::start(eng, policy, 2);
+        let client = coord.client();
+        let pending: Vec<_> = imgs.iter().map(|x| client.submit(x.clone()).unwrap()).collect();
+        for ((id, rx), want) in pending.into_iter().zip(&want) {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.id, id);
+            assert_eq!(&resp.output, want, "pooled output diverged");
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 6);
     }
 
     #[test]

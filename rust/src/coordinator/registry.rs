@@ -30,6 +30,12 @@ pub struct ModelEntry {
     /// weight-side cost per request. Workers share it read-only, each with
     /// its own [`crate::graph::ExecState`].
     pub plan: Arc<PreparedGraph>,
+    /// `OH·OW` of this model's dominant conv layer
+    /// ([`QGraph::dominant_positions`]), derived from the artifact geometry
+    /// at install time. The multi-model batcher uses it as the per-model
+    /// `positions_hint`, so NR-aligned batch capping engages with each
+    /// model's real geometry — models in one registry can differ.
+    pub positions_hint: usize,
     /// Artifact path the entry was loaded from (empty for in-memory
     /// registrations).
     pub source: PathBuf,
@@ -81,15 +87,18 @@ impl ModelRegistry {
     }
 
     fn make_entry(artifact: ModelArtifact, source: PathBuf) -> Arc<ModelEntry> {
-        // Pack-once: decode → prepare happens here, off the request path;
-        // a hot-swap pays it before the new entry becomes visible.
+        // Pack-once: decode → prepare (and the geometry probe for the
+        // batching hint) happen here, off the request path; a hot-swap
+        // pays them before the new entry becomes visible.
         let plan = Arc::new(artifact.graph.prepare());
+        let positions_hint = artifact.graph.dominant_positions(artifact.input_shape);
         Arc::new(ModelEntry {
             name: artifact.name.clone(),
             version: artifact.version,
             input_shape: artifact.input_shape,
             graph: Arc::new(artifact.graph),
             plan,
+            positions_hint,
             source,
         })
     }
@@ -236,6 +245,15 @@ mod tests {
         assert_eq!(snapshot.version, 1);
         let x = Tensor::zeros(&[1, 16, 16, 3]);
         assert_eq!(snapshot.graph.run(&x).shape(), &[1, 4]);
+    }
+
+    #[test]
+    fn entries_derive_the_geometry_batching_hint_at_install() {
+        let reg = ModelRegistry::new();
+        let entry = reg.install(artifact("m", 1, 50), PathBuf::new());
+        // papernet at 16×16: conv0 dominates with OH·OW = 256.
+        assert_eq!(entry.positions_hint, 256);
+        assert_eq!(entry.positions_hint, entry.graph.dominant_positions(entry.input_shape));
     }
 
     #[test]

@@ -47,9 +47,18 @@ pub fn srdhm(a: i32, b: i32) -> i32 {
 /// accuracy; this function implements the fix-up semantics gemmlowp uses.
 #[inline]
 pub fn rounding_div_by_pot(x: i32, exponent: i32) -> i32 {
-    debug_assert!((0..=31).contains(&exponent));
+    debug_assert!(exponent >= 0, "rounding_div_by_pot is a right shift");
     if exponent == 0 {
         return x;
+    }
+    if exponent > 31 {
+        // `x >> e` with e ≥ 32 is an overflowing shift: debug builds panic
+        // and release builds wrap the shift amount mod 32, silently
+        // producing garbage. Saturate to the mathematically exact result
+        // instead: |x / 2^e| ≤ 2^31 / 2^32 = 0.5, with equality reached
+        // only by x = i32::MIN at e = 32 — a tie, rounded away from zero
+        // to −1; every other (x, e) rounds to 0.
+        return if exponent == 32 && x == i32::MIN { -1 } else { 0 };
     }
     let mask: i32 = (1i64 << exponent).wrapping_sub(1) as i32;
     let remainder = x & mask;
@@ -66,6 +75,16 @@ pub fn rounding_div_by_pot(x: i32, exponent: i32) -> i32 {
 pub fn saturating_rounding_mul_by_pot(x: i32, exponent: i32) -> i32 {
     if exponent <= 0 {
         rounding_div_by_pot(x, -exponent)
+    } else if exponent >= 32 {
+        // The min/max probes below would themselves be overflowing shifts
+        // (wrapped mod 32 in release); 2^exponent saturates every nonzero x.
+        if x > 0 {
+            i32::MAX
+        } else if x < 0 {
+            i32::MIN
+        } else {
+            0
+        }
     } else {
         let min = i32::MIN >> exponent;
         let max = i32::MAX >> exponent;
@@ -284,6 +303,32 @@ mod tests {
         assert_eq!(saturating_rounding_mul_by_pot(-(1 << 30), 2), i32::MIN);
         assert_eq!(saturating_rounding_mul_by_pot(3, 2), 12);
         assert_eq!(saturating_rounding_mul_by_pot(12, -2), 3);
+    }
+
+    #[test]
+    fn rounding_div_saturates_out_of_range_exponents() {
+        // exponent ≥ 32 must produce the exact mathematical rounding in
+        // debug AND release, not a mod-32-wrapped shift. Only
+        // x = i32::MIN at exponent 32 reaches the −0.5 tie (away from
+        // zero → −1); everything else rounds to 0.
+        assert_eq!(rounding_div_by_pot(i32::MAX, 32), 0);
+        assert_eq!(rounding_div_by_pot(i32::MAX, 63), 0);
+        assert_eq!(rounding_div_by_pot(1, 40), 0);
+        assert_eq!(rounding_div_by_pot(-1, 32), 0);
+        assert_eq!(rounding_div_by_pot(0, 100), 0);
+        assert_eq!(rounding_div_by_pot(i32::MIN, 32), -1);
+        assert_eq!(rounding_div_by_pot(i32::MIN + 1, 32), 0);
+        assert_eq!(rounding_div_by_pot(i32::MIN, 33), 0);
+        // The in-range boundary is untouched: e = 31 still divides.
+        assert_eq!(rounding_div_by_pot(i32::MAX, 31), 1);
+        assert_eq!(rounding_div_by_pot(i32::MIN, 31), -1);
+    }
+
+    #[test]
+    fn saturating_pot_handles_out_of_range_left_shifts() {
+        assert_eq!(saturating_rounding_mul_by_pot(1, 32), i32::MAX);
+        assert_eq!(saturating_rounding_mul_by_pot(-1, 40), i32::MIN);
+        assert_eq!(saturating_rounding_mul_by_pot(0, 100), 0);
     }
 
     #[test]

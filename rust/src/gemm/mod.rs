@@ -23,9 +23,11 @@ pub mod int8_trick;
 pub mod kernel;
 pub mod output;
 pub mod parallel;
+pub mod pool;
 pub mod prepared;
 
 pub use output::OutputStage;
+pub use pool::{IntraOp, IntraStrategy, WorkerPool};
 pub use prepared::{PreparedGemm, Scratch};
 
 use crate::quant::QuantizedMultiplier;

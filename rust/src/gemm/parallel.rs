@@ -9,20 +9,38 @@
 //! panel read-only, pack their RHS strip **directly from the strided
 //! source** into their own scratch (no intermediate strip copy), and write
 //! through disjoint `&mut` splits of the one output buffer (no per-thread
-//! `sub_out` gather). Workers are plain `std::thread::scope` threads (this
-//! offline build has no rayon; see DESIGN.md §Offline-substitutions). On
+//! `sub_out` gather).
+//!
+//! Two thread-provisioning flavours share that strip plan (this offline
+//! build has no rayon; see DESIGN.md §Offline-substitutions):
+//!
+//! * [`run_strips_scoped`] — plain `std::thread::scope` spawns, paying a
+//!   thread spawn + join per worker per call. Kept as the baseline the
+//!   persistent pool is benchmarked against.
+//! * [`super::pool::WorkerPool::run_strips`] — long-lived workers fed over
+//!   a job channel; the serving path ([`run_parallel_prepared`] and the
+//!   prepared conv/FC layers) routes through it so per-call threading cost
+//!   is packing, not thread creation.
+//!
+//! Both are bit-identical to serial execution for every thread count. On
 //! this single-core testbed thread counts > 1 measure scheduling overhead;
 //! `sim::ArmCoreModel` provides the multi-core latency estimates for
 //! Table 4.6 (DESIGN.md §Hardware-Adaptation).
 
+use super::pool::{carve_row_segments, carve_strips, WorkerPool};
 use super::prepared::{PreparedGemm, Scratch};
 use super::{output::OutputStage, Kernel, QGemm};
 
 /// Run the full quantized GEMM splitting the N dimension into `threads`
-/// strips, each computed on its own OS thread. Packs the weights into a
-/// one-shot prepared plan; callers that run the same weights repeatedly
-/// should build a [`PreparedGemm`] themselves and call
-/// [`run_parallel_prepared`] to pay the packing cost once.
+/// strips, each computed on its own scoped OS thread. Packs the weights
+/// into a one-shot prepared plan; callers that run the same weights
+/// repeatedly should build a [`PreparedGemm`] themselves and call
+/// [`run_parallel_prepared`] with a persistent [`WorkerPool`] to pay both
+/// the packing and the thread-spawn cost once.
+///
+/// All operand lengths are validated up front — a short RHS fails here
+/// with the real geometry, not deep inside strip packing with a misleading
+/// slice-bounds panic (or, worse, silently in the serial fallback).
 pub fn run_parallel(
     g: &QGemm,
     kern: Kernel,
@@ -33,21 +51,40 @@ pub fn run_parallel(
     threads: usize,
 ) {
     assert!(threads >= 1);
-    assert_eq!(out.len(), g.m * g.n);
+    assert_eq!(lhs.len(), g.m * g.k, "lhs must be M*K");
+    assert_eq!(rhs.len(), g.k * g.n, "rhs must be K*N");
+    assert_eq!(out.len(), g.m * g.n, "out must be M*N");
     if threads == 1 || g.n < 2 * threads {
         g.run(kern, lhs, rhs, stage, out);
         return;
     }
     let plan = PreparedGemm::from_qgemm(g, kern, lhs, stage.clone());
-    run_parallel_prepared(&plan, rhs, g.n, out, threads);
+    run_strips_scoped(&plan, rhs, g.n, out, threads);
 }
 
-/// Multi-threaded execution of a prepared plan over a row-major `K×N` RHS.
-/// The plan (packed weights, row sums, output stage) is shared read-only;
-/// each worker owns a [`Scratch`] and a disjoint set of per-row output
-/// segments, so no worker ever copies its strip out of or back into a
-/// gather buffer.
+/// Multi-threaded execution of a prepared plan over a row-major `K×N` RHS,
+/// routed through a persistent [`WorkerPool`] (the pool's degree decides
+/// the split; narrow `n` degenerates to serial). The plan (packed weights,
+/// row sums, output stage) is shared read-only; pool workers reuse their
+/// own long-lived [`Scratch`]es, the calling thread computes the first
+/// strip.
 pub fn run_parallel_prepared(
+    plan: &PreparedGemm,
+    rhs: &[u8],
+    n: usize,
+    out: &mut [u8],
+    pool: &WorkerPool,
+) {
+    pool.run_strips(plan, rhs, n, out, &mut Scratch::new());
+}
+
+/// The scoped-spawn baseline: same strip partition as the pool path, but
+/// every worker is a fresh `std::thread::scope` thread with a cold
+/// [`Scratch`]. This is what `run_parallel_prepared` did before the
+/// persistent pool existed; it remains the honest per-call-spawn
+/// comparison point for `iaoi bench --table pool` and
+/// `cargo bench --bench multithread`.
+pub fn run_strips_scoped(
     plan: &PreparedGemm,
     rhs: &[u8],
     n: usize,
@@ -62,27 +99,8 @@ pub fn run_parallel_prepared(
         plan.run(n, rhs, out, &mut Scratch::new());
         return;
     }
-    let strip = n.div_ceil(threads);
-    let strips: Vec<(usize, usize)> = (0..threads)
-        .map(|t| (t * strip, ((t + 1) * strip).min(n)))
-        .filter(|(a, b)| a < b)
-        .collect();
-
-    // Carve the output into disjoint &mut row segments, one set per worker:
-    // worker w gets rows' sub-slices [n0_w, n1_w) for every row.
-    let mut per_worker: Vec<Vec<&mut [u8]>> =
-        strips.iter().map(|_| Vec::with_capacity(m)).collect();
-    let mut rest: &mut [u8] = out;
-    for _ in 0..m {
-        let (row, tail) = rest.split_at_mut(n);
-        rest = tail;
-        let mut row_rest = row;
-        for (w, &(n0, n1)) in strips.iter().enumerate() {
-            let (seg, t) = row_rest.split_at_mut(n1 - n0);
-            row_rest = t;
-            per_worker[w].push(seg);
-        }
-    }
+    let strips = carve_strips(n, threads);
+    let per_worker = carve_row_segments(out, m, n, &strips);
 
     std::thread::scope(|scope| {
         let handles: Vec<_> = strips
@@ -146,7 +164,7 @@ mod tests {
         let rhs = pseudo(8, k * n);
         let stage = OutputStage {
             bias: (0..m as i32).map(|i| 50 - i * 13).collect(),
-            multiplier: super::output::Requant::PerChannel(
+            multiplier: crate::gemm::output::Requant::PerChannel(
                 (0..m)
                     .map(|i| QuantizedMultiplier::from_f64(0.0017 * 1.3f64.powi(i as i32 % 5)))
                     .collect(),
@@ -160,9 +178,15 @@ mod tests {
             let mut want = vec![0u8; m * n];
             plan.run(n, &rhs, &mut want, &mut Scratch::new());
             for threads in [2, 3, 5] {
-                let mut got = vec![0u8; m * n];
-                run_parallel_prepared(&plan, &rhs, n, &mut got, threads);
-                assert_eq!(want, got, "{kern:?} threads={threads}");
+                // Scoped-spawn baseline and pool-routed execution must both
+                // reproduce the serial bytes.
+                let mut scoped = vec![0u8; m * n];
+                run_strips_scoped(&plan, &rhs, n, &mut scoped, threads);
+                assert_eq!(want, scoped, "{kern:?} threads={threads} scoped");
+                let pool = WorkerPool::new(threads);
+                let mut pooled = vec![0u8; m * n];
+                run_parallel_prepared(&plan, &rhs, n, &mut pooled, &pool);
+                assert_eq!(want, pooled, "{kern:?} threads={threads} pool");
             }
         }
     }
@@ -179,5 +203,32 @@ mod tests {
         g.run(Kernel::Blocked, &lhs, &rhs, &stage, &mut a);
         run_parallel(&g, Kernel::Blocked, &lhs, &rhs, &stage, &mut b, 4);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "rhs must be K*N")]
+    fn short_rhs_fails_up_front_with_the_real_geometry() {
+        // Regression: a short RHS used to survive until strip packing (or
+        // the serial fallback) and die on an unrelated slice bound.
+        let (m, k, n) = (4, 16, 64);
+        let g = QGemm::new(m, k, n, 0, 0);
+        let lhs = pseudo(1, m * k);
+        let rhs = pseudo(2, k * n - 5);
+        let stage = OutputStage::bare(QuantizedMultiplier::from_f64(0.01), 0);
+        let mut out = vec![0u8; m * n];
+        run_parallel(&g, Kernel::Blocked, &lhs, &rhs, &stage, &mut out, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "rhs must be K*N")]
+    fn short_rhs_fails_up_front_even_on_the_serial_fallback() {
+        let (m, k, n) = (4, 16, 3);
+        let g = QGemm::new(m, k, n, 0, 0);
+        let lhs = pseudo(1, m * k);
+        let rhs = pseudo(2, k * n - 1);
+        let stage = OutputStage::bare(QuantizedMultiplier::from_f64(0.01), 0);
+        let mut out = vec![0u8; m * n];
+        // threads=4 with n=3 would fall back to the serial path.
+        run_parallel(&g, Kernel::Blocked, &lhs, &rhs, &stage, &mut out, 4);
     }
 }

@@ -1,0 +1,486 @@
+//! Persistent intra-op worker pool for the parallel quantized GEMM.
+//!
+//! The paper's multi-threaded numbers (§4.2.3, Table 4.6: 1.5–2.2× on 2–4
+//! cores) presuppose a runtime whose per-GEMM threading cost is *packing*,
+//! not thread creation. The scoped-spawn path
+//! ([`super::parallel::run_strips_scoped`]) pays a full OS-thread
+//! spawn + join per worker per GEMM call — fine for a one-shot benchmark,
+//! hopeless for serving where every conv layer of every batch would re-pay
+//! it. A [`WorkerPool`] amortizes that cost: threads are spawned once, jobs
+//! arrive over a channel, and a completion latch gives the caller the same
+//! blocking semantics as a scoped join. Each worker owns a persistent
+//! [`Scratch`], so its packing buffers warm up once and are reused across
+//! every GEMM the pool ever runs (the pool-side analogue of the prepared
+//! path's zero-alloc steady state; the dispatch itself still makes a few
+//! small per-call allocations — job boxes and the per-row segment lists,
+//! `O(threads + M)` — which are noise next to an `O(M·N·K)` GEMM).
+//!
+//! Work is split exactly like the scoped path: disjoint column strips of
+//! the output, each worker packing its RHS strip straight from the shared
+//! strided source and writing through disjoint `&mut` row segments. Every
+//! strip computes bit-identical integers regardless of who computes it, so
+//! pool execution is **bit-identical** to serial and to scoped-spawn
+//! execution for any thread count (property-tested in `rust/tests/pool.rs`).
+//!
+//! The pool is `Sync`: serving coordinators construct **one** pool
+//! (`BatchPolicy::intra_threads`, CLI `iaoi serve --intra-threads N`) and
+//! share it across all batch workers and hot-swapped models; concurrent
+//! `run_strips` calls simply interleave their jobs on the queue.
+//!
+//! [`IntraOp`] is the per-worker knob that rides in
+//! [`crate::nn::LayerScratch`]: a strategy (serial / scoped-spawn baseline /
+//! pool) plus the per-layer `min_n` threshold under which a layer's GEMM
+//! stays serial — small layers lose more to coordination than they gain
+//! from splitting, and `N = batch·OH·OW` shrinks fast down a CNN.
+
+use super::parallel::run_strips_scoped;
+use super::prepared::{PreparedGemm, Scratch};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+/// Default per-layer threshold on `N = batch·OH·OW` below which a GEMM is
+/// not worth splitting (8 NR-wide column blocks: at least a few blocks per
+/// worker once split).
+pub const DEFAULT_MIN_N: usize = 8 * super::kernel::NR;
+
+/// Completion latch: the dispatcher blocks until every submitted strip has
+/// run, which is what makes the borrow-erasure in [`WorkerPool::submit`]
+/// sound. Worker panics are counted (not swallowed) and re-raised on the
+/// dispatching thread, mirroring the scoped path's `join().expect(..)`.
+struct Latch {
+    /// (jobs still running, jobs that panicked)
+    state: Mutex<(usize, usize)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    /// Starts at zero jobs; [`Self::add_job`] counts each successful
+    /// enqueue, so the latch only ever waits for work that actually
+    /// reached the queue (a dispatch that dies mid-loop must not deadlock
+    /// on jobs it never sent).
+    fn new() -> Self {
+        Self { state: Mutex::new((0, 0)), cv: Condvar::new() }
+    }
+
+    fn add_job(&self) {
+        self.state.lock().expect("latch poisoned").0 += 1;
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut s = self.state.lock().expect("latch poisoned");
+        s.0 -= 1;
+        s.1 += usize::from(panicked);
+        if s.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every counted job completed; returns how many panicked.
+    /// Only meaningful once the dispatching thread has stopped adding jobs
+    /// (which is the only call pattern in [`WorkerPool::run_strips`]).
+    fn wait(&self) -> usize {
+        let mut s = self.state.lock().expect("latch poisoned");
+        while s.0 > 0 {
+            s = self.cv.wait(s).expect("latch poisoned");
+        }
+        s.1
+    }
+}
+
+/// One unit of work: a strip closure plus the latch it must tick. The
+/// closure's borrows have been erased to `'static` by [`WorkerPool::submit`];
+/// the latch protocol guarantees they are still live when it runs.
+struct Job {
+    work: Box<dyn FnOnce(&mut Scratch) + Send + 'static>,
+    latch: Arc<Latch>,
+}
+
+/// A persistent pool of GEMM worker threads (long-lived threads, job
+/// channel, completion latch). `new(n)` provisions an intra-op parallelism
+/// degree of `n` *counting the calling thread*: `n - 1` workers are
+/// spawned, and [`Self::run_strips`] computes one strip on the caller while
+/// the workers take the rest — so `new(1)` spawns nothing and runs serially.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.threads).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Spawn a pool with intra-op degree `threads` (≥ 1). Threads live until
+    /// the pool is dropped.
+    pub fn new(threads: usize) -> Self {
+        assert!(threads >= 1, "a pool needs at least the calling thread");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (1..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || {
+                    // One Scratch per worker for its whole lifetime: packing
+                    // buffers grow to their high-water mark and stay warm
+                    // across every GEMM this pool ever executes.
+                    let mut scratch = Scratch::new();
+                    loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool queue poisoned");
+                            guard.recv()
+                        };
+                        let Ok(Job { work, latch }) = job else { return };
+                        let result = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| work(&mut scratch)),
+                        );
+                        // Tick the latch even on panic so the dispatcher
+                        // never deadlocks; it re-raises after wait().
+                        latch.complete(result.is_err());
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), workers, threads }
+    }
+
+    /// The pool's intra-op parallelism degree (including the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Enqueue one borrowed job under `latch`.
+    ///
+    /// SAFETY contract (enforced by the single caller, `run_strips`): the
+    /// dispatcher blocks on `latch.wait()` before any borrow captured by
+    /// `work` goes out of scope, so erasing the lifetime cannot let a
+    /// worker touch freed data.
+    fn submit<'env>(&self, work: Box<dyn FnOnce(&mut Scratch) + Send + 'env>, latch: &Arc<Latch>) {
+        let work: Box<dyn FnOnce(&mut Scratch) + Send + 'static> =
+            unsafe { std::mem::transmute(work) };
+        let tx = self.tx.as_ref().expect("pool is shut down");
+        // Count the job before sending: once `send` succeeds a worker may
+        // already be running it, and the count must never trail the queue.
+        latch.add_job();
+        if tx.send(Job { work, latch: Arc::clone(latch) }).is_err() {
+            // Never queued — un-count it before propagating, so the
+            // wait-guard protecting earlier jobs cannot deadlock.
+            latch.complete(false);
+            panic!("pool workers exited");
+        }
+    }
+
+    /// Multi-threaded execution of a prepared plan over a row-major `K×N`
+    /// RHS — the persistent-pool counterpart of
+    /// [`super::parallel::run_strips_scoped`], bit-identical to it and to
+    /// [`PreparedGemm::run`]. The output is carved into disjoint column
+    /// strips; workers take strips 1.., the caller computes strip 0 with
+    /// its own `scratch` (so a 1-thread pool or a narrow `n` degenerates to
+    /// exactly the serial path).
+    pub fn run_strips(
+        &self,
+        plan: &PreparedGemm,
+        rhs: &[u8],
+        n: usize,
+        out: &mut [u8],
+        scratch: &mut Scratch,
+    ) {
+        let m = plan.m();
+        assert_eq!(rhs.len(), plan.k() * n, "rhs must be K*N");
+        assert_eq!(out.len(), m * n, "out must be M*N");
+        if self.threads == 1 || n < 2 * self.threads {
+            plan.run(n, rhs, out, scratch);
+            return;
+        }
+        let strips = carve_strips(n, self.threads);
+        let mut per_worker = carve_row_segments(out, m, n, &strips);
+        let latch = Arc::new(Latch::new());
+        {
+            // The guard waits for every *queued* job even if dispatch or
+            // the caller's own strip panics below: workers must never
+            // outlive the borrows their jobs captured (see `submit`), and
+            // the latch counts per successful enqueue so an aborted
+            // dispatch cannot deadlock on jobs it never sent.
+            let _all_jobs_done = WaitGuard(latch.as_ref());
+            // Dispatch strips 1.. to the workers first so they compute
+            // while the caller handles strip 0.
+            let mut segs0 = None;
+            for (&(n0, _), mut segs) in strips.iter().zip(per_worker.drain(..)) {
+                if segs0.is_none() {
+                    segs0 = Some(segs);
+                    continue;
+                }
+                self.submit(
+                    Box::new(move |scratch: &mut Scratch| {
+                        plan.run_strip(rhs, n, n0, &mut segs, scratch);
+                    }),
+                    &latch,
+                );
+            }
+            let mut segs0 = segs0.expect("at least one strip");
+            plan.run_strip(rhs, n, strips[0].0, &mut segs0, scratch);
+        }
+        // The latch is already released; this re-read is immediate.
+        let panicked = latch.wait();
+        assert_eq!(panicked, 0, "gemm pool worker panicked");
+    }
+}
+
+/// Blocks on the latch when dropped — the unwind-safety net for
+/// [`WorkerPool::run_strips`].
+struct WaitGuard<'a>(&'a Latch);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channel ends every worker's recv loop.
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Split `[0, n)` into up to `threads` contiguous non-empty strips — the
+/// one partition every parallel path (scoped and pooled) uses, so the two
+/// are trivially bit-identical per strip.
+pub(crate) fn carve_strips(n: usize, threads: usize) -> Vec<(usize, usize)> {
+    let strip = n.div_ceil(threads);
+    (0..threads)
+        .map(|t| (t * strip, ((t + 1) * strip).min(n)))
+        .filter(|(a, b)| a < b)
+        .collect()
+}
+
+/// Carve a row-major `M×N` output into disjoint `&mut` row segments, one
+/// `Vec` (of `M` segments) per strip: strip `w` gets each row's sub-slice
+/// `[n0_w, n1_w)`. No worker ever copies its result through a gather
+/// buffer.
+pub(crate) fn carve_row_segments<'o>(
+    out: &'o mut [u8],
+    m: usize,
+    n: usize,
+    strips: &[(usize, usize)],
+) -> Vec<Vec<&'o mut [u8]>> {
+    let mut per_worker: Vec<Vec<&'o mut [u8]>> =
+        strips.iter().map(|_| Vec::with_capacity(m)).collect();
+    let mut rest = out;
+    for _ in 0..m {
+        let (row, tail) = rest.split_at_mut(n);
+        rest = tail;
+        let mut row_rest = row;
+        for (w, &(n0, n1)) in strips.iter().enumerate() {
+            let (seg, t) = row_rest.split_at_mut(n1 - n0);
+            row_rest = t;
+            per_worker[w].push(seg);
+        }
+    }
+    per_worker
+}
+
+/// How a prepared layer parallelizes its GEMM across the N (column)
+/// dimension.
+#[derive(Clone, Debug, Default)]
+pub enum IntraStrategy {
+    /// Single-threaded (the zero-alloc serving default).
+    #[default]
+    Serial,
+    /// Spawn scoped OS threads per GEMM call — the pre-pool baseline, kept
+    /// for apples-to-apples benchmarking of what the pool amortizes.
+    Scoped(usize),
+    /// Submit strips to a shared persistent [`WorkerPool`].
+    Pool(Arc<WorkerPool>),
+}
+
+/// Per-worker intra-op parallelism configuration, carried by
+/// [`crate::nn::LayerScratch`] so every prepared conv/FC layer can consult
+/// it without threading an extra parameter through the layer APIs. All
+/// strategies are bit-identical; they only change *who* computes each
+/// output strip.
+#[derive(Clone, Debug)]
+pub struct IntraOp {
+    pub strategy: IntraStrategy,
+    /// Per-layer threshold: a layer whose GEMM has `N < min_n` runs serial
+    /// even when a pool is attached.
+    pub min_n: usize,
+}
+
+impl Default for IntraOp {
+    fn default() -> Self {
+        Self { strategy: IntraStrategy::Serial, min_n: DEFAULT_MIN_N }
+    }
+}
+
+impl IntraOp {
+    /// Serial execution (the default).
+    pub fn serial() -> Self {
+        Self::default()
+    }
+
+    /// Route qualifying layers through a shared persistent pool.
+    pub fn pool(pool: Arc<WorkerPool>, min_n: usize) -> Self {
+        Self { strategy: IntraStrategy::Pool(pool), min_n }
+    }
+
+    /// Scoped-spawn baseline at the given degree (benchmarking only).
+    pub fn scoped(threads: usize, min_n: usize) -> Self {
+        Self { strategy: IntraStrategy::Scoped(threads), min_n }
+    }
+
+    /// Execute a prepared GEMM under this strategy: split across threads
+    /// when `n` clears the per-layer threshold, serial otherwise.
+    /// Bit-identical to [`PreparedGemm::run`] in every mode.
+    pub fn run(
+        &self,
+        plan: &PreparedGemm,
+        rhs: &[u8],
+        n: usize,
+        out: &mut [u8],
+        scratch: &mut Scratch,
+    ) {
+        match &self.strategy {
+            IntraStrategy::Pool(pool) if n >= self.min_n && pool.threads() > 1 => {
+                pool.run_strips(plan, rhs, n, out, scratch);
+            }
+            IntraStrategy::Scoped(threads) if n >= self.min_n && *threads > 1 => {
+                run_strips_scoped(plan, rhs, n, out, *threads);
+            }
+            _ => plan.run(n, rhs, out, scratch),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::output::{OutputStage, Requant};
+    use crate::gemm::{Kernel, QGemm};
+    use crate::quant::QuantizedMultiplier;
+
+    fn pseudo(seed: u64, n: usize) -> Vec<u8> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(17);
+                (s >> 56) as u8
+            })
+            .collect()
+    }
+
+    fn plan_and_reference(
+        m: usize,
+        k: usize,
+        n: usize,
+        kern: Kernel,
+    ) -> (PreparedGemm, Vec<u8>, Vec<u8>) {
+        let g = QGemm::new(m, k, n, 120, 99);
+        let lhs: Vec<u8> = pseudo(3, m * k).iter().map(|&v| v.max(1)).collect();
+        let rhs = pseudo(4, k * n);
+        let stage = OutputStage {
+            bias: (0..m as i32).map(|i| i * 31 - 90).collect(),
+            multiplier: Requant::PerChannel(
+                (0..m)
+                    .map(|i| QuantizedMultiplier::from_f64(0.002 * 1.4f64.powi(i as i32 % 4)))
+                    .collect(),
+            ),
+            out_zero: 11,
+            clamp_min: 0,
+            clamp_max: 255,
+        };
+        let plan = PreparedGemm::from_qgemm(&g, kern, &lhs, stage);
+        let mut want = vec![0u8; m * n];
+        plan.run(n, &rhs, &mut want, &mut Scratch::new());
+        (plan, rhs, want)
+    }
+
+    #[test]
+    fn pool_matches_serial_for_all_thread_counts() {
+        let (m, k, n) = (7, 80, 53);
+        for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+            let (plan, rhs, want) = plan_and_reference(m, k, n, kern);
+            for threads in [1usize, 2, 3, 8] {
+                let pool = WorkerPool::new(threads);
+                let mut scratch = Scratch::new();
+                let mut got = vec![0u8; m * n];
+                pool.run_strips(&plan, &rhs, n, &mut got, &mut scratch);
+                assert_eq!(want, got, "{kern:?} threads={threads}");
+                // Warm re-run through the same pool and caller scratch.
+                let mut again = vec![0u8; m * n];
+                pool.run_strips(&plan, &rhs, n, &mut again, &mut scratch);
+                assert_eq!(want, again, "{kern:?} threads={threads} warm");
+            }
+        }
+    }
+
+    #[test]
+    fn one_pool_serves_many_widths_and_plans() {
+        let pool = WorkerPool::new(3);
+        let mut scratch = Scratch::new();
+        for &(m, k, n) in &[(4usize, 33usize, 40usize), (9, 65, 7), (1, 8, 128), (6, 100, 17)] {
+            let (plan, rhs, want) = plan_and_reference(m, k, n, Kernel::Int8Pairwise);
+            let mut got = vec![0u8; m * n];
+            pool.run_strips(&plan, &rhs, n, &mut got, &mut scratch);
+            assert_eq!(want, got, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn pool_is_shared_across_caller_threads() {
+        // The serving shape: several batch workers drive one pool
+        // concurrently; every caller must still see exact results.
+        let (m, k, n) = (6, 64, 96);
+        let (plan, rhs, want) = plan_and_reference(m, k, n, Kernel::Blocked);
+        let pool = WorkerPool::new(4);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let (pool, plan, rhs, want) = (&pool, &plan, &rhs, &want);
+                scope.spawn(move || {
+                    let mut scratch = Scratch::new();
+                    for _ in 0..8 {
+                        let mut got = vec![0u8; m * n];
+                        pool.run_strips(plan, rhs, n, &mut got, &mut scratch);
+                        assert_eq!(want, &got);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn intra_op_threshold_and_strategies_agree() {
+        let (m, k, n) = (5, 48, 64);
+        let (plan, rhs, want) = plan_and_reference(m, k, n, Kernel::Int8Pairwise);
+        let pool = Arc::new(WorkerPool::new(2));
+        for intra in [
+            IntraOp::serial(),
+            IntraOp::scoped(2, 1),
+            IntraOp::scoped(2, n + 1), // below threshold → serial
+            IntraOp::pool(Arc::clone(&pool), 1),
+            IntraOp::pool(Arc::clone(&pool), n + 1),
+        ] {
+            let mut got = vec![0u8; m * n];
+            intra.run(&plan, &rhs, n, &mut got, &mut Scratch::new());
+            assert_eq!(want, got, "{:?}", intra.strategy);
+        }
+    }
+
+    #[test]
+    fn carve_strips_covers_exactly_once() {
+        for (n, threads) in [(10usize, 4usize), (9, 4), (16, 2), (7, 7), (100, 3), (8, 8)] {
+            let strips = carve_strips(n, threads);
+            assert!(strips.len() <= threads);
+            assert_eq!(strips[0].0, 0);
+            assert_eq!(strips.last().unwrap().1, n);
+            for w in strips.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "strips must tile [0, n)");
+            }
+            assert!(strips.iter().all(|(a, b)| a < b));
+        }
+    }
+}

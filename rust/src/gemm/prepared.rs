@@ -535,7 +535,7 @@ mod tests {
     fn demo_stage(m: usize) -> OutputStage {
         OutputStage {
             bias: (0..m as i32).map(|i| i * 37 - 100).collect(),
-            multiplier: super::output::Requant::PerTensor(QuantizedMultiplier::from_f64(0.0041)),
+            multiplier: crate::gemm::output::Requant::PerTensor(QuantizedMultiplier::from_f64(0.0041)),
             out_zero: 13,
             clamp_min: 2,
             clamp_max: 251,
@@ -547,7 +547,7 @@ mod tests {
     fn per_channel_stage(m: usize) -> OutputStage {
         OutputStage {
             bias: (0..m as i32).map(|i| i * 11 - 40).collect(),
-            multiplier: super::output::Requant::PerChannel(
+            multiplier: crate::gemm::output::Requant::PerChannel(
                 (0..m)
                     .map(|i| QuantizedMultiplier::from_f64(0.0008 * 1.7f64.powi(i as i32 % 7)))
                     .collect(),

@@ -504,7 +504,36 @@ impl QGraph {
                 },
             })
             .collect();
-        PreparedGraph { input_params: self.input_params, nodes }
+        PreparedGraph { input_params: self.input_params, nodes, intra: None }
+    }
+
+    /// `OH·OW` of the dominant (highest-MAC) conv layer at batch 1 — the
+    /// geometry-derived value for
+    /// [`crate::coordinator::BatchPolicy::positions_hint`], so NR-aligned
+    /// batch capping engages on real models instead of relying on an
+    /// operator-supplied hint. Runs one zero-input probe inference to
+    /// resolve layer shapes (install/load-time cost, never on the request
+    /// path). Returns 1 (the neutral hint) for graphs without conv layers.
+    pub fn dominant_positions(&self, input_shape: [usize; 3]) -> usize {
+        let [h, w, c] = input_shape;
+        let probe = QTensor::real_zeros(&[1, h, w, c], self.input_params);
+        let outs = self.run_all_q(&probe);
+        let mut best_macs = 0u64;
+        let mut positions = 1usize;
+        for (node, out) in self.nodes.iter().zip(&outs) {
+            if let QOp::Conv(conv) = &node.op {
+                let cout = conv.weights.dim(0);
+                let k = (conv.weights.len() / cout) as u64;
+                let out_elems = out.data.len() as u64;
+                let macs = out_elems * k;
+                if macs > best_macs {
+                    best_macs = macs;
+                    // Batch is 1, so N = OH·OW exactly.
+                    positions = out.data.len() / cout;
+                }
+            }
+        }
+        positions
     }
 }
 
@@ -540,6 +569,14 @@ struct PreparedNode {
 pub struct PreparedGraph {
     pub input_params: QuantParams,
     nodes: Vec<PreparedNode>,
+    /// Graph-level intra-op parallelism: when set, [`Self::run_q`] applies
+    /// it to the executing state for the duration of the run (restoring
+    /// the state's own setting afterwards), so every worker driving this
+    /// plan splits large conv/FC GEMMs across the shared
+    /// [`crate::gemm::WorkerPool`]. `None` (the default) leaves each
+    /// [`ExecState`]'s own setting in force (serial unless the state was
+    /// configured via [`ExecState::set_intra`]).
+    intra: Option<crate::gemm::IntraOp>,
 }
 
 /// Per-worker mutable execution state: the layer scratch arena plus
@@ -559,6 +596,14 @@ impl ExecState {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Configure this worker's intra-op GEMM parallelism (e.g. attach the
+    /// coordinator's shared [`crate::gemm::WorkerPool`]). Serial by
+    /// default; a graph-level setting ([`PreparedGraph::set_intra`]) takes
+    /// precedence while running that graph.
+    pub fn set_intra(&mut self, intra: crate::gemm::IntraOp) {
+        self.scratch.intra = intra;
+    }
 }
 
 impl PreparedGraph {
@@ -566,11 +611,33 @@ impl PreparedGraph {
         self.nodes.len()
     }
 
+    /// Attach graph-level intra-op parallelism: every subsequent
+    /// [`Self::run_q`] applies `intra` to the executing state. Prepared
+    /// execution stays bit-identical — the pool only changes who computes
+    /// each GEMM column strip.
+    pub fn set_intra(&mut self, intra: crate::gemm::IntraOp) {
+        self.intra = Some(intra);
+    }
+
+    /// Builder-style [`Self::set_intra`].
+    pub fn with_intra(mut self, intra: crate::gemm::IntraOp) -> Self {
+        self.intra = Some(intra);
+        self
+    }
+
     /// Run from an already-quantized input — the serving hot path. Returns
     /// a borrow of the final node's output slot inside `state` (copy it out
     /// if it must outlive the next run).
     pub fn run_q<'a>(&self, qin: &QTensor, state: &'a mut ExecState) -> &'a QTensor {
         assert!(!self.nodes.is_empty(), "empty graph");
+        // Graph-level intra-op config takes precedence for the duration of
+        // this run only; the state's own setting is restored afterwards so
+        // one ExecState can serve differently-configured plans. Cheap: an
+        // Arc clone in, a swap back out, no heap allocation.
+        let saved_intra = self
+            .intra
+            .as_ref()
+            .map(|intra| std::mem::replace(&mut state.scratch.intra, intra.clone()));
         while state.outs.len() < self.nodes.len() {
             state.outs.push(QTensor::default());
         }
@@ -614,6 +681,9 @@ impl PreparedGraph {
                 PreparedOp::Softmax => qsoftmax_into(x, dst, &mut state.scratch),
                 PreparedOp::Logistic => qlogistic_into(x, dst),
             }
+        }
+        if let Some(prev) = saved_intra {
+            state.scratch.intra = prev;
         }
         &state.outs[self.nodes.len() - 1]
     }
@@ -798,6 +868,52 @@ mod tests {
         let wantf = q.run(&batches[1]);
         let gotf = plan.run(&batches[1], &mut state);
         assert_eq!(wantf.data(), gotf.data());
+    }
+
+    #[test]
+    fn dominant_positions_finds_the_heaviest_conv() {
+        use crate::graph::builders;
+        use crate::quantize::{quantize_graph, QuantizeOptions};
+        let g = builders::papernet_random(4, FusedActivation::Relu6, 77);
+        let mut rng = Rng::seeded(77);
+        let mut d = vec![0f32; 16 * 16 * 3];
+        for v in d.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let calib = vec![Tensor::from_vec(&[1, 16, 16, 3], d)];
+        let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
+        // conv0 dominates at 16×16 input: 16·16·8 outputs × K = 27 MACs
+        // beats both pointwise layers; its OH·OW is 256.
+        assert_eq!(q.dominant_positions([16, 16, 3]), 256);
+        // And at a different geometry the hint scales with it.
+        assert_eq!(q.dominant_positions([8, 8, 3]), 64);
+    }
+
+    #[test]
+    fn graph_level_intra_pool_is_bit_identical() {
+        use crate::gemm::{IntraOp, WorkerPool};
+        use crate::graph::builders;
+        use crate::quantize::{quantize_graph, QuantizeOptions};
+        use std::sync::Arc;
+        let mut rng = Rng::seeded(218);
+        let mut d = vec![0f32; 2 * 16 * 16 * 3];
+        for v in d.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let x = Tensor::from_vec(&[2, 16, 16, 3], d);
+        let g = builders::papernet_random(6, FusedActivation::Relu6, 218);
+        let (_, q) = quantize_graph(&g, &[x.clone()], QuantizeOptions::default());
+        let qin = QTensor::quantize(&x, q.input_params);
+        let want = q.run_q(&qin);
+
+        let pool = Arc::new(WorkerPool::new(3));
+        // min_n = 1 forces every conv/FC through the pool.
+        let plan = q.prepare().with_intra(IntraOp::pool(pool, 1));
+        let mut state = ExecState::new();
+        let got = plan.run_q(&qin, &mut state);
+        assert_eq!(want.data.data(), got.data.data());
+        let again = plan.run_q(&qin, &mut state);
+        assert_eq!(want.data.data(), again.data.data(), "warm");
     }
 
     #[test]

@@ -377,22 +377,30 @@ pub fn serve(
     requests: usize,
     max_batch: usize,
     workers: usize,
+    intra_threads: usize,
 ) -> Result<()> {
     let base = artifacts.join("base");
     let spec = crate::train::ModelSpec::load(&base)?;
     let model = load_trained(model_path)?;
     let ds = ClassificationSet::new(spec.resolution, spec.num_classes, 7);
-    for (label, engine) in [
-        (
-            "int8",
-            EngineKind::Quant(Arc::new(papernet_int8(
-                &model.params,
-                &model.ranges,
-                &spec.export_keys,
-                FusedActivation::Relu6,
-                QuantizeOptions::default(),
-            )?)),
-        ),
+    let int8_graph = papernet_int8(
+        &model.params,
+        &model.ranges,
+        &spec.export_keys,
+        FusedActivation::Relu6,
+        QuantizeOptions::default(),
+    )?;
+    // Geometry-derived batching hint: OH·OW of the dominant conv layer, so
+    // NR-aligned batch capping engages on the real model instead of the
+    // neutral default.
+    let positions_hint =
+        int8_graph.dominant_positions([spec.resolution, spec.resolution, spec.channels]);
+    println!(
+        "int8 batching: positions_hint {positions_hint} (dominant conv OH·OW), \
+         intra-threads {intra_threads}"
+    );
+    for (label, engine, hint) in [
+        ("int8", EngineKind::Quant(Arc::new(int8_graph)), positions_hint),
         (
             "float32",
             EngineKind::Float(Arc::new(papernet_from_params(
@@ -400,9 +408,17 @@ pub fn serve(
                 &spec.export_keys,
                 FusedActivation::Relu6,
             )?)),
+            // The float baseline runs no quantized GEMM; leave the
+            // alignment preference off.
+            1,
         ),
     ] {
-        let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(2), ..Default::default() };
+        let policy = BatchPolicy {
+            max_batch,
+            max_delay: Duration::from_millis(2),
+            positions_hint: hint,
+            intra_threads,
+        };
         let coord = Coordinator::start(engine, policy, workers);
         let client = coord.client();
         let start = Instant::now();
@@ -514,6 +530,7 @@ pub fn serve_registry(
     requests: usize,
     max_batch: usize,
     workers: usize,
+    intra_threads: usize,
 ) -> Result<()> {
     let registry = ModelRegistry::load_dir(models_dir)?;
     let names = registry.names();
@@ -521,14 +538,22 @@ pub fn serve_registry(
     for name in &names {
         let entry = registry.resolve(name)?;
         println!(
-            "  {name} v{} ({} nodes, input {:?}, from {:?})",
+            "  {name} v{} ({} nodes, input {:?}, positions_hint {}, from {:?})",
             entry.version,
             entry.graph.nodes.len(),
             entry.input_shape,
+            entry.positions_hint,
             entry.source
         );
     }
-    let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(2), ..Default::default() };
+    // positions_hint stays at the neutral default here: the multi-model
+    // batcher uses each entry's own geometry-derived hint per group.
+    let policy = BatchPolicy {
+        max_batch,
+        max_delay: Duration::from_millis(2),
+        intra_threads,
+        ..Default::default()
+    };
     let coord = MultiCoordinator::start(registry.clone(), policy, workers);
     let client = coord.client();
     // Deterministic random inputs matched to each model's exact [H, W, C] —
@@ -578,7 +603,8 @@ pub fn run_table(id: &str, fast: bool) -> Result<()> {
         "4.7" => tables::table_4_7(fast),
         "4.8" => tables::table_4_8(fast),
         "quant-modes" => tables::table_quant_modes(fast),
-        other => Err(anyhow!("unknown table {other} (4.1-4.8, quant-modes)")),
+        "pool" => tables::table_pool(fast),
+        other => Err(anyhow!("unknown table {other} (4.1-4.8, quant-modes, pool)")),
     }
 }
 

@@ -371,6 +371,63 @@ pub fn table_quant_modes(fast: bool) -> Result<()> {
     Ok(())
 }
 
+/// `iaoi bench --table pool` — persistent worker pool vs per-call scoped
+/// spawns vs serial on a detector-shaped prepared GEMM (72×648, the §4.2.3
+/// face-detector geometry) across activation widths N. The pool and scoped
+/// paths split identically; the delta is pure thread provisioning, i.e.
+/// exactly what the persistent pool amortizes. On a single core the
+/// absolute speedups are ≤ 1; the pool-vs-scoped ratio is meaningful
+/// everywhere.
+pub fn table_pool(fast: bool) -> Result<()> {
+    use crate::gemm::output::OutputStage;
+    use crate::gemm::parallel::run_strips_scoped;
+    use crate::gemm::{Kernel, PreparedGemm, QGemm, Scratch, WorkerPool};
+    use crate::quant::QuantizedMultiplier;
+    use super::time_median_ms;
+
+    let (m, k) = (72usize, 648usize);
+    let threads = 4usize;
+    let iters = if fast { 5 } else { 15 };
+    let mut rng = crate::data::Rng::seeded(46);
+    let lhs: Vec<u8> = (0..m * k).map(|_| 1 + rng.below(255) as u8).collect();
+    let g = QGemm::new(m, k, 1, 128, 111);
+    let stage = OutputStage::bare(QuantizedMultiplier::from_f64(0.003), 10);
+    let plan = PreparedGemm::from_qgemm(&g, Kernel::Int8Pairwise, &lhs, stage);
+    let pool = WorkerPool::new(threads);
+    let mut pool_scratch = Scratch::new();
+
+    println!(
+        "# Pool — persistent worker pool vs scoped spawns vs serial ({m}x{k}, {threads} threads)"
+    );
+    println!("| N | serial ms | scoped ms | pool ms | pool vs scoped | pool vs serial |");
+    println!("|---|---|---|---|---|---|");
+    for n in [64usize, 256, 1024, 4096] {
+        let rhs: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        let mut serial_out = vec![0u8; m * n];
+        let mut scoped_out = vec![0u8; m * n];
+        let mut pool_out = vec![0u8; m * n];
+        let mut serial_scratch = Scratch::new();
+        let serial_ms =
+            time_median_ms(iters, || plan.run(n, &rhs, &mut serial_out, &mut serial_scratch));
+        let scoped_ms =
+            time_median_ms(iters, || run_strips_scoped(&plan, &rhs, n, &mut scoped_out, threads));
+        let pool_ms = time_median_ms(iters, || {
+            pool.run_strips(&plan, &rhs, n, &mut pool_out, &mut pool_scratch)
+        });
+        // The three paths must agree bit-for-bit or the timings are noise.
+        anyhow::ensure!(serial_out == scoped_out, "scoped diverged at N={n}");
+        anyhow::ensure!(serial_out == pool_out, "pool diverged at N={n}");
+        println!(
+            "| {n} | {serial_ms:.3} | {scoped_ms:.3} | {pool_ms:.3} | {:.2}x | {:.2}x |",
+            scoped_ms / pool_ms.max(1e-9),
+            serial_ms / pool_ms.max(1e-9),
+        );
+    }
+    println!("\n(host cores: {}; single-core testbeds measure provisioning overhead only)",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    Ok(())
+}
+
 /// Used by `eval` when a saved model exists; re-exported for tests.
 pub fn quick_eval(model_path: &Path) -> Result<f32> {
     let arts = artifacts();

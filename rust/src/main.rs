@@ -10,9 +10,9 @@
 //!                 [--seed S] [--model FILE --artifacts DIR]
 //!                 [--quant-mode per-tensor|per-channel]
 //! iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B]
-//!                 [--workers W]
+//!                 [--workers W] [--intra-threads T]
 //! iaoi quickstart [--artifacts DIR]
-//! iaoi bench      --table 4.1|...|4.8|quant-modes | --fig 1.1c|4.1|4.2|4.3 [--fast]
+//! iaoi bench      --table 4.1|...|4.8|quant-modes|pool | --fig 1.1c|4.1|4.2|4.3 [--fast]
 //! ```
 //!
 //! `export` writes a `.iaoiq` quantized-model artifact; `serve --models`
@@ -75,9 +75,9 @@ fn print_usage() {
          usage:\n  iaoi train      --steps N [--artifacts DIR] [--out FILE] [--seed S]\n  \
          iaoi eval       --model FILE [--artifacts DIR] [--batches N]\n  \
          iaoi export     --out FILE [--name N] [--model-version V] [--classes C] [--seed S] [--model FILE --artifacts DIR] [--quant-mode per-tensor|per-channel]\n  \
-         iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B] [--workers W]\n  \
+         iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B] [--workers W] [--intra-threads T]\n  \
          iaoi quickstart [--artifacts DIR]\n  \
-         iaoi bench      --table <id> | --fig <id> [--fast]  (tables 4.1-4.8, quant-modes)\n"
+         iaoi bench      --table <id> | --fig <id> [--fast]  (tables 4.1-4.8, quant-modes, pool)\n"
     );
 }
 
@@ -124,16 +124,27 @@ fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
     )
 }
 
+/// `iaoi serve`: `--intra-threads N` (default 1) sizes the persistent
+/// intra-op GEMM worker pool every batch worker shares; 1 keeps the serial
+/// zero-alloc path.
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let requests: usize = get(flags, "requests", "256").parse()?;
     let max_batch: usize = get(flags, "max-batch", "8").parse()?;
     let workers: usize = get(flags, "workers", "1").parse()?;
+    let intra_threads: usize = get(flags, "intra-threads", "1").parse()?;
+    anyhow::ensure!(intra_threads >= 1, "--intra-threads must be >= 1");
     if let Some(models_dir) = flags.get("models") {
-        return harness::serve_registry(&PathBuf::from(models_dir), requests, max_batch, workers);
+        return harness::serve_registry(
+            &PathBuf::from(models_dir),
+            requests,
+            max_batch,
+            workers,
+            intra_threads,
+        );
     }
     let artifacts = PathBuf::from(get(flags, "artifacts", "artifacts"));
     let model = PathBuf::from(get(flags, "model", "artifacts/model_trained.bin"));
-    harness::serve(&artifacts, &model, requests, max_batch, workers)
+    harness::serve(&artifacts, &model, requests, max_batch, workers, intra_threads)
 }
 
 fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {

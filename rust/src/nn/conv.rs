@@ -159,11 +159,14 @@ impl PreparedConv2d {
         let k = self.kh * self.kw * cin;
         let n = batch * oh * ow;
 
-        let LayerScratch { gemm, cols, staging, .. } = scratch;
+        let LayerScratch { gemm, cols, staging, intra, .. } = scratch;
         let cols = grow(cols, k * n);
         im2col_into(x, self.kh, self.kw, self.stride, pad_h, pad_w, oh, ow, self.input_zero as u8, cols);
         let staging = grow(staging, self.cout * n);
-        self.plan.run(n, cols, staging, gemm);
+        // Large-N GEMMs split across the worker's intra-op pool (serial by
+        // default; bit-identical either way — the pool only changes who
+        // computes each column strip).
+        intra.run(&self.plan, cols, n, staging, gemm);
 
         out.params = self.output_params;
         // Safe: the scatter below writes every output element exactly once.
@@ -525,6 +528,77 @@ mod tests {
         );
         // And it must still track the float layer within a few output LSBs.
         assert!(pc_diff < (op.scale * 5.0) as f32 + 0.05, "pc diff {pc_diff}");
+    }
+
+    #[test]
+    fn near_dead_per_channel_weights_requantize_to_exact_zero() {
+        // Headline regression for the release-mode shift overflow: a
+        // per-channel conv whose one channel has max_abs ≈ 1e-8 weights
+        // gets an eq. 5 multiplier below 2^-32, i.e. `shift < -31`.
+        // `QuantizedMultiplier::from_f64` must flush that to the exact zero
+        // encoding so the channel outputs the quantized zero — identical in
+        // debug and release (pre-fix, debug panicked on the overflowing
+        // shift while release wrapped the shift amount mod 32 and emitted
+        // garbage activations). CI runs this test in both profiles.
+        use crate::quant::{ChannelAxis, ChannelQuantParams};
+        let mut rng = Rng::seeded(135);
+        let mut fl = random_float_conv(&mut rng, 4, 3, 3, 2);
+        fl.bias = vec![0.0; 4];
+        {
+            // Channel 0 (outermost axis): magnitudes collapse to ~1e-8.
+            let per = fl.weights.len() / 4;
+            let wd = fl.weights.data_mut();
+            for t in 0..per {
+                wd[t] = if wd[t] >= 0.0 { 1e-8 } else { -1e-8 };
+            }
+        }
+        let ip = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let op = QuantParams::from_min_max(-4.0, 4.0, 0, 255);
+        let cq = ChannelQuantParams::for_weights(fl.weights.data(), 4, ChannelAxis::Outer, 8);
+        let pc = QConv2d {
+            weights: Tensor::from_vec(
+                fl.weights.shape(),
+                cq.quantize_slice(fl.weights.data(), ChannelAxis::Outer),
+            ),
+            bias: cq.quantize_bias(&fl.bias, ip.scale),
+            weight_quant: WeightQuant::PerChannel(cq),
+            stride: 1,
+            padding: Padding::Same,
+            input_params: ip,
+            output_params: op,
+            activation: FusedActivation::None,
+        };
+        // The derived stage must carry the exact zero encoding for row 0.
+        let stage = pc.output_stage();
+        let m0 = stage.multiplier.for_row(0);
+        assert_eq!((m0.m0, m0.shift), (0, 0), "underflowing channel multiplier must flush");
+
+        let mut xd = vec![0f32; 6 * 6 * 2];
+        for v in xd.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let qx = QTensor::quantize(&Tensor::from_vec(&[1, 6, 6, 2], xd), ip);
+        let zero_q = op.zero_point as u8;
+        let mut scratch = crate::nn::LayerScratch::new();
+        let mut prepared_out = QTensor::default();
+        for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+            let y = pc.run(&qx, kern);
+            let yd = y.data.data();
+            // NHWC: channel 0 at every 4th byte must be the quantized zero.
+            assert!(
+                yd.iter().step_by(4).all(|&v| v == zero_q),
+                "{kern:?}: near-dead channel must be exact quantized zero, got {:?}",
+                yd.iter().step_by(4).take(8).collect::<Vec<_>>()
+            );
+            // Sanity: a healthy channel still carries signal.
+            assert!(
+                yd.iter().skip(1).step_by(4).any(|&v| v != zero_q),
+                "{kern:?}: healthy channels should not be all-zero"
+            );
+            // Prepared path agrees byte for byte.
+            pc.prepare(kern).run_into(&qx, &mut prepared_out, &mut scratch);
+            assert_eq!(yd, prepared_out.data.data(), "{kern:?} prepared");
+        }
     }
 
     #[test]

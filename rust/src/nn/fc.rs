@@ -127,7 +127,7 @@ impl PreparedFullyConnected {
         assert_eq!(feat, self.feat, "feature mismatch");
 
         // RHS must be K×N = features × batch: transpose into scratch.
-        let LayerScratch { gemm, cols, staging, .. } = scratch;
+        let LayerScratch { gemm, cols, staging, intra, .. } = scratch;
         let rhs = grow(cols, feat * batch);
         let xd = x.data();
         for b in 0..batch {
@@ -136,7 +136,9 @@ impl PreparedFullyConnected {
             }
         }
         let out_cm = grow(staging, self.units * batch);
-        self.plan.run(batch, rhs, out_cm, gemm);
+        // N = batch here, so FC only splits across the intra-op pool for
+        // genuinely large batches (bit-identical either way).
+        intra.run(&self.plan, rhs, batch, out_cm, gemm);
 
         // Back to [batch, units]. Safe: the transpose writes every element.
         out.params = self.output_params;

@@ -96,6 +96,12 @@ pub struct LayerScratch {
     pub acc32: Vec<i32>,
     /// Per-row Q0.31 exponentials (fixed-point softmax).
     pub acc64: Vec<i64>,
+    /// Intra-op GEMM parallelism for this worker: serial by default; a
+    /// serving coordinator attaches a shared [`crate::gemm::WorkerPool`]
+    /// (with a per-layer `N` threshold) so large conv/FC GEMMs split
+    /// across persistent workers. Riding in the scratch keeps the prepared
+    /// layer APIs unchanged — every `run_into` already receives it.
+    pub intra: crate::gemm::IntraOp,
 }
 
 impl LayerScratch {

@@ -41,6 +41,18 @@ impl QuantizedMultiplier {
             m0 /= 2.0;
             shift += 1;
         }
+        if shift < -31 {
+            // M < 2^-31 underflows the representable range: |M·acc| < 0.5
+            // for every int32 accumulator, so the correctly-rounded result
+            // is always 0 — and a right shift this deep would leave the
+            // `(0..=31)` domain of `rounding_div_by_pot`, whose
+            // release-build `>>` would wrap the shift amount mod 32 and
+            // emit garbage (per-channel quantization hits this on
+            // near-dead channels, where a channel's tiny `max_abs` makes
+            // its eq. 5 multiplier vanish). Flush to the exact encoding of
+            // zero.
+            return Self { m0: 0, shift: 0 };
+        }
         let mut q = (m0 * 2f64.powi(31)).round() as i64;
         // Rounding can push the mantissa to exactly 2^31 (m0 == 1.0 - eps).
         if q == 1i64 << 31 {
@@ -112,6 +124,31 @@ mod tests {
     fn zero_multiplier() {
         let qm = QuantizedMultiplier::from_f64(0.0);
         assert_eq!(qm.apply(123456), 0);
+    }
+
+    #[test]
+    fn underflowing_multipliers_flush_to_exact_zero() {
+        // Multipliers below 2^-31 cannot shift within rounding_div_by_pot's
+        // (0..=31) domain; they must normalize to the exact zero encoding
+        // in debug AND release (release `>>` would otherwise wrap the shift
+        // amount mod 32). The correct rounded result is 0 for every
+        // accumulator: |M·acc| < 2^-31 · 2^31 / 2 < 0.5.
+        for &m in &[2e-10, 1e-10, 1e-20, 1e-300, f64::MIN_POSITIVE] {
+            let qm = QuantizedMultiplier::from_f64(m);
+            assert_eq!((qm.m0, qm.shift), (0, 0), "m={m}");
+            for acc in [i32::MAX, i32::MIN, 1, -1, 0] {
+                assert_eq!(qm.apply(acc), 0, "m={m} acc={acc}");
+                assert_eq!(qm.apply_lt_one(acc), 0, "m={m} acc={acc}");
+            }
+            assert_eq!(qm.to_f64(), 0.0, "m={m}");
+        }
+        // The boundary stays exact: shift == -31 is still representable and
+        // must NOT flush (1.5·2^-32 = 0.75·2^-31).
+        let qm = QuantizedMultiplier::from_f64(1.5 * 2f64.powi(-32));
+        assert_eq!(qm.shift, -31);
+        assert!(qm.m0 >= 1 << 30);
+        let rel = (qm.to_f64() - 1.5 * 2f64.powi(-32)).abs() / (1.5 * 2f64.powi(-32));
+        assert!(rel < 1e-9);
     }
 
     #[test]

@@ -156,6 +156,85 @@ fn prop_responses_are_deterministic_per_input() {
 }
 
 #[test]
+fn prop_intra_pool_serving_preserves_all_invariants() {
+    // With a shared intra-op worker pool (--intra-threads > 1) every
+    // request still completes exactly once, responses keep their ids, and
+    // outputs are bit-identical to intra_threads = 1 — the pool only
+    // changes who computes each GEMM strip.
+    check("intra-pool exactly-once + determinism", 6, gen_scenario, |s| {
+        let eng = engine(5);
+        let mut rng = Rng::seeded(31 + s.requests as u64);
+        let images: Vec<Tensor<f32>> = (0..s.requests).map(|_| image(&mut rng)).collect();
+        // Reference outputs from a serial coordinator.
+        let serial = Coordinator::start(eng.clone(), BatchPolicy::default(), 1);
+        let want: Vec<Vec<f32>> = images
+            .iter()
+            .map(|x| serial.client().infer(x.clone()).unwrap().output)
+            .collect();
+        serial.shutdown();
+
+        let coord = Coordinator::start(
+            eng,
+            BatchPolicy {
+                max_batch: s.max_batch,
+                max_delay: Duration::from_micros(s.max_delay_us),
+                intra_threads: 2 + s.workers, // always > 1
+                ..Default::default()
+            },
+            s.workers,
+        );
+        let client = coord.client();
+        let pending: Vec<_> = images.iter().map(|x| client.submit(x.clone()).unwrap()).collect();
+        let mut seen = HashSet::new();
+        for ((id, rx), want) in pending.into_iter().zip(&want) {
+            let resp = rx.recv().expect("response");
+            if resp.id != id || !seen.insert(resp.id) || &resp.output != want {
+                return false;
+            }
+        }
+        let m = coord.shutdown();
+        m.completed as usize == s.requests && seen.len() == s.requests
+    });
+}
+
+#[test]
+fn intra_pool_multi_model_serving_is_deterministic() {
+    // The multi-model pipeline shares one pool across workers and models.
+    let registry = two_model_registry();
+    let serial = MultiCoordinator::start(registry, BatchPolicy::default(), 1);
+    let mut rng = Rng::seeded(47);
+    let images: Vec<(String, Tensor<f32>)> = (0..12)
+        .map(|i| {
+            let name = if i % 2 == 0 { "wide" } else { "narrow" };
+            (name.to_string(), image(&mut rng))
+        })
+        .collect();
+    let want: Vec<Vec<f32>> = images
+        .iter()
+        .map(|(name, x)| serial.client().infer(name, x.clone()).unwrap().output)
+        .collect();
+    serial.shutdown();
+
+    let coord = MultiCoordinator::start(
+        two_model_registry(),
+        BatchPolicy { intra_threads: 3, ..Default::default() },
+        2,
+    );
+    let client = coord.client();
+    let pending: Vec<_> =
+        images.iter().map(|(name, x)| client.submit(name, x.clone()).unwrap()).collect();
+    let mut seen = HashSet::new();
+    for ((id, rx), want) in pending.into_iter().zip(&want) {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.id, id);
+        assert_eq!(&resp.output, want, "pooled multi-model output diverged");
+        assert!(seen.insert(id), "duplicate completion");
+    }
+    assert_eq!(seen.len(), 12);
+    coord.shutdown();
+}
+
+#[test]
 fn submit_after_shutdown_errors_cleanly() {
     let coord = Coordinator::start(engine(4), BatchPolicy::default(), 1);
     let client = coord.client();

@@ -1,0 +1,156 @@
+//! Property tests for the persistent intra-op worker pool
+//! (`iaoi::gemm::pool`): pool-parallel prepared graph execution must be
+//! **bit-identical** to serial execution for every thread count, in both
+//! weight-quantization modes, on a graph exercising conv + depthwise +
+//! FC + concat — the pool only changes *who* computes each GEMM column
+//! strip, never a single integer. Also covers the serving shape: one pool
+//! shared by several concurrent executor threads.
+//!
+//! The concat's operands are one node twice, so the App. A.3 unified
+//! quantization parameters hold by construction for any seed.
+
+use iaoi::data::Rng;
+use iaoi::gemm::{IntraOp, WorkerPool};
+use iaoi::graph::{ExecState, FloatGraph, FloatOp, NodeRef};
+use iaoi::nn::conv::Conv2d;
+use iaoi::nn::depthwise::DepthwiseConv2d;
+use iaoi::nn::fc::FullyConnected;
+use iaoi::nn::{FusedActivation, Padding, QTensor};
+use iaoi::quantize::{quantize_graph, QuantMode, QuantizeOptions};
+use iaoi::tensor::Tensor;
+use std::sync::Arc;
+
+/// conv → relu6 → depthwise(relu6) → concat(dw, dw) → gap → fc: every
+/// matmul-shaped prepared op plus the indexed-concat path in one graph.
+fn mixed_graph(seed: u64) -> FloatGraph {
+    let mut rng = Rng::seeded(seed);
+    let mut g = FloatGraph::default();
+    let mut cw = vec![0f32; 8 * 3 * 3 * 3];
+    rng.fill_normal(&mut cw, 0.3);
+    let conv = Conv2d {
+        weights: Tensor::from_vec(&[8, 3, 3, 3], cw),
+        bias: (0..8).map(|i| 0.05 * i as f32 - 0.2).collect(),
+        stride: 1,
+        padding: Padding::Same,
+        activation: FusedActivation::None,
+    };
+    let c = g.push("conv0", NodeRef::Input, FloatOp::Conv(conv));
+    let r = g.push("relu", c, FloatOp::Relu6);
+    let mut dww = vec![0f32; 3 * 3 * 8];
+    rng.fill_normal(&mut dww, 0.35);
+    let dw = DepthwiseConv2d {
+        weights: Tensor::from_vec(&[1, 3, 3, 8], dww),
+        bias: vec![],
+        stride: 1,
+        padding: Padding::Same,
+        activation: FusedActivation::Relu6,
+    };
+    let d = g.push("dw", r, FloatOp::Depthwise(dw));
+    let cat = g.push("cat", d, FloatOp::Concat(vec![d]));
+    let gap = g.push("gap", cat, FloatOp::GlobalAvgPool);
+    let mut fw = vec![0f32; 5 * 16];
+    rng.fill_normal(&mut fw, 0.3);
+    g.push(
+        "logits",
+        gap,
+        FloatOp::Fc(FullyConnected {
+            weights: Tensor::from_vec(&[5, 16], fw),
+            bias: vec![0.1, -0.1, 0.0, 0.2, -0.2],
+            activation: FusedActivation::None,
+        }),
+    );
+    g
+}
+
+fn input(rng: &mut Rng, batch: usize) -> Tensor<f32> {
+    let mut d = vec![0f32; batch * 8 * 8 * 3];
+    for v in d.iter_mut() {
+        *v = rng.range_f32(-1.0, 1.0);
+    }
+    Tensor::from_vec(&[batch, 8, 8, 3], d)
+}
+
+#[test]
+fn pool_graph_execution_is_bit_identical_across_thread_counts_and_modes() {
+    let g = mixed_graph(71);
+    let mut rng = Rng::seeded(71);
+    let calib = vec![input(&mut rng, 2), input(&mut rng, 2)];
+    for mode in [QuantMode::PerTensor, QuantMode::PerChannel] {
+        let (_, q) = quantize_graph(&g, &calib, QuantizeOptions { mode, ..Default::default() });
+        let plan = q.prepare();
+        for batch in [1usize, 4] {
+            let qin = QTensor::quantize(&input(&mut rng, batch), q.input_params);
+            let want = q.run_q(&qin);
+            for threads in [1usize, 2, 3, 8] {
+                let pool = Arc::new(WorkerPool::new(threads));
+                let mut state = ExecState::new();
+                // min_n = 1 forces every conv/FC GEMM through the pool.
+                state.set_intra(IntraOp::pool(pool, 1));
+                let got = plan.run_q(&qin, &mut state);
+                assert_eq!(
+                    want.data.data(),
+                    got.data.data(),
+                    "{mode:?} batch={batch} threads={threads}"
+                );
+                // Warm re-run through the same state and pool.
+                let again = plan.run_q(&qin, &mut state);
+                assert_eq!(
+                    want.data.data(),
+                    again.data.data(),
+                    "{mode:?} batch={batch} threads={threads} warm"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_and_scoped_strategies_agree_with_serial_at_default_threshold() {
+    // At the production threshold (DEFAULT_MIN_N) only the large layers
+    // split; serial, scoped-spawn, and pool execution must still match.
+    let g = mixed_graph(72);
+    let mut rng = Rng::seeded(72);
+    let calib = vec![input(&mut rng, 2)];
+    let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
+    let plan = q.prepare();
+    let qin = QTensor::quantize(&input(&mut rng, 4), q.input_params);
+    let want = q.run_q(&qin);
+    let min_n = iaoi::gemm::pool::DEFAULT_MIN_N;
+    let pool = Arc::new(WorkerPool::new(3));
+    for intra in [IntraOp::serial(), IntraOp::scoped(3, min_n), IntraOp::pool(pool, min_n)] {
+        let mut state = ExecState::new();
+        state.set_intra(intra.clone());
+        let got = plan.run_q(&qin, &mut state);
+        assert_eq!(want.data.data(), got.data.data(), "{:?}", intra.strategy);
+    }
+}
+
+#[test]
+fn one_pool_is_shared_by_concurrent_executors() {
+    // The serving topology: several batch workers, each with its own
+    // ExecState, drive one shared pool concurrently. Every run must stay
+    // bit-identical to serial no matter how jobs interleave on the queue.
+    let g = mixed_graph(73);
+    let mut rng = Rng::seeded(73);
+    let calib = vec![input(&mut rng, 2)];
+    let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
+    let plan = q.prepare();
+    let inputs: Vec<QTensor> =
+        (0..3).map(|_| QTensor::quantize(&input(&mut rng, 2), q.input_params)).collect();
+    let wants: Vec<Vec<u8>> = inputs.iter().map(|x| q.run_q(x).data.data().to_vec()).collect();
+    let pool = Arc::new(WorkerPool::new(4));
+    std::thread::scope(|scope| {
+        for worker in 0..4 {
+            let (plan, inputs, wants, pool) = (&plan, &inputs, &wants, &pool);
+            scope.spawn(move || {
+                let mut state = ExecState::new();
+                state.set_intra(IntraOp::pool(Arc::clone(pool), 1));
+                for round in 0..6 {
+                    let i = (worker + round) % inputs.len();
+                    let got = plan.run_q(&inputs[i], &mut state);
+                    assert_eq!(wants[i], got.data.data(), "worker {worker} round {round}");
+                }
+            });
+        }
+    });
+}
