@@ -1,17 +1,39 @@
 //! Artifact cold-start benchmark: time to decode a `.iaoiq` artifact and
-//! time to first inference from raw bytes — the latency a hot-swap
+//! time to first inference — the latency a hot-swap
 //! ([`iaoi::coordinator::registry::ModelRegistry::swap`]) or a fresh
-//! serving process pays before the new model can take traffic.
+//! serving process pays before the new model can take traffic — measured
+//! for every load mode (copy / zerocopy / mmap), plus the **peak transient
+//! allocation bytes** of one decode under a counting global allocator.
+//! The copy path transiently holds a second copy of the weight bytes; the
+//! zero-copy paths must stay `o(weight bytes)`. An 8-model registry
+//! install case covers the multi-model resident-memory story.
+//!
+//! Emits `BENCH_model_load.json` next to `BENCH_graph.json`.
 //!
 //! Run: `cargo bench --bench model_load`
+//! (CI runs it under `IAOI_BENCH_SMOKE=1`, whose numbers are not
+//! meaningful.)
 
-use iaoi::bench_util::bench;
+use iaoi::bench_util::counting_alloc::{self, CountingAlloc};
+use iaoi::bench_util::{bench, Sample};
+use iaoi::coordinator::registry::ModelRegistry;
 use iaoi::data::Rng;
 use iaoi::graph::builders::mobilenet;
 use iaoi::harness::demo_artifact;
-use iaoi::model_format::{self, ModelArtifact};
+use iaoi::model_format::{self, LoadMode, ModelArtifact};
 use iaoi::quantize::{quantize_graph, QuantizeOptions};
-use iaoi::tensor::Tensor;
+use iaoi::tensor::{ArtifactBytes, Tensor};
+use std::path::PathBuf;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` once with the counter armed; returns (peak net bytes, total
+/// allocated bytes) during the call.
+fn measure_transient(f: impl FnOnce()) -> (u64, u64) {
+    let m = counting_alloc::measure(f);
+    (m.peak_bytes, m.total_bytes)
+}
 
 fn mobilenet_artifact() -> ModelArtifact {
     let g = mobilenet(0.25, 16, false, 1);
@@ -25,40 +47,166 @@ fn mobilenet_artifact() -> ModelArtifact {
     ModelArtifact::new("mobilenet_dm025", 1, [32, 32, 3], q)
 }
 
-fn cold_start_case(label: &str, artifact: &ModelArtifact) {
-    let bytes = model_format::save(artifact);
+struct Case {
+    model: String,
+    mode: LoadMode,
+    mapped: bool,
+    artifact_bytes: usize,
+    weight_bytes: usize,
+    decode: Sample,
+    cold: Sample,
+    peak_transient_bytes: u64,
+    total_alloc_bytes: u64,
+}
+
+impl Case {
+    fn json(&self) -> String {
+        format!(
+            "    {{\"model\": \"{}\", \"mode\": \"{}\", \"mapped\": {}, \
+             \"artifact_bytes\": {}, \"weight_bytes\": {}, \"decode_ms\": {:.4}, \
+             \"cold_first_inference_ms\": {:.4}, \"peak_transient_bytes\": {}, \
+             \"total_alloc_bytes\": {}}}",
+            self.model,
+            self.mode.label(),
+            self.mapped,
+            self.artifact_bytes,
+            self.weight_bytes,
+            self.decode.median_ms(),
+            self.cold.median_ms(),
+            self.peak_transient_bytes,
+            self.total_alloc_bytes,
+        )
+    }
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("iaoi-bench-load-{tag}-{}", std::process::id()))
+}
+
+fn cold_start_cases(label: &str, artifact: &ModelArtifact, out: &mut Vec<Case>) {
+    let bytes = model_format::save(artifact).expect("encode");
+    let path = tmp_path(&format!("{}.iaoiq", artifact.name));
+    std::fs::write(&path, &bytes).expect("write artifact");
     let [h, w, c] = artifact.input_shape;
     let img = Tensor::<f32>::zeros(&[1, h, w, c]);
+    let weight_bytes = artifact.graph.model_bytes();
     println!(
-        "== {label}: {} nodes, {} weight bytes, {} artifact bytes ==",
+        "== {label}: {} nodes, {weight_bytes} weight bytes, {} artifact bytes ==",
         artifact.graph.nodes.len(),
-        artifact.graph.model_bytes(),
         bytes.len()
     );
-    let decode = bench(&format!("{label}: decode artifact"), 20, || {
-        let loaded = model_format::load(&bytes).expect("load");
-        std::hint::black_box(loaded.graph.nodes.len());
-    });
-    let cold = bench(&format!("{label}: decode + first inference"), 10, || {
-        let loaded = model_format::load(&bytes).expect("load");
-        std::hint::black_box(loaded.graph.run(&img));
-    });
-    // Steady-state inference, for reference against the cold number.
-    let resident = model_format::load(&bytes).expect("load");
-    let warm = bench(&format!("{label}: resident inference"), 10, || {
-        std::hint::black_box(resident.graph.run(&img));
-    });
-    println!(
-        "    -> decode {:.2} ms | cold first-inference {:.2} ms | warm {:.2} ms | decode overhead {:.1}%\n",
-        decode.median_ms(),
-        cold.median_ms(),
-        warm.median_ms(),
-        100.0 * decode.median_ms() / cold.median_ms().max(1e-9),
-    );
+    for mode in [LoadMode::Copy, LoadMode::ZeroCopy, LoadMode::Mmap] {
+        // Buffer residency is paid once per serving process; the per-model
+        // work being measured is the decode from resident bytes.
+        let buf = match mode {
+            LoadMode::Copy => None,
+            LoadMode::ZeroCopy => Some(ArtifactBytes::from_vec(bytes.clone())),
+            LoadMode::Mmap => Some(ArtifactBytes::map_file(&path).expect("map")),
+        };
+        let mapped = buf.as_ref().is_some_and(ArtifactBytes::is_mapped);
+        let decode_once = || match &buf {
+            None => model_format::load(&bytes).expect("load"),
+            Some(b) => model_format::load_shared(b).expect("load_shared"),
+        };
+        let decode = bench(&format!("{label}: decode [{}]", mode.label()), 20, || {
+            std::hint::black_box(decode_once().graph.nodes.len());
+        });
+        let cold = bench(&format!("{label}: decode+infer [{}]", mode.label()), 10, || {
+            std::hint::black_box(decode_once().graph.run(&img));
+        });
+        let (peak, total) = measure_transient(|| {
+            std::hint::black_box(decode_once().graph.nodes.len());
+        });
+        println!(
+            "    -> [{}] decode {:.2} ms | cold {:.2} ms | peak transient {} B | \
+             total alloc {} B ({:.1}% of weight bytes){}",
+            mode.label(),
+            decode.median_ms(),
+            cold.median_ms(),
+            peak,
+            total,
+            100.0 * peak as f64 / weight_bytes.max(1) as f64,
+            if mapped { " | mmap-backed" } else { "" },
+        );
+        out.push(Case {
+            model: artifact.name.clone(),
+            mode,
+            mapped,
+            artifact_bytes: bytes.len(),
+            weight_bytes,
+            decode,
+            cold,
+            peak_transient_bytes: peak,
+            total_alloc_bytes: total,
+        });
+    }
+    let _ = std::fs::remove_file(&path);
+    println!();
+}
+
+struct RegistryCase {
+    mode: LoadMode,
+    models: usize,
+    install: Sample,
+    peak_bytes: u64,
+}
+
+impl RegistryCase {
+    fn json(&self) -> String {
+        format!(
+            "    {{\"mode\": \"{}\", \"models\": {}, \"install_ms\": {:.4}, \"peak_bytes\": {}}}",
+            self.mode.label(),
+            self.models,
+            self.install.median_ms(),
+            self.peak_bytes,
+        )
+    }
+}
+
+/// Install an 8-model registry (decode + prepare per model) under each load
+/// mode — the multi-model swap/install cost the registry pays per artifact.
+fn registry_cases(out: &mut Vec<RegistryCase>) {
+    const MODELS: usize = 8;
+    let dir = tmp_path("registry");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create registry dir");
+    for i in 0..MODELS {
+        let art = demo_artifact(&format!("m{i}"), 1, 16, i as u64);
+        model_format::write_file(&dir.join(format!("m{i}.iaoiq")), &art).expect("write");
+    }
+    println!("== {MODELS}-model registry install (decode + prepare per artifact) ==");
+    for mode in [LoadMode::Copy, LoadMode::ZeroCopy, LoadMode::Mmap] {
+        let install = bench(&format!("registry: install x{MODELS} [{}]", mode.label()), 5, || {
+            std::hint::black_box(ModelRegistry::load_dir_with(&dir, mode).expect("load_dir").len());
+        });
+        let (peak, _) = measure_transient(|| {
+            std::hint::black_box(ModelRegistry::load_dir_with(&dir, mode).expect("load_dir").len());
+        });
+        println!(
+            "    -> [{}] install {:.2} ms | peak bytes {}",
+            mode.label(),
+            install.median_ms(),
+            peak
+        );
+        out.push(RegistryCase { mode, models: MODELS, install, peak_bytes: peak });
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    println!();
 }
 
 fn main() {
-    println!("== .iaoiq cold-start: deserialize + first-inference latency ==\n");
-    cold_start_case("papernet (demo)", &demo_artifact("demo", 1, 16, 3));
-    cold_start_case("mobilenet dm=0.25", &mobilenet_artifact());
+    println!("== .iaoiq cold-start: decode + first-inference latency per load mode ==\n");
+    let mut cases = Vec::new();
+    cold_start_cases("papernet (demo)", &demo_artifact("demo", 1, 16, 3), &mut cases);
+    cold_start_cases("mobilenet dm=0.25", &mobilenet_artifact(), &mut cases);
+    let mut registry = Vec::new();
+    registry_cases(&mut registry);
+
+    let json = format!(
+        "{{\n  \"cases\": [\n{}\n  ],\n  \"registry\": [\n{}\n  ]\n}}\n",
+        cases.iter().map(Case::json).collect::<Vec<_>>().join(",\n"),
+        registry.iter().map(RegistryCase::json).collect::<Vec<_>>().join(",\n"),
+    );
+    std::fs::write("BENCH_model_load.json", &json).expect("write BENCH_model_load.json");
+    println!("wrote BENCH_model_load.json");
 }

@@ -1,9 +1,101 @@
 //! Minimal benchmarking harness for the `cargo bench` targets (the offline
 //! build has no criterion). Reports min/median/p95/mean over timed
 //! iterations after warmup, with enough repetitions for stable medians on
-//! this single-core testbed.
+//! this single-core testbed. Also hosts the shared armed counting
+//! allocator ([`counting_alloc`]) used by the alloc regression test and
+//! the model-load bench.
 
 use std::time::Instant;
+
+/// An armed counting [`std::alloc::GlobalAlloc`] wrapper shared by the
+/// targets that need allocation accounting (`tests/alloc.rs` asserts on
+/// event counts; `benches/model_load.rs` reports peak/total bytes). It is
+/// NOT registered here — each target opts in with
+/// `#[global_allocator] static GLOBAL: CountingAlloc = CountingAlloc;`
+/// so ordinary builds keep the plain system allocator.
+pub mod counting_alloc {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+
+    /// Pass-through system allocator that, while armed, counts allocation
+    /// events and tracks net live bytes (signed: frees of pre-arm
+    /// allocations may drive the net below the arming point), their peak,
+    /// and the total bytes requested.
+    pub struct CountingAlloc;
+
+    static ARMED: AtomicBool = AtomicBool::new(false);
+    static EVENTS: AtomicU64 = AtomicU64::new(0);
+    static CURRENT: AtomicI64 = AtomicI64::new(0);
+    static PEAK: AtomicI64 = AtomicI64::new(0);
+    static TOTAL: AtomicU64 = AtomicU64::new(0);
+
+    fn on_alloc(size: usize) {
+        if ARMED.load(Ordering::Relaxed) {
+            EVENTS.fetch_add(1, Ordering::Relaxed);
+            let now = CURRENT.fetch_add(size as i64, Ordering::Relaxed) + size as i64;
+            PEAK.fetch_max(now, Ordering::Relaxed);
+            TOTAL.fetch_add(size as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn on_dealloc(size: usize) {
+        if ARMED.load(Ordering::Relaxed) {
+            CURRENT.fetch_sub(size as i64, Ordering::Relaxed);
+        }
+    }
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            on_alloc(layout.size());
+            System.alloc(layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            on_alloc(layout.size());
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            on_dealloc(layout.size());
+            on_alloc(new_size);
+            System.realloc(ptr, layout, new_size)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            on_dealloc(layout.size());
+            System.dealloc(ptr, layout)
+        }
+    }
+
+    /// What one armed measurement observed.
+    #[derive(Clone, Copy, Debug)]
+    pub struct Measure {
+        /// Allocation events (alloc / alloc_zeroed / realloc).
+        pub events: u64,
+        /// Peak net live bytes above the arming point.
+        pub peak_bytes: u64,
+        /// Total bytes requested across all allocation events.
+        pub total_bytes: u64,
+    }
+
+    /// Run `f` with the counter armed and return what it allocated. Only
+    /// meaningful when [`CountingAlloc`] is the target's registered global
+    /// allocator and nothing else allocates concurrently.
+    pub fn measure(f: impl FnOnce()) -> Measure {
+        EVENTS.store(0, Ordering::SeqCst);
+        CURRENT.store(0, Ordering::SeqCst);
+        PEAK.store(0, Ordering::SeqCst);
+        TOTAL.store(0, Ordering::SeqCst);
+        ARMED.store(true, Ordering::SeqCst);
+        f();
+        ARMED.store(false, Ordering::SeqCst);
+        Measure {
+            events: EVENTS.load(Ordering::SeqCst),
+            peak_bytes: PEAK.load(Ordering::SeqCst).max(0) as u64,
+            total_bytes: TOTAL.load(Ordering::SeqCst),
+        }
+    }
+}
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]

@@ -10,7 +10,8 @@
 //! batched against and nothing is dropped mid-swap.
 
 use crate::graph::{PreparedGraph, QGraph};
-use crate::model_format::{self, ModelArtifact};
+use crate::model_format::{self, LoadMode, ModelArtifact};
+use crate::tensor::ArtifactBytes;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -39,12 +40,22 @@ pub struct ModelEntry {
     /// Artifact path the entry was loaded from (empty for in-memory
     /// registrations).
     pub source: PathBuf,
+    /// Backing buffer the graph's zero-copy weight views borrow from
+    /// (`None` for copy-mode loads and in-memory registrations). The views
+    /// inside [`Self::graph`] keep the buffer alive on their own; pinning
+    /// it on the entry makes the dependency explicit and observable.
+    pub backing: Option<ArtifactBytes>,
 }
 
 impl ModelEntry {
     /// The batched NHWC input shape for a batch of `n`.
     pub fn batched_shape(&self, n: usize) -> [usize; 4] {
         [n, self.input_shape[0], self.input_shape[1], self.input_shape[2]]
+    }
+
+    /// True when this entry's weights borrow a live file mapping.
+    pub fn is_mapped(&self) -> bool {
+        self.backing.as_ref().is_some_and(ArtifactBytes::is_mapped)
     }
 }
 
@@ -59,10 +70,17 @@ impl ModelRegistry {
         Self::default()
     }
 
-    /// Load every `*.iaoiq` artifact in `dir`. Files are visited in sorted
-    /// order; when several artifacts carry the same model name, the highest
-    /// version wins (ties broken by file order).
+    /// Load every `*.iaoiq` artifact in `dir` under the environment-default
+    /// [`LoadMode`]. Files are visited in sorted order; when several
+    /// artifacts carry the same model name, the highest version wins (ties
+    /// broken by file order).
     pub fn load_dir(dir: &Path) -> Result<Self> {
+        Self::load_dir_with(dir, LoadMode::from_env())
+    }
+
+    /// [`Self::load_dir`] with an explicit weight-storage mode (the
+    /// `iaoi serve --load` knob).
+    pub fn load_dir_with(dir: &Path, mode: LoadMode) -> Result<Self> {
         let registry = Self::new();
         let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
             .with_context(|| format!("read model directory {dir:?}"))?
@@ -74,7 +92,7 @@ impl ModelRegistry {
             bail!("no .{} artifacts in {dir:?}", model_format::EXTENSION);
         }
         for path in paths {
-            let artifact = model_format::read_file(&path)?;
+            let artifact = model_format::read_file_with(&path, mode)?;
             let newer = match registry.get(&artifact.name) {
                 None => true,
                 Some(existing) => artifact.version >= existing.version,
@@ -96,6 +114,7 @@ impl ModelRegistry {
             name: artifact.name.clone(),
             version: artifact.version,
             input_shape: artifact.input_shape,
+            backing: artifact.backing.clone(),
             graph: Arc::new(artifact.graph),
             plan,
             positions_hint,
@@ -115,7 +134,12 @@ impl ModelRegistry {
 
     /// Register a model from an artifact file under its embedded name.
     pub fn register_file(&self, path: &Path) -> Result<Arc<ModelEntry>> {
-        let artifact = model_format::read_file(path)?;
+        self.register_file_with(path, LoadMode::from_env())
+    }
+
+    /// [`Self::register_file`] with an explicit weight-storage mode.
+    pub fn register_file_with(&self, path: &Path, mode: LoadMode) -> Result<Arc<ModelEntry>> {
+        let artifact = model_format::read_file_with(path, mode)?;
         Ok(self.install(artifact, path.to_path_buf()))
     }
 
@@ -132,7 +156,15 @@ impl ModelRegistry {
     /// complete normally; only batches formed after the swap see the new
     /// graph.
     pub fn swap(&self, name: &str, path: &Path) -> Result<(Option<u32>, u32)> {
-        let artifact = model_format::read_file(path)?;
+        self.swap_with(name, path, LoadMode::from_env())
+    }
+
+    /// [`Self::swap`] with an explicit weight-storage mode. The artifact is
+    /// fully decoded — including the v3 payload-checksum verification, so a
+    /// torn or bit-rotted file is rejected here, at swap time, with a
+    /// checksum diagnostic — before the registry table is touched.
+    pub fn swap_with(&self, name: &str, path: &Path, mode: LoadMode) -> Result<(Option<u32>, u32)> {
+        let artifact = model_format::read_file_with(path, mode)?;
         if artifact.name != name {
             bail!(
                 "artifact {path:?} names model {:?}, refusing to swap it in as {name:?}",
@@ -270,6 +302,58 @@ mod tests {
         let mut state = crate::graph::ExecState::new();
         let got = entry.plan.run(&x, &mut state);
         assert_eq!(want.data(), got.data(), "plan must be bit-identical to the graph");
+    }
+
+    #[test]
+    fn swap_rejects_torn_artifact_with_checksum_error() {
+        let dir = tmpdir("torn");
+        let path = dir.join("m_v2.iaoiq");
+        model_format::write_file(&path, &artifact("m", 2, 11)).unwrap();
+        // Corrupt one payload byte on disk — simulated bit-rot.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let reg = ModelRegistry::new();
+        reg.install(artifact("m", 1, 12), PathBuf::new());
+        for mode in [LoadMode::Copy, LoadMode::ZeroCopy, LoadMode::Mmap] {
+            let err = reg.swap_with("m", &path, mode).unwrap_err();
+            assert!(err.to_string().contains("checksum"), "{mode:?}: {err}");
+            assert_eq!(reg.get("m").unwrap().version, 1, "failed swap must not apply");
+        }
+        // A truncated (torn) write fails cleanly too.
+        std::fs::write(&path, &std::fs::read(&path).unwrap()[..mid]).unwrap();
+        assert!(reg.swap("m", &path).is_err());
+        assert_eq!(reg.get("m").unwrap().version, 1);
+    }
+
+    #[test]
+    fn zero_copy_entries_serve_bit_identically_and_expose_backing() {
+        let dir = tmpdir("zerocopy");
+        let path = dir.join("m.iaoiq");
+        model_format::write_file(&path, &artifact("m", 1, 21)).unwrap();
+        let reg = ModelRegistry::new();
+        let copy = reg.register_file_with(&path, LoadMode::Copy).unwrap();
+        assert!(copy.backing.is_none());
+
+        let mut rng = Rng::seeded(21);
+        let mut d = vec![0f32; 16 * 16 * 3];
+        for v in d.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let x = Tensor::from_vec(&[1, 16, 16, 3], d);
+        let want = copy.graph.run(&x);
+
+        for mode in [LoadMode::ZeroCopy, LoadMode::Mmap] {
+            let entry = reg.register_file_with(&path, mode).unwrap();
+            assert!(entry.backing.is_some(), "{mode:?} keeps the buffer");
+            if mode == LoadMode::Mmap && cfg!(all(unix, target_pointer_width = "64")) {
+                assert!(entry.is_mapped(), "mmap mode should map on 64-bit unix");
+            }
+            assert_eq!(entry.graph.run(&x).data(), want.data(), "{mode:?} diverged");
+            let mut state = crate::graph::ExecState::new();
+            assert_eq!(entry.plan.run(&x, &mut state).data(), want.data(), "{mode:?} plan diverged");
+        }
     }
 
     #[test]

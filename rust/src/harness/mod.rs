@@ -15,7 +15,7 @@ use crate::gemm::Kernel;
 use crate::graph::builders::{papernet_random, ParamMap};
 use crate::graph::{FloatGraph, FloatOp, NodeRef, QGraph};
 use crate::io;
-use crate::model_format::{self, ModelArtifact};
+use crate::model_format::{self, LoadMode, ModelArtifact};
 use crate::nn::conv::Conv2d;
 use crate::nn::depthwise::DepthwiseConv2d;
 use crate::nn::fc::FullyConnected;
@@ -476,6 +476,10 @@ pub fn demo_artifact_with_mode(
 /// converted (Algorithm 1 step 4, using the learned ranges); otherwise the
 /// self-contained PTQ demo model is exported. `mode` picks per-tensor or
 /// per-channel weight quantization for conv/depthwise layers.
+/// `verify_load` is the `--load` knob: the written file is read back under
+/// that storage mode and must re-encode byte-identically — catching a torn
+/// write (and exercising the checksum) before the artifact is shipped.
+#[allow(clippy::too_many_arguments)]
 pub fn export_model(
     out: &Path,
     name: &str,
@@ -484,6 +488,7 @@ pub fn export_model(
     seed: u64,
     trained: Option<(&Path, &Path)>,
     mode: QuantMode,
+    verify_load: LoadMode,
 ) -> Result<()> {
     let artifact = match trained {
         Some((artifacts, model_path)) => {
@@ -510,14 +515,27 @@ pub fn export_model(
             std::fs::create_dir_all(parent).with_context(|| format!("create {parent:?}"))?;
         }
     }
-    model_format::write_file(out, &artifact)?;
+    let written = model_format::write_file(out, &artifact)?;
+    // Read-back verification under the requested load mode: checksum plus
+    // full decode, and the decoded graph must re-encode to the bytes just
+    // written (deterministic encoding makes this an equality, not a fuzzy
+    // check).
+    let readback = model_format::read_file_with(out, verify_load)?;
+    let reencoded = model_format::save(&readback).context("re-encode readback")?;
+    anyhow::ensure!(
+        written == reencoded,
+        "readback of {out:?} under load mode {} is not byte-identical",
+        verify_load.label()
+    );
     println!(
-        "exported model {:?} v{} -> {out:?} ({} nodes, {} weight bytes, input {:?})",
+        "exported model {:?} v{} -> {out:?} ({} nodes, {} weight bytes, input {:?}; \
+         readback-verified, load={})",
         artifact.name,
         artifact.version,
         artifact.graph.nodes.len(),
         artifact.graph.model_bytes(),
         artifact.input_shape,
+        verify_load.label(),
     );
     Ok(())
 }
@@ -531,18 +549,26 @@ pub fn serve_registry(
     max_batch: usize,
     workers: usize,
     intra_threads: usize,
+    load: LoadMode,
 ) -> Result<()> {
-    let registry = ModelRegistry::load_dir(models_dir)?;
+    let registry = ModelRegistry::load_dir_with(models_dir, load)?;
     let names = registry.names();
-    println!("registry: {} model(s) from {models_dir:?}", names.len());
+    println!("registry: {} model(s) from {models_dir:?} (load={})", names.len(), load.label());
     for name in &names {
         let entry = registry.resolve(name)?;
         println!(
-            "  {name} v{} ({} nodes, input {:?}, positions_hint {}, from {:?})",
+            "  {name} v{} ({} nodes, input {:?}, positions_hint {}, weights {}, from {:?})",
             entry.version,
             entry.graph.nodes.len(),
             entry.input_shape,
             entry.positions_hint,
+            if entry.is_mapped() {
+                "mmap-backed"
+            } else if entry.backing.is_some() {
+                "shared-heap views"
+            } else {
+                "owned copies"
+            },
             entry.source
         );
     }

@@ -9,8 +9,10 @@
 //! iaoi export     --out FILE [--name N] [--model-version V] [--classes C]
 //!                 [--seed S] [--model FILE --artifacts DIR]
 //!                 [--quant-mode per-tensor|per-channel]
+//!                 [--load copy|zerocopy|mmap]
 //! iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B]
 //!                 [--workers W] [--intra-threads T]
+//!                 [--load copy|zerocopy|mmap]
 //! iaoi quickstart [--artifacts DIR]
 //! iaoi bench      --table 4.1|...|4.8|quant-modes|pool | --fig 1.1c|4.1|4.2|4.3 [--fast]
 //! ```
@@ -21,6 +23,7 @@
 
 use anyhow::{anyhow, bail, Result};
 use iaoi::harness;
+use iaoi::model_format::LoadMode;
 use std::collections::HashMap;
 use std::path::PathBuf;
 
@@ -44,6 +47,16 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
 
 fn get<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
     flags.get(key).map(String::as_str).unwrap_or(default)
+}
+
+/// The `--load` knob: explicit flag wins, else the `IAOI_LOAD` environment
+/// default (which is `copy` when unset).
+fn load_mode(flags: &HashMap<String, String>) -> Result<LoadMode> {
+    match flags.get("load") {
+        None => Ok(LoadMode::from_env()),
+        Some(label) => LoadMode::from_label(label)
+            .ok_or_else(|| anyhow!("unknown --load {label} (copy | zerocopy | mmap)")),
+    }
 }
 
 fn main() -> Result<()> {
@@ -74,8 +87,8 @@ fn print_usage() {
          \n\
          usage:\n  iaoi train      --steps N [--artifacts DIR] [--out FILE] [--seed S]\n  \
          iaoi eval       --model FILE [--artifacts DIR] [--batches N]\n  \
-         iaoi export     --out FILE [--name N] [--model-version V] [--classes C] [--seed S] [--model FILE --artifacts DIR] [--quant-mode per-tensor|per-channel]\n  \
-         iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B] [--workers W] [--intra-threads T]\n  \
+         iaoi export     --out FILE [--name N] [--model-version V] [--classes C] [--seed S] [--model FILE --artifacts DIR] [--quant-mode per-tensor|per-channel] [--load copy|zerocopy|mmap]\n  \
+         iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B] [--workers W] [--intra-threads T] [--load copy|zerocopy|mmap]\n  \
          iaoi quickstart [--artifacts DIR]\n  \
          iaoi bench      --table <id> | --fig <id> [--fast]  (tables 4.1-4.8, quant-modes, pool)\n"
     );
@@ -97,11 +110,13 @@ fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
     harness::eval(&artifacts, &model, batches)
 }
 
-/// `iaoi export`: write a `.iaoiq` quantized-model artifact (format v2;
-/// v1 readers cannot decode the output, this build still reads v1 files).
-/// By default a self-contained PTQ demo model is exported; `--model` (with
-/// `--artifacts`) converts a QAT-trained checkpoint instead.
-/// `--quant-mode per-channel` exports per-channel conv/depthwise weights.
+/// `iaoi export`: write a `.iaoiq` quantized-model artifact (format v3;
+/// older readers cannot decode the output, this build still reads v1/v2
+/// files). By default a self-contained PTQ demo model is exported;
+/// `--model` (with `--artifacts`) converts a QAT-trained checkpoint
+/// instead. `--quant-mode per-channel` exports per-channel conv/depthwise
+/// weights. `--load` picks the storage mode for the post-write readback
+/// verification.
 fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
     let out = PathBuf::from(get(flags, "out", "models/demo.iaoiq"));
     let name = get(flags, "name", "demo");
@@ -113,6 +128,7 @@ fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
     let mode_label = get(flags, "quant-mode", "per-tensor");
     let mode = iaoi::quantize::QuantMode::from_label(mode_label)
         .ok_or_else(|| anyhow!("unknown --quant-mode {mode_label} (per-tensor | per-channel)"))?;
+    let verify_load = load_mode(flags)?;
     harness::export_model(
         &out,
         name,
@@ -121,12 +137,15 @@ fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
         seed,
         trained.as_deref().map(|m| (artifacts.as_path(), m)),
         mode,
+        verify_load,
     )
 }
 
 /// `iaoi serve`: `--intra-threads N` (default 1) sizes the persistent
 /// intra-op GEMM worker pool every batch worker shares; 1 keeps the serial
-/// zero-alloc path.
+/// zero-alloc path. `--load` picks the registry's artifact weight-storage
+/// mode (`--models` path only — the single-model path reads a trained
+/// checkpoint, not an `.iaoiq` artifact).
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let requests: usize = get(flags, "requests", "256").parse()?;
     let max_batch: usize = get(flags, "max-batch", "8").parse()?;
@@ -140,6 +159,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             max_batch,
             workers,
             intra_threads,
+            load_mode(flags)?,
         );
     }
     let artifacts = PathBuf::from(get(flags, "artifacts", "artifacts"));

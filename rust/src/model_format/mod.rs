@@ -6,11 +6,13 @@
 //! lossless, so inference from a loaded graph is **bit-identical** to the
 //! in-memory original.
 //!
-//! ## Layout (version 2, all little-endian)
+//! ## Layout (version 3, all little-endian)
 //!
 //! ```text
 //! magic        b"IAOQ"                                    4 bytes
-//! version      u32                                        currently 2
+//! version      u32                                        currently 3
+//! checksum     u64                                        v3+: FNV-1a 64 over
+//!                                                         every following byte
 //! name         u16 len + utf-8                            registry model name
 //! model_ver    u32                                        registry version
 //! input_shape  u32 × 3                                    H, W, C of one example
@@ -45,9 +47,36 @@
 //! multiplier) still decode bit-identically; `rust/tests/model_format.rs`
 //! pins a golden v1 blob.
 //!
+//! **Version 3** (header-only change): an FNV-1a 64 checksum of the whole
+//! payload (everything after the checksum field) sits between the version
+//! and the name. It is verified *when present* — v1/v2 artifacts carry
+//! none and still load — so a torn write or bit-rotted file fails at
+//! install/swap time with [`DecodeError::ChecksumMismatch`] instead of
+//! serving corrupt weights (or tripping the deeper multiplier integrity
+//! check with a less actionable message).
+//!
+//! ## Load modes
+//!
+//! [`load`] copies every weight tensor out of the byte stream — simple,
+//! and the right call when the caller's buffer is transient. The zero-copy
+//! path, [`load_shared`], decodes from a shared [`ArtifactBytes`] buffer
+//! (heap, or an `mmap` of the artifact file) and hands out weight tensors
+//! that *borrow* the buffer ([`Tensor::from_view`]) for every u8 tensor of
+//! [`ZERO_COPY_MIN_BYTES`]-or-more bytes; small or non-u8 fields (i32
+//! biases, f64 scale vectors — unaligned in the stream) are still eagerly
+//! copied. Loading a model this way allocates `o(weight bytes)` instead of
+//! a second full copy of the weights, and the loaded graph keeps the
+//! buffer alive through its views. [`LoadMode`] names the three file-level
+//! strategies ([`read_file_with`]); the `IAOI_LOAD` environment variable
+//! picks the default for [`read_file`], so the whole test suite can run
+//! under any mode.
+//!
 //! Decoding is fully bounds-checked ([`wire::Reader`]) and never panics or
 //! over-allocates on corrupt input; every failure is a structured
-//! [`DecodeError`].
+//! [`DecodeError`]. Encoding is total as well: [`save`] returns a
+//! structured [`EncodeError`] for graphs that cannot be represented
+//! (non-finite requantization multipliers from degenerate scales,
+//! length-prefix overflow) instead of panicking.
 
 pub mod wire;
 
@@ -58,6 +87,7 @@ use crate::nn::depthwise::QDepthwiseConv2d;
 use crate::nn::fc::QFullyConnected;
 use crate::nn::{FusedActivation, Padding};
 use crate::quant::{ChannelQuantParams, QuantParams, QuantizedMultiplier, WeightQuant};
+use crate::tensor::ArtifactBytes;
 use anyhow::{Context, Result};
 use std::fmt;
 use std::path::Path;
@@ -65,11 +95,102 @@ use wire::{Reader, Writer};
 
 /// File magic.
 pub const MAGIC: &[u8; 4] = b"IAOQ";
-/// Current format version (v2 = per-channel weight scales; v1 artifacts
-/// still load).
-pub const FORMAT_VERSION: u32 = 2;
+/// Current format version (v3 = header payload checksum; v2 = per-channel
+/// weight scales; v1/v2 artifacts still load).
+pub const FORMAT_VERSION: u32 = 3;
 /// Canonical file extension (without the dot).
 pub const EXTENSION: &str = "iaoiq";
+/// Byte offset where the checksummed payload begins in a v3+ artifact:
+/// magic (4) + version (4) + checksum (8).
+pub const PAYLOAD_OFFSET: usize = 16;
+/// Minimum element-byte size at which [`load_shared`] hands out a borrowed
+/// view instead of a heap copy. Below this, the copy is cheaper than the
+/// per-view `Arc` bookkeeping and the view's pin on the whole buffer.
+pub const ZERO_COPY_MIN_BYTES: usize = 64;
+
+/// FNV-1a 64 over `bytes` — the v3 header checksum. Dependency-free and
+/// fast enough that install/swap verification is noise next to the decode
+/// itself.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        hash ^= u64::from(b);
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    hash
+}
+
+/// Recompute and overwrite the header checksum of a v3+ artifact buffer in
+/// place; a no-op for buffers that carry no checksum (wrong magic, v1/v2,
+/// or too short). Corruption *tests* use this to reach the validation
+/// stages behind the checksum; production code never needs it — artifacts
+/// are written once by [`save`], which stamps the correct value.
+pub fn restamp_checksum(bytes: &mut [u8]) {
+    if bytes.len() < PAYLOAD_OFFSET || &bytes[..4] != MAGIC {
+        return;
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version < 3 {
+        return;
+    }
+    let sum = checksum(&bytes[PAYLOAD_OFFSET..]);
+    bytes[8..PAYLOAD_OFFSET].copy_from_slice(&sum.to_le_bytes());
+}
+
+/// How [`read_file_with`] materializes artifact bytes, and whether the
+/// decoded graph owns or borrows its weight storage.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LoadMode {
+    /// Read the file, copy every tensor out of the stream (the historical
+    /// behaviour; the decode transiently holds ~2× the weight bytes).
+    #[default]
+    Copy,
+    /// Read the file into a shared heap buffer and borrow large weight
+    /// tensors from it ([`load_shared`]).
+    ZeroCopy,
+    /// `mmap` the file read-only and borrow large weight tensors from the
+    /// mapping; falls back to [`Self::ZeroCopy`]'s heap buffer where
+    /// mapping is unavailable ([`ArtifactBytes::map_file`]).
+    Mmap,
+}
+
+impl LoadMode {
+    /// Parse a CLI label (`copy` | `zerocopy` | `mmap`).
+    pub fn from_label(s: &str) -> Option<Self> {
+        match s {
+            "copy" => Some(Self::Copy),
+            "zerocopy" => Some(Self::ZeroCopy),
+            "mmap" => Some(Self::Mmap),
+            _ => None,
+        }
+    }
+
+    /// The default mode: the `IAOI_LOAD` environment variable when it names
+    /// a mode, else [`Self::Copy`]. CI runs the suite under each value so
+    /// both storage paths stay covered. An *unrecognized* value falls back
+    /// to copy but warns on stderr — a typo in the override must not
+    /// silently turn a storage-coverage run into a second copy-mode run.
+    pub fn from_env() -> Self {
+        match std::env::var("IAOI_LOAD") {
+            Ok(v) => Self::from_label(&v).unwrap_or_else(|| {
+                eprintln!(
+                    "warning: IAOI_LOAD={v:?} is not a load mode (copy | zerocopy | mmap); \
+                     defaulting to copy"
+                );
+                Self::Copy
+            }),
+            Err(_) => Self::Copy,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Copy => "copy",
+            Self::ZeroCopy => "zerocopy",
+            Self::Mmap => "mmap",
+        }
+    }
+}
 
 const INPUT_REF: u32 = u32::MAX;
 
@@ -93,6 +214,14 @@ const OP_LOGISTIC: u8 = 9;
 pub enum DecodeError {
     /// The buffer ended before a field: `needed` more bytes at `offset`.
     Truncated { offset: usize, needed: usize },
+    /// A count-prefixed field declares more elements than the remaining
+    /// bytes could hold: `count × width` bytes needed (computed in `u64`,
+    /// so the number is exact rather than clamped to `usize::MAX`) with
+    /// only `remaining` left at `offset`.
+    BadCount { offset: usize, what: &'static str, count: u64, width: u32, remaining: u64 },
+    /// The v3 header checksum does not match the payload — the file is
+    /// torn (partial write) or bit-rotted.
+    ChecksumMismatch { stored: u64, computed: u64 },
     /// First four bytes are not [`MAGIC`].
     BadMagic { found: [u8; 4] },
     /// Format version newer than this build understands.
@@ -129,6 +258,21 @@ impl fmt::Display for DecodeError {
             DecodeError::Truncated { offset, needed } => {
                 write!(f, "truncated artifact: needed {needed} more bytes at offset {offset}")
             }
+            DecodeError::BadCount { offset, what, count, width, remaining } => {
+                write!(
+                    f,
+                    "bad count at offset {offset}: {what} declares {count} element(s) of \
+                     {width} byte(s) ({} bytes) but only {remaining} bytes remain",
+                    count.saturating_mul(u64::from(*width))
+                )
+            }
+            DecodeError::ChecksumMismatch { stored, computed } => {
+                write!(
+                    f,
+                    "artifact checksum mismatch: header says {stored:#018x}, payload hashes \
+                     to {computed:#018x} — the file is torn or bit-rotted"
+                )
+            }
             DecodeError::BadMagic { found } => {
                 write!(f, "bad magic {found:?} (expected {MAGIC:?}) — not an .iaoiq artifact")
             }
@@ -158,6 +302,48 @@ impl fmt::Display for DecodeError {
 
 impl std::error::Error for DecodeError {}
 
+/// Structured encode failure: why a graph cannot be serialized. [`save`]
+/// returns these instead of panicking, so a degenerate graph (or an
+/// absurdly-sized field) surfaces as a clean CLI error from `iaoi export`
+/// rather than an abort.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EncodeError {
+    /// A conv-like node's requantization multiplier, derived from its
+    /// stored scales (eq. 5), is not finite and positive — the scales are
+    /// degenerate (zero, negative, infinite, or NaN) and no integrity-
+    /// checkable multiplier block can be written for the node.
+    NonFiniteMultiplier { node: usize },
+    /// A field exceeds its wire length prefix (`len` vs the format's
+    /// `max`): string past `u16`, slice count / tensor dimension / node
+    /// count past `u32`, tensor rank past 8, node index colliding with the
+    /// graph-input sentinel.
+    TooLarge { what: &'static str, len: u64, max: u64 },
+    /// An artifact header field fails semantic validation (zero input
+    /// shape dimension).
+    InvalidArtifact { what: &'static str },
+}
+
+impl fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EncodeError::NonFiniteMultiplier { node } => {
+                write!(
+                    f,
+                    "node {node}: requantization multiplier derived from the stored scales \
+                     is not finite and positive; the graph's quantization parameters are \
+                     degenerate and cannot be serialized"
+                )
+            }
+            EncodeError::TooLarge { what, len, max } => {
+                write!(f, "{what} of {len} exceeds the wire format's maximum of {max}")
+            }
+            EncodeError::InvalidArtifact { what } => write!(f, "invalid artifact: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for EncodeError {}
+
 /// A serialized-model unit: the quantized graph plus the registry metadata
 /// ([`crate::coordinator::registry`]) that names and versions it.
 #[derive(Clone, Debug)]
@@ -170,6 +356,12 @@ pub struct ModelArtifact {
     pub input_shape: [usize; 3],
     /// The integer-only graph.
     pub graph: QGraph,
+    /// The shared byte buffer the graph's zero-copy weight views borrow
+    /// from — `Some` only for [`load_shared`]-decoded artifacts. The views
+    /// themselves keep the buffer alive; this handle makes the dependency
+    /// visible to owners (the registry stores it on each entry) and lets
+    /// them report whether a resident model is file-mapped.
+    pub backing: Option<ArtifactBytes>,
 }
 
 impl ModelArtifact {
@@ -181,7 +373,7 @@ impl ModelArtifact {
     ) -> Self {
         let name = name.into();
         assert!(!name.is_empty(), "artifact name must be non-empty");
-        Self { name, version, input_shape, graph }
+        Self { name, version, input_shape, graph, backing: None }
     }
 
     /// The batched NHWC input shape for a batch of `n`.
@@ -224,7 +416,7 @@ fn requant_multipliers(
 
 /// Encode a conv-like node's weight quantization (v2 layout: mode byte then
 /// the mode-specific parameter block).
-fn encode_weight_quant(w: &mut Writer, wq: &WeightQuant) {
+fn encode_weight_quant(w: &mut Writer, wq: &WeightQuant) -> Result<(), EncodeError> {
     match wq {
         WeightQuant::PerTensor(p) => {
             w.put_u8(WQ_PER_TENSOR);
@@ -235,9 +427,10 @@ fn encode_weight_quant(w: &mut Writer, wq: &WeightQuant) {
             w.put_i32(c.zero_point);
             w.put_i32(c.qmin);
             w.put_i32(c.qmax);
-            w.put_f64_slice(&c.scales);
+            w.put_f64_slice(&c.scales)?;
         }
     }
+    Ok(())
 }
 
 /// Decode a conv-like node's weight quantization. Version 1 files carry a
@@ -272,24 +465,41 @@ fn decode_weight_quant(
 }
 
 /// Encode the trailing multiplier block: one `(m0, shift)` pair per output
-/// channel (a single pair in per-tensor mode).
-fn encode_multipliers(w: &mut Writer, wq: &WeightQuant, input: &QuantParams, output: &QuantParams) {
+/// channel (a single pair in per-tensor mode). A graph whose scales yield a
+/// non-finite or non-positive multiplier cannot be serialized — the decoder
+/// would reject it anyway — so this reports [`EncodeError`] instead of
+/// panicking on it.
+fn encode_multipliers(
+    w: &mut Writer,
+    node: usize,
+    wq: &WeightQuant,
+    input: &QuantParams,
+    output: &QuantParams,
+) -> Result<(), EncodeError> {
     let ms = requant_multipliers(wq, input, output)
-        .expect("valid graph has finite requant multipliers");
+        .ok_or(EncodeError::NonFiniteMultiplier { node })?;
     for m in ms {
         w.put_i32(m.m0);
         w.put_i32(m.shift);
     }
+    Ok(())
 }
 
-fn encode_ref(w: &mut Writer, r: NodeRef) {
+fn encode_ref(w: &mut Writer, r: NodeRef) -> Result<(), EncodeError> {
     match r {
         NodeRef::Input => w.put_u32(INPUT_REF),
         NodeRef::Node(i) => {
-            assert!((i as u64) < u64::from(INPUT_REF), "node index overflows wire format");
+            if i as u64 >= u64::from(INPUT_REF) {
+                return Err(EncodeError::TooLarge {
+                    what: "node index",
+                    len: i as u64,
+                    max: u64::from(INPUT_REF) - 1,
+                });
+            }
             w.put_u32(i as u32);
         }
     }
+    Ok(())
 }
 
 fn decode_ref(raw: u32, node: usize) -> Result<NodeRef, DecodeError> {
@@ -316,41 +526,41 @@ fn decode_quant_params(
     }
 }
 
-fn encode_op(w: &mut Writer, op: &QOp) {
+fn encode_op(w: &mut Writer, node: usize, op: &QOp) -> Result<(), EncodeError> {
     match op {
         QOp::Conv(c) => {
             w.put_u8(OP_CONV);
-            w.put_u8_tensor(&c.weights);
-            encode_weight_quant(w, &c.weight_quant);
-            w.put_i32_slice(&c.bias);
+            w.put_u8_tensor(&c.weights)?;
+            encode_weight_quant(w, &c.weight_quant)?;
+            w.put_i32_slice(&c.bias)?;
             w.put_u32(c.stride as u32);
             w.put_u8(c.padding.code());
             w.put_quant_params(&c.input_params);
             w.put_quant_params(&c.output_params);
             w.put_u8(c.activation.code());
-            encode_multipliers(w, &c.weight_quant, &c.input_params, &c.output_params);
+            encode_multipliers(w, node, &c.weight_quant, &c.input_params, &c.output_params)?;
         }
         QOp::Depthwise(d) => {
             w.put_u8(OP_DEPTHWISE);
-            w.put_u8_tensor(&d.weights);
-            encode_weight_quant(w, &d.weight_quant);
-            w.put_i32_slice(&d.bias);
+            w.put_u8_tensor(&d.weights)?;
+            encode_weight_quant(w, &d.weight_quant)?;
+            w.put_i32_slice(&d.bias)?;
             w.put_u32(d.stride as u32);
             w.put_u8(d.padding.code());
             w.put_quant_params(&d.input_params);
             w.put_quant_params(&d.output_params);
             w.put_u8(d.activation.code());
-            encode_multipliers(w, &d.weight_quant, &d.input_params, &d.output_params);
+            encode_multipliers(w, node, &d.weight_quant, &d.input_params, &d.output_params)?;
         }
         QOp::Fc(fc) => {
             w.put_u8(OP_FC);
-            w.put_u8_tensor(&fc.weights);
-            encode_weight_quant(w, &fc.weight_quant);
-            w.put_i32_slice(&fc.bias);
+            w.put_u8_tensor(&fc.weights)?;
+            encode_weight_quant(w, &fc.weight_quant)?;
+            w.put_i32_slice(&fc.bias)?;
             w.put_quant_params(&fc.input_params);
             w.put_quant_params(&fc.output_params);
             w.put_u8(fc.activation.code());
-            encode_multipliers(w, &fc.weight_quant, &fc.input_params, &fc.output_params);
+            encode_multipliers(w, node, &fc.weight_quant, &fc.input_params, &fc.output_params)?;
         }
         QOp::AvgPool { kernel, stride, padding } => {
             w.put_u8(OP_AVG_POOL);
@@ -367,21 +577,28 @@ fn encode_op(w: &mut Writer, op: &QOp) {
         QOp::GlobalAvgPool => w.put_u8(OP_GLOBAL_AVG_POOL),
         QOp::Add { other, out_params } => {
             w.put_u8(OP_ADD);
-            encode_ref(w, *other);
+            encode_ref(w, *other)?;
             w.put_quant_params(out_params);
         }
         QOp::Concat { others, out_params } => {
             w.put_u8(OP_CONCAT);
-            assert!(others.len() <= u32::MAX as usize);
+            if others.len() > u32::MAX as usize {
+                return Err(EncodeError::TooLarge {
+                    what: "concat operand count",
+                    len: others.len() as u64,
+                    max: u64::from(u32::MAX),
+                });
+            }
             w.put_u32(others.len() as u32);
             for r in others {
-                encode_ref(w, *r);
+                encode_ref(w, *r)?;
             }
             w.put_quant_params(out_params);
         }
         QOp::Softmax => w.put_u8(OP_SOFTMAX),
         QOp::Logistic => w.put_u8(OP_LOGISTIC),
     }
+    Ok(())
 }
 
 /// Decode the conv-like common tail: stride, padding, the activation-side
@@ -444,11 +661,16 @@ fn check_weight_channels(
     }
 }
 
-fn decode_op(r: &mut Reader, node: usize, version: u32) -> Result<QOp, DecodeError> {
+fn decode_op(
+    r: &mut Reader,
+    node: usize,
+    version: u32,
+    backing: Option<&ArtifactBytes>,
+) -> Result<QOp, DecodeError> {
     let code = r.u8()?;
     match code {
         OP_CONV => {
-            let weights = r.u8_tensor()?;
+            let weights = r.u8_tensor_with(backing)?;
             if weights.rank() != 4 {
                 return Err(DecodeError::InvalidField { node, what: "conv weight rank" });
             }
@@ -471,7 +693,7 @@ fn decode_op(r: &mut Reader, node: usize, version: u32) -> Result<QOp, DecodeErr
             }))
         }
         OP_DEPTHWISE => {
-            let weights = r.u8_tensor()?;
+            let weights = r.u8_tensor_with(backing)?;
             if weights.rank() != 4 || weights.dim(0) != 1 {
                 return Err(DecodeError::InvalidField { node, what: "depthwise weight shape" });
             }
@@ -494,7 +716,7 @@ fn decode_op(r: &mut Reader, node: usize, version: u32) -> Result<QOp, DecodeErr
             }))
         }
         OP_FC => {
-            let weights = r.u8_tensor()?;
+            let weights = r.u8_tensor_with(backing)?;
             if weights.rank() != 2 {
                 return Err(DecodeError::InvalidField { node, what: "fc weight rank" });
             }
@@ -536,14 +758,19 @@ fn decode_op(r: &mut Reader, node: usize, version: u32) -> Result<QOp, DecodeErr
             Ok(QOp::Add { other, out_params })
         }
         OP_CONCAT => {
-            let count = r.u32()? as usize;
-            // Each ref is 4 bytes; bound before allocating.
-            if count.saturating_mul(4) > r.remaining_bytes() {
-                return Err(DecodeError::Truncated {
+            let count = r.u32()?;
+            // Each ref is 4 bytes; bound before allocating, with the exact
+            // u64 byte need in the diagnostic.
+            if u64::from(count) * 4 > r.remaining_bytes() as u64 {
+                return Err(DecodeError::BadCount {
                     offset: r.offset(),
-                    needed: count.saturating_mul(4),
+                    what: "concat operand refs",
+                    count: u64::from(count),
+                    width: 4,
+                    remaining: r.remaining_bytes() as u64,
                 });
             }
+            let count = count as usize;
             let mut others = Vec::with_capacity(count);
             for _ in 0..count {
                 others.push(decode_ref(r.u32()?, node)?);
@@ -559,32 +786,74 @@ fn decode_op(r: &mut Reader, node: usize, version: u32) -> Result<QOp, DecodeErr
 
 /// Serialize an artifact to bytes. Total order of fields is documented in
 /// the module header; the encoding is deterministic, so equal graphs yield
-/// byte-equal artifacts (used by tests as a losslessness oracle).
-pub fn save(artifact: &ModelArtifact) -> Vec<u8> {
-    let mut w = Writer::new();
-    w.put_bytes(MAGIC);
-    w.put_u32(FORMAT_VERSION);
-    w.put_str(&artifact.name);
-    w.put_u32(artifact.version);
+/// byte-equal artifacts (used by tests as a losslessness oracle). Fails
+/// with a structured [`EncodeError`] — never panics — on graphs the wire
+/// format cannot carry (degenerate requantization scales, length-prefix
+/// overflow).
+pub fn save(artifact: &ModelArtifact) -> Result<Vec<u8>, EncodeError> {
+    // Single buffer: the checksum field is written as a placeholder and
+    // patched once the payload bytes exist, so encoding never holds a
+    // second copy of the artifact (the same transient this module's
+    // zero-copy *load* path eliminates).
+    let mut p = Writer::new();
+    p.put_bytes(MAGIC);
+    p.put_u32(FORMAT_VERSION);
+    p.put_u64(0); // checksum placeholder, patched below
+    p.put_str(&artifact.name)?;
+    p.put_u32(artifact.version);
     for &d in &artifact.input_shape {
-        assert!(d >= 1 && d <= u32::MAX as usize, "input shape dims must be positive");
-        w.put_u32(d as u32);
+        if d == 0 {
+            return Err(EncodeError::InvalidArtifact { what: "zero input shape dimension" });
+        }
+        if d > u32::MAX as usize {
+            return Err(EncodeError::TooLarge {
+                what: "input shape dimension",
+                len: d as u64,
+                max: u64::from(u32::MAX),
+            });
+        }
+        p.put_u32(d as u32);
     }
-    w.put_u8(artifact.graph.kernel.code());
-    w.put_quant_params(&artifact.graph.input_params);
-    assert!(artifact.graph.nodes.len() <= u32::MAX as usize);
-    w.put_u32(artifact.graph.nodes.len() as u32);
-    for node in &artifact.graph.nodes {
-        w.put_str(&node.name);
-        encode_ref(&mut w, node.input);
-        encode_op(&mut w, &node.op);
+    p.put_u8(artifact.graph.kernel.code());
+    p.put_quant_params(&artifact.graph.input_params);
+    if artifact.graph.nodes.len() > u32::MAX as usize {
+        return Err(EncodeError::TooLarge {
+            what: "node count",
+            len: artifact.graph.nodes.len() as u64,
+            max: u64::from(u32::MAX),
+        });
     }
-    w.into_bytes()
+    p.put_u32(artifact.graph.nodes.len() as u32);
+    for (idx, node) in artifact.graph.nodes.iter().enumerate() {
+        p.put_str(&node.name)?;
+        encode_ref(&mut p, node.input)?;
+        encode_op(&mut p, idx, &node.op)?;
+    }
+    let mut bytes = p.into_bytes();
+    let sum = checksum(&bytes[PAYLOAD_OFFSET..]);
+    bytes[8..PAYLOAD_OFFSET].copy_from_slice(&sum.to_le_bytes());
+    Ok(bytes)
 }
 
 /// Deserialize an artifact, validating structure, enums, DAG ordering, and
 /// the per-layer multiplier integrity check. Never panics on corrupt input.
+/// Every weight tensor is copied out of `bytes`; see [`load_shared`] for
+/// the zero-copy path.
 pub fn load(bytes: &[u8]) -> Result<ModelArtifact, DecodeError> {
+    load_impl(bytes, None)
+}
+
+/// [`load`] from a shared buffer: large u8 weight tensors borrow `buf`
+/// ([`crate::tensor::Tensor::from_view`]) instead of owning copies, so the
+/// decode allocates `o(weight bytes)` and the returned graph (plus
+/// [`ModelArtifact::backing`]) keeps `buf` alive. Inference from the
+/// borrowed graph is bit-identical to a copy-loaded one — storage is the
+/// only difference.
+pub fn load_shared(buf: &ArtifactBytes) -> Result<ModelArtifact, DecodeError> {
+    load_impl(buf.as_slice(), Some(buf))
+}
+
+fn load_impl(bytes: &[u8], backing: Option<&ArtifactBytes>) -> Result<ModelArtifact, DecodeError> {
     let mut r = Reader::new(bytes);
     let magic: [u8; 4] = r.take(4)?.try_into().unwrap();
     if &magic != MAGIC {
@@ -593,6 +862,15 @@ pub fn load(bytes: &[u8]) -> Result<ModelArtifact, DecodeError> {
     let version = r.u32()?;
     if version > FORMAT_VERSION {
         return Err(DecodeError::UnsupportedVersion { found: version, supported: FORMAT_VERSION });
+    }
+    // Verify the payload checksum when the format carries one (v3+): torn
+    // or bit-rotted files fail here, before any structure is trusted.
+    if version >= 3 {
+        let stored = r.u64()?;
+        let computed = checksum(r.remaining_slice());
+        if stored != computed {
+            return Err(DecodeError::ChecksumMismatch { stored, computed });
+        }
     }
     let name = r.str()?;
     if name.is_empty() {
@@ -618,7 +896,7 @@ pub fn load(bytes: &[u8]) -> Result<ModelArtifact, DecodeError> {
     for idx in 0..node_count {
         let node_name = r.str()?;
         let input = decode_ref(r.u32()?, idx)?;
-        let op = decode_op(&mut r, idx, version)?;
+        let op = decode_op(&mut r, idx, version, backing)?;
         nodes.push(QNode { name: node_name, input, op });
     }
     r.finish()?;
@@ -629,20 +907,57 @@ pub fn load(bytes: &[u8]) -> Result<ModelArtifact, DecodeError> {
     if let Err(detail) = graph.validate_topology() {
         return Err(DecodeError::InvalidGraph { detail });
     }
-    Ok(ModelArtifact { name, version: model_version, input_shape, graph })
+    Ok(ModelArtifact {
+        name,
+        version: model_version,
+        input_shape,
+        graph,
+        backing: backing.cloned(),
+    })
 }
 
 /// Write an artifact file (conventionally `<anything>.iaoiq`).
-pub fn write_file(path: &Path, artifact: &ModelArtifact) -> Result<()> {
-    std::fs::write(path, save(artifact)).with_context(|| format!("write artifact {path:?}"))?;
-    Ok(())
+/// Returns the encoded bytes so callers that want to verify or reuse them
+/// (export's readback check) don't pay a second encode.
+///
+/// The write is atomic: bytes land in a sibling temp file that is then
+/// renamed over `path`. Rewriting a path in place would truncate the inode
+/// a live [`LoadMode::Mmap`] serving process may still have mapped — a
+/// SIGBUS on its next cold page — whereas a rename leaves the old inode
+/// intact until its mappings drop, which is what makes export-then-swap
+/// onto the same path safe under every load mode.
+pub fn write_file(path: &Path, artifact: &ModelArtifact) -> Result<Vec<u8>> {
+    let bytes = save(artifact).with_context(|| format!("encode artifact {path:?}"))?;
+    let tmp = path.with_extension(format!("{EXTENSION}.tmp-{}", std::process::id()));
+    if let Err(e) = std::fs::write(&tmp, &bytes).and_then(|_| std::fs::rename(&tmp, path)) {
+        // Whether the write or the rename failed, leave no orphan temp file.
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("write artifact {path:?} (via {tmp:?})"));
+    }
+    Ok(bytes)
 }
 
-/// Read and decode an artifact file.
+/// Read and decode an artifact file under the [`LoadMode::from_env`]
+/// default mode (`IAOI_LOAD`, else copy).
 pub fn read_file(path: &Path) -> Result<ModelArtifact> {
-    let bytes = std::fs::read(path).with_context(|| format!("read artifact {path:?}"))?;
-    let artifact = load(&bytes).with_context(|| format!("decode artifact {path:?}"))?;
-    Ok(artifact)
+    read_file_with(path, LoadMode::from_env())
+}
+
+/// Read and decode an artifact file with an explicit weight-storage
+/// strategy: copy every tensor, borrow from a shared heap buffer, or
+/// borrow from an `mmap` of the file.
+pub fn read_file_with(path: &Path, mode: LoadMode) -> Result<ModelArtifact> {
+    let buf = match mode {
+        LoadMode::Copy => {
+            let bytes = std::fs::read(path).with_context(|| format!("read artifact {path:?}"))?;
+            return load(&bytes).with_context(|| format!("decode artifact {path:?}"));
+        }
+        LoadMode::ZeroCopy => ArtifactBytes::read_file(path)
+            .with_context(|| format!("read artifact {path:?}"))?,
+        LoadMode::Mmap => ArtifactBytes::map_file(path)
+            .with_context(|| format!("map artifact {path:?}"))?,
+    };
+    load_shared(&buf).with_context(|| format!("decode artifact {path:?}"))
 }
 
 #[cfg(test)]
@@ -678,19 +993,40 @@ mod tests {
         // Deterministic encoding + lossless decoding ⇒ a second round trip
         // reproduces the bytes exactly.
         let art = demo_artifact(11);
-        let bytes = save(&art);
+        let bytes = save(&art).expect("encode");
         let loaded = load(&bytes).expect("load");
         assert_eq!(loaded.name, "demo");
         assert_eq!(loaded.version, 3);
         assert_eq!(loaded.input_shape, [16, 16, 3]);
         assert_eq!(loaded.graph.nodes.len(), art.graph.nodes.len());
-        assert_eq!(save(&loaded), bytes);
+        assert_eq!(save(&loaded).expect("re-encode"), bytes);
+    }
+
+    #[test]
+    fn zero_copy_load_is_bit_identical_and_borrows() {
+        let art = demo_artifact(15);
+        let bytes = save(&art).expect("encode");
+        let buf = crate::tensor::ArtifactBytes::from_vec(bytes.clone());
+        let shared = load_shared(&buf).expect("load_shared");
+        assert!(shared.backing.is_some());
+        // Weight storage borrows the buffer; everything decodes equal.
+        let mut views = 0;
+        for node in &shared.graph.nodes {
+            match &node.op {
+                QOp::Conv(c) => views += usize::from(c.weights.is_view()),
+                QOp::Depthwise(d) => views += usize::from(d.weights.is_view()),
+                QOp::Fc(fc) => views += usize::from(fc.weights.is_view()),
+                _ => {}
+            }
+        }
+        assert!(views > 0, "large weight tensors must borrow the artifact buffer");
+        assert_eq!(save(&shared).expect("re-encode"), bytes, "views re-encode losslessly");
     }
 
     #[test]
     fn header_errors_are_structured() {
         let art = demo_artifact(12);
-        let bytes = save(&art);
+        let bytes = save(&art).expect("encode");
 
         let mut bad = bytes.clone();
         bad[0] = b'X';
@@ -703,21 +1039,47 @@ mod tests {
             DecodeError::UnsupportedVersion { found: 99, supported: FORMAT_VERSION }
         );
 
+        // Junk after a complete artifact lands in the checksummed span, so
+        // the checksum reports it first …
         let mut trailing = bytes.clone();
         trailing.extend_from_slice(&[1, 2, 3]);
+        assert!(matches!(load(&trailing).unwrap_err(), DecodeError::ChecksumMismatch { .. }));
+        // … and once the checksum is consistent again, the structural
+        // trailing-bytes diagnostic still fires.
+        restamp_checksum(&mut trailing);
         assert_eq!(load(&trailing).unwrap_err(), DecodeError::TrailingBytes { extra: 3 });
 
         assert!(matches!(load(&bytes[..5]), Err(DecodeError::Truncated { .. })));
     }
 
     #[test]
+    fn checksum_catches_any_payload_flip() {
+        let art = demo_artifact(14);
+        let bytes = save(&art).expect("encode");
+        for pos in (PAYLOAD_OFFSET..bytes.len()).step_by(11) {
+            let mut corrupt = bytes.clone();
+            corrupt[pos] ^= 0x01;
+            assert!(
+                matches!(load(&corrupt), Err(DecodeError::ChecksumMismatch { .. })),
+                "flip at {pos} slipped past the checksum"
+            );
+        }
+        // A flipped checksum byte itself also fails verification.
+        let mut corrupt = bytes.clone();
+        corrupt[8] ^= 0x01;
+        assert!(matches!(load(&corrupt), Err(DecodeError::ChecksumMismatch { .. })));
+    }
+
+    #[test]
     fn multiplier_integrity_check_fires() {
         let art = demo_artifact(13);
-        let mut bytes = save(&art);
+        let mut bytes = save(&art).expect("encode");
         // The final node is the FC classifier; its multiplier is the last
-        // 8 bytes of the file. Corrupt the mantissa.
+        // 8 bytes of the file. Corrupt the mantissa, then restamp the
+        // header checksum so the deeper integrity check is reachable.
         let n = bytes.len();
         bytes[n - 8] ^= 0x40;
+        restamp_checksum(&mut bytes);
         match load(&bytes) {
             Err(DecodeError::MultiplierMismatch { .. }) => {}
             other => panic!("expected MultiplierMismatch, got {other:?}"),
@@ -725,9 +1087,43 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_scales_are_encode_errors_not_panics() {
+        let mut art = demo_artifact(16);
+        let mut fc_node = None;
+        for (idx, node) in art.graph.nodes.iter_mut().enumerate() {
+            if let QOp::Fc(fc) = &mut node.op {
+                fc.output_params.scale = 0.0; // multiplier becomes infinite
+                fc_node = Some(idx);
+            }
+        }
+        let fc_node = fc_node.expect("demo net ends in an FC classifier");
+        assert_eq!(save(&art).unwrap_err(), EncodeError::NonFiniteMultiplier { node: fc_node });
+
+        let mut art = demo_artifact(16);
+        for node in art.graph.nodes.iter_mut() {
+            if let QOp::Fc(fc) = &mut node.op {
+                fc.input_params.scale = f64::NAN;
+            }
+        }
+        assert!(matches!(save(&art).unwrap_err(), EncodeError::NonFiniteMultiplier { .. }));
+
+        // Oversized variable-length fields are structured errors too.
+        let mut art = demo_artifact(16);
+        art.name = "n".repeat(usize::from(u16::MAX) + 1);
+        assert!(matches!(save(&art).unwrap_err(), EncodeError::TooLarge { what: "string", .. }));
+
+        let mut art = demo_artifact(16);
+        art.input_shape = [16, 0, 3];
+        assert_eq!(
+            save(&art).unwrap_err(),
+            EncodeError::InvalidArtifact { what: "zero input shape dimension" }
+        );
+    }
+
+    #[test]
     fn per_channel_artifact_roundtrips_and_checks_integrity() {
         let art = demo_artifact_mode(29, QuantMode::PerChannel);
-        let bytes = save(&art);
+        let bytes = save(&art).expect("encode");
         let loaded = load(&bytes).expect("load per-channel artifact");
         // Per-channel weight quantization survives the round trip exactly.
         let mut saw_per_channel = false;
@@ -745,18 +1141,17 @@ mod tests {
             }
         }
         assert!(saw_per_channel, "converter should have produced per-channel nodes");
-        assert_eq!(save(&loaded), bytes, "deterministic re-encode");
+        assert_eq!(save(&loaded).expect("re-encode"), bytes, "deterministic re-encode");
 
         // Corrupting one per-channel multiplier fires the integrity check.
-        // The first conv node's multiplier block sits right after its
-        // activation byte; flip a mantissa byte by scanning for the first
-        // difference a corrupted scale would produce — simplest robust
-        // probe: flip every byte and require no panic, and that at least
-        // one flip yields MultiplierMismatch.
+        // Flip every few bytes, restamp the checksum so the flip survives
+        // header verification, require no panic, and that at least one
+        // flip lands in a multiplier and yields MultiplierMismatch.
         let mut saw_mismatch = false;
-        for pos in (0..bytes.len()).step_by(3) {
+        for pos in (PAYLOAD_OFFSET..bytes.len()).step_by(3) {
             let mut corrupt = bytes.clone();
             corrupt[pos] ^= 0x20;
+            restamp_checksum(&mut corrupt);
             if let Err(DecodeError::MultiplierMismatch { .. }) = load(&corrupt) {
                 saw_mismatch = true;
             }
@@ -770,5 +1165,26 @@ mod tests {
         assert!(e.to_string().contains("offset 12"));
         let e = DecodeError::UnsupportedVersion { found: 9, supported: 1 };
         assert!(e.to_string().contains('9'));
+        let e = DecodeError::BadCount {
+            offset: 3,
+            what: "f64 slice",
+            count: u64::from(u32::MAX),
+            width: 8,
+            remaining: 10,
+        };
+        let s = e.to_string();
+        assert!(s.contains("4294967295") && s.contains("34359738360"), "{s}");
+        let e = DecodeError::ChecksumMismatch { stored: 1, computed: 2 };
+        assert!(e.to_string().contains("checksum"));
+        let e = EncodeError::NonFiniteMultiplier { node: 4 };
+        assert!(e.to_string().contains("node 4"));
+    }
+
+    #[test]
+    fn load_mode_labels_roundtrip() {
+        for mode in [LoadMode::Copy, LoadMode::ZeroCopy, LoadMode::Mmap] {
+            assert_eq!(LoadMode::from_label(mode.label()), Some(mode));
+        }
+        assert_eq!(LoadMode::from_label("bogus"), None);
     }
 }

@@ -1,15 +1,21 @@
 //! Little-endian wire primitives for the `.iaoiq` artifact format: a
 //! growable [`Writer`] and a bounds-checked, never-panicking [`Reader`].
 //!
-//! The reader reports [`DecodeError::Truncated`] with the offset and the
-//! number of bytes it needed, so corrupt or cut-off files fail with a
-//! precise diagnostic instead of a panic or an unbounded allocation: every
-//! variable-length field is checked against the bytes actually remaining
-//! before anything is allocated.
+//! Both directions are total functions over their inputs. The writer
+//! returns a structured [`EncodeError`] when a field cannot be represented
+//! (a string longer than its `u16` length prefix, a slice count or tensor
+//! dimension past `u32`, a tensor rank past the wire limit) instead of
+//! asserting. The reader reports [`DecodeError::Truncated`] with the offset
+//! and the number of bytes it needed, and [`DecodeError::BadCount`] — with
+//! the declared element count and the **exact byte need computed in
+//! `u64`** — when a count-prefixed field declares more data than the buffer
+//! holds, so corrupt or cut-off files fail with a precise diagnostic
+//! instead of a panic, an unbounded allocation, or a need that was silently
+//! truncated through `usize` arithmetic.
 
-use super::DecodeError;
+use super::{DecodeError, EncodeError};
 use crate::quant::QuantParams;
-use crate::tensor::Tensor;
+use crate::tensor::{ArtifactBytes, Tensor};
 
 /// Append-only little-endian encoder.
 #[derive(Default)]
@@ -38,6 +44,10 @@ impl Writer {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
     pub fn put_i32(&mut self, v: i32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -47,24 +57,31 @@ impl Writer {
     }
 
     /// `u32` count-prefixed f64 vector (per-channel scale vectors).
-    pub fn put_f64_slice(&mut self, v: &[f64]) {
-        assert!(v.len() <= u32::MAX as usize);
-        self.put_u32(v.len() as u32);
+    pub fn put_f64_slice(&mut self, v: &[f64]) -> Result<(), EncodeError> {
+        let count = Self::check_u32("f64 slice length", v.len())?;
+        self.put_u32(count);
         for &x in v {
             self.put_f64(x);
         }
+        Ok(())
     }
 
     pub fn put_bytes(&mut self, v: &[u8]) {
         self.buf.extend_from_slice(v);
     }
 
-    /// `u16` length-prefixed UTF-8. Names longer than 64 KiB are a caller
-    /// bug, not a data condition.
-    pub fn put_str(&mut self, s: &str) {
-        assert!(s.len() <= usize::from(u16::MAX), "name too long for u16 length prefix");
+    /// `u16` length-prefixed UTF-8.
+    pub fn put_str(&mut self, s: &str) -> Result<(), EncodeError> {
+        if s.len() > usize::from(u16::MAX) {
+            return Err(EncodeError::TooLarge {
+                what: "string",
+                len: s.len() as u64,
+                max: u64::from(u16::MAX),
+            });
+        }
         self.put_u16(s.len() as u16);
         self.put_bytes(s.as_bytes());
+        Ok(())
     }
 
     pub fn put_quant_params(&mut self, p: &QuantParams) {
@@ -72,23 +89,39 @@ impl Writer {
     }
 
     /// Rank-prefixed shape followed by the raw element bytes.
-    pub fn put_u8_tensor(&mut self, t: &Tensor<u8>) {
-        assert!(t.rank() <= 8, "tensor rank exceeds wire limit");
+    pub fn put_u8_tensor(&mut self, t: &Tensor<u8>) -> Result<(), EncodeError> {
+        if t.rank() > 8 {
+            return Err(EncodeError::TooLarge {
+                what: "tensor rank",
+                len: t.rank() as u64,
+                max: 8,
+            });
+        }
         self.put_u8(t.rank() as u8);
         for &d in t.shape() {
-            assert!(d <= u32::MAX as usize);
-            self.put_u32(d as u32);
+            let d = Self::check_u32("tensor dimension", d)?;
+            self.put_u32(d);
         }
         self.put_bytes(t.data());
+        Ok(())
     }
 
     /// `u32` count-prefixed i32 vector (biases).
-    pub fn put_i32_slice(&mut self, v: &[i32]) {
-        assert!(v.len() <= u32::MAX as usize);
-        self.put_u32(v.len() as u32);
+    pub fn put_i32_slice(&mut self, v: &[i32]) -> Result<(), EncodeError> {
+        let count = Self::check_u32("i32 slice length", v.len())?;
+        self.put_u32(count);
         for &x in v {
             self.put_i32(x);
         }
+        Ok(())
+    }
+
+    fn check_u32(what: &'static str, v: usize) -> Result<u32, EncodeError> {
+        u32::try_from(v).map_err(|_| EncodeError::TooLarge {
+            what,
+            len: v as u64,
+            max: u64::from(u32::MAX),
+        })
     }
 }
 
@@ -114,6 +147,12 @@ impl<'a> Reader<'a> {
         self.remaining()
     }
 
+    /// The unread tail of the buffer, without consuming it (the checksum
+    /// verification peeks at the whole payload before decoding it).
+    pub fn remaining_slice(&self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+
     fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
@@ -129,6 +168,29 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
+    /// Guard a count-prefixed field: `count` elements of `width` bytes must
+    /// fit in the remaining buffer. The byte need is computed in `u64`, so
+    /// it is exact even where `count × width` would overflow `usize` —
+    /// the error carries honest numbers instead of `usize::MAX`.
+    fn check_count(
+        &self,
+        what: &'static str,
+        count: u64,
+        width: u32,
+    ) -> Result<usize, DecodeError> {
+        let needed = count.saturating_mul(u64::from(width));
+        if needed > self.remaining() as u64 {
+            return Err(DecodeError::BadCount {
+                offset: self.pos,
+                what,
+                count,
+                width,
+                remaining: self.remaining() as u64,
+            });
+        }
+        Ok(needed as usize)
+    }
+
     pub fn u8(&mut self) -> Result<u8, DecodeError> {
         Ok(self.take(1)?[0])
     }
@@ -139,6 +201,10 @@ impl<'a> Reader<'a> {
 
     pub fn u32(&mut self) -> Result<u32, DecodeError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     pub fn i32(&mut self) -> Result<i32, DecodeError> {
@@ -152,11 +218,8 @@ impl<'a> Reader<'a> {
     /// Count-prefixed f64 vector; the count is bounded against the bytes
     /// actually remaining before anything is allocated.
     pub fn f64_slice(&mut self) -> Result<Vec<f64>, DecodeError> {
-        let count = self.u32()? as usize;
-        let bytes = count.checked_mul(8).unwrap_or(usize::MAX);
-        if bytes > self.remaining() {
-            return Err(DecodeError::Truncated { offset: self.pos, needed: bytes });
-        }
+        let count = self.u32()?;
+        let bytes = self.check_count("f64 slice", u64::from(count), 8)?;
         let raw = self.take(bytes)?;
         Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
     }
@@ -174,7 +237,21 @@ impl<'a> Reader<'a> {
         Ok(QuantParams::from_wire(bytes))
     }
 
+    /// Decode a tensor, copying its elements to the heap.
     pub fn u8_tensor(&mut self) -> Result<Tensor<u8>, DecodeError> {
+        self.u8_tensor_with(None)
+    }
+
+    /// Decode a tensor. With `backing = Some(buf)` — which must be the
+    /// buffer this reader was constructed over, so reader offsets are
+    /// buffer offsets — element storage of
+    /// [`super::ZERO_COPY_MIN_BYTES`]-or-more bytes becomes a zero-copy
+    /// view into the buffer; smaller tensors (and all tensors when
+    /// `backing` is `None`) are copied to the heap.
+    pub fn u8_tensor_with(
+        &mut self,
+        backing: Option<&ArtifactBytes>,
+    ) -> Result<Tensor<u8>, DecodeError> {
         let rank = usize::from(self.u8()?);
         if rank > 8 {
             return Err(DecodeError::BadEnum { what: "tensor rank", value: rank as u8 });
@@ -186,20 +263,26 @@ impl<'a> Reader<'a> {
             volume = volume.saturating_mul(d);
             shape.push(d as usize);
         }
-        // Bound the allocation by the bytes actually present.
-        if volume > self.remaining() as u64 {
-            return Err(DecodeError::Truncated { offset: self.pos, needed: volume as usize });
+        // Bound the allocation by the bytes actually present; the need is
+        // reported exactly (in u64) rather than truncated through usize.
+        let bytes = self.check_count("tensor elements", volume, 1)?;
+        match backing {
+            Some(buf) if bytes >= super::ZERO_COPY_MIN_BYTES => {
+                debug_assert!(std::ptr::eq(buf.as_slice().as_ptr(), self.buf.as_ptr()));
+                let offset = self.pos;
+                self.take(bytes)?;
+                Ok(Tensor::from_view(&shape, buf.view(offset, bytes)))
+            }
+            _ => {
+                let data = self.take(bytes)?.to_vec();
+                Ok(Tensor::from_vec(&shape, data))
+            }
         }
-        let data = self.take(volume as usize)?.to_vec();
-        Ok(Tensor::from_vec(&shape, data))
     }
 
     pub fn i32_slice(&mut self) -> Result<Vec<i32>, DecodeError> {
-        let count = self.u32()? as usize;
-        let bytes = count.checked_mul(4).unwrap_or(usize::MAX);
-        if bytes > self.remaining() {
-            return Err(DecodeError::Truncated { offset: self.pos, needed: bytes });
-        }
+        let count = self.u32()?;
+        let bytes = self.check_count("i32 slice", u64::from(count), 4)?;
         let raw = self.take(bytes)?;
         Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
     }
@@ -223,13 +306,15 @@ mod tests {
         w.put_u8(7);
         w.put_u16(300);
         w.put_u32(70_000);
+        w.put_u64(u64::MAX - 5);
         w.put_i32(-5);
-        w.put_str("hello");
+        w.put_str("hello").unwrap();
         let bytes = w.into_bytes();
         let mut r = Reader::new(&bytes);
         assert_eq!(r.u8().unwrap(), 7);
         assert_eq!(r.u16().unwrap(), 300);
         assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 5);
         assert_eq!(r.i32().unwrap(), -5);
         assert_eq!(r.str().unwrap(), "hello");
         r.finish().unwrap();
@@ -251,29 +336,65 @@ mod tests {
     fn tensor_roundtrip_and_oversized_dims_rejected() {
         let t = Tensor::from_vec(&[2, 3], (0..6u8).collect::<Vec<_>>());
         let mut w = Writer::new();
-        w.put_u8_tensor(&t);
+        w.put_u8_tensor(&t).unwrap();
         let bytes = w.into_bytes();
         let mut r = Reader::new(&bytes);
         assert_eq!(r.u8_tensor().unwrap(), t);
         r.finish().unwrap();
 
-        // A huge declared volume must fail fast without allocating.
+        // A huge declared volume must fail fast without allocating, and the
+        // reported need must be the honest u64 product, not usize::MAX.
         let mut w = Writer::new();
         w.put_u8(2);
         w.put_u32(u32::MAX);
         w.put_u32(u32::MAX);
         let bytes = w.into_bytes();
-        assert!(matches!(
-            Reader::new(&bytes).u8_tensor(),
-            Err(DecodeError::Truncated { .. })
-        ));
+        match Reader::new(&bytes).u8_tensor() {
+            Err(DecodeError::BadCount { count, width: 1, remaining: 0, .. }) => {
+                assert_eq!(count, u64::from(u32::MAX) * u64::from(u32::MAX));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_copy_tensor_views_share_the_buffer() {
+        let t = Tensor::from_vec(&[4, 32], (0..128u8).collect::<Vec<_>>());
+        let mut w = Writer::new();
+        w.put_u8(9); // displace the tensor so its offset is non-zero
+        w.put_u8_tensor(&t).unwrap();
+        let buf = ArtifactBytes::from_vec(w.into_bytes());
+        let mut r = Reader::new(buf.as_slice());
+        r.u8().unwrap();
+        let view = r.u8_tensor_with(Some(&buf)).unwrap();
+        r.finish().unwrap();
+        assert!(view.is_view(), "128 bytes is past the zero-copy threshold");
+        assert_eq!(view, t, "views decode the same contents");
+        // The copy path decodes identically.
+        let mut r = Reader::new(buf.as_slice());
+        r.u8().unwrap();
+        let copied = r.u8_tensor().unwrap();
+        assert!(!copied.is_view());
+        assert_eq!(copied, view);
+    }
+
+    #[test]
+    fn small_tensors_are_copied_even_with_backing() {
+        let t = Tensor::from_vec(&[4], vec![1u8, 2, 3, 4]);
+        let mut w = Writer::new();
+        w.put_u8_tensor(&t).unwrap();
+        let buf = ArtifactBytes::from_vec(w.into_bytes());
+        let mut r = Reader::new(buf.as_slice());
+        let small = r.u8_tensor_with(Some(&buf)).unwrap();
+        assert!(!small.is_view(), "below the threshold the copy path wins");
+        assert_eq!(small, t);
     }
 
     #[test]
     fn i32_slice_roundtrip() {
         let v = vec![1, -2, i32::MAX, i32::MIN];
         let mut w = Writer::new();
-        w.put_i32_slice(&v);
+        w.put_i32_slice(&v).unwrap();
         let bytes = w.into_bytes();
         let mut r = Reader::new(&bytes);
         assert_eq!(r.i32_slice().unwrap(), v);
@@ -283,17 +404,42 @@ mod tests {
     fn f64_slice_roundtrip_and_bounded() {
         let v = vec![0.5, -1.25, 1e-300, f64::MAX];
         let mut w = Writer::new();
-        w.put_f64_slice(&v);
+        w.put_f64_slice(&v).unwrap();
         let bytes = w.into_bytes();
         let mut r = Reader::new(&bytes);
         assert_eq!(r.f64_slice().unwrap(), v);
         r.finish().unwrap();
 
-        // A huge declared count must fail fast without allocating.
+        // A huge declared count must fail fast without allocating, with the
+        // exact byte need (count × 8) in the diagnostic.
         let mut w = Writer::new();
         w.put_u32(u32::MAX);
         let bytes = w.into_bytes();
-        assert!(matches!(Reader::new(&bytes).f64_slice(), Err(DecodeError::Truncated { .. })));
+        match Reader::new(&bytes).f64_slice() {
+            Err(DecodeError::BadCount { count, width: 8, remaining: 0, .. }) => {
+                assert_eq!(count, u64::from(u32::MAX));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_writer_inputs_are_structured_errors() {
+        let mut w = Writer::new();
+        let long = "x".repeat(usize::from(u16::MAX) + 1);
+        assert_eq!(
+            w.put_str(&long).unwrap_err(),
+            EncodeError::TooLarge {
+                what: "string",
+                len: u64::from(u16::MAX) + 1,
+                max: u64::from(u16::MAX)
+            }
+        );
+        let t9: Tensor<u8> = Tensor::zeros(&[1, 1, 1, 1, 1, 1, 1, 1, 1]);
+        assert_eq!(
+            w.put_u8_tensor(&t9).unwrap_err(),
+            EncodeError::TooLarge { what: "tensor rank", len: 9, max: 8 }
+        );
     }
 
     #[test]

@@ -1,0 +1,289 @@
+//! Shared backing buffers for zero-copy artifact loading.
+//!
+//! [`ArtifactBytes`] owns the raw bytes of a loaded `.iaoiq` artifact —
+//! either an ordinary heap allocation or (on 64-bit unix) a read-only
+//! `mmap` of the artifact file — behind a cheap `Arc` handle. A
+//! [`ByteView`] is a `(buffer, offset, len)` triple into such a buffer;
+//! [`super::Tensor::from_view`] wraps one as borrowed tensor storage, which
+//! is how [`crate::model_format::load_shared`] hands out weight tensors
+//! that alias the artifact bytes instead of copying them: the loaded graph
+//! then holds the buffer alive through its views, and loading a model no
+//! longer transiently doubles its weight bytes on the heap.
+//!
+//! The mmap variant uses direct `extern "C"` declarations of `mmap` /
+//! `munmap` (this build is offline and takes no crates.io dependencies)
+//! and falls back transparently to a heap read when mapping is unavailable
+//! (non-unix target, 32-bit, empty file, or a failed `mmap` call). As with
+//! any file mapping, truncating the file while a mapping is live is
+//! undefined behaviour at the OS level (SIGBUS on access); artifacts are
+//! immutable deployment units, so swaps write new files instead of
+//! rewriting mapped ones.
+
+use std::fmt;
+use std::io;
+use std::path::Path;
+use std::sync::Arc;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use core::ffi::c_void;
+
+    pub const PROT_READ: i32 = 0x1;
+    pub const MAP_PRIVATE: i32 = 0x02;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, length: usize) -> i32;
+    }
+}
+
+/// A read-only private file mapping, unmapped on drop.
+#[cfg(all(unix, target_pointer_width = "64"))]
+struct MmapRegion {
+    ptr: *mut core::ffi::c_void,
+    len: usize,
+}
+
+// SAFETY: the region is mapped PROT_READ and never written through; sharing
+// immutable reads across threads is sound, and munmap happens exactly once
+// (Drop of the uniquely-owned region inside the Arc'd Backing).
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Send for MmapRegion {}
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Sync for MmapRegion {}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl MmapRegion {
+    fn as_slice(&self) -> &[u8] {
+        // SAFETY: ptr/len describe a live PROT_READ mapping owned by self.
+        unsafe { std::slice::from_raw_parts(self.ptr.cast::<u8>(), self.len) }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        // SAFETY: exactly the (addr, len) pair returned by a successful mmap.
+        unsafe {
+            sys::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+enum Backing {
+    Heap(Box<[u8]>),
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mmap(MmapRegion),
+}
+
+impl Backing {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            Backing::Heap(b) => b,
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mmap(m) => m.as_slice(),
+        }
+    }
+}
+
+/// Immutable shared byte buffer backing a loaded artifact. Clones share the
+/// same storage (`Arc`), so handing a buffer to every weight view of a
+/// graph costs one reference count per view, not one copy.
+#[derive(Clone)]
+pub struct ArtifactBytes {
+    inner: Arc<Backing>,
+}
+
+impl ArtifactBytes {
+    /// Wrap an in-memory byte vector (heap backing).
+    pub fn from_vec(bytes: Vec<u8>) -> Self {
+        Self { inner: Arc::new(Backing::Heap(bytes.into_boxed_slice())) }
+    }
+
+    /// Read a whole file into a heap backing.
+    pub fn read_file(path: &Path) -> io::Result<Self> {
+        Ok(Self::from_vec(std::fs::read(path)?))
+    }
+
+    /// Map a file read-only. Falls back transparently to [`Self::read_file`]
+    /// when mapping is unavailable (non-unix target, empty file, or a failed
+    /// `mmap`); check [`Self::is_mapped`] to see which backing was used.
+    /// Errors only on real I/O failures (missing file, permissions).
+    pub fn map_file(path: &Path) -> io::Result<Self> {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Some(mapped) = Self::try_mmap(path)? {
+            return Ok(mapped);
+        }
+        Self::read_file(path)
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn try_mmap(path: &Path) -> io::Result<Option<Self>> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        // mmap(len = 0) is EINVAL; tiny files gain nothing from a mapping
+        // either, but keeping the cutoff at zero makes the mode observable.
+        if len == 0 {
+            return Ok(None);
+        }
+        let len = usize::try_from(len).map_err(|_| {
+            io::Error::new(io::ErrorKind::InvalidData, "file too large to map")
+        })?;
+        // SAFETY: a fresh PROT_READ/MAP_PRIVATE mapping of a file we hold
+        // open; the fd may close after mmap returns (POSIX keeps the
+        // mapping alive until munmap).
+        let ptr = unsafe {
+            sys::mmap(std::ptr::null_mut(), len, sys::PROT_READ, sys::MAP_PRIVATE, file.as_raw_fd(), 0)
+        };
+        if ptr.is_null() || ptr as isize == -1 {
+            return Ok(None); // MAP_FAILED — fall back to the heap read.
+        }
+        Ok(Some(Self { inner: Arc::new(Backing::Mmap(MmapRegion { ptr, len })) }))
+    }
+
+    /// True when the bytes come from a live file mapping rather than the
+    /// heap.
+    pub fn is_mapped(&self) -> bool {
+        match &*self.inner {
+            Backing::Heap(_) => false,
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mmap(_) => true,
+        }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        self.inner.as_slice()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// A view of `len` bytes starting at `offset`. Panics when the range is
+    /// out of bounds — view construction is producer-side code
+    /// ([`crate::model_format`]) operating on ranges it already
+    /// bounds-checked against the buffer.
+    pub fn view(&self, offset: usize, len: usize) -> ByteView {
+        assert!(
+            offset.checked_add(len).is_some_and(|end| end <= self.len()),
+            "view {offset}+{len} out of bounds for buffer of {}",
+            self.len()
+        );
+        ByteView { buf: self.clone(), offset, len }
+    }
+}
+
+impl fmt::Debug for ArtifactBytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ArtifactBytes")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+/// A borrowed sub-range of an [`ArtifactBytes`] buffer. Holding a view
+/// keeps the whole buffer alive.
+#[derive(Clone, Debug)]
+pub struct ByteView {
+    buf: ArtifactBytes,
+    offset: usize,
+    len: usize,
+}
+
+impl ByteView {
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf.as_slice()[self.offset..self.offset + self.len]
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The buffer this view borrows from.
+    pub fn backing(&self) -> &ArtifactBytes {
+        &self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_roundtrip_and_views() {
+        let buf = ArtifactBytes::from_vec((0..=255u8).collect());
+        assert_eq!(buf.len(), 256);
+        assert!(!buf.is_mapped());
+        let v = buf.view(10, 5);
+        assert_eq!(v.as_slice(), &[10, 11, 12, 13, 14]);
+        assert_eq!(v.len(), 5);
+        // Clones alias the same storage.
+        let c = buf.clone();
+        assert_eq!(c.as_slice().as_ptr(), buf.as_slice().as_ptr());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_bounds_view_panics() {
+        let buf = ArtifactBytes::from_vec(vec![0u8; 4]);
+        let _ = buf.view(2, 3);
+    }
+
+    #[test]
+    fn view_keeps_buffer_alive() {
+        let v = {
+            let buf = ArtifactBytes::from_vec(vec![7u8; 32]);
+            buf.view(0, 32)
+        };
+        assert!(v.as_slice().iter().all(|&b| b == 7));
+    }
+
+    #[test]
+    fn map_file_reads_file_contents() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("iaoi-bytes-test-{}.bin", std::process::id()));
+        std::fs::write(&path, [1u8, 2, 3, 4, 5]).unwrap();
+        let mapped = ArtifactBytes::map_file(&path).unwrap();
+        assert_eq!(mapped.as_slice(), &[1, 2, 3, 4, 5]);
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(mapped.is_mapped(), "64-bit unix should take the mmap path");
+        let heap = ArtifactBytes::read_file(&path).unwrap();
+        assert!(!heap.is_mapped());
+        assert_eq!(heap.as_slice(), mapped.as_slice());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_file_falls_back_to_heap() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("iaoi-bytes-empty-{}.bin", std::process::id()));
+        std::fs::write(&path, []).unwrap();
+        let buf = ArtifactBytes::map_file(&path).unwrap();
+        assert!(buf.is_empty());
+        assert!(!buf.is_mapped());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -4,21 +4,49 @@
 //! OHWI (output channel, kernel h, kernel w, input channel) — the layouts
 //! TFLite uses and the ones that make the im2col → GEMM lowering in
 //! [`crate::nn`] contiguous along the reduction dimension.
+//!
+//! Storage is normally an owned `Vec<T>`, but a `Tensor<u8>` can instead
+//! *borrow* its elements from a shared [`ArtifactBytes`] buffer
+//! ([`Tensor::from_view`]) — the zero-copy artifact-load path: weight
+//! tensors of a loaded model alias the artifact bytes (heap or `mmap`)
+//! instead of owning copies. Borrowed tensors are read-only in spirit;
+//! any mutating accessor ([`Tensor::data_mut`], the `reset` family,
+//! [`Tensor::into_data`]) first detaches them into an owned copy, so every
+//! existing call site keeps working unchanged.
 
+pub mod bytes;
 
+pub use bytes::{ArtifactBytes, ByteView};
+
+/// Element storage: owned, or a borrowed view into a shared artifact
+/// buffer. The `Shared` variant is only ever constructed for `T = u8`
+/// ([`Tensor::from_view`] is defined on `Tensor<u8>` alone) — the
+/// invariant that makes the byte reinterpretation in [`Tensor::data`]
+/// sound.
+#[derive(Clone, Debug)]
+enum Storage<T> {
+    Owned(Vec<T>),
+    Shared(ByteView),
+}
 
 /// A dense row-major tensor over element type `T`.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct Tensor<T> {
     shape: Vec<usize>,
-    data: Vec<T>,
+    data: Storage<T>,
+}
+
+impl<T: Copy + Default + PartialEq> PartialEq for Tensor<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data() == other.data()
+    }
 }
 
 impl<T: Copy + Default> Tensor<T> {
     /// Zero-initialized (default-initialized) tensor.
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
-        Self { shape: shape.to_vec(), data: vec![T::default(); n] }
+        Self { shape: shape.to_vec(), data: Storage::Owned(vec![T::default(); n]) }
     }
 
     /// Wrap existing data; `data.len()` must equal the shape volume.
@@ -29,13 +57,13 @@ impl<T: Copy + Default> Tensor<T> {
             "shape {shape:?} does not match data length {}",
             data.len()
         );
-        Self { shape: shape.to_vec(), data }
+        Self { shape: shape.to_vec(), data: Storage::Owned(data) }
     }
 
     /// Filled with a constant.
     pub fn full(shape: &[usize], value: T) -> Self {
         let n = shape.iter().product();
-        Self { shape: shape.to_vec(), data: vec![value; n] }
+        Self { shape: shape.to_vec(), data: Storage::Owned(vec![value; n]) }
     }
 
     #[inline]
@@ -45,31 +73,74 @@ impl<T: Copy + Default> Tensor<T> {
 
     #[inline]
     pub fn len(&self) -> usize {
-        self.data.len()
+        match &self.data {
+            Storage::Owned(v) => v.len(),
+            Storage::Shared(view) => view.len(),
+        }
     }
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len() == 0
     }
 
     #[inline]
     pub fn data(&self) -> &[T] {
-        &self.data
+        match &self.data {
+            Storage::Owned(v) => v,
+            Storage::Shared(view) => {
+                // Compiles to nothing for u8; a hard stop if the invariant
+                // on `Storage::Shared` construction is ever violated.
+                assert!(
+                    std::mem::size_of::<T>() == 1 && std::mem::align_of::<T>() == 1,
+                    "shared storage is only valid for byte-sized elements"
+                );
+                let b = view.as_slice();
+                // SAFETY: T is byte-sized and byte-aligned (asserted above;
+                // by construction T = u8), so reinterpreting the immutable
+                // byte slice is sound and the lifetime is tied to &self,
+                // which keeps the backing buffer alive.
+                unsafe { std::slice::from_raw_parts(b.as_ptr().cast::<T>(), b.len()) }
+            }
+        }
+    }
+
+    /// Detach shared storage into an owned copy; no-op for owned tensors.
+    /// All mutating accessors funnel through this, so a zero-copy weight
+    /// view silently becomes a private copy the moment anyone writes to it.
+    fn make_owned(&mut self) {
+        if matches!(self.data, Storage::Shared(_)) {
+            let copied = self.data().to_vec();
+            self.data = Storage::Owned(copied);
+        }
+    }
+
+    /// True when the elements are borrowed from a shared artifact buffer
+    /// rather than owned (the zero-copy load path).
+    pub fn is_view(&self) -> bool {
+        matches!(self.data, Storage::Shared(_))
     }
 
     #[inline]
     pub fn data_mut(&mut self) -> &mut [T] {
-        &mut self.data
+        self.make_owned();
+        match &mut self.data {
+            Storage::Owned(v) => v,
+            Storage::Shared(_) => unreachable!("make_owned detached the view"),
+        }
     }
 
-    pub fn into_data(self) -> Vec<T> {
-        self.data
+    pub fn into_data(mut self) -> Vec<T> {
+        self.make_owned();
+        match self.data {
+            Storage::Owned(v) => v,
+            Storage::Shared(_) => unreachable!("make_owned detached the view"),
+        }
     }
 
     /// Reinterpret with a new shape of identical volume.
     pub fn reshape(mut self, shape: &[usize]) -> Self {
-        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        assert_eq!(shape.iter().product::<usize>(), self.len());
         self.shape = shape.to_vec();
         self
     }
@@ -81,11 +152,13 @@ impl<T: Copy + Default> Tensor<T> {
     /// execution path ([`crate::graph::PreparedGraph`]) relies on for its
     /// zero-alloc steady state.
     pub fn reset(&mut self, shape: &[usize]) {
+        self.make_owned();
         let n = shape.iter().product();
         self.shape.clear();
         self.shape.extend_from_slice(shape);
-        self.data.clear();
-        self.data.resize(n, T::default());
+        let Storage::Owned(data) = &mut self.data else { unreachable!() };
+        data.clear();
+        data.resize(n, T::default());
     }
 
     /// [`Self::reset`] without the element fill: prior contents (up to the
@@ -94,11 +167,13 @@ impl<T: Copy + Default> Tensor<T> {
     /// layer paths use it because they write each output element exactly
     /// once.
     pub fn reset_for_overwrite(&mut self, shape: &[usize]) {
+        self.make_owned();
         let n = shape.iter().product();
         self.shape.clear();
         self.shape.extend_from_slice(shape);
-        if self.data.len() != n {
-            self.data.resize(n, T::default());
+        let Storage::Owned(data) = &mut self.data else { unreachable!() };
+        if data.len() != n {
+            data.resize(n, T::default());
         }
     }
 
@@ -108,12 +183,14 @@ impl<T: Copy + Default> Tensor<T> {
     /// (the zero-alloc steady state of [`crate::graph::PreparedGraph`]).
     pub fn reset_for_overwrite_last_dim(&mut self, shape: &[usize], last: usize) {
         assert!(!shape.is_empty(), "need at least one dimension to override");
+        self.make_owned();
         self.shape.clear();
         self.shape.extend_from_slice(shape);
         *self.shape.last_mut().expect("non-empty shape") = last;
         let n = self.shape.iter().product();
-        if self.data.len() != n {
-            self.data.resize(n, T::default());
+        let Storage::Owned(data) = &mut self.data else { unreachable!() };
+        if data.len() != n {
+            data.resize(n, T::default());
         }
     }
 
@@ -139,19 +216,49 @@ impl<T: Copy + Default> Tensor<T> {
     /// NHWC element access.
     #[inline]
     pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> T {
-        self.data[self.idx4(n, h, w, c)]
+        self.data()[self.idx4(n, h, w, c)]
     }
 
     /// NHWC element write.
     #[inline]
     pub fn set4(&mut self, n: usize, h: usize, w: usize, c: usize, v: T) {
         let i = self.idx4(n, h, w, c);
-        self.data[i] = v;
+        self.data_mut()[i] = v;
     }
 
-    /// Map every element through `f` into a new tensor (possibly new type).
+    /// Map every element through `f` into a new (owned) tensor (possibly
+    /// new type).
     pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
-        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&v| f(v)).collect() }
+        Tensor {
+            shape: self.shape.clone(),
+            data: Storage::Owned(self.data().iter().map(|&v| f(v)).collect()),
+        }
+    }
+}
+
+impl Tensor<u8> {
+    /// Zero-copy constructor: borrow the elements from `view` instead of
+    /// owning a copy. The view's byte length must equal the shape volume.
+    /// This is how [`crate::model_format::load_shared`] hands out weight
+    /// tensors that alias the artifact buffer; the tensor (and its clones)
+    /// keep the whole backing buffer alive.
+    pub fn from_view(shape: &[usize], view: ByteView) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            view.len(),
+            "shape {shape:?} does not match view length {}",
+            view.len()
+        );
+        Self { shape: shape.to_vec(), data: Storage::Shared(view) }
+    }
+
+    /// The shared buffer this tensor borrows from, if it is a zero-copy
+    /// view.
+    pub fn backing(&self) -> Option<&ArtifactBytes> {
+        match &self.data {
+            Storage::Owned(_) => None,
+            Storage::Shared(view) => Some(view.backing()),
+        }
     }
 }
 
@@ -268,6 +375,41 @@ mod tests {
         let t = Tensor::from_vec(&[4], vec![1u8, 2, 3, 255]);
         let f = t.map(|v| f32::from(v) / 255.0);
         assert!((f.data()[3] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn view_tensor_reads_shared_bytes_and_compares_equal() {
+        let buf = ArtifactBytes::from_vec((0..24u8).collect());
+        let v = Tensor::from_view(&[2, 3, 4], buf.view(0, 24));
+        assert!(v.is_view());
+        assert!(v.backing().is_some());
+        assert_eq!(v.len(), 24);
+        assert_eq!(v.data()[5], 5);
+        let owned = Tensor::from_vec(&[2, 3, 4], (0..24u8).collect());
+        assert_eq!(v, owned, "views and owned tensors compare by contents");
+        // Offset views see the right window.
+        let w = Tensor::from_view(&[4], buf.view(20, 4));
+        assert_eq!(w.data(), &[20, 21, 22, 23]);
+    }
+
+    #[test]
+    fn view_tensor_detaches_on_write() {
+        let buf = ArtifactBytes::from_vec(vec![9u8; 8]);
+        let mut t = Tensor::from_view(&[8], buf.view(0, 8));
+        t.data_mut()[0] = 1;
+        assert!(!t.is_view(), "mutation must detach the view");
+        assert_eq!(t.data()[0], 1);
+        assert_eq!(buf.as_slice()[0], 9, "the shared buffer is untouched");
+        // into_data on a live view copies too.
+        let t2 = Tensor::from_view(&[8], buf.view(0, 8));
+        assert_eq!(t2.into_data(), vec![9u8; 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match view length")]
+    fn from_view_checks_volume() {
+        let buf = ArtifactBytes::from_vec(vec![0u8; 6]);
+        let _ = Tensor::from_view(&[2, 2], buf.view(0, 6));
     }
 
     #[test]

@@ -1,70 +1,33 @@
 //! Allocation-count regression test for the prepared execution path.
 //!
-//! A counting [`GlobalAlloc`] wraps the system allocator; the single test
-//! below (kept alone in this target so no concurrent test can allocate
-//! while the counter is armed) asserts that a prepared
+//! The shared counting allocator (`iaoi::bench_util::counting_alloc`)
+//! wraps the system allocator; the single test below (kept alone in this
+//! target so no concurrent test can allocate while the counter is armed)
+//! asserts that a prepared
 //! [`iaoi::graph::PreparedGraph::run_q`] performs **zero** heap
 //! allocations in steady state — i.e. after a warm-up pass has grown every
 //! scratch buffer and output slot to its high-water mark — and, as a guard
 //! that the counter itself works, that the unprepared [`QGraph::run_q`]
 //! path does allocate.
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-
+use iaoi::bench_util::counting_alloc::{self, CountingAlloc};
 use iaoi::data::Rng;
 use iaoi::graph::builders::papernet_random;
 use iaoi::graph::{ExecState, FloatGraph, FloatOp, NodeRef};
+use iaoi::model_format::{self, ModelArtifact};
 use iaoi::nn::conv::Conv2d;
 use iaoi::nn::fc::FullyConnected;
 use iaoi::nn::{FusedActivation, Padding, QTensor};
 use iaoi::quantize::{quantize_graph, QuantMode, QuantizeOptions};
-use iaoi::tensor::Tensor;
-
-/// Counts allocation events (alloc / alloc_zeroed / realloc) while armed.
-struct CountingAlloc;
-
-static ARMED: AtomicBool = AtomicBool::new(false);
-static EVENTS: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        if ARMED.load(Ordering::Relaxed) {
-            EVENTS.fetch_add(1, Ordering::Relaxed);
-        }
-        System.alloc(layout)
-    }
-
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        if ARMED.load(Ordering::Relaxed) {
-            EVENTS.fetch_add(1, Ordering::Relaxed);
-        }
-        System.alloc_zeroed(layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        if ARMED.load(Ordering::Relaxed) {
-            EVENTS.fetch_add(1, Ordering::Relaxed);
-        }
-        System.realloc(ptr, layout, new_size)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-}
+use iaoi::tensor::{ArtifactBytes, Tensor};
 
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
 /// Run `f` with the counter armed, returning the number of allocation
-/// events it performed.
+/// events (alloc / alloc_zeroed / realloc) it performed.
 fn count_allocs(f: impl FnOnce()) -> u64 {
-    EVENTS.store(0, Ordering::SeqCst);
-    ARMED.store(true, Ordering::SeqCst);
-    f();
-    ARMED.store(false, Ordering::SeqCst);
-    EVENTS.load(Ordering::SeqCst)
+    counting_alloc::measure(f).events
 }
 
 #[test]
@@ -152,6 +115,38 @@ fn prepared_run_q_is_allocation_free_in_steady_state() {
         steady_c, 0,
         "concat/softmax/logistic steady state made {steady_c} allocations"
     );
+
+    // Zero-copy artifact loading: decoding from a shared buffer must
+    // allocate strictly less than the copy path (it skips the per-weight-
+    // tensor copies) …
+    let art = ModelArtifact::new("alloc-test", 1, [16, 16, 3], q.clone());
+    let bytes = model_format::save(&art).expect("encode");
+    let copy_load = count_allocs(|| {
+        let _ = std::hint::black_box(model_format::load(&bytes).expect("copy load"));
+    });
+    let buf = ArtifactBytes::from_vec(bytes.clone());
+    let shared_load = count_allocs(|| {
+        let _ = std::hint::black_box(model_format::load_shared(&buf).expect("zero-copy load"));
+    });
+    assert!(
+        shared_load < copy_load,
+        "zero-copy load allocated {shared_load} events, copy load {copy_load}: \
+         borrowing weight views should allocate strictly less"
+    );
+
+    // … and a plan prepared from a zero-copy-loaded graph keeps the
+    // steady-state zero-alloc guarantee (packing owns its buffers; the
+    // borrowed weight views are read-only inputs).
+    let loaded = model_format::load_shared(&buf).expect("zero-copy load");
+    let plan_zc = loaded.graph.prepare();
+    let mut state_zc = ExecState::new();
+    let qin_zc = QTensor::quantize(&mk(&mut rng, 2), loaded.graph.input_params);
+    plan_zc.run_q(&qin_zc, &mut state_zc);
+    plan_zc.run_q(&qin_zc, &mut state_zc);
+    let steady_zc = count_allocs(|| {
+        plan_zc.run_q(&qin_zc, &mut state_zc);
+    });
+    assert_eq!(steady_zc, 0, "zero-copy-loaded steady state made {steady_zc} allocations");
 }
 
 /// A graph exercising the three formerly-allocating prepared ops: a
