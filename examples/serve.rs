@@ -15,6 +15,8 @@ use iaoi::coordinator::{BatchPolicy, MultiCoordinator};
 use iaoi::data::ClassificationSet;
 use iaoi::harness::demo_artifact;
 use iaoi::model_format;
+use iaoi::serve::client::HttpClient;
+use iaoi::serve::{ServeConfig, Server};
 use std::collections::BTreeSet;
 use std::time::{Duration, Instant};
 
@@ -110,6 +112,49 @@ fn main() -> Result<()> {
          one model hot-swapped mid-run with zero dropped requests",
         total as f64 / wall
     );
+
+    // --- The same artifacts through the socket front end. ---
+    // `iaoi serve --addr HOST:PORT` wraps this Server; the in-process
+    // handle shows the production rails end to end: an HTTP round trip, a
+    // clean admission shed at the in-flight cap, and a graceful drain.
+    let registry = ModelRegistry::load_dir(&dir)?;
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_delay: Duration::from_millis(1),
+        global_inflight_cap: 4,
+        ..Default::default()
+    };
+    let server = Server::start(registry, policy, 2, ServeConfig::default())?;
+    let addr = server.local_addr();
+    let mut http = HttpClient::connect(addr)?;
+    println!("\nsocket front end on http://{addr}: healthz {}", http.get("/healthz")?.status);
+    let probe = ClassificationSet::new(16, 16, 9);
+    let resp = http.infer("alpha", probe.example(2, 0).0.data())?;
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.body_f32()?.len(), 16);
+    println!(
+        "  POST /infer/alpha -> 200 (served by v{}, {}us)",
+        resp.header("X-Model-Version").unwrap_or("?"),
+        resp.header("X-Latency-Us").unwrap_or("?"),
+    );
+    // Saturate admission to show load-shedding, then drain out.
+    let admission = server.admission();
+    let permits: Vec<_> =
+        (0..4).map(|_| admission.try_acquire("alpha").expect("cap slot")).collect();
+    let shed = http.infer("alpha", probe.example(2, 1).0.data())?;
+    assert_eq!(shed.status, 503, "past the cap, arrivals must shed");
+    println!(
+        "  at the in-flight cap -> 503 overloaded, Retry-After {}s",
+        shed.header("Retry-After").unwrap_or("?"),
+    );
+    drop(permits);
+    let report = server.shutdown();
+    assert!(report.drained_clean);
+    println!(
+        "  drained clean (admitted {}, shed {}) — socket front end OK",
+        report.admitted, report.shed
+    );
+
     let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }

@@ -1,0 +1,267 @@
+//! Loadgen bench for the socket serving front end (`iaoi serve --addr`):
+//! N concurrent client threads over real TCP sockets, first closed-loop
+//! (latency distribution at a sane load), then an overload sweep offering
+//! more concurrency than the admission cap to show load-shedding behaving —
+//! excess arrivals get fast 503s, not unbounded queueing. Emits
+//! `BENCH_serve.json` with throughput, client-side p50/p99/p999, and the
+//! shed rate.
+//!
+//! Two modes:
+//! * default — starts an in-process [`iaoi::serve::Server`] (global
+//!   in-flight cap 8) on an ephemeral port; also forces a deterministic
+//!   shed burst by holding admission permits, so the shed numbers are
+//!   nonzero even on a fast machine.
+//! * `IAOI_SERVE_ADDR=HOST:PORT` — targets an externally launched
+//!   `iaoi serve --addr` process (the CI smoke job does this), exercising
+//!   the real binary end to end.
+//!
+//! Run: `cargo bench --bench serving`
+//! (CI runs it under `IAOI_BENCH_SMOKE=1`, whose numbers are not meaningful.)
+
+use iaoi::bench_util::smoke_mode;
+use iaoi::coordinator::registry::ModelRegistry;
+use iaoi::coordinator::BatchPolicy;
+use iaoi::data::Rng;
+use iaoi::harness::demo_artifact;
+use iaoi::serve::client::HttpClient;
+use iaoi::serve::{ServeConfig, Server};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// First `"key":"value"` string field in a JSON blob (hand-rolled: the
+/// healthz payload is flat enough that full parsing would be overkill).
+fn json_str_field(text: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":\"");
+    let start = text.find(&pat)? + pat.len();
+    let end = text[start..].find('"')? + start;
+    Some(text[start..end].to_string())
+}
+
+/// First `"input_shape":[H,W,C]` array in the healthz payload.
+fn json_input_shape(text: &str) -> Option<[usize; 3]> {
+    let pat = "\"input_shape\":[";
+    let start = text.find(pat)? + pat.len();
+    let end = text[start..].find(']')? + start;
+    let nums: Vec<usize> =
+        text[start..end].split(',').filter_map(|s| s.trim().parse().ok()).collect();
+    if nums.len() == 3 {
+        Some([nums[0], nums[1], nums[2]])
+    } else {
+        None
+    }
+}
+
+/// `metric_name{...} value` line value from a Prometheus text page.
+fn prom_value(text: &str, line_prefix: &str) -> Option<u64> {
+    text.lines()
+        .find(|l| l.starts_with(line_prefix))?
+        .rsplit(' ')
+        .next()?
+        .parse()
+        .ok()
+}
+
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    sorted_us[((sorted_us.len() - 1) as f64 * p) as usize]
+}
+
+fn random_image(rng: &mut Rng, shape: [usize; 3]) -> Vec<f32> {
+    (0..shape[0] * shape[1] * shape[2]).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+}
+
+/// One closed-loop client: `reqs` back-to-back inferences, returning
+/// (latencies_us of 200s, ok, shed). Shed responses are retried after a
+/// short backoff so the thread keeps offering load; anything else ends the
+/// thread (draining server / torn connection).
+fn run_client(
+    addr: &str,
+    model: &str,
+    shape: [usize; 3],
+    seed: u64,
+    reqs: usize,
+) -> (Vec<f64>, u64, u64) {
+    let mut lat = Vec::with_capacity(reqs);
+    let (mut ok, mut shed) = (0u64, 0u64);
+    let Ok(mut client) = HttpClient::connect(addr) else {
+        return (lat, ok, shed);
+    };
+    let mut rng = Rng::seeded(seed);
+    let mut sent = 0usize;
+    while sent < reqs {
+        let img = random_image(&mut rng, shape);
+        let t = Instant::now();
+        match client.infer(model, &img) {
+            Ok(resp) if resp.status == 200 => {
+                lat.push(t.elapsed().as_secs_f64() * 1e6);
+                ok += 1;
+                sent += 1;
+            }
+            Ok(resp) if resp.status == 503 && resp.body_text().contains("overloaded") => {
+                shed += 1;
+                sent += 1;
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Ok(_) | Err(_) => break,
+        }
+    }
+    (lat, ok, shed)
+}
+
+/// Fan out `clients` concurrent closed-loop threads; returns
+/// (all latencies sorted, ok, shed, wall seconds).
+fn sweep(
+    addr: &str,
+    model: &str,
+    shape: [usize; 3],
+    clients: usize,
+    reqs: usize,
+    seed: u64,
+) -> (Vec<f64>, u64, u64, f64) {
+    let start = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|t| {
+            let addr = addr.to_string();
+            let model = model.to_string();
+            std::thread::spawn(move || run_client(&addr, &model, shape, seed + t as u64, reqs))
+        })
+        .collect();
+    let mut lat = Vec::new();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for h in handles {
+        let (l, o, s) = h.join().expect("client thread");
+        lat.extend(l);
+        ok += o;
+        shed += s;
+    }
+    let wall = start.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (lat, ok, shed, wall)
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let external = std::env::var("IAOI_SERVE_ADDR").ok();
+    let cap = 8usize;
+
+    // Target: an externally launched `iaoi serve --addr` (CI smoke), or an
+    // in-process server with a deliberately small global cap.
+    let (addr, server) = match &external {
+        Some(a) => {
+            println!("targeting external server at {a}");
+            (a.clone(), None)
+        }
+        None => {
+            let registry = ModelRegistry::new();
+            registry.install(demo_artifact("alpha", 1, 16, 3), PathBuf::from("<bench:alpha>"));
+            registry.install(demo_artifact("beta", 1, 8, 11), PathBuf::from("<bench:beta>"));
+            let policy = BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(1),
+                global_inflight_cap: cap,
+                ..Default::default()
+            };
+            let server = Server::start(registry, policy, 2, ServeConfig::default())
+                .expect("in-process server");
+            let addr = server.local_addr().to_string();
+            println!("in-process server on {addr} (global in-flight cap {cap})");
+            (addr, Some(server))
+        }
+    };
+
+    // Discover a model + its input geometry from the health endpoint, the
+    // same way an operator's probe would.
+    let mut probe = HttpClient::connect(addr.as_str()).expect("connect for discovery");
+    let health = probe.get("/healthz").expect("healthz").body_text();
+    let model = json_str_field(&health, "name").expect("a served model in /healthz");
+    let shape = json_input_shape(&health).expect("input_shape in /healthz");
+    println!("model {model:?}, input {shape:?}\n");
+
+    // Phase A — closed loop at modest concurrency: the latency numbers.
+    let (a_clients, a_reqs) = if smoke { (2, 8) } else { (4, 300) };
+    println!("== phase A: closed loop, {a_clients} clients x {a_reqs} requests ==");
+    let (lat, a_ok, a_shed, a_wall) = sweep(&addr, &model, shape, a_clients, a_reqs, 100);
+    let (p50, p99, p999) =
+        (percentile(&lat, 0.5), percentile(&lat, 0.99), percentile(&lat, 0.999));
+    let a_rps = a_ok as f64 / a_wall.max(1e-9);
+    println!(
+        "  {a_ok} ok, {a_shed} shed in {a_wall:.2}s — {a_rps:.1} req/s, p50 {p50:.0}us p99 {p99:.0}us p999 {p999:.0}us\n"
+    );
+
+    // Phase B — overload: offer well more concurrency than the admission
+    // cap; the excess must convert to fast 503 sheds, not queueing.
+    let (b_clients, b_reqs) = if smoke { (8, 25) } else { (32, 200) };
+    println!("== phase B: overload sweep, {b_clients} clients x {b_reqs} requests ==");
+    let (_, b_ok, mut b_shed, b_wall) = sweep(&addr, &model, shape, b_clients, b_reqs, 500);
+    let b_rps = b_ok as f64 / b_wall.max(1e-9);
+
+    // Deterministic forced shed (in-process only): saturate the cap by
+    // holding permits directly, then fire requests that must all be shed —
+    // guarantees a nonzero shed count regardless of machine speed.
+    let mut forced_shed = 0u64;
+    if let Some(server) = &server {
+        let admission = server.admission();
+        let mut permits = Vec::new();
+        while let Ok(p) = admission.try_acquire(&model) {
+            permits.push(p);
+            assert!(permits.len() <= cap + 1, "admission failed to enforce its cap");
+        }
+        let mut client = HttpClient::connect(addr.as_str()).expect("connect for forced shed");
+        let mut rng = Rng::seeded(900);
+        for _ in 0..10 {
+            let img = random_image(&mut rng, shape);
+            let resp = client.infer(&model, &img).expect("shed response");
+            assert_eq!(resp.status, 503, "saturated server must shed, got {}", resp.status);
+            forced_shed += 1;
+        }
+        drop(permits);
+    }
+    b_shed += forced_shed;
+    let b_total = b_ok + b_shed;
+    let shed_rate = if b_total > 0 { b_shed as f64 / b_total as f64 } else { 0.0 };
+    println!(
+        "  {b_ok} ok, {b_shed} shed ({forced_shed} forced) — {b_rps:.1} req/s, shed rate {:.1}%\n",
+        shed_rate * 100.0
+    );
+
+    // Phase C — the metrics endpoint must expose the same story.
+    let metrics = probe.get("/metrics").expect("metrics").body_text();
+    let quantiles_exported = metrics.contains("iaoi_latency_us{");
+    let server_admitted =
+        prom_value(&metrics, "iaoi_admitted_total{scope=\"global\"}").unwrap_or(0);
+    let server_shed = prom_value(&metrics, "iaoi_shed_total{scope=\"global\"}").unwrap_or(0);
+    println!("== phase C: server-side counters — admitted {server_admitted}, shed {server_shed} ==");
+    assert!(quantiles_exported, "/metrics must export latency quantiles");
+    assert!(server_shed >= forced_shed, "server must have observed the forced sheds");
+
+    let json = format!(
+        "{{\n  \"bench\": \"serving\",\n  \"smoke\": {},\n  \"mode\": \"{}\",\n  \"model\": \"{}\",\n  \"closed_loop\": {{\"clients\": {}, \"requests_ok\": {}, \"throughput_rps\": {:.2}, \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"p999_us\": {:.1}}},\n  \"overload\": {{\"clients\": {}, \"ok\": {}, \"shed\": {}, \"forced_shed\": {}, \"shed_rate\": {:.4}, \"throughput_rps\": {:.2}}},\n  \"server\": {{\"admitted_total\": {}, \"shed_total\": {}, \"latency_quantiles_exported\": {}}}\n}}\n",
+        smoke,
+        if external.is_some() { "external" } else { "in-process" },
+        model,
+        a_clients,
+        a_ok,
+        a_rps,
+        p50,
+        p99,
+        p999,
+        b_clients,
+        b_ok,
+        b_shed,
+        forced_shed,
+        shed_rate,
+        b_rps,
+        server_admitted,
+        server_shed,
+        quantiles_exported,
+    );
+    std::fs::write("BENCH_serve.json", &json).expect("write BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json");
+
+    if let Some(server) = server {
+        let report = server.shutdown();
+        assert!(report.drained_clean, "bench shutdown must drain clean");
+    }
+}

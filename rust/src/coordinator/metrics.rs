@@ -1,7 +1,134 @@
 //! Serving metrics: latency distribution, batch-size distribution and
-//! throughput, collected by the coordinator workers.
+//! throughput, collected by the coordinator workers and exported by the
+//! socket front end ([`crate::serve`]) on its `/metrics` endpoint.
+//!
+//! Latencies are recorded into a **fixed log-spaced histogram**
+//! ([`LatencyHistogram`]) rather than a sample reservoir: memory is bounded
+//! (one `u64` counter per bucket, ~4 KiB total) no matter how long the
+//! server runs, every request is counted (the previous 100k-entry reservoir
+//! silently stopped sampling once full, so long-running servers reported
+//! stale percentiles), and histograms from different workers/models merge
+//! by bucket-wise addition. The price is bucket-resolution percentiles:
+//! with 8 sub-buckets per power of two the relative error of any reported
+//! quantile is bounded by half a bucket width, ≤ ~6.7%.
 
 use std::time::Duration;
+
+/// Sub-bucket resolution: 2^3 = 8 log-spaced buckets per power of two.
+const SUB_BITS: u32 = 3;
+const SUB: u64 = 1 << SUB_BITS;
+/// Bucket count covering the full `u64` microsecond range: values below
+/// `SUB` get exact unit buckets, every octave above contributes `SUB`
+/// buckets, up to exponent 63.
+const BUCKETS: usize = ((64 - SUB_BITS as usize) << SUB_BITS as usize) + SUB as usize;
+
+/// Index of the bucket holding `us`.
+fn bucket_index(us: u64) -> usize {
+    if us < SUB {
+        return us as usize;
+    }
+    let e = 63 - us.leading_zeros(); // floor(log2 us), >= SUB_BITS
+    let group = (e - SUB_BITS + 1) as usize;
+    let sub = ((us >> (e - SUB_BITS)) & (SUB - 1)) as usize;
+    (group << SUB_BITS) + sub
+}
+
+/// `[lo, hi)` microsecond bounds of bucket `i` (hi saturates at the top).
+fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < SUB as usize {
+        return (i as u64, i as u64 + 1);
+    }
+    let group = (i >> SUB_BITS as usize) as u32; // >= 1
+    let sub = (i & (SUB as usize - 1)) as u64;
+    let shift = group - 1;
+    let lo = (SUB + sub) << shift;
+    let hi = lo.saturating_add(1u64 << shift);
+    (lo, hi)
+}
+
+/// Fixed-size log-spaced latency histogram (microsecond domain).
+///
+/// Bounded memory, no truncation, and mergeable across workers: unlike a
+/// reservoir, two histograms recorded independently and then
+/// [`merged`](Self::merge) are *exactly* the histogram of the combined
+/// stream. Percentiles are reported as the midpoint of the covering
+/// bucket, clamped to the observed maximum.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; BUCKETS], total: 0, sum_us: 0, max_us: 0 }
+    }
+
+    /// Record one observation. Never saturates or drops.
+    pub fn record(&mut self, us: u64) {
+        self.counts[bucket_index(us)] += 1;
+        self.total += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean in microseconds (0 when empty).
+    pub fn mean_us(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.sum_us / self.total
+        }
+    }
+
+    /// Largest recorded value in microseconds.
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// The `p`-quantile (`0.0 < p <= 1.0`) in microseconds: the midpoint of
+    /// the bucket containing the ceil(p·n)-th smallest observation, clamped
+    /// to the observed maximum. 0 when empty.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((p * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let (lo, hi) = bucket_bounds(i);
+                let mid = lo + (hi - lo) / 2;
+                return mid.min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Fold `other` into `self` (bucket-wise; exact, order-independent).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
 
 /// Aggregated serving statistics.
 #[derive(Clone, Debug)]
@@ -13,15 +140,13 @@ pub struct Metrics {
     pub batches: u64,
     /// Sum of batch sizes (== completed; kept for averaging convenience).
     pub batched_requests: u64,
-    /// Request latencies in microseconds (bounded reservoir).
-    latencies_us: Vec<u64>,
-    /// Engine compute time per batch, microseconds.
-    compute_us: Vec<u64>,
+    /// Request latency distribution (bounded log-spaced histogram).
+    latency: LatencyHistogram,
+    /// Engine compute time per batch: exact running sum (for the mean).
+    compute_us_sum: u64,
     /// Batch size histogram indexed by size (0 unused).
     pub batch_sizes: Vec<u64>,
 }
-
-const RESERVOIR: usize = 100_000;
 
 impl Metrics {
     pub fn new(engine: impl Into<String>) -> Self {
@@ -30,17 +155,15 @@ impl Metrics {
             completed: 0,
             batches: 0,
             batched_requests: 0,
-            latencies_us: Vec::new(),
-            compute_us: Vec::new(),
+            latency: LatencyHistogram::new(),
+            compute_us_sum: 0,
             batch_sizes: vec![0; 64],
         }
     }
 
     pub fn record_latency(&mut self, latency: Duration) {
         self.completed += 1;
-        if self.latencies_us.len() < RESERVOIR {
-            self.latencies_us.push(latency.as_micros() as u64);
-        }
+        self.latency.record(latency.as_micros() as u64);
     }
 
     pub fn record_batch(&mut self, size: usize, compute: Duration) {
@@ -49,38 +172,35 @@ impl Metrics {
         if size < self.batch_sizes.len() {
             self.batch_sizes[size] += 1;
         }
-        if self.compute_us.len() < RESERVOIR {
-            self.compute_us.push(compute.as_micros() as u64);
-        }
+        self.compute_us_sum = self.compute_us_sum.saturating_add(compute.as_micros() as u64);
     }
 
-    fn percentile(sorted: &[u64], p: f64) -> u64 {
-        if sorted.is_empty() {
-            return 0;
-        }
-        let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
-        sorted[idx]
+    /// The request-latency `p`-quantile in microseconds.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        self.latency.percentile_us(p)
+    }
+
+    /// Read-only view of the latency histogram (merging, export).
+    pub fn latency_histogram(&self) -> &LatencyHistogram {
+        &self.latency
     }
 
     /// (p50, p95, p99, mean) request latency in microseconds.
     pub fn latency_summary_us(&self) -> (u64, u64, u64, u64) {
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let mean = if v.is_empty() { 0 } else { v.iter().sum::<u64>() / v.len() as u64 };
         (
-            Self::percentile(&v, 0.50),
-            Self::percentile(&v, 0.95),
-            Self::percentile(&v, 0.99),
-            mean,
+            self.latency.percentile_us(0.50),
+            self.latency.percentile_us(0.95),
+            self.latency.percentile_us(0.99),
+            self.latency.mean_us(),
         )
     }
 
     /// Mean engine compute time per batch, microseconds.
     pub fn mean_compute_us(&self) -> u64 {
-        if self.compute_us.is_empty() {
+        if self.batches == 0 {
             0
         } else {
-            self.compute_us.iter().sum::<u64>() / self.compute_us.len() as u64
+            self.compute_us_sum / self.batches
         }
     }
 
@@ -93,11 +213,25 @@ impl Metrics {
         }
     }
 
+    /// Fold `other`'s counters into `self` (the label is kept): used by the
+    /// metrics endpoint to produce fleet-wide aggregates from per-model
+    /// metrics. Histograms merge exactly.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.completed += other.completed;
+        self.batches += other.batches;
+        self.batched_requests += other.batched_requests;
+        self.latency.merge(&other.latency);
+        self.compute_us_sum = self.compute_us_sum.saturating_add(other.compute_us_sum);
+        for (a, b) in self.batch_sizes.iter_mut().zip(&other.batch_sizes) {
+            *a += b;
+        }
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         let (p50, p95, p99, mean) = self.latency_summary_us();
         format!(
-            "[{}] {} reqs in {} batches (mean size {:.2}) | latency us p50={} p95={} p99={} mean={} | compute/batch={}us",
+            "[{}] {} reqs in {} batches (mean size {:.2}) | latency us p50={} p95={} p99={} p999={} mean={} | compute/batch={}us",
             self.engine,
             self.completed,
             self.batches,
@@ -105,9 +239,34 @@ impl Metrics {
             p50,
             p95,
             p99,
+            self.latency.percentile_us(0.999),
             mean,
             self.mean_compute_us(),
         )
+    }
+
+    /// Append this model's counters in Prometheus text exposition format,
+    /// labelled `{model="<label>"}`. The serving front end concatenates one
+    /// block per model plus a merged `{model="_all"}` aggregate, so the
+    /// numbers visible in-process are byte-for-byte the numbers on the
+    /// wire.
+    pub fn prometheus_into(&self, label: &str, out: &mut String) {
+        use std::fmt::Write;
+        let l = label;
+        let _ = writeln!(out, "iaoi_requests_completed_total{{model=\"{l}\"}} {}", self.completed);
+        let _ = writeln!(out, "iaoi_batches_total{{model=\"{l}\"}} {}", self.batches);
+        let _ = writeln!(out, "iaoi_mean_batch_size{{model=\"{l}\"}} {:.3}", self.mean_batch_size());
+        let _ = writeln!(out, "iaoi_compute_us_per_batch{{model=\"{l}\"}} {}", self.mean_compute_us());
+        for (q, label_q) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99"), (0.999, "0.999")] {
+            let _ = writeln!(
+                out,
+                "iaoi_latency_us{{model=\"{l}\",quantile=\"{label_q}\"}} {}",
+                self.latency.percentile_us(q)
+            );
+        }
+        let _ = writeln!(out, "iaoi_latency_us_max{{model=\"{l}\"}} {}", self.latency.max_us());
+        let _ = writeln!(out, "iaoi_latency_us_mean{{model=\"{l}\"}} {}", self.latency.mean_us());
+        let _ = writeln!(out, "iaoi_latency_us_count{{model=\"{l}\"}} {}", self.latency.count());
     }
 }
 
@@ -116,17 +275,93 @@ mod tests {
     use super::*;
 
     #[test]
+    fn bucket_index_and_bounds_are_consistent() {
+        // Every representative value must land in a bucket whose bounds
+        // contain it, and bucket bounds must tile the line with no gaps.
+        let mut prev_hi = 0u64;
+        for i in 0..BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(lo, prev_hi, "gap/overlap at bucket {i}");
+            assert!(hi > lo || hi == u64::MAX, "empty bucket {i}");
+            prev_hi = hi;
+        }
+        for v in [0u64, 1, 7, 8, 9, 15, 16, 100, 500, 1000, 123_456, u64::MAX / 2, u64::MAX] {
+            let i = bucket_index(v);
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && (v < hi || hi == u64::MAX), "{v} not in [{lo},{hi}) (bucket {i})");
+        }
+    }
+
+    #[test]
     fn latency_percentiles() {
         let mut m = Metrics::new("test");
         for us in [100u64, 200, 300, 400, 500, 600, 700, 800, 900, 1000] {
             m.record_latency(Duration::from_micros(us));
         }
         let (p50, p95, p99, mean) = m.latency_summary_us();
-        assert!((500..=600).contains(&p50), "{p50}");
-        assert!(p95 >= 900, "{p95}");
-        assert!(p99 >= 900, "{p99}");
-        assert_eq!(mean, 550);
+        // Log-bucket resolution: quantiles are bucket midpoints, within
+        // ~7% of the exact order statistic (500 for p50, 1000 for p95/p99).
+        assert!((460..=540).contains(&p50), "{p50}");
+        assert!(p95 >= 930, "{p95}");
+        assert!(p99 >= 930, "{p99}");
+        assert_eq!(mean, 550, "mean is tracked exactly, not from buckets");
         assert_eq!(m.completed, 10);
+        assert!(m.percentile_us(0.999) <= 1000, "clamped to observed max");
+    }
+
+    #[test]
+    fn histogram_never_truncates() {
+        // The old reservoir stopped sampling at 100k entries; the histogram
+        // must keep counting and keep quantiles fresh.
+        let mut h = LatencyHistogram::new();
+        for _ in 0..150_000 {
+            h.record(100);
+        }
+        // A late latency regime shift must be visible in the quantiles.
+        for _ in 0..450_000 {
+            h.record(10_000);
+        }
+        assert_eq!(h.count(), 600_000);
+        let p50 = h.percentile_us(0.5);
+        assert!(p50 >= 9_000, "late samples must dominate p50, got {p50}");
+        let rel = (p50 as f64 - 10_000.0).abs() / 10_000.0;
+        assert!(rel <= 0.07, "bucket resolution bound violated: p50={p50}");
+    }
+
+    #[test]
+    fn quantiles_are_within_bucket_resolution() {
+        let mut h = LatencyHistogram::new();
+        // 1..=10_000 us uniformly: exact quantile q is ~q*10_000.
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        for (p, exact) in [(0.5, 5_000f64), (0.99, 9_900.0), (0.999, 9_990.0)] {
+            let got = h.percentile_us(p) as f64;
+            let rel = (got - exact).abs() / exact;
+            assert!(rel <= 0.07, "p{p}: got {got}, exact {exact}, rel {rel}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_recording_the_combined_stream() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for v in [3u64, 17, 250, 999, 12_345] {
+            a.record(v);
+            all.record(v);
+        }
+        for v in [1u64, 80, 80, 4_000, 7] {
+            b.record(v);
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.mean_us(), all.mean_us());
+        assert_eq!(a.max_us(), all.max_us());
+        for p in [0.1, 0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(a.percentile_us(p), all.percentile_us(p), "p{p}");
+        }
     }
 
     #[test]
@@ -142,10 +377,49 @@ mod tests {
     }
 
     #[test]
+    fn metrics_merge_aggregates_models() {
+        let mut a = Metrics::new("alpha");
+        a.record_batch(2, Duration::from_micros(40));
+        a.record_latency(Duration::from_micros(100));
+        a.record_latency(Duration::from_micros(100));
+        let mut b = Metrics::new("beta");
+        b.record_batch(1, Duration::from_micros(20));
+        b.record_latency(Duration::from_micros(300));
+        a.merge(&b);
+        assert_eq!(a.completed, 3);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.batched_requests, 3);
+        assert_eq!(a.mean_compute_us(), 20);
+        assert_eq!(a.latency_histogram().count(), 3);
+        assert_eq!(a.engine, "alpha", "merge keeps the receiver's label");
+    }
+
+    #[test]
     fn empty_metrics_do_not_panic() {
         let m = Metrics::new("test");
         assert_eq!(m.latency_summary_us(), (0, 0, 0, 0));
         assert_eq!(m.mean_batch_size(), 0.0);
         assert!(!m.summary().is_empty());
+        let mut out = String::new();
+        m.prometheus_into("test", &mut out);
+        assert!(out.contains("iaoi_latency_us{model=\"test\",quantile=\"0.999\"} 0"));
+    }
+
+    #[test]
+    fn prometheus_export_carries_the_in_process_numbers() {
+        let mut m = Metrics::new("m");
+        for us in [100u64, 200, 400] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        m.record_batch(3, Duration::from_micros(90));
+        let mut out = String::new();
+        m.prometheus_into("m", &mut out);
+        assert!(out.contains("iaoi_requests_completed_total{model=\"m\"} 3"));
+        assert!(out.contains("iaoi_batches_total{model=\"m\"} 1"));
+        let p50_line = format!(
+            "iaoi_latency_us{{model=\"m\",quantile=\"0.5\"}} {}",
+            m.percentile_us(0.5)
+        );
+        assert!(out.contains(&p50_line), "{out}");
     }
 }

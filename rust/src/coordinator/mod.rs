@@ -154,6 +154,17 @@ pub struct BatchPolicy {
     /// small layers stay serial. 1 (the default) keeps the fully serial,
     /// zero-alloc per-worker path. CLI: `iaoi serve --intra-threads N`.
     pub intra_threads: usize,
+    /// Admission control (used by the socket front end, [`crate::serve`]):
+    /// maximum requests in flight across **all** models before new arrivals
+    /// are shed with a retry-after rejection instead of queueing. 0 (the
+    /// default) means unbounded — in-process callers that already bound
+    /// their own concurrency keep the old behavior. CLI:
+    /// `iaoi serve --addr … --queue-depth N`.
+    pub global_inflight_cap: usize,
+    /// Per-model in-flight cap: one hot model saturating its cap cannot
+    /// starve admission for the others. 0 (the default) = unbounded.
+    /// CLI: `iaoi serve --addr … --model-inflight-cap N`.
+    pub model_inflight_cap: usize,
 }
 
 impl Default for BatchPolicy {
@@ -163,6 +174,8 @@ impl Default for BatchPolicy {
             max_delay: Duration::from_millis(2),
             positions_hint: 1,
             intra_threads: 1,
+            global_inflight_cap: 0,
+            model_inflight_cap: 0,
         }
     }
 }
@@ -635,6 +648,14 @@ impl MultiCoordinator {
         let mut out: Vec<Metrics> = guard.values().cloned().collect();
         out.sort_by(|a, b| a.engine.cmp(&b.engine));
         out
+    }
+
+    /// The live per-model metrics map, shared with the workers. The socket
+    /// front end ([`crate::serve`]) holds this so its `/metrics` endpoint
+    /// can export the same counters the workers are updating, without
+    /// keeping a reference to the whole coordinator.
+    pub fn metrics_handle(&self) -> Arc<Mutex<HashMap<String, Metrics>>> {
+        Arc::clone(&self.metrics)
     }
 
     /// Drain and stop; every already-submitted request completes first.

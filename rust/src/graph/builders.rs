@@ -262,6 +262,30 @@ pub fn papernet_heterogeneous_dw(num_classes: usize, seed: u64) -> FloatGraph {
     g
 }
 
+/// PaperNet whose classifier head has per-unit-heterogeneous weight
+/// magnitudes: each FC output row is scaled by a different power of 4
+/// (256x spread) — the wide-classifier-head shape per-channel FC
+/// quantization targets, where one per-tensor scale must cover every
+/// unit and the quiet rows lose their resolution. Used by the
+/// `quant-modes` accuracy harness.
+pub fn papernet_wide_head(num_classes: usize, seed: u64) -> FloatGraph {
+    let mut g = papernet_random(num_classes, FusedActivation::Relu6, seed);
+    for node in &mut g.nodes {
+        if let FloatOp::Fc(f) = &mut node.op {
+            let rows = f.weights.dim(0);
+            let cols = f.weights.dim(1);
+            let wd = f.weights.data_mut();
+            for r in 0..rows {
+                let factor = 0.02 * 4f32.powi((r % 5) as i32);
+                for w in &mut wd[r * cols..(r + 1) * cols] {
+                    *w *= factor;
+                }
+            }
+        }
+    }
+    g
+}
+
 /// PaperNet from *folded* trained parameters exported by the L2 side
 /// (`aot.py` exports `<layer>/w` and `<layer>/b` with BN already folded per
 /// eq. 14, which is exactly what inference needs — fig. C.6).

@@ -25,7 +25,8 @@ use crate::quantize::{convert, quantize_graph, Calibration, QuantMode, QuantizeO
 use crate::tensor::Tensor;
 use crate::train::{Knobs, Trainer};
 use anyhow::{anyhow, Context, Result};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -418,6 +419,7 @@ pub fn serve(
             max_delay: Duration::from_millis(2),
             positions_hint: hint,
             intra_threads,
+            ..Default::default()
         };
         let coord = Coordinator::start(engine, policy, workers);
         let client = coord.client();
@@ -614,6 +616,123 @@ pub fn serve_registry(
         println!("{}", m.summary());
     }
     println!("  {requests} requests across {} models in {wall:.2}s ({:.1} req/s)", names.len(), requests as f64 / wall);
+    Ok(())
+}
+
+/// Set by the SIGINT/SIGTERM handler; [`serve_socket`]'s main loop polls it.
+static STOP_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+/// Route SIGINT and SIGTERM to a flag instead of process death, so
+/// [`serve_socket`] can drain in-flight requests before exiting. Only the
+/// flag store happens in signal context (async-signal-safe); everything
+/// else runs on the main thread.
+#[cfg(unix)]
+fn install_stop_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    extern "C" fn on_stop(_sig: i32) {
+        STOP_REQUESTED.store(true, Ordering::SeqCst);
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_stop as usize);
+        signal(SIGTERM, on_stop as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_stop_handlers() {
+    // No signal routing off unix: the process serves until killed.
+}
+
+/// `iaoi serve --addr HOST:PORT`: run the socket front end
+/// ([`crate::serve::Server`]) until SIGINT/SIGTERM, then drain gracefully.
+/// Without `--models`, two in-memory demo models (`alpha`, 16 classes, and
+/// `beta`, 8 classes) are installed so the endpoint is probe-able on a
+/// fresh checkout. `queue_depth` is the global in-flight cap and
+/// `model_inflight_cap` the per-model one (0 = unbounded; past a cap,
+/// requests are shed with 503 + `Retry-After`). `port_file`, when set,
+/// receives the actually-bound `HOST:PORT` once the listener is up — how
+/// scripts and CI discover an ephemeral `--addr host:0` port.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_socket(
+    addr: &str,
+    models_dir: Option<&Path>,
+    max_batch: usize,
+    workers: usize,
+    intra_threads: usize,
+    queue_depth: usize,
+    model_inflight_cap: usize,
+    port_file: Option<&Path>,
+    load: LoadMode,
+) -> Result<()> {
+    let registry = match models_dir {
+        Some(dir) => ModelRegistry::load_dir_with(dir, load)?,
+        None => {
+            let registry = ModelRegistry::new();
+            for (name, classes, seed) in [("alpha", 16usize, 3u64), ("beta", 8, 11)] {
+                registry.install(
+                    demo_artifact(name, 1, classes, seed),
+                    PathBuf::from(format!("<demo:{name}>")),
+                );
+            }
+            registry
+        }
+    };
+    let policy = BatchPolicy {
+        max_batch,
+        max_delay: Duration::from_millis(2),
+        intra_threads,
+        global_inflight_cap: queue_depth,
+        model_inflight_cap,
+        ..Default::default()
+    };
+    let cfg = crate::serve::ServeConfig { addr: addr.to_string(), ..Default::default() };
+    let server = crate::serve::Server::start(registry, policy, workers, cfg)?;
+    let bound = server.local_addr();
+    if let Some(pf) = port_file {
+        // Write-then-rename so a polling reader never sees a half-written
+        // address.
+        let tmp = pf.with_extension("tmp");
+        std::fs::write(&tmp, format!("{bound}\n")).with_context(|| format!("write {tmp:?}"))?;
+        std::fs::rename(&tmp, pf).with_context(|| format!("rename to {pf:?}"))?;
+    }
+    let cap = |n: usize| if n == 0 { "unbounded".to_string() } else { n.to_string() };
+    let registry = server.registry();
+    for name in registry.names() {
+        let entry = registry.resolve(&name)?;
+        println!(
+            "  {name} v{} (input {:?}, {} nodes)",
+            entry.version,
+            entry.input_shape,
+            entry.graph.nodes.len()
+        );
+    }
+    println!(
+        "serving on http://{bound} — {} model(s), {workers} worker(s), caps: global {}, per-model {}\n\
+         endpoints: POST /infer/<model> (raw LE f32 body), GET /healthz, GET /metrics\n\
+         Ctrl-C (or SIGTERM) drains in-flight requests and exits",
+        registry.len(),
+        cap(queue_depth),
+        cap(model_inflight_cap),
+    );
+    install_stop_handlers();
+    while !STOP_REQUESTED.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    println!("signal received: draining in-flight requests");
+    let report = server.shutdown();
+    for m in &report.metrics {
+        println!("{}", m.summary());
+    }
+    println!(
+        "drained {} — admitted {}, shed {}",
+        if report.drained_clean { "clean" } else { "TIMED OUT" },
+        report.admitted,
+        report.shed
+    );
     Ok(())
 }
 

@@ -290,23 +290,35 @@ pub struct QuantModeReport {
     /// Mean |logit difference| vs the float engine.
     pub per_tensor_logit_err: f64,
     pub per_channel_logit_err: f64,
+    /// Same measures on the wide-classifier-head model
+    /// ([`crate::graph::builders::papernet_wide_head`]) — the workload
+    /// per-channel **FC** quantization targets: FC output units with a
+    /// 256x magnitude spread, where one per-tensor scale wipes the quiet
+    /// units' resolution.
+    pub wide_head_per_tensor_fidelity: f32,
+    pub wide_head_per_channel_fidelity: f32,
+    pub wide_head_per_tensor_logit_err: f64,
+    pub wide_head_per_channel_logit_err: f64,
 }
 
-/// Compute the quant-mode comparison (shared by the table printer and the
-/// acceptance test in `rust/tests/integration.rs`).
-pub fn quant_mode_report(fast: bool) -> QuantModeReport {
-    use crate::graph::builders;
+/// Per-tensor vs per-channel PTQ of one float graph: returns
+/// `(pt_fidelity, pc_fidelity, pt_logit_err, pc_logit_err)` against the
+/// folded float engine.
+fn compare_quant_modes(
+    g: &crate::graph::FloatGraph,
+    seed: u64,
+    fast: bool,
+) -> (f32, f32, f64, f64) {
     use crate::quantize::{quantize_graph, QuantMode, QuantizeOptions};
     use crate::tensor::Tensor;
 
-    let g = builders::papernet_heterogeneous_dw(16, 5);
-    let ds = ClassificationSet::new(16, 16, 5);
+    let ds = ClassificationSet::new(16, 16, seed);
     let batch = 16usize;
     let calib: Vec<Tensor<f32>> =
         (0..3).map(|b| ds.batch(0, (b * batch) as u64, batch).0).collect();
-    let (folded, q_pt) = quantize_graph(&g, &calib, QuantizeOptions::default());
+    let (folded, q_pt) = quantize_graph(g, &calib, QuantizeOptions::default());
     let (_, q_pc) = quantize_graph(
-        &g,
+        g,
         &calib,
         QuantizeOptions { mode: QuantMode::PerChannel, ..Default::default() },
     );
@@ -338,11 +350,34 @@ pub fn quant_mode_report(fast: bool) -> QuantModeReport {
             elems += 1;
         }
     }
+    (
+        agree_pt as f32 / total as f32,
+        agree_pc as f32 / total as f32,
+        err_pt / elems as f64,
+        err_pc / elems as f64,
+    )
+}
+
+/// Compute the quant-mode comparison (shared by the table printer and the
+/// acceptance test in `rust/tests/integration.rs`): the heterogeneous
+/// depthwise model (per-channel conv/dw story) and the wide-classifier-head
+/// model (per-channel FC story).
+pub fn quant_mode_report(fast: bool) -> QuantModeReport {
+    use crate::graph::builders;
+
+    let (pt_f, pc_f, pt_e, pc_e) =
+        compare_quant_modes(&builders::papernet_heterogeneous_dw(16, 5), 5, fast);
+    let (wh_pt_f, wh_pc_f, wh_pt_e, wh_pc_e) =
+        compare_quant_modes(&builders::papernet_wide_head(16, 7), 7, fast);
     QuantModeReport {
-        per_tensor_fidelity: agree_pt as f32 / total as f32,
-        per_channel_fidelity: agree_pc as f32 / total as f32,
-        per_tensor_logit_err: err_pt / elems as f64,
-        per_channel_logit_err: err_pc / elems as f64,
+        per_tensor_fidelity: pt_f,
+        per_channel_fidelity: pc_f,
+        per_tensor_logit_err: pt_e,
+        per_channel_logit_err: pc_e,
+        wide_head_per_tensor_fidelity: wh_pt_f,
+        wide_head_per_channel_fidelity: wh_pc_f,
+        wide_head_per_tensor_logit_err: wh_pt_e,
+        wide_head_per_channel_logit_err: wh_pc_e,
     }
 }
 
@@ -351,22 +386,35 @@ pub fn quant_mode_report(fast: bool) -> QuantModeReport {
 /// needs no training run, so it works without the AOT artifacts.
 pub fn table_quant_modes(fast: bool) -> Result<()> {
     let r = quant_mode_report(fast);
-    println!("# Quant modes — per-tensor vs per-channel on the synth depthwise model");
-    println!("| weight quantization | float-argmax fidelity | mean logit err |");
-    println!("|---|---|---|");
+    println!("# Quant modes — per-tensor vs per-channel PTQ on synthetic stress models");
+    println!("| model | weight quantization | float-argmax fidelity | mean logit err |");
+    println!("|---|---|---|---|");
     println!(
-        "| per-tensor (paper §2.1) | {:.1}% | {:.4} |",
+        "| heterogeneous depthwise | per-tensor (paper §2.1) | {:.1}% | {:.4} |",
         r.per_tensor_fidelity * 100.0,
         r.per_tensor_logit_err
     );
     println!(
-        "| per-channel (1806.08342) | {:.1}% | {:.4} |",
+        "| heterogeneous depthwise | per-channel (1806.08342) | {:.1}% | {:.4} |",
         r.per_channel_fidelity * 100.0,
         r.per_channel_logit_err
     );
     println!(
-        "\nper-channel improves mean logit error by {:.1}% on heterogeneous depthwise channels",
-        (1.0 - r.per_channel_logit_err / r.per_tensor_logit_err.max(1e-12)) * 100.0
+        "| wide classifier head | per-tensor (paper §2.1) | {:.1}% | {:.4} |",
+        r.wide_head_per_tensor_fidelity * 100.0,
+        r.wide_head_per_tensor_logit_err
+    );
+    println!(
+        "| wide classifier head | per-channel FC (1806.08342) | {:.1}% | {:.4} |",
+        r.wide_head_per_channel_fidelity * 100.0,
+        r.wide_head_per_channel_logit_err
+    );
+    println!(
+        "\nper-channel improves mean logit error by {:.1}% on heterogeneous depthwise channels \
+         and {:.1}% on the wide classifier head",
+        (1.0 - r.per_channel_logit_err / r.per_tensor_logit_err.max(1e-12)) * 100.0,
+        (1.0 - r.wide_head_per_channel_logit_err / r.wide_head_per_tensor_logit_err.max(1e-12))
+            * 100.0
     );
     Ok(())
 }

@@ -33,6 +33,10 @@
 //! * `iaoi serve --models DIR` — serve every artifact in a directory
 //!   through the multi-model coordinator, with per-request routing and
 //!   atomic hot-swap ([`coordinator::registry::ModelRegistry::swap`]);
+//! * `iaoi serve --addr HOST:PORT` — the network front end ([`serve`]):
+//!   a std-only HTTP/1.1 listener with bounded admission (load-shedding
+//!   past the in-flight caps), graceful drain, and a Prometheus-style
+//!   metrics endpoint;
 //! * `iaoi serve --model FILE` — the original single-model path;
 //! * `iaoi train` / `eval` / `quickstart` / `bench` — paper harnesses.
 
@@ -47,6 +51,7 @@ pub mod model_format;
 pub mod runtime;
 pub mod train;
 pub mod coordinator;
+pub mod serve;
 pub mod sim;
 pub mod data;
 pub mod io;

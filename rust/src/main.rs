@@ -13,6 +13,10 @@
 //! iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B]
 //!                 [--workers W] [--intra-threads T]
 //!                 [--load copy|zerocopy|mmap]
+//! iaoi serve      --addr HOST:PORT [--models DIR] [--queue-depth N]
+//!                 [--model-inflight-cap N] [--port-file FILE]
+//!                 [--max-batch B] [--workers W] [--intra-threads T]
+//!                 [--load copy|zerocopy|mmap]
 //! iaoi quickstart [--artifacts DIR]
 //! iaoi bench      --table 4.1|...|4.8|quant-modes|pool | --fig 1.1c|4.1|4.2|4.3 [--fast]
 //! ```
@@ -89,6 +93,7 @@ fn print_usage() {
          iaoi eval       --model FILE [--artifacts DIR] [--batches N]\n  \
          iaoi export     --out FILE [--name N] [--model-version V] [--classes C] [--seed S] [--model FILE --artifacts DIR] [--quant-mode per-tensor|per-channel] [--load copy|zerocopy|mmap]\n  \
          iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B] [--workers W] [--intra-threads T] [--load copy|zerocopy|mmap]\n  \
+         iaoi serve      --addr HOST:PORT [--models DIR] [--queue-depth N] [--model-inflight-cap N] [--port-file FILE] [--max-batch B] [--workers W] [--intra-threads T] [--load copy|zerocopy|mmap]\n  \
          iaoi quickstart [--artifacts DIR]\n  \
          iaoi bench      --table <id> | --fig <id> [--fast]  (tables 4.1-4.8, quant-modes, pool)\n"
     );
@@ -146,12 +151,36 @@ fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
 /// zero-alloc path. `--load` picks the registry's artifact weight-storage
 /// mode (`--models` path only — the single-model path reads a trained
 /// checkpoint, not an `.iaoiq` artifact).
+///
+/// `--addr HOST:PORT` switches to the socket front end: serve over HTTP
+/// until SIGINT/SIGTERM, with bounded admission (`--queue-depth` = global
+/// in-flight cap, `--model-inflight-cap` = per-model; 0 = unbounded) and
+/// graceful drain. `--port-file FILE` records the bound address (for
+/// `--addr host:0` ephemeral ports). Without `--models`, two in-memory
+/// demo models are served.
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let requests: usize = get(flags, "requests", "256").parse()?;
     let max_batch: usize = get(flags, "max-batch", "8").parse()?;
     let workers: usize = get(flags, "workers", "1").parse()?;
     let intra_threads: usize = get(flags, "intra-threads", "1").parse()?;
     anyhow::ensure!(intra_threads >= 1, "--intra-threads must be >= 1");
+    if let Some(addr) = flags.get("addr") {
+        let queue_depth: usize = get(flags, "queue-depth", "64").parse()?;
+        let model_cap: usize = get(flags, "model-inflight-cap", "0").parse()?;
+        let models = flags.get("models").map(PathBuf::from);
+        let port_file = flags.get("port-file").map(PathBuf::from);
+        return harness::serve_socket(
+            addr,
+            models.as_deref(),
+            max_batch,
+            workers,
+            intra_threads,
+            queue_depth,
+            model_cap,
+            port_file.as_deref(),
+            load_mode(flags)?,
+        );
+    }
     if let Some(models_dir) = flags.get("models") {
         return harness::serve_registry(
             &PathBuf::from(models_dir),

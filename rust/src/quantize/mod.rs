@@ -55,9 +55,10 @@ pub fn calibrate<'a>(
     Calibration { input, ranges }
 }
 
-/// Weight-quantization granularity the converter applies to conv and
-/// depthwise layers (FC output units rarely benefit and stay per-tensor;
-/// the engine itself supports per-channel FC too).
+/// Weight-quantization granularity the converter applies to conv,
+/// depthwise and fully-connected layers (FC quantizes per output unit —
+/// a row of its `[out, in]` weight matrix — which matters on wide
+/// classifier heads with heterogeneous per-unit weight magnitudes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum QuantMode {
     /// One `(S, Z)` pair per weight array — the paper's scheme.
@@ -280,8 +281,10 @@ pub fn convert(folded: &FloatGraph, calibration: &Calibration, opts: QuantizeOpt
             }
             FloatOp::Fc(f) => {
                 let act = combine_act(f.activation, absorbed_act[i]);
-                // FC stays per-tensor in both modes (the converter's policy;
-                // the engine accepts per-channel FC if built directly).
+                // Per-channel FC quantizes per output unit (row of the
+                // `[out, in]` weight matrix) — the win shows on wide
+                // classifier heads whose units carry very different weight
+                // magnitudes (see `bench --table quant-modes`).
                 let (weights, weight_quant, bias) = quantize_weights(
                     &f.weights,
                     &f.bias,
@@ -289,7 +292,7 @@ pub fn convert(folded: &FloatGraph, calibration: &Calibration, opts: QuantizeOpt
                     ChannelAxis::Outer,
                     &in_params,
                     opts.weight_bits,
-                    QuantMode::PerTensor,
+                    opts.mode,
                 );
                 QOp::Fc(QFullyConnected {
                     weights,
@@ -455,12 +458,12 @@ mod tests {
         let batches = calib_batches(&mut rng, &[2, 16, 16, 3], 4);
         let opts = QuantizeOptions { mode: QuantMode::PerChannel, ..Default::default() };
         let (folded, q) = quantize_graph(&g, &batches, opts);
-        // Conv/depthwise weights are per-channel, the FC stays per-tensor.
+        // Conv/depthwise quantize per channel; FC per output unit.
         for node in &q.nodes {
             match &node.op {
                 QOp::Conv(c) => assert!(c.weight_quant.is_per_channel(), "{}", node.name),
                 QOp::Depthwise(d) => assert!(d.weight_quant.is_per_channel(), "{}", node.name),
-                QOp::Fc(f) => assert!(!f.weight_quant.is_per_channel(), "{}", node.name),
+                QOp::Fc(f) => assert!(f.weight_quant.is_per_channel(), "{}", node.name),
                 _ => {}
             }
         }

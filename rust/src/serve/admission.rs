@@ -1,0 +1,240 @@
+//! Bounded admission for the socket front end.
+//!
+//! The coordinator's mpsc queue is unbounded: in-process callers are
+//! closed-loop, so their concurrency self-limits. An open network is not —
+//! under overload an unbounded queue just converts excess offered load into
+//! unbounded memory and unbounded tail latency. This module adds the
+//! missing backpressure: a request must [`Admission::try_acquire`] a
+//! [`Permit`] before it may enter the coordinator queue; when the global or
+//! per-model in-flight cap is hit the request is *shed* immediately with a
+//! retry-after payload (HTTP 503) instead of being buffered.
+//!
+//! The accounting is two `fetch_add`/`fetch_sub` pairs per request — no
+//! lock on the hot path (the per-model counter map takes a lock only the
+//! first time a model is seen). Permits release on `Drop`, so every exit
+//! path (reply written, connection reset, handler panic) returns capacity.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// In-flight caps. 0 = unbounded (that dimension never sheds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmissionConfig {
+    /// Max requests in flight across all models.
+    pub global_cap: usize,
+    /// Max requests in flight per model.
+    pub model_cap: usize,
+}
+
+/// In-flight + lifetime counters for one scope (global, or one model).
+#[derive(Debug, Default)]
+pub struct Counters {
+    inflight: AtomicUsize,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl Counters {
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::SeqCst)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::SeqCst)
+    }
+}
+
+/// Why a request was refused admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shed {
+    /// The global in-flight cap is saturated.
+    Global { cap: usize },
+    /// This model's in-flight cap is saturated.
+    Model { cap: usize },
+}
+
+/// Shared admission state. Cheap to clone via `Arc`.
+#[derive(Debug)]
+pub struct Admission {
+    cfg: AdmissionConfig,
+    global: Counters,
+    per_model: Mutex<HashMap<String, Arc<Counters>>>,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        Self { cfg, global: Counters::default(), per_model: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn config(&self) -> AdmissionConfig {
+        self.cfg
+    }
+
+    fn model_counters(&self, model: &str) -> Arc<Counters> {
+        let mut map = self.per_model.lock().expect("admission map poisoned");
+        Arc::clone(map.entry(model.to_string()).or_default())
+    }
+
+    /// Try to admit one request for `model`. On success the returned
+    /// [`Permit`] holds one slot in both the global and the model counter
+    /// until dropped; on refusal both shed counters are bumped and nothing
+    /// is held.
+    ///
+    /// Optimistic acquire: increment first, then check-and-undo. Two racing
+    /// arrivals at the last slot can therefore both observe `> cap` and
+    /// both shed — admission may momentarily under-fill, but the cap is
+    /// never exceeded, which is the invariant overload protection needs.
+    pub fn try_acquire(self: &Arc<Self>, model: &str) -> Result<Permit, Shed> {
+        let m = self.model_counters(model);
+        let g_now = self.global.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.cfg.global_cap > 0 && g_now > self.cfg.global_cap {
+            self.global.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.global.shed.fetch_add(1, Ordering::SeqCst);
+            m.shed.fetch_add(1, Ordering::SeqCst);
+            return Err(Shed::Global { cap: self.cfg.global_cap });
+        }
+        let m_now = m.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.cfg.model_cap > 0 && m_now > self.cfg.model_cap {
+            m.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.global.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.global.shed.fetch_add(1, Ordering::SeqCst);
+            m.shed.fetch_add(1, Ordering::SeqCst);
+            return Err(Shed::Model { cap: self.cfg.model_cap });
+        }
+        self.global.admitted.fetch_add(1, Ordering::SeqCst);
+        m.admitted.fetch_add(1, Ordering::SeqCst);
+        Ok(Permit { admission: Arc::clone(self), model: m })
+    }
+
+    /// Fleet-wide counters.
+    pub fn global(&self) -> &Counters {
+        &self.global
+    }
+
+    /// Requests currently holding permits, across all models.
+    pub fn global_inflight(&self) -> usize {
+        self.global.inflight()
+    }
+
+    /// Requests currently holding permits for `model` (0 if never seen).
+    pub fn model_inflight(&self, model: &str) -> usize {
+        let map = self.per_model.lock().expect("admission map poisoned");
+        map.get(model).map(|c| c.inflight()).unwrap_or(0)
+    }
+
+    /// `(model, inflight, admitted, shed)` rows, sorted by model name.
+    pub fn per_model_stats(&self) -> Vec<(String, usize, u64, u64)> {
+        let map = self.per_model.lock().expect("admission map poisoned");
+        let mut rows: Vec<_> = map
+            .iter()
+            .map(|(k, c)| (k.clone(), c.inflight(), c.admitted(), c.shed()))
+            .collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows
+    }
+}
+
+/// One admitted request's capacity slot. Dropping it releases the slot.
+#[derive(Debug)]
+pub struct Permit {
+    admission: Arc<Admission>,
+    model: Arc<Counters>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.model.inflight.fetch_sub(1, Ordering::SeqCst);
+        self.admission.global.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_by_default() {
+        let a = Arc::new(Admission::new(AdmissionConfig::default()));
+        let permits: Vec<_> =
+            (0..100).map(|_| a.try_acquire("m").expect("unbounded")).collect();
+        assert_eq!(a.global_inflight(), 100);
+        drop(permits);
+        assert_eq!(a.global_inflight(), 0);
+        assert_eq!(a.global().shed(), 0);
+    }
+
+    #[test]
+    fn global_cap_sheds_and_recovers() {
+        let a = Arc::new(Admission::new(AdmissionConfig { global_cap: 2, model_cap: 0 }));
+        let p1 = a.try_acquire("m").unwrap();
+        let p2 = a.try_acquire("m").unwrap();
+        assert!(matches!(a.try_acquire("m"), Err(Shed::Global { cap: 2 })));
+        assert_eq!(a.global().shed(), 1);
+        assert_eq!(a.global_inflight(), 2, "failed acquire must not leak a slot");
+        drop(p1);
+        let p3 = a.try_acquire("m").expect("slot freed on drop");
+        drop(p2);
+        drop(p3);
+        assert_eq!(a.global_inflight(), 0);
+        assert_eq!(a.global().admitted(), 3);
+    }
+
+    #[test]
+    fn model_cap_isolates_models() {
+        let a = Arc::new(Admission::new(AdmissionConfig { global_cap: 0, model_cap: 1 }));
+        let _pa = a.try_acquire("alpha").unwrap();
+        assert!(matches!(a.try_acquire("alpha"), Err(Shed::Model { cap: 1 })));
+        // A saturated model must not starve another model's admission.
+        let _pb = a.try_acquire("beta").expect("beta unaffected");
+        assert_eq!(a.model_inflight("alpha"), 1);
+        assert_eq!(a.model_inflight("beta"), 1);
+        assert_eq!(a.global_inflight(), 2);
+        let rows = a.per_model_stats();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "alpha");
+        assert_eq!(rows[0].3, 1, "alpha's shed count");
+    }
+
+    #[test]
+    fn model_shed_does_not_leak_global_slot() {
+        let a = Arc::new(Admission::new(AdmissionConfig { global_cap: 10, model_cap: 1 }));
+        let _p = a.try_acquire("m").unwrap();
+        for _ in 0..5 {
+            assert!(a.try_acquire("m").is_err());
+        }
+        assert_eq!(a.global_inflight(), 1);
+        assert_eq!(a.global().shed(), 5);
+    }
+
+    #[test]
+    fn concurrent_acquire_never_exceeds_cap() {
+        let cap = 8;
+        let a = Arc::new(Admission::new(AdmissionConfig { global_cap: cap, model_cap: 0 }));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..16)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                let peak = Arc::clone(&peak);
+                std::thread::spawn(move || {
+                    for _ in 0..200 {
+                        if let Ok(_p) = a.try_acquire("m") {
+                            let now = a.global_inflight();
+                            peak.fetch_max(now, Ordering::SeqCst);
+                            std::thread::yield_now();
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= cap, "cap exceeded: {peak:?}");
+        assert_eq!(a.global_inflight(), 0, "all permits released");
+    }
+}

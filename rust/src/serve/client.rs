@@ -1,0 +1,158 @@
+//! Minimal blocking HTTP/1.1 client for the serving front end.
+//!
+//! Std-only counterpart to [`super::protocol`]: just enough HTTP to drive
+//! `iaoi serve --addr` from the integration tests, the loadgen bench
+//! (`benches/serving.rs`) and the CI smoke probe — one code path for all
+//! three, so a protocol change cannot silently desynchronize them. Not a
+//! general client: no chunked encoding, no redirects, no TLS.
+
+use super::protocol::{encode_f32_body, find_head_end};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// A parsed HTTP response.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    /// Lower-cased header names with trimmed values.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    /// First value of `name` (case-insensitive), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Body decoded as UTF-8 (lossy; for JSON/text endpoints).
+    pub fn body_text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+
+    /// Body decoded as raw little-endian `f32`s (for infer responses).
+    pub fn body_f32(&self) -> Result<Vec<f32>> {
+        if self.body.len() % 4 != 0 {
+            bail!("response body length {} is not a multiple of 4", self.body.len());
+        }
+        Ok(self
+            .body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// One keep-alive connection to the server.
+pub struct HttpClient {
+    stream: TcpStream,
+    /// Bytes read past the previous response (keep-alive pipelining).
+    leftover: Vec<u8>,
+}
+
+impl HttpClient {
+    /// Connect with a sane default timeout for tests/benches.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let addr = addr
+            .to_socket_addrs()
+            .context("resolving server address")?
+            .next()
+            .ok_or_else(|| anyhow!("server address resolved to nothing"))?;
+        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5))
+            .with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .context("setting read timeout")?;
+        Ok(Self { stream, leftover: Vec::new() })
+    }
+
+    /// Send raw bytes as-is (malformed-input tests).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.stream.write_all(bytes).context("writing raw request")?;
+        self.stream.flush().ok();
+        Ok(())
+    }
+
+    /// Issue one request and read the full response.
+    pub fn request(&mut self, method: &str, target: &str, body: &[u8]) -> Result<HttpResponse> {
+        let mut req = format!("{method} {target} HTTP/1.1\r\nHost: iaoi\r\n");
+        if method == "POST" || !body.is_empty() {
+            req.push_str(&format!("Content-Length: {}\r\n", body.len()));
+        }
+        req.push_str("\r\n");
+        self.stream.write_all(req.as_bytes()).context("writing request head")?;
+        self.stream.write_all(body).context("writing request body")?;
+        self.stream.flush().ok();
+        self.read_response()
+    }
+
+    pub fn get(&mut self, target: &str) -> Result<HttpResponse> {
+        self.request("GET", target, &[])
+    }
+
+    /// `POST /infer/<model>` with an f32 tensor body.
+    pub fn infer(&mut self, model: &str, values: &[f32]) -> Result<HttpResponse> {
+        let body = encode_f32_body(values);
+        self.request("POST", &format!("/infer/{model}"), &body)
+    }
+
+    /// Read one full response (head + Content-Length body) off the stream.
+    pub fn read_response(&mut self) -> Result<HttpResponse> {
+        let mut buf = std::mem::take(&mut self.leftover);
+        let mut chunk = [0u8; 4096];
+        let head_end = loop {
+            if let Some(end) = find_head_end(&buf) {
+                break end;
+            }
+            if buf.len() > 64 * 1024 {
+                bail!("response head too large");
+            }
+            let n = self.stream.read(&mut chunk).context("reading response")?;
+            if n == 0 {
+                bail!("connection closed mid-response ({} bytes in)", buf.len());
+            }
+            buf.extend_from_slice(&chunk[..n]);
+        };
+
+        let head = std::str::from_utf8(&buf[..head_end]).context("non-UTF-8 response head")?;
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split_ascii_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("malformed status line {status_line:?}"))?;
+        let mut headers = Vec::new();
+        let mut content_length = 0usize;
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let Some((name, value)) = line.split_once(':') else { continue };
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                content_length = value.parse().context("parsing Content-Length")?;
+            }
+            headers.push((name, value));
+        }
+
+        let mut body = buf[head_end..].to_vec();
+        while body.len() < content_length {
+            let n = self.stream.read(&mut chunk).context("reading response body")?;
+            if n == 0 {
+                bail!("connection closed mid-body ({}/{content_length})", body.len());
+            }
+            body.extend_from_slice(&chunk[..n]);
+        }
+        // Anything past the declared body belongs to the next response.
+        self.leftover = body.split_off(content_length);
+        Ok(HttpResponse { status, headers, body })
+    }
+}

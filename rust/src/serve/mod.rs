@@ -1,0 +1,553 @@
+//! Socket serving front end: the network layer over the multi-model
+//! coordinator.
+//!
+//! ```text
+//! TCP clients ──▶ acceptor ──▶ per-connection threads
+//!                                │  parse (protocol) → admission permit
+//!                                ▼
+//!                        RoutedClient.infer ──▶ MultiCoordinator batching
+//!                                │                (batches never mix models)
+//!                                └──▶ response; permit released
+//! ```
+//!
+//! Std-only (`std::net::TcpListener`, `std::thread`) — this offline build
+//! has no tokio/hyper, and thread-per-connection is the honest shape for a
+//! CPU-bound engine anyway: concurrency is bounded by admission control,
+//! not by the connection count.
+//!
+//! Production rails, all testable deterministically:
+//!
+//! * **Bounded admission** ([`admission`]) — a request must hold a
+//!   [`admission::Permit`] before entering the coordinator queue. Past the
+//!   global or per-model in-flight cap ([`BatchPolicy::global_inflight_cap`]
+//!   / [`BatchPolicy::model_inflight_cap`]) arrivals are shed immediately
+//!   with HTTP 503 + `Retry-After` instead of buffering unboundedly:
+//!   overload converts to fast rejections, not to memory growth and tail
+//!   latency.
+//! * **Graceful drain** — [`Server::shutdown`] stops accepting, lets every
+//!   admitted request finish (bounded by
+//!   [`ServeConfig::drain_timeout`]), then stops the coordinator; new
+//!   arrivals during the drain get a clean `"draining"` rejection.
+//!   [`Server::swap_model`] does the same per model around a registry
+//!   hot-swap.
+//! * **Observable tails** — `GET /metrics` exports the coordinator's
+//!   log-spaced latency histograms (p50/p99/p999 per model and merged) and
+//!   the admission counters in Prometheus text format; the numbers on the
+//!   wire are the same [`Metrics`] the workers update in-process.
+//!
+//! Protocol details (endpoints, error mapping, wire format) live in
+//! [`protocol`]; a std-only client for tests/benches/probes in [`client`].
+
+pub mod admission;
+pub mod client;
+pub mod protocol;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::{BatchPolicy, MultiCoordinator, RoutedClient};
+use crate::tensor::Tensor;
+use admission::{Admission, AdmissionConfig, Shed};
+use anyhow::{ensure, Context, Result};
+use protocol::{
+    bad_request, decode_f32_body, draining, encode_f32_body, find_head_end, json_string,
+    method_not_allowed, not_found, overloaded, parse_head, payload_too_large, ProtoError,
+    RequestHead, Response, MAX_HEAD_BYTES,
+};
+use std::collections::{HashMap, HashSet};
+use std::io::{ErrorKind, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Front-end configuration (the coordinator side is [`BatchPolicy`]).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`Server::local_addr`]).
+    pub addr: String,
+    /// Retry hint attached to shed rejections.
+    pub retry_after_ms: u64,
+    /// Request-body cap (pre-admission; an oversized `Content-Length` is
+    /// rejected before any body byte is read).
+    pub max_body_bytes: usize,
+    /// Socket read quantum: how often an idle connection thread rechecks
+    /// the shutdown flag. Bounds shutdown latency, not request latency.
+    pub poll_interval: Duration,
+    /// Budget for reading one request (head + body) once its first byte
+    /// has arrived; a stalled sender is cut off with 400, freeing the
+    /// thread.
+    pub request_timeout: Duration,
+    /// Upper bound on waiting for in-flight requests during
+    /// [`Server::shutdown`] / [`Server::swap_model`].
+    pub drain_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            retry_after_ms: 25,
+            max_body_bytes: protocol::DEFAULT_MAX_BODY_BYTES,
+            poll_interval: Duration::from_millis(50),
+            request_timeout: Duration::from_secs(5),
+            drain_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Shared server state, one `Arc` across acceptor + connection threads.
+struct ServerState {
+    registry: ModelRegistry,
+    client: RoutedClient,
+    admission: Arc<Admission>,
+    /// The coordinator workers' live per-model metrics map.
+    metrics: Arc<Mutex<HashMap<String, Metrics>>>,
+    shutting_down: AtomicBool,
+    /// Models currently draining for a hot-swap: requests for them are
+    /// rejected while the swap waits out their in-flight work.
+    draining: Mutex<HashSet<String>>,
+    started: Instant,
+    cfg: ServeConfig,
+}
+
+impl ServerState {
+    fn is_draining(&self, model: &str) -> bool {
+        self.draining.lock().expect("drain set poisoned").contains(model)
+    }
+}
+
+/// What [`Server::shutdown`] observed.
+#[derive(Debug)]
+pub struct ShutdownReport {
+    /// Final per-model coordinator metrics (sorted by model name).
+    pub metrics: Vec<Metrics>,
+    /// Requests ever admitted (each either completed or is in `metrics`).
+    pub admitted: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    /// True when every in-flight request finished inside
+    /// [`ServeConfig::drain_timeout`].
+    pub drained_clean: bool,
+}
+
+/// The running socket front end. Dropping it without calling
+/// [`Self::shutdown`] leaks the acceptor/connection threads until process
+/// exit — always shut down explicitly.
+pub struct Server {
+    state: Arc<ServerState>,
+    local_addr: SocketAddr,
+    coord: Option<MultiCoordinator>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Bind `cfg.addr`, start a [`MultiCoordinator`] over `registry`, and
+    /// begin accepting connections. The admission caps come from
+    /// `policy.global_inflight_cap` / `policy.model_inflight_cap`.
+    pub fn start(
+        registry: ModelRegistry,
+        policy: BatchPolicy,
+        workers: usize,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        ensure!(!registry.is_empty(), "refusing to serve an empty model registry");
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding listener on {}", cfg.addr))?;
+        let local_addr = listener.local_addr().context("reading bound address")?;
+        let coord = MultiCoordinator::start(registry.clone(), policy, workers);
+        let admission = Arc::new(Admission::new(AdmissionConfig {
+            global_cap: policy.global_inflight_cap,
+            model_cap: policy.model_inflight_cap,
+        }));
+        let state = Arc::new(ServerState {
+            registry,
+            client: coord.client(),
+            admission,
+            metrics: coord.metrics_handle(),
+            shutting_down: AtomicBool::new(false),
+            draining: Mutex::new(HashSet::new()),
+            started: Instant::now(),
+            cfg,
+        });
+        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+
+        let acceptor = {
+            let state = Arc::clone(&state);
+            let conns = Arc::clone(&conns);
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    // Checked after each accept: shutdown() sets the flag and
+                    // then self-connects to pop the acceptor out of accept().
+                    if state.shutting_down.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let state = Arc::clone(&state);
+                    let handle = std::thread::spawn(move || handle_connection(&state, stream));
+                    conns.lock().expect("connection list poisoned").push(handle);
+                }
+            })
+        };
+
+        Ok(Server { state, local_addr, coord: Some(coord), acceptor: Some(acceptor), conns })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The shared registry handle.
+    pub fn registry(&self) -> ModelRegistry {
+        self.state.registry.clone()
+    }
+
+    /// The admission state (tests hold permits through this to force
+    /// deterministic shed/drain scenarios).
+    pub fn admission(&self) -> Arc<Admission> {
+        Arc::clone(&self.state.admission)
+    }
+
+    /// Snapshot of per-model coordinator metrics, sorted by model name.
+    pub fn metrics(&self) -> Vec<Metrics> {
+        let guard = self.state.metrics.lock().expect("metrics poisoned");
+        let mut out: Vec<Metrics> = guard.values().cloned().collect();
+        out.sort_by(|a, b| a.engine.cmp(&b.engine));
+        out
+    }
+
+    /// Mark `model` as draining: its requests get a clean 503 `"draining"`
+    /// until [`Self::end_model_drain`]. Idempotent.
+    pub fn begin_model_drain(&self, model: &str) {
+        self.state
+            .draining
+            .lock()
+            .expect("drain set poisoned")
+            .insert(model.to_string());
+    }
+
+    /// Reopen `model` for requests after a drain.
+    pub fn end_model_drain(&self, model: &str) {
+        self.state.draining.lock().expect("drain set poisoned").remove(model);
+    }
+
+    /// Drain-then-swap: reject new requests for `model`, wait for its
+    /// in-flight requests to finish (bounded by
+    /// [`ServeConfig::drain_timeout`]), hot-swap the registry entry from
+    /// `path`, and reopen. The registry swap itself is atomic either way —
+    /// the drain guarantees no request *admitted before the swap* is still
+    /// queued when the new version goes live, so a version rollout has a
+    /// clean cutover point. Reopens the model even when the swap fails.
+    pub fn swap_model(&self, model: &str, path: &Path) -> Result<(Option<u32>, u32)> {
+        self.begin_model_drain(model);
+        let deadline = Instant::now() + self.state.cfg.drain_timeout;
+        while self.state.admission.model_inflight(model) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let result = self.state.registry.swap(model, path);
+        self.end_model_drain(model);
+        result
+    }
+
+    /// Graceful shutdown: stop accepting, finish every admitted request,
+    /// stop the coordinator, join all threads.
+    ///
+    /// Ordering note: the drain wait below cannot miss an admitted request.
+    /// Admission increments its in-flight counter *before* re-checking the
+    /// shutdown flag (both SeqCst), and this method sets the flag before
+    /// reading the counter — so every acquirer either observes the flag
+    /// (and releases with a `"draining"` rejection) or its permit is
+    /// visible to the wait.
+    pub fn shutdown(mut self) -> ShutdownReport {
+        self.state.shutting_down.store(true, Ordering::SeqCst);
+        // Pop the acceptor out of its blocking accept().
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let deadline = Instant::now() + self.state.cfg.drain_timeout;
+        while self.state.admission.global_inflight() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let drained_clean = self.state.admission.global_inflight() == 0;
+        // The coordinator's own shutdown drains anything already queued, so
+        // even a timed-out drain loses no admitted work.
+        let metrics = match self.coord.take() {
+            Some(c) => c.shutdown(),
+            None => Vec::new(),
+        };
+        // Connection threads see the flag at their next poll tick; their
+        // final response writes complete before we return.
+        let handles: Vec<_> = {
+            let mut guard = self.conns.lock().expect("connection list poisoned");
+            guard.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        ShutdownReport {
+            metrics,
+            admitted: self.state.admission.global().admitted(),
+            shed: self.state.admission.global().shed(),
+            drained_clean,
+        }
+    }
+}
+
+/// One connection's request loop (keep-alive until error, `Connection:
+/// close`, EOF, or shutdown). Every protocol error is answered and closes
+/// only this connection; the acceptor and other connections are untouched.
+fn handle_connection(state: &Arc<ServerState>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(state.cfg.poll_interval)).is_err() {
+        return;
+    }
+    let mut stream = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        match read_request(state, &mut stream, &mut buf) {
+            Ok(Some((head, body))) => {
+                let response = handle_request(state, &head, &body);
+                let keep = head.keep_alive && response.keep_alive;
+                if response.write_to(&mut stream).is_err() || !keep {
+                    return;
+                }
+            }
+            // Clean EOF between requests, or idle shutdown.
+            Ok(None) => return,
+            Err(response) => {
+                let _ = response.write_to(&mut stream);
+                return;
+            }
+        }
+    }
+}
+
+/// Read one request off the stream. `buf` carries pipelined bytes between
+/// calls. `Ok(None)` = connection is done (EOF / shutdown while idle);
+/// `Err(response)` = protocol violation, answer and close.
+fn read_request(
+    state: &Arc<ServerState>,
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+) -> Result<Option<(RequestHead, Vec<u8>)>, Box<Response>> {
+    let mut chunk = [0u8; 4096];
+    let mut waited = Duration::ZERO;
+    let head_end = loop {
+        if let Some(end) = find_head_end(buf) {
+            break end;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(Box::new(bad_request("request head too large")));
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None); // clean close between requests
+                }
+                return Err(Box::new(bad_request("connection closed mid-request")));
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if buf.is_empty() {
+                    // Idle keep-alive connection: only the shutdown flag
+                    // ends it.
+                    if state.shutting_down.load(Ordering::SeqCst) {
+                        return Ok(None);
+                    }
+                    continue;
+                }
+                // A request has started: it must finish within the budget
+                // (a stalled sender must not pin this thread forever).
+                waited += state.cfg.poll_interval;
+                if waited >= state.cfg.request_timeout {
+                    return Err(Box::new(bad_request("timed out reading request")));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return Ok(None), // reset/abort: nothing to answer
+        }
+    };
+
+    let head = parse_head(&buf[..head_end], state.cfg.max_body_bytes).map_err(|e| match e {
+        ProtoError::BodyTooLarge { declared, cap } => Box::new(payload_too_large(declared, cap)),
+        other => Box::new(bad_request(&other.to_string())),
+    })?;
+
+    let total = head_end + head.content_length;
+    let mut waited = Duration::ZERO;
+    while buf.len() < total {
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                return Err(Box::new(bad_request(&format!(
+                    "connection closed mid-body ({} of {} bytes)",
+                    buf.len() - head_end,
+                    head.content_length
+                ))))
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                waited += state.cfg.poll_interval;
+                if waited >= state.cfg.request_timeout {
+                    return Err(Box::new(bad_request("timed out reading request body")));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return Ok(None),
+        }
+    }
+    let body = buf[head_end..total].to_vec();
+    // Anything past this request stays buffered for the next one.
+    buf.drain(..total);
+    Ok(Some((head, body)))
+}
+
+/// Route one parsed request to its handler.
+fn handle_request(state: &Arc<ServerState>, head: &RequestHead, body: &[u8]) -> Response {
+    match (head.method.as_str(), head.target.as_str()) {
+        ("GET", "/healthz") => healthz(state),
+        ("GET", "/metrics") => metrics_page(state),
+        (_, "/healthz") | (_, "/metrics") => method_not_allowed(),
+        ("POST", target) if target.starts_with("/infer/") => {
+            infer(state, &target["/infer/".len()..], body)
+        }
+        (_, target) if target.starts_with("/infer/") => method_not_allowed(),
+        (_, target) => not_found(&format!("unknown path {target}")),
+    }
+}
+
+/// `POST /infer/<model>`: validate → admit → execute → reply.
+fn infer(state: &Arc<ServerState>, model: &str, body: &[u8]) -> Response {
+    if state.shutting_down.load(Ordering::SeqCst) {
+        return draining("server");
+    }
+    if state.is_draining(model) {
+        return draining(model);
+    }
+    let Ok(entry) = state.registry.resolve(model) else {
+        return not_found(&format!(
+            "unknown model {model:?} (registered: {:?})",
+            state.registry.names()
+        ));
+    };
+    let want: usize = entry.input_shape.iter().product();
+    let values = match decode_f32_body(body, want) {
+        Ok(v) => v,
+        Err(msg) => return bad_request(&msg),
+    };
+    let permit = match state.admission.try_acquire(model) {
+        Ok(p) => p,
+        Err(Shed::Global { .. }) => return overloaded(state.cfg.retry_after_ms, "global"),
+        Err(Shed::Model { .. }) => return overloaded(state.cfg.retry_after_ms, "model"),
+    };
+    // Re-check *after* acquiring: pairs with the drain waits (see
+    // [`Server::shutdown`]) so no admitted request can slip past a drain.
+    if state.shutting_down.load(Ordering::SeqCst) {
+        drop(permit);
+        return draining("server");
+    }
+    if state.is_draining(model) {
+        drop(permit);
+        return draining(model);
+    }
+    let image = Tensor::from_vec(&entry.batched_shape(1), values);
+    let result = state.client.infer(model, image);
+    drop(permit);
+    match result {
+        Ok(r) => Response::octets(200, "OK", encode_f32_body(&r.output))
+            .header("X-Model-Version", r.version)
+            .header("X-Batch-Size", r.batch_size)
+            .header("X-Latency-Us", r.latency.as_micros()),
+        // Only reachable when the coordinator is stopping underneath us.
+        Err(_) => draining("server"),
+    }
+}
+
+/// `GET /healthz`: overall + per-model status as JSON.
+fn healthz(state: &Arc<ServerState>) -> Response {
+    let shutting_down = state.shutting_down.load(Ordering::SeqCst);
+    let overall = if shutting_down { "draining" } else { "serving" };
+    let mut body = format!(
+        "{{\"status\":\"{overall}\",\"uptime_ms\":{},\"models\":[",
+        state.started.elapsed().as_millis()
+    );
+    let mut first = true;
+    for name in state.registry.names().iter() {
+        let Some(entry) = state.registry.get(name) else { continue };
+        let status = if shutting_down || state.is_draining(name) { "draining" } else { "serving" };
+        if !first {
+            body.push(',');
+        }
+        first = false;
+        body.push_str(&format!(
+            "{{\"name\":{},\"version\":{},\"input_shape\":[{},{},{}],\"status\":\"{status}\",\"inflight\":{}}}",
+            json_string(name),
+            entry.version,
+            entry.input_shape[0],
+            entry.input_shape[1],
+            entry.input_shape[2],
+            state.admission.model_inflight(name),
+        ));
+    }
+    body.push_str("]}");
+    Response::json(200, "OK", body)
+}
+
+/// `GET /metrics`: Prometheus text exposition of coordinator metrics
+/// (per model + `_all` merge) and admission counters.
+fn metrics_page(state: &Arc<ServerState>) -> Response {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let mut merged = Metrics::new("_all");
+    {
+        let guard = state.metrics.lock().expect("metrics poisoned");
+        let mut names: Vec<&String> = guard.keys().collect();
+        names.sort();
+        for name in names {
+            let m = &guard[name];
+            m.prometheus_into(name, &mut out);
+            merged.merge(m);
+        }
+    }
+    merged.prometheus_into("_all", &mut out);
+    let g = state.admission.global();
+    let _ = writeln!(out, "iaoi_inflight{{scope=\"global\"}} {}", g.inflight());
+    let _ = writeln!(out, "iaoi_admitted_total{{scope=\"global\"}} {}", g.admitted());
+    let _ = writeln!(out, "iaoi_shed_total{{scope=\"global\"}} {}", g.shed());
+    for (model, inflight, admitted, shed) in state.admission.per_model_stats() {
+        let _ = writeln!(out, "iaoi_inflight{{model=\"{model}\"}} {inflight}");
+        let _ = writeln!(out, "iaoi_admitted_total{{model=\"{model}\"}} {admitted}");
+        let _ = writeln!(out, "iaoi_shed_total{{model=\"{model}\"}} {shed}");
+    }
+    let _ = writeln!(out, "iaoi_uptime_seconds {}", state.started.elapsed().as_secs());
+    Response::text(200, "OK", out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.addr, "127.0.0.1:0");
+        assert!(cfg.retry_after_ms > 0);
+        assert!(cfg.poll_interval < cfg.request_timeout);
+        assert!(cfg.request_timeout < cfg.drain_timeout);
+    }
+
+    #[test]
+    fn empty_registry_is_refused() {
+        let err = Server::start(
+            ModelRegistry::new(),
+            BatchPolicy::default(),
+            1,
+            ServeConfig::default(),
+        );
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,430 @@
+//! Minimal HTTP/1.1 wire protocol for the serving front end.
+//!
+//! The server speaks a deliberately small, std-only subset of HTTP/1.1 —
+//! enough that `curl` and any stock HTTP client can drive it, with none of
+//! a general server's surface. The contract (documented in
+//! `EXPERIMENTS.md § Serving`):
+//!
+//! * `POST /infer/<model>` — body is the input tensor as raw
+//!   little-endian `f32` values in NHWC order, exactly `H·W·C` of them
+//!   (the model's input geometry; see `GET /healthz`). The response body
+//!   is the output logits, again raw little-endian `f32`. Response
+//!   headers `X-Model-Version`, `X-Batch-Size` and `X-Latency-Us` echo
+//!   serving observables.
+//! * `GET /healthz` — JSON: overall `status` (`serving` | `draining`)
+//!   plus one entry per resident model (name, version, input shape,
+//!   per-model status and in-flight count).
+//! * `GET /metrics` — Prometheus text exposition of the coordinator's
+//!   per-model latency histograms, batch stats and admission counters.
+//!
+//! Error mapping: 400 malformed request or wrong body size, 404 unknown
+//! model/path, 405 wrong method, 413 oversized body, 503 shed (with
+//! `Retry-After` and a JSON `retry_after_ms` payload) or draining.
+//!
+//! Parsing is a pure function over bytes ([`parse_head`]) so malformed
+//! input handling is unit-testable without sockets. Limits: request head
+//! ≤ [`MAX_HEAD_BYTES`], body ≤ the server's configured cap. A parse
+//! error poisons only its own connection — the acceptor and other
+//! connections are untouched.
+
+use std::io::Write;
+
+/// Cap on the request line + headers (pre-body) section.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Default cap on request bodies; [`crate::serve::ServeConfig`] can lower
+/// it. 16 MiB ≫ any realistic input tensor for these models.
+pub const DEFAULT_MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// How a request head failed to parse.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Not even a recognizable HTTP request line.
+    BadRequestLine,
+    /// Header section malformed (non-UTF-8, missing `:`, …).
+    BadHeader,
+    /// `Content-Length` missing on a method that requires it, or unparsable.
+    BadContentLength,
+    /// Declared body length exceeds the server cap.
+    BodyTooLarge { declared: usize, cap: usize },
+    /// Head grew past [`MAX_HEAD_BYTES`] without a blank line.
+    HeadTooLarge,
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::BadRequestLine => write!(f, "malformed request line"),
+            ProtoError::BadHeader => write!(f, "malformed header"),
+            ProtoError::BadContentLength => write!(f, "missing or malformed Content-Length"),
+            ProtoError::BodyTooLarge { declared, cap } => {
+                write!(f, "declared body of {declared} bytes exceeds cap of {cap}")
+            }
+            ProtoError::HeadTooLarge => write!(f, "request head exceeds {MAX_HEAD_BYTES} bytes"),
+        }
+    }
+}
+
+/// A parsed request head (everything before the body).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RequestHead {
+    pub method: String,
+    /// Request target as sent (e.g. `/infer/alpha`).
+    pub target: String,
+    /// Declared body length (0 when absent on GET).
+    pub content_length: usize,
+    /// False when the client sent `Connection: close`.
+    pub keep_alive: bool,
+}
+
+/// Locate the end of the head (`\r\n\r\n`) in `buf`, returning the offset
+/// *past* the terminator. `None` = need more bytes.
+pub fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// Parse the head section `head` (which must end with `\r\n\r\n`; pass the
+/// slice up to [`find_head_end`]). `max_body` bounds the declared
+/// `Content-Length`.
+pub fn parse_head(head: &[u8], max_body: usize) -> Result<RequestHead, ProtoError> {
+    let text = std::str::from_utf8(head).map_err(|_| ProtoError::BadHeader)?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().ok_or(ProtoError::BadRequestLine)?;
+    let mut parts = request_line.split_ascii_whitespace();
+    let method = parts.next().ok_or(ProtoError::BadRequestLine)?;
+    let target = parts.next().ok_or(ProtoError::BadRequestLine)?;
+    let version = parts.next().ok_or(ProtoError::BadRequestLine)?;
+    if parts.next().is_some() || !version.starts_with("HTTP/1.") || !target.starts_with('/') {
+        return Err(ProtoError::BadRequestLine);
+    }
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(ProtoError::BadRequestLine);
+    }
+
+    let mut content_length: Option<usize> = None;
+    let mut keep_alive = true;
+    for line in lines {
+        if line.is_empty() {
+            continue; // the blank terminator line(s)
+        }
+        let (name, value) = line.split_once(':').ok_or(ProtoError::BadHeader)?;
+        let name = name.trim();
+        let value = value.trim();
+        if name.is_empty() {
+            return Err(ProtoError::BadHeader);
+        }
+        if name.eq_ignore_ascii_case("content-length") {
+            let n: usize = value.parse().map_err(|_| ProtoError::BadContentLength)?;
+            content_length = Some(n);
+        } else if name.eq_ignore_ascii_case("connection") && value.eq_ignore_ascii_case("close") {
+            keep_alive = false;
+        }
+    }
+
+    let content_length = match (method, content_length) {
+        // POST must declare a length (no chunked encoding in this subset).
+        ("POST", None) => return Err(ProtoError::BadContentLength),
+        ("POST", Some(n)) => n,
+        (_, n) => n.unwrap_or(0),
+    };
+    if content_length > max_body {
+        return Err(ProtoError::BodyTooLarge { declared: content_length, cap: max_body });
+    }
+
+    Ok(RequestHead {
+        method: method.to_string(),
+        target: target.to_string(),
+        content_length,
+        keep_alive,
+    })
+}
+
+/// An HTTP response under construction.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub reason: &'static str,
+    /// `(name, value)` pairs beyond the always-present Content-Length /
+    /// Content-Type / Connection.
+    pub headers: Vec<(String, String)>,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// When false the server closes the connection after writing.
+    pub keep_alive: bool,
+}
+
+impl Response {
+    pub fn new(status: u16, reason: &'static str) -> Self {
+        Self {
+            status,
+            reason,
+            headers: Vec::new(),
+            content_type: "application/octet-stream",
+            body: Vec::new(),
+            keep_alive: true,
+        }
+    }
+
+    pub fn json(status: u16, reason: &'static str, body: String) -> Self {
+        let mut r = Self::new(status, reason);
+        r.content_type = "application/json";
+        r.body = body.into_bytes();
+        r
+    }
+
+    pub fn text(status: u16, reason: &'static str, body: String) -> Self {
+        let mut r = Self::new(status, reason);
+        r.content_type = "text/plain; charset=utf-8";
+        r.body = body.into_bytes();
+        r
+    }
+
+    pub fn octets(status: u16, reason: &'static str, body: Vec<u8>) -> Self {
+        let mut r = Self::new(status, reason);
+        r.body = body;
+        r
+    }
+
+    pub fn header(mut self, name: &str, value: impl std::fmt::Display) -> Self {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn close(mut self) -> Self {
+        self.keep_alive = false;
+        self
+    }
+
+    /// Serialize onto `w` (a `TcpStream` in production, a `Vec<u8>` in
+    /// tests).
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(w, "HTTP/1.1 {} {}\r\n", self.status, self.reason)?;
+        write!(w, "Content-Type: {}\r\n", self.content_type)?;
+        write!(w, "Content-Length: {}\r\n", self.body.len())?;
+        if !self.keep_alive {
+            write!(w, "Connection: close\r\n")?;
+        }
+        for (name, value) in &self.headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        write!(w, "\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Standard error responses (one place so tests and handlers agree).
+pub fn bad_request(msg: &str) -> Response {
+    Response::json(400, "Bad Request", format!("{{\"error\":{}}}", json_string(msg))).close()
+}
+
+pub fn not_found(msg: &str) -> Response {
+    Response::json(404, "Not Found", format!("{{\"error\":{}}}", json_string(msg)))
+}
+
+pub fn method_not_allowed() -> Response {
+    Response::json(405, "Method Not Allowed", "{\"error\":\"method not allowed\"}".to_string())
+}
+
+pub fn payload_too_large(declared: usize, cap: usize) -> Response {
+    Response::json(
+        413,
+        "Payload Too Large",
+        format!("{{\"error\":\"body of {declared} bytes exceeds cap of {cap}\"}}"),
+    )
+    .close()
+}
+
+/// 503 for a shed request: machine-readable retry hint in both the
+/// `Retry-After` header (whole seconds, HTTP convention, rounded up) and a
+/// JSON `retry_after_ms` field (the precise value).
+pub fn overloaded(retry_after_ms: u64, scope: &str) -> Response {
+    let retry_after_s = retry_after_ms.div_ceil(1000).max(1);
+    Response::json(
+        503,
+        "Service Unavailable",
+        format!("{{\"error\":\"overloaded\",\"scope\":\"{scope}\",\"retry_after_ms\":{retry_after_ms}}}"),
+    )
+    .header("Retry-After", retry_after_s)
+}
+
+/// 503 for a draining server/model: not retryable on this connection.
+pub fn draining(scope: &str) -> Response {
+    Response::json(
+        503,
+        "Service Unavailable",
+        format!("{{\"error\":\"draining\",\"scope\":\"{scope}\"}}"),
+    )
+    .close()
+}
+
+/// Minimal JSON string escaping (quotes, backslash, control chars).
+pub fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Decode an infer body: raw little-endian `f32`s, expecting exactly
+/// `want_values` of them.
+pub fn decode_f32_body(body: &[u8], want_values: usize) -> Result<Vec<f32>, String> {
+    if body.len() != want_values * 4 {
+        return Err(format!(
+            "body must be {} bytes ({} little-endian f32 values), got {}",
+            want_values * 4,
+            want_values,
+            body.len()
+        ));
+    }
+    Ok(body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Encode `values` as raw little-endian `f32` bytes.
+pub fn encode_f32_body(values: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 4);
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn head_of(raw: &str) -> Result<RequestHead, ProtoError> {
+        parse_head(raw.as_bytes(), DEFAULT_MAX_BODY_BYTES)
+    }
+
+    #[test]
+    fn parses_a_post() {
+        let h = head_of(
+            "POST /infer/alpha HTTP/1.1\r\nHost: x\r\nContent-Length: 12\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(h.method, "POST");
+        assert_eq!(h.target, "/infer/alpha");
+        assert_eq!(h.content_length, 12);
+        assert!(h.keep_alive);
+    }
+
+    #[test]
+    fn parses_a_get_without_length() {
+        let h = head_of("GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(h.method, "GET");
+        assert_eq!(h.content_length, 0);
+    }
+
+    #[test]
+    fn connection_close_is_honored() {
+        let h = head_of("GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!h.keep_alive);
+    }
+
+    #[test]
+    fn garbage_is_rejected_not_panicked() {
+        for raw in [
+            "\r\n\r\n",
+            "garbage\r\n\r\n",
+            "GET\r\n\r\n",
+            "GET /x\r\n\r\n",
+            "GET /x SPDY/99\r\n\r\n",
+            "get /x HTTP/1.1\r\n\r\n",
+            "GET x HTTP/1.1\r\n\r\n",
+            "GET /x HTTP/1.1 extra\r\n\r\n",
+        ] {
+            assert_eq!(head_of(raw), Err(ProtoError::BadRequestLine), "{raw:?}");
+        }
+        assert_eq!(
+            head_of("GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n"),
+            Err(ProtoError::BadHeader)
+        );
+        assert_eq!(
+            parse_head(&[0xff, 0xfe, 0x0d, 0x0a, 0x0d, 0x0a], 1024),
+            Err(ProtoError::BadHeader),
+            "non-UTF-8 head"
+        );
+    }
+
+    #[test]
+    fn post_requires_content_length() {
+        assert_eq!(
+            head_of("POST /infer/a HTTP/1.1\r\n\r\n"),
+            Err(ProtoError::BadContentLength)
+        );
+        assert_eq!(
+            head_of("POST /infer/a HTTP/1.1\r\nContent-Length: many\r\n\r\n"),
+            Err(ProtoError::BadContentLength)
+        );
+    }
+
+    #[test]
+    fn oversized_declared_body_is_rejected_up_front() {
+        let r = parse_head(
+            b"POST /infer/a HTTP/1.1\r\nContent-Length: 99999\r\n\r\n",
+            1024,
+        );
+        assert_eq!(r, Err(ProtoError::BodyTooLarge { declared: 99999, cap: 1024 }));
+    }
+
+    #[test]
+    fn head_end_detection() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n"), None);
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nBODY"), Some(18));
+    }
+
+    #[test]
+    fn response_serialization_round_trips() {
+        let mut buf = Vec::new();
+        Response::octets(200, "OK", vec![1, 2, 3])
+            .header("X-Model-Version", 7)
+            .write_to(&mut buf)
+            .unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 3\r\n"));
+        assert!(text.contains("X-Model-Version: 7\r\n"));
+        assert!(buf.ends_with(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn overload_response_carries_retry_after() {
+        let mut buf = Vec::new();
+        overloaded(25, "global").write_to(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        assert!(text.contains("\"retry_after_ms\":25"), "{text}");
+        assert!(text.contains("503"), "{text}");
+    }
+
+    #[test]
+    fn f32_body_round_trips_bit_exactly() {
+        let values = [0.0f32, -1.5, f32::MIN_POSITIVE, 3.22e8, f32::NEG_INFINITY];
+        let bytes = encode_f32_body(&values);
+        let back = decode_f32_body(&bytes, values.len()).unwrap();
+        for (a, b) in values.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(decode_f32_body(&bytes[..bytes.len() - 1], values.len()).is_err());
+    }
+
+    #[test]
+    fn json_string_escapes() {
+        assert_eq!(json_string("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+    }
+}

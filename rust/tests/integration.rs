@@ -201,6 +201,21 @@ fn per_channel_improves_or_ties_per_tensor_on_synth_depthwise_model() {
         r.per_channel_logit_err,
         r.per_tensor_logit_err
     );
+    // Per-channel FC (the converter now quantizes FC per output unit in
+    // PerChannel mode): on the wide-classifier-head model, whose FC rows
+    // span a 256x magnitude spread, the same ordering must hold.
+    assert!(
+        r.wide_head_per_channel_fidelity >= r.wide_head_per_tensor_fidelity - one_example,
+        "wide-head per-channel fidelity {} must not trail per-tensor {}",
+        r.wide_head_per_channel_fidelity,
+        r.wide_head_per_tensor_fidelity
+    );
+    assert!(
+        r.wide_head_per_channel_logit_err < r.wide_head_per_tensor_logit_err,
+        "wide-head per-channel logit error {} must beat per-tensor {}",
+        r.wide_head_per_channel_logit_err,
+        r.wide_head_per_tensor_logit_err
+    );
 }
 
 /// Guard that artifacts dir referenced by the default CLI path matches the

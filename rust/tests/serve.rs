@@ -1,0 +1,338 @@
+//! Integration tests for the socket serving front end (`iaoi serve --addr`):
+//! real TCP round trips against [`iaoi::serve::Server`] on an ephemeral
+//! port, covering the production rails the subsystem exists for —
+//! bit-identical responses vs direct prepared-graph execution, health
+//! transitions around a hot-swap drain, deterministic load-shedding at the
+//! admission cap, graceful shutdown that drops no admitted request, and
+//! malformed input that must never wedge the acceptor.
+
+use iaoi::coordinator::registry::ModelRegistry;
+use iaoi::coordinator::BatchPolicy;
+use iaoi::data::Rng;
+use iaoi::graph::ExecState;
+use iaoi::harness::demo_artifact;
+use iaoi::model_format;
+use iaoi::serve::client::HttpClient;
+use iaoi::serve::{ServeConfig, Server};
+use iaoi::tensor::Tensor;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Two in-memory demo models, same pair `iaoi serve --addr` installs when
+/// run without `--models`.
+fn demo_registry() -> ModelRegistry {
+    let registry = ModelRegistry::new();
+    registry.install(demo_artifact("alpha", 1, 16, 3), PathBuf::from("<test:alpha>"));
+    registry.install(demo_artifact("beta", 1, 8, 11), PathBuf::from("<test:beta>"));
+    registry
+}
+
+fn start_server(policy: BatchPolicy, cfg: ServeConfig) -> Server {
+    Server::start(demo_registry(), policy, 2, cfg).expect("server start")
+}
+
+/// A deterministic [16,16,3] input image as a flat f32 vec.
+fn image(rng: &mut Rng) -> Vec<f32> {
+    (0..16 * 16 * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+}
+
+fn fresh_policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn socket_roundtrip_is_bit_identical_to_prepared_graph() {
+    // Concurrent clients over real sockets: every response must match a
+    // direct PreparedGraph execution of the same input bit-for-bit, no
+    // matter how the coordinator batched it with co-riders.
+    let server = start_server(fresh_policy(), ServeConfig::default());
+    let addr = server.local_addr();
+    let registry = server.registry();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let registry = registry.clone();
+            std::thread::spawn(move || {
+                let model = if t % 2 == 0 { "alpha" } else { "beta" };
+                let entry = registry.resolve(model).expect("entry");
+                let mut state = ExecState::new();
+                let mut client = HttpClient::connect(addr).expect("connect");
+                let mut rng = Rng::seeded(1000 + t as u64);
+                for _ in 0..8 {
+                    let values = image(&mut rng);
+                    let resp = client.infer(model, &values).expect("infer");
+                    assert_eq!(resp.status, 200, "body: {}", resp.body_text());
+                    assert_eq!(resp.header("X-Model-Version"), Some("1"));
+                    let got = resp.body_f32().expect("f32 body");
+                    let x = Tensor::from_vec(&entry.batched_shape(1), values);
+                    let want = entry.plan.run(&x, &mut state);
+                    assert_eq!(got.len(), want.data().len());
+                    for (g, w) in got.iter().zip(want.data()) {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "socket response diverged from direct prepared execution"
+                        );
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let report = server.shutdown();
+    assert!(report.drained_clean);
+    assert_eq!(report.shed, 0, "no caps set, nothing may shed");
+}
+
+#[test]
+fn health_transitions_and_versions_across_hot_swap() {
+    let server = start_server(fresh_policy(), ServeConfig::default());
+    let addr = server.local_addr();
+    let mut client = HttpClient::connect(addr).expect("connect");
+    let mut rng = Rng::seeded(7);
+
+    // Steady state: everything reports "serving".
+    let health = client.get("/healthz").expect("healthz");
+    assert_eq!(health.status, 200);
+    let text = health.body_text();
+    assert!(text.contains("\"status\":\"serving\""), "health: {text}");
+    assert!(!text.contains("draining"), "health: {text}");
+
+    // Draining one model flips only that model's status; its requests get
+    // a clean 503 while the other model keeps serving.
+    server.begin_model_drain("alpha");
+    let text = client.get("/healthz").expect("healthz").body_text();
+    assert!(
+        text.contains("\"name\":\"alpha\",\"version\":1,\"input_shape\":[16,16,3],\"status\":\"draining\""),
+        "health during drain: {text}"
+    );
+    let img = image(&mut rng);
+    let resp = client.infer("alpha", &img).expect("infer during drain");
+    assert_eq!(resp.status, 503);
+    assert!(resp.body_text().contains("\"error\":\"draining\""), "body: {}", resp.body_text());
+    // The draining rejection closes the connection by design; reconnect.
+    let mut client = HttpClient::connect(addr).expect("reconnect");
+    let resp = client.infer("beta", &img).expect("beta unaffected");
+    assert_eq!(resp.status, 200);
+    server.end_model_drain("alpha");
+    let resp = client.infer("alpha", &img).expect("infer after reopen");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("X-Model-Version"), Some("1"));
+
+    // Hot-swap alpha to v2 through the drain-then-swap path: subsequent
+    // responses must carry the new registry version.
+    let dir = std::env::temp_dir().join(format!("iaoi-serve-swap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let v2 = dir.join("alpha_v2.iaoiq");
+    model_format::write_file(&v2, &demo_artifact("alpha", 2, 16, 3)).expect("write v2");
+    let (old, new) = server.swap_model("alpha", &v2).expect("swap");
+    assert_eq!((old, new), (Some(1), 2));
+    let resp = client.infer("alpha", &img).expect("infer after swap");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("X-Model-Version"), Some("2"));
+    // The drain set must be empty again: health is all-serving.
+    let text = client.get("/healthz").expect("healthz").body_text();
+    assert!(!text.contains("draining"), "health after swap: {text}");
+
+    let report = server.shutdown();
+    assert!(report.drained_clean);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn saturated_caps_shed_with_retry_after_then_recover() {
+    // Global cap 1: a held permit forces a deterministic queue-full
+    // rejection — 503 with both the Retry-After header and the JSON
+    // retry_after_ms hint — and releasing the permit restores service.
+    let server = start_server(
+        BatchPolicy { global_inflight_cap: 1, ..fresh_policy() },
+        ServeConfig::default(),
+    );
+    let mut client = HttpClient::connect(server.local_addr()).expect("connect");
+    let mut rng = Rng::seeded(13);
+    let img = image(&mut rng);
+    let admission = server.admission();
+    let permit = admission.try_acquire("alpha").expect("hold the only slot");
+    let resp = client.infer("alpha", &img).expect("shed response");
+    assert_eq!(resp.status, 503);
+    assert!(resp.header("Retry-After").is_some(), "shed reply must carry Retry-After");
+    let body = resp.body_text();
+    assert!(body.contains("\"error\":\"overloaded\""), "body: {body}");
+    assert!(body.contains("\"scope\":\"global\""), "body: {body}");
+    assert!(body.contains("\"retry_after_ms\":"), "body: {body}");
+    drop(permit);
+    let resp = client.infer("alpha", &img).expect("after release");
+    assert_eq!(resp.status, 200, "capacity must recover once the permit drops");
+    let report = server.shutdown();
+    assert_eq!(report.shed, 1);
+    assert!(report.drained_clean);
+
+    // Per-model cap 1: saturating alpha sheds alpha with model scope but
+    // must not starve beta.
+    let server = start_server(
+        BatchPolicy { model_inflight_cap: 1, ..fresh_policy() },
+        ServeConfig::default(),
+    );
+    let mut client = HttpClient::connect(server.local_addr()).expect("connect");
+    let admission = server.admission();
+    let permit = admission.try_acquire("alpha").expect("hold alpha's slot");
+    let resp = client.infer("alpha", &img).expect("alpha shed");
+    assert_eq!(resp.status, 503);
+    assert!(resp.body_text().contains("\"scope\":\"model\""), "body: {}", resp.body_text());
+    let resp = client.infer("beta", &img).expect("beta");
+    assert_eq!(resp.status, 200, "a saturated model must not shed other models");
+    drop(permit);
+    let report = server.shutdown();
+    assert_eq!(report.shed, 1);
+    assert!(report.drained_clean);
+}
+
+#[test]
+fn shutdown_drains_every_admitted_request() {
+    // Closed-loop load from 8 threads while the server shuts down
+    // mid-flight: every request either completes with 200 or is answered
+    // with a clean 503, and the server-side completion count equals the
+    // client-side success count — zero admitted requests dropped.
+    let server = start_server(
+        BatchPolicy { global_inflight_cap: 4, ..fresh_policy() },
+        ServeConfig::default(),
+    );
+    let addr = server.local_addr();
+    let ok = Arc::new(AtomicU64::new(0));
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let ok = Arc::clone(&ok);
+            std::thread::spawn(move || {
+                let model = if t % 2 == 0 { "alpha" } else { "beta" };
+                let Ok(mut client) = HttpClient::connect(addr) else { return };
+                let mut rng = Rng::seeded(31 + t as u64);
+                for _ in 0..10_000 {
+                    let img = image(&mut rng);
+                    match client.infer(model, &img) {
+                        Ok(resp) if resp.status == 200 => {
+                            ok.fetch_add(1, Ordering::SeqCst);
+                        }
+                        // Shed under the tiny cap: back off and retry.
+                        Ok(resp) if resp.body_text().contains("overloaded") => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        // Draining (server stopping) or connection torn
+                        // down by shutdown: this request was never
+                        // admitted, stop offering load.
+                        Ok(_) | Err(_) => return,
+                    }
+                }
+            })
+        })
+        .collect();
+    // Let the load ramp, then pull the plug mid-flight.
+    std::thread::sleep(Duration::from_millis(100));
+    let report = server.shutdown();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    assert!(report.drained_clean, "in-flight requests must finish inside the drain window");
+    let completed: u64 = report.metrics.iter().map(|m| m.completed).sum();
+    let ok = ok.load(Ordering::SeqCst);
+    assert!(ok > 0, "load must have completed some requests before shutdown");
+    assert_eq!(
+        completed, ok,
+        "server completed {completed} requests but clients saw {ok} — an admitted request was dropped"
+    );
+    // A permit acquired in the instant the flag flips is released with a
+    // clean "draining" rejection instead of executing, so admitted may
+    // exceed completed by at most that race window — never the reverse.
+    assert!(report.admitted >= completed, "completed requests must all have been admitted");
+}
+
+#[test]
+fn malformed_input_never_wedges_the_acceptor() {
+    // Tight request timeout so the truncated-body case resolves quickly.
+    let cfg = ServeConfig {
+        poll_interval: Duration::from_millis(20),
+        request_timeout: Duration::from_millis(300),
+        ..ServeConfig::default()
+    };
+    let server = start_server(fresh_policy(), cfg);
+    let addr = server.local_addr();
+    let mut rng = Rng::seeded(3);
+    let img = image(&mut rng);
+
+    // Garbage bytes: answered with 400 on that connection only.
+    let mut bad = HttpClient::connect(addr).expect("connect");
+    bad.send_raw(b"garbage that is not HTTP\r\n\r\n").expect("send");
+    let resp = bad.read_response().expect("error response");
+    assert_eq!(resp.status, 400);
+
+    // Oversized declared body: rejected up front with 413, before any
+    // body byte is read or buffered.
+    let mut bad = HttpClient::connect(addr).expect("connect");
+    bad.send_raw(b"POST /infer/alpha HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n")
+        .expect("send");
+    let resp = bad.read_response().expect("error response");
+    assert_eq!(resp.status, 413);
+
+    // Truncated body: the declared length never arrives; the read budget
+    // expires and the connection gets a 400 instead of pinning a thread.
+    let mut bad = HttpClient::connect(addr).expect("connect");
+    bad.send_raw(b"POST /infer/alpha HTTP/1.1\r\nContent-Length: 3072\r\n\r\nonly a few bytes")
+        .expect("send");
+    let resp = bad.read_response().expect("error response");
+    assert_eq!(resp.status, 400);
+    assert!(resp.body_text().contains("timed out"), "body: {}", resp.body_text());
+
+    // Wrong value count (valid HTTP, wrong tensor size) and wrong
+    // method/path: each answered in protocol, connection semantics intact.
+    let mut client = HttpClient::connect(addr).expect("connect");
+    let resp = client.infer("alpha", &img[..10]).expect("short tensor");
+    assert_eq!(resp.status, 400);
+    let mut client = HttpClient::connect(addr).expect("connect");
+    let resp = client.get("/infer/alpha").expect("GET on infer");
+    assert_eq!(resp.status, 405);
+    let resp = client.get("/no/such/path").expect("unknown path");
+    assert_eq!(resp.status, 404);
+    let resp = client.infer("nonexistent", &img).expect("unknown model");
+    assert_eq!(resp.status, 404);
+
+    // After all of the above, the acceptor still accepts and serves.
+    let mut client = HttpClient::connect(addr).expect("connect after abuse");
+    assert_eq!(client.get("/healthz").expect("healthz").status, 200);
+    let resp = client.infer("alpha", &img).expect("real inference still works");
+    assert_eq!(resp.status, 200);
+    let report = server.shutdown();
+    assert!(report.drained_clean);
+}
+
+#[test]
+fn metrics_endpoint_exports_quantiles_and_admission_counters() {
+    let server = start_server(fresh_policy(), ServeConfig::default());
+    let mut client = HttpClient::connect(server.local_addr()).expect("connect");
+    let mut rng = Rng::seeded(17);
+    for _ in 0..6 {
+        let img = image(&mut rng);
+        assert_eq!(client.infer("alpha", &img).expect("infer").status, 200);
+    }
+    let text = client.get("/metrics").expect("metrics").body_text();
+    for needle in [
+        "iaoi_requests_completed_total{model=\"alpha\"}",
+        "iaoi_latency_us{model=\"alpha\",quantile=\"0.5\"}",
+        "iaoi_latency_us{model=\"alpha\",quantile=\"0.999\"}",
+        "iaoi_latency_us{model=\"_all\",quantile=\"0.99\"}",
+        "iaoi_inflight{scope=\"global\"} 0",
+        "iaoi_admitted_total{scope=\"global\"} 6",
+        "iaoi_shed_total{scope=\"global\"} 0",
+        "iaoi_admitted_total{model=\"alpha\"} 6",
+        "iaoi_uptime_seconds",
+    ] {
+        assert!(text.contains(needle), "metrics missing {needle:?}:\n{text}");
+    }
+    let report = server.shutdown();
+    assert_eq!(report.admitted, 6);
+}
