@@ -10,14 +10,16 @@
 //! to a temp directory)
 
 use anyhow::Result;
-use iaoi::coordinator::registry::ModelRegistry;
+use iaoi::coordinator::registry::{ModelRegistry, QuarantineConfig};
 use iaoi::coordinator::{BatchPolicy, MultiCoordinator};
 use iaoi::data::ClassificationSet;
+use iaoi::graph::fault::FaultPlan;
 use iaoi::harness::demo_artifact;
 use iaoi::model_format;
 use iaoi::serve::client::HttpClient;
 use iaoi::serve::{ServeConfig, Server};
 use std::collections::BTreeSet;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 fn main() -> Result<()> {
@@ -69,7 +71,7 @@ fn main() -> Result<()> {
                             let resp = rx.recv().expect("response");
                             assert_eq!(resp.id, id);
                             assert_eq!(resp.model, name);
-                            assert_eq!(resp.output.len(), classes, "routing mixed models!");
+                            assert_eq!(resp.output().len(), classes, "routing mixed models!");
                             versions.insert(resp.version);
                             completed += 1;
                         }
@@ -92,7 +94,7 @@ fn main() -> Result<()> {
     // beta keeps serving v1.
     let probe = ClassificationSet::new(16, 16, 9);
     let resp = coord.client().infer("alpha", probe.example(2, 0).0)?;
-    assert_eq!((resp.version, resp.output.len()), (2, 16), "post-swap alpha must serve v2");
+    assert_eq!((resp.version, resp.output().len()), (2, 16), "post-swap alpha must serve v2");
 
     let wall = start.elapsed().as_secs_f64();
     for m in coord.shutdown() {
@@ -148,6 +150,36 @@ fn main() -> Result<()> {
         shed.header("Retry-After").unwrap_or("?"),
     );
     drop(permits);
+
+    // --- Robustness rails: deadlines and the panic circuit breaker. ---
+    // (CLI equivalents: --request-deadline-ms, --quarantine-threshold,
+    // --max-connections.) An already-expired X-Deadline-Ms budget sheds
+    // pre-execution with 504 — no engine time burned.
+    let expired = http.infer_with_deadline_ms("alpha", probe.example(2, 2).0.data(), 0)?;
+    assert_eq!(expired.status, 504, "expired deadline must shed with 504");
+    println!("  X-Deadline-Ms: 0 -> 504 deadline_exceeded (shed before execution)");
+    // Install a deliberately faulty model (injected panic on every batch):
+    // each failure is contained to a 500, and the breaker quarantines the
+    // model at the threshold while its siblings keep serving.
+    let registry = server.registry();
+    registry.set_quarantine(QuarantineConfig { threshold: 2, ..Default::default() });
+    registry.install_with(
+        demo_artifact("gamma", 1, 8, 77),
+        PathBuf::from("<demo:gamma>"),
+        Some(FaultPlan { panic_every: 1, ..Default::default() }),
+    );
+    let gamma_probe = ClassificationSet::new(16, 8, 13);
+    for i in 0..2u64 {
+        let r = http.infer("gamma", gamma_probe.example(2, i).0.data())?;
+        assert_eq!(r.status, 500, "injected panic must map to a contained 500");
+    }
+    let r = http.infer("gamma", gamma_probe.example(2, 2).0.data())?;
+    assert_eq!(r.status, 503, "two panics must trip the breaker");
+    assert!(r.body_text().contains("quarantined"), "{}", r.body_text());
+    let ok = http.infer("alpha", probe.example(2, 3).0.data())?;
+    assert_eq!(ok.status, 200, "healthy models keep serving through gamma's quarantine");
+    println!("  faulty gamma: 500, 500 -> 503 quarantined (K=2); alpha kept serving");
+
     let report = server.shutdown();
     assert!(report.drained_clean);
     println!(

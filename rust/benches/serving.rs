@@ -19,9 +19,10 @@
 //! (CI runs it under `IAOI_BENCH_SMOKE=1`, whose numbers are not meaningful.)
 
 use iaoi::bench_util::smoke_mode;
-use iaoi::coordinator::registry::ModelRegistry;
+use iaoi::coordinator::registry::{ModelRegistry, QuarantineConfig};
 use iaoi::coordinator::BatchPolicy;
 use iaoi::data::Rng;
+use iaoi::graph::fault::FaultPlan;
 use iaoi::harness::demo_artifact;
 use iaoi::serve::client::HttpClient;
 use iaoi::serve::{ServeConfig, Server};
@@ -73,20 +74,22 @@ fn random_image(rng: &mut Rng, shape: [usize; 3]) -> Vec<f32> {
 }
 
 /// One closed-loop client: `reqs` back-to-back inferences, returning
-/// (latencies_us of 200s, ok, shed). Shed responses are retried after a
-/// short backoff so the thread keeps offering load; anything else ends the
-/// thread (draining server / torn connection).
+/// (latencies_us of 200s, ok, shed, failed). Shed responses are retried
+/// after a short backoff so the thread keeps offering load; contained
+/// faults (500 internal, 504 deadline_exceeded — the degraded-mode and
+/// fault-injected smoke paths) count as failed and keep the loop going;
+/// anything else ends the thread (draining server / torn connection).
 fn run_client(
     addr: &str,
     model: &str,
     shape: [usize; 3],
     seed: u64,
     reqs: usize,
-) -> (Vec<f64>, u64, u64) {
+) -> (Vec<f64>, u64, u64, u64) {
     let mut lat = Vec::with_capacity(reqs);
-    let (mut ok, mut shed) = (0u64, 0u64);
+    let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
     let Ok(mut client) = HttpClient::connect(addr) else {
-        return (lat, ok, shed);
+        return (lat, ok, shed, failed);
     };
     let mut rng = Rng::seeded(seed);
     let mut sent = 0usize;
@@ -104,14 +107,18 @@ fn run_client(
                 sent += 1;
                 std::thread::sleep(Duration::from_micros(200));
             }
+            Ok(resp) if resp.status == 500 || resp.status == 504 => {
+                failed += 1;
+                sent += 1;
+            }
             Ok(_) | Err(_) => break,
         }
     }
-    (lat, ok, shed)
+    (lat, ok, shed, failed)
 }
 
 /// Fan out `clients` concurrent closed-loop threads; returns
-/// (all latencies sorted, ok, shed, wall seconds).
+/// (all latencies sorted, ok, shed, failed, wall seconds).
 fn sweep(
     addr: &str,
     model: &str,
@@ -119,7 +126,7 @@ fn sweep(
     clients: usize,
     reqs: usize,
     seed: u64,
-) -> (Vec<f64>, u64, u64, f64) {
+) -> (Vec<f64>, u64, u64, u64, f64) {
     let start = Instant::now();
     let handles: Vec<_> = (0..clients)
         .map(|t| {
@@ -129,16 +136,17 @@ fn sweep(
         })
         .collect();
     let mut lat = Vec::new();
-    let (mut ok, mut shed) = (0u64, 0u64);
+    let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
     for h in handles {
-        let (l, o, s) = h.join().expect("client thread");
+        let (l, o, s, f) = h.join().expect("client thread");
         lat.extend(l);
         ok += o;
         shed += s;
+        failed += f;
     }
     let wall = start.elapsed().as_secs_f64();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    (lat, ok, shed, wall)
+    (lat, ok, shed, failed, wall)
 }
 
 fn main() {
@@ -182,19 +190,20 @@ fn main() {
     // Phase A — closed loop at modest concurrency: the latency numbers.
     let (a_clients, a_reqs) = if smoke { (2, 8) } else { (4, 300) };
     println!("== phase A: closed loop, {a_clients} clients x {a_reqs} requests ==");
-    let (lat, a_ok, a_shed, a_wall) = sweep(&addr, &model, shape, a_clients, a_reqs, 100);
+    let (lat, a_ok, a_shed, a_failed, a_wall) = sweep(&addr, &model, shape, a_clients, a_reqs, 100);
     let (p50, p99, p999) =
         (percentile(&lat, 0.5), percentile(&lat, 0.99), percentile(&lat, 0.999));
     let a_rps = a_ok as f64 / a_wall.max(1e-9);
     println!(
-        "  {a_ok} ok, {a_shed} shed in {a_wall:.2}s — {a_rps:.1} req/s, p50 {p50:.0}us p99 {p99:.0}us p999 {p999:.0}us\n"
+        "  {a_ok} ok, {a_shed} shed, {a_failed} failed in {a_wall:.2}s — {a_rps:.1} req/s, p50 {p50:.0}us p99 {p99:.0}us p999 {p999:.0}us\n"
     );
 
     // Phase B — overload: offer well more concurrency than the admission
     // cap; the excess must convert to fast 503 sheds, not queueing.
     let (b_clients, b_reqs) = if smoke { (8, 25) } else { (32, 200) };
     println!("== phase B: overload sweep, {b_clients} clients x {b_reqs} requests ==");
-    let (_, b_ok, mut b_shed, b_wall) = sweep(&addr, &model, shape, b_clients, b_reqs, 500);
+    let (_, b_ok, mut b_shed, b_failed, b_wall) =
+        sweep(&addr, &model, shape, b_clients, b_reqs, 500);
     let b_rps = b_ok as f64 / b_wall.max(1e-9);
 
     // Deterministic forced shed (in-process only): saturate the cap by
@@ -219,30 +228,70 @@ fn main() {
         drop(permits);
     }
     b_shed += forced_shed;
-    let b_total = b_ok + b_shed;
+    let b_total = b_ok + b_shed + b_failed;
     let shed_rate = if b_total > 0 { b_shed as f64 / b_total as f64 } else { 0.0 };
     println!(
-        "  {b_ok} ok, {b_shed} shed ({forced_shed} forced) — {b_rps:.1} req/s, shed rate {:.1}%\n",
+        "  {b_ok} ok, {b_shed} shed ({forced_shed} forced), {b_failed} failed — {b_rps:.1} req/s, shed rate {:.1}%\n",
         shed_rate * 100.0
     );
 
-    // Phase C — the metrics endpoint must expose the same story.
+    // Phase C — the metrics endpoint must expose the same story, including
+    // the containment counters (a healthy run must report zero panics; the
+    // CI smoke job asserts exactly that on this JSON).
     let metrics = probe.get("/metrics").expect("metrics").body_text();
     let quantiles_exported = metrics.contains("iaoi_latency_us{");
     let server_admitted =
         prom_value(&metrics, "iaoi_admitted_total{scope=\"global\"}").unwrap_or(0);
     let server_shed = prom_value(&metrics, "iaoi_shed_total{scope=\"global\"}").unwrap_or(0);
-    println!("== phase C: server-side counters — admitted {server_admitted}, shed {server_shed} ==");
+    let worker_panics =
+        prom_value(&metrics, "iaoi_worker_panics_total{model=\"_all\"}").unwrap_or(0);
+    println!(
+        "== phase C: server-side counters — admitted {server_admitted}, shed {server_shed}, worker panics {worker_panics} =="
+    );
     assert!(quantiles_exported, "/metrics must export latency quantiles");
     assert!(server_shed >= forced_shed, "server must have observed the forced sheds");
 
+    // Phase D — degraded mode (in-process only): install a deliberately
+    // faulty model and sweep it with the breaker disabled. Containment
+    // invariant under load: every request is answered (some 200, some
+    // contained 500), the closed loop never wedges, and the healthy models
+    // are untouched.
+    let degraded = match &server {
+        None => "null".to_string(),
+        Some(server) => {
+            let (d_clients, d_reqs) = if smoke { (4, 12) } else { (4, 100) };
+            println!("== phase D: degraded mode, {d_clients} clients x {d_reqs} requests ==");
+            let registry = server.registry();
+            registry.set_quarantine(QuarantineConfig { threshold: 0, ..Default::default() });
+            registry.install_with(
+                demo_artifact("gamma", 1, 8, 77),
+                PathBuf::from("<bench:gamma>"),
+                Some(FaultPlan { panic_every: 3, ..Default::default() }),
+            );
+            let (_, d_ok, _, d_failed, d_wall) =
+                sweep(&addr, "gamma", shape, d_clients, d_reqs, 700);
+            assert_eq!(
+                d_ok + d_failed,
+                (d_clients * d_reqs) as u64,
+                "degraded sweep must answer every request"
+            );
+            assert!(d_ok > 0, "non-faulted gamma batches must still succeed");
+            assert!(d_failed > 0, "the injected panics must surface as contained failures");
+            println!("  {d_ok} ok, {d_failed} contained failures in {d_wall:.2}s\n");
+            format!(
+                "{{\"clients\": {d_clients}, \"requests\": {d_reqs}, \"ok\": {d_ok}, \"failed\": {d_failed}}}"
+            )
+        }
+    };
+
     let json = format!(
-        "{{\n  \"bench\": \"serving\",\n  \"smoke\": {},\n  \"mode\": \"{}\",\n  \"model\": \"{}\",\n  \"closed_loop\": {{\"clients\": {}, \"requests_ok\": {}, \"throughput_rps\": {:.2}, \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"p999_us\": {:.1}}},\n  \"overload\": {{\"clients\": {}, \"ok\": {}, \"shed\": {}, \"forced_shed\": {}, \"shed_rate\": {:.4}, \"throughput_rps\": {:.2}}},\n  \"server\": {{\"admitted_total\": {}, \"shed_total\": {}, \"latency_quantiles_exported\": {}}}\n}}\n",
+        "{{\n  \"bench\": \"serving\",\n  \"smoke\": {},\n  \"mode\": \"{}\",\n  \"model\": \"{}\",\n  \"closed_loop\": {{\"clients\": {}, \"requests_ok\": {}, \"failed\": {}, \"throughput_rps\": {:.2}, \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"p999_us\": {:.1}}},\n  \"overload\": {{\"clients\": {}, \"ok\": {}, \"shed\": {}, \"forced_shed\": {}, \"failed\": {}, \"shed_rate\": {:.4}, \"throughput_rps\": {:.2}}},\n  \"server\": {{\"admitted_total\": {}, \"shed_total\": {}, \"worker_panics_total\": {}, \"latency_quantiles_exported\": {}}},\n  \"degraded\": {}\n}}\n",
         smoke,
         if external.is_some() { "external" } else { "in-process" },
         model,
         a_clients,
         a_ok,
+        a_failed,
         a_rps,
         p50,
         p99,
@@ -251,11 +300,14 @@ fn main() {
         b_ok,
         b_shed,
         forced_shed,
+        b_failed,
         shed_rate,
         b_rps,
         server_admitted,
         server_shed,
+        worker_panics,
         quantiles_exported,
+        degraded,
     );
     std::fs::write("BENCH_serve.json", &json).expect("write BENCH_serve.json");
     println!("\nwrote BENCH_serve.json");

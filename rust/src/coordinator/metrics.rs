@@ -146,6 +146,15 @@ pub struct Metrics {
     compute_us_sum: u64,
     /// Batch size histogram indexed by size (0 unused).
     pub batch_sizes: Vec<u64>,
+    /// Requests answered with a failure because their batch panicked
+    /// (contained by the worker's `catch_unwind` → HTTP 500).
+    pub failed: u64,
+    /// Contained worker panics (one per panicking batch, however many
+    /// requests rode in it).
+    pub worker_panics: u64,
+    /// Requests shed *before* execution because their deadline had already
+    /// expired when a worker picked them up (→ HTTP 504).
+    pub deadline_shed: u64,
 }
 
 impl Metrics {
@@ -158,7 +167,22 @@ impl Metrics {
             latency: LatencyHistogram::new(),
             compute_us_sum: 0,
             batch_sizes: vec![0; 64],
+            failed: 0,
+            worker_panics: 0,
+            deadline_shed: 0,
         }
+    }
+
+    /// Account one contained batch panic that failed `failed_requests`
+    /// riders.
+    pub fn record_panic(&mut self, failed_requests: usize) {
+        self.worker_panics += 1;
+        self.failed += failed_requests as u64;
+    }
+
+    /// Account `n` requests shed pre-execution on an expired deadline.
+    pub fn record_deadline_shed(&mut self, n: usize) {
+        self.deadline_shed += n as u64;
     }
 
     pub fn record_latency(&mut self, latency: Duration) {
@@ -225,12 +249,16 @@ impl Metrics {
         for (a, b) in self.batch_sizes.iter_mut().zip(&other.batch_sizes) {
             *a += b;
         }
+        self.failed += other.failed;
+        self.worker_panics += other.worker_panics;
+        self.deadline_shed += other.deadline_shed;
     }
 
-    /// One-line human summary.
+    /// One-line human summary. Robustness counters are appended only when
+    /// nonzero, so the healthy-path line is unchanged.
     pub fn summary(&self) -> String {
         let (p50, p95, p99, mean) = self.latency_summary_us();
-        format!(
+        let mut line = format!(
             "[{}] {} reqs in {} batches (mean size {:.2}) | latency us p50={} p95={} p99={} p999={} mean={} | compute/batch={}us",
             self.engine,
             self.completed,
@@ -242,7 +270,14 @@ impl Metrics {
             self.latency.percentile_us(0.999),
             mean,
             self.mean_compute_us(),
-        )
+        );
+        if self.worker_panics > 0 || self.failed > 0 || self.deadline_shed > 0 {
+            line.push_str(&format!(
+                " | panics={} failed={} deadline_shed={}",
+                self.worker_panics, self.failed, self.deadline_shed
+            ));
+        }
+        line
     }
 
     /// Append this model's counters in Prometheus text exposition format,
@@ -267,6 +302,9 @@ impl Metrics {
         let _ = writeln!(out, "iaoi_latency_us_max{{model=\"{l}\"}} {}", self.latency.max_us());
         let _ = writeln!(out, "iaoi_latency_us_mean{{model=\"{l}\"}} {}", self.latency.mean_us());
         let _ = writeln!(out, "iaoi_latency_us_count{{model=\"{l}\"}} {}", self.latency.count());
+        let _ = writeln!(out, "iaoi_requests_failed_total{{model=\"{l}\"}} {}", self.failed);
+        let _ = writeln!(out, "iaoi_worker_panics_total{{model=\"{l}\"}} {}", self.worker_panics);
+        let _ = writeln!(out, "iaoi_deadline_shed_total{{model=\"{l}\"}} {}", self.deadline_shed);
     }
 }
 
@@ -392,6 +430,25 @@ mod tests {
         assert_eq!(a.mean_compute_us(), 20);
         assert_eq!(a.latency_histogram().count(), 3);
         assert_eq!(a.engine, "alpha", "merge keeps the receiver's label");
+    }
+
+    #[test]
+    fn robustness_counters_flow_through_merge_and_export() {
+        let mut a = Metrics::new("alpha");
+        a.record_panic(3);
+        a.record_deadline_shed(2);
+        let mut b = Metrics::new("beta");
+        b.record_panic(1);
+        a.merge(&b);
+        assert_eq!((a.worker_panics, a.failed, a.deadline_shed), (2, 4, 2));
+        let mut out = String::new();
+        a.prometheus_into("alpha", &mut out);
+        assert!(out.contains("iaoi_worker_panics_total{model=\"alpha\"} 2"));
+        assert!(out.contains("iaoi_requests_failed_total{model=\"alpha\"} 4"));
+        assert!(out.contains("iaoi_deadline_shed_total{model=\"alpha\"} 2"));
+        assert!(a.summary().contains("panics=2 failed=4 deadline_shed=2"));
+        // Healthy-path summary line is unchanged.
+        assert!(!Metrics::new("x").summary().contains("panics="));
     }
 
     #[test]

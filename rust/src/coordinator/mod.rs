@@ -30,12 +30,15 @@
 pub mod metrics;
 pub mod registry;
 
+use crate::graph::fault::FaultPlan;
 use crate::graph::{ExecState, FloatGraph, PreparedGraph, QGraph};
+use crate::sync::lock_recover;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
 use metrics::Metrics;
 use registry::ModelRegistry;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -106,11 +109,45 @@ impl WorkerEngine {
     }
 }
 
+/// How a request ended. Failure is a first-class outcome, not a dropped
+/// reply: a panicking batch still answers every rider (the serving front
+/// end maps `Failed` → HTTP 500, `Expired` → HTTP 504), so clients never
+/// hang on a fault.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Outcome {
+    /// Output logits.
+    Ok(Vec<f32>),
+    /// The batch executing this request panicked; the panic was contained
+    /// by the worker (`catch_unwind`) and the worker kept serving.
+    Failed,
+    /// The request's deadline had already expired when a worker picked it
+    /// up; it was shed *before* execution, burning no compute.
+    Expired,
+}
+
+impl Outcome {
+    /// The output logits, if the request succeeded.
+    pub fn ok(&self) -> Option<&[f32]> {
+        match self {
+            Outcome::Ok(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Outcome::Ok(_))
+    }
+}
+
 /// One inference request.
 struct Request {
     id: u64,
     image: Tensor<f32>,
     submitted: Instant,
+    /// Absolute completion deadline; a worker that picks this request up
+    /// past it sheds it pre-execution ([`Outcome::Expired`]). `None` = no
+    /// deadline (in-process callers that wait however long it takes).
+    deadline: Option<Instant>,
     reply: mpsc::Sender<Response>,
 }
 
@@ -118,11 +155,21 @@ struct Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    pub output: Vec<f32>,
+    pub outcome: Outcome,
     /// Queueing + batching + compute latency, end to end.
     pub latency: Duration,
-    /// Size of the batch this request rode in (observability).
+    /// Size of the batch this request rode in (observability; 0 for
+    /// requests shed before joining a batch execution).
     pub batch_size: usize,
+}
+
+impl Response {
+    /// The output logits; panics unless the request succeeded (the
+    /// closed-loop convenience for tests and examples — network-facing
+    /// code matches on [`Self::outcome`] instead).
+    pub fn output(&self) -> &[f32] {
+        self.outcome.ok().expect("request did not succeed")
+    }
 }
 
 /// Dynamic batching policy.
@@ -225,11 +272,22 @@ pub struct Client {
 impl Client {
     /// Submit one image; returns a receiver for the response.
     pub fn submit(&self, image: Tensor<f32>) -> Result<(u64, mpsc::Receiver<Response>)> {
+        self.submit_with_deadline(image, None)
+    }
+
+    /// [`Self::submit`] with an absolute completion deadline: if a worker
+    /// picks the request up past `deadline`, it is shed pre-execution and
+    /// answered [`Outcome::Expired`].
+    pub fn submit_with_deadline(
+        &self,
+        image: Tensor<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<(u64, mpsc::Receiver<Response>)> {
         let (reply_tx, reply_rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let guard = self.tx.lock().expect("client sender poisoned");
+        let guard = lock_recover(&self.tx);
         let tx = guard.as_ref().ok_or_else(|| anyhow!("coordinator is shut down"))?;
-        tx.send(Request { id, image, submitted: Instant::now(), reply: reply_tx })
+        tx.send(Request { id, image, submitted: Instant::now(), deadline, reply: reply_tx })
             .map_err(|_| anyhow!("coordinator is shut down"))?;
         Ok((id, reply_rx))
     }
@@ -259,8 +317,16 @@ impl Coordinator {
         let metrics = Arc::new(Mutex::new(Metrics::new(engine.label())));
         // Pack-once: build the prepared plan at startup, shared read-only by
         // every worker; each worker owns its ExecState across batches.
+        // IAOI_FAULT without a model filter also applies here, so the
+        // single-model pipeline is chaos-testable end to end.
         let plan: Option<Arc<PreparedGraph>> = match &engine {
-            EngineKind::Quant(g) => Some(Arc::new(g.prepare())),
+            EngineKind::Quant(g) => {
+                let mut p = g.prepare();
+                if let Some(f) = FaultPlan::from_env().filter(|f| f.model.is_none()) {
+                    p.set_fault(f);
+                }
+                Some(Arc::new(p))
+            }
             EngineKind::Float(_) => None,
         };
         // One persistent intra-op pool shared by every batch worker; only
@@ -298,41 +364,99 @@ impl Coordinator {
         });
 
         // Workers: execute batches, reply per request, record metrics.
+        // Execution is fault-contained: expired requests are shed before
+        // the engine runs, and a panicking batch is caught so every rider
+        // still gets a (failed) reply and the worker keeps serving.
         let mut worker_handles = Vec::with_capacity(workers);
         for _ in 0..workers {
-            let mut worker_engine = WorkerEngine::from_engine(&engine, &plan, &intra_pool);
+            let engine = engine.clone();
+            let plan = plan.clone();
+            let intra_pool = intra_pool.clone();
             let batch_rx = Arc::clone(&batch_rx);
             let metrics = Arc::clone(&metrics);
-            worker_handles.push(std::thread::spawn(move || loop {
-                let batch = {
-                    let guard = batch_rx.lock().expect("batch queue poisoned");
-                    guard.recv()
-                };
-                let Ok(batch) = batch else { return };
-                let size = batch.len();
-                // Stack images into one NHWC tensor.
-                let mut shape = batch[0].image.shape().to_vec();
-                shape[0] = size;
-                let per = batch[0].image.len();
-                let mut stacked = vec![0f32; per * size];
-                for (i, r) in batch.iter().enumerate() {
-                    stacked[i * per..(i + 1) * per].copy_from_slice(r.image.data());
-                }
-                let compute_start = Instant::now();
-                let rows = worker_engine.run_batch(&Tensor::from_vec(&shape, stacked));
-                let compute = compute_start.elapsed();
-                let now = Instant::now();
-                {
-                    let mut m = metrics.lock().expect("metrics poisoned");
-                    m.record_batch(size, compute);
-                    for r in &batch {
-                        m.record_latency(now - r.submitted);
+            worker_handles.push(std::thread::spawn(move || {
+                let mut worker_engine = WorkerEngine::from_engine(&engine, &plan, &intra_pool);
+                loop {
+                    let batch = {
+                        let guard = lock_recover(&batch_rx);
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { return };
+                    // Deadline shed, pre-execution: answers nobody is
+                    // waiting for anymore must not burn engine time.
+                    let now = Instant::now();
+                    let (batch, expired): (Vec<Request>, Vec<Request>) =
+                        batch.into_iter().partition(|r| r.deadline.is_none_or(|d| now < d));
+                    if !expired.is_empty() {
+                        lock_recover(&metrics).record_deadline_shed(expired.len());
+                        for r in expired {
+                            let _ = r.reply.send(Response {
+                                id: r.id,
+                                outcome: Outcome::Expired,
+                                latency: now - r.submitted,
+                                batch_size: 0,
+                            });
+                        }
                     }
-                }
-                for (r, output) in batch.into_iter().zip(rows) {
-                    let latency = now - r.submitted;
-                    // Receiver may have gone away; dropping is fine.
-                    let _ = r.reply.send(Response { id: r.id, output, latency, batch_size: size });
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    let size = batch.len();
+                    // Stack images into one NHWC tensor.
+                    let mut shape = batch[0].image.shape().to_vec();
+                    shape[0] = size;
+                    let per = batch[0].image.len();
+                    let mut stacked = vec![0f32; per * size];
+                    for (i, r) in batch.iter().enumerate() {
+                        stacked[i * per..(i + 1) * per].copy_from_slice(r.image.data());
+                    }
+                    let compute_start = Instant::now();
+                    // Containment boundary: the worker owns its engine
+                    // state, so unwinding cannot leave anyone else holding
+                    // a broken invariant (AssertUnwindSafe is sound here —
+                    // the state is rebuilt below before reuse).
+                    let result = catch_unwind(AssertUnwindSafe(|| {
+                        worker_engine.run_batch(&Tensor::from_vec(&shape, stacked))
+                    }));
+                    let compute = compute_start.elapsed();
+                    let now = Instant::now();
+                    match result {
+                        Ok(rows) => {
+                            {
+                                let mut m = lock_recover(&metrics);
+                                m.record_batch(size, compute);
+                                for r in &batch {
+                                    m.record_latency(now - r.submitted);
+                                }
+                            }
+                            for (r, output) in batch.into_iter().zip(rows) {
+                                let latency = now - r.submitted;
+                                // Receiver may have gone away; dropping is fine.
+                                let _ = r.reply.send(Response {
+                                    id: r.id,
+                                    outcome: Outcome::Ok(output),
+                                    latency,
+                                    batch_size: size,
+                                });
+                            }
+                        }
+                        Err(_) => {
+                            lock_recover(&metrics).record_panic(size);
+                            for r in batch {
+                                let _ = r.reply.send(Response {
+                                    id: r.id,
+                                    outcome: Outcome::Failed,
+                                    latency: now - r.submitted,
+                                    batch_size: size,
+                                });
+                            }
+                            // The unwound run may have left scratch/output
+                            // slots half-written; rebuild the engine state
+                            // before the next batch.
+                            worker_engine =
+                                WorkerEngine::from_engine(&engine, &plan, &intra_pool);
+                        }
+                    }
                 }
             }));
         }
@@ -355,7 +479,7 @@ impl Coordinator {
 
     /// Snapshot of the metrics so far.
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().expect("metrics poisoned").clone()
+        lock_recover(&self.metrics).clone()
     }
 
     /// Drain and stop: all already-submitted requests complete first.
@@ -363,7 +487,7 @@ impl Coordinator {
         // Revoke the sender (this also disarms every Client clone); the
         // batcher sees the disconnect and drains, whose sender-drop ends
         // the workers.
-        self.client.tx.lock().expect("client sender poisoned").take();
+        lock_recover(&self.client.tx).take();
         drop(self.client);
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
@@ -371,7 +495,7 @@ impl Coordinator {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        self.metrics.lock().expect("metrics poisoned").clone()
+        lock_recover(&self.metrics).clone()
     }
 }
 
@@ -386,6 +510,8 @@ struct RoutedRequest {
     positions: usize,
     image: Tensor<f32>,
     submitted: Instant,
+    /// Absolute completion deadline (see [`Request::deadline`]).
+    deadline: Option<Instant>,
     reply: mpsc::Sender<RoutedResponse>,
 }
 
@@ -395,11 +521,20 @@ struct RoutedRequest {
 pub struct RoutedResponse {
     pub id: u64,
     pub model: String,
-    /// Registry version of the entry that executed the batch.
+    /// Registry version of the entry that executed (or, for failed/expired
+    /// requests, would have executed) the batch.
     pub version: u32,
-    pub output: Vec<f32>,
+    pub outcome: Outcome,
     pub latency: Duration,
     pub batch_size: usize,
+}
+
+impl RoutedResponse {
+    /// The output logits; panics unless the request succeeded (closed-loop
+    /// convenience — network-facing code matches on [`Self::outcome`]).
+    pub fn output(&self) -> &[f32] {
+        self.outcome.ok().expect("request did not succeed")
+    }
 }
 
 /// Cloneable submission handle for the multi-model coordinator.
@@ -419,6 +554,18 @@ impl RoutedClient {
         model: &str,
         image: Tensor<f32>,
     ) -> Result<(u64, mpsc::Receiver<RoutedResponse>)> {
+        self.submit_with_deadline(model, image, None)
+    }
+
+    /// [`Self::submit`] with an absolute completion deadline: a worker
+    /// that picks the request up past it sheds it pre-execution and
+    /// answers [`Outcome::Expired`].
+    pub fn submit_with_deadline(
+        &self,
+        model: &str,
+        image: Tensor<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<(u64, mpsc::Receiver<RoutedResponse>)> {
         let entry = self.registry.resolve(model)?;
         let want = entry.batched_shape(1);
         if image.shape() != &want[..] {
@@ -429,7 +576,7 @@ impl RoutedClient {
         }
         let (reply_tx, reply_rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let guard = self.tx.lock().expect("client sender poisoned");
+        let guard = lock_recover(&self.tx);
         let tx = guard.as_ref().ok_or_else(|| anyhow!("coordinator is shut down"))?;
         tx.send(RoutedRequest {
             id,
@@ -437,6 +584,7 @@ impl RoutedClient {
             positions: entry.positions_hint,
             image,
             submitted: Instant::now(),
+            deadline,
             reply: reply_tx,
         })
         .map_err(|_| anyhow!("coordinator is shut down"))?;
@@ -446,6 +594,17 @@ impl RoutedClient {
     /// Submit and wait (closed-loop convenience).
     pub fn infer(&self, model: &str, image: Tensor<f32>) -> Result<RoutedResponse> {
         let (_, rx) = self.submit(model, image)?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))
+    }
+
+    /// [`Self::infer`] under a deadline.
+    pub fn infer_with_deadline(
+        &self,
+        model: &str,
+        image: Tensor<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<RoutedResponse> {
+        let (_, rx) = self.submit_with_deadline(model, image, deadline)?;
         rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))
     }
 }
@@ -558,63 +717,150 @@ impl MultiCoordinator {
             let batch_rx = Arc::clone(&batch_rx);
             let metrics = Arc::clone(&metrics);
             let registry = registry.clone();
-            let mut state = ExecState::new();
-            if let Some(pool) = &intra_pool {
-                // Every resident (and future hot-swapped) model's large
-                // GEMMs share this one pool through the worker's state.
-                state.set_intra(crate::gemm::IntraOp::pool(
-                    Arc::clone(pool),
-                    crate::gemm::pool::DEFAULT_MIN_N,
-                ));
-            }
-            worker_handles.push(std::thread::spawn(move || loop {
-                let batch = {
-                    let guard = batch_rx.lock().expect("batch queue poisoned");
-                    guard.recv()
-                };
-                let Ok(batch) = batch else { return };
-                let size = batch.len();
-                let model_name = batch[0].model.clone();
-                debug_assert!(
-                    batch.iter().all(|r| r.model == model_name),
-                    "batcher must never mix models in one batch"
-                );
-                // A model can only disappear if a future registry grows a
-                // remove(); guard anyway so workers never panic.
-                let Some(entry) = registry.get(&model_name) else { continue };
+            let intra_pool = intra_pool.clone();
+            let new_state = move |pool: &Option<Arc<crate::gemm::WorkerPool>>| {
+                let mut state = ExecState::new();
+                if let Some(pool) = pool {
+                    // Every resident (and future hot-swapped) model's large
+                    // GEMMs share this one pool through the worker's state.
+                    state.set_intra(crate::gemm::IntraOp::pool(
+                        Arc::clone(pool),
+                        crate::gemm::pool::DEFAULT_MIN_N,
+                    ));
+                }
+                state
+            };
+            worker_handles.push(std::thread::spawn(move || {
+                let mut state = new_state(&intra_pool);
+                loop {
+                    let batch = {
+                        let guard = lock_recover(&batch_rx);
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { return };
+                    let model_name = batch[0].model.clone();
+                    debug_assert!(
+                        batch.iter().all(|r| r.model == model_name),
+                        "batcher must never mix models in one batch"
+                    );
+                    // A model can only disappear if a future registry grows
+                    // a remove(); guard anyway so workers never panic.
+                    let Some(entry) = registry.get(&model_name) else { continue };
 
-                let mut shape = batch[0].image.shape().to_vec();
-                shape[0] = size;
-                let per = batch[0].image.len();
-                let mut stacked = vec![0f32; per * size];
-                for (i, r) in batch.iter().enumerate() {
-                    stacked[i * per..(i + 1) * per].copy_from_slice(r.image.data());
-                }
-                let compute_start = Instant::now();
-                let out = entry.plan.run(&Tensor::from_vec(&shape, stacked), &mut state);
-                let rows = split_rows(&out, size);
-                let compute = compute_start.elapsed();
-                let now = Instant::now();
-                {
-                    let mut m = metrics.lock().expect("metrics poisoned");
-                    let m = m
-                        .entry(model_name.clone())
-                        .or_insert_with(|| Metrics::new(model_name.clone()));
-                    m.record_batch(size, compute);
-                    for r in &batch {
-                        m.record_latency(now - r.submitted);
+                    // Deadline shed, pre-execution.
+                    let now = Instant::now();
+                    let (batch, expired): (Vec<RoutedRequest>, Vec<RoutedRequest>) =
+                        batch.into_iter().partition(|r| r.deadline.is_none_or(|d| now < d));
+                    if !expired.is_empty() {
+                        lock_recover(&metrics)
+                            .entry(model_name.clone())
+                            .or_insert_with(|| Metrics::new(model_name.clone()))
+                            .record_deadline_shed(expired.len());
+                        for r in expired {
+                            let _ = r.reply.send(RoutedResponse {
+                                id: r.id,
+                                model: r.model,
+                                version: entry.version,
+                                outcome: Outcome::Expired,
+                                latency: now - r.submitted,
+                                batch_size: 0,
+                            });
+                        }
                     }
-                }
-                for (r, output) in batch.into_iter().zip(rows) {
-                    let latency = now - r.submitted;
-                    let _ = r.reply.send(RoutedResponse {
-                        id: r.id,
-                        model: r.model,
-                        version: entry.version,
-                        output,
-                        latency,
-                        batch_size: size,
-                    });
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    let size = batch.len();
+
+                    // Quarantined models are fenced at admission (the front
+                    // end answers 503 without enqueueing), but requests
+                    // already queued when the breaker tripped land here:
+                    // fail them without executing, so a quarantined model
+                    // burns no further compute and cannot panic again.
+                    if registry.is_quarantined(&model_name) {
+                        {
+                            let mut m = lock_recover(&metrics);
+                            m.entry(model_name.clone())
+                                .or_insert_with(|| Metrics::new(model_name.clone()))
+                                .failed += size as u64;
+                        }
+                        for r in batch {
+                            let _ = r.reply.send(RoutedResponse {
+                                id: r.id,
+                                model: r.model,
+                                version: entry.version,
+                                outcome: Outcome::Failed,
+                                latency: now - r.submitted,
+                                batch_size: 0,
+                            });
+                        }
+                        continue;
+                    }
+
+                    let mut shape = batch[0].image.shape().to_vec();
+                    shape[0] = size;
+                    let per = batch[0].image.len();
+                    let mut stacked = vec![0f32; per * size];
+                    for (i, r) in batch.iter().enumerate() {
+                        stacked[i * per..(i + 1) * per].copy_from_slice(r.image.data());
+                    }
+                    let compute_start = Instant::now();
+                    // Containment boundary: state is worker-owned and
+                    // rebuilt below on unwind, so AssertUnwindSafe is sound.
+                    let result = catch_unwind(AssertUnwindSafe(|| {
+                        let out = entry.plan.run(&Tensor::from_vec(&shape, stacked), &mut state);
+                        split_rows(&out, size)
+                    }));
+                    let compute = compute_start.elapsed();
+                    let now = Instant::now();
+                    match result {
+                        Ok(rows) => {
+                            {
+                                let mut m = lock_recover(&metrics);
+                                let m = m
+                                    .entry(model_name.clone())
+                                    .or_insert_with(|| Metrics::new(model_name.clone()));
+                                m.record_batch(size, compute);
+                                for r in &batch {
+                                    m.record_latency(now - r.submitted);
+                                }
+                            }
+                            for (r, output) in batch.into_iter().zip(rows) {
+                                let latency = now - r.submitted;
+                                let _ = r.reply.send(RoutedResponse {
+                                    id: r.id,
+                                    model: r.model,
+                                    version: entry.version,
+                                    outcome: Outcome::Ok(output),
+                                    latency,
+                                    batch_size: size,
+                                });
+                            }
+                        }
+                        Err(_) => {
+                            // Feed the circuit breaker *before* replying,
+                            // so a client that just saw the K-th failure
+                            // deterministically finds the model quarantined.
+                            registry.record_panic(&model_name);
+                            lock_recover(&metrics)
+                                .entry(model_name.clone())
+                                .or_insert_with(|| Metrics::new(model_name.clone()))
+                                .record_panic(size);
+                            for r in batch {
+                                let _ = r.reply.send(RoutedResponse {
+                                    id: r.id,
+                                    model: r.model,
+                                    version: entry.version,
+                                    outcome: Outcome::Failed,
+                                    latency: now - r.submitted,
+                                    batch_size: size,
+                                });
+                            }
+                            // The unwound run may have left the scratch
+                            // arena half-written; rebuild it.
+                            state = new_state(&intra_pool);
+                        }
+                    }
                 }
             }));
         }
@@ -644,7 +890,7 @@ impl MultiCoordinator {
 
     /// Snapshot of per-model metrics, sorted by model name.
     pub fn metrics(&self) -> Vec<Metrics> {
-        let guard = self.metrics.lock().expect("metrics poisoned");
+        let guard = lock_recover(&self.metrics);
         let mut out: Vec<Metrics> = guard.values().cloned().collect();
         out.sort_by(|a, b| a.engine.cmp(&b.engine));
         out
@@ -662,7 +908,7 @@ impl MultiCoordinator {
     pub fn shutdown(mut self) -> Vec<Metrics> {
         // Taking the sender disarms every RoutedClient clone (they share the
         // Option) and disconnects the batcher, which drains and exits.
-        self.client.tx.lock().expect("client sender poisoned").take();
+        lock_recover(&self.client.tx).take();
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
         }
@@ -716,7 +962,7 @@ mod tests {
                 let resp = rx.recv().expect("response");
                 assert_eq!(resp.id, id);
                 assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
-                assert_eq!(resp.output.len(), 4);
+                assert_eq!(resp.output().len(), 4);
                 id
             })
             .collect();
@@ -794,7 +1040,7 @@ mod tests {
         let imgs: Vec<Tensor<f32>> = (0..6).map(|i| image(40 + i)).collect();
         let serial = Coordinator::start(eng.clone(), BatchPolicy::default(), 1);
         let want: Vec<Vec<f32>> =
-            imgs.iter().map(|x| serial.client().infer(x.clone()).unwrap().output).collect();
+            imgs.iter().map(|x| serial.client().infer(x.clone()).unwrap().output().to_vec()).collect();
         serial.shutdown();
 
         let policy = BatchPolicy { intra_threads: 3, ..Default::default() };
@@ -804,7 +1050,7 @@ mod tests {
         for ((id, rx), want) in pending.into_iter().zip(&want) {
             let resp = rx.recv().expect("response");
             assert_eq!(resp.id, id);
-            assert_eq!(&resp.output, want, "pooled output diverged");
+            assert_eq!(resp.output(), want.as_slice(), "pooled output diverged");
         }
         let m = coord.shutdown();
         assert_eq!(m.completed, 6);
@@ -831,7 +1077,7 @@ mod tests {
             1,
         );
         let resp = coord.client().infer(image(1)).unwrap();
-        assert_eq!(resp.output.len(), 4);
+        assert_eq!(resp.output().len(), 4);
         coord.shutdown();
     }
 }

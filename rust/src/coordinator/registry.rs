@@ -8,14 +8,27 @@
 //! partial state. Workers snapshot an `Arc<ModelEntry>` when they pick up a
 //! batch, so requests already in flight finish on the model they were
 //! batched against and nothing is dropped mid-swap.
+//!
+//! The registry also hosts the per-model **circuit breaker**
+//! ([`QuarantineConfig`]): coordinator workers report contained batch
+//! panics here, and once a model accumulates the configured number of
+//! panics inside the sliding window it is *quarantined* — the serving
+//! front end refuses its traffic with 503 `{"error":"quarantined"}` and
+//! workers stop executing its batches, so one faulty artifact cannot keep
+//! burning compute or poisoning latency for its neighbours. A successful
+//! [`ModelRegistry::swap`] (the operator shipping a fixed artifact) or an
+//! explicit [`ModelRegistry::reset_quarantine`] re-admits the model.
 
+use crate::graph::fault::FaultPlan;
 use crate::graph::{PreparedGraph, QGraph};
 use crate::model_format::{self, LoadMode, ModelArtifact};
+use crate::sync::{lock_recover, read_recover, write_recover};
 use crate::tensor::ArtifactBytes;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 /// One resident model: immutable once registered (swaps replace the whole
 /// entry).
@@ -59,10 +72,47 @@ impl ModelEntry {
     }
 }
 
+/// Circuit-breaker policy: `threshold` contained panics within `window`
+/// quarantine a model. `threshold == 0` disables quarantine entirely
+/// (panics are still counted and exported).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuarantineConfig {
+    pub threshold: u32,
+    pub window: Duration,
+}
+
+impl Default for QuarantineConfig {
+    fn default() -> Self {
+        // Three strikes in 30s: tight enough that a deterministically
+        // crashing artifact is fenced within its first few batches, loose
+        // enough that an isolated cosmic-ray panic doesn't take a healthy
+        // model out of rotation.
+        Self { threshold: 3, window: Duration::from_secs(30) }
+    }
+}
+
+/// Per-model breaker bookkeeping.
+#[derive(Debug, Default)]
+struct BreakerEntry {
+    /// Panic timestamps inside the sliding window (cleared on trip/reset).
+    recent: VecDeque<Instant>,
+    /// Lifetime panic count — survives quarantine resets and swaps, so
+    /// `/healthz` keeps the model's full history visible.
+    total: u64,
+    quarantined: bool,
+}
+
+#[derive(Debug, Default)]
+struct Breaker {
+    cfg: QuarantineConfig,
+    models: HashMap<String, BreakerEntry>,
+}
+
 /// Cloneable handle to the shared name → model table.
 #[derive(Clone, Default)]
 pub struct ModelRegistry {
     inner: Arc<RwLock<HashMap<String, Arc<ModelEntry>>>>,
+    breaker: Arc<Mutex<Breaker>>,
 }
 
 impl ModelRegistry {
@@ -104,11 +154,25 @@ impl ModelRegistry {
         Ok(registry)
     }
 
-    fn make_entry(artifact: ModelArtifact, source: PathBuf) -> Arc<ModelEntry> {
+    fn make_entry(
+        artifact: ModelArtifact,
+        source: PathBuf,
+        fault: Option<FaultPlan>,
+    ) -> Arc<ModelEntry> {
         // Pack-once: decode → prepare (and the geometry probe for the
         // batching hint) happen here, off the request path; a hot-swap
         // pays them before the new entry becomes visible.
-        let plan = Arc::new(artifact.graph.prepare());
+        let mut plan = artifact.graph.prepare();
+        // Fault injection: an explicit plan (chaos tests/benches) wins;
+        // otherwise IAOI_FAULT applies to every matching model installed
+        // from here on — including swapped-in replacements, so the CI
+        // fault smoke keeps injecting across the model's whole lifecycle.
+        let fault = fault
+            .or_else(|| FaultPlan::from_env().filter(|f| f.applies_to(&artifact.name)));
+        if let Some(f) = fault {
+            plan.set_fault(f);
+        }
+        let plan = Arc::new(plan);
         let positions_hint = artifact.graph.dominant_positions(artifact.input_shape);
         Arc::new(ModelEntry {
             name: artifact.name.clone(),
@@ -124,11 +188,21 @@ impl ModelRegistry {
 
     /// Register (or replace) a model from an in-memory artifact.
     pub fn install(&self, artifact: ModelArtifact, source: PathBuf) -> Arc<ModelEntry> {
-        let entry = Self::make_entry(artifact, source);
-        self.inner
-            .write()
-            .expect("registry poisoned")
-            .insert(entry.name.clone(), Arc::clone(&entry));
+        self.install_with(artifact, source, None)
+    }
+
+    /// [`Self::install`] with an explicit [`FaultPlan`] on the prepared
+    /// plan — the deterministic handle the chaos tests and the
+    /// degraded-mode bench phase use (env-driven injection is global and
+    /// racy across parallel tests; this is not).
+    pub fn install_with(
+        &self,
+        artifact: ModelArtifact,
+        source: PathBuf,
+        fault: Option<FaultPlan>,
+    ) -> Arc<ModelEntry> {
+        let entry = Self::make_entry(artifact, source, fault);
+        write_recover(&self.inner).insert(entry.name.clone(), Arc::clone(&entry));
         entry
     }
 
@@ -172,26 +246,31 @@ impl ModelRegistry {
             );
         }
         let new_version = artifact.version;
-        let entry = Self::make_entry(artifact, path.to_path_buf());
-        let mut table = self.inner.write().expect("registry poisoned");
-        if let Some(existing) = table.get(name) {
-            if existing.input_shape != entry.input_shape {
-                bail!(
-                    "refusing to hot-swap {name:?}: input shape {:?} -> {:?} would break \
-                     requests validated against the resident model; register the new \
-                     geometry under a new model name instead",
-                    existing.input_shape,
-                    entry.input_shape
-                );
+        let entry = Self::make_entry(artifact, path.to_path_buf(), None);
+        let previous = {
+            let mut table = write_recover(&self.inner);
+            if let Some(existing) = table.get(name) {
+                if existing.input_shape != entry.input_shape {
+                    bail!(
+                        "refusing to hot-swap {name:?}: input shape {:?} -> {:?} would break \
+                         requests validated against the resident model; register the new \
+                         geometry under a new model name instead",
+                        existing.input_shape,
+                        entry.input_shape
+                    );
+                }
             }
-        }
-        let previous = table.insert(name.to_string(), entry).map(|old| old.version);
+            table.insert(name.to_string(), entry).map(|old| old.version)
+        };
+        // A successful swap is the operator's "fixed artifact shipped"
+        // signal: re-admit the model (lifetime panic count is kept).
+        self.reset_quarantine(name);
         Ok((previous, new_version))
     }
 
     /// Snapshot the current entry for `name`.
     pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
-        self.inner.read().expect("registry poisoned").get(name).cloned()
+        read_recover(&self.inner).get(name).cloned()
     }
 
     /// Like [`Self::get`] but with a routing-flavoured error.
@@ -203,18 +282,74 @@ impl ModelRegistry {
 
     /// Registered model names, sorted.
     pub fn names(&self) -> Vec<String> {
-        let mut names: Vec<String> =
-            self.inner.read().expect("registry poisoned").keys().cloned().collect();
+        let mut names: Vec<String> = read_recover(&self.inner).keys().cloned().collect();
         names.sort();
         names
     }
 
     pub fn len(&self) -> usize {
-        self.inner.read().expect("registry poisoned").len()
+        read_recover(&self.inner).len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    // --- Circuit breaker ---------------------------------------------------
+
+    /// Set the quarantine policy (applies to panics recorded from now on).
+    pub fn set_quarantine(&self, cfg: QuarantineConfig) {
+        lock_recover(&self.breaker).cfg = cfg;
+    }
+
+    pub fn quarantine_config(&self) -> QuarantineConfig {
+        lock_recover(&self.breaker).cfg
+    }
+
+    /// Record one contained batch panic for `name`; returns whether the
+    /// model is quarantined after this record. Trips the breaker at
+    /// *exactly* `threshold` panics inside the sliding window.
+    pub fn record_panic(&self, name: &str) -> bool {
+        let mut b = lock_recover(&self.breaker);
+        let cfg = b.cfg;
+        let e = b.models.entry(name.to_string()).or_default();
+        e.total += 1;
+        if cfg.threshold == 0 {
+            return false;
+        }
+        if e.quarantined {
+            return true;
+        }
+        let now = Instant::now();
+        e.recent.push_back(now);
+        while e.recent.front().is_some_and(|&t| now.duration_since(t) > cfg.window) {
+            e.recent.pop_front();
+        }
+        if e.recent.len() >= cfg.threshold as usize {
+            e.quarantined = true;
+            e.recent.clear();
+        }
+        e.quarantined
+    }
+
+    /// Whether `name` is currently fenced off by the breaker.
+    pub fn is_quarantined(&self, name: &str) -> bool {
+        lock_recover(&self.breaker).models.get(name).is_some_and(|e| e.quarantined)
+    }
+
+    /// Lifetime contained-panic count for `name` (survives resets/swaps).
+    pub fn panic_count(&self, name: &str) -> u64 {
+        lock_recover(&self.breaker).models.get(name).map_or(0, |e| e.total)
+    }
+
+    /// Re-admit `name`: clears the quarantine flag and the sliding window
+    /// (the lifetime panic count is kept). Called automatically by a
+    /// successful [`Self::swap`].
+    pub fn reset_quarantine(&self, name: &str) {
+        if let Some(e) = lock_recover(&self.breaker).models.get_mut(name) {
+            e.quarantined = false;
+            e.recent.clear();
+        }
     }
 }
 
@@ -387,5 +522,70 @@ mod tests {
     fn empty_dir_is_an_error() {
         let dir = tmpdir("empty");
         assert!(ModelRegistry::load_dir(&dir).is_err());
+    }
+
+    #[test]
+    fn quarantine_trips_at_exactly_threshold_and_swap_readmits() {
+        let dir = tmpdir("quarantine");
+        let v2 = dir.join("m_v2.iaoiq");
+        model_format::write_file(&v2, &artifact("m", 2, 31)).unwrap();
+        let reg = ModelRegistry::new();
+        reg.install(artifact("m", 1, 30), PathBuf::new());
+        reg.set_quarantine(QuarantineConfig { threshold: 3, window: Duration::from_secs(60) });
+
+        assert!(!reg.record_panic("m"), "1 panic: below threshold");
+        assert!(!reg.record_panic("m"), "2 panics: below threshold");
+        assert!(!reg.is_quarantined("m"));
+        assert!(reg.record_panic("m"), "3rd panic must trip the breaker");
+        assert!(reg.is_quarantined("m"));
+        assert_eq!(reg.panic_count("m"), 3);
+        // Panics while quarantined keep counting but stay tripped.
+        assert!(reg.record_panic("m"));
+        assert_eq!(reg.panic_count("m"), 4);
+
+        // A successful swap re-admits the model and keeps the history.
+        reg.swap("m", &v2).unwrap();
+        assert!(!reg.is_quarantined("m"));
+        assert_eq!(reg.panic_count("m"), 4, "lifetime count survives the swap");
+        // Post-swap it takes a full fresh window of panics to re-trip.
+        assert!(!reg.record_panic("m"));
+        assert!(!reg.record_panic("m"));
+        assert!(reg.record_panic("m"));
+    }
+
+    #[test]
+    fn quarantine_disabled_and_unknown_models() {
+        let reg = ModelRegistry::new();
+        reg.set_quarantine(QuarantineConfig { threshold: 0, window: Duration::from_secs(1) });
+        for _ in 0..10 {
+            assert!(!reg.record_panic("m"), "threshold 0 must never quarantine");
+        }
+        assert!(!reg.is_quarantined("m"));
+        assert_eq!(reg.panic_count("m"), 10, "panics are still counted");
+        assert!(!reg.is_quarantined("never-seen"));
+        assert_eq!(reg.panic_count("never-seen"), 0);
+        reg.reset_quarantine("never-seen"); // no-op, must not panic
+    }
+
+    #[test]
+    fn install_with_fault_plan_makes_the_plan_panic_on_cue() {
+        use crate::graph::ExecState;
+        let reg = ModelRegistry::new();
+        let entry = reg.install_with(
+            artifact("m", 1, 33),
+            PathBuf::new(),
+            Some(FaultPlan { panic_on_run: 2, ..Default::default() }),
+        );
+        let x = Tensor::zeros(&[1, 16, 16, 3]);
+        let mut state = ExecState::new();
+        let _ = entry.plan.run(&x, &mut state); // run 1: clean
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut state = ExecState::new();
+            entry.plan.run(&x, &mut state)
+        }));
+        assert!(hit.is_err(), "run 2 must hit the injected panic");
+        assert_eq!(entry.plan.fault_state().unwrap().runs(), 2);
+        let mut state = ExecState::new();
+        let _ = entry.plan.run(&x, &mut state); // run 3: clean again
     }
 }

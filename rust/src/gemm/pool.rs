@@ -35,6 +35,7 @@
 
 use super::parallel::run_strips_scoped;
 use super::prepared::{PreparedGemm, Scratch};
+use crate::sync::lock_recover;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 /// Default per-layer threshold on `N = batch·OH·OW` below which a GEMM is
@@ -62,11 +63,11 @@ impl Latch {
     }
 
     fn add_job(&self) {
-        self.state.lock().expect("latch poisoned").0 += 1;
+        lock_recover(&self.state).0 += 1;
     }
 
     fn complete(&self, panicked: bool) {
-        let mut s = self.state.lock().expect("latch poisoned");
+        let mut s = lock_recover(&self.state);
         s.0 -= 1;
         s.1 += usize::from(panicked);
         if s.0 == 0 {
@@ -78,9 +79,11 @@ impl Latch {
     /// Only meaningful once the dispatching thread has stopped adding jobs
     /// (which is the only call pattern in [`WorkerPool::run_strips`]).
     fn wait(&self) -> usize {
-        let mut s = self.state.lock().expect("latch poisoned");
+        // The guarded pair is a pair of counters, valid at every store, so
+        // recovering a poisoned guard is sound (see `crate::sync`).
+        let mut s = lock_recover(&self.state);
         while s.0 > 0 {
-            s = self.cv.wait(s).expect("latch poisoned");
+            s = self.cv.wait(s).unwrap_or_else(|p| p.into_inner());
         }
         s.1
     }
@@ -128,7 +131,7 @@ impl WorkerPool {
                     let mut scratch = Scratch::new();
                     loop {
                         let job = {
-                            let guard = rx.lock().expect("pool queue poisoned");
+                            let guard = lock_recover(&rx);
                             guard.recv()
                         };
                         let Ok(Job { work, latch }) = job else { return };

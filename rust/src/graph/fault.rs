@@ -1,0 +1,204 @@
+//! Deterministic fault injection for prepared-graph execution.
+//!
+//! A [`FaultPlan`] installed on a [`super::PreparedGraph`] (via
+//! [`super::PreparedGraph::set_fault`] or the `IAOI_FAULT` environment
+//! variable, applied at registry install time) makes the plan panic on a
+//! chosen run, panic periodically, or sleep before runs/nodes. The serving
+//! layer's containment (`catch_unwind` in the coordinator workers, the
+//! per-model circuit breaker) is driven by exactly these injected faults
+//! in the chaos tests and the degraded-mode loadgen phase, so the failure
+//! paths are exercised deterministically rather than waited for.
+//!
+//! Injected panics *are* the injected errors: the coordinator converts a
+//! contained panic into a structured per-request failure (HTTP 500), which
+//! is the only error channel a prepared graph has.
+//!
+//! `IAOI_FAULT` grammar — comma-separated `key=value` pairs:
+//!
+//! | key              | meaning                                          |
+//! |------------------|--------------------------------------------------|
+//! | `panic-on-batch` | panic on exactly the N-th run (1-based)          |
+//! | `panic-every`    | panic on every N-th run (`error-every` is an alias) |
+//! | `error-on-batch` | alias of `panic-on-batch`                        |
+//! | `delay-ms`       | sleep this long at the start of every run        |
+//! | `node-delay-us`  | sleep this long before every node                |
+//! | `model`          | only inject into plans for this model name       |
+//!
+//! Everything is std-only and zero-cost when no plan is installed (the
+//! hook is a single `Option` check).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// What to inject. `Default` is a no-op plan.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Panic when the plan's run counter reaches exactly this value
+    /// (1-based); 0 = never.
+    pub panic_on_run: u64,
+    /// Panic on every run whose 1-based index is a multiple of this;
+    /// 0 = never.
+    pub panic_every: u64,
+    /// Sleep this long at the start of every run (simulates a degraded
+    /// backend; used by the deadline-shed tests to hold a worker busy).
+    pub run_delay: Duration,
+    /// Sleep this long before every node (per-node slowdown).
+    pub node_delay: Duration,
+    /// Restrict env-driven injection to this model name (`None` = all
+    /// models). Plans installed explicitly via builder ignore this.
+    pub model: Option<String>,
+}
+
+impl FaultPlan {
+    /// True when the plan would never do anything.
+    pub fn is_noop(&self) -> bool {
+        self.panic_on_run == 0
+            && self.panic_every == 0
+            && self.run_delay.is_zero()
+            && self.node_delay.is_zero()
+    }
+
+    /// Whether env-driven injection targets `model`.
+    pub fn applies_to(&self, model: &str) -> bool {
+        self.model.as_deref().is_none_or(|m| m == model)
+    }
+
+    /// Parse the `IAOI_FAULT` grammar (see module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) =
+                part.split_once('=').ok_or_else(|| format!("`{part}`: expected key=value"))?;
+            let num = || -> Result<u64, String> {
+                value.trim().parse().map_err(|_| format!("`{part}`: bad number `{value}`"))
+            };
+            match key.trim() {
+                "panic-on-batch" | "error-on-batch" => plan.panic_on_run = num()?,
+                "panic-every" | "error-every" => plan.panic_every = num()?,
+                "delay-ms" => plan.run_delay = Duration::from_millis(num()?),
+                "node-delay-us" => plan.node_delay = Duration::from_micros(num()?),
+                "model" => plan.model = Some(value.trim().to_string()),
+                other => return Err(format!("unknown fault key `{other}`")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The plan from `IAOI_FAULT`, if set, parseable, and not a no-op.
+    /// Parse errors are reported once to stderr and treated as "no plan" —
+    /// a typo in a chaos knob must not take down a production launch.
+    pub fn from_env() -> Option<FaultPlan> {
+        let spec = std::env::var("IAOI_FAULT").ok()?;
+        match Self::parse(&spec) {
+            Ok(plan) if !plan.is_noop() => Some(plan),
+            Ok(_) => None,
+            Err(e) => {
+                eprintln!("ignoring IAOI_FAULT={spec:?}: {e}");
+                None
+            }
+        }
+    }
+}
+
+/// A [`FaultPlan`] plus the shared run counter that drives it. One per
+/// installed plan, shared (`Arc`) by every clone of the prepared graph, so
+/// "panic on the N-th run" counts runs across all serving workers.
+#[derive(Debug, Default)]
+pub struct FaultState {
+    plan: FaultPlan,
+    runs: AtomicU64,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultState { plan, runs: AtomicU64::new(0) }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Runs observed so far (each `before_run` call counts one).
+    pub fn runs(&self) -> u64 {
+        self.runs.load(Ordering::SeqCst)
+    }
+
+    /// Hook at the top of every prepared-graph run: counts the run, applies
+    /// the run delay, then panics if this run is a configured fault point.
+    pub fn before_run(&self) {
+        let n = self.runs.fetch_add(1, Ordering::SeqCst) + 1;
+        if !self.plan.run_delay.is_zero() {
+            std::thread::sleep(self.plan.run_delay);
+        }
+        let hit = (self.plan.panic_on_run != 0 && n == self.plan.panic_on_run)
+            || (self.plan.panic_every != 0 && n % self.plan.panic_every == 0);
+        if hit {
+            panic!("injected fault: panic on run {n} (FaultPlan)");
+        }
+    }
+
+    /// Hook before each node of a run: applies the per-node delay.
+    pub fn before_node(&self) {
+        if !self.plan.node_delay.is_zero() {
+            std::thread::sleep(self.plan.node_delay);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let plan =
+            FaultPlan::parse("panic-on-batch=3, panic-every=10,delay-ms=5,node-delay-us=7,model=alpha")
+                .unwrap();
+        assert_eq!(
+            plan,
+            FaultPlan {
+                panic_on_run: 3,
+                panic_every: 10,
+                run_delay: Duration::from_millis(5),
+                node_delay: Duration::from_micros(7),
+                model: Some("alpha".to_string()),
+            }
+        );
+        assert!(plan.applies_to("alpha"));
+        assert!(!plan.applies_to("beta"));
+        // The error-* aliases land on the same counters.
+        let alias = FaultPlan::parse("error-on-batch=3,error-every=10").unwrap();
+        assert_eq!((alias.panic_on_run, alias.panic_every), (3, 10));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("panic-on-batch").is_err());
+        assert!(FaultPlan::parse("panic-on-batch=x").is_err());
+        assert!(FaultPlan::parse("frobnicate=1").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+        assert!(FaultPlan::parse("model=alpha").unwrap().is_noop());
+    }
+
+    #[test]
+    fn panics_on_exactly_the_configured_run() {
+        let state = FaultState::new(FaultPlan { panic_on_run: 3, ..Default::default() });
+        state.before_run();
+        state.before_run();
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| state.before_run()));
+        assert!(hit.is_err(), "third run must panic");
+        state.before_run(); // run 4: clean again
+        assert_eq!(state.runs(), 4);
+    }
+
+    #[test]
+    fn panic_every_fires_periodically() {
+        let state = FaultState::new(FaultPlan { panic_every: 2, ..Default::default() });
+        let mut outcomes = Vec::new();
+        for _ in 0..6 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| state.before_run()));
+            outcomes.push(r.is_err());
+        }
+        assert_eq!(outcomes, [false, true, false, true, false, true]);
+    }
+}

@@ -8,6 +8,7 @@
 //! multi-head outputs, which is all the paper needs — see figs. C.3/C.4).
 
 pub mod builders;
+pub mod fault;
 
 use crate::nn::activations::{
     logistic_f32, qlogistic, qlogistic_into, qsoftmax, qsoftmax_into, softmax_f32,
@@ -504,7 +505,7 @@ impl QGraph {
                 },
             })
             .collect();
-        PreparedGraph { input_params: self.input_params, nodes, intra: None }
+        PreparedGraph { input_params: self.input_params, nodes, intra: None, fault: None }
     }
 
     /// `OH·OW` of the dominant (highest-MAC) conv layer at batch 1 — the
@@ -577,6 +578,12 @@ pub struct PreparedGraph {
     /// [`ExecState`]'s own setting in force (serial unless the state was
     /// configured via [`ExecState::set_intra`]).
     intra: Option<crate::gemm::IntraOp>,
+    /// Deterministic fault injection ([`fault::FaultPlan`]) for chaos tests
+    /// and degraded-mode benchmarks; `None` in production. The state is
+    /// `Arc`-shared across clones so "panic on the N-th run" counts runs
+    /// across every worker driving this plan. Zero-cost when unset: the
+    /// run hook is a single `Option` check, no allocation.
+    fault: Option<std::sync::Arc<fault::FaultState>>,
 }
 
 /// Per-worker mutable execution state: the layer scratch arena plus
@@ -625,11 +632,32 @@ impl PreparedGraph {
         self
     }
 
+    /// Install a deterministic fault-injection plan: every subsequent run
+    /// consults it (counted run, optional delays, panic at the configured
+    /// run index). Chaos-test/bench machinery — see [`fault::FaultPlan`].
+    pub fn set_fault(&mut self, plan: fault::FaultPlan) {
+        self.fault = Some(std::sync::Arc::new(fault::FaultState::new(plan)));
+    }
+
+    /// Builder-style [`Self::set_fault`].
+    pub fn with_fault(mut self, plan: fault::FaultPlan) -> Self {
+        self.set_fault(plan);
+        self
+    }
+
+    /// The installed fault state, if any (tests read the run counter).
+    pub fn fault_state(&self) -> Option<&std::sync::Arc<fault::FaultState>> {
+        self.fault.as_ref()
+    }
+
     /// Run from an already-quantized input — the serving hot path. Returns
     /// a borrow of the final node's output slot inside `state` (copy it out
     /// if it must outlive the next run).
     pub fn run_q<'a>(&self, qin: &QTensor, state: &'a mut ExecState) -> &'a QTensor {
         assert!(!self.nodes.is_empty(), "empty graph");
+        if let Some(f) = &self.fault {
+            f.before_run();
+        }
         // Graph-level intra-op config takes precedence for the duration of
         // this run only; the state's own setting is restored afterwards so
         // one ExecState can serve differently-configured plans. Cheap: an
@@ -642,6 +670,9 @@ impl PreparedGraph {
             state.outs.push(QTensor::default());
         }
         for (i, node) in self.nodes.iter().enumerate() {
+            if let Some(f) = &self.fault {
+                f.before_node();
+            }
             // Split so earlier outputs stay readable while node i's slot is
             // written — the DAG invariant (validate_topology) guarantees
             // inputs are strictly earlier.

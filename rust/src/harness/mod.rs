@@ -647,27 +647,75 @@ fn install_stop_handlers() {
     // No signal routing off unix: the process serves until killed.
 }
 
+/// Knobs for [`serve_socket`] beyond the address/models/port-file trio —
+/// one struct so the CLI can grow flags without another parameter sweep
+/// through every caller.
+#[derive(Clone, Copy, Debug)]
+pub struct SocketServeOpts {
+    pub max_batch: usize,
+    pub workers: usize,
+    pub intra_threads: usize,
+    /// Global in-flight cap (0 = unbounded); past it requests are shed
+    /// with 503 + `Retry-After`. CLI: `--queue-depth`.
+    pub queue_depth: usize,
+    /// Per-model in-flight cap (0 = unbounded). CLI: `--model-inflight-cap`.
+    pub model_inflight_cap: usize,
+    /// Default completion deadline for requests without `X-Deadline-Ms`,
+    /// in milliseconds; expired requests are shed pre-execution with 504.
+    /// 0 disables. CLI: `--request-deadline-ms`.
+    pub request_deadline_ms: u64,
+    /// Cap on concurrently open connections (0 = unbounded); past it the
+    /// acceptor answers 503 and closes. CLI: `--max-connections`.
+    pub max_connections: usize,
+    /// Worker panics within the quarantine window before a model is
+    /// circuit-broken (503 until hot-swapped). 0 disables the breaker.
+    /// CLI: `--quarantine-threshold`.
+    pub quarantine_threshold: u32,
+    pub load: LoadMode,
+}
+
+impl Default for SocketServeOpts {
+    fn default() -> Self {
+        let q = crate::coordinator::registry::QuarantineConfig::default();
+        Self {
+            max_batch: 8,
+            workers: 2,
+            intra_threads: 1,
+            queue_depth: 0,
+            model_inflight_cap: 0,
+            request_deadline_ms: 5_000,
+            max_connections: 0,
+            quarantine_threshold: q.threshold,
+            load: LoadMode::default(),
+        }
+    }
+}
+
 /// `iaoi serve --addr HOST:PORT`: run the socket front end
 /// ([`crate::serve::Server`]) until SIGINT/SIGTERM, then drain gracefully.
 /// Without `--models`, two in-memory demo models (`alpha`, 16 classes, and
 /// `beta`, 8 classes) are installed so the endpoint is probe-able on a
-/// fresh checkout. `queue_depth` is the global in-flight cap and
-/// `model_inflight_cap` the per-model one (0 = unbounded; past a cap,
-/// requests are shed with 503 + `Retry-After`). `port_file`, when set,
-/// receives the actually-bound `HOST:PORT` once the listener is up — how
-/// scripts and CI discover an ephemeral `--addr host:0` port.
-#[allow(clippy::too_many_arguments)]
+/// fresh checkout. `port_file`, when set, receives the actually-bound
+/// `HOST:PORT` once the listener is up — how scripts and CI discover an
+/// ephemeral `--addr host:0` port. Everything else rides in
+/// [`SocketServeOpts`].
 pub fn serve_socket(
     addr: &str,
     models_dir: Option<&Path>,
-    max_batch: usize,
-    workers: usize,
-    intra_threads: usize,
-    queue_depth: usize,
-    model_inflight_cap: usize,
     port_file: Option<&Path>,
-    load: LoadMode,
+    opts: SocketServeOpts,
 ) -> Result<()> {
+    let SocketServeOpts {
+        max_batch,
+        workers,
+        intra_threads,
+        queue_depth,
+        model_inflight_cap,
+        request_deadline_ms,
+        max_connections,
+        quarantine_threshold,
+        load,
+    } = opts;
     let registry = match models_dir {
         Some(dir) => ModelRegistry::load_dir_with(dir, load)?,
         None => {
@@ -681,6 +729,10 @@ pub fn serve_socket(
             registry
         }
     };
+    registry.set_quarantine(crate::coordinator::registry::QuarantineConfig {
+        threshold: quarantine_threshold,
+        ..Default::default()
+    });
     let policy = BatchPolicy {
         max_batch,
         max_delay: Duration::from_millis(2),
@@ -689,7 +741,12 @@ pub fn serve_socket(
         model_inflight_cap,
         ..Default::default()
     };
-    let cfg = crate::serve::ServeConfig { addr: addr.to_string(), ..Default::default() };
+    let cfg = crate::serve::ServeConfig {
+        addr: addr.to_string(),
+        request_deadline: Duration::from_millis(request_deadline_ms),
+        max_connections,
+        ..Default::default()
+    };
     let server = crate::serve::Server::start(registry, policy, workers, cfg)?;
     let bound = server.local_addr();
     if let Some(pf) = port_file {
@@ -711,12 +768,20 @@ pub fn serve_socket(
         );
     }
     println!(
-        "serving on http://{bound} — {} model(s), {workers} worker(s), caps: global {}, per-model {}\n\
+        "serving on http://{bound} — {} model(s), {workers} worker(s), caps: global {}, \
+         per-model {}, connections {}; deadline {}, quarantine after {} panic(s)\n\
          endpoints: POST /infer/<model> (raw LE f32 body), GET /healthz, GET /metrics\n\
          Ctrl-C (or SIGTERM) drains in-flight requests and exits",
         registry.len(),
         cap(queue_depth),
         cap(model_inflight_cap),
+        cap(max_connections),
+        if request_deadline_ms == 0 {
+            "off".to_string()
+        } else {
+            format!("{request_deadline_ms} ms")
+        },
+        if quarantine_threshold == 0 { "∞".to_string() } else { quarantine_threshold.to_string() },
     );
     install_stop_handlers();
     while !STOP_REQUESTED.load(Ordering::SeqCst) {

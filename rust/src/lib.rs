@@ -53,6 +53,7 @@ pub mod train;
 pub mod coordinator;
 pub mod serve;
 pub mod sim;
+pub mod sync;
 pub mod data;
 pub mod io;
 pub mod harness;

@@ -16,6 +16,8 @@
 //! iaoi serve      --addr HOST:PORT [--models DIR] [--queue-depth N]
 //!                 [--model-inflight-cap N] [--port-file FILE]
 //!                 [--max-batch B] [--workers W] [--intra-threads T]
+//!                 [--request-deadline-ms MS] [--max-connections N]
+//!                 [--quarantine-threshold K]
 //!                 [--load copy|zerocopy|mmap]
 //! iaoi quickstart [--artifacts DIR]
 //! iaoi bench      --table 4.1|...|4.8|quant-modes|pool | --fig 1.1c|4.1|4.2|4.3 [--fast]
@@ -93,7 +95,7 @@ fn print_usage() {
          iaoi eval       --model FILE [--artifacts DIR] [--batches N]\n  \
          iaoi export     --out FILE [--name N] [--model-version V] [--classes C] [--seed S] [--model FILE --artifacts DIR] [--quant-mode per-tensor|per-channel] [--load copy|zerocopy|mmap]\n  \
          iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B] [--workers W] [--intra-threads T] [--load copy|zerocopy|mmap]\n  \
-         iaoi serve      --addr HOST:PORT [--models DIR] [--queue-depth N] [--model-inflight-cap N] [--port-file FILE] [--max-batch B] [--workers W] [--intra-threads T] [--load copy|zerocopy|mmap]\n  \
+         iaoi serve      --addr HOST:PORT [--models DIR] [--queue-depth N] [--model-inflight-cap N] [--port-file FILE] [--max-batch B] [--workers W] [--intra-threads T] [--request-deadline-ms MS] [--max-connections N] [--quarantine-threshold K] [--load copy|zerocopy|mmap]\n  \
          iaoi quickstart [--artifacts DIR]\n  \
          iaoi bench      --table <id> | --fig <id> [--fast]  (tables 4.1-4.8, quant-modes, pool)\n"
     );
@@ -158,6 +160,14 @@ fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
 /// graceful drain. `--port-file FILE` records the bound address (for
 /// `--addr host:0` ephemeral ports). Without `--models`, two in-memory
 /// demo models are served.
+///
+/// Robustness knobs (socket mode): `--request-deadline-ms MS` is the
+/// default completion deadline for requests without an `X-Deadline-Ms`
+/// header (expired requests shed pre-execution with 504; 0 disables);
+/// `--max-connections N` caps concurrently open connections (503 at the
+/// door past it; 0 = unbounded); `--quarantine-threshold K` circuit-breaks
+/// a model after K worker panics in a sliding window (503 `"quarantined"`
+/// until hot-swapped; 0 disables).
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let requests: usize = get(flags, "requests", "256").parse()?;
     let max_batch: usize = get(flags, "max-batch", "8").parse()?;
@@ -165,21 +175,20 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let intra_threads: usize = get(flags, "intra-threads", "1").parse()?;
     anyhow::ensure!(intra_threads >= 1, "--intra-threads must be >= 1");
     if let Some(addr) = flags.get("addr") {
-        let queue_depth: usize = get(flags, "queue-depth", "64").parse()?;
-        let model_cap: usize = get(flags, "model-inflight-cap", "0").parse()?;
         let models = flags.get("models").map(PathBuf::from);
         let port_file = flags.get("port-file").map(PathBuf::from);
-        return harness::serve_socket(
-            addr,
-            models.as_deref(),
+        let opts = harness::SocketServeOpts {
             max_batch,
             workers,
             intra_threads,
-            queue_depth,
-            model_cap,
-            port_file.as_deref(),
-            load_mode(flags)?,
-        );
+            queue_depth: get(flags, "queue-depth", "64").parse()?,
+            model_inflight_cap: get(flags, "model-inflight-cap", "0").parse()?,
+            request_deadline_ms: get(flags, "request-deadline-ms", "5000").parse()?,
+            max_connections: get(flags, "max-connections", "0").parse()?,
+            quarantine_threshold: get(flags, "quarantine-threshold", "3").parse()?,
+            load: load_mode(flags)?,
+        };
+        return harness::serve_socket(addr, models.as_deref(), port_file.as_deref(), opts);
     }
     if let Some(models_dir) = flags.get("models") {
         return harness::serve_registry(

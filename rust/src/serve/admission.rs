@@ -14,6 +14,7 @@
 //! first time a model is seen). Permits release on `Drop`, so every exit
 //! path (reply written, connection reset, handler panic) returns capacity.
 
+use crate::sync::lock_recover;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -76,7 +77,7 @@ impl Admission {
     }
 
     fn model_counters(&self, model: &str) -> Arc<Counters> {
-        let mut map = self.per_model.lock().expect("admission map poisoned");
+        let mut map = lock_recover(&self.per_model);
         Arc::clone(map.entry(model.to_string()).or_default())
     }
 
@@ -123,13 +124,13 @@ impl Admission {
 
     /// Requests currently holding permits for `model` (0 if never seen).
     pub fn model_inflight(&self, model: &str) -> usize {
-        let map = self.per_model.lock().expect("admission map poisoned");
+        let map = lock_recover(&self.per_model);
         map.get(model).map(|c| c.inflight()).unwrap_or(0)
     }
 
     /// `(model, inflight, admitted, shed)` rows, sorted by model name.
     pub fn per_model_stats(&self) -> Vec<(String, usize, u64, u64)> {
-        let map = self.per_model.lock().expect("admission map poisoned");
+        let map = lock_recover(&self.per_model);
         let mut rows: Vec<_> = map
             .iter()
             .map(|(k, c)| (k.clone(), c.inflight(), c.admitted(), c.shed()))

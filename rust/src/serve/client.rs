@@ -81,7 +81,22 @@ impl HttpClient {
 
     /// Issue one request and read the full response.
     pub fn request(&mut self, method: &str, target: &str, body: &[u8]) -> Result<HttpResponse> {
+        self.request_with_headers(method, target, &[], body)
+    }
+
+    /// [`Self::request`] with extra `(name, value)` header pairs (e.g.
+    /// `X-Deadline-Ms`).
+    pub fn request_with_headers(
+        &mut self,
+        method: &str,
+        target: &str,
+        headers: &[(&str, String)],
+        body: &[u8],
+    ) -> Result<HttpResponse> {
         let mut req = format!("{method} {target} HTTP/1.1\r\nHost: iaoi\r\n");
+        for (name, value) in headers {
+            req.push_str(&format!("{name}: {value}\r\n"));
+        }
         if method == "POST" || !body.is_empty() {
             req.push_str(&format!("Content-Length: {}\r\n", body.len()));
         }
@@ -100,6 +115,22 @@ impl HttpClient {
     pub fn infer(&mut self, model: &str, values: &[f32]) -> Result<HttpResponse> {
         let body = encode_f32_body(values);
         self.request("POST", &format!("/infer/{model}"), &body)
+    }
+
+    /// [`Self::infer`] carrying an `X-Deadline-Ms` completion budget.
+    pub fn infer_with_deadline_ms(
+        &mut self,
+        model: &str,
+        values: &[f32],
+        deadline_ms: u64,
+    ) -> Result<HttpResponse> {
+        let body = encode_f32_body(values);
+        self.request_with_headers(
+            "POST",
+            &format!("/infer/{model}"),
+            &[("X-Deadline-Ms", deadline_ms.to_string())],
+            &body,
+        )
     }
 
     /// Read one full response (head + Content-Length body) off the stream.

@@ -34,6 +34,17 @@
 //!   log-spaced latency histograms (p50/p99/p999 per model and merged) and
 //!   the admission counters in Prometheus text format; the numbers on the
 //!   wire are the same [`Metrics`] the workers update in-process.
+//! * **Fault containment** — a worker panic is caught coordinator-side and
+//!   mapped to HTTP 500 per rider (no client ever hangs on a fault);
+//!   repeated panics trip a per-model circuit breaker
+//!   ([`crate::coordinator::registry::ModelRegistry::set_quarantine`]) that
+//!   answers 503 `"quarantined"` without touching the engine until a
+//!   hot-swap readmits the model. Requests carry deadlines
+//!   (`X-Deadline-Ms`, default [`ServeConfig::request_deadline`]) and are
+//!   shed pre-execution with 504 once expired. Idle keep-alive connections
+//!   time out ([`ServeConfig::keep_alive_timeout`]) and the acceptor caps
+//!   concurrent connections ([`ServeConfig::max_connections`]), so slow or
+//!   absent clients cannot pin every connection thread.
 //!
 //! Protocol details (endpoints, error mapping, wire format) live in
 //! [`protocol`]; a std-only client for tests/benches/probes in [`client`].
@@ -44,20 +55,21 @@ pub mod protocol;
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::ModelRegistry;
-use crate::coordinator::{BatchPolicy, MultiCoordinator, RoutedClient};
+use crate::coordinator::{BatchPolicy, MultiCoordinator, Outcome, RoutedClient};
+use crate::sync::lock_recover;
 use crate::tensor::Tensor;
 use admission::{Admission, AdmissionConfig, Shed};
 use anyhow::{ensure, Context, Result};
 use protocol::{
-    bad_request, decode_f32_body, draining, encode_f32_body, find_head_end, json_string,
-    method_not_allowed, not_found, overloaded, parse_head, payload_too_large, ProtoError,
-    RequestHead, Response, MAX_HEAD_BYTES,
+    bad_request, deadline_exceeded, decode_f32_body, draining, encode_f32_body, find_head_end,
+    internal_error, json_string, method_not_allowed, not_found, over_capacity, overloaded,
+    parse_head, payload_too_large, quarantined, ProtoError, RequestHead, Response, MAX_HEAD_BYTES,
 };
 use std::collections::{HashMap, HashSet};
 use std::io::{ErrorKind, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -82,6 +94,21 @@ pub struct ServeConfig {
     /// Upper bound on waiting for in-flight requests during
     /// [`Server::shutdown`] / [`Server::swap_model`].
     pub drain_timeout: Duration,
+    /// How long an idle keep-alive connection (no request in progress) may
+    /// sit before the server closes it. Without this bound, clients that
+    /// open connections and go silent pin a thread each, forever.
+    pub keep_alive_timeout: Duration,
+    /// Default completion deadline applied to every inference request that
+    /// does not carry its own `X-Deadline-Ms` header. Requests still
+    /// queued past their deadline are shed pre-execution with HTTP 504.
+    /// Zero disables the default (header-less requests then wait however
+    /// long batching takes). CLI: `iaoi serve --request-deadline-ms N`.
+    pub request_deadline: Duration,
+    /// Cap on concurrently open connections; past it the acceptor answers
+    /// 503 `"over_capacity"` and closes immediately, so a connection flood
+    /// degrades into fast rejections instead of thread exhaustion.
+    /// 0 = unbounded. CLI: `iaoi serve --max-connections N`.
+    pub max_connections: usize,
 }
 
 impl Default for ServeConfig {
@@ -93,6 +120,9 @@ impl Default for ServeConfig {
             poll_interval: Duration::from_millis(50),
             request_timeout: Duration::from_secs(5),
             drain_timeout: Duration::from_secs(30),
+            keep_alive_timeout: Duration::from_secs(60),
+            request_deadline: Duration::from_secs(5),
+            max_connections: 0,
         }
     }
 }
@@ -108,13 +138,16 @@ struct ServerState {
     /// Models currently draining for a hot-swap: requests for them are
     /// rejected while the swap waits out their in-flight work.
     draining: Mutex<HashSet<String>>,
+    /// Live connection gauge (exported as `iaoi_open_connections`); the
+    /// acceptor enforces [`ServeConfig::max_connections`] against it.
+    open_conns: AtomicUsize,
     started: Instant,
     cfg: ServeConfig,
 }
 
 impl ServerState {
     fn is_draining(&self, model: &str) -> bool {
-        self.draining.lock().expect("drain set poisoned").contains(model)
+        lock_recover(&self.draining).contains(model)
     }
 }
 
@@ -169,6 +202,7 @@ impl Server {
             metrics: coord.metrics_handle(),
             shutting_down: AtomicBool::new(false),
             draining: Mutex::new(HashSet::new()),
+            open_conns: AtomicUsize::new(0),
             started: Instant::now(),
             cfg,
         });
@@ -185,10 +219,27 @@ impl Server {
                     if state.shutting_down.load(Ordering::SeqCst) {
                         break;
                     }
-                    let Ok(stream) = stream else { continue };
+                    let Ok(mut stream) = stream else { continue };
+                    // Prune finished handles so a long-lived server's join
+                    // list doesn't grow with every connection ever seen.
+                    lock_recover(&conns).retain(|h| !h.is_finished());
+                    let cap = state.cfg.max_connections;
+                    if cap > 0 && state.open_conns.load(Ordering::SeqCst) >= cap {
+                        // Refuse at the door: a bounded write of the 503 and
+                        // an immediate close, so the flood cannot pin the
+                        // acceptor either.
+                        let _ =
+                            stream.set_write_timeout(Some(Duration::from_millis(250)));
+                        let _ = over_capacity(state.cfg.retry_after_ms).write_to(&mut stream);
+                        continue;
+                    }
+                    state.open_conns.fetch_add(1, Ordering::SeqCst);
                     let state = Arc::clone(&state);
-                    let handle = std::thread::spawn(move || handle_connection(&state, stream));
-                    conns.lock().expect("connection list poisoned").push(handle);
+                    let handle = std::thread::spawn(move || {
+                        handle_connection(&state, stream);
+                        state.open_conns.fetch_sub(1, Ordering::SeqCst);
+                    });
+                    lock_recover(&conns).push(handle);
                 }
             })
         };
@@ -214,7 +265,7 @@ impl Server {
 
     /// Snapshot of per-model coordinator metrics, sorted by model name.
     pub fn metrics(&self) -> Vec<Metrics> {
-        let guard = self.state.metrics.lock().expect("metrics poisoned");
+        let guard = lock_recover(&self.state.metrics);
         let mut out: Vec<Metrics> = guard.values().cloned().collect();
         out.sort_by(|a, b| a.engine.cmp(&b.engine));
         out
@@ -223,16 +274,12 @@ impl Server {
     /// Mark `model` as draining: its requests get a clean 503 `"draining"`
     /// until [`Self::end_model_drain`]. Idempotent.
     pub fn begin_model_drain(&self, model: &str) {
-        self.state
-            .draining
-            .lock()
-            .expect("drain set poisoned")
-            .insert(model.to_string());
+        lock_recover(&self.state.draining).insert(model.to_string());
     }
 
     /// Reopen `model` for requests after a drain.
     pub fn end_model_drain(&self, model: &str) {
-        self.state.draining.lock().expect("drain set poisoned").remove(model);
+        lock_recover(&self.state.draining).remove(model);
     }
 
     /// Drain-then-swap: reject new requests for `model`, wait for its
@@ -283,7 +330,7 @@ impl Server {
         // Connection threads see the flag at their next poll tick; their
         // final response writes complete before we return.
         let handles: Vec<_> = {
-            let mut guard = self.conns.lock().expect("connection list poisoned");
+            let mut guard = lock_recover(&self.conns);
             guard.drain(..).collect()
         };
         for h in handles {
@@ -337,6 +384,7 @@ fn read_request(
 ) -> Result<Option<(RequestHead, Vec<u8>)>, Box<Response>> {
     let mut chunk = [0u8; 4096];
     let mut waited = Duration::ZERO;
+    let mut idle = Duration::ZERO;
     let head_end = loop {
         if let Some(end) = find_head_end(buf) {
             break end;
@@ -354,9 +402,16 @@ fn read_request(
             Ok(n) => buf.extend_from_slice(&chunk[..n]),
             Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
                 if buf.is_empty() {
-                    // Idle keep-alive connection: only the shutdown flag
-                    // ends it.
+                    // Idle keep-alive connection: ends on shutdown or once
+                    // it has been silent for keep_alive_timeout (a client
+                    // that connects and goes away must not pin this thread
+                    // — and, under --max-connections, a whole slot —
+                    // indefinitely).
                     if state.shutting_down.load(Ordering::SeqCst) {
+                        return Ok(None);
+                    }
+                    idle += state.cfg.poll_interval;
+                    if idle >= state.cfg.keep_alive_timeout {
                         return Ok(None);
                     }
                     continue;
@@ -413,7 +468,7 @@ fn handle_request(state: &Arc<ServerState>, head: &RequestHead, body: &[u8]) -> 
         ("GET", "/metrics") => metrics_page(state),
         (_, "/healthz") | (_, "/metrics") => method_not_allowed(),
         ("POST", target) if target.starts_with("/infer/") => {
-            infer(state, &target["/infer/".len()..], body)
+            infer(state, &target["/infer/".len()..], head, body)
         }
         (_, target) if target.starts_with("/infer/") => method_not_allowed(),
         (_, target) => not_found(&format!("unknown path {target}")),
@@ -421,7 +476,7 @@ fn handle_request(state: &Arc<ServerState>, head: &RequestHead, body: &[u8]) -> 
 }
 
 /// `POST /infer/<model>`: validate → admit → execute → reply.
-fn infer(state: &Arc<ServerState>, model: &str, body: &[u8]) -> Response {
+fn infer(state: &Arc<ServerState>, model: &str, head: &RequestHead, body: &[u8]) -> Response {
     if state.shutting_down.load(Ordering::SeqCst) {
         return draining("server");
     }
@@ -434,6 +489,11 @@ fn infer(state: &Arc<ServerState>, model: &str, body: &[u8]) -> Response {
             state.registry.names()
         ));
     };
+    // Circuit breaker, checked before admission: a quarantined model burns
+    // neither a permit nor engine time.
+    if state.registry.is_quarantined(model) {
+        return quarantined(model);
+    }
     let want: usize = entry.input_shape.iter().product();
     let values = match decode_f32_body(body, want) {
         Ok(v) => v,
@@ -454,14 +514,28 @@ fn infer(state: &Arc<ServerState>, model: &str, body: &[u8]) -> Response {
         drop(permit);
         return draining(model);
     }
+    // Per-request deadline: the client's X-Deadline-Ms budget wins;
+    // otherwise the configured default (zero = none). Workers shed
+    // requests still queued past it, pre-execution, with 504.
+    let deadline = match head.deadline_ms {
+        Some(ms) => Some(Instant::now() + Duration::from_millis(ms)),
+        None => (!state.cfg.request_deadline.is_zero())
+            .then(|| Instant::now() + state.cfg.request_deadline),
+    };
     let image = Tensor::from_vec(&entry.batched_shape(1), values);
-    let result = state.client.infer(model, image);
+    let result = state.client.infer_with_deadline(model, image, deadline);
     drop(permit);
     match result {
-        Ok(r) => Response::octets(200, "OK", encode_f32_body(&r.output))
-            .header("X-Model-Version", r.version)
-            .header("X-Batch-Size", r.batch_size)
-            .header("X-Latency-Us", r.latency.as_micros()),
+        Ok(r) => match &r.outcome {
+            Outcome::Ok(output) => Response::octets(200, "OK", encode_f32_body(output))
+                .header("X-Model-Version", r.version)
+                .header("X-Batch-Size", r.batch_size)
+                .header("X-Latency-Us", r.latency.as_micros()),
+            // The batch panicked; the worker contained it and kept serving,
+            // so the connection stays usable.
+            Outcome::Failed => internal_error(),
+            Outcome::Expired => deadline_exceeded(),
+        },
         // Only reachable when the coordinator is stopping underneath us.
         Err(_) => draining("server"),
     }
@@ -478,19 +552,28 @@ fn healthz(state: &Arc<ServerState>) -> Response {
     let mut first = true;
     for name in state.registry.names().iter() {
         let Some(entry) = state.registry.get(name) else { continue };
-        let status = if shutting_down || state.is_draining(name) { "draining" } else { "serving" };
+        // Quarantine outranks draining: it says the model is *broken*, not
+        // merely paused for a swap.
+        let status = if state.registry.is_quarantined(name) {
+            "quarantined"
+        } else if shutting_down || state.is_draining(name) {
+            "draining"
+        } else {
+            "serving"
+        };
         if !first {
             body.push(',');
         }
         first = false;
         body.push_str(&format!(
-            "{{\"name\":{},\"version\":{},\"input_shape\":[{},{},{}],\"status\":\"{status}\",\"inflight\":{}}}",
+            "{{\"name\":{},\"version\":{},\"input_shape\":[{},{},{}],\"status\":\"{status}\",\"inflight\":{},\"panics\":{}}}",
             json_string(name),
             entry.version,
             entry.input_shape[0],
             entry.input_shape[1],
             entry.input_shape[2],
             state.admission.model_inflight(name),
+            state.registry.panic_count(name),
         ));
     }
     body.push_str("]}");
@@ -504,7 +587,7 @@ fn metrics_page(state: &Arc<ServerState>) -> Response {
     let mut out = String::new();
     let mut merged = Metrics::new("_all");
     {
-        let guard = state.metrics.lock().expect("metrics poisoned");
+        let guard = lock_recover(&state.metrics);
         let mut names: Vec<&String> = guard.keys().collect();
         names.sort();
         for name in names {
@@ -523,6 +606,11 @@ fn metrics_page(state: &Arc<ServerState>) -> Response {
         let _ = writeln!(out, "iaoi_admitted_total{{model=\"{model}\"}} {admitted}");
         let _ = writeln!(out, "iaoi_shed_total{{model=\"{model}\"}} {shed}");
     }
+    for name in state.registry.names() {
+        let q = u8::from(state.registry.is_quarantined(&name));
+        let _ = writeln!(out, "iaoi_quarantined{{model=\"{name}\"}} {q}");
+    }
+    let _ = writeln!(out, "iaoi_open_connections {}", state.open_conns.load(Ordering::SeqCst));
     let _ = writeln!(out, "iaoi_uptime_seconds {}", state.started.elapsed().as_secs());
     Response::text(200, "OK", out)
 }
@@ -538,6 +626,9 @@ mod tests {
         assert!(cfg.retry_after_ms > 0);
         assert!(cfg.poll_interval < cfg.request_timeout);
         assert!(cfg.request_timeout < cfg.drain_timeout);
+        assert!(cfg.poll_interval < cfg.keep_alive_timeout);
+        assert!(!cfg.request_deadline.is_zero(), "deadlines default on");
+        assert_eq!(cfg.max_connections, 0, "connection cap defaults off");
     }
 
     #[test]

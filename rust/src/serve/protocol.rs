@@ -18,8 +18,14 @@
 //!   per-model latency histograms, batch stats and admission counters.
 //!
 //! Error mapping: 400 malformed request or wrong body size, 404 unknown
-//! model/path, 405 wrong method, 413 oversized body, 503 shed (with
-//! `Retry-After` and a JSON `retry_after_ms` payload) or draining.
+//! model/path, 405 wrong method, 413 oversized body, 500 contained worker
+//! panic (`{"error":"internal"}`), 503 shed (with `Retry-After` and a JSON
+//! `retry_after_ms` payload), draining, quarantined model, or acceptor
+//! over capacity, 504 deadline expired before execution.
+//!
+//! Requests may carry `X-Deadline-Ms: <n>` — a completion budget in
+//! milliseconds from arrival; past it the request is shed pre-execution
+//! with 504 instead of burning engine time on an answer nobody awaits.
 //!
 //! Parsing is a pure function over bytes ([`parse_head`]) so malformed
 //! input handling is unit-testable without sockets. Limits: request head
@@ -49,6 +55,8 @@ pub enum ProtoError {
     BodyTooLarge { declared: usize, cap: usize },
     /// Head grew past [`MAX_HEAD_BYTES`] without a blank line.
     HeadTooLarge,
+    /// `X-Deadline-Ms` present but not a non-negative integer.
+    BadDeadline,
 }
 
 impl std::fmt::Display for ProtoError {
@@ -61,6 +69,9 @@ impl std::fmt::Display for ProtoError {
                 write!(f, "declared body of {declared} bytes exceeds cap of {cap}")
             }
             ProtoError::HeadTooLarge => write!(f, "request head exceeds {MAX_HEAD_BYTES} bytes"),
+            ProtoError::BadDeadline => {
+                write!(f, "X-Deadline-Ms must be a non-negative integer of milliseconds")
+            }
         }
     }
 }
@@ -75,6 +86,11 @@ pub struct RequestHead {
     pub content_length: usize,
     /// False when the client sent `Connection: close`.
     pub keep_alive: bool,
+    /// Per-request deadline budget from `X-Deadline-Ms`, in milliseconds
+    /// from arrival. `None` = header absent (the server applies its
+    /// configured default). 0 is legal and means "already expired" —
+    /// useful for probing the shed path.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Locate the end of the head (`\r\n\r\n`) in `buf`, returning the offset
@@ -103,6 +119,7 @@ pub fn parse_head(head: &[u8], max_body: usize) -> Result<RequestHead, ProtoErro
 
     let mut content_length: Option<usize> = None;
     let mut keep_alive = true;
+    let mut deadline_ms: Option<u64> = None;
     for line in lines {
         if line.is_empty() {
             continue; // the blank terminator line(s)
@@ -118,6 +135,9 @@ pub fn parse_head(head: &[u8], max_body: usize) -> Result<RequestHead, ProtoErro
             content_length = Some(n);
         } else if name.eq_ignore_ascii_case("connection") && value.eq_ignore_ascii_case("close") {
             keep_alive = false;
+        } else if name.eq_ignore_ascii_case("x-deadline-ms") {
+            let ms: u64 = value.parse().map_err(|_| ProtoError::BadDeadline)?;
+            deadline_ms = Some(ms);
         }
     }
 
@@ -136,6 +156,7 @@ pub fn parse_head(head: &[u8], max_body: usize) -> Result<RequestHead, ProtoErro
         target: target.to_string(),
         content_length,
         keep_alive,
+        deadline_ms,
     })
 }
 
@@ -255,6 +276,40 @@ pub fn draining(scope: &str) -> Response {
         "Service Unavailable",
         format!("{{\"error\":\"draining\",\"scope\":\"{scope}\"}}"),
     )
+    .close()
+}
+
+/// 500 for a request whose batch panicked inside the engine. The panic was
+/// contained worker-side, so the connection stays usable: keep-alive.
+pub fn internal_error() -> Response {
+    Response::json(500, "Internal Server Error", "{\"error\":\"internal\"}".to_string())
+}
+
+/// 503 for a model the circuit breaker has quarantined. Keep-alive: other
+/// models on the same connection are still healthy.
+pub fn quarantined(model: &str) -> Response {
+    Response::json(
+        503,
+        "Service Unavailable",
+        format!("{{\"error\":\"quarantined\",\"model\":{}}}", json_string(model)),
+    )
+}
+
+/// 504 for a request shed because its deadline expired before execution.
+pub fn deadline_exceeded() -> Response {
+    Response::json(504, "Gateway Timeout", "{\"error\":\"deadline_exceeded\"}".to_string())
+}
+
+/// 503 written by the acceptor when `--max-connections` is saturated; the
+/// connection is closed immediately so the slot frees up.
+pub fn over_capacity(retry_after_ms: u64) -> Response {
+    let retry_after_s = retry_after_ms.div_ceil(1000).max(1);
+    Response::json(
+        503,
+        "Service Unavailable",
+        format!("{{\"error\":\"over_capacity\",\"retry_after_ms\":{retry_after_ms}}}"),
+    )
+    .header("Retry-After", retry_after_s)
     .close()
 }
 
@@ -421,6 +476,54 @@ mod tests {
             assert_eq!(a.to_bits(), b.to_bits());
         }
         assert!(decode_f32_body(&bytes[..bytes.len() - 1], values.len()).is_err());
+    }
+
+    #[test]
+    fn deadline_header_parses_and_rejects_garbage() {
+        let h = head_of("GET /healthz HTTP/1.1\r\nX-Deadline-Ms: 250\r\n\r\n").unwrap();
+        assert_eq!(h.deadline_ms, Some(250));
+        // Case-insensitive, like every other header.
+        let h = head_of("GET /healthz HTTP/1.1\r\nx-deadline-ms: 0\r\n\r\n").unwrap();
+        assert_eq!(h.deadline_ms, Some(0));
+        assert_eq!(head_of("GET / HTTP/1.1\r\n\r\n").unwrap().deadline_ms, None);
+        for bad in ["soon", "-5", "1.5"] {
+            assert_eq!(
+                head_of(&format!("GET / HTTP/1.1\r\nX-Deadline-Ms: {bad}\r\n\r\n")),
+                Err(ProtoError::BadDeadline),
+                "{bad:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn robustness_responses_have_the_documented_shape() {
+        let mut buf = Vec::new();
+        internal_error().write_to(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 500 "), "{text}");
+        assert!(text.contains("{\"error\":\"internal\"}"), "{text}");
+        assert!(!text.contains("Connection: close"), "contained panic keeps the connection");
+
+        let mut buf = Vec::new();
+        quarantined("alpha").write_to(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 503 "), "{text}");
+        assert!(text.contains("\"error\":\"quarantined\""), "{text}");
+        assert!(text.contains("\"model\":\"alpha\""), "{text}");
+
+        let mut buf = Vec::new();
+        deadline_exceeded().write_to(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 504 "), "{text}");
+        assert!(text.contains("\"error\":\"deadline_exceeded\""), "{text}");
+
+        let mut buf = Vec::new();
+        over_capacity(50).write_to(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 503 "), "{text}");
+        assert!(text.contains("\"error\":\"over_capacity\""), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        assert!(text.contains("Connection: close"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,70 @@
+//! Poison-recovering lock helpers.
+//!
+//! A panicking thread poisons any `Mutex`/`RwLock` it holds, and the
+//! default `.lock().expect(...)` response turns one contained fault into a
+//! cascade: every other worker that touches the lock panics too, which is
+//! exactly the failure mode a fault-contained server must not have. The
+//! shared state behind the serving-side locks — metrics maps, batch
+//! queues, admission tables, the model registry, connection lists — is
+//! either plain counters or values replaced wholesale while the lock is
+//! held, so the "data may be inconsistent" signal that poisoning carries
+//! is never actionable here: recovering the guard is always better than
+//! killing the process.
+//!
+//! Every shared lock in `coordinator/` and `serve/` goes through these
+//! helpers; new code should too.
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Read-lock `l`, recovering the guard if a writer panicked.
+pub fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Write-lock `l`, recovering the guard if a previous holder panicked.
+pub fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn poisoned_mutex_recovers_with_data_intact() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let mut g = m2.lock().unwrap();
+            *g = 42;
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned by the panic");
+        assert_eq!(*lock_recover(&m), 42);
+        // Recovering does not clear the poison flag; it just keeps working.
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 43);
+    }
+
+    #[test]
+    fn poisoned_rwlock_recovers_for_both_readers_and_writers() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison the rwlock");
+        })
+        .join();
+        assert!(l.read().is_err(), "rwlock should be poisoned by the panic");
+        assert_eq!(read_recover(&l).len(), 3);
+        write_recover(&l).push(4);
+        assert_eq!(read_recover(&l).len(), 4);
+    }
+}

@@ -1,0 +1,294 @@
+//! Chaos tests for the fault-containment layer: deterministic fault
+//! injection ([`iaoi::graph::fault::FaultPlan`]) driving the serving
+//! stack's robustness rails end to end — panic-isolated workers that
+//! answer every rider with a structured failure instead of hanging the
+//! client, the per-model panic circuit breaker tripping at exactly its
+//! threshold and recovering on hot-swap, pre-execution deadline shedding,
+//! poisoned-lock recovery, and the acceptor's idle-timeout/connection-cap
+//! rails. Every fault here is injected, not waited for: the tests are
+//! fully deterministic and run in the ordinary `cargo test` suite.
+
+use iaoi::coordinator::registry::{ModelRegistry, QuarantineConfig};
+use iaoi::coordinator::{BatchPolicy, MultiCoordinator, Outcome};
+use iaoi::data::Rng;
+use iaoi::graph::fault::FaultPlan;
+use iaoi::graph::ExecState;
+use iaoi::harness::demo_artifact;
+use iaoi::model_format;
+use iaoi::serve::client::HttpClient;
+use iaoi::serve::{ServeConfig, Server};
+use iaoi::tensor::Tensor;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A deterministic [16,16,3] input image as a flat f32 vec (both demo
+/// models take this shape).
+fn image(rng: &mut Rng) -> Vec<f32> {
+    (0..16 * 16 * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+}
+
+fn fresh_policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+/// A registry whose `alpha` carries an injected fault; `beta` is healthy.
+fn faulted_registry(fault: FaultPlan) -> ModelRegistry {
+    let registry = ModelRegistry::new();
+    registry.install_with(
+        demo_artifact("alpha", 1, 16, 3),
+        PathBuf::from("<chaos:alpha>"),
+        Some(fault),
+    );
+    registry.install(demo_artifact("beta", 1, 8, 11), PathBuf::from("<chaos:beta>"));
+    registry
+}
+
+#[test]
+fn injected_panic_answers_every_request_and_server_keeps_serving() {
+    // The first alpha batch panics mid-execution. Containment invariant:
+    // every concurrent client still gets exactly one response (500 for the
+    // panicked batch's riders, 200 for the rest — zero hangs), the worker
+    // survives, and post-fault responses are bit-identical to a clean
+    // prepared-graph twin.
+    let registry = faulted_registry(FaultPlan { panic_on_run: 1, ..Default::default() });
+    // Breaker off: this test is about containment, not quarantine.
+    registry.set_quarantine(QuarantineConfig { threshold: 0, ..Default::default() });
+    let server = Server::start(registry, fresh_policy(), 2, ServeConfig::default()).expect("start");
+    let addr = server.local_addr();
+
+    let ok = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let (ok, failed) = (Arc::clone(&ok), Arc::clone(&failed));
+            std::thread::spawn(move || {
+                let mut client = HttpClient::connect(addr).expect("connect");
+                let mut rng = Rng::seeded(500 + t as u64);
+                for _ in 0..8 {
+                    let img = image(&mut rng);
+                    let resp = client.infer("alpha", &img).expect("every request must answer");
+                    match resp.status {
+                        200 => ok.fetch_add(1, Ordering::SeqCst),
+                        500 => {
+                            assert!(
+                                resp.body_text().contains("\"error\":\"internal\""),
+                                "body: {}",
+                                resp.body_text()
+                            );
+                            failed.fetch_add(1, Ordering::SeqCst)
+                        }
+                        other => panic!("unexpected status {other}: {}", resp.body_text()),
+                    };
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let (ok, failed) = (ok.load(Ordering::SeqCst), failed.load(Ordering::SeqCst));
+    assert_eq!(ok + failed, 64, "exactly one response per request — no hangs, no dupes");
+    assert!(failed >= 1, "the injected panic must surface as at least one 500");
+    assert!(failed <= 4, "only the panicked batch's riders may fail (max_batch=4)");
+
+    // Post-fault bit-identity: the rebuilt worker state must produce
+    // exactly what a clean prepared graph produces.
+    let clean = ModelRegistry::new();
+    clean.install(demo_artifact("alpha", 1, 16, 3), PathBuf::from("<chaos:ref>"));
+    let entry = clean.resolve("alpha").expect("ref entry");
+    let mut state = ExecState::new();
+    let mut client = HttpClient::connect(addr).expect("reconnect");
+    let mut rng = Rng::seeded(4242);
+    for _ in 0..4 {
+        let values = image(&mut rng);
+        let resp = client.infer("alpha", &values).expect("post-fault infer");
+        assert_eq!(resp.status, 200, "post-fault requests must succeed");
+        let got = resp.body_f32().expect("f32 body");
+        let x = Tensor::from_vec(&entry.batched_shape(1), values);
+        let want = entry.plan.run(&x, &mut state);
+        assert_eq!(got.len(), want.data().len());
+        for (g, w) in got.iter().zip(want.data()) {
+            assert_eq!(g.to_bits(), w.to_bits(), "post-fault output diverged from clean twin");
+        }
+    }
+
+    // The panic is visible in the metrics export, counted exactly once.
+    let text = client.get("/metrics").expect("metrics").body_text();
+    assert!(
+        text.contains("iaoi_worker_panics_total{model=\"alpha\"} 1"),
+        "metrics: {text}"
+    );
+    let report = server.shutdown();
+    assert!(report.drained_clean);
+}
+
+#[test]
+fn quarantine_trips_at_exactly_k_and_recovers_on_swap() {
+    // alpha panics on every batch; threshold 2. The breaker must trip at
+    // exactly the second panic — request 1 and 2 answer contained 500s,
+    // request 3 is refused 503 "quarantined" without touching the engine —
+    // and a hot-swap to a healthy version must reset it.
+    let registry = faulted_registry(FaultPlan { panic_every: 1, ..Default::default() });
+    registry.set_quarantine(QuarantineConfig { threshold: 2, ..Default::default() });
+    let server = Server::start(registry, fresh_policy(), 2, ServeConfig::default()).expect("start");
+    let mut client = HttpClient::connect(server.local_addr()).expect("connect");
+    let mut rng = Rng::seeded(9);
+    let img = image(&mut rng);
+
+    for i in 0..2 {
+        let resp = client.infer("alpha", &img).expect("contained failure");
+        assert_eq!(resp.status, 500, "panic {i} must answer a contained 500");
+    }
+    let resp = client.infer("alpha", &img).expect("quarantined rejection");
+    assert_eq!(resp.status, 503, "the breaker must be open after exactly 2 panics");
+    assert!(resp.body_text().contains("\"error\":\"quarantined\""), "body: {}", resp.body_text());
+
+    // Health and metrics agree with the breaker state; the healthy sibling
+    // is untouched.
+    let text = client.get("/healthz").expect("healthz").body_text();
+    assert!(text.contains("\"status\":\"quarantined\""), "health: {text}");
+    assert!(text.contains("\"panics\":2"), "health: {text}");
+    let text = client.get("/metrics").expect("metrics").body_text();
+    assert!(text.contains("iaoi_quarantined{model=\"alpha\"} 1"), "metrics: {text}");
+    assert!(text.contains("iaoi_quarantined{model=\"beta\"} 0"), "metrics: {text}");
+    let resp = client.infer("beta", &img).expect("beta");
+    assert_eq!(resp.status, 200, "a quarantined model must not take its siblings down");
+
+    // Hot-swap alpha to a healthy v2: the breaker resets and the model
+    // serves again under the new version.
+    let dir = std::env::temp_dir().join(format!("iaoi-chaos-swap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let v2 = dir.join("alpha_v2.iaoiq");
+    model_format::write_file(&v2, &demo_artifact("alpha", 2, 16, 3)).expect("write v2");
+    let (old, new) = server.swap_model("alpha", &v2).expect("swap");
+    assert_eq!((old, new), (Some(1), 2));
+    let resp = client.infer("alpha", &img).expect("infer after swap");
+    assert_eq!(resp.status, 200, "swap must lift the quarantine");
+    assert_eq!(resp.header("X-Model-Version"), Some("2"));
+    let text = client.get("/metrics").expect("metrics").body_text();
+    assert!(text.contains("iaoi_quarantined{model=\"alpha\"} 0"), "metrics: {text}");
+
+    let report = server.shutdown();
+    assert!(report.drained_clean);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn expired_deadline_sheds_pre_execution_with_504() {
+    // Socket path: an already-expired X-Deadline-Ms budget is shed by the
+    // worker before execution — 504, batch_size 0, no engine time burned —
+    // while a generous budget executes normally.
+    let registry = ModelRegistry::new();
+    registry.install(demo_artifact("alpha", 1, 16, 3), PathBuf::from("<chaos:alpha>"));
+    let server = Server::start(registry, fresh_policy(), 2, ServeConfig::default()).expect("start");
+    let mut client = HttpClient::connect(server.local_addr()).expect("connect");
+    let mut rng = Rng::seeded(21);
+    let img = image(&mut rng);
+    let resp = client.infer_with_deadline_ms("alpha", &img, 0).expect("expired");
+    assert_eq!(resp.status, 504, "body: {}", resp.body_text());
+    assert!(resp.body_text().contains("\"error\":\"deadline_exceeded\""), "{}", resp.body_text());
+    let resp = client.infer_with_deadline_ms("alpha", &img, 60_000).expect("generous");
+    assert_eq!(resp.status, 200, "a generous deadline must not shed");
+    let text = client.get("/metrics").expect("metrics").body_text();
+    assert!(
+        text.contains("iaoi_deadline_shed_total{model=\"alpha\"} 1"),
+        "metrics: {text}"
+    );
+    let report = server.shutdown();
+    assert!(report.drained_clean);
+
+    // In-process path: the same rail through the routed client directly.
+    let registry = ModelRegistry::new();
+    registry.install(demo_artifact("alpha", 1, 16, 3), PathBuf::from("<chaos:alpha>"));
+    let coord = MultiCoordinator::start(registry, fresh_policy(), 1);
+    let client = coord.client();
+    let entry = coord.registry().resolve("alpha").expect("entry");
+    let x = Tensor::from_vec(&entry.batched_shape(1), image(&mut rng));
+    let resp = client
+        .infer_with_deadline("alpha", x, Some(Instant::now()))
+        .expect("expired submit");
+    assert_eq!(resp.outcome, Outcome::Expired);
+    assert_eq!(resp.batch_size, 0, "an expired request must never join a batch execution");
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.iter().map(|m| m.deadline_shed).sum::<u64>(), 1);
+    assert_eq!(metrics.iter().map(|m| m.completed).sum::<u64>(), 0);
+}
+
+#[test]
+fn poisoned_locks_recover() {
+    // A thread panicking while holding the shared metrics lock must not
+    // wedge the coordinator: every lock in the serving path recovers from
+    // poisoning instead of propagating it.
+    let registry = ModelRegistry::new();
+    registry.install(demo_artifact("alpha", 1, 16, 3), PathBuf::from("<chaos:alpha>"));
+    let coord = MultiCoordinator::start(registry, fresh_policy(), 2);
+    let handle = coord.metrics_handle();
+    let poisoner = std::thread::spawn(move || {
+        let _guard = handle.lock().expect("first holder sees a clean lock");
+        panic!("poison the metrics lock");
+    });
+    assert!(poisoner.join().is_err(), "the poisoner must have panicked");
+
+    // Inference and metrics collection both cross the poisoned lock.
+    let client = coord.client();
+    let entry = coord.registry().resolve("alpha").expect("entry");
+    let mut rng = Rng::seeded(33);
+    let x = Tensor::from_vec(&entry.batched_shape(1), image(&mut rng));
+    let resp = client.infer("alpha", x).expect("infer across a poisoned lock");
+    assert_eq!(resp.output().len(), 16);
+    let metrics = coord.metrics();
+    assert_eq!(metrics.iter().map(|m| m.completed).sum::<u64>(), 1);
+    coord.shutdown();
+}
+
+#[test]
+fn idle_connections_time_out_and_acceptor_caps_connections() {
+    // Two live keep-alive connections fill a cap of 2: the third arrival
+    // is refused at the door with 503 over_capacity. Once the first two go
+    // idle past keep_alive_timeout, the server reaps them and new
+    // connections are admitted again — idle clients cannot pin threads.
+    let cfg = ServeConfig {
+        poll_interval: Duration::from_millis(10),
+        keep_alive_timeout: Duration::from_millis(250),
+        max_connections: 2,
+        ..ServeConfig::default()
+    };
+    let registry = ModelRegistry::new();
+    registry.install(demo_artifact("alpha", 1, 16, 3), PathBuf::from("<chaos:alpha>"));
+    let server = Server::start(registry, fresh_policy(), 2, cfg).expect("start");
+    let addr = server.local_addr();
+    let mut rng = Rng::seeded(27);
+    let img = image(&mut rng);
+
+    let mut first = HttpClient::connect(addr).expect("connect 1");
+    assert_eq!(first.infer("alpha", &img).expect("infer").status, 200);
+    let mut second = HttpClient::connect(addr).expect("connect 2");
+    assert_eq!(second.get("/healthz").expect("healthz").status, 200);
+    let text = first.get("/metrics").expect("metrics").body_text();
+    assert!(text.contains("iaoi_open_connections 2"), "metrics: {text}");
+
+    // Past the cap: the acceptor answers 503 without reading a request.
+    let mut third = HttpClient::connect(addr).expect("connect 3");
+    let resp = third.read_response().expect("over-capacity rejection");
+    assert_eq!(resp.status, 503);
+    assert!(resp.body_text().contains("\"error\":\"over_capacity\""), "{}", resp.body_text());
+    assert!(resp.header("Retry-After").is_some(), "rejection must hint a retry");
+
+    // Let the two admitted connections idle out, then verify a fresh
+    // client is admitted and served.
+    std::thread::sleep(Duration::from_millis(700));
+    let mut fresh = HttpClient::connect(addr).expect("connect after reap");
+    let resp = fresh.infer("alpha", &img).expect("infer after reap");
+    assert_eq!(resp.status, 200, "reaped idle connections must free cap slots");
+    let text = fresh.get("/metrics").expect("metrics").body_text();
+    assert!(text.contains("iaoi_open_connections 1"), "metrics: {text}");
+
+    let report = server.shutdown();
+    assert!(report.drained_clean);
+}

@@ -128,7 +128,7 @@ fn prop_responses_are_deterministic_per_input() {
         let img = image(&mut rng);
         // Reference: direct single-request run.
         let coord1 = Coordinator::start(eng.clone(), BatchPolicy { max_batch: 1, max_delay: Duration::ZERO, ..Default::default() }, 1);
-        let want = coord1.client().infer(img.clone()).unwrap().output;
+        let want = coord1.client().infer(img.clone()).unwrap().output().to_vec();
         coord1.shutdown();
         // Same image inside a noisy burst under the scenario's policy.
         let coord = Coordinator::start(
@@ -146,7 +146,7 @@ fn prop_responses_are_deterministic_per_input() {
             others.push(client.submit(image(&mut rng)).unwrap());
         }
         let (_, rx) = client.submit(img.clone()).unwrap();
-        let got = rx.recv().unwrap().output;
+        let got = rx.recv().unwrap().output().to_vec();
         for (_, orx) in others {
             let _ = orx.recv();
         }
@@ -169,7 +169,7 @@ fn prop_intra_pool_serving_preserves_all_invariants() {
         let serial = Coordinator::start(eng.clone(), BatchPolicy::default(), 1);
         let want: Vec<Vec<f32>> = images
             .iter()
-            .map(|x| serial.client().infer(x.clone()).unwrap().output)
+            .map(|x| serial.client().infer(x.clone()).unwrap().output().to_vec())
             .collect();
         serial.shutdown();
 
@@ -188,7 +188,7 @@ fn prop_intra_pool_serving_preserves_all_invariants() {
         let mut seen = HashSet::new();
         for ((id, rx), want) in pending.into_iter().zip(&want) {
             let resp = rx.recv().expect("response");
-            if resp.id != id || !seen.insert(resp.id) || &resp.output != want {
+            if resp.id != id || !seen.insert(resp.id) || resp.output() != want.as_slice() {
                 return false;
             }
         }
@@ -211,7 +211,7 @@ fn intra_pool_multi_model_serving_is_deterministic() {
         .collect();
     let want: Vec<Vec<f32>> = images
         .iter()
-        .map(|(name, x)| serial.client().infer(name, x.clone()).unwrap().output)
+        .map(|(name, x)| serial.client().infer(name, x.clone()).unwrap().output().to_vec())
         .collect();
     serial.shutdown();
 
@@ -227,7 +227,7 @@ fn intra_pool_multi_model_serving_is_deterministic() {
     for ((id, rx), want) in pending.into_iter().zip(&want) {
         let resp = rx.recv().expect("response");
         assert_eq!(resp.id, id);
-        assert_eq!(&resp.output, want, "pooled multi-model output diverged");
+        assert_eq!(resp.output(), want.as_slice(), "pooled multi-model output diverged");
         assert!(seen.insert(id), "duplicate completion");
     }
     assert_eq!(seen.len(), 12);
@@ -276,7 +276,7 @@ fn routed_requests_complete_on_their_own_model() {
         assert_eq!(resp.id, id);
         assert_eq!(resp.model, name);
         let want_classes = if name == "wide" { 16 } else { 4 };
-        assert_eq!(resp.output.len(), want_classes, "batch mixed models!");
+        assert_eq!(resp.output().len(), want_classes, "batch mixed models!");
         assert!(seen.insert(id), "duplicate completion");
     }
     let metrics = coord.shutdown();
@@ -323,7 +323,7 @@ fn hot_swap_mid_stream_drops_nothing_and_routes_new_traffic_to_v2() {
     for (id, rx) in inflight {
         let resp = rx.recv().expect("in-flight request must survive the swap");
         assert_eq!(resp.id, id);
-        assert_eq!(resp.output.len(), 16);
+        assert_eq!(resp.output().len(), 16);
         assert!(resp.version == 1 || resp.version == 2, "version {}", resp.version);
     }
     // Phase 2: everything submitted after the swap drained must be v2.
@@ -333,7 +333,7 @@ fn hot_swap_mid_stream_drops_nothing_and_routes_new_traffic_to_v2() {
     }
     // The sibling model is untouched.
     let resp = client.infer("narrow", image(&mut rng)).unwrap();
-    assert_eq!((resp.version, resp.output.len()), (1, 4));
+    assert_eq!((resp.version, resp.output().len()), (1, 4));
     coord.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }

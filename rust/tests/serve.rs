@@ -329,6 +329,15 @@ fn metrics_endpoint_exports_quantiles_and_admission_counters() {
         "iaoi_admitted_total{scope=\"global\"} 6",
         "iaoi_shed_total{scope=\"global\"} 0",
         "iaoi_admitted_total{model=\"alpha\"} 6",
+        // Robustness counters: present (and zero) even on a fault-free run,
+        // so dashboards can alert on them without existence checks.
+        "iaoi_requests_failed_total{model=\"alpha\"} 0",
+        "iaoi_worker_panics_total{model=\"alpha\"} 0",
+        "iaoi_worker_panics_total{model=\"_all\"} 0",
+        "iaoi_deadline_shed_total{model=\"_all\"} 0",
+        "iaoi_quarantined{model=\"alpha\"} 0",
+        "iaoi_quarantined{model=\"beta\"} 0",
+        "iaoi_open_connections 1",
         "iaoi_uptime_seconds",
     ] {
         assert!(text.contains(needle), "metrics missing {needle:?}:\n{text}");
