@@ -1,0 +1,46 @@
+//! Build-time probe for AVX-512 intrinsic support.
+//!
+//! The `core::arch::x86_64` AVX-512 intrinsics (`_mm512_madd_epi16` etc.)
+//! stabilized in rustc 1.89; the SSE2/AVX2 ones have been stable since 1.27.
+//! The AVX-512 micro-kernel in `rust/src/gemm/dispatch.rs` is therefore
+//! compiled only when (a) the target is x86-64 and (b) the compiler is new
+//! enough — older toolchains silently fall back to the scalar/SSE2/AVX2 set,
+//! keeping the crate buildable everywhere with zero new dependencies.
+
+use std::process::Command;
+
+fn main() {
+    // Declare the custom cfg so `unexpected_cfgs` stays quiet on toolchains
+    // that check cfg names (rustc >= 1.80 / cargo >= 1.77).
+    println!("cargo::rustc-check-cfg=cfg(iaoi_avx512)");
+    println!("cargo:rerun-if-changed=build.rs");
+    println!("cargo:rerun-if-env-changed=RUSTC");
+    let x86_64 = std::env::var("CARGO_CFG_TARGET_ARCH").as_deref() == Ok("x86_64");
+    if x86_64 && rustc_at_least(1, 89) {
+        println!("cargo:rustc-cfg=iaoi_avx512");
+    }
+}
+
+/// True when `$RUSTC --version` reports at least `major.minor`. Any parse
+/// failure answers `false` — losing the AVX-512 variant is safe, failing the
+/// build is not.
+fn rustc_at_least(major: u32, minor: u32) -> bool {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = match Command::new(rustc).arg("--version").output() {
+        Ok(out) => out,
+        Err(_) => return false,
+    };
+    let text = String::from_utf8_lossy(&out.stdout);
+    // Format: "rustc 1.89.0 (abc123 2025-07-01)" (possibly "-nightly" etc.).
+    let Some(version) = text.split_whitespace().nth(1) else {
+        return false;
+    };
+    let mut parts = version.split(['.', '-']);
+    let (Some(maj), Some(min)) = (
+        parts.next().and_then(|v| v.parse::<u32>().ok()),
+        parts.next().and_then(|v| v.parse::<u32>().ok()),
+    ) else {
+        return false;
+    };
+    maj > major || (maj == major && min >= minor)
+}

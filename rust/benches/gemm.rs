@@ -1,13 +1,25 @@
 //! GEMM micro-benchmarks: the paper's core claim is that the uint8 integer
 //! GEMM (eq. 9 + output pipeline) beats the float GEMM on the same shapes.
 //! Sweeps MobileNet-representative shapes across all three inner kernels
-//! plus the f32 baseline, and reports effective GMAC/s.
+//! plus the f32 baseline, then pits every runtime-dispatched SIMD
+//! micro-kernel ([`iaoi::gemm::dispatch`]) against the scalar tile, and
+//! reports effective GMAC/s.
+//!
+//! Bit-identity guard: a SIMD kernel whose accumulators differ from the
+//! scalar golden output by even one byte gets its timing withheld (the
+//! bench panics) — no speedup may ever be reported on mismatched results.
+//!
+//! Emits `BENCH_gemm.json` with per-kernel cases and the dispatch
+//! selection, so CI can assert the runner picked a non-scalar path and
+//! future PRs have a per-kernel perf trajectory.
 //!
 //! Run: `cargo bench --bench gemm`
+//! (CI runs it under `IAOI_BENCH_SMOKE=1`, whose numbers are not meaningful.)
 
-use iaoi::bench_util::bench;
+use iaoi::bench_util::{bench, smoke_mode};
 use iaoi::data::Rng;
-use iaoi::gemm::{gemm_f32, output::OutputStage, Kernel, QGemm};
+use iaoi::gemm::kernel::accumulate_blocked_with;
+use iaoi::gemm::{dispatch, gemm_f32, output::OutputStage, Kernel, QGemm};
 use iaoi::quant::QuantizedMultiplier;
 
 fn main() {
@@ -47,4 +59,59 @@ fn main() {
         }
         println!();
     }
+
+    // Dispatch sweep: every compiled-and-detected micro-kernel on the raw
+    // eq. 9 accumulation, scalar first so its timing is the baseline.
+    let impls = dispatch::available();
+    println!(
+        "== micro-kernel dispatch sweep (selected: {}, available: {}) ==",
+        dispatch::active().name,
+        impls.iter().map(|d| d.name).collect::<Vec<_>>().join("/"),
+    );
+    let mut cases = Vec::new();
+    for (m, k, n) in shapes {
+        let mut rng = Rng::seeded((m * 3 + k * 7 + n) as u64);
+        let lhs: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let rhs: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        let g = QGemm::new(m, k, n, 77, 201);
+        let mut golden = vec![0i32; m * n];
+        accumulate_blocked_with(dispatch::scalar(), &g, &lhs, &rhs, &mut golden);
+        let macs = (m * k * n) as f64;
+        let mut scalar_ms = f64::NAN;
+        for d in impls.iter().copied() {
+            let mut acc = vec![0i32; m * n];
+            let s = bench(&format!("u8 gemm [{}] {m}x{k}x{n}", d.name), 5, || {
+                accumulate_blocked_with(d, &g, &lhs, &rhs, &mut acc);
+            });
+            // Bit-identity guard: refuse to report a timing for diverging
+            // output.
+            assert!(
+                acc == golden,
+                "{} diverged from scalar at ({m},{k},{n}) — timing withheld",
+                d.name
+            );
+            let ms = s.median_ms();
+            if d.name == "scalar" {
+                scalar_ms = ms;
+            }
+            let gmacs = macs / (ms / 1e3) / 1e9;
+            let speedup = scalar_ms / ms.max(1e-9);
+            println!("    -> {}: {gmacs:.2} GMAC/s ({speedup:.2}x vs scalar)", d.name);
+            cases.push(format!(
+                "    {{\"m\": {m}, \"k\": {k}, \"n\": {n}, \"kernel\": \"{}\", \"gmacs\": {gmacs:.3}, \"speedup_vs_scalar\": {speedup:.3}}}",
+                d.name
+            ));
+        }
+        println!();
+    }
+    println!("selected kernel: {}", dispatch::active().name);
+
+    let json = format!(
+        "{{\n  \"bench\": \"gemm\",\n  \"smoke\": {},\n  \"selected_kernel\": \"{}\",\n  \"cases\": [\n{}\n  ]\n}}\n",
+        smoke_mode(),
+        dispatch::active().name,
+        cases.join(",\n"),
+    );
+    std::fs::write("BENCH_gemm.json", &json).expect("write BENCH_gemm.json");
+    println!("wrote BENCH_gemm.json");
 }

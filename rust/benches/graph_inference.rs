@@ -47,10 +47,13 @@ impl Case {
     }
 
     fn json(&self) -> String {
+        // Every case is tagged with the runtime-dispatched GEMM micro-kernel
+        // so perf trajectories across hosts compare like with like.
         format!(
-            "    {{\"model\": \"{}\", \"quant_mode\": \"{}\", \"batch\": {}, \"unprepared_ops_per_sec\": {:.2}, \"prepared_ops_per_sec\": {:.2}, \"speedup\": {:.3}}}",
+            "    {{\"model\": \"{}\", \"quant_mode\": \"{}\", \"kernel\": \"{}\", \"batch\": {}, \"unprepared_ops_per_sec\": {:.2}, \"prepared_ops_per_sec\": {:.2}, \"speedup\": {:.3}}}",
             self.model,
             self.quant_mode.label(),
+            iaoi::gemm::dispatch::active().name,
             self.batch,
             self.ops(&self.unprepared),
             self.ops(&self.prepared),
@@ -258,8 +261,9 @@ fn main() {
         .map(IntraCase::pool_vs_scoped)
         .unwrap_or(1.0);
     let json = format!(
-        "{{\n  \"bench\": \"graph_inference\",\n  \"smoke\": {},\n  \"cases\": [\n{}\n  ],\n  \"intra_cases\": [\n{}\n  ],\n  \"demo_speedup_single\": {:.3},\n  \"demo_speedup_batched\": {:.3},\n  \"pool_vs_scoped_batched\": {:.3}\n}}\n",
+        "{{\n  \"bench\": \"graph_inference\",\n  \"smoke\": {},\n  \"selected_kernel\": \"{}\",\n  \"cases\": [\n{}\n  ],\n  \"intra_cases\": [\n{}\n  ],\n  \"demo_speedup_single\": {:.3},\n  \"demo_speedup_batched\": {:.3},\n  \"pool_vs_scoped_batched\": {:.3}\n}}\n",
         smoke_mode(),
+        iaoi::gemm::dispatch::active().name,
         cases.iter().map(Case::json).collect::<Vec<_>>().join(",\n"),
         intra_cases.iter().map(IntraCase::json).collect::<Vec<_>>().join(",\n"),
         demo_single.speedup(),

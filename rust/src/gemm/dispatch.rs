@@ -1,0 +1,673 @@
+//! Runtime-dispatched SIMD micro-kernels for the blocked uint8 GEMM.
+//!
+//! The tile constants (`MR=8`, `NR=16`, `KC=256`, see [`super::kernel`])
+//! were sized for AVX-512-width lanes, but until this module the inner
+//! kernel was scalar Rust. Here the MR×NR micro-kernel gets hand-written
+//! `core::arch::x86_64` variants — SSE2, AVX2, and (toolchain permitting)
+//! AVX-512 — selected **once** per process behind
+//! `is_x86_feature_detected!`, with the scalar kernel as the always-on
+//! fallback for non-x86 targets and for `IAOI_KERNEL=scalar` runs.
+//!
+//! # The pmaddwd schedule
+//!
+//! All SIMD variants use the same arithmetic: uint8 operands are
+//! zero-extended to i16 at pack time, and `pmaddwd`
+//! (`_mm_madd_epi16` / `_mm256_madd_epi16` / `_mm512_madd_epi16`)
+//! multiplies adjacent i16 pairs and adds each pair into an i32 lane —
+//! two depth steps per instruction. This is exact: products are at most
+//! `255·255 = 65025` and a pair sum at most `130050`, far inside i16×i16
+//! product range (`pmaddwd` can only saturate when *both* products are
+//! `(-32768)²`, which zero-extended u8 inputs can never produce). A KC=256
+//! depth block accumulates at most `256·65025 ≈ 16.6M` per lane — no i32
+//! overflow — and integer addition is associative, so any accumulation
+//! order (scalar, 2-wide pairs, multi-register ILP splits) produces
+//! **byte-identical** i32 accumulators. Bit-identity across every path is
+//! enforced by tests here, in `rust/tests/kernels.rs`, and by the GEMM
+//! bench, which refuses to report a speedup on mismatched outputs.
+//!
+//! # Packed-RHS "pairs" layout (shared by all SIMD levels)
+//!
+//! For each NR-column block and each depth *pair* `p` (`kc.div_ceil(2)`
+//! of them), 64 bytes hold the NR columns as i16 pairs: column `c` lives
+//! at byte `p·64 + c·4` as `[v₀, 0, v₁, 0]` (little-endian i16
+//! zero-extension of rows `2p` and `2p+1`; the odd-`kc` tail row packs
+//! `v₁ = 0`). One `_mm_loadu_si128` reads 4 columns, one
+//! `_mm256_loadu_si256` reads 8, one 64-byte load reads all NR=16 — the
+//! same bytes serve every ISA width. The LHS side needs no repack: two
+//! weights broadcast as `_mm_set1_epi32(a₀ | a₁ « 16)` against the whole
+//! row of column pairs.
+//!
+//! # Safety invariant
+//!
+//! Calling the function pointers of a descriptor whose CPU features are
+//! not present is **undefined behavior** (illegal instruction at best).
+//! Descriptors must therefore be obtained through [`resolve`],
+//! [`available`], [`best`], or [`active`] — each checks
+//! `is_x86_feature_detected!` first. [`all`] exists for listing names in
+//! diagnostics only.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+use super::kernel::{MR, NR};
+
+/// One MR×NR i32 accumulator tile.
+pub type Tile = [[i32; NR]; MR];
+
+/// A micro-kernel implementation: a name (stable — used by `IAOI_KERNEL`,
+/// `/metrics`, `/healthz`, and bench JSON), a packing routine producing the
+/// RHS panel layout this kernel reads, the packed-panel size formula, and
+/// the tile routine itself.
+///
+/// `pack_rhs(rhs, k0, kc, stride, n0, nn, packed)` packs `kc` depth rows
+/// starting at row `k0` of a row-major RHS with row stride `stride`,
+/// columns `[n0, n0+nn)`, into `nn.div_ceil(NR)` blocks of `panel_len(kc)`
+/// bytes each (tail columns zero-padded).
+///
+/// `tile(lhs, off, row_stride, depth_stride, mr, kc, panel, tile)`
+/// **overwrites** rows `0..mr` of the tile with the raw uint8 dot products
+/// over one packed NR-column panel; rows `mr..` are unspecified. The LHS
+/// is an affine view: element `(r, j)` of the logical `mr×kc` operand is
+/// `lhs[off + r·row_stride + j·depth_stride]`, which serves both the
+/// unprepared row-major LHS (`row_stride = K`, `depth_stride = 1`) and the
+/// prepared `MR`-interleaved panels (`row_stride = 1`, `depth_stride =
+/// MR`) without copies.
+pub struct KernelDispatch {
+    pub name: &'static str,
+    pub pack_rhs: fn(&[u8], usize, usize, usize, usize, usize, &mut [u8]),
+    pub panel_len: fn(usize) -> usize,
+    pub tile: fn(&[u8], usize, usize, usize, usize, usize, &[u8], &mut Tile),
+}
+
+impl fmt::Debug for KernelDispatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("KernelDispatch").field("name", &self.name).finish_non_exhaustive()
+    }
+}
+
+/// The always-available scalar micro-kernel — arithmetic identical to the
+/// pre-dispatch blocked kernel, and the golden reference every SIMD path
+/// must match bit-for-bit.
+pub static SCALAR: KernelDispatch = KernelDispatch {
+    name: "scalar",
+    pack_rhs: pack_rhs_scalar,
+    panel_len: panel_len_scalar,
+    tile: tile_scalar,
+};
+
+#[cfg(all(target_arch = "x86_64", iaoi_avx512))]
+static ALL: [&KernelDispatch; 4] = [&SCALAR, &x86::SSE2, &x86::AVX2, &x86::AVX512];
+#[cfg(all(target_arch = "x86_64", not(iaoi_avx512)))]
+static ALL: [&KernelDispatch; 3] = [&SCALAR, &x86::SSE2, &x86::AVX2];
+#[cfg(not(target_arch = "x86_64"))]
+static ALL: [&KernelDispatch; 1] = [&SCALAR];
+
+/// Every compiled-in kernel, in ascending preference order. Includes
+/// kernels the current CPU may not support — for diagnostics; run only
+/// descriptors from [`available`]/[`resolve`]/[`best`]/[`active`].
+pub fn all() -> &'static [&'static KernelDispatch] {
+    &ALL
+}
+
+/// The scalar fallback (always safe to run).
+pub fn scalar() -> &'static KernelDispatch {
+    &SCALAR
+}
+
+/// Does the current CPU support this kernel's instructions?
+fn detected(d: &KernelDispatch) -> bool {
+    match d.name {
+        "scalar" => true,
+        #[cfg(target_arch = "x86_64")]
+        "sse2" => std::arch::is_x86_feature_detected!("sse2"),
+        #[cfg(target_arch = "x86_64")]
+        "avx2" => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(iaoi_avx512)]
+        "avx512" => {
+            // madd needs BW; F alone (Knights-era) is not enough.
+            std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx512bw")
+        }
+        _ => false,
+    }
+}
+
+/// The kernels this CPU can actually run, ascending preference (scalar
+/// first — convenient as the golden baseline in sweeps).
+pub fn available() -> Vec<&'static KernelDispatch> {
+    ALL.iter().copied().filter(|d| detected(d)).collect()
+}
+
+/// The fastest kernel supported by this CPU.
+pub fn best() -> &'static KernelDispatch {
+    *available().last().expect("scalar is always available")
+}
+
+/// Look up a kernel by name, verifying the CPU supports it. Errors name
+/// the valid choices so `IAOI_KERNEL` typos are self-explanatory.
+pub fn resolve(name: &str) -> Result<&'static KernelDispatch, String> {
+    let Some(d) = ALL.iter().copied().find(|d| d.name == name) else {
+        let known: Vec<&str> = ALL.iter().map(|d| d.name).collect();
+        return Err(format!(
+            "unknown kernel {name:?}; compiled-in kernels: {}",
+            known.join(", ")
+        ));
+    };
+    if !detected(d) {
+        let avail: Vec<&str> = available().iter().map(|d| d.name).collect();
+        return Err(format!(
+            "kernel {name:?} is not supported by this CPU; available: {}",
+            avail.join(", ")
+        ));
+    }
+    Ok(d)
+}
+
+static ACTIVE: OnceLock<&'static KernelDispatch> = OnceLock::new();
+
+/// The process-wide kernel: `IAOI_KERNEL=scalar|sse2|avx2|avx512` if set
+/// (panicking on unknown/unsupported names — a forced kernel that silently
+/// fell back would invalidate benchmarks), otherwise [`best`]. Resolved
+/// once and cached; every GEMM path (unprepared, prepared, parallel, pool)
+/// starts from this unless a plan overrides it via
+/// [`super::PreparedGemm::set_ukernel`].
+pub fn active() -> &'static KernelDispatch {
+    ACTIVE.get_or_init(|| match std::env::var("IAOI_KERNEL") {
+        Ok(name) => match resolve(name.trim()) {
+            Ok(d) => d,
+            Err(e) => panic!("IAOI_KERNEL: {e}"),
+        },
+        Err(_) => best(),
+    })
+}
+
+/// Scalar panel: `kc` rows of `NR` u8 each, `[kc][NR]`.
+fn panel_len_scalar(kc: usize) -> usize {
+    kc * NR
+}
+
+/// Scalar packing: `[block][kc][NR]` u8 order (zero-padded tail columns) —
+/// the layout the original blocked kernel used.
+fn pack_rhs_scalar(
+    rhs: &[u8],
+    k0: usize,
+    kc: usize,
+    stride: usize,
+    n0: usize,
+    nn: usize,
+    packed: &mut [u8],
+) {
+    for b in 0..nn.div_ceil(NR) {
+        let b0 = b * NR;
+        let nr = NR.min(nn - b0);
+        let dst_base = b * kc * NR;
+        for j in 0..kc {
+            let src = &rhs[(k0 + j) * stride + n0 + b0..(k0 + j) * stride + n0 + b0 + nr];
+            let dst = &mut packed[dst_base + j * NR..dst_base + j * NR + NR];
+            dst[..nr].copy_from_slice(src);
+            dst[nr..].fill(0);
+        }
+    }
+}
+
+/// Scalar MR×NR tile over one packed NR-column panel. Overwrites rows
+/// `0..mr`; this exact loop is what every SIMD variant must reproduce
+/// bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn tile_scalar(
+    lhs: &[u8],
+    off: usize,
+    row_stride: usize,
+    depth_stride: usize,
+    mr: usize,
+    kc: usize,
+    panel: &[u8],
+    tile: &mut Tile,
+) {
+    for row in tile.iter_mut().take(mr) {
+        *row = [0; NR];
+    }
+    for (j, rrow) in panel.chunks_exact(NR).take(kc).enumerate() {
+        for (r, trow) in tile.iter_mut().take(mr).enumerate() {
+            let a = i32::from(lhs[off + r * row_stride + j * depth_stride]);
+            for (t, &v) in trow.iter_mut().zip(rrow) {
+                *t += a * i32::from(v);
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! x86-64 micro-kernels. Every `unsafe fn` here requires its
+    //! `#[target_feature]` set to be present; the safe wrappers are only
+    //! reachable through descriptors that [`super::detected`] vetted.
+
+    use core::arch::x86_64::*;
+
+    use super::{KernelDispatch, Tile, NR};
+
+    pub static SSE2: KernelDispatch = KernelDispatch {
+        name: "sse2",
+        pack_rhs: pack_rhs_pairs,
+        panel_len: panel_len_pairs,
+        tile: tile_sse2,
+    };
+
+    pub static AVX2: KernelDispatch = KernelDispatch {
+        name: "avx2",
+        pack_rhs: pack_rhs_pairs,
+        panel_len: panel_len_pairs,
+        tile: tile_avx2,
+    };
+
+    #[cfg(iaoi_avx512)]
+    pub static AVX512: KernelDispatch = KernelDispatch {
+        name: "avx512",
+        pack_rhs: pack_rhs_pairs,
+        panel_len: panel_len_pairs,
+        tile: tile_avx512,
+    };
+
+    /// Pairs panel: `kc.div_ceil(2)` pair-rows of NR i16-pair columns,
+    /// 4 bytes per column per pair-row.
+    pub(super) fn panel_len_pairs(kc: usize) -> usize {
+        kc.div_ceil(2) * NR * 4
+    }
+
+    /// Pack into the shared SIMD pairs layout (module docs): column `c` of
+    /// depth pair `p` at byte `p·64 + c·4` as `[v₀, 0, v₁, 0]` — u8 rows
+    /// `2p` and `2p+1` zero-extended to little-endian i16. Tail columns and
+    /// the odd-`kc` missing row pack as zero.
+    pub(super) fn pack_rhs_pairs(
+        rhs: &[u8],
+        k0: usize,
+        kc: usize,
+        stride: usize,
+        n0: usize,
+        nn: usize,
+        packed: &mut [u8],
+    ) {
+        let blen = panel_len_pairs(kc);
+        let pairs = kc.div_ceil(2);
+        for b in 0..nn.div_ceil(NR) {
+            let b0 = b * NR;
+            let nr = NR.min(nn - b0);
+            let dst = &mut packed[b * blen..(b + 1) * blen];
+            dst.fill(0);
+            for p in 0..pairs {
+                let j0 = 2 * p;
+                let prow = &mut dst[p * NR * 4..(p + 1) * NR * 4];
+                let src0 = (k0 + j0) * stride + n0 + b0;
+                for (c, &v) in rhs[src0..src0 + nr].iter().enumerate() {
+                    prow[c * 4] = v;
+                }
+                if j0 + 1 < kc {
+                    let src1 = (k0 + j0 + 1) * stride + n0 + b0;
+                    for (c, &v) in rhs[src1..src1 + nr].iter().enumerate() {
+                        prow[c * 4 + 2] = v;
+                    }
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn tile_sse2(
+        lhs: &[u8],
+        off: usize,
+        row_stride: usize,
+        depth_stride: usize,
+        mr: usize,
+        kc: usize,
+        panel: &[u8],
+        tile: &mut Tile,
+    ) {
+        // SAFETY: this descriptor is only handed out by resolve/available/
+        // best/active after `is_x86_feature_detected!("sse2")` (module-level
+        // safety invariant); slice bounds are asserted inside.
+        unsafe { tile_sse2_impl(lhs, off, row_stride, depth_stride, mr, kc, panel, tile) }
+    }
+
+    /// SSE2 tile: 4 XMM accumulators cover the NR=16 columns of one row;
+    /// each `pmaddwd` advances two depth steps for 4 columns.
+    #[target_feature(enable = "sse2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn tile_sse2_impl(
+        lhs: &[u8],
+        off: usize,
+        row_stride: usize,
+        depth_stride: usize,
+        mr: usize,
+        kc: usize,
+        panel: &[u8],
+        tile: &mut Tile,
+    ) {
+        let full = kc / 2;
+        assert!(panel.len() >= kc.div_ceil(2) * NR * 4, "panel too short for kc");
+        let pp = panel.as_ptr();
+        for (r, trow) in tile.iter_mut().take(mr).enumerate() {
+            let row = off + r * row_stride;
+            let mut acc0 = _mm_setzero_si128();
+            let mut acc1 = _mm_setzero_si128();
+            let mut acc2 = _mm_setzero_si128();
+            let mut acc3 = _mm_setzero_si128();
+            for p in 0..full {
+                let a0 = i32::from(lhs[row + 2 * p * depth_stride]);
+                let a1 = i32::from(lhs[row + (2 * p + 1) * depth_stride]);
+                let aa = _mm_set1_epi32(a0 | (a1 << 16));
+                let base = pp.add(p * NR * 4);
+                acc0 = _mm_add_epi32(acc0, _mm_madd_epi16(_mm_loadu_si128(base.cast()), aa));
+                acc1 =
+                    _mm_add_epi32(acc1, _mm_madd_epi16(_mm_loadu_si128(base.add(16).cast()), aa));
+                acc2 =
+                    _mm_add_epi32(acc2, _mm_madd_epi16(_mm_loadu_si128(base.add(32).cast()), aa));
+                acc3 =
+                    _mm_add_epi32(acc3, _mm_madd_epi16(_mm_loadu_si128(base.add(48).cast()), aa));
+            }
+            if kc % 2 == 1 {
+                // Tail half-pair: the packed v₁ lane is zero, and the
+                // broadcast's high i16 is zero too.
+                let aa = _mm_set1_epi32(i32::from(lhs[row + (kc - 1) * depth_stride]));
+                let base = pp.add(full * NR * 4);
+                acc0 = _mm_add_epi32(acc0, _mm_madd_epi16(_mm_loadu_si128(base.cast()), aa));
+                acc1 =
+                    _mm_add_epi32(acc1, _mm_madd_epi16(_mm_loadu_si128(base.add(16).cast()), aa));
+                acc2 =
+                    _mm_add_epi32(acc2, _mm_madd_epi16(_mm_loadu_si128(base.add(32).cast()), aa));
+                acc3 =
+                    _mm_add_epi32(acc3, _mm_madd_epi16(_mm_loadu_si128(base.add(48).cast()), aa));
+            }
+            let out = trow.as_mut_ptr();
+            _mm_storeu_si128(out.cast(), acc0);
+            _mm_storeu_si128(out.add(4).cast(), acc1);
+            _mm_storeu_si128(out.add(8).cast(), acc2);
+            _mm_storeu_si128(out.add(12).cast(), acc3);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn tile_avx2(
+        lhs: &[u8],
+        off: usize,
+        row_stride: usize,
+        depth_stride: usize,
+        mr: usize,
+        kc: usize,
+        panel: &[u8],
+        tile: &mut Tile,
+    ) {
+        // SAFETY: descriptor vetted by is_x86_feature_detected!("avx2")
+        // before being handed out; bounds asserted inside.
+        unsafe { tile_avx2_impl(lhs, off, row_stride, depth_stride, mr, kc, panel, tile) }
+    }
+
+    /// AVX2 tile: 2 YMM accumulators per row (8 columns each).
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn tile_avx2_impl(
+        lhs: &[u8],
+        off: usize,
+        row_stride: usize,
+        depth_stride: usize,
+        mr: usize,
+        kc: usize,
+        panel: &[u8],
+        tile: &mut Tile,
+    ) {
+        let full = kc / 2;
+        assert!(panel.len() >= kc.div_ceil(2) * NR * 4, "panel too short for kc");
+        let pp = panel.as_ptr();
+        for (r, trow) in tile.iter_mut().take(mr).enumerate() {
+            let row = off + r * row_stride;
+            let mut acc0 = _mm256_setzero_si256();
+            let mut acc1 = _mm256_setzero_si256();
+            for p in 0..full {
+                let a0 = i32::from(lhs[row + 2 * p * depth_stride]);
+                let a1 = i32::from(lhs[row + (2 * p + 1) * depth_stride]);
+                let aa = _mm256_set1_epi32(a0 | (a1 << 16));
+                let base = pp.add(p * NR * 4);
+                acc0 = _mm256_add_epi32(
+                    acc0,
+                    _mm256_madd_epi16(_mm256_loadu_si256(base.cast()), aa),
+                );
+                acc1 = _mm256_add_epi32(
+                    acc1,
+                    _mm256_madd_epi16(_mm256_loadu_si256(base.add(32).cast()), aa),
+                );
+            }
+            if kc % 2 == 1 {
+                let aa = _mm256_set1_epi32(i32::from(lhs[row + (kc - 1) * depth_stride]));
+                let base = pp.add(full * NR * 4);
+                acc0 = _mm256_add_epi32(
+                    acc0,
+                    _mm256_madd_epi16(_mm256_loadu_si256(base.cast()), aa),
+                );
+                acc1 = _mm256_add_epi32(
+                    acc1,
+                    _mm256_madd_epi16(_mm256_loadu_si256(base.add(32).cast()), aa),
+                );
+            }
+            let out = trow.as_mut_ptr();
+            _mm256_storeu_si256(out.cast(), acc0);
+            _mm256_storeu_si256(out.add(8).cast(), acc1);
+        }
+    }
+
+    #[cfg(iaoi_avx512)]
+    #[allow(clippy::too_many_arguments)]
+    fn tile_avx512(
+        lhs: &[u8],
+        off: usize,
+        row_stride: usize,
+        depth_stride: usize,
+        mr: usize,
+        kc: usize,
+        panel: &[u8],
+        tile: &mut Tile,
+    ) {
+        // SAFETY: descriptor vetted by is_x86_feature_detected! for both
+        // avx512f and avx512bw before being handed out; bounds asserted
+        // inside.
+        unsafe { tile_avx512_impl(lhs, off, row_stride, depth_stride, mr, kc, panel, tile) }
+    }
+
+    /// AVX-512 tile: one ZMM covers the whole NR=16-column row; two
+    /// accumulators interleave even/odd depth pairs for ILP and are summed
+    /// once at the end (exact i32 adds — order cannot change the result).
+    #[cfg(iaoi_avx512)]
+    #[target_feature(enable = "avx512f,avx512bw")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn tile_avx512_impl(
+        lhs: &[u8],
+        off: usize,
+        row_stride: usize,
+        depth_stride: usize,
+        mr: usize,
+        kc: usize,
+        panel: &[u8],
+        tile: &mut Tile,
+    ) {
+        let full = kc / 2;
+        assert!(panel.len() >= kc.div_ceil(2) * NR * 4, "panel too short for kc");
+        let pp = panel.as_ptr();
+        for (r, trow) in tile.iter_mut().take(mr).enumerate() {
+            let row = off + r * row_stride;
+            let mut acc_a = _mm512_setzero_si512();
+            let mut acc_b = _mm512_setzero_si512();
+            let mut p = 0;
+            while p + 2 <= full {
+                let a0 = i32::from(lhs[row + 2 * p * depth_stride]);
+                let a1 = i32::from(lhs[row + (2 * p + 1) * depth_stride]);
+                let b0 = i32::from(lhs[row + (2 * p + 2) * depth_stride]);
+                let b1 = i32::from(lhs[row + (2 * p + 3) * depth_stride]);
+                let va = core::ptr::read_unaligned(pp.add(p * NR * 4) as *const __m512i);
+                let vb = core::ptr::read_unaligned(pp.add((p + 1) * NR * 4) as *const __m512i);
+                let aa = _mm512_set1_epi32(a0 | (a1 << 16));
+                let bb = _mm512_set1_epi32(b0 | (b1 << 16));
+                acc_a = _mm512_add_epi32(acc_a, _mm512_madd_epi16(va, aa));
+                acc_b = _mm512_add_epi32(acc_b, _mm512_madd_epi16(vb, bb));
+                p += 2;
+            }
+            if p < full {
+                let a0 = i32::from(lhs[row + 2 * p * depth_stride]);
+                let a1 = i32::from(lhs[row + (2 * p + 1) * depth_stride]);
+                let va = core::ptr::read_unaligned(pp.add(p * NR * 4) as *const __m512i);
+                let aa = _mm512_set1_epi32(a0 | (a1 << 16));
+                acc_a = _mm512_add_epi32(acc_a, _mm512_madd_epi16(va, aa));
+            }
+            if kc % 2 == 1 {
+                let aa = _mm512_set1_epi32(i32::from(lhs[row + (kc - 1) * depth_stride]));
+                let va = core::ptr::read_unaligned(pp.add(full * NR * 4) as *const __m512i);
+                acc_b = _mm512_add_epi32(acc_b, _mm512_madd_epi16(va, aa));
+            }
+            let acc = _mm512_add_epi32(acc_a, acc_b);
+            core::ptr::write_unaligned(trow.as_mut_ptr() as *mut __m512i, acc);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::kernel::KC;
+    use super::*;
+
+    fn pseudo(seed: u64, n: usize) -> Vec<u8> {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (state >> 56) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scalar_packing_is_lossless() {
+        let n = 19; // not a multiple of NR
+        let k = 7;
+        let rhs = pseudo(3, k * n);
+        let mut packed = vec![0u8; n.div_ceil(NR) * panel_len_scalar(k)];
+        pack_rhs_scalar(&rhs, 0, k, n, 0, n, &mut packed);
+        for j in 0..k {
+            for c in 0..n {
+                let block = c / NR;
+                let within = c % NR;
+                assert_eq!(packed[block * k * NR + j * NR + within], rhs[j * n + c]);
+            }
+        }
+        // Tail columns of the last block are zero-padded.
+        let last = (n.div_ceil(NR) - 1) * k * NR;
+        for j in 0..k {
+            for within in n % NR..NR {
+                assert_eq!(packed[last + j * NR + within], 0);
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn pairs_packing_is_lossless_and_zero_extended() {
+        for (k, n) in [(7, 19), (8, 16), (1, 1), (KC, NR + 1)] {
+            let rhs = pseudo(k as u64 * 31 + n as u64, k * n);
+            let blen = x86::panel_len_pairs(k);
+            let mut packed = vec![0xAAu8; n.div_ceil(NR) * blen];
+            x86::pack_rhs_pairs(&rhs, 0, k, n, 0, n, &mut packed);
+            for j in 0..k {
+                for c in 0..n {
+                    let block = c / NR;
+                    let within = c % NR;
+                    let p = j / 2;
+                    let lane = j % 2; // v0 at byte 0, v1 at byte 2
+                    let off = block * blen + p * NR * 4 + within * 4 + lane * 2;
+                    assert_eq!(packed[off], rhs[j * n + c], "({k},{n}) element ({j},{c})");
+                    assert_eq!(packed[off + 1], 0, "high i16 byte must be zero");
+                }
+            }
+            // Odd-k tail row packs v1 = 0 everywhere.
+            if k % 2 == 1 {
+                let p = k / 2;
+                for block in 0..n.div_ceil(NR) {
+                    for within in 0..NR {
+                        let off = block * blen + p * NR * 4 + within * 4 + 2;
+                        assert_eq!(packed[off], 0);
+                        assert_eq!(packed[off + 1], 0);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Every available tile impl must reproduce the scalar tile exactly,
+    /// across mr/kc tails and u8 extremes, on both LHS access patterns
+    /// (row-major and MR-interleaved).
+    #[test]
+    fn every_available_tile_matches_scalar() {
+        for d in available() {
+            if d.name == "scalar" {
+                continue;
+            }
+            for (mr, kc) in [(1, 1), (MR, 2), (MR, KC), (3, 7), (MR - 1, KC - 1), (5, 100), (2, 33)]
+            {
+                // Row-major LHS (unprepared path): row_stride = kc, depth 1.
+                let lhs = pseudo(mr as u64 * 7 + kc as u64, mr * kc);
+                let n = NR; // one full block
+                let mut rhs = pseudo(kc as u64 * 13 + 5, kc * n);
+                // Salt in extremes.
+                if !rhs.is_empty() {
+                    rhs[0] = 0;
+                    let last = rhs.len() - 1;
+                    rhs[last] = 255;
+                }
+                let mut p_want = vec![0u8; panel_len_scalar(kc)];
+                let mut p_got = vec![0u8; (d.panel_len)(kc)];
+                pack_rhs_scalar(&rhs, 0, kc, n, 0, n, &mut p_want);
+                (d.pack_rhs)(&rhs, 0, kc, n, 0, n, &mut p_got);
+                let mut want: Tile = [[0; NR]; MR];
+                let mut got: Tile = [[0; NR]; MR];
+                tile_scalar(&lhs, 0, kc, 1, mr, kc, &p_want, &mut want);
+                (d.tile)(&lhs, 0, kc, 1, mr, kc, &p_got, &mut got);
+                assert_eq!(want[..mr], got[..mr], "{} row-major mr={mr} kc={kc}", d.name);
+
+                // MR-interleaved LHS (prepared path): row_stride 1, depth MR.
+                let mut inter = vec![0u8; kc * MR];
+                for r in 0..mr {
+                    for j in 0..kc {
+                        inter[j * MR + r] = lhs[r * kc + j];
+                    }
+                }
+                let mut got2: Tile = [[0; NR]; MR];
+                (d.tile)(&inter, 0, 1, MR, mr, kc, &p_got, &mut got2);
+                assert_eq!(want[..mr], got2[..mr], "{} interleaved mr={mr} kc={kc}", d.name);
+            }
+        }
+    }
+
+    #[test]
+    fn resolution_invariants() {
+        // Scalar is always compiled in, detected, and resolvable.
+        assert_eq!(scalar().name, "scalar");
+        assert_eq!(resolve("scalar").unwrap().name, "scalar");
+        // available() is a prefix-preserving subset of all(), scalar first.
+        let avail = available();
+        assert_eq!(avail.first().unwrap().name, "scalar");
+        for d in &avail {
+            assert!(all().iter().any(|a| a.name == d.name));
+            assert_eq!(resolve(d.name).unwrap().name, d.name);
+        }
+        // best() is the last available kernel.
+        assert_eq!(best().name, avail.last().unwrap().name);
+        // Unknown names fail with a message listing valid kernels.
+        let err = resolve("neon").unwrap_err();
+        assert!(err.contains("scalar"), "error should list kernels: {err}");
+        // The cached active kernel is one of the available ones.
+        assert!(avail.iter().any(|d| d.name == active().name));
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn sse2_is_baseline_on_x86_64() {
+        // SSE2 is part of the x86-64 baseline; every x86-64 CPU has it.
+        assert!(available().iter().any(|d| d.name == "sse2"));
+    }
+}

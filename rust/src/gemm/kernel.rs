@@ -10,102 +10,91 @@
 //! an `MR×NR` accumulator tile. Sizes are tuned for the single x86-64 core
 //! this testbed provides (see EXPERIMENTS.md §Perf for the measurements that
 //! picked them).
+//!
+//! The MR×NR inner tile itself is provided by a [`super::dispatch`]
+//! descriptor — scalar always, SSE2/AVX2/AVX-512 where the CPU supports
+//! them, selected once per process (override with `IAOI_KERNEL`). All
+//! descriptors are bit-identical by construction and by test.
 
+use std::cell::RefCell;
+
+use super::dispatch::{self, KernelDispatch};
 use super::QGemm;
 
 /// Rows of LHS per register tile. Shared with the prepared-plan path
-/// ([`super::prepared`]) so packed-LHS panels line up with this kernel's
-/// register tiling.
-pub(crate) const MR: usize = 8;
+/// ([`super::prepared`]) and the SIMD tiles ([`super::dispatch`]) so packed
+/// LHS panels line up with the kernels' register tiling.
+pub const MR: usize = 8;
 /// Columns of RHS per register tile (16 i32 lanes = one AVX-512 register).
-pub(crate) const NR: usize = 16;
+pub const NR: usize = 16;
 /// K-dimension cache block.
-pub(crate) const KC: usize = 256;
+pub const KC: usize = 256;
 
-/// Blocked accumulation of eq. 7 into `acc` (row-major `M×N`).
+thread_local! {
+    /// Reusable packed-RHS scratch for the unprepared path: grows to the
+    /// high-water mark once per thread, then every `accumulate_blocked`
+    /// call packs into it allocation-free (the prepared path has its own
+    /// per-worker [`super::Scratch`]).
+    static PACKED_RHS: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Blocked accumulation of eq. 7 into `acc` (row-major `M×N`), using the
+/// process-wide [`dispatch::active`] micro-kernel.
 pub fn accumulate_blocked(g: &QGemm, lhs: &[u8], rhs: &[u8], acc: &mut [i32]) {
+    accumulate_blocked_with(dispatch::active(), g, lhs, rhs, acc)
+}
+
+/// [`accumulate_blocked`] with an explicit micro-kernel — the hook the
+/// cross-kernel property tests and the `bench --table kernels` sweep use to
+/// pit every available implementation against the scalar golden output.
+pub fn accumulate_blocked_with(
+    d: &KernelDispatch,
+    g: &QGemm,
+    lhs: &[u8],
+    rhs: &[u8],
+    acc: &mut [i32],
+) {
     let (m, k, n) = (g.m, g.k, g.n);
     if m == 0 || n == 0 {
         return;
     }
     acc.fill(0);
 
-    // Raw Σ q1·q2 with blocking over K.
-    let mut packed_rhs = vec![0u8; KC * n.div_ceil(NR) * NR];
-    for k0 in (0..k).step_by(KC) {
-        let kc = KC.min(k - k0);
-        // Pack the RHS panel so the micro-kernel reads it sequentially:
-        // layout [n0/NR][j][nr] — NR consecutive columns interleaved by j.
-        pack_rhs_panel(rhs, k0, kc, n, &mut packed_rhs);
-        for i0 in (0..m).step_by(MR) {
-            let mr = MR.min(m - i0);
-            for n0 in (0..n).step_by(NR) {
-                let nr = NR.min(n - n0);
-                micro_kernel(
-                    lhs, acc, i0, mr, k0, kc, k, n0, nr, n, &packed_rhs,
-                );
+    // Raw Σ q1·q2 with blocking over K. The packed panel is sized for the
+    // largest K block; panel_len is monotonic in kc, so later (smaller)
+    // blocks always fit.
+    let blocks = n.div_ceil(NR);
+    PACKED_RHS.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        let packed = super::prepared::grow(&mut *buf, blocks * (d.panel_len)(KC.min(k)));
+        for k0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - k0);
+            let blen = (d.panel_len)(kc);
+            (d.pack_rhs)(rhs, k0, kc, n, 0, n, &mut packed[..blocks * blen]);
+            for i0 in (0..m).step_by(MR) {
+                let mr = MR.min(m - i0);
+                for (b, panel) in packed[..blocks * blen].chunks_exact(blen).enumerate() {
+                    let n0 = b * NR;
+                    let nr = NR.min(n - n0);
+                    let mut tile = [[0i32; NR]; MR];
+                    // Row-major LHS view: element (r, j) of the mr×kc
+                    // operand is lhs[(i0 + r)·k + k0 + j].
+                    (d.tile)(lhs, i0 * k + k0, k, 1, mr, kc, panel, &mut tile);
+                    for r in 0..mr {
+                        let out = &mut acc[(i0 + r) * n + n0..(i0 + r) * n + n0 + nr];
+                        for (o, &t) in out.iter_mut().zip(&tile[r][..nr]) {
+                            *o += t;
+                        }
+                    }
+                }
             }
         }
-    }
+    });
 
     // O(M·N) zero-point corrections (eq. 7).
     let rs = g.lhs_row_sums(lhs);
     let cs = g.rhs_col_sums(rhs);
     g.apply_zero_point_corrections(acc, &rs, &cs);
-}
-
-/// Pack `kc` rows of the RHS starting at row `k0` into `[ceil(n/NR)][kc][NR]`
-/// order (zero-padded in the tail column block).
-fn pack_rhs_panel(rhs: &[u8], k0: usize, kc: usize, n: usize, packed: &mut [u8]) {
-    let blocks = n.div_ceil(NR);
-    for b in 0..blocks {
-        let n0 = b * NR;
-        let nr = NR.min(n - n0);
-        let dst_base = b * kc * NR;
-        for j in 0..kc {
-            let src = &rhs[(k0 + j) * n + n0..(k0 + j) * n + n0 + nr];
-            let dst = &mut packed[dst_base + j * NR..dst_base + j * NR + NR];
-            dst[..nr].copy_from_slice(src);
-            dst[nr..].fill(0);
-        }
-    }
-}
-
-/// MR×NR register-tile micro-kernel over one K block, reading the packed RHS.
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn micro_kernel(
-    lhs: &[u8],
-    acc: &mut [i32],
-    i0: usize,
-    mr: usize,
-    k0: usize,
-    kc: usize,
-    k: usize,
-    n0: usize,
-    nr: usize,
-    n: usize,
-    packed_rhs: &[u8],
-) {
-    let block = n0 / NR;
-    let panel = &packed_rhs[block * kc * NR..(block + 1) * kc * NR];
-    // Local accumulator tile; NR-wide rows vectorize.
-    let mut tile = [[0i32; NR]; MR];
-    for (j, rhs_row) in panel.chunks_exact(NR).enumerate() {
-        for r in 0..mr {
-            let a = i32::from(lhs[(i0 + r) * k + k0 + j]);
-            let t = &mut tile[r];
-            for c in 0..NR {
-                t[c] += a * i32::from(rhs_row[c]);
-            }
-        }
-    }
-    for r in 0..mr {
-        let out = &mut acc[(i0 + r) * n + n0..(i0 + r) * n + n0 + nr];
-        for c in 0..nr {
-            out[c] += tile[r][c];
-        }
-    }
 }
 
 #[cfg(test)]
@@ -123,17 +112,19 @@ mod tests {
             .collect()
     }
 
+    /// Shapes hitting every tail case: m % MR, n % NR, k % KC.
+    const SHAPES: [(usize, usize, usize); 6] = [
+        (1, 1, 1),
+        (MR, KC, NR),
+        (MR + 1, KC + 1, NR + 1),
+        (MR - 1, 3, NR - 1),
+        (9, 300, 19),
+        (2, 513, 2),
+    ];
+
     #[test]
     fn blocked_equals_reference_over_awkward_shapes() {
-        // Shapes chosen to hit every tail case: m % MR, n % NR, k % KC.
-        for (m, k, n) in [
-            (1, 1, 1),
-            (MR, KC, NR),
-            (MR + 1, KC + 1, NR + 1),
-            (MR - 1, 3, NR - 1),
-            (9, 300, 19),
-            (2, 513, 2),
-        ] {
+        for (m, k, n) in SHAPES {
             let g = QGemm::new(m, k, n, 77, 201);
             let lhs = pseudo(m as u64 * 31 + k as u64, m * k);
             let rhs = pseudo(n as u64 * 17 + k as u64, k * n);
@@ -146,17 +137,20 @@ mod tests {
     }
 
     #[test]
-    fn packing_is_lossless() {
-        let n = 19; // not a multiple of NR
-        let k = 7;
-        let rhs = pseudo(3, k * n);
-        let mut packed = vec![0u8; k * n.div_ceil(NR) * NR];
-        pack_rhs_panel(&rhs, 0, k, n, &mut packed);
-        for j in 0..k {
-            for c in 0..n {
-                let block = c / NR;
-                let within = c % NR;
-                assert_eq!(packed[block * k * NR + j * NR + within], rhs[j * n + c]);
+    fn every_dispatch_impl_matches_reference() {
+        // The full unprepared path under every compiled-and-detected
+        // micro-kernel; the exhaustive tail sweep lives in
+        // rust/tests/kernels.rs.
+        for d in dispatch::available() {
+            for (m, k, n) in SHAPES {
+                let g = QGemm::new(m, k, n, 77, 201);
+                let lhs = pseudo(m as u64 * 31 + k as u64, m * k);
+                let rhs = pseudo(n as u64 * 17 + k as u64, k * n);
+                let mut want = vec![0i32; m * n];
+                let mut got = vec![0i32; m * n];
+                g.accumulate(Kernel::Reference, &lhs, &rhs, &mut want);
+                accumulate_blocked_with(d, &g, &lhs, &rhs, &mut got);
+                assert_eq!(want, got, "{} mismatch at ({m},{k},{n})", d.name);
             }
         }
     }
@@ -164,13 +158,15 @@ mod tests {
     #[test]
     fn accumulators_never_overflow_for_max_k() {
         // 255*255*K fits i32 for K up to ~33000; our largest layer K is
-        // far below. Sanity-check the extreme at K = 8192.
+        // far below. Sanity-check the extreme at K = 8192 on every path.
         let (m, k, n) = (1, 8192, 1);
         let g = QGemm::new(m, k, n, 0, 0);
         let lhs = vec![255u8; k];
         let rhs = vec![255u8; k];
-        let mut acc = vec![0i32; 1];
-        accumulate_blocked(&g, &lhs, &rhs, &mut acc);
-        assert_eq!(acc[0], 255 * 255 * k as i32);
+        for d in dispatch::available() {
+            let mut acc = vec![0i32; 1];
+            accumulate_blocked_with(d, &g, &lhs, &rhs, &mut acc);
+            assert_eq!(acc[0], 255 * 255 * k as i32, "{}", d.name);
+        }
     }
 }

@@ -17,8 +17,13 @@
 //!   int8 (weights guaranteed in [−127,127] by training), two products
 //!   accumulated in an int16 before widening (SMULL/SMLAL/SADALP analogue).
 //!
-//! All kernels are bit-identical; tests enforce it.
+//! The Blocked kernel's MR×NR inner tile is additionally **runtime
+//! dispatched** ([`dispatch`]): scalar always, SSE2/AVX2/AVX-512 `pmaddwd`
+//! variants where the CPU supports them, selected once per process
+//! (`IAOI_KERNEL` overrides). Every path — and every dispatch variant — is
+//! bit-identical; tests enforce it.
 
+pub mod dispatch;
 pub mod int8_trick;
 pub mod kernel;
 pub mod output;
@@ -26,6 +31,7 @@ pub mod parallel;
 pub mod pool;
 pub mod prepared;
 
+pub use kernel::{KC, MR, NR};
 pub use output::OutputStage;
 pub use pool::{IntraOp, IntraStrategy, WorkerPool};
 pub use prepared::{PreparedGemm, Scratch};

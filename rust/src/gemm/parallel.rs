@@ -26,6 +26,11 @@
 //! this single-core testbed thread counts > 1 measure scheduling overhead;
 //! `sim::ArmCoreModel` provides the multi-core latency estimates for
 //! Table 4.6 (DESIGN.md §Hardware-Adaptation).
+//!
+//! Workers inherit the plan's micro-kernel ([`super::dispatch`]): every
+//! strip executes `PreparedGemm::run_strip` → `accumulate_cols`, so the
+//! runtime-dispatched SIMD tile (or a per-plan `set_ukernel` override)
+//! applies identically on the serial, scoped, and pooled paths.
 
 use super::pool::{carve_row_segments, carve_strips, WorkerPool};
 use super::prepared::{PreparedGemm, Scratch};
@@ -188,6 +193,38 @@ mod tests {
                 run_parallel_prepared(&plan, &rhs, n, &mut pooled, &pool);
                 assert_eq!(want, pooled, "{kern:?} threads={threads} pool");
             }
+        }
+    }
+
+    #[test]
+    fn forced_ukernels_agree_across_parallel_paths() {
+        // Each available SIMD micro-kernel, pinned on the plan, must match
+        // the scalar-forced serial bytes through both the scoped-spawn and
+        // the pooled strip paths.
+        let (m, k, n) = (11, 300, 47);
+        let g = QGemm::new(m, k, n, 77, 201);
+        let lhs = pseudo(31, m * k);
+        let rhs = pseudo(32, k * n);
+        let stage = OutputStage {
+            bias: (0..m as i32).map(|i| i * 21 - 90).collect(),
+            multiplier: QuantizedMultiplier::from_f64(0.0029).into(),
+            out_zero: 11,
+            clamp_min: 0,
+            clamp_max: 255,
+        };
+        let base = PreparedGemm::from_qgemm(&g, Kernel::Blocked, &lhs, stage)
+            .with_ukernel(crate::gemm::dispatch::scalar());
+        let mut want = vec![0u8; m * n];
+        base.run(n, &rhs, &mut want, &mut Scratch::new());
+        for d in crate::gemm::dispatch::available() {
+            let plan = base.clone().with_ukernel(d);
+            let mut scoped = vec![0u8; m * n];
+            run_strips_scoped(&plan, &rhs, n, &mut scoped, 3);
+            assert_eq!(want, scoped, "{} scoped", d.name);
+            let pool = WorkerPool::new(2);
+            let mut pooled = vec![0u8; m * n];
+            run_parallel_prepared(&plan, &rhs, n, &mut pooled, &pool);
+            assert_eq!(want, pooled, "{} pool", d.name);
         }
     }
 

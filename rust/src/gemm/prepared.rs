@@ -22,6 +22,7 @@
 //! prepared path is bit-identical to the unprepared kernels — enforced by
 //! the tests below and by `conv_kernels_agree`-style tests in `nn`.
 
+use super::dispatch::{self, KernelDispatch};
 use super::kernel::{KC, MR, NR};
 use super::output::OutputStage;
 use super::{Kernel, QGemm};
@@ -110,6 +111,14 @@ pub struct PreparedGemm {
     /// Zero-point of the activations (`Z2`), fixed at conversion time.
     rhs_zero: i32,
     kernel: Kernel,
+    /// Micro-kernel implementation driving the [`Kernel::Blocked`] path
+    /// (ignored by Reference/Int8Pairwise). Defaults to
+    /// [`dispatch::active`]; tests and benches pin it per plan via
+    /// [`Self::set_ukernel`] — a per-plan override rather than a mutable
+    /// global, so concurrent tests can force different paths without racing.
+    /// The packed-LHS layout is implementation-independent, so switching is
+    /// always safe on an existing plan.
+    ukernel: &'static KernelDispatch,
     stage: OutputStage,
     packed: PackedLhs,
     /// `ā1` of eq. 8: u8 row sums for Blocked, recentred-int8 row sums for
@@ -149,7 +158,26 @@ impl PreparedGemm {
                 (PackedLhs::Int8(recentred), sums)
             }
         };
-        Self { m, k, lhs_zero, rhs_zero, kernel, stage, packed, row_sums }
+        let ukernel = dispatch::active();
+        Self { m, k, lhs_zero, rhs_zero, kernel, ukernel, stage, packed, row_sums }
+    }
+
+    /// Pin the micro-kernel implementation for this plan (Blocked path
+    /// only). Pass a descriptor from [`dispatch::available`] /
+    /// [`dispatch::resolve`] — those verify CPU support.
+    pub fn set_ukernel(&mut self, u: &'static KernelDispatch) {
+        self.ukernel = u;
+    }
+
+    /// Builder-style [`Self::set_ukernel`].
+    pub fn with_ukernel(mut self, u: &'static KernelDispatch) -> Self {
+        self.set_ukernel(u);
+        self
+    }
+
+    /// The micro-kernel implementation this plan dispatches to.
+    pub fn ukernel(&self) -> &'static KernelDispatch {
+        self.ukernel
     }
 
     /// Convenience: build from an existing [`QGemm`] description (its `n` is
@@ -303,8 +331,9 @@ impl PreparedGemm {
     }
 
     /// The blocked kernel over a pre-packed LHS: identical arithmetic to
-    /// [`kernel::accumulate_blocked`], but the LHS panel reads are
-    /// contiguous `MR`-wide rows instead of `K`-strided scalar loads.
+    /// [`super::kernel::accumulate_blocked`], but the LHS panel reads are
+    /// contiguous `MR`-wide rows instead of `K`-strided scalar loads. The
+    /// inner tile and RHS packing come from `self.ukernel`.
     #[allow(clippy::too_many_arguments)]
     fn accumulate_blocked(
         &self,
@@ -316,36 +345,30 @@ impl PreparedGemm {
         acc: &mut [i32],
         packed_rhs: &mut Vec<u8>,
     ) {
+        let d = self.ukernel;
         let (m, k) = (self.m, self.k);
         acc[..m * nn].fill(0);
-        let pr = grow(packed_rhs, KC * nn.div_ceil(NR) * NR);
+        let blocks = nn.div_ceil(NR);
+        let pr = grow(packed_rhs, blocks * (d.panel_len)(KC.min(k)));
         let ibn = m.div_ceil(MR);
         for k0 in (0..k).step_by(KC) {
             let kc = KC.min(k - k0);
-            pack_rhs_panel_strided(rhs, k0, kc, stride, n0, nn, pr);
+            let blen = (d.panel_len)(kc);
+            (d.pack_rhs)(rhs, k0, kc, stride, n0, nn, &mut pr[..blocks * blen]);
             // Panels for this K block start after the ibn·MR·k0 elements of
             // all previous (full-KC) blocks.
             let kb_base = ibn * MR * k0;
             for ib in 0..ibn {
                 let i0 = ib * MR;
                 let mr = MR.min(m - i0);
-                let lhs_panel = &packed_lhs[kb_base + ib * kc * MR..kb_base + (ib + 1) * kc * MR];
-                for b in 0..nn.div_ceil(NR) {
+                // Packed-LHS view: element (r, j) of the mr×kc operand is
+                // packed_lhs[poff + j·MR + r].
+                let poff = kb_base + ib * kc * MR;
+                for (b, panel) in pr[..blocks * blen].chunks_exact(blen).enumerate() {
                     let nb0 = b * NR;
                     let nr = NR.min(nn - nb0);
-                    let panel = &pr[b * kc * NR..(b + 1) * kc * NR];
                     let mut tile = [[0i32; NR]; MR];
-                    for j in 0..kc {
-                        let lrow = &lhs_panel[j * MR..(j + 1) * MR];
-                        let rrow = &panel[j * NR..(j + 1) * NR];
-                        for r in 0..mr {
-                            let a = i32::from(lrow[r]);
-                            let t = &mut tile[r];
-                            for c in 0..NR {
-                                t[c] += a * i32::from(rrow[c]);
-                            }
-                        }
-                    }
+                    (d.tile)(packed_lhs, poff, 1, MR, mr, kc, panel, &mut tile);
                     for r in 0..mr {
                         let row = &mut acc[(i0 + r) * nn + nb0..(i0 + r) * nn + nb0 + nr];
                         for (o, &t) in row.iter_mut().zip(&tile[r][..nr]) {
@@ -443,34 +466,10 @@ fn pack_lhs_blocked(lhs: &[u8], m: usize, k: usize) -> Vec<u8> {
 }
 
 /// Pack `kc` rows of a *strided* RHS (row stride `stride`, columns
-/// `[n0, n0 + nn)`) into `[ceil(nn/NR)][kc][NR]` order, zero-padded in the
-/// tail column block — the kernel module's `pack_rhs_panel` generalized so
-/// parallel workers pack their strip straight from the shared source.
-fn pack_rhs_panel_strided(
-    rhs: &[u8],
-    k0: usize,
-    kc: usize,
-    stride: usize,
-    n0: usize,
-    nn: usize,
-    packed: &mut [u8],
-) {
-    for b in 0..nn.div_ceil(NR) {
-        let b0 = b * NR;
-        let nr = NR.min(nn - b0);
-        let dst_base = b * kc * NR;
-        for j in 0..kc {
-            let src = &rhs[(k0 + j) * stride + n0 + b0..(k0 + j) * stride + n0 + b0 + nr];
-            let dst = &mut packed[dst_base + j * NR..dst_base + j * NR + NR];
-            dst[..nr].copy_from_slice(src);
-            dst[nr..].fill(0);
-        }
-    }
-}
-
-/// As [`pack_rhs_panel_strided`], recentring u8 → i8 (`v ^ 0x80`) in the
-/// same pass — the int8 path's activation-side recentre costs no extra
-/// sweep over the data.
+/// `[n0, n0 + nn)`) into `[ceil(nn/NR)][kc][NR]` order, recentring u8 → i8
+/// (`v ^ 0x80`) in the same pass — the int8 path's activation-side recentre
+/// costs no extra sweep over the data. (The u8 Blocked path packs through
+/// its dispatch descriptor's `pack_rhs` instead.)
 fn pack_rhs_panel_i8_strided(
     rhs: &[u8],
     k0: usize,
@@ -709,6 +708,44 @@ mod tests {
                 plan.run_strip(&rhs, n, n0, &mut segs, &mut Scratch::new());
             }
             assert_eq!(want, got, "{kern:?}");
+        }
+    }
+
+    #[test]
+    fn forced_ukernels_bit_identical_through_prepared_paths() {
+        // Every compiled-and-detected micro-kernel, pinned per plan, must
+        // reproduce the scalar plan byte-for-byte through run() and
+        // run_strip() — per-channel stage so requantization is exercised
+        // with per-row multipliers.
+        for &(m, k, n) in &AWKWARD {
+            let lhs = pseudo(m as u64 * 3 + k as u64, m * k, 1);
+            let rhs = pseudo(n as u64 * 5 + k as u64, k * n, 0);
+            let g = QGemm::new(m, k, n, 77, 201);
+            let stage = per_channel_stage(m);
+            let base = PreparedGemm::from_qgemm(&g, Kernel::Blocked, &lhs, stage)
+                .with_ukernel(dispatch::scalar());
+            let mut want = vec![0u8; m * n];
+            base.run(n, &rhs, &mut want, &mut Scratch::new());
+            for d in dispatch::available() {
+                let plan = base.clone().with_ukernel(d);
+                assert_eq!(plan.ukernel().name, d.name);
+                let mut got = vec![0u8; m * n];
+                plan.run(n, &rhs, &mut got, &mut Scratch::new());
+                assert_eq!(want, got, "{} run ({m},{k},{n})", d.name);
+                let mut strip = vec![0u8; m * n];
+                let split = (n / 2).max(1).min(n);
+                for (n0, n1) in [(0usize, split), (split, n)] {
+                    let mut segs: Vec<&mut [u8]> = Vec::with_capacity(m);
+                    let mut rest = &mut strip[..];
+                    for _ in 0..m {
+                        let (row, tail) = rest.split_at_mut(n);
+                        rest = tail;
+                        segs.push(&mut row[n0..n1]);
+                    }
+                    plan.run_strip(&rhs, n, n0, &mut segs, &mut Scratch::new());
+                }
+                assert_eq!(want, strip, "{} strips ({m},{k},{n})", d.name);
+            }
         }
     }
 

@@ -632,6 +632,28 @@ impl PreparedGraph {
         self
     }
 
+    /// Pin the GEMM micro-kernel implementation for every conv/FC plan in
+    /// this graph (see [`crate::gemm::dispatch`]) — depthwise, pooling, and
+    /// elementwise ops have no GEMM and are unaffected. Plans default to
+    /// the process-wide [`crate::gemm::dispatch::active`] selection; this
+    /// per-graph override exists so tests and the kernel bench sweep can
+    /// force paths without racing on a global.
+    pub fn set_ukernel(&mut self, u: &'static crate::gemm::dispatch::KernelDispatch) {
+        for node in &mut self.nodes {
+            match &mut node.op {
+                PreparedOp::Conv(p) => p.set_ukernel(u),
+                PreparedOp::Fc(p) => p.set_ukernel(u),
+                _ => {}
+            }
+        }
+    }
+
+    /// Builder-style [`Self::set_ukernel`].
+    pub fn with_ukernel(mut self, u: &'static crate::gemm::dispatch::KernelDispatch) -> Self {
+        self.set_ukernel(u);
+        self
+    }
+
     /// Install a deterministic fault-injection plan: every subsequent run
     /// consults it (counted run, optional delays, panic at the configured
     /// run index). Chaos-test/bench machinery — see [`fault::FaultPlan`].

@@ -757,6 +757,9 @@ pub fn serve_socket(
         std::fs::rename(&tmp, pf).with_context(|| format!("rename to {pf:?}"))?;
     }
     let cap = |n: usize| if n == 0 { "unbounded".to_string() } else { n.to_string() };
+    // Logged once at startup (and exported via /metrics and /healthz) so a
+    // deployed fleet can confirm it is on the SIMD fast path.
+    println!("gemm kernel: {}", crate::gemm::dispatch::active().name);
     let registry = server.registry();
     for name in registry.names() {
         let entry = registry.resolve(&name)?;
@@ -814,7 +817,8 @@ pub fn run_table(id: &str, fast: bool) -> Result<()> {
         "4.8" => tables::table_4_8(fast),
         "quant-modes" => tables::table_quant_modes(fast),
         "pool" => tables::table_pool(fast),
-        other => Err(anyhow!("unknown table {other} (4.1-4.8, quant-modes, pool)")),
+        "kernels" => tables::table_kernels(fast),
+        other => Err(anyhow!("unknown table {other} (4.1-4.8, quant-modes, pool, kernels)")),
     }
 }
 

@@ -476,6 +476,107 @@ pub fn table_pool(fast: bool) -> Result<()> {
     Ok(())
 }
 
+/// `iaoi bench --table kernels` — scalar vs every detected SIMD micro-kernel
+/// ([`crate::gemm::dispatch`]), first on raw GEMM accumulation across
+/// conv/FC-shaped geometries, then on whole-model prepared inference with
+/// the kernel pinned per plan. Every timed case is guarded by byte-equality
+/// against the scalar golden output: a diverging kernel aborts the table
+/// instead of reporting a bogus speedup.
+pub fn table_kernels(fast: bool) -> Result<()> {
+    use super::time_median_ms;
+    use crate::gemm::dispatch;
+    use crate::gemm::kernel::accumulate_blocked_with;
+    use crate::gemm::QGemm;
+    use crate::graph::ExecState;
+    use crate::nn::QTensor;
+    use crate::tensor::Tensor;
+
+    let impls = dispatch::available();
+    let iters = if fast { 3 } else { 9 };
+    println!(
+        "# Kernels — runtime-dispatched GEMM micro-kernels (active: {}, compiled: {})",
+        dispatch::active().name,
+        dispatch::all().iter().map(|d| d.name).collect::<Vec<_>>().join("/"),
+    );
+
+    println!("\n## Raw GEMM accumulation (i32 out)");
+    println!("| m | k | n | kernel | median ms | GMAC/s | vs scalar |");
+    println!("|---|---|---|---|---|---|---|");
+    let mut rng = crate::data::Rng::seeded(91);
+    for (m, k, n) in
+        [(64usize, 288usize, 256usize), (256, 256, 196), (128, 1152, 64), (1024, 1024, 16)]
+    {
+        let lhs: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let rhs: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        let g = QGemm::new(m, k, n, 77, 201);
+        let mut golden = vec![0i32; m * n];
+        accumulate_blocked_with(dispatch::scalar(), &g, &lhs, &rhs, &mut golden);
+        let mut scalar_ms = f64::NAN;
+        for d in impls.iter().copied() {
+            let mut acc = vec![0i32; m * n];
+            let ms =
+                time_median_ms(iters, || accumulate_blocked_with(d, &g, &lhs, &rhs, &mut acc));
+            anyhow::ensure!(
+                acc == golden,
+                "{} diverged from scalar at ({m},{k},{n}) — timing withheld",
+                d.name
+            );
+            if d.name == "scalar" {
+                scalar_ms = ms;
+            }
+            let gmacs = (m * k * n) as f64 / ms / 1e6;
+            println!(
+                "| {m} | {k} | {n} | {} | {ms:.3} | {gmacs:.2} | {:.2}x |",
+                d.name,
+                scalar_ms / ms.max(1e-9)
+            );
+        }
+    }
+
+    // Whole-model: the demo PaperNet through prepared plans with the
+    // micro-kernel pinned per plan (conv + FC dispatch through it; the
+    // depthwise layer has no GEMM and rides along unchanged).
+    println!("\n## Whole-model prepared inference (papernet demo, batch 8)");
+    println!("| kernel | median ms | vs scalar |");
+    println!("|---|---|---|");
+    let q = super::demo_artifact("kernel-sweep", 1, 16, 5).graph;
+    let batch = 8usize;
+    let mut d = vec![0f32; batch * 16 * 16 * 3];
+    for v in d.iter_mut() {
+        *v = rng.range_f32(-1.0, 1.0);
+    }
+    let x = Tensor::from_vec(&[batch, 16, 16, 3], d);
+    let qin = QTensor::quantize(&x, q.input_params);
+    let mut golden: Vec<u8> = Vec::new();
+    let mut scalar_ms = f64::NAN;
+    for d in impls.iter().copied() {
+        let mut plan = q.prepare();
+        plan.set_ukernel(d);
+        let mut state = ExecState::new();
+        let out = plan.run_q(&qin, &mut state).data.data().to_vec();
+        if d.name == "scalar" {
+            golden = out.clone();
+        }
+        anyhow::ensure!(
+            out == golden,
+            "{} whole-model output diverged from scalar — timing withheld",
+            d.name
+        );
+        let ms = time_median_ms(iters, || {
+            std::hint::black_box(plan.run_q(&qin, &mut state).data.len());
+        });
+        if d.name == "scalar" {
+            scalar_ms = ms;
+        }
+        println!("| {} | {ms:.3} | {:.2}x |", d.name, scalar_ms / ms.max(1e-9));
+    }
+    println!(
+        "\n(impls are listed scalar-first, so \"vs scalar\" is measured against this run's \
+         own scalar timing; IAOI_KERNEL forces the serving default)"
+    );
+    Ok(())
+}
+
 /// Used by `eval` when a saved model exists; re-exported for tests.
 pub fn quick_eval(model_path: &Path) -> Result<f32> {
     let arts = artifacts();

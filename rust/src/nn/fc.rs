@@ -114,6 +114,13 @@ pub struct PreparedFullyConnected {
 }
 
 impl PreparedFullyConnected {
+    /// Pin the GEMM micro-kernel implementation for this layer's plan
+    /// (see [`crate::gemm::dispatch`]); defaults to the process-wide
+    /// selection.
+    pub fn set_ukernel(&mut self, u: &'static crate::gemm::dispatch::KernelDispatch) {
+        self.plan.set_ukernel(u);
+    }
+
     /// Run the layer, writing `[batch, units]` into `out` (reshaped in
     /// place, allocation reused).
     pub fn run_into(&self, input: &QTensor, out: &mut QTensor, scratch: &mut LayerScratch) {

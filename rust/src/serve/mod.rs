@@ -546,8 +546,9 @@ fn healthz(state: &Arc<ServerState>) -> Response {
     let shutting_down = state.shutting_down.load(Ordering::SeqCst);
     let overall = if shutting_down { "draining" } else { "serving" };
     let mut body = format!(
-        "{{\"status\":\"{overall}\",\"uptime_ms\":{},\"models\":[",
-        state.started.elapsed().as_millis()
+        "{{\"status\":\"{overall}\",\"uptime_ms\":{},\"kernel\":\"{}\",\"models\":[",
+        state.started.elapsed().as_millis(),
+        crate::gemm::dispatch::active().name
     );
     let mut first = true;
     for name in state.registry.names().iter() {
@@ -611,6 +612,10 @@ fn metrics_page(state: &Arc<ServerState>) -> Response {
         let _ = writeln!(out, "iaoi_quarantined{{model=\"{name}\"}} {q}");
     }
     let _ = writeln!(out, "iaoi_open_connections {}", state.open_conns.load(Ordering::SeqCst));
+    // Which GEMM micro-kernel this process dispatched to (info-style gauge:
+    // value is always 1, the label carries the name) — lets a deployed
+    // fleet confirm every box is on its fast path.
+    let _ = writeln!(out, "iaoi_kernel{{name=\"{}\"}} 1", crate::gemm::dispatch::active().name);
     let _ = writeln!(out, "iaoi_uptime_seconds {}", state.started.elapsed().as_secs());
     Response::text(200, "OK", out)
 }

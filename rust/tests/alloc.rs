@@ -12,6 +12,7 @@
 
 use iaoi::bench_util::counting_alloc::{self, CountingAlloc};
 use iaoi::data::Rng;
+use iaoi::gemm::{Kernel, QGemm};
 use iaoi::graph::builders::papernet_random;
 use iaoi::graph::{ExecState, FloatGraph, FloatOp, NodeRef};
 use iaoi::model_format::{self, ModelArtifact};
@@ -147,6 +148,31 @@ fn prepared_run_q_is_allocation_free_in_steady_state() {
         plan_zc.run_q(&qin_zc, &mut state_zc);
     });
     assert_eq!(steady_zc, 0, "zero-copy-loaded steady state made {steady_zc} allocations");
+
+    // The *unprepared* blocked GEMM packs its RHS into a thread-local
+    // high-water-mark scratch, so after one warm call a same-shape
+    // accumulate may allocate only the two eq. 8 sum vectors — never a
+    // fresh packed panel.
+    let (m, k, n) = (24, 96, 40);
+    let lhs_g: Vec<u8> = (0..m * k).map(|i| (i * 31 % 251) as u8).collect();
+    let rhs_g: Vec<u8> = (0..k * n).map(|i| (i * 17 % 253) as u8).collect();
+    let gq = QGemm::new(m, k, n, 7, 9);
+    let mut acc = vec![0i32; m * n];
+    gq.accumulate(Kernel::Blocked, &lhs_g, &rhs_g, &mut acc);
+    let warm = counting_alloc::measure(|| {
+        gq.accumulate(Kernel::Blocked, &lhs_g, &rhs_g, &mut acc);
+    });
+    assert!(
+        warm.events <= 2,
+        "warm unprepared accumulate made {} allocations (row/col sums only allowed)",
+        warm.events
+    );
+    assert!(
+        warm.total_bytes <= ((m + n) * 4) as u64,
+        "warm unprepared accumulate allocated {} bytes, more than the {} the sum vectors need",
+        warm.total_bytes,
+        (m + n) * 4
+    );
 }
 
 /// A graph exercising the three formerly-allocating prepared ops: a

@@ -1,0 +1,221 @@
+//! Cross-kernel bit-identity property suite for the runtime-dispatched
+//! SIMD micro-kernels ([`iaoi::gemm::dispatch`]).
+//!
+//! The dispatch layer's hard invariant is that every SIMD tile (SSE2,
+//! AVX2, AVX-512) produces **byte-identical** int32 accumulators — and
+//! therefore byte-identical uint8 outputs — to the scalar tile on every
+//! shape, every tail, and every operand value. These tests enforce it at
+//! four levels:
+//!
+//! 1. exhaustively over the `m % MR` × `n % NR` × `k % KC` tail lattice on
+//!    the raw unprepared accumulation;
+//! 2. at the u8 value extremes (all-zeros, all-255, alternating) crossed
+//!    with zero-point extremes, against the [`Kernel::Reference`] oracle;
+//! 3. through the prepared / strip / scoped-spawn / worker-pool execution
+//!    paths with a per-channel output stage;
+//! 4. on whole quantized graphs (conv + depthwise + pointwise + FC) under
+//!    both per-tensor and per-channel weight quantization.
+//!
+//! Plus the dispatch-resolution contract itself: name resolution, error
+//! text, and the `IAOI_KERNEL` environment override (CI runs this whole
+//! target under `IAOI_KERNEL=scalar` to pin the fallback everywhere).
+
+use iaoi::data::Rng;
+use iaoi::gemm::dispatch;
+use iaoi::gemm::kernel::accumulate_blocked_with;
+use iaoi::gemm::output::{OutputStage, Requant};
+use iaoi::gemm::parallel::{run_parallel_prepared, run_strips_scoped};
+use iaoi::gemm::{Kernel, PreparedGemm, QGemm, Scratch, WorkerPool, KC, MR, NR};
+use iaoi::graph::builders::papernet_random;
+use iaoi::graph::ExecState;
+use iaoi::nn::{FusedActivation, QTensor};
+use iaoi::quant::QuantizedMultiplier;
+use iaoi::quantize::{quantize_graph, QuantMode, QuantizeOptions};
+use iaoi::tensor::Tensor;
+
+fn fill(rng: &mut Rng, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.below(256) as u8).collect()
+}
+
+/// Every tail remainder the blocking can produce: one past each tile
+/// boundary in every dimension, plus a multi-tile case per axis.
+#[test]
+fn exhaustive_tails_bit_identical_to_scalar() {
+    let scalar = dispatch::scalar();
+    let simd: Vec<_> =
+        dispatch::available().into_iter().filter(|d| d.name != scalar.name).collect();
+    let mut ms: Vec<usize> = (1..=MR + 1).collect();
+    ms.push(2 * MR + 3);
+    let mut ns: Vec<usize> = (1..=NR + 1).collect();
+    ns.push(2 * NR + 5);
+    let ks = [1, 2, 3, 7, KC - 1, KC, KC + 1, 2 * KC + 5];
+    let mut rng = Rng::seeded(4242);
+    for &m in &ms {
+        for &k in &ks {
+            let lhs = fill(&mut rng, m * k);
+            for &n in &ns {
+                let rhs = fill(&mut rng, k * n);
+                let g = QGemm::new(m, k, n, 128, 3);
+                let mut golden = vec![0i32; m * n];
+                accumulate_blocked_with(scalar, &g, &lhs, &rhs, &mut golden);
+                for d in &simd {
+                    let mut got = vec![0i32; m * n];
+                    accumulate_blocked_with(d, &g, &lhs, &rhs, &mut got);
+                    assert_eq!(golden, got, "{} != scalar at ({m},{k},{n})", d.name);
+                }
+            }
+        }
+    }
+}
+
+/// Operand and zero-point extremes against the eq. 4 reference oracle: the
+/// pmaddwd schedule must stay exact at the very top of the u8 range (the
+/// saturation-impossibility argument in dispatch.rs), and the eq. 7
+/// corrections must hold for every legal zero-point corner.
+#[test]
+fn edge_values_and_zero_points_match_reference() {
+    let (m, k, n) = (MR + 3, 67, NR + 7);
+    let mut rng = Rng::seeded(99);
+    let patterns: [Vec<u8>; 4] = [
+        vec![0u8; m.max(n) * k],
+        vec![255u8; m.max(n) * k],
+        (0..m.max(n) * k).map(|i| if i % 2 == 0 { 0 } else { 255 }).collect(),
+        fill(&mut rng, m.max(n) * k),
+    ];
+    for lhs_pat in &patterns {
+        for rhs_pat in &patterns {
+            let lhs = &lhs_pat[..m * k];
+            let rhs = &rhs_pat[..k * n];
+            for (z1, z2) in [(0, 0), (255, 255), (0, 255), (128, 77)] {
+                let g = QGemm::new(m, k, n, z1, z2);
+                let mut want = vec![0i32; m * n];
+                g.accumulate(Kernel::Reference, lhs, rhs, &mut want);
+                for d in dispatch::available() {
+                    let mut got = vec![0i32; m * n];
+                    accumulate_blocked_with(d, &g, lhs, rhs, &mut got);
+                    assert_eq!(want, got, "{} != reference at Z1={z1} Z2={z2}", d.name);
+                }
+            }
+        }
+    }
+}
+
+fn per_channel_stage(m: usize) -> OutputStage {
+    OutputStage {
+        bias: (0..m as i32).map(|i| i * 19 - 70).collect(),
+        multiplier: Requant::PerChannel(
+            (0..m)
+                .map(|i| QuantizedMultiplier::from_f64(0.0009 * 1.6f64.powi(i as i32 % 6)))
+                .collect(),
+        ),
+        out_zero: 7,
+        clamp_min: 0,
+        clamp_max: 255,
+    }
+}
+
+/// Forced micro-kernels through every prepared execution path — full run,
+/// column strips, scoped-spawn threads, and the persistent worker pool —
+/// with a per-channel output stage so requantization indexes per-row
+/// multipliers on top of the SIMD accumulators.
+#[test]
+fn forced_ukernels_identical_through_prepared_and_parallel_paths() {
+    let mut rng = Rng::seeded(7);
+    for (m, k, n) in [(9, 300, 35), (MR + 1, KC + 1, NR + 1)] {
+        let lhs = fill(&mut rng, m * k);
+        let rhs = fill(&mut rng, k * n);
+        let g = QGemm::new(m, k, n, 77, 201);
+        let base = PreparedGemm::from_qgemm(&g, Kernel::Blocked, &lhs, per_channel_stage(m))
+            .with_ukernel(dispatch::scalar());
+        let mut want = vec![0u8; m * n];
+        base.run(n, &rhs, &mut want, &mut Scratch::new());
+        for d in dispatch::available() {
+            let plan = base.clone().with_ukernel(d);
+            let mut got = vec![0u8; m * n];
+            let mut scratch = Scratch::new();
+            plan.run(n, &rhs, &mut got, &mut scratch);
+            assert_eq!(want, got, "{} run ({m},{k},{n})", d.name);
+            // Warm-scratch rerun: buffer reuse must not corrupt.
+            plan.run(n, &rhs, &mut got, &mut scratch);
+            assert_eq!(want, got, "{} warm run ({m},{k},{n})", d.name);
+            let mut scoped = vec![0u8; m * n];
+            run_strips_scoped(&plan, &rhs, n, &mut scoped, 3);
+            assert_eq!(want, scoped, "{} scoped ({m},{k},{n})", d.name);
+            let pool = WorkerPool::new(2);
+            let mut pooled = vec![0u8; m * n];
+            run_parallel_prepared(&plan, &rhs, n, &mut pooled, &pool);
+            assert_eq!(want, pooled, "{} pool ({m},{k},{n})", d.name);
+        }
+    }
+}
+
+/// Whole-graph bit-identity: the conv-dominated demo net, quantized under
+/// both weight modes, must produce identical bytes through every forced
+/// micro-kernel — and through the unprepared path, whichever kernel
+/// [`dispatch::active`] selected for this process.
+#[test]
+fn whole_graph_identical_across_kernels_and_quant_modes() {
+    let g = papernet_random(8, FusedActivation::Relu6, 91);
+    let mut rng = Rng::seeded(91);
+    let mk = |rng: &mut Rng, batch: usize| {
+        let mut d = vec![0f32; batch * 16 * 16 * 3];
+        for v in d.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        Tensor::from_vec(&[batch, 16, 16, 3], d)
+    };
+    let calib = vec![mk(&mut rng, 2), mk(&mut rng, 2)];
+    for mode in [QuantMode::PerTensor, QuantMode::PerChannel] {
+        let (_, q) = quantize_graph(&g, &calib, QuantizeOptions { mode, ..Default::default() });
+        let qin = QTensor::quantize(&mk(&mut rng, 3), q.input_params);
+
+        let golden_plan = q.prepare().with_ukernel(dispatch::scalar());
+        let mut state = ExecState::new();
+        let want = golden_plan.run_q(&qin, &mut state).data.data().to_vec();
+
+        // The unprepared engine dispatches through the process-wide
+        // selection; bit-identity makes it agree with forced-scalar.
+        let unprep = q.run_q(&qin);
+        assert_eq!(want, unprep.data.data(), "unprepared diverged ({mode:?})");
+
+        for d in dispatch::available() {
+            let plan = q.prepare().with_ukernel(d);
+            let mut st = ExecState::new();
+            let got = plan.run_q(&qin, &mut st).data.data().to_vec();
+            assert_eq!(want, got, "{} whole graph ({mode:?})", d.name);
+            // Second run through the warmed state (reused scratch).
+            let again = plan.run_q(&qin, &mut st).data.data().to_vec();
+            assert_eq!(want, again, "{} whole graph warm ({mode:?})", d.name);
+        }
+    }
+}
+
+/// The dispatch-resolution contract: names resolve, errors name the
+/// compiled-in kernels, and `IAOI_KERNEL` pins the process-wide selection
+/// (CI runs the suite under `IAOI_KERNEL=scalar` to exercise the pin).
+#[test]
+fn dispatch_resolution_and_env_override() {
+    assert_eq!(dispatch::resolve("scalar").expect("scalar always resolves").name, "scalar");
+    let err = dispatch::resolve("neon").expect_err("unknown kernel must not resolve");
+    assert!(err.contains("scalar"), "error should list compiled-in kernels: {err}");
+
+    let available = dispatch::available();
+    assert_eq!(available[0].name, "scalar", "scalar is the always-on baseline");
+    for d in &available {
+        assert_eq!(dispatch::resolve(d.name).expect("available kernels resolve").name, d.name);
+    }
+    let active = dispatch::active();
+    assert!(
+        available.iter().any(|d| d.name == active.name),
+        "active kernel {} must be detected on this CPU",
+        active.name
+    );
+    if let Ok(want) = std::env::var("IAOI_KERNEL") {
+        assert_eq!(active.name, want.trim(), "IAOI_KERNEL override must win");
+    }
+    #[cfg(target_arch = "x86_64")]
+    assert!(
+        available.iter().any(|d| d.name == "sse2"),
+        "SSE2 is baseline x86-64 and must always be detected"
+    );
+}
