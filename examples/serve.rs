@@ -130,6 +130,14 @@ fn main() -> Result<()> {
     let addr = server.local_addr();
     let mut http = HttpClient::connect(addr)?;
     println!("\nsocket front end on http://{addr}: healthz {}", http.get("/healthz")?.status);
+    // Serving always runs prepared plans, so any conv→Add chain in an
+    // installed model is folded into a fused GEMM epilogue at install time
+    // (`IAOI_FUSION=off` opts out fleet-wide); `/healthz` reports the
+    // per-model `fused_nodes` count. The demo papernet has no residual
+    // Adds, so it reports 0 — a resnet-style artifact would report one per
+    // folded skip connection.
+    let health = http.get("/healthz")?.body_text();
+    assert!(health.contains("\"fused_nodes\":0"), "healthz must report fusion: {health}");
     let probe = ClassificationSet::new(16, 16, 9);
     let resp = http.infer("alpha", probe.example(2, 0).0.data())?;
     assert_eq!(resp.status, 200);

@@ -20,7 +20,7 @@
 use iaoi::bench_util::{bench, smoke_mode, Sample};
 use iaoi::data::Rng;
 use iaoi::gemm::{IntraOp, WorkerPool};
-use iaoi::graph::builders::mobilenet;
+use iaoi::graph::builders::{mini_resnet, mobilenet};
 use iaoi::graph::{ExecState, QGraph};
 use iaoi::harness::demo_artifact_with_mode;
 use iaoi::nn::QTensor;
@@ -60,6 +60,78 @@ impl Case {
             self.speedup(),
         )
     }
+}
+
+/// Epilogue fusion: the same prepared plan with the conv→Add rewrite
+/// enabled vs disabled (`PreparedGraph::set_fusion`), single-threaded, on
+/// the residual mini-resnet — the only builder whose graphs contain Add
+/// nodes. Fused and unfused are bit-identical (asserted before timing);
+/// the speedup is what eliminating the standalone `qadd_into` pass over
+/// each residual tensor buys.
+struct FusionCase {
+    model: &'static str,
+    quant_mode: QuantMode,
+    batch: usize,
+    fused_nodes: usize,
+    unfused: Sample,
+    fused: Sample,
+}
+
+impl FusionCase {
+    fn speedup(&self) -> f64 {
+        self.unfused.median_us / self.fused.median_us.max(1e-9)
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "    {{\"tag\": \"fusion\", \"model\": \"{}\", \"quant_mode\": \"{}\", \"kernel\": \"{}\", \"batch\": {}, \"fused_nodes\": {}, \"unfused_us\": {:.1}, \"fused_us\": {:.1}, \"fusion_speedup\": {:.3}}}",
+            self.model,
+            self.quant_mode.label(),
+            iaoi::gemm::dispatch::active().name,
+            self.batch,
+            self.fused_nodes,
+            self.unfused.median_us,
+            self.fused.median_us,
+            self.speedup(),
+        )
+    }
+}
+
+fn run_fusion_case(
+    model: &'static str,
+    quant_mode: QuantMode,
+    q: &QGraph,
+    res: usize,
+    batch: usize,
+) -> FusionCase {
+    let mut rng = Rng::seeded(57 + batch as u64);
+    let x = random_input(&mut rng, batch, res);
+    let qin = QTensor::quantize(&x, q.input_params);
+    let tag = quant_mode.label();
+
+    let fused_plan = q.prepare().with_fusion(true);
+    let unfused_plan = q.prepare().with_fusion(false);
+    let fused_nodes = fused_plan.fused_nodes();
+    assert!(fused_nodes >= 1, "{model}: no conv→Add fusion discovered");
+
+    let mut sf = ExecState::new();
+    let mut su = ExecState::new();
+    // Warm both states and hold fusion to its contract before timing.
+    let want = unfused_plan.run_q(&qin, &mut su).data.data().to_vec();
+    assert_eq!(
+        fused_plan.run_q(&qin, &mut sf).data.data(),
+        &want[..],
+        "{model} [{tag}] fused path diverged from unfused"
+    );
+
+    let unfused = bench(&format!("{model} [{tag}] batch={batch} fusion=off"), 5, || {
+        std::hint::black_box(unfused_plan.run_q(&qin, &mut su).data.len());
+    });
+    let fused = bench(&format!("{model} [{tag}] batch={batch} fusion=on"), 5, || {
+        std::hint::black_box(fused_plan.run_q(&qin, &mut sf).data.len());
+    });
+
+    FusionCase { model, quant_mode, batch, fused_nodes, unfused, fused }
 }
 
 /// Whole-model intra-op parallelism: the same prepared plan run serial,
@@ -222,6 +294,33 @@ fn main() {
         );
     }
 
+    // Epilogue fusion on the residual network, fused vs unfused plans from
+    // the same quantized graph (tagged "fusion" in the JSON).
+    println!("\n== epilogue fusion: conv→Add folded into the output stage ==\n");
+    let mut fusion_cases = Vec::new();
+    for mode in [QuantMode::PerTensor, QuantMode::PerChannel] {
+        let g = mini_resnet(1, 8, 57);
+        let mut rng = Rng::seeded(57);
+        let calib = vec![random_input(&mut rng, 2, 16)];
+        let (_, q) = quantize_graph(&g, &calib, QuantizeOptions { mode, ..Default::default() });
+        for &batch in &[1usize, 8] {
+            fusion_cases.push(run_fusion_case("mini_resnet8", mode, &q, 16, batch));
+        }
+    }
+    println!();
+    for c in &fusion_cases {
+        println!(
+            "{:<18} {:<12} batch={}  fused_nodes={}  unfused {:>9.1}us  fused {:>9.1}us  speedup {:.2}x",
+            c.model,
+            c.quant_mode.label(),
+            c.batch,
+            c.fused_nodes,
+            c.unfused.median_us,
+            c.fused.median_us,
+            c.speedup(),
+        );
+    }
+
     // Intra-op parallelism on whole batched models: pool vs scoped-spawn vs
     // serial at the default per-layer threshold. On single-core CI the
     // absolute speedups sit at or below 1; pool_vs_scoped is the number the
@@ -260,14 +359,23 @@ fn main() {
         .find(|c| c.model == "papernet_demo" && c.threads == 4)
         .map(IntraCase::pool_vs_scoped)
         .unwrap_or(1.0);
+    // Headline fusion numbers: the batched per-tensor case carries the
+    // acceptance bar; fused_nodes lets CI assert the pass actually fired.
+    let fusion_headline = fusion_cases
+        .iter()
+        .find(|c| c.batch == 8 && c.quant_mode == QuantMode::PerTensor)
+        .expect("fusion case batch=8 per-tensor");
     let json = format!(
-        "{{\n  \"bench\": \"graph_inference\",\n  \"smoke\": {},\n  \"selected_kernel\": \"{}\",\n  \"cases\": [\n{}\n  ],\n  \"intra_cases\": [\n{}\n  ],\n  \"demo_speedup_single\": {:.3},\n  \"demo_speedup_batched\": {:.3},\n  \"pool_vs_scoped_batched\": {:.3}\n}}\n",
+        "{{\n  \"bench\": \"graph_inference\",\n  \"smoke\": {},\n  \"selected_kernel\": \"{}\",\n  \"cases\": [\n{}\n  ],\n  \"fusion_cases\": [\n{}\n  ],\n  \"intra_cases\": [\n{}\n  ],\n  \"demo_speedup_single\": {:.3},\n  \"demo_speedup_batched\": {:.3},\n  \"fused_nodes\": {},\n  \"fusion_speedup_batched\": {:.3},\n  \"pool_vs_scoped_batched\": {:.3}\n}}\n",
         smoke_mode(),
         iaoi::gemm::dispatch::active().name,
         cases.iter().map(Case::json).collect::<Vec<_>>().join(",\n"),
+        fusion_cases.iter().map(FusionCase::json).collect::<Vec<_>>().join(",\n"),
         intra_cases.iter().map(IntraCase::json).collect::<Vec<_>>().join(",\n"),
         demo_single.speedup(),
         demo_batched.speedup(),
+        fusion_headline.fused_nodes,
+        fusion_headline.speedup(),
         pool_vs_scoped_batched,
     );
     std::fs::write("BENCH_graph.json", &json).expect("write BENCH_graph.json");

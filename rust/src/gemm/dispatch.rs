@@ -37,6 +37,16 @@
 //! weights broadcast as `_mm_set1_epi32(a₀ | a₁ « 16)` against the whole
 //! row of column pairs.
 //!
+//! # Epilogues live outside the tiles
+//!
+//! Micro-kernels produce raw i32 accumulators only. Everything downstream
+//! — requantization, activation clamping, and the fused residual-add
+//! epilogue ([`super::output::ResidualAdd`]) — is applied per output strip
+//! *after* accumulation, in kernel-agnostic code. That keeps every
+//! descriptor here oblivious to epilogue composition: a new epilogue stage
+//! never touches SIMD code, and epilogue results are bit-identical across
+//! kernels by construction (the accumulators they consume already are).
+//!
 //! # Safety invariant
 //!
 //! Calling the function pointers of a descriptor whose CPU features are

@@ -32,7 +32,7 @@ pub mod pool;
 pub mod prepared;
 
 pub use kernel::{KC, MR, NR};
-pub use output::OutputStage;
+pub use output::{OutputStage, ResidualAdd, ADD_LEFT_SHIFT};
 pub use pool::{IntraOp, IntraStrategy, WorkerPool};
 pub use prepared::{PreparedGemm, Scratch};
 

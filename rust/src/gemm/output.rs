@@ -18,7 +18,17 @@
 //!    use the whole interval so the clamp usually degenerates into the
 //!    saturating cast itself.
 
-use crate::quant::{QuantizedMultiplier, WeightQuant};
+use crate::fixedpoint::rounding_div_by_pot;
+use crate::quant::{QuantParams, QuantizedMultiplier, WeightQuant};
+
+/// Internal headroom for the residual-add rescale (App. A.2): operands are
+/// promoted to a common `2^-SHIFT`-grained fixed-point scale before
+/// summation. 16 bits keeps `(q−Z) · 2^16 · M` within i32 for `M ≤ 64`.
+///
+/// Shared by the standalone [`crate::nn::elementwise::qadd_into`] pass and
+/// the fused [`ResidualAdd`] epilogue — one constant, one arithmetic, so
+/// fused and unfused execution are bit-identical by construction.
+pub const ADD_LEFT_SHIFT: i32 = 16;
 
 /// The requantization multiplier(s) of one GEMM output: one `M = S1·S2/S3`
 /// for the whole layer (eq. 5, the paper's scheme) or one per output row
@@ -82,6 +92,61 @@ impl Requant {
     }
 }
 
+/// The residual-add epilogue component (App. A.2 arithmetic): combines the
+/// just-requantized GEMM output `qa` with one element `qb` of a second
+/// quantized source, each rescaled by its own eq. 6-style fixed-point
+/// multiplier onto the Add output's scale.
+///
+/// This is byte-for-byte the arithmetic of the standalone
+/// [`crate::nn::elementwise::qadd_into`] pass — the fusion pass in
+/// [`crate::graph::QGraph::prepare`] merely relocates it from a separate
+/// memory-bound sweep over two written-out tensors into the GEMM's
+/// cache-resident output stage. Bit-identity between fused and unfused
+/// execution is therefore structural: both call [`ResidualAdd::apply`].
+#[derive(Clone, Copy, Debug)]
+pub struct ResidualAdd {
+    /// `S_main/S_out · 2^16` for the GEMM-output operand.
+    pub main_mult: QuantizedMultiplier,
+    /// Zero point of the GEMM-output operand (the conv's own `Z3`).
+    pub main_zero: i32,
+    /// `S_res/S_out · 2^16` for the residual operand.
+    pub res_mult: QuantizedMultiplier,
+    /// Zero point of the residual operand.
+    pub res_zero: i32,
+    /// Zero point of the Add output.
+    pub out_zero: i32,
+}
+
+impl ResidualAdd {
+    /// Build the epilogue for `main + res → out` with the given activation
+    /// quantization parameters (App. A.2: each operand's multiplier is
+    /// `S_op/S_out`, promoted by `2^ADD_LEFT_SHIFT` for headroom).
+    pub fn for_params(main: QuantParams, res: QuantParams, out: QuantParams) -> Self {
+        let twopow = (1i64 << ADD_LEFT_SHIFT) as f64;
+        Self {
+            main_mult: QuantizedMultiplier::from_f64(main.scale / out.scale * twopow),
+            main_zero: main.zero_point,
+            res_mult: QuantizedMultiplier::from_f64(res.scale / out.scale * twopow),
+            res_zero: res.zero_point,
+            out_zero: out.zero_point,
+        }
+    }
+
+    /// One element of the quantized add: rescale both operands onto the
+    /// common `2^-16`-grained scale, saturating-add, round back down, and
+    /// saturate to uint8. No further activation clamp: the converter absorbs
+    /// a trailing ReLU into the Add's *output range*, so the saturating cast
+    /// is the whole activation (§2.4).
+    #[inline]
+    pub fn apply(&self, qa: u8, qb: u8) -> u8 {
+        let ra = self.main_mult.apply(i32::from(qa) - self.main_zero);
+        let rb = self.res_mult.apply(i32::from(qb) - self.res_zero);
+        let sum = ra.saturating_add(rb);
+        let q = rounding_div_by_pot(sum, ADD_LEFT_SHIFT).saturating_add(self.out_zero);
+        q.clamp(0, 255) as u8
+    }
+}
+
 /// Fused bias + requantization + activation stage applied to the int32
 /// accumulators of one GEMM (rows = output channels).
 #[derive(Clone, Debug)]
@@ -126,6 +191,44 @@ impl OutputStage {
             let dst = &mut out[i * n..(i + 1) * n];
             for (o, &a) in dst.iter_mut().zip(src) {
                 *o = self.requantize_with(mult, a.wrapping_add(b));
+            }
+        }
+    }
+
+    /// Apply the composable epilogue pipeline — requantize (with this
+    /// stage's own clamp) then an optional fused residual add — to
+    /// row-major `m×n` accumulators covering columns `col0..col0+n` of the
+    /// layer output. The GEMM output is channel-major (row = output
+    /// channel, column = spatial position); the residual source is the
+    /// written-out NHWC activation tensor, so the element pairing with row
+    /// `i`, local column `j` is `res[(col0 + j) * m + i]`.
+    pub fn apply_res(
+        &self,
+        acc: &[i32],
+        m: usize,
+        n: usize,
+        out: &mut [u8],
+        res: Option<(&ResidualAdd, &[u8])>,
+        col0: usize,
+    ) {
+        let Some((r, data)) = res else {
+            self.apply(acc, m, n, out);
+            return;
+        };
+        assert_eq!(acc.len(), m * n);
+        assert_eq!(out.len(), m * n);
+        assert!(self.bias.is_empty() || self.bias.len() == m, "bias is per output row");
+        assert!(self.multiplier.rows_valid(m), "one multiplier per output row");
+        assert!(self.clamp_min <= self.clamp_max);
+        assert!((col0 + n) * m <= data.len(), "residual source too small for this tile");
+        for i in 0..m {
+            let mult = self.multiplier.for_row(i);
+            let b = if self.bias.is_empty() { 0 } else { self.bias[i] };
+            let src = &acc[i * n..(i + 1) * n];
+            let dst = &mut out[i * n..(i + 1) * n];
+            for (j, (o, &a)) in dst.iter_mut().zip(src).enumerate() {
+                let qa = self.requantize_with(mult, a.wrapping_add(b));
+                *o = r.apply(qa, data[(col0 + j) * m + i]);
             }
         }
     }

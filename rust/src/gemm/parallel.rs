@@ -32,6 +32,7 @@
 //! runtime-dispatched SIMD tile (or a per-plan `set_ukernel` override)
 //! applies identically on the serial, scoped, and pooled paths.
 
+use super::output::ResidualAdd;
 use super::pool::{carve_row_segments, carve_strips, WorkerPool};
 use super::prepared::{PreparedGemm, Scratch};
 use super::{output::OutputStage, Kernel, QGemm};
@@ -96,12 +97,26 @@ pub fn run_strips_scoped(
     out: &mut [u8],
     threads: usize,
 ) {
+    run_strips_scoped_res(plan, rhs, n, out, None, threads);
+}
+
+/// [`run_strips_scoped`] with the composable residual-add epilogue: each
+/// scoped worker applies the fused [`ResidualAdd`] to its own column strip
+/// of the shared NHWC residual source.
+pub fn run_strips_scoped_res(
+    plan: &PreparedGemm,
+    rhs: &[u8],
+    n: usize,
+    out: &mut [u8],
+    res: Option<(&ResidualAdd, &[u8])>,
+    threads: usize,
+) {
     assert!(threads >= 1);
     let m = plan.m();
     assert_eq!(rhs.len(), plan.k() * n, "rhs must be K*N");
     assert_eq!(out.len(), m * n, "out must be M*N");
     if threads == 1 || n < 2 * threads {
-        plan.run(n, rhs, out, &mut Scratch::new());
+        plan.run_res(n, rhs, out, res, &mut Scratch::new());
         return;
     }
     let strips = carve_strips(n, threads);
@@ -114,7 +129,7 @@ pub fn run_strips_scoped(
             .map(|(&(n0, _), mut segs)| {
                 scope.spawn(move || {
                     let mut scratch = Scratch::new();
-                    plan.run_strip(rhs, n, n0, &mut segs, &mut scratch);
+                    plan.run_strip_res(rhs, n, n0, &mut segs, res, &mut scratch);
                 })
             })
             .collect();

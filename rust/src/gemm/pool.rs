@@ -33,7 +33,8 @@
 //! stays serial — small layers lose more to coordination than they gain
 //! from splitting, and `N = batch·OH·OW` shrinks fast down a CNN.
 
-use super::parallel::run_strips_scoped;
+use super::output::ResidualAdd;
+use super::parallel::run_strips_scoped_res;
 use super::prepared::{PreparedGemm, Scratch};
 use crate::sync::lock_recover;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -189,11 +190,28 @@ impl WorkerPool {
         out: &mut [u8],
         scratch: &mut Scratch,
     ) {
+        self.run_strips_res(plan, rhs, n, out, None, scratch);
+    }
+
+    /// [`Self::run_strips`] with the composable residual-add epilogue: every
+    /// worker applies the fused [`ResidualAdd`] to its own column strip
+    /// (global columns index the shared NHWC residual source), so the fused
+    /// path stays bit-identical across thread counts by the same
+    /// strip-disjointness argument as the plain path.
+    pub fn run_strips_res(
+        &self,
+        plan: &PreparedGemm,
+        rhs: &[u8],
+        n: usize,
+        out: &mut [u8],
+        res: Option<(&ResidualAdd, &[u8])>,
+        scratch: &mut Scratch,
+    ) {
         let m = plan.m();
         assert_eq!(rhs.len(), plan.k() * n, "rhs must be K*N");
         assert_eq!(out.len(), m * n, "out must be M*N");
         if self.threads == 1 || n < 2 * self.threads {
-            plan.run(n, rhs, out, scratch);
+            plan.run_res(n, rhs, out, res, scratch);
             return;
         }
         let strips = carve_strips(n, self.threads);
@@ -216,13 +234,13 @@ impl WorkerPool {
                 }
                 self.submit(
                     Box::new(move |scratch: &mut Scratch| {
-                        plan.run_strip(rhs, n, n0, &mut segs, scratch);
+                        plan.run_strip_res(rhs, n, n0, &mut segs, res, scratch);
                     }),
                     &latch,
                 );
             }
             let mut segs0 = segs0.expect("at least one strip");
-            plan.run_strip(rhs, n, strips[0].0, &mut segs0, scratch);
+            plan.run_strip_res(rhs, n, strips[0].0, &mut segs0, res, scratch);
         }
         // The latch is already released; this re-read is immediate.
         let panicked = latch.wait();
@@ -347,14 +365,29 @@ impl IntraOp {
         out: &mut [u8],
         scratch: &mut Scratch,
     ) {
+        self.run_res(plan, rhs, n, out, None, scratch);
+    }
+
+    /// [`Self::run`] with the composable residual-add epilogue threaded
+    /// through every strategy (serial, scoped-spawn, pool) — the fused
+    /// conv→add path parallelizes exactly like the plain one.
+    pub fn run_res(
+        &self,
+        plan: &PreparedGemm,
+        rhs: &[u8],
+        n: usize,
+        out: &mut [u8],
+        res: Option<(&ResidualAdd, &[u8])>,
+        scratch: &mut Scratch,
+    ) {
         match &self.strategy {
             IntraStrategy::Pool(pool) if n >= self.min_n && pool.threads() > 1 => {
-                pool.run_strips(plan, rhs, n, out, scratch);
+                pool.run_strips_res(plan, rhs, n, out, res, scratch);
             }
             IntraStrategy::Scoped(threads) if n >= self.min_n && *threads > 1 => {
-                run_strips_scoped(plan, rhs, n, out, *threads);
+                run_strips_scoped_res(plan, rhs, n, out, res, *threads);
             }
-            _ => plan.run(n, rhs, out, scratch),
+            _ => plan.run_res(n, rhs, out, res, scratch),
         }
     }
 }

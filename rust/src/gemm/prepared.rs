@@ -24,7 +24,7 @@
 
 use super::dispatch::{self, KernelDispatch};
 use super::kernel::{KC, MR, NR};
-use super::output::OutputStage;
+use super::output::{OutputStage, ResidualAdd};
 use super::{Kernel, QGemm};
 
 /// Reusable per-thread buffers for [`PreparedGemm`] execution. One instance
@@ -45,6 +45,16 @@ pub struct Scratch {
 impl Scratch {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Total bytes currently held by the scratch buffers (their high-water
+    /// marks) — the GEMM-side contribution to
+    /// [`crate::graph::ExecState::arena_bytes`].
+    pub fn bytes(&self) -> usize {
+        self.acc.len() * std::mem::size_of::<i32>()
+            + self.packed_rhs.len()
+            + self.packed_rhs_i8.len()
+            + self.col_sums.len() * std::mem::size_of::<i32>()
     }
 }
 
@@ -206,12 +216,27 @@ impl PreparedGemm {
     /// plus the §2.4 output pipeline, writing uint8 into `out` (`M×N`).
     /// Allocation-free once `scratch` has warmed up.
     pub fn run(&self, n: usize, rhs: &[u8], out: &mut [u8], scratch: &mut Scratch) {
+        self.run_res(n, rhs, out, None, scratch);
+    }
+
+    /// [`Self::run`] with the composable epilogue: after requantization each
+    /// output element is optionally combined with the matching element of a
+    /// residual source (NHWC bytes with `M` channels) via [`ResidualAdd`] —
+    /// the fused conv→add path. `res = None` is exactly [`Self::run`].
+    pub fn run_res(
+        &self,
+        n: usize,
+        rhs: &[u8],
+        out: &mut [u8],
+        res: Option<(&ResidualAdd, &[u8])>,
+        scratch: &mut Scratch,
+    ) {
         assert_eq!(rhs.len(), self.k * n, "rhs must be K*N");
         assert_eq!(out.len(), self.m * n, "out must be M*N");
         let Scratch { acc, packed_rhs, packed_rhs_i8, col_sums } = scratch;
         let acc = grow(acc, self.m * n);
         self.accumulate_cols(rhs, n, 0, n, acc, packed_rhs, packed_rhs_i8, col_sums);
-        self.stage.apply(acc, self.m, n, out);
+        self.stage.apply_res(acc, self.m, n, out, res, 0);
     }
 
     /// Corrected int32 accumulators only (eq. 7 without the output stage) —
@@ -237,6 +262,23 @@ impl PreparedGemm {
         segs: &mut [&mut [u8]],
         scratch: &mut Scratch,
     ) {
+        self.run_strip_res(rhs, stride, n0, segs, None, scratch);
+    }
+
+    /// [`Self::run_strip`] with the composable residual-add epilogue: the
+    /// strip covers global columns `[n0, n0 + nn)`, so row `i`, local column
+    /// `j` pairs with residual byte `res[(n0 + j) * M + i]` (NHWC source,
+    /// `M` channels). Each worker applies the epilogue to its own strip
+    /// while the `M×nn` accumulator block is still cache-resident.
+    pub fn run_strip_res(
+        &self,
+        rhs: &[u8],
+        stride: usize,
+        n0: usize,
+        segs: &mut [&mut [u8]],
+        res: Option<(&ResidualAdd, &[u8])>,
+        scratch: &mut Scratch,
+    ) {
         assert_eq!(segs.len(), self.m, "one output segment per row");
         let nn = segs.first().map_or(0, |s| s.len());
         assert!(n0 + nn <= stride, "strip exceeds RHS width");
@@ -247,13 +289,28 @@ impl PreparedGemm {
         let Scratch { acc, packed_rhs, packed_rhs_i8, col_sums } = scratch;
         let acc = grow(acc, self.m * nn);
         self.accumulate_cols(rhs, stride, n0, nn, acc, packed_rhs, packed_rhs_i8, col_sums);
+        if let Some((_, data)) = res {
+            assert!((n0 + nn) * self.m <= data.len(), "residual source too small for this strip");
+        }
         let bias = &self.stage.bias;
         for (i, seg) in segs.iter_mut().enumerate() {
             assert_eq!(seg.len(), nn, "ragged output segments");
             let mult = self.stage.multiplier.for_row(i);
             let b = if bias.is_empty() { 0 } else { bias[i] };
-            for (o, &a) in seg.iter_mut().zip(&acc[i * nn..(i + 1) * nn]) {
-                *o = self.stage.requantize_with(mult, a.wrapping_add(b));
+            match res {
+                None => {
+                    for (o, &a) in seg.iter_mut().zip(&acc[i * nn..(i + 1) * nn]) {
+                        *o = self.stage.requantize_with(mult, a.wrapping_add(b));
+                    }
+                }
+                Some((r, data)) => {
+                    for (j, (o, &a)) in
+                        seg.iter_mut().zip(&acc[i * nn..(i + 1) * nn]).enumerate()
+                    {
+                        let qa = self.stage.requantize_with(mult, a.wrapping_add(b));
+                        *o = r.apply(qa, data[(n0 + j) * self.m + i]);
+                    }
+                }
             }
         }
     }

@@ -13,7 +13,8 @@ pub mod fault;
 use crate::nn::activations::{
     logistic_f32, qlogistic, qlogistic_into, qsoftmax, qsoftmax_into, softmax_f32,
 };
-use crate::nn::conv::{Conv2d, PreparedConv2d, QConv2d};
+use crate::gemm::ResidualAdd;
+use crate::nn::conv::{Conv2d, PreparedConv2d, QConv2d, ResidualArgs};
 use crate::nn::depthwise::{DepthwiseConv2d, PreparedDepthwiseConv2d, QDepthwiseConv2d};
 use crate::nn::elementwise::{
     add_f32, concat_f32, qadd, qadd_into, qconcat, qconcat_into_indexed,
@@ -470,12 +471,42 @@ impl QGraph {
             .sum()
     }
 
+    /// Statically resolve the output quantization parameters of `r` for
+    /// the prepare-time fusion pass: conv-like layers store them, Add and
+    /// Concat carry them, pools propagate their producer's unchanged
+    /// ([`crate::nn::pool`]). `None` where resolution would need runtime
+    /// information (the fixed-point Softmax/Logistic output domains).
+    fn node_out_params(&self, r: NodeRef) -> Option<QuantParams> {
+        match r {
+            NodeRef::Input => Some(self.input_params),
+            NodeRef::Node(j) => match &self.nodes[j].op {
+                QOp::Conv(c) => Some(c.output_params),
+                QOp::Depthwise(d) => Some(d.output_params),
+                QOp::Fc(f) => Some(f.output_params),
+                QOp::Add { out_params, .. } | QOp::Concat { out_params, .. } => Some(*out_params),
+                QOp::AvgPool { .. } | QOp::MaxPool { .. } | QOp::GlobalAvgPool => {
+                    self.node_out_params(self.nodes[j].input)
+                }
+                QOp::Softmax | QOp::Logistic => None,
+            },
+        }
+    }
+
     /// Build the prepared execution plan: per-node weight packing, row sums
     /// and output stages, all computed once. Call at conversion time or at
     /// `.iaoiq` load time ([`crate::model_format`]); the plan is immutable
     /// and `Sync`, so serving threads share it read-only (each with its own
     /// [`ExecState`]). Prepared execution is bit-identical to
     /// [`QGraph::run_q`].
+    ///
+    /// This is also where the epilogue-fusion pass runs: every
+    /// `conv → Add` chain whose conv output has exactly one consumer is
+    /// rewritten so the conv applies the residual add inside its GEMM
+    /// output stage ([`ResidualAdd`]) and the Add node becomes a no-op
+    /// alias of the conv. Fusion is bit-identical to the unfused path
+    /// (both route through [`ResidualAdd::apply`]) and defaults on;
+    /// `IAOI_FUSION=off` (or `0`) disables it at prepare time, and
+    /// [`PreparedGraph::set_fusion`] overrides it per plan.
     pub fn prepare(&self) -> PreparedGraph {
         let nodes = self
             .nodes
@@ -505,7 +536,61 @@ impl QGraph {
                 },
             })
             .collect();
-        PreparedGraph { input_params: self.input_params, nodes, intra: None, fault: None }
+
+        // Fusion pass: rewrite conv → Add chains so the residual add runs
+        // inside the conv's output stage. A conv qualifies only when the
+        // Add is its sole consumer (otherwise another node still needs the
+        // raw conv output) and the counterpart operand is already
+        // materialized when the conv executes (the graph input or a
+        // strictly earlier node). When both operands are qualifying convs
+        // only the later one can see the earlier one as its residual, so
+        // the larger index wins.
+        let mut fused_cfg: Vec<Option<FusedAddCfg>> = vec![None; self.nodes.len()];
+        let mut alias: Vec<usize> = (0..self.nodes.len()).collect();
+        let mut consumers = vec![0usize; self.nodes.len()];
+        for node in &self.nodes {
+            for r in node.inputs() {
+                if let NodeRef::Node(j) = r {
+                    consumers[j] += 1;
+                }
+            }
+        }
+        for (a, node) in self.nodes.iter().enumerate() {
+            let QOp::Add { other, out_params } = &node.op else { continue };
+            let mut pick: Option<(usize, NodeRef)> = None;
+            for (op_ref, counterpart) in [(node.input, *other), (*other, node.input)] {
+                let NodeRef::Node(c) = op_ref else { continue };
+                if !matches!(self.nodes[c].op, QOp::Conv(_)) || consumers[c] != 1 {
+                    continue;
+                }
+                let available = match counterpart {
+                    NodeRef::Input => true,
+                    NodeRef::Node(j) => j < c,
+                };
+                if available && pick.is_none_or(|(pc, _)| c > pc) {
+                    pick = Some((c, counterpart));
+                }
+            }
+            let Some((c, counterpart)) = pick else { continue };
+            let QOp::Conv(conv) = &self.nodes[c].op else { unreachable!() };
+            let Some(res_params) = self.node_out_params(counterpart) else { continue };
+            fused_cfg[c] = Some(FusedAddCfg {
+                src: counterpart,
+                cfg: ResidualAdd::for_params(conv.output_params, res_params, *out_params),
+                out_params: *out_params,
+            });
+            alias[a] = c;
+        }
+
+        PreparedGraph {
+            input_params: self.input_params,
+            nodes,
+            intra: None,
+            fault: None,
+            fused_cfg,
+            alias,
+            fused: fusion_enabled_from_env(),
+        }
     }
 
     /// `OH·OW` of the dominant (highest-MAC) conv layer at batch 1 — the
@@ -563,6 +648,27 @@ struct PreparedNode {
     op: PreparedOp,
 }
 
+/// A fused `conv → Add` rewrite: the Add became a no-op alias of the conv,
+/// which now applies this epilogue in its output stage.
+#[derive(Clone, Copy, Debug)]
+struct FusedAddCfg {
+    /// The residual operand (the Add's non-conv operand).
+    src: NodeRef,
+    /// App. A.2 rescale configuration for `conv_out + src → out`.
+    cfg: ResidualAdd,
+    /// The Add's output quantization, adopted by the fused conv output.
+    out_params: QuantParams,
+}
+
+/// `IAOI_FUSION` env override, read at prepare time: fusion defaults on;
+/// `off` or `0` disables it (keeping the unfused oracle reachable in CI).
+fn fusion_enabled_from_env() -> bool {
+    match std::env::var("IAOI_FUSION") {
+        Ok(v) => !matches!(v.as_str(), "off" | "0"),
+        Err(_) => true,
+    }
+}
+
 /// The prepared form of a [`QGraph`]: every weight-side and
 /// allocation-shaped cost hoisted out of the per-request path. Immutable
 /// and shareable across threads; pair with one [`ExecState`] per worker.
@@ -584,6 +690,18 @@ pub struct PreparedGraph {
     /// across every worker driving this plan. Zero-cost when unset: the
     /// run hook is a single `Option` check, no allocation.
     fault: Option<std::sync::Arc<fault::FaultState>>,
+    /// Per-node epilogue-fusion configs, indexed by the *conv* node that
+    /// absorbs the Add. `None` for unfused nodes. Built by the fusion pass
+    /// in [`QGraph::prepare`]; consulted only when [`Self::fused`] is set,
+    /// so toggling fusion never requires re-preparing.
+    fused_cfg: Vec<Option<FusedAddCfg>>,
+    /// Node aliasing for fused Adds: identity everywhere except
+    /// `alias[add] = conv`, letting consumers of the Add read the conv's
+    /// output slot (which holds the post-add values when fused).
+    alias: Vec<usize>,
+    /// Whether the fusion rewrites are active. Seeded from `IAOI_FUSION`
+    /// at prepare time; [`Self::set_fusion`] overrides per plan.
+    fused: bool,
 }
 
 /// Per-worker mutable execution state: the layer scratch arena plus
@@ -610,6 +728,17 @@ impl ExecState {
     /// precedence while running that graph.
     pub fn set_intra(&mut self, intra: crate::gemm::IntraOp) {
         self.scratch.intra = intra;
+    }
+
+    /// Total bytes resident in this state's arenas after warm-up: every
+    /// node output slot, the reusable quantized-input slot, and the layer
+    /// scratch high-water marks. Epilogue fusion shrinks this — a fused
+    /// Add's output slot is never written, so it stays at zero capacity
+    /// (asserted in `rust/tests/alloc.rs`).
+    pub fn arena_bytes(&self) -> usize {
+        self.outs.iter().map(|t| t.data.len()).sum::<usize>()
+            + self.qin.data.len()
+            + self.scratch.bytes()
     }
 }
 
@@ -654,6 +783,34 @@ impl PreparedGraph {
         self
     }
 
+    /// Enable or disable the conv→Add epilogue-fusion rewrites discovered
+    /// at prepare time. Both settings are bit-identical (the fused epilogue
+    /// and [`crate::nn::elementwise::qadd_into`] share
+    /// [`ResidualAdd::apply`]); `false` keeps the unfused oracle alive for
+    /// differential tests and the `IAOI_FUSION=off` CI lane. Like
+    /// [`Self::set_ukernel`], this exists so tests can force both paths
+    /// without racing on process environment.
+    pub fn set_fusion(&mut self, fused: bool) {
+        self.fused = fused;
+    }
+
+    /// Builder-style [`Self::set_fusion`].
+    pub fn with_fusion(mut self, fused: bool) -> Self {
+        self.set_fusion(fused);
+        self
+    }
+
+    /// Number of Add nodes currently executed as fused conv epilogues
+    /// (0 when fusion is disabled). Surfaced in the prepare log, bench
+    /// artifacts, and the `/healthz` model JSON.
+    pub fn fused_nodes(&self) -> usize {
+        if self.fused {
+            self.fused_cfg.iter().flatten().count()
+        } else {
+            0
+        }
+    }
+
     /// Install a deterministic fault-injection plan: every subsequent run
     /// consults it (counted run, optional delays, panic at the configured
     /// run index). Chaos-test/bench machinery — see [`fault::FaultPlan`].
@@ -691,24 +848,46 @@ impl PreparedGraph {
         while state.outs.len() < self.nodes.len() {
             state.outs.push(QTensor::default());
         }
+        let fused = self.fused;
         for (i, node) in self.nodes.iter().enumerate() {
+            // A fused Add is a no-op alias of its conv: skip it entirely.
+            if fused && self.alias[i] != i {
+                continue;
+            }
             if let Some(f) = &self.fault {
                 f.before_node();
             }
             // Split so earlier outputs stay readable while node i's slot is
             // written — the DAG invariant (validate_topology) guarantees
-            // inputs are strictly earlier.
+            // inputs are strictly earlier. When fused, reads resolve
+            // through the alias map (always to an index ≤ the original, so
+            // still strictly earlier than i).
             let (done, rest) = state.outs.split_at_mut(i);
             let dst = &mut rest[0];
             let fetch = |r: &NodeRef| -> &QTensor {
                 match r {
                     NodeRef::Input => qin,
-                    NodeRef::Node(j) => &done[*j],
+                    NodeRef::Node(j) => &done[if fused { self.alias[*j] } else { *j }],
                 }
             };
             let x = fetch(&node.input);
             match &node.op {
-                PreparedOp::Conv(p) => p.run_into(x, dst, &mut state.scratch),
+                PreparedOp::Conv(p) => {
+                    let epi = if fused { self.fused_cfg[i].as_ref() } else { None };
+                    match epi {
+                        Some(fc) => p.run_into_res(
+                            x,
+                            Some(ResidualArgs {
+                                cfg: fc.cfg,
+                                src: fetch(&fc.src),
+                                out_params: fc.out_params,
+                            }),
+                            dst,
+                            &mut state.scratch,
+                        ),
+                        None => p.run_into(x, dst, &mut state.scratch),
+                    }
+                }
                 PreparedOp::Depthwise(p) => p.run_into(x, dst, &mut state.scratch),
                 PreparedOp::Fc(p) => p.run_into(x, dst, &mut state.scratch),
                 PreparedOp::AvgPool { kernel, stride, padding } => {
@@ -738,7 +917,8 @@ impl PreparedGraph {
         if let Some(prev) = saved_intra {
             state.scratch.intra = prev;
         }
-        &state.outs[self.nodes.len() - 1]
+        let last = self.nodes.len() - 1;
+        &state.outs[if fused { self.alias[last] } else { last }]
     }
 
     /// Quantize a float input (into the state's reusable slot) and run,

@@ -559,9 +559,10 @@ pub fn serve_registry(
     for name in &names {
         let entry = registry.resolve(name)?;
         println!(
-            "  {name} v{} ({} nodes, input {:?}, positions_hint {}, weights {}, from {:?})",
+            "  {name} v{} ({} nodes, {} fused, input {:?}, positions_hint {}, weights {}, from {:?})",
             entry.version,
             entry.graph.nodes.len(),
+            entry.plan.fused_nodes(),
             entry.input_shape,
             entry.positions_hint,
             if entry.is_mapped() {
@@ -764,10 +765,11 @@ pub fn serve_socket(
     for name in registry.names() {
         let entry = registry.resolve(&name)?;
         println!(
-            "  {name} v{} (input {:?}, {} nodes)",
+            "  {name} v{} (input {:?}, {} nodes, {} fused)",
             entry.version,
             entry.input_shape,
-            entry.graph.nodes.len()
+            entry.graph.nodes.len(),
+            entry.plan.fused_nodes()
         );
     }
     println!(
@@ -818,7 +820,8 @@ pub fn run_table(id: &str, fast: bool) -> Result<()> {
         "quant-modes" => tables::table_quant_modes(fast),
         "pool" => tables::table_pool(fast),
         "kernels" => tables::table_kernels(fast),
-        other => Err(anyhow!("unknown table {other} (4.1-4.8, quant-modes, pool, kernels)")),
+        "fusion" => tables::table_fusion(fast),
+        other => Err(anyhow!("unknown table {other} (4.1-4.8, quant-modes, pool, kernels, fusion)")),
     }
 }
 

@@ -577,6 +577,76 @@ pub fn table_kernels(fast: bool) -> Result<()> {
     Ok(())
 }
 
+/// `iaoi bench --table fusion` — conv→Add epilogue fusion on the residual
+/// mini-resnet: the same quantized graph prepared with the rewrite on vs
+/// off ([`crate::graph::PreparedGraph::set_fusion`]), swept over every
+/// detected GEMM micro-kernel. The two plans must agree byte-for-byte
+/// before any timing is reported — fusion's contract is bit-identity, so a
+/// divergence aborts the table instead of printing a bogus speedup.
+pub fn table_fusion(fast: bool) -> Result<()> {
+    use super::time_median_ms;
+    use crate::gemm::dispatch;
+    use crate::graph::{builders, ExecState};
+    use crate::nn::QTensor;
+    use crate::quantize::{quantize_graph, QuantizeOptions};
+    use crate::tensor::Tensor;
+
+    let iters = if fast { 3 } else { 9 };
+    let mut rng = crate::data::Rng::seeded(75);
+    let mk = |rng: &mut crate::data::Rng, batch: usize| {
+        let mut d = vec![0f32; batch * 16 * 16 * 3];
+        for v in d.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        Tensor::from_vec(&[batch, 16, 16, 3], d)
+    };
+    let g = builders::mini_resnet(1, 8, 75);
+    let calib = vec![mk(&mut rng, 2)];
+    let (_, q) = quantize_graph(&g, &calib, QuantizeOptions::default());
+    let fused_nodes = q.prepare().fused_nodes();
+    anyhow::ensure!(fused_nodes >= 1, "mini-resnet discovered no conv→Add fusion");
+
+    println!(
+        "# Fusion — conv→Add folded into the GEMM output stage \
+         (mini_resnet, {fused_nodes} fused nodes, active kernel: {})",
+        dispatch::active().name
+    );
+    println!("| batch | kernel | unfused ms | fused ms | speedup |");
+    println!("|---|---|---|---|---|");
+    for batch in [1usize, 8] {
+        let qin = QTensor::quantize(&mk(&mut rng, batch), q.input_params);
+        for d in dispatch::available() {
+            let fused_plan = q.prepare().with_fusion(true).with_ukernel(d);
+            let unfused_plan = q.prepare().with_fusion(false).with_ukernel(d);
+            let mut sf = ExecState::new();
+            let mut su = ExecState::new();
+            let want = unfused_plan.run_q(&qin, &mut su).data.data().to_vec();
+            let got = fused_plan.run_q(&qin, &mut sf).data.data().to_vec();
+            anyhow::ensure!(
+                got == want,
+                "{}: fused output diverged from unfused at batch {batch} — timing withheld",
+                d.name
+            );
+            let unfused_ms = time_median_ms(iters, || {
+                std::hint::black_box(unfused_plan.run_q(&qin, &mut su).data.len());
+            });
+            let fused_ms = time_median_ms(iters, || {
+                std::hint::black_box(fused_plan.run_q(&qin, &mut sf).data.len());
+            });
+            println!(
+                "| {batch} | {} | {unfused_ms:.3} | {fused_ms:.3} | {:.2}x |",
+                d.name,
+                unfused_ms / fused_ms.max(1e-9)
+            );
+        }
+    }
+    println!(
+        "\n(both plans come from the same quantized graph; `IAOI_FUSION=off` forces the \
+         unfused path process-wide for differential runs)"
+    );
+    Ok(())
+}
+
 /// Used by `eval` when a saved model exists; re-exported for tests.
 pub fn quick_eval(model_path: &Path) -> Result<f32> {
     let arts = artifacts();

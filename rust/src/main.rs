@@ -20,7 +20,7 @@
 //!                 [--quarantine-threshold K]
 //!                 [--load copy|zerocopy|mmap]
 //! iaoi quickstart [--artifacts DIR]
-//! iaoi bench      --table 4.1|...|4.8|quant-modes|pool|kernels | --fig 1.1c|4.1|4.2|4.3 [--fast]
+//! iaoi bench      --table 4.1|...|4.8|quant-modes|pool|kernels|fusion | --fig 1.1c|4.1|4.2|4.3 [--fast]
 //! ```
 //!
 //! `export` writes a `.iaoiq` quantized-model artifact; `serve --models`
@@ -97,7 +97,7 @@ fn print_usage() {
          iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B] [--workers W] [--intra-threads T] [--load copy|zerocopy|mmap]\n  \
          iaoi serve      --addr HOST:PORT [--models DIR] [--queue-depth N] [--model-inflight-cap N] [--port-file FILE] [--max-batch B] [--workers W] [--intra-threads T] [--request-deadline-ms MS] [--max-connections N] [--quarantine-threshold K] [--load copy|zerocopy|mmap]\n  \
          iaoi quickstart [--artifacts DIR]\n  \
-         iaoi bench      --table <id> | --fig <id> [--fast]  (tables 4.1-4.8, quant-modes, pool, kernels)\n"
+         iaoi bench      --table <id> | --fig <id> [--fast]  (tables 4.1-4.8, quant-modes, pool, kernels, fusion)\n"
     );
 }
 

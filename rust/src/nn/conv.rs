@@ -8,7 +8,7 @@
 //! requantize / clamp output pipeline applies per output channel, matching
 //! the fused-layer layout of figure 1.1a.
 
-use crate::gemm::output::Requant;
+use crate::gemm::output::{Requant, ResidualAdd};
 use crate::gemm::prepared::grow;
 use crate::gemm::{output::OutputStage, Kernel, PreparedGemm, QGemm};
 use crate::nn::{FusedActivation, LayerScratch, Padding, QTensor};
@@ -154,6 +154,22 @@ impl PreparedConv2d {
     /// Run the layer, writing the NHWC result into `out` (reshaped in
     /// place, allocation reused).
     pub fn run_into(&self, input: &QTensor, out: &mut QTensor, scratch: &mut LayerScratch) {
+        self.run_into_res(input, None, out, scratch);
+    }
+
+    /// [`Self::run_into`] with the composable residual-add epilogue: when
+    /// `res` is given, the fused conv→add path combines every
+    /// just-requantized output element with the matching element of the
+    /// residual source (same NHWC shape as this conv's output) inside the
+    /// GEMM's cache-resident output stage, and the output carries the Add's
+    /// quantization parameters. `res = None` is exactly [`Self::run_into`].
+    pub fn run_into_res(
+        &self,
+        input: &QTensor,
+        res: Option<ResidualArgs<'_>>,
+        out: &mut QTensor,
+        scratch: &mut LayerScratch,
+    ) {
         assert_eq!(
             input.params.zero_point, self.input_zero,
             "input must be quantized with the layer's input params"
@@ -165,6 +181,13 @@ impl PreparedConv2d {
         let (ow, pad_w) = self.padding.resolve(iw, self.kw, self.stride);
         let k = self.kh * self.kw * cin;
         let n = batch * oh * ow;
+        if let Some(args) = &res {
+            assert_eq!(
+                args.src.shape(),
+                [batch, oh, ow, self.cout],
+                "residual operand shape must equal the conv output shape"
+            );
+        }
 
         let LayerScratch { gemm, cols, staging, intra, .. } = scratch;
         let cols = grow(cols, k * n);
@@ -173,13 +196,31 @@ impl PreparedConv2d {
         // Large-N GEMMs split across the worker's intra-op pool (serial by
         // default; bit-identical either way — the pool only changes who
         // computes each column strip).
-        intra.run(&self.plan, cols, n, staging, gemm);
+        let epi = res.as_ref().map(|a| (&a.cfg, a.src.data.data()));
+        intra.run_res(&self.plan, cols, n, staging, epi, gemm);
 
-        out.params = self.output_params;
+        out.params = match &res {
+            Some(args) => args.out_params,
+            None => self.output_params,
+        };
         // Safe: the scatter below writes every output element exactly once.
         out.data.reset_for_overwrite(&[batch, oh, ow, self.cout]);
         scatter_cm_to_nhwc(staging, self.cout, n, out.data.data_mut());
     }
+}
+
+/// The residual operand of a fused conv→add execution: the epilogue config
+/// (built at prepare time from the three quantization parameter sets), the
+/// already-computed residual tensor, and the Add's output parameters which
+/// the fused output adopts.
+#[derive(Clone, Copy, Debug)]
+pub struct ResidualArgs<'a> {
+    /// App. A.2 rescale multipliers/zero-points for `conv_out + src → out`.
+    pub cfg: ResidualAdd,
+    /// The residual source (NHWC, same shape as the conv output).
+    pub src: &'a QTensor,
+    /// Quantization parameters of the fused (Add) output.
+    pub out_params: QuantParams,
 }
 
 /// Transpose a channel-major `[C][N]` GEMM result into NHWC order (channel

@@ -12,15 +12,30 @@
 //! concat to share one set of quantization parameters, making the op free
 //! of arithmetic (App. A.3). [`qconcat`] asserts that contract.
 
-use crate::fixedpoint::rounding_div_by_pot;
+use crate::gemm::ResidualAdd;
 use crate::nn::QTensor;
-use crate::quant::{QuantParams, QuantizedMultiplier};
+use crate::quant::QuantParams;
 use crate::tensor::Tensor;
 
-/// Internal headroom for the Add rescale: inputs are promoted to a common
-/// `2^-SHIFT`-grained fixed-point scale before summation. 16 bits keeps
-/// `(q−Z) · 2^16 · M` within i32 for `M ≤ 64`.
-const ADD_LEFT_SHIFT: i32 = 16;
+/// Structured report of an Add whose operands disagree on shape. Raised by
+/// [`try_qadd_into`] *before* any output is touched — previously a
+/// mismatched pair could only fail as a deep slice-index panic partway
+/// through the elementwise loop.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AddShapeError {
+    /// Shape of the left (primary) operand.
+    pub lhs: Vec<usize>,
+    /// Shape of the right (residual) operand.
+    pub rhs: Vec<usize>,
+}
+
+impl std::fmt::Display for AddShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "add operands must have equal shapes: lhs {:?} vs rhs {:?}", self.lhs, self.rhs)
+    }
+}
+
+impl std::error::Error for AddShapeError {}
 
 /// Quantized elementwise addition with rescaling (App. A.2).
 pub fn qadd(a: &QTensor, b: &QTensor, out_params: QuantParams) -> QTensor {
@@ -30,26 +45,38 @@ pub fn qadd(a: &QTensor, b: &QTensor, out_params: QuantParams) -> QTensor {
 }
 
 /// [`qadd`] into a reusable output (the prepared path's zero-alloc steady
-/// state).
+/// state). Panics on shape mismatch; use [`try_qadd_into`] to get the
+/// structured [`AddShapeError`] instead.
 pub fn qadd_into(a: &QTensor, b: &QTensor, out_params: QuantParams, dst: &mut QTensor) {
-    assert_eq!(a.shape(), b.shape(), "add operands must have equal shapes");
-    // Promote both inputs onto the scale out_scale·2^-SHIFT.
-    let twopow = (1i64 << ADD_LEFT_SHIFT) as f64;
-    let ma = QuantizedMultiplier::from_f64(a.params.scale / out_params.scale * twopow);
-    let mb = QuantizedMultiplier::from_f64(b.params.scale / out_params.scale * twopow);
-    let za = a.params.zero_point;
-    let zb = b.params.zero_point;
-    let zo = out_params.zero_point;
+    if let Err(e) = try_qadd_into(a, b, out_params, dst) {
+        panic!("{e}");
+    }
+}
+
+/// [`qadd_into`] with up-front operand validation: a shape mismatch is
+/// reported as a structured error with both shapes, and `dst` is left
+/// untouched.
+///
+/// The arithmetic delegates to [`ResidualAdd`] — the exact epilogue the
+/// prepare-time fusion pass folds into the GEMM output stage — so the
+/// standalone pass and the fused path are bit-identical by construction.
+pub fn try_qadd_into(
+    a: &QTensor,
+    b: &QTensor,
+    out_params: QuantParams,
+    dst: &mut QTensor,
+) -> Result<(), AddShapeError> {
+    if a.shape() != b.shape() {
+        return Err(AddShapeError { lhs: a.shape().to_vec(), rhs: b.shape().to_vec() });
+    }
+    let r = ResidualAdd::for_params(a.params, b.params, out_params);
     dst.params = out_params;
     // Safe: the loop below writes every output element.
     dst.data.reset_for_overwrite(a.shape());
     for ((o, &qa), &qb) in dst.data.data_mut().iter_mut().zip(a.data.data()).zip(b.data.data()) {
-        let ra = ma.apply(i32::from(qa) - za);
-        let rb = mb.apply(i32::from(qb) - zb);
-        let sum = ra.saturating_add(rb);
-        let q = rounding_div_by_pot(sum, ADD_LEFT_SHIFT).saturating_add(zo);
-        *o = q.clamp(0, 255) as u8;
+        *o = r.apply(qa, qb);
     }
+    Ok(())
 }
 
 /// Quantized concatenation along the channel (last) axis. All inputs and the
@@ -175,6 +202,44 @@ mod tests {
         for &q in out.data.data() {
             assert_eq!(q, 255, "must clamp at qmax");
         }
+    }
+
+    #[test]
+    fn try_qadd_reports_shape_mismatch_without_touching_dst() {
+        let p = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let a = QTensor::real_zeros(&[1, 2, 2, 3], p);
+        let b = QTensor::real_zeros(&[1, 2, 3, 2], p);
+        let mut dst = QTensor::real_zeros(&[7], p);
+        let err = try_qadd_into(&a, &b, p, &mut dst).unwrap_err();
+        assert_eq!(err.lhs, vec![1, 2, 2, 3]);
+        assert_eq!(err.rhs, vec![1, 2, 3, 2]);
+        assert!(err.to_string().contains("equal shapes"), "{err}");
+        // The destination must be exactly as it was: validation runs
+        // before any write (previously this failed as a slice-index panic
+        // mid-loop, after clobbering a prefix of dst).
+        assert_eq!(dst.shape(), &[7]);
+    }
+
+    #[test]
+    fn try_qadd_matches_qadd_on_valid_operands() {
+        let p = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let po = QuantParams::from_min_max(-2.0, 2.0, 0, 255);
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![0.25f32, -0.5, 0.75, 0.0]);
+        let qa = QTensor::quantize(&x, p);
+        let want = qadd(&qa, &qa, po);
+        let mut got = QTensor::default();
+        try_qadd_into(&qa, &qa, po, &mut got).unwrap();
+        assert_eq!(want.data.data(), got.data.data());
+    }
+
+    #[test]
+    #[should_panic(expected = "add operands must have equal shapes")]
+    fn qadd_into_panics_with_both_shapes_in_message() {
+        let p = QuantParams::from_min_max(-1.0, 1.0, 0, 255);
+        let a = QTensor::real_zeros(&[2, 3], p);
+        let b = QTensor::real_zeros(&[3, 2], p);
+        let mut dst = QTensor::default();
+        qadd_into(&a, &b, p, &mut dst);
     }
 
     #[test]

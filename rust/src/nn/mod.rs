@@ -108,6 +108,16 @@ impl LayerScratch {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Bytes currently held across every arena (high-water marks after
+    /// warm-up) — feeds [`crate::graph::ExecState::arena_bytes`].
+    pub fn bytes(&self) -> usize {
+        self.gemm.bytes()
+            + self.cols.len()
+            + self.staging.len()
+            + self.acc32.len() * std::mem::size_of::<i32>()
+            + self.acc64.len() * std::mem::size_of::<i64>()
+    }
 }
 
 /// Spatial padding mode.

@@ -567,12 +567,13 @@ fn healthz(state: &Arc<ServerState>) -> Response {
         }
         first = false;
         body.push_str(&format!(
-            "{{\"name\":{},\"version\":{},\"input_shape\":[{},{},{}],\"status\":\"{status}\",\"inflight\":{},\"panics\":{}}}",
+            "{{\"name\":{},\"version\":{},\"input_shape\":[{},{},{}],\"status\":\"{status}\",\"fused_nodes\":{},\"inflight\":{},\"panics\":{}}}",
             json_string(name),
             entry.version,
             entry.input_shape[0],
             entry.input_shape[1],
             entry.input_shape[2],
+            entry.plan.fused_nodes(),
             state.admission.model_inflight(name),
             state.registry.panic_count(name),
         ));

@@ -13,7 +13,7 @@
 //!   serving observables.
 //! * `GET /healthz` — JSON: overall `status` (`serving` | `draining`)
 //!   plus one entry per resident model (name, version, input shape,
-//!   per-model status and in-flight count).
+//!   per-model status, fused-epilogue node count and in-flight count).
 //! * `GET /metrics` — Prometheus text exposition of the coordinator's
 //!   per-model latency histograms, batch stats and admission counters.
 //!

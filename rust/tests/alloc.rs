@@ -13,7 +13,7 @@
 use iaoi::bench_util::counting_alloc::{self, CountingAlloc};
 use iaoi::data::Rng;
 use iaoi::gemm::{Kernel, QGemm};
-use iaoi::graph::builders::papernet_random;
+use iaoi::graph::builders::{mini_resnet, papernet_random};
 use iaoi::graph::{ExecState, FloatGraph, FloatOp, NodeRef};
 use iaoi::model_format::{self, ModelArtifact};
 use iaoi::nn::conv::Conv2d;
@@ -90,6 +90,44 @@ fn prepared_run_q_is_allocation_free_in_steady_state() {
         plan_pc.run_q(&qin_pc, &mut state_pc);
     });
     assert_eq!(steady_pc, 0, "per-channel steady state made {steady_pc} allocations");
+
+    // Epilogue fusion (conv→Add folded into the conv's output stage) must
+    // keep the steady-state guarantee — the fused residual read borrows an
+    // earlier output slot in place — and must *shrink* the ExecState
+    // arena: the fused Add nodes are skipped, so their output slots are
+    // never grown past the empty default.
+    let gr = mini_resnet(1, 4, 212);
+    let mut rng_r = Rng::seeded(212);
+    let mkr = |rng: &mut Rng, batch: usize| {
+        let mut d = vec![0f32; batch * 12 * 12 * 3];
+        for v in d.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        Tensor::from_vec(&[batch, 12, 12, 3], d)
+    };
+    let calib_r = vec![mkr(&mut rng_r, 1), mkr(&mut rng_r, 1)];
+    let (_, qr) = quantize_graph(&gr, &calib_r, QuantizeOptions::default());
+    let plan_fused = qr.prepare().with_fusion(true);
+    let plan_unfused = qr.prepare().with_fusion(false);
+    assert!(plan_fused.fused_nodes() >= 1, "mini-resnet must discover a conv→Add fusion");
+    let qin_r = QTensor::quantize(&mkr(&mut rng_r, 1), qr.input_params);
+    let mut state_f = ExecState::new();
+    let mut state_u = ExecState::new();
+    plan_fused.run_q(&qin_r, &mut state_f);
+    plan_fused.run_q(&qin_r, &mut state_f);
+    plan_unfused.run_q(&qin_r, &mut state_u);
+    plan_unfused.run_q(&qin_r, &mut state_u);
+    let steady_fused = count_allocs(|| {
+        plan_fused.run_q(&qin_r, &mut state_f);
+    });
+    assert_eq!(steady_fused, 0, "fused mini-resnet made {steady_fused} steady allocations");
+    assert!(
+        state_f.arena_bytes() < state_u.arena_bytes(),
+        "fused arena ({} bytes) must be strictly smaller than unfused ({} bytes): \
+         fused Add output slots stay empty",
+        state_f.arena_bytes(),
+        state_u.arena_bytes()
+    );
 
     // Ops that allocated per call until PR 3 — Concat's operand gather and
     // the fixed-point Softmax/Logistic — must now be zero-alloc too.

@@ -1,0 +1,191 @@
+//! Differential tests for the conv→Add epilogue-fusion pass.
+//!
+//! The prepare-time rewrite (see `QGraph::prepare`) folds a residual Add
+//! into the producing conv's output stage. Its one non-negotiable contract
+//! is **bit-identity**: because the fused epilogue and the standalone
+//! `qadd_into` share `ResidualAdd::apply`, a fused plan must produce the
+//! same uint8 stream as the unfused oracle on every kernel, quant mode,
+//! and thread count. These tests sweep exactly that grid, over both the
+//! mini-resnet builder (real identity/projection blocks) and small
+//! synthetic conv→Add(→ReLU) lattices, and pin down the no-false-fusion
+//! rule: a conv with more than one consumer must not be rewritten.
+
+use iaoi::data::Rng;
+use iaoi::gemm::{dispatch, IntraOp, WorkerPool};
+use iaoi::graph::{builders, ExecState, FloatGraph, FloatOp, NodeRef};
+use iaoi::nn::conv::Conv2d;
+use iaoi::nn::{FusedActivation, Padding, QTensor};
+use iaoi::quantize::{quantize_graph, QuantMode, QuantizeOptions};
+use iaoi::tensor::Tensor;
+
+fn random_input(rng: &mut Rng, shape: &[usize]) -> Tensor<f32> {
+    let mut d = vec![0f32; shape.iter().product()];
+    for v in d.iter_mut() {
+        *v = rng.range_f32(-1.0, 1.0);
+    }
+    Tensor::from_vec(shape, d)
+}
+
+/// Quantize `g`, then check the fused plan against both the unfused plan
+/// and the unprepared oracle, bit for bit, across every detected GEMM
+/// kernel and thread counts {1, 2, 8}. Returns the fused-node count so
+/// callers can assert the pass actually fired (or was refused).
+fn assert_fused_matches_unfused(
+    g: &FloatGraph,
+    input_shape: &[usize],
+    mode: QuantMode,
+    seed: u64,
+) -> usize {
+    let mut rng = Rng::seeded(seed);
+    let calib = vec![random_input(&mut rng, input_shape), random_input(&mut rng, input_shape)];
+    let opts = QuantizeOptions { mode, ..Default::default() };
+    let (_, q) = quantize_graph(g, &calib, opts);
+    let qin = QTensor::quantize(&random_input(&mut rng, input_shape), q.input_params);
+    let oracle = q.run_q(&qin);
+
+    let mut fused_nodes = None;
+    for kernel in dispatch::available() {
+        for threads in [1usize, 2, 8] {
+            let intra = if threads == 1 {
+                IntraOp::serial()
+            } else {
+                // min_n = 1 forces every conv/FC GEMM through the pool so
+                // the strip epilogue path is exercised, not just the
+                // serial one.
+                IntraOp::pool(std::sync::Arc::new(WorkerPool::new(threads)), 1)
+            };
+            let mut fused = q.prepare().with_fusion(true).with_ukernel(kernel);
+            fused.set_intra(intra.clone());
+            let mut unfused = q.prepare().with_fusion(false).with_ukernel(kernel);
+            unfused.set_intra(intra);
+            assert_eq!(unfused.fused_nodes(), 0, "disabled plan must report 0 fused nodes");
+            let n = fused.fused_nodes();
+            if let Some(prev) = fused_nodes {
+                assert_eq!(prev, n, "fused-node count must not depend on kernel/threads");
+            }
+            fused_nodes = Some(n);
+
+            let mut sf = ExecState::new();
+            let mut su = ExecState::new();
+            for pass in 0..2 {
+                let got_f = fused.run_q(&qin, &mut sf).data.data().to_vec();
+                let got_u = unfused.run_q(&qin, &mut su);
+                assert_eq!(
+                    got_f,
+                    got_u.data.data(),
+                    "fused vs unfused diverged: kernel={} threads={threads} mode={mode:?} pass={pass}",
+                    kernel.name
+                );
+                assert_eq!(
+                    got_f,
+                    oracle.data.data(),
+                    "prepared vs unprepared oracle diverged: kernel={} threads={threads} mode={mode:?} pass={pass}",
+                    kernel.name
+                );
+            }
+        }
+    }
+    fused_nodes.unwrap()
+}
+
+/// A shape-preserving 3×3 conv (SAME, stride 1, cout == cin) so its output
+/// can be Added to any same-shaped earlier value.
+fn shape_preserving_conv(rng: &mut Rng, cin: usize, act: FusedActivation) -> Conv2d {
+    let mut w = vec![0f32; cin * 3 * 3 * cin];
+    rng.fill_normal(&mut w, 0.3);
+    let mut bias = vec![0f32; cin];
+    rng.fill_normal(&mut bias, 0.1);
+    Conv2d {
+        weights: Tensor::from_vec(&[cin, 3, 3, cin], w),
+        bias,
+        stride: 1,
+        padding: Padding::Same,
+        activation: act,
+    }
+}
+
+/// `Input → conv → Add(conv, Input)`, optionally followed by a ReLU — the
+/// smallest fusable lattice (counterpart is the graph input).
+fn conv_add_input_graph(seed: u64, relu_tail: bool) -> FloatGraph {
+    let mut rng = Rng::seeded(seed);
+    let mut g = FloatGraph::default();
+    let c = g.push(
+        "conv",
+        NodeRef::Input,
+        FloatOp::Conv(shape_preserving_conv(&mut rng, 3, FusedActivation::None)),
+    );
+    let a = g.push("add", c, FloatOp::Add(NodeRef::Input));
+    if relu_tail {
+        g.push("relu", a, FloatOp::Relu);
+    }
+    g
+}
+
+/// `Input → conv0 → conv1 → Add(conv1, conv0)`: conv0 feeds both conv1 and
+/// the Add (two consumers, must not fuse); conv1 has one consumer and an
+/// earlier-node counterpart, so exactly one fusion fires.
+fn conv_conv_add_graph(seed: u64) -> FloatGraph {
+    let mut rng = Rng::seeded(seed);
+    let mut g = FloatGraph::default();
+    let c0 = g.push(
+        "conv0",
+        NodeRef::Input,
+        FloatOp::Conv(shape_preserving_conv(&mut rng, 3, FusedActivation::Relu)),
+    );
+    let c1 = g.push(
+        "conv1",
+        c0,
+        FloatOp::Conv(shape_preserving_conv(&mut rng, 3, FusedActivation::None)),
+    );
+    g.push("add", c1, FloatOp::Add(c0));
+    g
+}
+
+/// `conv` consumed by two different Adds: every operand position sees a
+/// multi-consumer conv, so the pass must refuse to rewrite anything.
+fn multi_consumer_graph(seed: u64) -> FloatGraph {
+    let mut rng = Rng::seeded(seed);
+    let mut g = FloatGraph::default();
+    let c = g.push(
+        "conv",
+        NodeRef::Input,
+        FloatOp::Conv(shape_preserving_conv(&mut rng, 3, FusedActivation::None)),
+    );
+    let a1 = g.push("add1", c, FloatOp::Add(NodeRef::Input));
+    g.push("add2", c, FloatOp::Add(a1));
+    g
+}
+
+#[test]
+fn mini_resnet_fuses_all_residual_adds_bit_identically() {
+    // n = 1 → three residual blocks (one identity, two projection), three
+    // Add nodes; every one has a single-consumer conv operand, so all
+    // three must fuse — and the fused plan must match the unfused oracle
+    // bit for bit on every kernel/thread/mode combination.
+    let g = builders::mini_resnet(1, 4, 212);
+    for mode in [QuantMode::PerTensor, QuantMode::PerChannel] {
+        let fused = assert_fused_matches_unfused(&g, &[1, 12, 12, 3], mode, 212);
+        assert_eq!(fused, 3, "mini_resnet(1) has 3 residual Adds; all must fuse ({mode:?})");
+    }
+}
+
+#[test]
+fn synthetic_conv_add_lattices_fuse_bit_identically() {
+    for mode in [QuantMode::PerTensor, QuantMode::PerChannel] {
+        for relu_tail in [false, true] {
+            let g = conv_add_input_graph(41, relu_tail);
+            let fused = assert_fused_matches_unfused(&g, &[2, 8, 8, 3], mode, 41);
+            assert_eq!(fused, 1, "conv→Add(Input) must fuse (relu_tail={relu_tail}, {mode:?})");
+        }
+        let g = conv_conv_add_graph(43);
+        let fused = assert_fused_matches_unfused(&g, &[1, 8, 8, 3], mode, 43);
+        assert_eq!(fused, 1, "only the single-consumer conv1 may fuse ({mode:?})");
+    }
+}
+
+#[test]
+fn multi_consumer_conv_is_never_fused() {
+    let g = multi_consumer_graph(47);
+    let fused = assert_fused_matches_unfused(&g, &[1, 8, 8, 3], QuantMode::PerTensor, 47);
+    assert_eq!(fused, 0, "a conv with two consumers must not be rewritten");
+}
