@@ -188,6 +188,31 @@ fn main() -> Result<()> {
     assert_eq!(ok.status, 200, "healthy models keep serving through gamma's quarantine");
     println!("  faulty gamma: 500, 500 -> 503 quarantined (K=2); alpha kept serving");
 
+    // --- Fleet lifecycle: drained eviction, cold tombstone, reinstall. ---
+    // (CLI equivalents: --max-resident-models, --prepare.) Eviction drains
+    // in-flight traffic like a hot swap, then retires the model to a cold
+    // tombstone: requests 404, /healthz still lists it (status "cold"),
+    // and `install_model` brings it back from the artifact on disk.
+    let beta_img = gamma_probe.example(2, 3).0;
+    let before = http.infer("beta", beta_img.data())?;
+    assert_eq!(before.status, 200);
+    let retired = server.evict_model("beta")?;
+    let gone = http.infer("beta", beta_img.data())?;
+    assert_eq!(gone.status, 404, "an evicted model routes like an unknown one");
+    let health = http.get("/healthz")?.body_text();
+    assert!(health.contains("\"resident\":\"cold\""), "healthz must list the tombstone: {health}");
+    let (name, version) = server.install_model(&dir.join("beta.iaoiq"))?;
+    assert_eq!((name.as_str(), version), ("beta", 1));
+    let back = http.infer("beta", beta_img.data())?;
+    assert_eq!(back.status, 200);
+    for (b, a) in back.body_f32()?.iter().zip(before.body_f32()?.iter()) {
+        assert_eq!(b.to_bits(), a.to_bits(), "reinstalled beta must serve identical outputs");
+    }
+    println!(
+        "  evicted beta v{retired} (drained, tombstoned cold) -> 404; \
+         reinstalled v{version}, outputs bit-identical"
+    );
+
     let report = server.shutdown();
     assert!(report.drained_clean);
     println!(

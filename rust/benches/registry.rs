@@ -1,0 +1,239 @@
+//! Fleet lifecycle benchmark: what a multi-tenant registry pays to cycle
+//! models in and out of residency. Two claims are measured:
+//!
+//! 1. **Warm reinstall beats cold install.** A cold install (copy-mode
+//!    read + eager panel packing) pays the full decode + pack cost up
+//!    front. An evict→reinstall cycle of an mmap-backed, lazily-prepared
+//!    model re-reads page-cache-resident bytes and packs nothing until
+//!    first touch — its p50 should sit strictly below the cold p50.
+//! 2. **An LRU-capped fleet keeps serving under churn.** 32 models behind
+//!    a cap of 8, driven by a Zipf-distributed request mix: misses
+//!    reinstall from tombstones (evicting the least-recent resident),
+//!    hits run straight off the resident plan.
+//!
+//! Emits `BENCH_registry.json` (CI grep-asserts a non-zero
+//! `"evictions_total"`).
+//!
+//! Run: `cargo bench --bench registry`
+//! (CI runs it under `IAOI_BENCH_SMOKE=1`, whose numbers are not
+//! meaningful.)
+
+use iaoi::bench_util::counting_alloc::{self, CountingAlloc};
+use iaoi::bench_util::{bench, smoke_mode, Sample};
+use iaoi::coordinator::registry::{ModelRegistry, ResidencyPolicy};
+use iaoi::data::Rng;
+use iaoi::gemm::PrepareMode;
+use iaoi::graph::ExecState;
+use iaoi::harness::demo_artifact;
+use iaoi::model_format::{self, LoadMode};
+use iaoi::tensor::Tensor;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const FLEET: usize = 32;
+const CAP: usize = 8;
+
+fn fleet_dir() -> PathBuf {
+    std::env::temp_dir().join(format!("iaoi-bench-registry-{}", std::process::id()))
+}
+
+fn model_name(i: usize) -> String {
+    format!("m{i:02}")
+}
+
+/// Write the 32 tiny fleet artifacts; returns their paths in model order.
+fn write_fleet(dir: &Path) -> Vec<PathBuf> {
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir).expect("create fleet dir");
+    (0..FLEET)
+        .map(|i| {
+            let name = model_name(i);
+            let art = demo_artifact(&name, 1, 8, i as u64);
+            let path = dir.join(format!("{name}.iaoiq"));
+            model_format::write_file(&path, &art).expect("write artifact");
+            path
+        })
+        .collect()
+}
+
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted[((sorted.len() - 1) as f64 * p) as usize]
+}
+
+/// Cold install (copy + eager, fresh every time) vs warm evict→reinstall
+/// (mmap + lazy, artifact bytes page-cache-resident). Also reports the
+/// peak transient allocation of one cycle of each.
+fn install_cases(path: &Path) -> (Sample, Sample, u64, u64) {
+    let name = model_name(0);
+    let cold_reg = ModelRegistry::new();
+    // Pin modes explicitly so the comparison is stable under the CI
+    // IAOI_PREPARE=lazy / IAOI_LOAD lanes.
+    cold_reg.set_prepare_mode(PrepareMode::Eager);
+    let cold = bench("cold install [copy + eager]", 10, || {
+        cold_reg.remove(&name);
+        let v = cold_reg.register_file_with(path, LoadMode::Copy).expect("install").version;
+        std::hint::black_box(v);
+    });
+    let cold_peak = counting_alloc::measure(|| {
+        cold_reg.remove(&name);
+        let v = cold_reg.register_file_with(path, LoadMode::Copy).expect("install").version;
+        std::hint::black_box(v);
+    })
+    .peak_bytes;
+
+    let warm_reg = ModelRegistry::new();
+    warm_reg.set_prepare_mode(PrepareMode::Lazy);
+    warm_reg.register_file_with(path, LoadMode::Mmap).expect("seed install");
+    let warm = bench("warm evict + reinstall [mmap + lazy]", 10, || {
+        warm_reg.evict(&name).expect("evict");
+        let v = warm_reg.reinstall(&name).expect("reinstall").version;
+        std::hint::black_box(v);
+    });
+    let warm_peak = counting_alloc::measure(|| {
+        warm_reg.evict(&name).expect("evict");
+        let v = warm_reg.reinstall(&name).expect("reinstall").version;
+        std::hint::black_box(v);
+    })
+    .peak_bytes;
+    (cold, warm, cold_peak, warm_peak)
+}
+
+/// What the Zipf-driven fleet churn observed.
+struct ChurnStats {
+    requests: usize,
+    misses: usize,
+    evictions_total: u64,
+    hit_p50_ms: f64,
+    miss_p50_ms: f64,
+    resident_models: usize,
+    resident_plan_bytes: usize,
+}
+
+/// Drive a 32-model fleet behind an LRU cap of 8 with a Zipf(1) request
+/// mix: every request resolves (reinstalling from the tombstone on a
+/// miss) and runs one inference on the resident plan.
+fn churn_case(paths: &[PathBuf]) -> ChurnStats {
+    let fleet = ModelRegistry::new();
+    fleet.set_prepare_mode(PrepareMode::Lazy);
+    fleet.set_residency(ResidencyPolicy { max_resident_models: CAP });
+    for p in paths {
+        fleet.register_file_with(p, LoadMode::Mmap).expect("fleet install");
+    }
+    assert_eq!(fleet.len(), CAP, "installs past the cap must LRU-evict");
+    assert_eq!(fleet.cold_names().len(), FLEET - CAP);
+
+    // Zipf(1) over model rank: weight 1/(rank+1), model 0 most popular —
+    // the mix that keeps a hot working set resident while the tail churns.
+    let weights: Vec<f64> = (0..FLEET).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut rng = Rng::seeded(17);
+    let mut pick = move || {
+        let mut u = rng.range_f32(0.0, total as f32) as f64;
+        for (i, w) in weights.iter().enumerate() {
+            if u < *w {
+                return i;
+            }
+            u -= *w;
+        }
+        FLEET - 1
+    };
+
+    let requests = if smoke_mode() { 64 } else { 2_000 };
+    let img = Tensor::<f32>::zeros(&[1, 16, 16, 3]);
+    let mut state = ExecState::new();
+    let mut hits_ms = Vec::new();
+    let mut misses_ms = Vec::new();
+    for _ in 0..requests {
+        let name = model_name(pick());
+        let t = Instant::now();
+        match fleet.resolve(&name) {
+            Ok(entry) => {
+                std::hint::black_box(entry.plan.run(&img, &mut state).len());
+                hits_ms.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            Err(_) => {
+                let entry = fleet.reinstall(&name).expect("reinstall from tombstone");
+                std::hint::black_box(entry.plan.run(&img, &mut state).len());
+                misses_ms.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+        }
+    }
+
+    let resident_plan_bytes: usize = fleet
+        .names()
+        .iter()
+        .filter_map(|n| fleet.get(n))
+        .map(|e| e.plan_bytes())
+        .sum();
+    ChurnStats {
+        requests,
+        misses: misses_ms.len(),
+        evictions_total: fleet.evictions_total(),
+        hit_p50_ms: percentile(&hits_ms, 0.5),
+        miss_p50_ms: percentile(&misses_ms, 0.5),
+        resident_models: fleet.len(),
+        resident_plan_bytes,
+    }
+}
+
+fn main() {
+    println!("== fleet lifecycle: {FLEET} models, LRU residency cap {CAP} ==\n");
+    let dir = fleet_dir();
+    let paths = write_fleet(&dir);
+
+    let (cold, warm, cold_peak, warm_peak) = install_cases(&paths[0]);
+    let ratio = warm.median_ms() / cold.median_ms().max(1e-9);
+    println!(
+        "    -> cold install {:.3} ms (peak {} B) | warm evict+reinstall {:.3} ms (peak {} B) \
+         | warm/cold {:.2}x{}",
+        cold.median_ms(),
+        cold_peak,
+        warm.median_ms(),
+        warm_peak,
+        ratio,
+        if ratio < 1.0 { "" } else { "  [WARNING: warm not below cold]" },
+    );
+
+    let churn = churn_case(&paths);
+    println!(
+        "    -> churn: {} requests, {} misses, {} evictions | hit p50 {:.3} ms, \
+         miss p50 {:.3} ms | {} resident, {} plan bytes\n",
+        churn.requests,
+        churn.misses,
+        churn.evictions_total,
+        churn.hit_p50_ms,
+        churn.miss_p50_ms,
+        churn.resident_models,
+        churn.resident_plan_bytes,
+    );
+
+    let json = format!(
+        "{{\n  \"fleet_models\": {FLEET},\n  \"residency_cap\": {CAP},\n  \
+         \"cold_install_ms\": {:.4},\n  \"cold_peak_bytes\": {cold_peak},\n  \
+         \"warm_reinstall_ms\": {:.4},\n  \"warm_peak_bytes\": {warm_peak},\n  \
+         \"warm_over_cold\": {:.4},\n  \"requests\": {},\n  \"misses\": {},\n  \
+         \"evictions_total\": {},\n  \"hit_p50_ms\": {:.4},\n  \"miss_p50_ms\": {:.4},\n  \
+         \"resident_models\": {},\n  \"resident_plan_bytes\": {}\n}}\n",
+        cold.median_ms(),
+        warm.median_ms(),
+        ratio,
+        churn.requests,
+        churn.misses,
+        churn.evictions_total,
+        churn.hit_p50_ms,
+        churn.miss_p50_ms,
+        churn.resident_models,
+        churn.resident_plan_bytes,
+    );
+    std::fs::write("BENCH_registry.json", &json).expect("write BENCH_registry.json");
+    println!("wrote BENCH_registry.json");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -26,6 +26,11 @@
 //!   groups by model name, so **batches never mix models**, and
 //!   [`registry::ModelRegistry::swap`] hot-swaps a model atomically while
 //!   in-flight batches finish on the version they were formed against.
+//!   [`registry::ModelRegistry::evict`] retires a model the same way:
+//!   batches already holding an entry snapshot finish on it, queued
+//!   requests whose model vanished are answered [`Outcome::Failed`]
+//!   (version 0) rather than dropped, and new submits are refused at
+//!   [`RoutedClient::submit`] while the eviction drains.
 
 pub mod metrics;
 pub mod registry;
@@ -743,9 +748,31 @@ impl MultiCoordinator {
                         batch.iter().all(|r| r.model == model_name),
                         "batcher must never mix models in one batch"
                     );
-                    // A model can only disappear if a future registry grows
-                    // a remove(); guard anyway so workers never panic.
-                    let Some(entry) = registry.get(&model_name) else { continue };
+                    // Eviction can remove a model while its requests are
+                    // still queued. Every rider must still get a reply —
+                    // answer Failed (version 0: no entry executed) instead
+                    // of silently dropping the batch.
+                    let Some(entry) = registry.get(&model_name) else {
+                        let now = Instant::now();
+                        let size = batch.len();
+                        {
+                            let mut m = lock_recover(&metrics);
+                            m.entry(model_name.clone())
+                                .or_insert_with(|| Metrics::new(model_name.clone()))
+                                .failed += size as u64;
+                        }
+                        for r in batch {
+                            let _ = r.reply.send(RoutedResponse {
+                                id: r.id,
+                                model: r.model,
+                                version: 0,
+                                outcome: Outcome::Failed,
+                                latency: now - r.submitted,
+                                batch_size: 0,
+                            });
+                        }
+                        continue;
+                    };
 
                     // Deadline shed, pre-execution.
                     let now = Instant::now();

@@ -18,14 +18,33 @@
 //! burning compute or poisoning latency for its neighbours. A successful
 //! [`ModelRegistry::swap`] (the operator shipping a fixed artifact) or an
 //! explicit [`ModelRegistry::reset_quarantine`] re-admits the model.
+//!
+//! **Fleet lifecycle.** Models can also *leave*: [`ModelRegistry::evict`]
+//! (two-phase for callers that drain traffic first:
+//! [`ModelRegistry::begin_evict`] marks the model so [`resolve`] refuses
+//! new arrivals while in-flight batches finish on their snapshots, then
+//! [`ModelRegistry::finish_evict`] drops the table entry) and
+//! [`ModelRegistry::remove`] (forget entirely). Eviction leaves a *cold
+//! tombstone* ([`ColdEntry`]: source path, version, load mode) so the
+//! model stays visible in `/healthz` and can come back via
+//! [`ModelRegistry::reinstall`] — for an mmap-backed entry that means the
+//! plan is dropped but the page cache keeps the artifact bytes, so
+//! reinstall is a remap + (lazy) prepare, not a disk read. A
+//! [`ResidencyPolicy`] caps how many models stay resident at once:
+//! installs over the cap evict the least-recently-used model
+//! ([`resolve`] touches an LRU clock), preferring quarantined victims —
+//! the models least worth keeping warm.
+//!
+//! [`resolve`]: ModelRegistry::resolve
 
+use crate::gemm::PrepareMode;
 use crate::graph::fault::FaultPlan;
 use crate::graph::{PreparedGraph, QGraph};
 use crate::model_format::{self, LoadMode, ModelArtifact};
 use crate::sync::{lock_recover, read_recover, write_recover};
 use crate::tensor::ArtifactBytes;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -70,6 +89,36 @@ impl ModelEntry {
     pub fn is_mapped(&self) -> bool {
         self.backing.as_ref().is_some_and(ArtifactBytes::is_mapped)
     }
+
+    /// How this entry's weights are stored, as the `/healthz` label:
+    /// `"copy"` (owned decode), `"zerocopy"` (views into a shared heap
+    /// buffer), or `"mmap"` (views into a live file mapping).
+    pub fn load_mode_label(&self) -> &'static str {
+        match &self.backing {
+            None => "copy",
+            Some(b) if b.is_mapped() => "mmap",
+            Some(_) => "zerocopy",
+        }
+    }
+
+    /// The [`LoadMode`] that reproduces this entry's weight storage —
+    /// recorded on the eviction tombstone so [`ModelRegistry::reinstall`]
+    /// comes back the same way it left.
+    pub fn load_mode(&self) -> LoadMode {
+        match &self.backing {
+            None => LoadMode::Copy,
+            Some(b) if b.is_mapped() => LoadMode::Mmap,
+            Some(_) => LoadMode::ZeroCopy,
+        }
+    }
+
+    /// Heap bytes held by this entry's prepared plan right now
+    /// ([`PreparedGraph::plan_bytes`]): the packed conv/FC panels, which
+    /// grow lazily under [`PrepareMode::Lazy`]. Surfaced per model in
+    /// `/healthz` and as `iaoi_plan_bytes` in `/metrics`.
+    pub fn plan_bytes(&self) -> usize {
+        self.plan.plan_bytes()
+    }
 }
 
 /// Circuit-breaker policy: `threshold` contained panics within `window`
@@ -108,11 +157,54 @@ struct Breaker {
     models: HashMap<String, BreakerEntry>,
 }
 
+/// How many models may be resident (prepared, serving) at once.
+/// `max_resident_models == 0` means unlimited — the historical behaviour
+/// and the default. When an install pushes the registry over the cap,
+/// [`ModelRegistry::enforce_residency`] evicts least-recently-used models
+/// (quarantined ones first) until the cap holds again.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResidencyPolicy {
+    pub max_resident_models: usize,
+}
+
+/// Tombstone for an evicted model: everything needed to bring it back
+/// ([`ModelRegistry::reinstall`]) and to keep it visible as `"cold"` in
+/// the `/healthz` fleet listing.
+#[derive(Clone, Debug)]
+pub struct ColdEntry {
+    /// Artifact file the model was serving from (empty for in-memory
+    /// installs, which cannot be reinstalled).
+    pub source: PathBuf,
+    /// Version at eviction time.
+    pub version: u32,
+    /// Weight-storage mode the entry was using, so reinstall reproduces it.
+    pub load: LoadMode,
+}
+
+/// LRU clock, eviction bookkeeping, and the install-time policy knobs.
+#[derive(Debug, Default)]
+struct Lifecycle {
+    policy: ResidencyPolicy,
+    /// Prepare mode applied by installs; `None` defers to
+    /// [`PrepareMode::from_env`] at each prepare (the suite-wide default).
+    prepare: Option<PrepareMode>,
+    /// Monotonic use counter — bumped on every [`ModelRegistry::resolve`]
+    /// (and install), recorded per model in `last_used`.
+    clock: u64,
+    last_used: HashMap<String, u64>,
+    /// Models mid-eviction: still in the table (in-flight snapshots keep
+    /// serving) but refused by `resolve` so no *new* traffic lands.
+    evicting: HashSet<String>,
+    cold: HashMap<String, ColdEntry>,
+    evictions_total: u64,
+}
+
 /// Cloneable handle to the shared name → model table.
 #[derive(Clone, Default)]
 pub struct ModelRegistry {
     inner: Arc<RwLock<HashMap<String, Arc<ModelEntry>>>>,
     breaker: Arc<Mutex<Breaker>>,
+    lifecycle: Arc<Mutex<Lifecycle>>,
 }
 
 impl ModelRegistry {
@@ -132,6 +224,15 @@ impl ModelRegistry {
     /// `iaoi serve --load` knob).
     pub fn load_dir_with(dir: &Path, mode: LoadMode) -> Result<Self> {
         let registry = Self::new();
+        registry.register_dir_with(dir, mode)?;
+        Ok(registry)
+    }
+
+    /// Register every `*.iaoiq` artifact in `dir` into this registry (same
+    /// ordering/version rules as [`Self::load_dir`]) — the instance form,
+    /// for registries whose prepare mode or residency policy must be set
+    /// *before* the first install.
+    pub fn register_dir_with(&self, dir: &Path, mode: LoadMode) -> Result<()> {
         let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
             .with_context(|| format!("read model directory {dir:?}"))?
             .filter_map(|e| e.ok().map(|e| e.path()))
@@ -143,26 +244,32 @@ impl ModelRegistry {
         }
         for path in paths {
             let artifact = model_format::read_file_with(&path, mode)?;
-            let newer = match registry.get(&artifact.name) {
+            let newer = match self.get(&artifact.name) {
                 None => true,
                 Some(existing) => artifact.version >= existing.version,
             };
             if newer {
-                registry.install(artifact, path);
+                self.install(artifact, path);
             }
         }
-        Ok(registry)
+        Ok(())
     }
 
     fn make_entry(
         artifact: ModelArtifact,
         source: PathBuf,
         fault: Option<FaultPlan>,
+        mode: Option<PrepareMode>,
     ) -> Arc<ModelEntry> {
         // Pack-once: decode → prepare (and the geometry probe for the
         // batching hint) happen here, off the request path; a hot-swap
-        // pays them before the new entry becomes visible.
-        let mut plan = artifact.graph.prepare();
+        // pays them before the new entry becomes visible. Under
+        // PrepareMode::Lazy "prepare" builds per-layer pack thunks only —
+        // panels materialize on each layer's first batch.
+        let mut plan = match mode {
+            Some(m) => artifact.graph.prepare_with(m),
+            None => artifact.graph.prepare(),
+        };
         // Fault injection: an explicit plan (chaos tests/benches) wins;
         // otherwise IAOI_FAULT applies to every matching model installed
         // from here on — including swapped-in replacements, so the CI
@@ -201,8 +308,20 @@ impl ModelRegistry {
         source: PathBuf,
         fault: Option<FaultPlan>,
     ) -> Arc<ModelEntry> {
-        let entry = Self::make_entry(artifact, source, fault);
+        let mode = lock_recover(&self.lifecycle).prepare;
+        let entry = Self::make_entry(artifact, source, fault, mode);
         write_recover(&self.inner).insert(entry.name.clone(), Arc::clone(&entry));
+        {
+            // A fresh install is the most-recent use, clears any tombstone
+            // for the name, and cancels a half-done eviction.
+            let mut lc = lock_recover(&self.lifecycle);
+            lc.clock += 1;
+            let clock = lc.clock;
+            lc.last_used.insert(entry.name.clone(), clock);
+            lc.evicting.remove(&entry.name);
+            lc.cold.remove(&entry.name);
+        }
+        self.enforce_residency();
         entry
     }
 
@@ -246,7 +365,8 @@ impl ModelRegistry {
             );
         }
         let new_version = artifact.version;
-        let entry = Self::make_entry(artifact, path.to_path_buf(), None);
+        let prepare = lock_recover(&self.lifecycle).prepare;
+        let entry = Self::make_entry(artifact, path.to_path_buf(), None, prepare);
         let previous = {
             let mut table = write_recover(&self.inner);
             if let Some(existing) = table.get(name) {
@@ -262,6 +382,14 @@ impl ModelRegistry {
             }
             table.insert(name.to_string(), entry).map(|old| old.version)
         };
+        {
+            let mut lc = lock_recover(&self.lifecycle);
+            lc.clock += 1;
+            let clock = lc.clock;
+            lc.last_used.insert(name.to_string(), clock);
+            lc.evicting.remove(name);
+            lc.cold.remove(name);
+        }
         // A successful swap is the operator's "fixed artifact shipped"
         // signal: re-admit the model (lifetime panic count is kept).
         self.reset_quarantine(name);
@@ -273,11 +401,20 @@ impl ModelRegistry {
         read_recover(&self.inner).get(name).cloned()
     }
 
-    /// Like [`Self::get`] but with a routing-flavoured error.
+    /// Like [`Self::get`] but with a routing-flavoured error, refusing
+    /// models mid-eviction, and touching the LRU clock — this is the
+    /// request-path lookup, so "recently used" means "recently served".
     pub fn resolve(&self, name: &str) -> Result<Arc<ModelEntry>> {
-        self.get(name).ok_or_else(|| {
-            anyhow!("unknown model {name:?} (registered: {:?})", self.names())
-        })
+        if self.is_evicting(name) {
+            bail!("model {name:?} is evicting (draining in-flight requests)");
+        }
+        match self.get(name) {
+            Some(entry) => {
+                self.touch(name);
+                Ok(entry)
+            }
+            None => Err(anyhow!("unknown model {name:?} (registered: {:?})", self.names())),
+        }
     }
 
     /// Registered model names, sorted.
@@ -293,6 +430,200 @@ impl ModelRegistry {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    // --- Fleet lifecycle ---------------------------------------------------
+
+    /// Set the residency cap, evicting immediately if the fleet is already
+    /// over it. Returns the names evicted to satisfy the new policy.
+    pub fn set_residency(&self, policy: ResidencyPolicy) -> Vec<String> {
+        lock_recover(&self.lifecycle).policy = policy;
+        self.enforce_residency()
+    }
+
+    pub fn residency(&self) -> ResidencyPolicy {
+        lock_recover(&self.lifecycle).policy
+    }
+
+    /// Pin the [`PrepareMode`] future installs/swaps use. Unset, each
+    /// install falls back to [`PrepareMode::from_env`] (`IAOI_PREPARE`).
+    pub fn set_prepare_mode(&self, mode: PrepareMode) {
+        lock_recover(&self.lifecycle).prepare = Some(mode);
+    }
+
+    /// The pinned install-time prepare mode (`None` = environment default).
+    pub fn prepare_mode(&self) -> Option<PrepareMode> {
+        lock_recover(&self.lifecycle).prepare
+    }
+
+    /// Bump the LRU clock for `name`. [`Self::resolve`] does this on every
+    /// request-path lookup; callers resolving through [`Self::get`] (which
+    /// deliberately does not touch — `/healthz` reads must not distort the
+    /// LRU order) can record genuine use here.
+    pub fn touch(&self, name: &str) {
+        let mut lc = lock_recover(&self.lifecycle);
+        lc.clock += 1;
+        let clock = lc.clock;
+        lc.last_used.insert(name.to_string(), clock);
+    }
+
+    /// Whether `name` is between [`Self::begin_evict`] and
+    /// [`Self::finish_evict`] — resident for in-flight snapshots, refused
+    /// for new arrivals.
+    pub fn is_evicting(&self, name: &str) -> bool {
+        lock_recover(&self.lifecycle).evicting.contains(name)
+    }
+
+    /// Phase one of a drained eviction: mark `name` as evicting so
+    /// [`Self::resolve`] refuses new traffic, while the entry stays in the
+    /// table for batches already holding snapshots. The caller drains
+    /// in-flight work (the serving layer polls its admission counters) and
+    /// then calls [`Self::finish_evict`]. Returns the entry being evicted.
+    pub fn begin_evict(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        let entry = self
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model {name:?} (registered: {:?})", self.names()))?;
+        lock_recover(&self.lifecycle).evicting.insert(name.to_string());
+        Ok(entry)
+    }
+
+    /// Phase two: drop the table entry, leaving a cold tombstone
+    /// ([`ColdEntry`]) for `/healthz` visibility and [`Self::reinstall`].
+    /// The `Arc`'d plan dies with its last in-flight snapshot; for an
+    /// mmap-backed entry the unmap releases address space while the page
+    /// cache keeps the artifact bytes warm for the next install. Returns
+    /// the evicted version.
+    pub fn finish_evict(&self, name: &str) -> Result<u32> {
+        let removed = write_recover(&self.inner).remove(name);
+        let mut lc = lock_recover(&self.lifecycle);
+        lc.evicting.remove(name);
+        let Some(entry) = removed else {
+            bail!("unknown model {name:?}: nothing to evict");
+        };
+        lc.last_used.remove(name);
+        lc.evictions_total += 1;
+        lc.cold.insert(
+            name.to_string(),
+            ColdEntry {
+                source: entry.source.clone(),
+                version: entry.version,
+                load: entry.load_mode(),
+            },
+        );
+        Ok(entry.version)
+    }
+
+    /// One-shot eviction (both phases, no drain window): for callers with
+    /// no in-flight traffic to wait on — registry-level tests, benches, and
+    /// [`Self::enforce_residency`]. Serving layers drain between the two
+    /// phases instead ([`crate::serve`]'s evict endpoint mirrors its
+    /// hot-swap drain machinery).
+    pub fn evict(&self, name: &str) -> Result<u32> {
+        self.begin_evict(name)?;
+        self.finish_evict(name)
+    }
+
+    /// Forget `name` entirely: resident entry, cold tombstone, LRU state,
+    /// and breaker history. Returns the resident version, if any. Unlike
+    /// [`Self::evict`] this is not undoable via [`Self::reinstall`].
+    pub fn remove(&self, name: &str) -> Option<u32> {
+        let removed = write_recover(&self.inner).remove(name);
+        {
+            let mut lc = lock_recover(&self.lifecycle);
+            lc.evicting.remove(name);
+            lc.last_used.remove(name);
+            lc.cold.remove(name);
+        }
+        lock_recover(&self.breaker).models.remove(name);
+        removed.map(|e| e.version)
+    }
+
+    /// Bring an evicted model back from its tombstone: re-read the source
+    /// artifact under the load mode it left with (page-cache-warm for
+    /// mmap) and install it. Fails for models never evicted, and for
+    /// in-memory installs (no file to re-read).
+    pub fn reinstall(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        let cold = self.cold_entry(name);
+        let Some(cold) = cold else {
+            bail!("model {name:?} has no eviction tombstone (cold: {:?})", self.cold_names());
+        };
+        if cold.source.as_os_str().is_empty() {
+            bail!("model {name:?} was installed in-memory; no artifact file to reinstall from");
+        }
+        let entry = self.register_file_with(&cold.source, cold.load)?;
+        if entry.name != name {
+            bail!(
+                "artifact {:?} now names model {:?}, expected {name:?}",
+                cold.source,
+                entry.name
+            );
+        }
+        Ok(entry)
+    }
+
+    /// The model the LRU policy would evict next: quarantined models first
+    /// (least worth keeping warm), then the least-recently-used; ties break
+    /// by name so tests and drain logs are deterministic. Models already
+    /// mid-eviction are skipped. `None` when nothing is evictable.
+    pub fn lru_candidate(&self) -> Option<String> {
+        let names: Vec<String> = read_recover(&self.inner).keys().cloned().collect();
+        let quarantined: HashSet<String> = {
+            let b = lock_recover(&self.breaker);
+            names
+                .iter()
+                .filter(|n| b.models.get(n.as_str()).is_some_and(|e| e.quarantined))
+                .cloned()
+                .collect()
+        };
+        let lc = lock_recover(&self.lifecycle);
+        let mut candidates: Vec<(u64, String)> = names
+            .into_iter()
+            .filter(|n| !lc.evicting.contains(n))
+            .map(|n| (lc.last_used.get(&n).copied().unwrap_or(0), n))
+            .collect();
+        candidates.sort();
+        candidates
+            .iter()
+            .find(|(_, n)| quarantined.contains(n))
+            .or_else(|| candidates.first())
+            .map(|(_, n)| n.clone())
+    }
+
+    /// Evict LRU victims until the [`ResidencyPolicy`] holds (no-op when
+    /// the cap is 0/unlimited). Called automatically after every install.
+    /// Returns the evicted names, oldest first.
+    pub fn enforce_residency(&self) -> Vec<String> {
+        let mut evicted = Vec::new();
+        loop {
+            let max = lock_recover(&self.lifecycle).policy.max_resident_models;
+            if max == 0 || self.len() <= max {
+                break;
+            }
+            let Some(victim) = self.lru_candidate() else { break };
+            if self.evict(&victim).is_err() {
+                break;
+            }
+            evicted.push(victim);
+        }
+        evicted
+    }
+
+    /// Lifetime eviction count (exported as `iaoi_evictions_total`).
+    pub fn evictions_total(&self) -> u64 {
+        lock_recover(&self.lifecycle).evictions_total
+    }
+
+    /// Names of evicted-but-reinstallable models, sorted.
+    pub fn cold_names(&self) -> Vec<String> {
+        let lc = lock_recover(&self.lifecycle);
+        let mut names: Vec<String> = lc.cold.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// The tombstone for `name`, if it is cold.
+    pub fn cold_entry(&self, name: &str) -> Option<ColdEntry> {
+        lock_recover(&self.lifecycle).cold.get(name).cloned()
     }
 
     // --- Circuit breaker ---------------------------------------------------
@@ -565,6 +896,139 @@ mod tests {
         assert!(!reg.is_quarantined("never-seen"));
         assert_eq!(reg.panic_count("never-seen"), 0);
         reg.reset_quarantine("never-seen"); // no-op, must not panic
+    }
+
+    #[test]
+    fn names_are_sorted_regardless_of_install_order() {
+        let reg = ModelRegistry::new();
+        for name in ["zeta", "alpha", "mu", "beta"] {
+            reg.install(artifact(name, 1, 60), PathBuf::new());
+        }
+        assert_eq!(
+            reg.names(),
+            vec!["alpha".to_string(), "beta".to_string(), "mu".to_string(), "zeta".to_string()]
+        );
+    }
+
+    #[test]
+    fn evict_leaves_tombstone_and_reinstall_is_bit_identical() {
+        let dir = tmpdir("evict");
+        let path = dir.join("m.iaoiq");
+        model_format::write_file(&path, &artifact("m", 3, 71)).unwrap();
+        let reg = ModelRegistry::new();
+        let entry = reg.register_file(&path).unwrap();
+        let x = Tensor::zeros(&[1, 16, 16, 3]);
+        let mut state = crate::graph::ExecState::new();
+        let want = entry.plan.run(&x, &mut state);
+
+        assert_eq!(reg.evict("m").unwrap(), 3);
+        assert!(reg.get("m").is_none());
+        assert_eq!(reg.cold_names(), vec!["m".to_string()]);
+        assert_eq!(reg.evictions_total(), 1);
+        // A pre-eviction snapshot (a worker mid-batch) still serves.
+        assert_eq!(entry.plan.run(&x, &mut state).data(), want.data());
+
+        let back = reg.reinstall("m").unwrap();
+        assert_eq!(back.version, 3);
+        assert!(reg.cold_names().is_empty(), "reinstall clears the tombstone");
+        let mut s2 = crate::graph::ExecState::new();
+        assert_eq!(
+            back.plan.run(&x, &mut s2).data(),
+            want.data(),
+            "evict → reinstall → infer must be bit-identical"
+        );
+    }
+
+    #[test]
+    fn begin_evict_refuses_new_resolves_until_finished() {
+        let reg = ModelRegistry::new();
+        reg.install(artifact("m", 1, 72), PathBuf::new());
+        assert!(reg.resolve("m").is_ok());
+        let snapshot = reg.begin_evict("m").unwrap();
+        assert!(reg.is_evicting("m"));
+        let err = reg.resolve("m").unwrap_err();
+        assert!(err.to_string().contains("evicting"), "{err}");
+        assert!(reg.get("m").is_some(), "entry stays visible for in-flight snapshots");
+        assert_eq!(reg.finish_evict("m").unwrap(), 1);
+        assert!(!reg.is_evicting("m"));
+        assert!(reg.get("m").is_none());
+        assert_eq!(snapshot.version, 1);
+        // In-memory installs have no artifact file to come back from.
+        assert!(reg.reinstall("m").is_err());
+        // remove() forgets even the tombstone.
+        assert_eq!(reg.remove("m"), None);
+        assert!(reg.cold_names().is_empty());
+    }
+
+    #[test]
+    fn residency_cap_evicts_exactly_the_least_recent() {
+        let dir = tmpdir("lru");
+        let reg = ModelRegistry::new();
+        for name in ["a", "b", "c"] {
+            let p = dir.join(format!("{name}.iaoiq"));
+            model_format::write_file(&p, &artifact(name, 1, 73)).unwrap();
+            reg.register_file(&p).unwrap();
+        }
+        assert!(reg.set_residency(ResidencyPolicy { max_resident_models: 3 }).is_empty());
+        // Use order: a, c, b → the least-recent model is a.
+        reg.resolve("a").unwrap();
+        reg.resolve("c").unwrap();
+        reg.resolve("b").unwrap();
+        let p = dir.join("d.iaoiq");
+        model_format::write_file(&p, &artifact("d", 1, 74)).unwrap();
+        reg.register_file(&p).unwrap();
+        assert_eq!(reg.names(), vec!["b".to_string(), "c".to_string(), "d".to_string()]);
+        assert_eq!(reg.cold_names(), vec!["a".to_string()]);
+        // Reinstalling a (now most-recent) over the cap evicts c, the
+        // least-recent of the survivors.
+        reg.reinstall("a").unwrap();
+        assert_eq!(reg.cold_names(), vec!["c".to_string()]);
+        assert_eq!(reg.evictions_total(), 2);
+    }
+
+    #[test]
+    fn quarantined_models_are_preferred_eviction_victims() {
+        let reg = ModelRegistry::new();
+        reg.install(artifact("healthy", 1, 75), PathBuf::new());
+        reg.install(artifact("sick", 1, 76), PathBuf::new());
+        // sick is *more* recently used than healthy...
+        reg.resolve("healthy").unwrap();
+        reg.resolve("sick").unwrap();
+        reg.set_quarantine(QuarantineConfig { threshold: 1, window: Duration::from_secs(60) });
+        assert!(reg.record_panic("sick"));
+        // ...but quarantine outranks recency.
+        assert_eq!(reg.lru_candidate(), Some("sick".to_string()));
+        let evicted = reg.set_residency(ResidencyPolicy { max_resident_models: 1 });
+        assert_eq!(evicted, vec!["sick".to_string()]);
+        assert_eq!(reg.names(), vec!["healthy".to_string()]);
+    }
+
+    #[test]
+    fn lazy_prepare_installs_defer_packing_and_serve_identically() {
+        let reg = ModelRegistry::new();
+        let eager = reg.install(artifact("m", 1, 77), PathBuf::new());
+        let lazy_reg = ModelRegistry::new();
+        lazy_reg.set_prepare_mode(PrepareMode::Lazy);
+        assert_eq!(lazy_reg.prepare_mode(), Some(PrepareMode::Lazy));
+        let lazy = lazy_reg.install(artifact("m", 1, 77), PathBuf::new());
+        // A lazy install holds at most the unpacked weight bytes (a
+        // view-backed one holds none); packing happens on first traffic.
+        let before = lazy.plan_bytes();
+        assert!(before <= eager.plan_bytes());
+        let mut rng = Rng::seeded(77);
+        let mut d = vec![0f32; 16 * 16 * 3];
+        for v in d.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let x = Tensor::from_vec(&[1, 16, 16, 3], d);
+        let mut s1 = crate::graph::ExecState::new();
+        let mut s2 = crate::graph::ExecState::new();
+        assert_eq!(
+            eager.plan.run(&x, &mut s1).data(),
+            lazy.plan.run(&x, &mut s2).data(),
+            "lazy-prepared serving must be bit-identical to eager"
+        );
+        assert!(lazy.plan_bytes() > before, "first traffic materializes the panels");
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub mod prepared;
 pub use kernel::{KC, MR, NR};
 pub use output::{OutputStage, ResidualAdd, ADD_LEFT_SHIFT};
 pub use pool::{IntraOp, IntraStrategy, WorkerPool};
-pub use prepared::{PreparedGemm, Scratch};
+pub use prepared::{LhsBytes, PrepareMode, PreparedGemm, Scratch};
 
 use crate::quant::QuantizedMultiplier;
 

@@ -26,6 +26,64 @@ use super::dispatch::{self, KernelDispatch};
 use super::kernel::{KC, MR, NR};
 use super::output::{OutputStage, ResidualAdd};
 use super::{Kernel, QGemm};
+use crate::tensor::ByteView;
+use std::sync::OnceLock;
+
+/// When a plan's weight-side packing work runs.
+///
+/// Mirrors [`crate::model_format::LoadMode`]: an explicit value wins, the
+/// `IAOI_PREPARE` environment variable picks the suite-wide default, and
+/// both modes are bit-identical by construction (the same [`pack`] routine
+/// runs either way — eagerly in [`PreparedGemm::new`], or on first touch
+/// behind a [`OnceLock`] in a [`PreparedGemm::new_lazy`] plan).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PrepareMode {
+    /// Pack every layer at prepare time (the historical behaviour): install
+    /// pays the full cost once, the first request is as fast as the rest.
+    #[default]
+    Eager,
+    /// Defer packing per layer until its first execution. Prepare becomes
+    /// `O(1)` per layer — the mode that makes evict/reinstall cycles cheap
+    /// (a reinstalled mmap-backed model re-packs only the layers traffic
+    /// actually touches, from page-cache-resident bytes) and the seam where
+    /// future on-the-fly weight decoding (format-v4 4-bit nibbles) lives.
+    Lazy,
+}
+
+impl PrepareMode {
+    /// Parse a CLI label (`eager` | `lazy`).
+    pub fn from_label(s: &str) -> Option<Self> {
+        match s {
+            "eager" => Some(Self::Eager),
+            "lazy" => Some(Self::Lazy),
+            _ => None,
+        }
+    }
+
+    /// The default mode: the `IAOI_PREPARE` environment variable when it
+    /// names a mode, else [`Self::Eager`]. CI runs the full suite under
+    /// `IAOI_PREPARE=lazy` so both prepare paths stay covered. An
+    /// unrecognized value falls back to eager but warns on stderr.
+    pub fn from_env() -> Self {
+        match std::env::var("IAOI_PREPARE") {
+            Ok(v) => Self::from_label(&v).unwrap_or_else(|| {
+                eprintln!(
+                    "warning: IAOI_PREPARE={v:?} is not a prepare mode (eager | lazy); \
+                     defaulting to eager"
+                );
+                Self::Eager
+            }),
+            Err(_) => Self::Eager,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Eager => "eager",
+            Self::Lazy => "lazy",
+        }
+    }
+}
 
 /// Reusable per-thread buffers for [`PreparedGemm`] execution. One instance
 /// per worker thread; every buffer grows to its high-water mark on the first
@@ -92,6 +150,34 @@ pub(crate) fn apply_corrections(
     }
 }
 
+/// Unpacked weight bytes a lazy plan packs from on first touch: either an
+/// owned copy, or a borrowed [`ByteView`] into the artifact buffer (heap or
+/// mmap) — the pack-from-view path, which skips the intermediate owned copy
+/// entirely and reads panel sources straight out of the page cache.
+#[derive(Clone, Debug)]
+pub enum LhsBytes {
+    Owned(Vec<u8>),
+    View(ByteView),
+}
+
+impl LhsBytes {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            LhsBytes::Owned(v) => v,
+            LhsBytes::View(v) => v.as_slice(),
+        }
+    }
+
+    /// Heap bytes this source itself holds (a view pins the shared artifact
+    /// buffer, which is accounted once at the registry entry, not per plan).
+    fn heap_bytes(&self) -> usize {
+        match self {
+            LhsBytes::Owned(v) => v.len(),
+            LhsBytes::View(_) => 0,
+        }
+    }
+}
+
 /// Weight-side storage of a plan, laid out for its kernel's access pattern.
 #[derive(Clone, Debug)]
 enum PackedLhs {
@@ -106,6 +192,47 @@ enum PackedLhs {
     /// Row-major `M×K` weights recentred to int8 (`q ^ 0x80`, i.e. `q−128`)
     /// once at pack time — the App. B precondition.
     Int8(Vec<i8>),
+}
+
+impl PackedLhs {
+    fn heap_bytes(&self) -> usize {
+        match self {
+            PackedLhs::Reference(v) => v.len(),
+            PackedLhs::Blocked(v) => v.len(),
+            PackedLhs::Int8(v) => v.len(),
+        }
+    }
+}
+
+/// Whether a plan's panels exist yet. Eager plans are born `Ready`; lazy
+/// plans hold their unpacked source and a [`OnceLock`] that the first run
+/// fills — thread-safe first-touch, one atomic load on every later run.
+#[derive(Clone, Debug)]
+enum PackState {
+    Ready((PackedLhs, Vec<i32>)),
+    Lazy { src: LhsBytes, cell: OnceLock<(PackedLhs, Vec<i32>)> },
+}
+
+/// The one packing routine both prepare modes run — lazy-vs-eager
+/// bit-identity is structural, not tested-and-hoped: there is no second
+/// pack implementation to diverge. Returns the kernel-specific packed LHS
+/// plus the eq. 8 row sums `ā1` (empty for Reference, which evaluates
+/// eq. 4 directly and needs no corrections).
+fn pack(kernel: Kernel, m: usize, k: usize, lhs: &[u8]) -> (PackedLhs, Vec<i32>) {
+    assert_eq!(lhs.len(), m * k, "lhs must be M*K");
+    match kernel {
+        Kernel::Reference => (PackedLhs::Reference(lhs.to_vec()), Vec::new()),
+        Kernel::Blocked => {
+            (PackedLhs::Blocked(pack_lhs_blocked(lhs, m, k)), row_sums_u8(lhs, m, k))
+        }
+        Kernel::Int8Pairwise => {
+            let recentred: Vec<i8> = lhs.iter().map(|&v| (v ^ 0x80) as i8).collect();
+            let sums = (0..m)
+                .map(|i| recentred[i * k..(i + 1) * k].iter().map(|&v| i32::from(v)).sum())
+                .collect();
+            (PackedLhs::Int8(recentred), sums)
+        }
+    }
 }
 
 /// A fully prepared quantized GEMM: geometry + quantization + packed
@@ -130,10 +257,9 @@ pub struct PreparedGemm {
     /// always safe on an existing plan.
     ukernel: &'static KernelDispatch,
     stage: OutputStage,
-    packed: PackedLhs,
-    /// `ā1` of eq. 8: u8 row sums for Blocked, recentred-int8 row sums for
-    /// Int8Pairwise, empty for Reference (which needs no corrections).
-    row_sums: Vec<i32>,
+    /// Packed panels + eq. 8 row sums `ā1` — materialized at build time
+    /// ([`Self::new`]) or on first touch ([`Self::new_lazy`]).
+    pack: PackState,
 }
 
 impl PreparedGemm {
@@ -153,23 +279,73 @@ impl PreparedGemm {
             (0..=255).contains(&lhs_zero) && (0..=255).contains(&rhs_zero),
             "zero points are quantized values (§2.1)"
         );
-        let (packed, row_sums) = match kernel {
-            // The reference path evaluates eq. 4 directly — it never applies
-            // the eq. 8 corrections, so it carries no row sums.
-            Kernel::Reference => (PackedLhs::Reference(lhs.to_vec()), Vec::new()),
-            Kernel::Blocked => {
-                (PackedLhs::Blocked(pack_lhs_blocked(lhs, m, k)), row_sums_u8(lhs, m, k))
-            }
-            Kernel::Int8Pairwise => {
-                let recentred: Vec<i8> = lhs.iter().map(|&v| (v ^ 0x80) as i8).collect();
-                let sums = (0..m)
-                    .map(|i| recentred[i * k..(i + 1) * k].iter().map(|&v| i32::from(v)).sum())
-                    .collect();
-                (PackedLhs::Int8(recentred), sums)
-            }
-        };
         let ukernel = dispatch::active();
-        Self { m, k, lhs_zero, rhs_zero, kernel, ukernel, stage, packed, row_sums }
+        let pack = PackState::Ready(pack(kernel, m, k, lhs));
+        Self { m, k, lhs_zero, rhs_zero, kernel, ukernel, stage, pack }
+    }
+
+    /// Build a plan whose panels are packed on **first touch** instead of
+    /// here — [`PrepareMode::Lazy`]. `src` is the row-major `M×K` weight
+    /// bytes, either owned or a [`ByteView`] borrowing the artifact buffer
+    /// (the pack-from-view path: no intermediate owned copy, panel sources
+    /// read straight from the mapped bytes). The first [`Self::run`] (on
+    /// whichever thread gets there first; concurrent racers block on the
+    /// [`OnceLock`]) runs the exact same [`pack`] routine [`Self::new`]
+    /// runs, so lazy execution is bit-identical to eager by construction.
+    pub fn new_lazy(
+        kernel: Kernel,
+        m: usize,
+        k: usize,
+        lhs_zero: i32,
+        rhs_zero: i32,
+        src: LhsBytes,
+        stage: OutputStage,
+    ) -> Self {
+        assert_eq!(src.as_slice().len(), m * k, "lhs must be M*K");
+        assert!(
+            (0..=255).contains(&lhs_zero) && (0..=255).contains(&rhs_zero),
+            "zero points are quantized values (§2.1)"
+        );
+        let ukernel = dispatch::active();
+        let pack = PackState::Lazy { src, cell: OnceLock::new() };
+        Self { m, k, lhs_zero, rhs_zero, kernel, ukernel, stage, pack }
+    }
+
+    /// The packed panels + row sums, materializing them now if this is a
+    /// lazy plan's first touch.
+    fn packed(&self) -> &(PackedLhs, Vec<i32>) {
+        match &self.pack {
+            PackState::Ready(ready) => ready,
+            PackState::Lazy { src, cell } => {
+                cell.get_or_init(|| pack(self.kernel, self.m, self.k, src.as_slice()))
+            }
+        }
+    }
+
+    /// True once the panels exist (always for eager plans; after the first
+    /// run for lazy ones).
+    pub fn is_packed(&self) -> bool {
+        match &self.pack {
+            PackState::Ready(_) => true,
+            PackState::Lazy { cell, .. } => cell.get().is_some(),
+        }
+    }
+
+    /// Heap bytes this plan holds right now: packed panels + row sums once
+    /// materialized, plus any owned unpacked source a lazy plan carries
+    /// (a [`LhsBytes::View`] source pins the shared artifact buffer, which
+    /// its owner accounts once, not per layer). An untouched lazy
+    /// pack-from-view plan reports 0 — the whole point of the mode.
+    pub fn plan_bytes(&self) -> usize {
+        let packed = |p: &(PackedLhs, Vec<i32>)| {
+            p.0.heap_bytes() + p.1.len() * std::mem::size_of::<i32>()
+        };
+        match &self.pack {
+            PackState::Ready(ready) => packed(ready),
+            PackState::Lazy { src, cell } => {
+                src.heap_bytes() + cell.get().map_or(0, packed)
+            }
+        }
     }
 
     /// Pin the micro-kernel implementation for this plan (Blocked path
@@ -332,7 +508,8 @@ impl PreparedGemm {
         if self.m == 0 || nn == 0 {
             return;
         }
-        match &self.packed {
+        let (packed_lhs, row_sums) = self.packed();
+        match packed_lhs {
             PackedLhs::Reference(lhs) => {
                 self.accumulate_reference(lhs, rhs, stride, n0, nn, acc);
             }
@@ -341,7 +518,7 @@ impl PreparedGemm {
                 let cs = grow(col_sums, nn);
                 col_sums_u8_strided(rhs, self.k, stride, n0, nn, cs);
                 apply_corrections(
-                    self.m, nn, self.k, self.lhs_zero, self.rhs_zero, acc, &self.row_sums, cs,
+                    self.m, nn, self.k, self.lhs_zero, self.rhs_zero, acc, row_sums, cs,
                 );
             }
             PackedLhs::Int8(lhs_s) => {
@@ -356,7 +533,7 @@ impl PreparedGemm {
                     self.lhs_zero - 128,
                     self.rhs_zero - 128,
                     acc,
-                    &self.row_sums,
+                    row_sums,
                     cs,
                 );
             }
@@ -812,5 +989,110 @@ mod tests {
         let plan = PreparedGemm::new(Kernel::Blocked, 0, 4, 10, 10, &[], stage);
         let mut out: Vec<u8> = vec![];
         plan.run(0, &[], &mut out, &mut Scratch::new());
+    }
+
+    #[test]
+    fn lazy_plans_bit_identical_to_eager_all_kernels() {
+        for &(m, k, n) in &AWKWARD {
+            let lhs = pseudo(m as u64 * 29 + k as u64, m * k, 1);
+            let rhs = pseudo(n as u64 * 23 + k as u64, k * n, 0);
+            let stage = per_channel_stage(m);
+            for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+                let eager = PreparedGemm::new(kern, m, k, 77, 201, &lhs, stage.clone());
+                let lazy = PreparedGemm::new_lazy(
+                    kern,
+                    m,
+                    k,
+                    77,
+                    201,
+                    LhsBytes::Owned(lhs.clone()),
+                    stage.clone(),
+                );
+                assert!(eager.is_packed());
+                assert!(!lazy.is_packed(), "lazy plan must not pack at build time");
+                let mut want = vec![0u8; m * n];
+                eager.run(n, &rhs, &mut want, &mut Scratch::new());
+                let mut got = vec![0u8; m * n];
+                lazy.run(n, &rhs, &mut got, &mut Scratch::new());
+                assert!(lazy.is_packed(), "first run must materialize the panels");
+                assert_eq!(want, got, "{kern:?} ({m},{k},{n}) lazy vs eager");
+                // Warm re-run through the already-filled cell.
+                let mut again = vec![0u8; m * n];
+                lazy.run(n, &rhs, &mut again, &mut Scratch::new());
+                assert_eq!(want, again, "{kern:?} ({m},{k},{n}) lazy warm");
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_pack_from_view_matches_owned() {
+        use crate::tensor::ArtifactBytes;
+        let (m, k, n) = (9, 300, 19);
+        let lhs = pseudo(41, m * k, 1);
+        let rhs = pseudo(42, k * n, 0);
+        let stage = demo_stage(m);
+        let buf = ArtifactBytes::from_vec(lhs.clone());
+        let view = buf.view(0, m * k);
+        for kern in [Kernel::Reference, Kernel::Blocked, Kernel::Int8Pairwise] {
+            let eager = PreparedGemm::new(kern, m, k, 50, 60, &lhs, stage.clone());
+            let lazy = PreparedGemm::new_lazy(
+                kern,
+                m,
+                k,
+                50,
+                60,
+                LhsBytes::View(view.clone()),
+                stage.clone(),
+            );
+            // Untouched pack-from-view plans hold no heap bytes of their own.
+            assert_eq!(lazy.plan_bytes(), 0, "{kern:?}");
+            let mut want = vec![0u8; m * n];
+            eager.run(n, &rhs, &mut want, &mut Scratch::new());
+            let mut got = vec![0u8; m * n];
+            lazy.run(n, &rhs, &mut got, &mut Scratch::new());
+            assert_eq!(want, got, "{kern:?} view-backed lazy vs eager");
+            assert!(lazy.plan_bytes() > 0, "{kern:?} packed panels must be accounted");
+        }
+    }
+
+    #[test]
+    fn lazy_first_touch_races_are_safe() {
+        // Many threads hit an unpacked plan at once; OnceLock must hand all
+        // of them the same panels and every output must be identical.
+        let (m, k, n) = (17, 64, 33);
+        let lhs = pseudo(55, m * k, 1);
+        let rhs = pseudo(56, k * n, 0);
+        let stage = demo_stage(m);
+        let eager = PreparedGemm::new(Kernel::Blocked, m, k, 77, 201, &lhs, stage.clone());
+        let mut want = vec![0u8; m * n];
+        eager.run(n, &rhs, &mut want, &mut Scratch::new());
+        let lazy = PreparedGemm::new_lazy(
+            Kernel::Blocked,
+            m,
+            k,
+            77,
+            201,
+            LhsBytes::Owned(lhs),
+            stage,
+        );
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let (lazy, rhs, want) = (&lazy, &rhs, &want);
+                s.spawn(move || {
+                    let mut got = vec![0u8; m * n];
+                    lazy.run(n, rhs, &mut got, &mut Scratch::new());
+                    assert_eq!(want, &got);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn prepare_mode_labels_round_trip() {
+        for mode in [PrepareMode::Eager, PrepareMode::Lazy] {
+            assert_eq!(PrepareMode::from_label(mode.label()), Some(mode));
+        }
+        assert_eq!(PrepareMode::from_label("bogus"), None);
+        assert_eq!(PrepareMode::default(), PrepareMode::Eager);
     }
 }

@@ -507,7 +507,22 @@ impl QGraph {
     /// (both route through [`ResidualAdd::apply`]) and defaults on;
     /// `IAOI_FUSION=off` (or `0`) disables it at prepare time, and
     /// [`PreparedGraph::set_fusion`] overrides it per plan.
+    ///
+    /// Packing runs eagerly here unless `IAOI_PREPARE=lazy` is set — see
+    /// [`Self::prepare_with`] for the explicit-mode variant.
     pub fn prepare(&self) -> PreparedGraph {
+        self.prepare_with(crate::gemm::PrepareMode::from_env())
+    }
+
+    /// [`Self::prepare`] with an explicit [`crate::gemm::PrepareMode`]:
+    /// `Eager` packs every conv/FC weight panel here; `Lazy` defers each
+    /// layer's packing to its first execution (packing straight from the
+    /// mapped [`crate::tensor::ByteView`] when the weights are view-backed,
+    /// so evict→reinstall cycles touch no weight bytes until traffic does).
+    /// Both modes are bit-identical — they share the same pack routines.
+    /// Depthwise has no GEMM and always prepares eagerly (its plan is the
+    /// weights it already holds).
+    pub fn prepare_with(&self, mode: crate::gemm::PrepareMode) -> PreparedGraph {
         let nodes = self
             .nodes
             .iter()
@@ -515,9 +530,9 @@ impl QGraph {
                 name: n.name.clone(),
                 input: n.input,
                 op: match &n.op {
-                    QOp::Conv(c) => PreparedOp::Conv(c.prepare(self.kernel)),
+                    QOp::Conv(c) => PreparedOp::Conv(c.prepare_with(self.kernel, mode)),
                     QOp::Depthwise(d) => PreparedOp::Depthwise(d.prepare()),
-                    QOp::Fc(f) => PreparedOp::Fc(f.prepare(self.kernel)),
+                    QOp::Fc(f) => PreparedOp::Fc(f.prepare_with(self.kernel, mode)),
                     QOp::AvgPool { kernel, stride, padding } => {
                         PreparedOp::AvgPool { kernel: *kernel, stride: *stride, padding: *padding }
                     }
@@ -798,6 +813,23 @@ impl PreparedGraph {
     pub fn with_fusion(mut self, fused: bool) -> Self {
         self.set_fusion(fused);
         self
+    }
+
+    /// Heap bytes currently held by this plan's packed GEMM panels (conv +
+    /// FC; other ops carry no plan-side weight copies). Eager plans report
+    /// their full packed footprint immediately; lazy plans grow as layers
+    /// are first touched — a freshly view-backed lazy plan reports 0.
+    /// Surfaced in `/healthz` (`"plan_bytes"`) and `/metrics`
+    /// (`iaoi_plan_bytes`).
+    pub fn plan_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                PreparedOp::Conv(p) => p.plan_bytes(),
+                PreparedOp::Fc(p) => p.plan_bytes(),
+                _ => 0,
+            })
+            .sum()
     }
 
     /// Number of Add nodes currently executed as fused conv epilogues

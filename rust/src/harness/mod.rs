@@ -11,7 +11,7 @@ pub mod tables;
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::{BatchPolicy, Coordinator, EngineKind, MultiCoordinator};
 use crate::data::ClassificationSet;
-use crate::gemm::Kernel;
+use crate::gemm::{Kernel, PrepareMode};
 use crate::graph::builders::{papernet_random, ParamMap};
 use crate::graph::{FloatGraph, FloatOp, NodeRef, QGraph};
 use crate::io;
@@ -672,6 +672,15 @@ pub struct SocketServeOpts {
     /// circuit-broken (503 until hot-swapped). 0 disables the breaker.
     /// CLI: `--quarantine-threshold`.
     pub quarantine_threshold: u32,
+    /// LRU residency cap: past this many resident models, each install
+    /// evicts the least-recently-served model (quarantined victims first)
+    /// to a reinstallable cold tombstone. 0 = unbounded.
+    /// CLI: `--max-resident-models`.
+    pub max_resident_models: usize,
+    /// When each model's GEMM panels are packed: at install (`Eager`) or
+    /// per layer on first touch (`Lazy` — cheap evict/reinstall cycles).
+    /// CLI: `--prepare`; default honours `IAOI_PREPARE`.
+    pub prepare: PrepareMode,
     pub load: LoadMode,
 }
 
@@ -687,6 +696,8 @@ impl Default for SocketServeOpts {
             request_deadline_ms: 5_000,
             max_connections: 0,
             quarantine_threshold: q.threshold,
+            max_resident_models: 0,
+            prepare: PrepareMode::from_env(),
             load: LoadMode::default(),
         }
     }
@@ -715,19 +726,29 @@ pub fn serve_socket(
         request_deadline_ms,
         max_connections,
         quarantine_threshold,
+        max_resident_models,
+        prepare,
         load,
     } = opts;
-    let registry = match models_dir {
-        Some(dir) => ModelRegistry::load_dir_with(dir, load)?,
+    // Lifecycle knobs go on before the first install so the initial loads
+    // already honour the prepare mode and the residency cap (with more
+    // artifacts than cap, later loads LRU-evict earlier ones to tombstones).
+    let registry = ModelRegistry::new();
+    registry.set_prepare_mode(prepare);
+    if max_resident_models > 0 {
+        registry.set_residency(crate::coordinator::registry::ResidencyPolicy {
+            max_resident_models,
+        });
+    }
+    match models_dir {
+        Some(dir) => registry.register_dir_with(dir, load)?,
         None => {
-            let registry = ModelRegistry::new();
             for (name, classes, seed) in [("alpha", 16usize, 3u64), ("beta", 8, 11)] {
                 registry.install(
                     demo_artifact(name, 1, classes, seed),
                     PathBuf::from(format!("<demo:{name}>")),
                 );
             }
-            registry
         }
     };
     registry.set_quarantine(crate::coordinator::registry::QuarantineConfig {
@@ -774,13 +795,16 @@ pub fn serve_socket(
     }
     println!(
         "serving on http://{bound} — {} model(s), {workers} worker(s), caps: global {}, \
-         per-model {}, connections {}; deadline {}, quarantine after {} panic(s)\n\
+         per-model {}, connections {}, resident models {}; prepare {}, deadline {}, \
+         quarantine after {} panic(s)\n\
          endpoints: POST /infer/<model> (raw LE f32 body), GET /healthz, GET /metrics\n\
          Ctrl-C (or SIGTERM) drains in-flight requests and exits",
         registry.len(),
         cap(queue_depth),
         cap(model_inflight_cap),
         cap(max_connections),
+        cap(max_resident_models),
+        prepare.label(),
         if request_deadline_ms == 0 {
             "off".to_string()
         } else {

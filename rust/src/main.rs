@@ -17,8 +17,8 @@
 //!                 [--model-inflight-cap N] [--port-file FILE]
 //!                 [--max-batch B] [--workers W] [--intra-threads T]
 //!                 [--request-deadline-ms MS] [--max-connections N]
-//!                 [--quarantine-threshold K]
-//!                 [--load copy|zerocopy|mmap]
+//!                 [--quarantine-threshold K] [--max-resident-models N]
+//!                 [--prepare eager|lazy] [--load copy|zerocopy|mmap]
 //! iaoi quickstart [--artifacts DIR]
 //! iaoi bench      --table 4.1|...|4.8|quant-modes|pool|kernels|fusion | --fig 1.1c|4.1|4.2|4.3 [--fast]
 //! ```
@@ -28,6 +28,7 @@
 //! registry and routes requests per model.
 
 use anyhow::{anyhow, bail, Result};
+use iaoi::gemm::PrepareMode;
 use iaoi::harness;
 use iaoi::model_format::LoadMode;
 use std::collections::HashMap;
@@ -65,6 +66,16 @@ fn load_mode(flags: &HashMap<String, String>) -> Result<LoadMode> {
     }
 }
 
+/// The `--prepare` knob: explicit flag wins, else the `IAOI_PREPARE`
+/// environment default (which is `eager` when unset).
+fn prepare_mode(flags: &HashMap<String, String>) -> Result<PrepareMode> {
+    match flags.get("prepare") {
+        None => Ok(PrepareMode::from_env()),
+        Some(label) => PrepareMode::from_label(label)
+            .ok_or_else(|| anyhow!("unknown --prepare {label} (eager | lazy)")),
+    }
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
@@ -95,7 +106,7 @@ fn print_usage() {
          iaoi eval       --model FILE [--artifacts DIR] [--batches N]\n  \
          iaoi export     --out FILE [--name N] [--model-version V] [--classes C] [--seed S] [--model FILE --artifacts DIR] [--quant-mode per-tensor|per-channel] [--load copy|zerocopy|mmap]\n  \
          iaoi serve      --model FILE | --models DIR [--requests N] [--max-batch B] [--workers W] [--intra-threads T] [--load copy|zerocopy|mmap]\n  \
-         iaoi serve      --addr HOST:PORT [--models DIR] [--queue-depth N] [--model-inflight-cap N] [--port-file FILE] [--max-batch B] [--workers W] [--intra-threads T] [--request-deadline-ms MS] [--max-connections N] [--quarantine-threshold K] [--load copy|zerocopy|mmap]\n  \
+         iaoi serve      --addr HOST:PORT [--models DIR] [--queue-depth N] [--model-inflight-cap N] [--port-file FILE] [--max-batch B] [--workers W] [--intra-threads T] [--request-deadline-ms MS] [--max-connections N] [--quarantine-threshold K] [--max-resident-models N] [--prepare eager|lazy] [--load copy|zerocopy|mmap]\n  \
          iaoi quickstart [--artifacts DIR]\n  \
          iaoi bench      --table <id> | --fig <id> [--fast]  (tables 4.1-4.8, quant-modes, pool, kernels, fusion)\n"
     );
@@ -168,6 +179,12 @@ fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
 /// door past it; 0 = unbounded); `--quarantine-threshold K` circuit-breaks
 /// a model after K worker panics in a sliding window (503 `"quarantined"`
 /// until hot-swapped; 0 disables).
+///
+/// Fleet lifecycle knobs (socket mode): `--max-resident-models N` is the
+/// LRU residency cap — past it each install evicts the least-recently
+/// served model to a reinstallable cold tombstone (0 = unbounded);
+/// `--prepare eager|lazy` picks when GEMM panels are packed (lazy defers
+/// per layer to first touch, making evict/reinstall cycles cheap).
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let requests: usize = get(flags, "requests", "256").parse()?;
     let max_batch: usize = get(flags, "max-batch", "8").parse()?;
@@ -186,6 +203,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             request_deadline_ms: get(flags, "request-deadline-ms", "5000").parse()?,
             max_connections: get(flags, "max-connections", "0").parse()?,
             quarantine_threshold: get(flags, "quarantine-threshold", "3").parse()?,
+            max_resident_models: get(flags, "max-resident-models", "0").parse()?,
+            prepare: prepare_mode(flags)?,
             load: load_mode(flags)?,
         };
         return harness::serve_socket(addr, models.as_deref(), port_file.as_deref(), opts);

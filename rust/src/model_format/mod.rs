@@ -389,6 +389,13 @@ impl ModelArtifact {
     pub fn prepare(&self) -> crate::graph::PreparedGraph {
         self.graph.prepare()
     }
+
+    /// [`Self::prepare`] with an explicit [`crate::gemm::PrepareMode`] —
+    /// `Lazy` defers per-layer panel packing to first touch, packing
+    /// straight from this artifact's mapped backing when loaded zero-copy.
+    pub fn prepare_with(&self, mode: crate::gemm::PrepareMode) -> crate::graph::PreparedGraph {
+        self.graph.prepare_with(mode)
+    }
 }
 
 /// The eq. 5 requantization multiplier(s) of a conv-like node, normalized

@@ -10,7 +10,7 @@
 
 use crate::gemm::output::{Requant, ResidualAdd};
 use crate::gemm::prepared::grow;
-use crate::gemm::{output::OutputStage, Kernel, PreparedGemm, QGemm};
+use crate::gemm::{output::OutputStage, Kernel, LhsBytes, PrepareMode, PreparedGemm, QGemm};
 use crate::nn::{FusedActivation, LayerScratch, Padding, QTensor};
 use crate::quant::{QuantParams, WeightQuant};
 use crate::tensor::Tensor;
@@ -96,6 +96,17 @@ impl QConv2d {
     /// row sums and output stage computed once. All per-request cost after
     /// this is activation-side only.
     pub fn prepare(&self, kern: Kernel) -> PreparedConv2d {
+        self.prepare_with(kern, PrepareMode::Eager)
+    }
+
+    /// [`Self::prepare`] with an explicit [`PrepareMode`]. Under
+    /// [`PrepareMode::Lazy`] panel packing is deferred to the layer's first
+    /// execution — packing straight from the artifact [`ByteView`] when the
+    /// weights are a zero-copy view (no intermediate owned copy), from an
+    /// owned copy otherwise. Bit-identical to eager either way.
+    ///
+    /// [`ByteView`]: crate::tensor::ByteView
+    pub fn prepare_with(&self, kern: Kernel, mode: PrepareMode) -> PreparedConv2d {
         let (cout, kh, kw, cin) = (
             self.weights.dim(0),
             self.weights.dim(1),
@@ -103,15 +114,29 @@ impl QConv2d {
             self.weights.dim(3),
         );
         let k = kh * kw * cin;
-        let plan = PreparedGemm::new(
-            kern,
-            cout,
-            k,
-            self.weight_quant.zero_point(),
-            self.input_params.zero_point,
-            self.weights.data(),
-            self.output_stage(),
-        );
+        let plan = match mode {
+            PrepareMode::Eager => PreparedGemm::new(
+                kern,
+                cout,
+                k,
+                self.weight_quant.zero_point(),
+                self.input_params.zero_point,
+                self.weights.data(),
+                self.output_stage(),
+            ),
+            PrepareMode::Lazy => PreparedGemm::new_lazy(
+                kern,
+                cout,
+                k,
+                self.weight_quant.zero_point(),
+                self.input_params.zero_point,
+                match self.weights.view() {
+                    Some(view) => LhsBytes::View(view.clone()),
+                    None => LhsBytes::Owned(self.weights.data().to_vec()),
+                },
+                self.output_stage(),
+            ),
+        };
         PreparedConv2d {
             plan,
             kh,
@@ -149,6 +174,12 @@ impl PreparedConv2d {
     /// selection.
     pub fn set_ukernel(&mut self, u: &'static crate::gemm::dispatch::KernelDispatch) {
         self.plan.set_ukernel(u);
+    }
+
+    /// Heap bytes currently held by this layer's GEMM plan (see
+    /// [`PreparedGemm::plan_bytes`]).
+    pub fn plan_bytes(&self) -> usize {
+        self.plan.plan_bytes()
     }
 
     /// Run the layer, writing the NHWC result into `out` (reshaped in

@@ -4,7 +4,7 @@
 
 use crate::gemm::output::Requant;
 use crate::gemm::prepared::grow;
-use crate::gemm::{output::OutputStage, Kernel, PreparedGemm, QGemm};
+use crate::gemm::{output::OutputStage, Kernel, LhsBytes, PrepareMode, PreparedGemm, QGemm};
 use crate::nn::{conv::apply_activation_f32, FusedActivation, LayerScratch, QTensor};
 use crate::quant::{QuantParams, WeightQuant};
 use crate::tensor::Tensor;
@@ -48,17 +48,39 @@ impl QFullyConnected {
     /// Build the prepared plan for this layer (weights packed once for
     /// `kern`, output stage built once).
     pub fn prepare(&self, kern: Kernel) -> PreparedFullyConnected {
+        self.prepare_with(kern, PrepareMode::Eager)
+    }
+
+    /// Like [`prepare`](Self::prepare), but `mode` selects when panel
+    /// packing runs: `Eager` packs here, `Lazy` defers to first touch
+    /// (packing straight from a mapped [`crate::tensor::ByteView`] when
+    /// the weights are view-backed).
+    pub fn prepare_with(&self, kern: Kernel, mode: PrepareMode) -> PreparedFullyConnected {
         let units = self.weights.dim(0);
         let feat = self.weights.dim(1);
-        let plan = PreparedGemm::new(
-            kern,
-            units,
-            feat,
-            self.weight_quant.zero_point(),
-            self.input_params.zero_point,
-            self.weights.data(),
-            self.output_stage(),
-        );
+        let plan = match mode {
+            PrepareMode::Eager => PreparedGemm::new(
+                kern,
+                units,
+                feat,
+                self.weight_quant.zero_point(),
+                self.input_params.zero_point,
+                self.weights.data(),
+                self.output_stage(),
+            ),
+            PrepareMode::Lazy => PreparedGemm::new_lazy(
+                kern,
+                units,
+                feat,
+                self.weight_quant.zero_point(),
+                self.input_params.zero_point,
+                match self.weights.view() {
+                    Some(view) => LhsBytes::View(view.clone()),
+                    None => LhsBytes::Owned(self.weights.data().to_vec()),
+                },
+                self.output_stage(),
+            ),
+        };
         PreparedFullyConnected {
             plan,
             units,
@@ -119,6 +141,12 @@ impl PreparedFullyConnected {
     /// selection.
     pub fn set_ukernel(&mut self, u: &'static crate::gemm::dispatch::KernelDispatch) {
         self.plan.set_ukernel(u);
+    }
+
+    /// Heap bytes currently held by this layer's GEMM plan (see
+    /// [`PreparedGemm::plan_bytes`]).
+    pub fn plan_bytes(&self) -> usize {
+        self.plan.plan_bytes()
     }
 
     /// Run the layer, writing `[batch, units]` into `out` (reshaped in

@@ -29,7 +29,12 @@
 //!   [`ServeConfig::drain_timeout`]), then stops the coordinator; new
 //!   arrivals during the drain get a clean `"draining"` rejection.
 //!   [`Server::swap_model`] does the same per model around a registry
-//!   hot-swap.
+//!   hot-swap, and [`Server::evict_model`] around a registry eviction
+//!   ([`ModelRegistry::begin_evict`] / [`ModelRegistry::finish_evict`]):
+//!   in-flight requests finish on their entry snapshot, new arrivals get
+//!   503 `"draining"`, and the retired model leaves a cold tombstone that
+//!   [`Server::install_model`] (or the registry's LRU residency policy)
+//!   can bring back — page-cache-warm for mmap-backed artifacts.
 //! * **Observable tails** — `GET /metrics` exports the coordinator's
 //!   log-spaced latency histograms (p50/p99/p999 per model and merged) and
 //!   the admission counters in Prometheus text format; the numbers on the
@@ -300,6 +305,37 @@ impl Server {
         result
     }
 
+    /// Drain-then-evict: refuse new requests for `model`
+    /// (registry-level via [`ModelRegistry::begin_evict`] *and*
+    /// front-end-level via the draining set), wait out its in-flight
+    /// requests (bounded by [`ServeConfig::drain_timeout`]), then drop the
+    /// registry entry, leaving a reinstallable cold tombstone. Batches
+    /// already formed keep their entry snapshot; requests still queued when
+    /// the entry vanishes are answered HTTP 500, never dropped. Returns the
+    /// retired version.
+    pub fn evict_model(&self, model: &str) -> Result<u32> {
+        self.begin_model_drain(model);
+        let result = (|| {
+            self.state.registry.begin_evict(model)?;
+            let deadline = Instant::now() + self.state.cfg.drain_timeout;
+            while self.state.admission.model_inflight(model) > 0 && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            self.state.registry.finish_evict(model)
+        })();
+        self.end_model_drain(model);
+        result
+    }
+
+    /// Install (or reinstall) a model from an artifact file while serving.
+    /// Registration is atomic — the first request after this call sees the
+    /// new entry — and the registry's residency policy may evict an LRU
+    /// victim to make room. Returns `(name, version)`.
+    pub fn install_model(&self, path: &Path) -> Result<(String, u32)> {
+        let entry = self.state.registry.register_file(path)?;
+        Ok((entry.name.clone(), entry.version))
+    }
+
     /// Graceful shutdown: stop accepting, finish every admitted request,
     /// stop the coordinator, join all threads.
     ///
@@ -562,20 +598,41 @@ fn healthz(state: &Arc<ServerState>) -> Response {
         } else {
             "serving"
         };
+        // Lifecycle facet, orthogonal to status: `evicting` = drain in
+        // progress (still answering its in-flight snapshots), `resident` =
+        // fully installed. Evicted models appear below as `cold`.
+        let resident = if state.registry.is_evicting(name) { "evicting" } else { "resident" };
         if !first {
             body.push(',');
         }
         first = false;
         body.push_str(&format!(
-            "{{\"name\":{},\"version\":{},\"input_shape\":[{},{},{}],\"status\":\"{status}\",\"fused_nodes\":{},\"inflight\":{},\"panics\":{}}}",
+            "{{\"name\":{},\"version\":{},\"input_shape\":[{},{},{}],\"status\":\"{status}\",\"resident\":\"{resident}\",\"load_mode\":\"{}\",\"plan_bytes\":{},\"fused_nodes\":{},\"inflight\":{},\"panics\":{}}}",
             json_string(name),
             entry.version,
             entry.input_shape[0],
             entry.input_shape[1],
             entry.input_shape[2],
+            entry.load_mode_label(),
+            entry.plan_bytes(),
             entry.plan.fused_nodes(),
             state.admission.model_inflight(name),
             state.registry.panic_count(name),
+        ));
+    }
+    // Cold tombstones: evicted but reinstallable (by name or by the LRU
+    // policy), reported so a fleet dashboard can see the full roster.
+    for name in state.registry.cold_names() {
+        let Some(cold) = state.registry.cold_entry(&name) else { continue };
+        if !first {
+            body.push(',');
+        }
+        first = false;
+        body.push_str(&format!(
+            "{{\"name\":{},\"version\":{},\"status\":\"cold\",\"resident\":\"cold\",\"load_mode\":\"{}\",\"plan_bytes\":0}}",
+            json_string(&name),
+            cold.version,
+            cold.load.label(),
         ));
     }
     body.push_str("]}");
@@ -611,6 +668,17 @@ fn metrics_page(state: &Arc<ServerState>) -> Response {
     for name in state.registry.names() {
         let q = u8::from(state.registry.is_quarantined(&name));
         let _ = writeln!(out, "iaoi_quarantined{{model=\"{name}\"}} {q}");
+    }
+    // Fleet lifecycle: how many models are resident, how many evictions the
+    // residency policy (or explicit evicts) have performed, and each
+    // resident model's packed-plan heap footprint (0 until a lazy plan's
+    // first touch; view-backed lazy plans never count the mapped bytes).
+    let _ = writeln!(out, "iaoi_resident_models {}", state.registry.len());
+    let _ = writeln!(out, "iaoi_evictions_total {}", state.registry.evictions_total());
+    for name in state.registry.names() {
+        if let Some(entry) = state.registry.get(&name) {
+            let _ = writeln!(out, "iaoi_plan_bytes{{model=\"{name}\"}} {}", entry.plan_bytes());
+        }
     }
     let _ = writeln!(out, "iaoi_open_connections {}", state.open_conns.load(Ordering::SeqCst));
     // Which GEMM micro-kernel this process dispatched to (info-style gauge:

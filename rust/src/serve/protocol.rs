@@ -12,10 +12,16 @@
 //!   headers `X-Model-Version`, `X-Batch-Size` and `X-Latency-Us` echo
 //!   serving observables.
 //! * `GET /healthz` — JSON: overall `status` (`serving` | `draining`)
-//!   plus one entry per resident model (name, version, input shape,
-//!   per-model status, fused-epilogue node count and in-flight count).
+//!   plus one entry per model. Resident models carry name, version, input
+//!   shape, per-model status, `resident` (`resident` | `evicting`),
+//!   `load_mode` (`copy` | `zerocopy` | `mmap`), `plan_bytes` (packed-plan
+//!   heap footprint; 0 for an untouched lazy plan), fused-epilogue node
+//!   count and in-flight count. Evicted-but-reinstallable models appear
+//!   with `"resident":"cold"` and the version/load mode they left with.
 //! * `GET /metrics` — Prometheus text exposition of the coordinator's
-//!   per-model latency histograms, batch stats and admission counters.
+//!   per-model latency histograms, batch stats, admission counters, and
+//!   fleet lifecycle gauges (`iaoi_resident_models`,
+//!   `iaoi_evictions_total`, `iaoi_plan_bytes{model=…}`).
 //!
 //! Error mapping: 400 malformed request or wrong body size, 404 unknown
 //! model/path, 405 wrong method, 413 oversized body, 500 contained worker

@@ -260,6 +260,16 @@ impl Tensor<u8> {
             Storage::Shared(view) => Some(view.backing()),
         }
     }
+
+    /// The underlying [`ByteView`] of a zero-copy tensor — lets lazy GEMM
+    /// plans ([`crate::gemm::PreparedGemm::new_lazy`]) pack panels straight
+    /// from the shared artifact bytes without an intermediate owned copy.
+    pub fn view(&self) -> Option<&ByteView> {
+        match &self.data {
+            Storage::Owned(_) => None,
+            Storage::Shared(view) => Some(view),
+        }
+    }
 }
 
 impl Tensor<f32> {

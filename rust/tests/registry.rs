@@ -1,0 +1,230 @@
+//! Fleet-lifecycle integration tests, socket level: eviction with request
+//! draining (zero dropped requests under concurrent load), evict→reinstall
+//! bit-identity, LRU residency enforcement against live traffic, and
+//! quarantined models as preferred eviction victims. The registry-level
+//! unit tests live with [`iaoi::coordinator::registry`]; these drive the
+//! same machinery through [`iaoi::serve::Server`] and the wire protocol.
+
+use iaoi::coordinator::registry::{ModelRegistry, QuarantineConfig, ResidencyPolicy};
+use iaoi::coordinator::BatchPolicy;
+use iaoi::data::Rng;
+use iaoi::gemm::PrepareMode;
+use iaoi::graph::fault::FaultPlan;
+use iaoi::harness::demo_artifact;
+use iaoi::model_format::{self, LoadMode};
+use iaoi::serve::client::HttpClient;
+use iaoi::serve::{ServeConfig, Server};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// A deterministic [16,16,3] input image as a flat f32 vec.
+fn image(rng: &mut Rng) -> Vec<f32> {
+    (0..16 * 16 * 3).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(1), ..Default::default() }
+}
+
+/// Write `models` as `.iaoiq` artifacts into a fresh temp dir; returns
+/// (dir, path-per-model in input order).
+fn artifact_dir(tag: &str, models: &[(&str, u64)]) -> (PathBuf, Vec<PathBuf>) {
+    let dir = std::env::temp_dir().join(format!("iaoi-registry-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create artifact dir");
+    let paths = models
+        .iter()
+        .map(|(name, seed)| {
+            let path = dir.join(format!("{name}.iaoiq"));
+            model_format::write_file(&path, &demo_artifact(name, 1, 8, *seed)).expect("write");
+            path
+        })
+        .collect();
+    (dir, paths)
+}
+
+#[test]
+fn evict_under_concurrent_load_answers_every_request() {
+    // Clients hammer `alpha` while it is evicted mid-load. Invariant:
+    // every request gets exactly one response — 200 before the drain, 503
+    // "draining" during it, 404 after, 500 for requests already queued
+    // when the entry vanished — and none hang or drop.
+    let (dir, paths) = artifact_dir("drain", &[("alpha", 3)]);
+    let registry = ModelRegistry::new();
+    registry.register_file_with(&paths[0], LoadMode::Mmap).expect("install alpha");
+    let server = Server::start(registry, policy(), 2, ServeConfig::default()).expect("start");
+    let addr = server.local_addr();
+
+    let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..6)
+            .map(|t| {
+                s.spawn(move || {
+                    let mut rng = Rng::seeded(700 + t as u64);
+                    let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
+                    for _ in 0..20 {
+                        // Fresh connection per request: the draining
+                        // rejection closes its connection by design.
+                        let mut client = HttpClient::connect(addr).expect("connect");
+                        let img = image(&mut rng);
+                        let resp =
+                            client.infer("alpha", &img).expect("every request must answer");
+                        match resp.status {
+                            200 => ok += 1,
+                            503 | 404 => shed += 1,
+                            500 => failed += 1,
+                            other => panic!("unexpected status {other}: {}", resp.body_text()),
+                        }
+                    }
+                    (ok, shed, failed)
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(30));
+        let v = server.evict_model("alpha").expect("evict");
+        assert_eq!(v, 1, "evict must report the retired version");
+        for h in handles {
+            let (o, s_, f) = h.join().expect("client thread");
+            ok += o;
+            shed += s_;
+            failed += f;
+        }
+    });
+    assert_eq!(ok + shed + failed, 120, "exactly one response per request — zero drops");
+    assert!(ok >= 1, "requests before the evict must succeed");
+    assert!(shed >= 1, "requests after the evict must be cleanly refused");
+
+    let mut client = HttpClient::connect(addr).expect("connect post-evict");
+    let resp = client.infer("alpha", &image(&mut Rng::seeded(1))).expect("post-evict infer");
+    assert_eq!(resp.status, 404, "an evicted model routes like an unknown one");
+    let text = client.get("/healthz").expect("healthz").body_text();
+    assert!(text.contains("\"resident\":\"cold\""), "health: {text}");
+    assert!(text.contains("\"status\":\"cold\""), "health: {text}");
+    let text = client.get("/metrics").expect("metrics").body_text();
+    assert!(text.contains("iaoi_evictions_total 1"), "metrics: {text}");
+    assert!(text.contains("iaoi_resident_models 0"), "metrics: {text}");
+
+    let report = server.shutdown();
+    assert!(report.drained_clean);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn evict_then_reinstall_serves_bit_identical_outputs() {
+    // A lazily-prepared, mmap-backed model must survive a full
+    // evict→reinstall cycle with bit-identical outputs over the wire.
+    let (dir, paths) = artifact_dir("reinstall", &[("delta", 5)]);
+    let registry = ModelRegistry::new();
+    registry.set_prepare_mode(PrepareMode::Lazy);
+    registry.register_file_with(&paths[0], LoadMode::Mmap).expect("install delta");
+    let server = Server::start(registry, policy(), 1, ServeConfig::default()).expect("start");
+    let mut client = HttpClient::connect(server.local_addr()).expect("connect");
+    let mut rng = Rng::seeded(91);
+    let imgs: Vec<Vec<f32>> = (0..3).map(|_| image(&mut rng)).collect();
+
+    let before: Vec<Vec<f32>> = imgs
+        .iter()
+        .map(|img| {
+            let resp = client.infer("delta", img).expect("pre-evict infer");
+            assert_eq!(resp.status, 200);
+            assert_eq!(resp.header("X-Model-Version"), Some("1"));
+            resp.body_f32().expect("f32 body")
+        })
+        .collect();
+
+    assert_eq!(server.evict_model("delta").expect("evict"), 1);
+    let mut gone = HttpClient::connect(server.local_addr()).expect("reconnect");
+    assert_eq!(gone.infer("delta", &imgs[0]).expect("evicted infer").status, 404);
+
+    let (name, version) = server.install_model(&paths[0]).expect("reinstall");
+    assert_eq!((name.as_str(), version), ("delta", 1));
+    let mut client = HttpClient::connect(server.local_addr()).expect("reconnect");
+    for (img, want) in imgs.iter().zip(&before) {
+        let resp = client.infer("delta", img).expect("post-reinstall infer");
+        assert_eq!(resp.status, 200);
+        let got = resp.body_f32().expect("f32 body");
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "reinstalled output diverged");
+        }
+    }
+
+    let report = server.shutdown();
+    assert!(report.drained_clean);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn residency_cap_evicts_exactly_the_least_recently_served() {
+    // a, b, c resident under cap 3; live traffic touches a and c, so the
+    // install of d must evict exactly b — "recently used" is defined by
+    // served requests, not install order.
+    let (dir, paths) = artifact_dir("lru", &[("a", 21), ("b", 22), ("c", 23), ("d", 24)]);
+    let registry = ModelRegistry::new();
+    registry.set_residency(ResidencyPolicy { max_resident_models: 3 });
+    for p in &paths[..3] {
+        registry.register_file_with(p, LoadMode::Mmap).expect("install");
+    }
+    let server = Server::start(registry, policy(), 1, ServeConfig::default()).expect("start");
+    let mut client = HttpClient::connect(server.local_addr()).expect("connect");
+    let mut rng = Rng::seeded(55);
+    for model in ["a", "c"] {
+        let resp = client.infer(model, &image(&mut rng)).expect("touch traffic");
+        assert_eq!(resp.status, 200);
+    }
+
+    let (name, _) = server.install_model(&paths[3]).expect("install d");
+    assert_eq!(name, "d");
+    let registry = server.registry();
+    assert_eq!(registry.names(), vec!["a", "c", "d"], "b was least-recently served");
+    assert_eq!(registry.cold_names(), vec!["b"]);
+    assert_eq!(registry.evictions_total(), 1);
+    let text = client.get("/metrics").expect("metrics").body_text();
+    assert!(text.contains("iaoi_resident_models 3"), "metrics: {text}");
+
+    let report = server.shutdown();
+    assert!(report.drained_clean);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn quarantined_models_are_preferred_eviction_victims() {
+    // `sick` panics every batch and trips the breaker; even though it is
+    // the most recently used model, the residency policy must pick it as
+    // the eviction victim over the healthy, less-recent `good`.
+    let (dir, paths) = artifact_dir("sickbay", &[("good", 31), ("spare", 33)]);
+    let registry = ModelRegistry::new();
+    registry.register_file_with(&paths[0], LoadMode::Mmap).expect("install good");
+    registry.install_with(
+        demo_artifact("sick", 1, 8, 32),
+        PathBuf::from("<registry:sick>"),
+        Some(FaultPlan { panic_every: 1, ..Default::default() }),
+    );
+    registry.set_quarantine(QuarantineConfig { threshold: 1, ..Default::default() });
+    let server = Server::start(registry, policy(), 1, ServeConfig::default()).expect("start");
+    let mut client = HttpClient::connect(server.local_addr()).expect("connect");
+    let mut rng = Rng::seeded(66);
+    let img = image(&mut rng);
+    assert_eq!(client.infer("sick", &img).expect("contained panic").status, 500);
+    assert_eq!(client.infer("sick", &img).expect("quarantined").status, 503);
+
+    // `sick` is now the most recently *resolved* model, but quarantined:
+    // capping residency at 1 must evict it, not `good`.
+    let registry = server.registry();
+    let evicted = registry.set_residency(ResidencyPolicy { max_resident_models: 1 });
+    assert_eq!(evicted, vec!["sick"], "quarantined models go first");
+    assert_eq!(registry.names(), vec!["good"]);
+
+    // The freed slot admits a healthy install; `good` stays resident
+    // because the tombstoned `sick` no longer counts against the cap.
+    registry.set_residency(ResidencyPolicy { max_resident_models: 2 });
+    let (name, _) = server.install_model(&paths[1]).expect("install spare");
+    assert_eq!(name, "spare");
+    assert_eq!(registry.names(), vec!["good", "spare"]);
+    let text = client.get("/healthz").expect("healthz").body_text();
+    assert!(text.contains("\"name\":\"sick\",\"version\":1,\"status\":\"cold\""), "health: {text}");
+
+    let report = server.shutdown();
+    assert!(report.drained_clean);
+    std::fs::remove_dir_all(&dir).ok();
+}
